@@ -1,0 +1,58 @@
+//! Cache-hierarchy throughput across Table 3 geometries and access
+//! patterns (sequential stream / strided / random / hot-set).
+
+use tao_sim::detailed::cache::{Cache, DataHierarchy};
+use tao_sim::uarch::{CacheGeometry, Timing, UarchConfig};
+use tao_sim::util::benchkit::Bench;
+use tao_sim::util::Rng;
+
+fn pattern(name: &str, n: usize, seed: u64) -> Vec<u64> {
+    let mut rng = Rng::new(seed);
+    let base = 0x1000_0000u64;
+    match name {
+        "stream" => (0..n).map(|i| base + i as u64 * 8).collect(),
+        "strided" => (0..n).map(|i| base + i as u64 * 256).collect(),
+        "random4m" => (0..n).map(|_| base + rng.gen_range(4 << 20)).collect(),
+        "hot32k" => (0..n).map(|_| base + rng.gen_range(32 << 10)).collect(),
+        _ => unreachable!(),
+    }
+}
+
+fn main() {
+    let n = 1_000_000usize;
+    let b = Bench::new("cache").iters(3);
+    for geom_name in ["uarch_a", "uarch_c"] {
+        let cfg = UarchConfig::preset(geom_name).unwrap();
+        for pat in ["stream", "strided", "random4m", "hot32k"] {
+            let addrs = pattern(pat, n, 3);
+            let case = format!("{geom_name}/{pat}");
+            let mut hits = 0u64;
+            b.run(&case, n as u64, || {
+                let mut l2 = Cache::new(cfg.l2);
+                let mut dh = DataHierarchy::new(cfg.l1d, Timing::default());
+                hits = 0;
+                for &a in &addrs {
+                    let r = dh.access(a, &mut l2);
+                    hits += (r.level == tao_sim::trace::AccessLevel::L1) as u64;
+                }
+                hits
+            });
+            println!("    L1 hit rate {case}: {:.1}%", hits as f64 * 100.0 / n as f64);
+        }
+    }
+
+    // Raw single-cache access cost by associativity.
+    let b2 = Bench::new("cache-assoc").iters(3);
+    for assoc in [2u32, 4, 6, 8] {
+        let geom = CacheGeometry { size_bytes: 32 << 10, assoc };
+        let addrs = pattern("hot32k", n, 5);
+        b2.run(&format!("assoc{assoc}"), n as u64, || {
+            let mut c = Cache::new(geom);
+            let mut hits = 0u64;
+            for &a in &addrs {
+                hits += c.access(a) as u64;
+            }
+            hits
+        });
+    }
+}

@@ -1,0 +1,62 @@
+//! Coordinator hot-path benches: window batching and (when artifacts are
+//! built) end-to-end DL-simulation throughput — the paper's headline
+//! MIPS axis (Table 4), scaled to this CPU testbed.
+
+use std::path::Path;
+use tao_sim::coordinator::engine::{self, WindowBatcher};
+use tao_sim::functional::FunctionalSim;
+use tao_sim::util::benchkit::Bench;
+use tao_sim::workloads;
+
+fn main() {
+    // --- window batcher alone (no model) ---
+    let t = 32usize;
+    let f = 154usize;
+    let batch = 256usize;
+    let n = 200_000u64;
+    let feats = vec![0.5f32; f];
+    let mut ops_buf = vec![0i32; batch * t];
+    let mut feat_buf = vec![0.0f32; batch * t * f];
+    let b = Bench::new("batcher").iters(5);
+    b.run("push-200k", n, || {
+        let mut wb = WindowBatcher::new(t, f, batch);
+        let mut flushes = 0u64;
+        for i in 0..n {
+            if wb.push(i as i32 % 39, &feats, &mut ops_buf, &mut feat_buf) {
+                wb.clear_staged();
+                flushes += 1;
+            }
+        }
+        flushes
+    });
+
+    // --- end-to-end engine (needs `make artifacts`) ---
+    let artifact = Path::new("artifacts/tao_uarch_a.hlo.txt");
+    if !artifact.exists() {
+        println!("(artifacts missing — run `make artifacts` for end-to-end benches)");
+        return;
+    }
+    let insts = 20_000u64;
+    let program = workloads::by_name("dee").unwrap().build(42);
+    let trace = FunctionalSim::new(&program).run(insts);
+    let b = Bench::new("engine").iters(2);
+    for workers in [1usize, 2, 4] {
+        b.run(&format!("dee-20k/workers{workers}"), insts, || {
+            engine::simulate_parallel(artifact, &trace.records, workers, None)
+                .expect("simulate")
+                .metrics
+                .instructions
+        });
+    }
+    // Pallas-kernel artifact variant, if exported.
+    let pallas = Path::new("artifacts/tao_uarch_a.pallas.hlo.txt");
+    if pallas.exists() {
+        let small = &trace.records[..4_096.min(trace.records.len())];
+        b.run("dee-4k/pallas-artifact", small.len() as u64, || {
+            engine::simulate_parallel(pallas, small, 1, None)
+                .expect("simulate")
+                .metrics
+                .instructions
+        });
+    }
+}

@@ -1,0 +1,31 @@
+//! Feature-extraction throughput — the Rust-side hot-path component in
+//! front of every model batch (paper §4.2 pipeline).
+
+use tao_sim::features::{FeatureConfig, FeatureExtractor};
+use tao_sim::functional::FunctionalSim;
+use tao_sim::util::benchkit::Bench;
+use tao_sim::workloads;
+
+fn main() {
+    let insts = 200_000u64;
+    let b = Bench::new("features").iters(5);
+    for w in ["dee", "mcf", "rom"] {
+        let program = workloads::by_name(w).unwrap().build(42);
+        let trace = FunctionalSim::new(&program).run(insts);
+        for cfg in [
+            FeatureConfig { nb: 256, nq: 8, nm: 16 },
+            FeatureConfig::default(), // paper values: 1k / 32 / 64
+        ] {
+            let case = format!("{w}/nb{}-nq{}-nm{}", cfg.nb, cfg.nq, cfg.nm);
+            let mut out = vec![0.0f32; cfg.feature_dim()];
+            b.run(&case, insts, || {
+                let mut fx = FeatureExtractor::new(cfg);
+                let mut acc = 0i64;
+                for rec in &trace.records {
+                    acc += fx.extract(rec, &mut out) as i64;
+                }
+                acc
+            });
+        }
+    }
+}

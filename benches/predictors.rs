@@ -1,0 +1,43 @@
+//! Branch-predictor throughput and accuracy across the Table 3 predictor
+//! choices (the detailed simulator's per-branch cost).
+
+use tao_sim::detailed::predictor;
+use tao_sim::uarch::PredictorKind;
+use tao_sim::util::benchkit::Bench;
+use tao_sim::util::Rng;
+
+fn main() {
+    // Synthetic branch stream: biased + loop + correlated branches.
+    let n = 1_000_000usize;
+    let mut rng = Rng::new(9);
+    let mut stream = Vec::with_capacity(n);
+    let mut i = 0u64;
+    while stream.len() < n {
+        i += 1;
+        stream.push((0x400100u64, !i.is_multiple_of(8))); // loop branch, trip 8
+        stream.push((0x400200u64, rng.chance(0.9))); // biased
+        stream.push((0x400300u64, i.is_multiple_of(2))); // alternating
+    }
+    stream.truncate(n);
+
+    let b = Bench::new("predictor").iters(3);
+    for kind in PredictorKind::ALL {
+        let mut correct = 0u64;
+        b.run(kind.name(), n as u64, || {
+            let mut bp = predictor::build(kind);
+            correct = 0;
+            for &(pc, taken) in &stream {
+                if bp.predict(pc) == taken {
+                    correct += 1;
+                }
+                bp.update(pc, taken);
+            }
+            correct
+        });
+        println!(
+            "    accuracy {:<12}: {:.2}%",
+            kind.name(),
+            correct as f64 * 100.0 / n as f64
+        );
+    }
+}

@@ -1,0 +1,45 @@
+//! Trace-generation throughput (the Figure 10b / Table 4 cost axis):
+//! functional vs detailed simulation, per benchmark and per µarch.
+
+use tao_sim::detailed::DetailedSim;
+use tao_sim::functional::FunctionalSim;
+use tao_sim::uarch::UarchConfig;
+use tao_sim::util::benchkit::Bench;
+use tao_sim::workloads;
+
+fn main() {
+    let insts = 200_000u64;
+    println!("== tracegen: functional (AtomicSimpleCPU-equivalent) ==");
+    let b = Bench::new("functional").iters(3);
+    for w in workloads::suite() {
+        let program = w.build(42);
+        b.run(w.name, insts, || {
+            FunctionalSim::new(&program).run(insts).records.len()
+        });
+    }
+
+    println!("== tracegen: detailed O3, stats only ==");
+    for cfg in [UarchConfig::uarch_a(), UarchConfig::uarch_c()] {
+        let b = Bench::new(&format!("detailed/{}", cfg.name)).iters(3);
+        for w in workloads::suite() {
+            let program = w.build(42);
+            b.run(w.name, insts, || {
+                DetailedSim::new(&program, &cfg)
+                    .stats_only()
+                    .run(insts)
+                    .1
+                    .instructions
+            });
+        }
+    }
+
+    println!("== tracegen: detailed O3, full trace records ==");
+    let cfg = UarchConfig::uarch_a();
+    let b = Bench::new("detailed-records/uarch_a").iters(3);
+    for w in ["dee", "mcf"] {
+        let program = workloads::by_name(w).unwrap().build(42);
+        b.run(w, insts, || {
+            DetailedSim::new(&program, &cfg).run(insts).0.records.len()
+        });
+    }
+}

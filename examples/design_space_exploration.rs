@@ -1,0 +1,83 @@
+//! Design-space exploration (paper §5.6 / Figure 15 workflow).
+//!
+//! ```text
+//! cargo run --release --example design_space_exploration
+//! ```
+//!
+//! Sweeps the L1 D-cache size and the branch predictor across the Table 3
+//! ranges on the detailed simulator (the "gem5" side of Figure 15), then
+//! samples the full 184,320-point space, characterizes each sample with
+//! the §4.3 performance vector, and selects the two training designs by
+//! maximum Mahalanobis distance (the Figure 8 workflow).
+
+use tao_sim::detailed::DetailedSim;
+use tao_sim::dse::{self, DesignSpace, SelectionStrategy};
+use tao_sim::stats::mean;
+use tao_sim::uarch::{CacheGeometry, PredictorKind, UarchConfig};
+use tao_sim::util::Rng;
+use tao_sim::workloads;
+
+fn avg_over_tests(
+    cfg: &UarchConfig,
+    insts: u64,
+    f: impl Fn(&tao_sim::detailed::SimStats) -> f64,
+) -> f64 {
+    let vals: Vec<f64> = workloads::testing()
+        .iter()
+        .map(|w| {
+            let p = w.build(42);
+            let (_, s) = DetailedSim::new(&p, cfg).stats_only().run(insts);
+            f(&s)
+        })
+        .collect();
+    mean(&vals)
+}
+
+fn main() -> anyhow::Result<()> {
+    let insts = 20_000;
+    let base = UarchConfig::uarch_b();
+
+    println!("== L1 D-cache size sweep (avg L1D MPKI over test benchmarks) ==");
+    for size_kb in [16u64, 32, 64, 128] {
+        let mut cfg = base.clone();
+        cfg.l1d = CacheGeometry { size_bytes: size_kb << 10, assoc: cfg.l1d.assoc };
+        let mpki = avg_over_tests(&cfg, insts, |s| s.l1d_mpki());
+        println!("  {size_kb:>4} KB: {mpki:7.2} MPKI");
+    }
+
+    println!("== branch predictor sweep (avg branch MPKI over test benchmarks) ==");
+    for bp in PredictorKind::ALL {
+        let mut cfg = base.clone();
+        cfg.predictor = bp;
+        let mpki = avg_over_tests(&cfg, insts, |s| s.branch_mpki());
+        println!("  {:<12}: {mpki:6.2} MPKI", bp.name());
+    }
+
+    println!("== training-pair selection over a random design sample (Figure 8) ==");
+    let space = DesignSpace::table3();
+    println!("  design space size: {} points", space.count());
+    let mut rng = Rng::new(7);
+    let sample = space.sample(6, &mut rng);
+    let perfs: Vec<_> = sample
+        .iter()
+        .map(|cfg| {
+            let p = tao_sim::reports::sim_reports::characterize(cfg, 5_000, 42);
+            println!(
+                "  {:<11} cpi={:.2} l1={:.0}% l2={:.0}% bp={:.0}%  [{}]",
+                cfg.name,
+                p.cpi,
+                p.l1_miss_rate * 100.0,
+                p.l2_miss_rate * 100.0,
+                p.mispredict_rate * 100.0,
+                cfg.summary()
+            );
+            p
+        })
+        .collect();
+    let (i, j) = dse::select_pair(&perfs, SelectionStrategy::Mahalanobis, &mut rng);
+    println!(
+        "  selected training pair (max Mahalanobis distance): {} + {}",
+        sample[i].name, sample[j].name
+    );
+    Ok(())
+}

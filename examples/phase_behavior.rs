@@ -1,0 +1,80 @@
+//! Phase-level behaviour (paper §5.3 / Figure 11).
+//!
+//! ```text
+//! cargo run --release --example phase_behavior
+//! ```
+//!
+//! Replays each test benchmark through the detailed simulator on µArch A
+//! and prints the windowed CPI / L1D-MPKI / branch-MPKI series — the
+//! ground-truth side of Figure 11. If the Tao artifact exists, the same
+//! stream is also pushed through the DL model and both series are shown
+//! side by side.
+
+use std::path::Path;
+use tao_sim::coordinator::engine;
+use tao_sim::dataset;
+use tao_sim::detailed::DetailedSim;
+use tao_sim::functional::FunctionalSim;
+use tao_sim::runtime::Session;
+use tao_sim::stats::PhaseSeries;
+use tao_sim::uarch::UarchConfig;
+use tao_sim::workloads;
+
+fn main() -> anyhow::Result<()> {
+    let insts = 40_000;
+    let window = 5_000;
+    let cfg = UarchConfig::uarch_a();
+    let artifact = Path::new("artifacts/tao_uarch_a.hlo.txt");
+    let mut session = artifact
+        .exists()
+        .then(|| Session::load(artifact))
+        .transpose()?;
+
+    for w in workloads::testing() {
+        let program = w.build(42);
+        let (det, _) = DetailedSim::new(&program, &cfg).run(insts);
+        let adj = dataset::adjust(&det);
+        let mut truth = PhaseSeries::new(window);
+        for s in &adj.samples {
+            truth.push(
+                s.labels.fetch_latency as f64,
+                s.labels.branch_mispred,
+                s.labels.access_level.is_l1_miss(),
+                s.labels.icache_miss,
+                s.labels.tlb_miss,
+            );
+        }
+        truth.finish();
+
+        let pred = match &mut session {
+            Some(sess) => {
+                let functional = FunctionalSim::new(&program).run(insts);
+                engine::simulate_records(sess, &functional.records, None, Some(window))?.phase
+            }
+            None => None,
+        };
+
+        println!("== {} ==", w.name);
+        println!(
+            "{:>4} | {:>8} {:>8} | {:>8} {:>8} | {:>8} {:>8}",
+            "win", "CPI", "CPI^", "L1Dmpki", "L1D^", "bMPKI", "bMPKI^"
+        );
+        for (i, t) in truth.windows.iter().enumerate() {
+            let p = pred.as_ref().and_then(|ph| ph.windows.get(i));
+            println!(
+                "{:>4} | {:>8.3} {:>8} | {:>8.2} {:>8} | {:>8.2} {:>8}",
+                i,
+                t.cpi(),
+                p.map(|m| format!("{:.3}", m.cpi())).unwrap_or_else(|| "-".into()),
+                t.l1d_mpki(),
+                p.map(|m| format!("{:.2}", m.l1d_mpki())).unwrap_or_else(|| "-".into()),
+                t.branch_mpki(),
+                p.map(|m| format!("{:.2}", m.branch_mpki())).unwrap_or_else(|| "-".into()),
+            );
+        }
+    }
+    if session.is_none() {
+        println!("(run `make artifacts` to add the predicted series)");
+    }
+    Ok(())
+}

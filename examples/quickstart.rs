@@ -1,0 +1,91 @@
+//! Quickstart: the whole Tao pipeline on one benchmark, in one binary.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! 1. builds the `mcf` stand-in benchmark program;
+//! 2. runs the functional simulator (microarchitecture-agnostic trace);
+//! 3. runs the detailed out-of-order simulator on µArch A (ground truth);
+//! 4. runs the §4.1 dataset-construction workflow and checks the Figure 2
+//!    invariant;
+//! 5. if `artifacts/tao_uarch_a.hlo.txt` exists (`make artifacts`), runs
+//!    the DL-based simulation through PJRT and prints predicted vs true
+//!    CPI / MPKIs.
+
+use std::path::Path;
+use tao_sim::coordinator::engine;
+use tao_sim::dataset;
+use tao_sim::detailed::DetailedSim;
+use tao_sim::functional::FunctionalSim;
+use tao_sim::stats::simulation_error_percent;
+use tao_sim::uarch::UarchConfig;
+use tao_sim::workloads;
+
+fn main() -> anyhow::Result<()> {
+    let insts = 50_000;
+    let workload = workloads::by_name("mcf").expect("mcf in suite");
+    let program = workload.build(42);
+    println!("benchmark: {} ({})", workload.name, workload.description);
+
+    // --- functional trace (reusable across microarchitectures) ---
+    let t0 = std::time::Instant::now();
+    let functional = FunctionalSim::new(&program).run(insts);
+    println!(
+        "functional trace: {} instructions in {:.2?}",
+        functional.records.len(),
+        t0.elapsed()
+    );
+
+    // --- detailed ground truth on µArch A ---
+    let cfg = UarchConfig::uarch_a();
+    let t0 = std::time::Instant::now();
+    let (detailed, stats) = DetailedSim::new(&program, &cfg).run(insts);
+    println!(
+        "detailed O3 trace on {}: CPI {:.3}, branch MPKI {:.1}, L1D MPKI {:.1} ({:.2?})",
+        cfg.name,
+        stats.cpi(),
+        stats.branch_mpki(),
+        stats.l1d_mpki(),
+        t0.elapsed()
+    );
+    println!(
+        "  extra dynamic records: {} squashed speculative, {} pipeline-stall nops",
+        detailed.squashed_count(),
+        detailed.nop_count()
+    );
+
+    // --- §4.1 dataset construction ---
+    let adjusted = dataset::adjust(&detailed);
+    let aligned = dataset::align(&functional, &adjusted)?;
+    assert_eq!(aligned.reconstructed_cycles(), detailed.total_cycles);
+    println!(
+        "dataset construction: {} aligned samples; total-cycle invariant holds ({} cycles)",
+        aligned.samples.len(),
+        detailed.total_cycles
+    );
+
+    // --- DL-based simulation (needs `make artifacts`) ---
+    let artifact = Path::new("artifacts/tao_uarch_a.hlo.txt");
+    if artifact.exists() {
+        let result = engine::simulate_parallel(artifact, &functional.records, 1, None)?;
+        let m = result.metrics;
+        println!(
+            "Tao DL simulation: CPI {:.3} (truth {:.3}, error {:.2}%), branch MPKI {:.1}, L1D MPKI {:.1}",
+            m.cpi(),
+            stats.cpi(),
+            simulation_error_percent(m.cpi(), stats.cpi()),
+            m.branch_mpki(),
+            m.l1d_mpki()
+        );
+        println!(
+            "  {} batches in {:.2?} — {:.3} MIPS",
+            result.batches,
+            result.elapsed,
+            result.mips()
+        );
+    } else {
+        println!("(run `make artifacts` to enable the DL simulation step)");
+    }
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! End-to-end driver: regenerate data, (re)build artifacts, then simulate
+//! — the full three-layer loop from a single entry point.
+//!
+//! ```text
+//! cargo run --release --example train_and_simulate
+//! ```
+//!
+//! This is the repository's end-to-end validation (recorded in
+//! EXPERIMENTS.md): it produces training datasets with the Rust
+//! substrate, shells out to the build-time Python trainer/exporter if the
+//! artifacts are missing, and then runs the DL-based simulation of every
+//! test benchmark on µArch A entirely from Rust, reporting the paper's
+//! headline quantities (CPI error vs ground truth, throughput in MIPS).
+
+use std::path::Path;
+use tao_sim::coordinator::engine;
+use tao_sim::datagen::{self, DatagenOptions};
+use tao_sim::detailed::DetailedSim;
+use tao_sim::functional::FunctionalSim;
+use tao_sim::stats::{mean, simulation_error_percent};
+use tao_sim::uarch::UarchConfig;
+use tao_sim::workloads;
+
+fn main() -> anyhow::Result<()> {
+    let insts = 30_000u64;
+    let artifact = Path::new("artifacts/tao_uarch_a.hlo.txt");
+
+    // --- step 1: training data (Rust substrate) ---
+    if !Path::new("data/meta.json").exists() {
+        println!("[1/3] generating training datasets (data/)...");
+        let uarchs = vec![
+            UarchConfig::uarch_a(),
+            UarchConfig::uarch_b(),
+            UarchConfig::uarch_c(),
+        ];
+        datagen::run(
+            Path::new("data"),
+            &workloads::suite(),
+            &uarchs,
+            &DatagenOptions {
+                instructions: insts,
+                ..Default::default()
+            },
+        )?;
+    } else {
+        println!("[1/3] data/ present — skipping datagen");
+    }
+
+    // --- step 2: build-time training + AOT export (Python, once) ---
+    if !artifact.exists() {
+        println!("[2/3] training + exporting artifacts (python -m compile.aot)...");
+        let status = std::process::Command::new("python")
+            .args(["-m", "compile.aot", "--data", "../data", "--out", "../artifacts"])
+            .current_dir("python")
+            .status()?;
+        anyhow::ensure!(status.success(), "aot export failed");
+    } else {
+        println!("[2/3] artifacts present — skipping training");
+    }
+
+    // --- step 3: request-path simulation (Rust only) ---
+    println!("[3/3] DL-based simulation of the test benchmarks on uarch_a:");
+    let cfg = UarchConfig::uarch_a();
+    let mut errors = Vec::new();
+    for w in workloads::testing() {
+        let program = w.build(42);
+        let functional = FunctionalSim::new(&program).run(insts);
+        let (_, truth) = DetailedSim::new(&program, &cfg).stats_only().run(insts);
+        let result = engine::simulate_parallel(artifact, &functional.records, 2, None)?;
+        let err = simulation_error_percent(result.metrics.cpi(), truth.cpi());
+        errors.push(err);
+        println!(
+            "  {:<4} CPI {:.3} vs truth {:.3} ({:>6.2}% err) | bMPKI {:>6.1} vs {:>6.1} | {:.3} MIPS",
+            w.name,
+            result.metrics.cpi(),
+            truth.cpi(),
+            err,
+            result.metrics.branch_mpki(),
+            truth.branch_mpki(),
+            result.mips()
+        );
+    }
+    println!("average CPI error: {:.2}%", mean(&errors));
+    Ok(())
+}

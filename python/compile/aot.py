@@ -1,0 +1,247 @@
+"""AOT export: train the Tao + SimNet models and lower them to HLO text.
+
+This is the single build-time entry point (`make artifacts`):
+
+1. load the `.npy` datasets `tao datagen` wrote under ``data/``;
+2. train microarchitecture-agnostic shared embeddings jointly on
+   µArch A + µArch B with the Tao gradient scheme (§4.3);
+3. per target architecture, fine-tune adaptation + prediction layers with
+   frozen embeddings (µArch C demonstrates the unseen-arch path);
+4. lower the inference functions — Pallas kernels included — to **HLO
+   text** (`artifacts/tao_<arch>.hlo.txt`) plus a metadata JSON the Rust
+   runtime validates at load time;
+5. likewise train/export the SimNet baseline per architecture.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Python never runs at simulation time — the Rust coordinator loads these
+artifacts through PJRT.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import model as model_mod
+from . import multiarch, optim, simnet
+from . import train as train_mod
+
+TRAIN_BENCHES = ["dee", "rom", "nab", "lee"]
+OUTPUT_NAMES = ["fetch", "exec", "branch", "access", "icache", "tlb"]
+
+
+def to_hlo_text(lowered):
+    """Lower a jax-jitted computation to HLO text via stablehlo."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the baked weights ARE the model — the default
+    # printer elides them as "{...}" which the text parser then silently
+    # loads as zeros.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def vocab_hash(meta):
+    """Stable hash of the opcode vocabulary (runtime load check)."""
+    blob = json.dumps(meta["opcode_vocab"], sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def model_config(meta, context):
+    fc = meta["feature_config"]
+    num_scalars = meta["feature_dim"] - meta["num_regs"] - fc["nq"] - fc["nm"]
+    return model_mod.ModelConfig(
+        num_opcodes=len(meta["opcode_vocab"]),
+        num_regs=meta["num_regs"],
+        nq=fc["nq"],
+        nm=fc["nm"],
+        num_scalars=num_scalars,
+        context=context,
+    )
+
+
+def export_tao(params, cfg, meta, batch, path, *, use_pallas=True):
+    """Lower one trained Tao model and write artifact + metadata."""
+    fn = model_mod.export_fn(params, cfg, use_pallas=use_pallas)
+    ops_spec = jax.ShapeDtypeStruct((batch, cfg.context), jnp.int32)
+    feat_spec = jax.ShapeDtypeStruct((batch, cfg.context, cfg.feature_dim), jnp.float32)
+    text = to_hlo_text(jax.jit(fn).lower(ops_spec, feat_spec))
+    with open(path, "w") as f:
+        f.write(text)
+    side = {
+        "kind": "tao",
+        "batch": batch,
+        "context": cfg.context,
+        "feature_dim": cfg.feature_dim,
+        "num_opcodes": cfg.num_opcodes,
+        "latency_transform": "linear",
+        "outputs": OUTPUT_NAMES,
+        "feature_config": meta["feature_config"],
+        "num_regs": meta["num_regs"],
+        "vocab_hash": vocab_hash(meta),
+        "kernel": "pallas" if use_pallas else "jnp",
+    }
+    with open(path.replace(".hlo.txt", ".meta.json"), "w") as f:
+        json.dump(side, f, indent=2)
+    return len(text)
+
+
+def export_simnet(params, scfg, meta, batch, path):
+    """Lower one trained SimNet model and write artifact + metadata."""
+    fn = simnet.export_fn(params, scfg)
+    ops_spec = jax.ShapeDtypeStruct((batch, scfg.context), jnp.int32)
+    feat_spec = jax.ShapeDtypeStruct((batch, scfg.context, scfg.feature_dim), jnp.float32)
+    ctx_spec = jax.ShapeDtypeStruct((batch, scfg.context, simnet.NUM_CTX_METRICS), jnp.float32)
+    text = to_hlo_text(jax.jit(fn).lower(ops_spec, feat_spec, ctx_spec))
+    with open(path, "w") as f:
+        f.write(text)
+    side = {
+        "kind": "simnet",
+        "batch": batch,
+        "context": scfg.context,
+        "feature_dim": scfg.feature_dim,
+        "num_opcodes": scfg.num_opcodes,
+        "latency_transform": "linear",
+        "outputs": ["fetch", "exec"],
+        "feature_config": meta["feature_config"],
+        "num_regs": meta["num_regs"],
+        "vocab_hash": vocab_hash(meta),
+        "kernel": "jnp",
+    }
+    with open(path.replace(".hlo.txt", ".meta.json"), "w") as f:
+        json.dump(side, f, indent=2)
+    return len(text)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--data", default="../data", help="datagen output dir")
+    ap.add_argument("--out", default="../artifacts", help="artifact dir")
+    ap.add_argument("--context", type=int, default=32, help="window length T")
+    ap.add_argument("--batch", type=int, default=256, help="exported batch size B")
+    ap.add_argument("--joint-epochs", type=int, default=3)
+    ap.add_argument("--ft-epochs", type=int, default=3)
+    ap.add_argument("--simnet-epochs", type=int, default=2)
+    ap.add_argument("--train-batch", type=int, default=256)
+    ap.add_argument("--max-windows", type=int, default=60_000,
+                    help="cap on training windows per arch (build speed)")
+    ap.add_argument("--uarchs", default="uarch_a,uarch_b,uarch_c")
+    ap.add_argument("--shared", default="uarch_a,uarch_b",
+                    help="archs used for shared-embedding training")
+    ap.add_argument("--no-simnet", action="store_true")
+    ap.add_argument("--kernel", choices=["pallas", "jnp", "both"], default="both",
+                    help="kernel implementation lowered into the artifact; 'both' "
+                         "writes tao_<arch>.hlo.txt (jnp — the CPU-PJRT hot path) "
+                         "plus tao_<arch>.pallas.hlo.txt (the Layer-1 Pallas kernels; "
+                         "interpret-mode lowering, slow on CPU but the faithful TPU "
+                         "artifact — see DESIGN.md §7)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    t_start = time.perf_counter()
+    os.makedirs(args.out, exist_ok=True)
+    meta = data_mod.load_meta(args.data)
+    cfg = model_config(meta, args.context)
+    uarchs = args.uarchs.split(",")
+    shared_archs = args.shared.split(",")
+    # Shared-embedding training needs its archs' data even when they are
+    # not export targets.
+    load_archs = sorted(set(uarchs) | set(shared_archs))
+    log = lambda msg: print(f"aot: {msg}", flush=True)
+
+    # ---- load data ----
+    benches = {
+        u: data_mod.load_split(args.data, u, TRAIN_BENCHES) for u in load_archs
+    }
+    samplers = {
+        u: data_mod.WindowSampler(
+            benches[u], cfg.context, args.train_batch, seed=args.seed, max_windows=args.max_windows
+        )
+        for u in load_archs
+    }
+
+    # ---- stage 1: shared embeddings on the two selected archs (§4.3) ----
+    log(f"stage 1: shared embeddings on {shared_archs} (scheme=tao)")
+    shared = multiarch.train_shared(
+        {u: samplers[u] for u in shared_archs},
+        cfg,
+        scheme="tao",
+        epochs=args.joint_epochs,
+        log=log,
+        seed=args.seed,
+    )
+    log(f"stage 1 done in {shared.seconds:.1f}s")
+    # Persist the shared embeddings + a donor prediction stack so the
+    # build-time experiments (figure 14/15, table 5) can fine-tune new
+    # designs without repeating stage 1.
+    shared_state = {f"embed/{k}": np.asarray(v) for k, v in shared.embed.items()}
+    donor = shared.per_arch[shared_archs[0]]["pred"]
+    shared_state.update({f"pred/{k}": np.asarray(v) for k, v in donor.items()})
+    np.savez(os.path.join(args.out, "shared_embeddings.npz"), **shared_state)
+
+    # ---- stage 2: per-arch fine-tuning with frozen embeddings ----
+    manifest = {"models": {}, "config": vars(args), "timings": {"shared_s": shared.seconds}}
+    donor_arch = shared_archs[0]
+    for u in uarchs:
+        log(f"stage 2: fine-tune {u} (frozen embeddings)")
+        if u in shared.per_arch:
+            donor_pred = shared.per_arch[u]["pred"]
+        else:
+            donor_pred = shared.per_arch[donor_arch]["pred"]
+        result = multiarch.finetune_unseen(
+            shared.embed, donor_pred, samplers[u], cfg, epochs=args.ft_epochs, log=log
+        )
+        variants = {
+            "both": [("", False), (".pallas", True)],
+            "jnp": [("", False)],
+            "pallas": [("", True)],
+        }[args.kernel]
+        for suffix, use_pallas in variants:
+            path = os.path.join(args.out, f"tao_{u}{suffix}.hlo.txt")
+            size = export_tao(result.params, cfg, meta, args.batch, path, use_pallas=use_pallas)
+            log(f"exported {path} ({size / 1e6:.1f} MB hlo text)")
+            manifest["models"][f"tao_{u}{suffix}"] = {
+                "path": os.path.basename(path),
+                "train_seconds": result.seconds,
+                "final_loss": result.losses[-1] if result.losses else None,
+            }
+
+        if not args.no_simnet:
+            scfg = simnet.SimNetConfig(
+                num_opcodes=cfg.num_opcodes,
+                feature_dim=cfg.feature_dim,
+                context=cfg.context,
+            )
+            sampler_fn = simnet.ctx_sampler(samplers[u], benches[u])
+            sparams, slosses, ssecs = simnet.train(
+                sampler_fn, scfg, epochs=args.simnet_epochs, seed=args.seed, log=log
+            )
+            spath = os.path.join(args.out, f"simnet_{u}.hlo.txt")
+            ssize = export_simnet(sparams, scfg, meta, args.batch, spath)
+            log(f"exported {spath} ({ssize / 1e6:.1f} MB hlo text)")
+            manifest["models"][f"simnet_{u}"] = {
+                "path": os.path.basename(spath),
+                "train_seconds": ssecs,
+                "final_loss": slosses[-1] if slosses else None,
+            }
+
+    manifest["timings"]["total_s"] = time.perf_counter() - t_start
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    log(f"all artifacts written to {args.out} in {manifest['timings']['total_s']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

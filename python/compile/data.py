@@ -1,0 +1,131 @@
+"""Dataset loading and window batching for the build-time trainer.
+
+Consumes the `.npy` arrays `tao datagen` writes (see
+rust/src/datagen/mod.rs for the layout) and serves `[B, T]` /
+`[B, T, F]` context windows: window *i* ends at instruction *i* — the
+model predicts the last position, with the preceding ``T−1`` instructions
+as context (paper §4.2, "a sequence of N+1 instructions as input").
+"""
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class BenchData:
+    """Arrays for one (µarch, benchmark) pair."""
+
+    name: str
+    opcodes: np.ndarray  # i32 [M]
+    features: np.ndarray  # f32 [M, F]
+    labels: np.ndarray  # f32 [M, 6]
+    total_cycles: int
+
+    def __len__(self):
+        return len(self.opcodes)
+
+
+def load_meta(data_dir):
+    """Parse data/meta.json."""
+    with open(os.path.join(data_dir, "meta.json")) as f:
+        return json.load(f)
+
+
+def load_bench(data_dir, uarch, bench):
+    """Load one (µarch, benchmark) dataset."""
+    d = os.path.join(data_dir, uarch, bench)
+    with open(os.path.join(d, "total_cycles.txt")) as f:
+        total = int(f.read().strip())
+    return BenchData(
+        name=bench,
+        opcodes=np.load(os.path.join(d, "opcodes.npy")),
+        features=np.load(os.path.join(d, "features.npy")),
+        labels=np.load(os.path.join(d, "labels.npy")),
+        total_cycles=total,
+    )
+
+
+def load_split(data_dir, uarch, benches):
+    """Load several benchmarks for one µarch."""
+    return [load_bench(data_dir, uarch, b) for b in benches]
+
+
+def window_batch(bench: BenchData, idx, context):
+    """Gather windows ending at each index in `idx`.
+
+    Returns (opcodes [B,T], features [B,T,F], labels [B,6]) — labels are
+    those of the final (current) instruction.
+    """
+    idx = np.asarray(idx)
+    assert idx.min() >= context - 1, "window would underrun the trace"
+    offsets = np.arange(-(context - 1), 1)
+    gather = idx[:, None] + offsets[None, :]  # [B, T]
+    return (
+        bench.opcodes[gather],
+        bench.features[gather],
+        bench.labels[idx],
+    )
+
+
+class WindowSampler:
+    """Shuffled epoch iterator over windows of several benchmarks."""
+
+    def __init__(self, benches, context, batch, seed=0, max_windows=None):
+        self.benches = benches
+        self.context = context
+        self.batch = batch
+        self.rng = np.random.default_rng(seed)
+        # Global index: (bench_idx, instruction_idx).
+        pairs = []
+        for bi, b in enumerate(benches):
+            n = len(b)
+            if n >= context:
+                pairs.append(
+                    np.stack(
+                        [np.full(n - context + 1, bi), np.arange(context - 1, n)],
+                        axis=1,
+                    )
+                )
+        self.index = np.concatenate(pairs) if pairs else np.zeros((0, 2), np.int64)
+        if max_windows is not None and len(self.index) > max_windows:
+            sel = self.rng.choice(len(self.index), size=max_windows, replace=False)
+            self.index = self.index[sel]
+
+    def __len__(self):
+        return len(self.index) // self.batch
+
+    def epoch(self):
+        """Yield (opcodes, features, labels) batches, reshuffled."""
+        order = self.rng.permutation(len(self.index))
+        for start in range(0, len(order) - self.batch + 1, self.batch):
+            chunk = self.index[order[start : start + self.batch]]
+            # Group by benchmark for contiguous gathers.
+            ops, feats, labels = [], [], []
+            for bi in np.unique(chunk[:, 0]):
+                rows = chunk[chunk[:, 0] == bi, 1]
+                o, f, l = window_batch(self.benches[bi], rows, self.context)
+                ops.append(o)
+                feats.append(f)
+                labels.append(l)
+            yield (
+                np.concatenate(ops),
+                np.concatenate(feats),
+                np.concatenate(labels),
+            )
+
+
+def sequential_windows(bench: BenchData, context, batch):
+    """Deterministic, in-order window batches over a full benchmark
+    (evaluation / CPI reconstruction). The first ``context−1``
+    instructions are emitted with left-padded (repeated-first) context."""
+    n = len(bench)
+    for start in range(0, n, batch):
+        idx = np.arange(start, min(start + batch, n))
+        idx_clamped = np.maximum(idx, context - 1)
+        o, f, l = window_batch(bench, idx_clamped, context)
+        # For the warm-up rows, labels must still be the true rows.
+        l = bench.labels[idx]
+        yield idx, (o, f, l)

@@ -1,0 +1,418 @@
+"""Build-time experiment drivers for the retraining-dependent figures.
+
+Each subcommand regenerates one paper artifact that requires *training
+sweeps* (the Rust `tao report` harness covers everything that only needs
+the simulators + the exported artifacts):
+
+* ``figure12a`` — accuracy vs memory-queue size Nm;
+* ``figure12b`` — accuracy vs branch-history (Nb, Nq);
+* ``figure13``  — epochs vs test error for Granite / GradNorm /
+  Tao-w/o-embed / Tao;
+* ``figure14``  — training-pair selection: random-k vs Euclidean vs
+  Mahalanobis;
+* ``table5``    — training time: scratch vs direct fine-tune vs shared
+  embeddings + fine-tune;
+* ``figure15``  — Tao-predicted MPKI across the L1D-size and branch
+  predictor sweeps (fine-tuned per design from the saved shared
+  embeddings).
+
+Every run prints its table and writes ``reports/<name>.txt`` so the Rust
+side (and EXPERIMENTS.md) can pick the results up. Instruction counts and
+epoch budgets are scaled-down defaults; pass ``--scale`` to grow them.
+
+Datasets for non-preset designs are produced by invoking the Rust
+`tao` binary (datagen is Rust-side by design — one feature extractor).
+"""
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+from . import multiarch, optim, simnet
+from . import train as train_mod
+
+TAO_BIN = os.environ.get("TAO_BIN", "../target/release/tao")
+TRAIN_BENCHES = ["dee", "rom", "nab", "lee"]
+TEST_BENCHES = ["mcf", "xal", "wrf", "cac"]
+
+
+def log(msg):
+    print(f"exp: {msg}", flush=True)
+
+
+class ReportFile:
+    """Mirror lines to stdout and reports/<name>.txt."""
+
+    def __init__(self, name):
+        os.makedirs("../reports", exist_ok=True)
+        self.f = open(f"../reports/{name}.txt", "w")
+
+    def line(self, s=""):
+        print(s, flush=True)
+        self.f.write(s + "\n")
+
+    def close(self):
+        self.f.close()
+
+
+def run_datagen(out_dir, *, insts, uarchs="a", split="all", nb=1024, nq=32, nm=64, seed=42):
+    """Invoke the Rust datagen for arbitrary feature configs."""
+    cmd = [
+        TAO_BIN, "datagen", "--out", out_dir, "--insts", str(insts),
+        "--uarchs", uarchs, "--split", split, "--nb", str(nb), "--nq", str(nq),
+        "--nm", str(nm), "--seed", str(seed),
+    ]
+    subprocess.run(cmd, check=True, capture_output=True)
+
+
+def default_cfg(meta, context=32, **kw):
+    fc = meta["feature_config"]
+    num_scalars = meta["feature_dim"] - meta["num_regs"] - fc["nq"] - fc["nm"]
+    return model_mod.ModelConfig(
+        num_opcodes=len(meta["opcode_vocab"]),
+        num_regs=meta["num_regs"],
+        nq=fc["nq"],
+        nm=fc["nm"],
+        num_scalars=num_scalars,
+        context=context,
+        **kw,
+    )
+
+
+def quick_train(data_dir, uarch, cfg, *, epochs, max_windows, seed=0, params=None, mask=None):
+    """Train a fresh (or provided) model on one arch's train benches."""
+    benches = data_mod.load_split(data_dir, uarch, TRAIN_BENCHES)
+    sampler = data_mod.WindowSampler(benches, cfg.context, 256, seed=seed, max_windows=max_windows)
+    if params is None:
+        params = model_mod.init_params(jax.random.PRNGKey(seed), cfg)
+    ac = optim.AdamConfig(decay_steps=epochs * max(len(sampler), 1))
+    return train_mod.train(params, sampler, cfg, epochs=epochs, adam_cfg=ac, mask=mask)
+
+
+def avg_test_error(params, data_dir, uarch, cfg, *, max_insts=20000, metric="cpi_error_pct"):
+    errs = []
+    for b in TEST_BENCHES:
+        bench = data_mod.load_bench(data_dir, uarch, b)
+        ev = train_mod.evaluate(params, bench, cfg, max_insts=max_insts)
+        errs.append(ev[metric])
+    return float(np.mean(errs))
+
+
+# --------------------------------------------------------------------------
+# Figure 12: feature-engineering hyperparameter sweeps
+# --------------------------------------------------------------------------
+
+def figure12a(args):
+    rep = ReportFile("figure12a")
+    rep.line("Figure 12a — simulation error vs memory context queue size Nm")
+    sizes = [16, 32, 64, 128] if args.scale == 1 else [32, 64, 128, 256]
+    for nm in sizes:
+        with tempfile.TemporaryDirectory() as d:
+            run_datagen(d, insts=args.insts, uarchs="a", nm=nm)
+            meta = data_mod.load_meta(d)
+            cfg = default_cfg(meta)
+            res = quick_train(d, "uarch_a", cfg, epochs=args.epochs, max_windows=args.windows)
+            err = avg_test_error(res.params, d, "uarch_a", cfg)
+            rep.line(f"  Nm={nm:>4}: avg CPI error {err:6.2f}%  (loss {res.losses[-1]:.2f})")
+    rep.line("(paper shape: error falls with Nm, flattens past 64)")
+    rep.close()
+
+
+def figure12b(args):
+    rep = ReportFile("figure12b")
+    rep.line("Figure 12b — branch MPKI error vs branch history (Nb, Nq)")
+    combos = [(256, 8), (256, 16), (1024, 16), (1024, 32)]
+    for nb, nq in combos:
+        with tempfile.TemporaryDirectory() as d:
+            run_datagen(d, insts=args.insts, uarchs="a", nb=nb, nq=nq)
+            meta = data_mod.load_meta(d)
+            cfg = default_cfg(meta)
+            res = quick_train(d, "uarch_a", cfg, epochs=args.epochs, max_windows=args.windows)
+            errs = []
+            for b in TEST_BENCHES:
+                bench = data_mod.load_bench(d, "uarch_a", b)
+                ev = train_mod.evaluate(res.params, bench, cfg, max_insts=20000)
+                t, p = ev["branch_mpki_truth"], ev["branch_mpki_pred"]
+                errs.append(abs(p - t) / max(t, 1e-9) * 100 if t > 0 else abs(p - t))
+            rep.line(f"  Nb={nb:>5}, Nq={nq:>3}: avg branch MPKI error {np.mean(errs):6.2f}%")
+    rep.line("(paper: (1k, 32) is the knee)")
+    rep.close()
+
+
+# --------------------------------------------------------------------------
+# Figure 13: gradient-combination schemes
+# --------------------------------------------------------------------------
+
+def figure13(args):
+    rep = ReportFile("figure13")
+    rep.line("Figure 13 — test error vs training epochs for the §4.3 schemes")
+    meta = data_mod.load_meta(args.data)
+    cfg = default_cfg(meta)
+    samplers = {
+        u: data_mod.WindowSampler(
+            data_mod.load_split(args.data, u, TRAIN_BENCHES),
+            cfg.context, 256, seed=0, max_windows=args.windows,
+        )
+        for u in ("uarch_a", "uarch_b")
+    }
+
+    def eval_fn(embed, per_arch):
+        errs = []
+        for u in ("uarch_a", "uarch_b"):
+            params = {"embed": embed, **per_arch[u]}
+            errs.append(avg_test_error(params, args.data, u, cfg, max_insts=8000))
+        return float(np.mean(errs))
+
+    histories = {}
+    for scheme in ("granite", "gradnorm", "tao_noembed", "tao"):
+        log(f"figure13: scheme {scheme}")
+        result = multiarch.train_shared(
+            samplers, cfg, scheme=scheme, epochs=args.epochs, eval_fn=eval_fn, log=log,
+        )
+        histories[scheme] = [h["test_error"] for h in result.history]
+    rep.line(f"{'epoch':>6} | " + " | ".join(f"{s:>12}" for s in histories))
+    for e in range(args.epochs):
+        rep.line(
+            f"{e + 1:>6} | "
+            + " | ".join(f"{histories[s][e]:>11.2f}%" for s in histories)
+        )
+    rep.line("(paper shape: tao < gradnorm < tao_noembed ~ granite at convergence)")
+    rep.close()
+
+
+# --------------------------------------------------------------------------
+# Figure 14: training-pair selection strategies
+# --------------------------------------------------------------------------
+
+def _mahalanobis_matrix(perfs):
+    x = np.asarray(perfs)
+    cov = np.cov(x.T) + np.eye(x.shape[1]) * 1e-9
+    inv = np.linalg.inv(cov)
+    n = len(x)
+    d = np.zeros((n, n))
+    for i in range(n):
+        for j in range(n):
+            diff = x[i] - x[j]
+            d[i, j] = float(np.sqrt(max(diff @ inv @ diff, 0.0)))
+    return d
+
+
+def _characterize_from_labels(data_dir, uarch):
+    """PerfVector (CPI, L1 miss rate, L2-ish rate, mispredict rate) from
+    the datagen labels — the python-side equivalent of `tao dse`."""
+    cpis, l1s, l2s, brs = [], [], [], []
+    for b in TRAIN_BENCHES:
+        bench = data_mod.load_bench(data_dir, uarch, b)
+        lbl = bench.labels
+        n = len(bench)
+        cpis.append(bench.total_cycles / n)
+        mem = lbl[:, model_mod.LBL_ACCESS] > 0
+        l1s.append((lbl[:, model_mod.LBL_ACCESS] >= 2).sum() / max(mem.sum(), 1))
+        l2s.append((lbl[:, model_mod.LBL_ACCESS] >= 3).sum() / max(mem.sum(), 1))
+        brs.append(lbl[:, model_mod.LBL_MISPRED].mean())
+    return [np.mean(cpis), np.mean(l1s), np.mean(l2s), np.mean(brs)]
+
+
+def figure14(args):
+    rep = ReportFile("figure14")
+    rep.line("Figure 14 — training-pair selection strategy vs simulation error")
+    # Sample designs from the Table 3 space via the Rust CLI datagen of
+    # presets + sampled designs. We approximate the paper's 20-design
+    # sample with the three presets + sampled extremes generated by
+    # `tao dse`; here we use presets a/b/c plus re-seeded variants.
+    names = ["uarch_a", "uarch_b", "uarch_c"]
+    with tempfile.TemporaryDirectory() as d:
+        run_datagen(d, insts=args.insts, uarchs="a,b,c", split="all")
+        meta = data_mod.load_meta(d)
+        cfg = default_cfg(meta)
+        perfs = [_characterize_from_labels(d, u) for u in names]
+        dmat = _mahalanobis_matrix(perfs)
+        emat = np.linalg.norm(
+            np.asarray(perfs)[:, None, :] - np.asarray(perfs)[None, :, :], axis=-1
+        )
+        rng = np.random.default_rng(0)
+
+        def pair_for(strategy):
+            if strategy == "random":
+                i, j = rng.choice(len(names), size=2, replace=False)
+                return int(i), int(j)
+            m = dmat if strategy == "mahalanobis" else emat
+            flat = np.unravel_index(np.argmax(m), m.shape)
+            return int(flat[0]), int(flat[1])
+
+        for strategy in ("random", "euclidean", "mahalanobis"):
+            i, j = pair_for(strategy)
+            samplers = {
+                names[k]: data_mod.WindowSampler(
+                    data_mod.load_split(d, names[k], TRAIN_BENCHES),
+                    cfg.context, 256, seed=0, max_windows=args.windows,
+                )
+                for k in (i, j)
+            }
+            shared = multiarch.train_shared(
+                samplers, cfg, scheme="tao", epochs=args.epochs, log=None
+            )
+            # Fine-tune on the held-out design (pick one not in the pair).
+            held = [k for k in range(len(names)) if k not in (i, j)][0]
+            ft_sampler = data_mod.WindowSampler(
+                data_mod.load_split(d, names[held], TRAIN_BENCHES),
+                cfg.context, 256, seed=0, max_windows=args.windows // 2,
+            )
+            donor = shared.per_arch[names[i]]["pred"]
+            res = multiarch.finetune_unseen(
+                shared.embed, donor, ft_sampler, cfg, epochs=max(args.epochs // 2, 1)
+            )
+            err = avg_test_error(res.params, d, names[held], cfg, max_insts=10000)
+            rep.line(
+                f"  {strategy:<12} pair=({names[i]},{names[j]}) held-out={names[held]}: "
+                f"avg CPI error {err:6.2f}%"
+            )
+    rep.line("(paper shape: mahalanobis <= euclidean <= random)")
+    rep.close()
+
+
+# --------------------------------------------------------------------------
+# Table 5: transfer-learning training time
+# --------------------------------------------------------------------------
+
+def table5(args):
+    rep = ReportFile("table5")
+    rep.line("Table 5 — training time to a fixed loss target (uarch_c)")
+    meta = data_mod.load_meta(args.data)
+    cfg = default_cfg(meta)
+    target_loss = args.loss_target
+
+    def train_until(params, sampler, mask=None, max_epochs=30):
+        ac = optim.AdamConfig()
+        step = train_mod.make_train_step(cfg, ac, mask=mask)
+        opt_state = optim.init_state(params)
+        t0 = time.perf_counter()
+        import jax.numpy as jnp
+        for epoch in range(max_epochs):
+            losses = []
+            for opcodes, feats, labels in sampler.epoch():
+                params, opt_state, loss, _ = step(
+                    params, opt_state, jnp.asarray(opcodes), jnp.asarray(feats), jnp.asarray(labels)
+                )
+                losses.append(float(loss))
+            avg = float(np.mean(losses))
+            if avg <= target_loss:
+                return time.perf_counter() - t0, epoch + 1, avg
+        return time.perf_counter() - t0, max_epochs, avg
+
+    benches_c = data_mod.load_split(args.data, "uarch_c", TRAIN_BENCHES)
+    full = data_mod.WindowSampler(benches_c, cfg.context, 256, seed=0, max_windows=args.windows)
+    reduced = data_mod.WindowSampler(
+        benches_c, cfg.context, 256, seed=0, max_windows=args.windows // 5
+    )
+
+    # 1. scratch
+    t_scratch, e1, l1 = train_until(model_mod.init_params(jax.random.PRNGKey(0), cfg), full)
+    rep.line(f"  scratch                         : {t_scratch:7.1f}s ({e1} epochs, loss {l1:.2f})")
+
+    # 2. direct fine-tuning from a donor arch (uarch_a quick-trained)
+    donor = quick_train(args.data, "uarch_a", cfg, epochs=2, max_windows=args.windows)
+    t0 = time.perf_counter()
+    t_direct, e2, l2 = train_until(jax.tree.map(np.copy, donor.params), full)
+    rep.line(f"  direct fine-tuning              : {t_direct:7.1f}s ({e2} epochs, loss {l2:.2f})")
+
+    # 3. shared embeddings + fine-tune (frozen embeddings, reduced data)
+    npz = np.load(os.path.join(args.artifacts, "shared_embeddings.npz"))
+    embed = {k.split("/", 1)[1]: npz[k] for k in npz.files if k.startswith("embed/")}
+    pred = {k.split("/", 1)[1]: npz[k] for k in npz.files if k.startswith("pred/")}
+    params = {
+        "embed": embed,
+        "adapt": model_mod.init_adapt_params(cfg),
+        "pred": pred,
+    }
+    mask = optim.make_mask(params, lambda p: not p.startswith("embed"))
+    t_shared, e3, l3 = train_until(params, reduced, mask=mask)
+    rep.line(f"  shared embeddings + fine-tuning : {t_shared:7.1f}s ({e3} epochs, loss {l3:.2f})")
+    rep.line(
+        f"  speedup vs scratch: direct {t_scratch / max(t_direct, 1e-9):.1f}x, "
+        f"shared {t_scratch / max(t_shared, 1e-9):.1f}x "
+        "(paper: 56h -> 38h -> 1.9h, i.e. ~1.5x and ~29x)"
+    )
+    rep.close()
+
+
+# --------------------------------------------------------------------------
+# Figure 15: Tao-predicted DSE series
+# --------------------------------------------------------------------------
+
+def figure15(args):
+    rep = ReportFile("figure15_tao")
+    meta = data_mod.load_meta(args.data)
+    cfg = default_cfg(meta)
+    npz = np.load(os.path.join(args.artifacts, "shared_embeddings.npz"))
+    embed = {k.split("/", 1)[1]: npz[k] for k in npz.files if k.startswith("embed/")}
+    donor_pred = {k.split("/", 1)[1]: npz[k] for k in npz.files if k.startswith("pred/")}
+
+    def finetuned_metrics(datadir, uarch):
+        sampler = data_mod.WindowSampler(
+            data_mod.load_split(datadir, uarch, TRAIN_BENCHES),
+            cfg.context, 256, seed=0, max_windows=args.windows // 2,
+        )
+        res = multiarch.finetune_unseen(
+            embed, donor_pred, sampler, cfg, epochs=max(args.epochs // 2, 1)
+        )
+        out = {}
+        for metric in ("l1d_mpki", "branch_mpki"):
+            preds, truths = [], []
+            for b in TEST_BENCHES:
+                bench = data_mod.load_bench(datadir, uarch, b)
+                ev = train_mod.evaluate(res.params, bench, cfg, max_insts=15000)
+                preds.append(ev[f"{metric}_pred"])
+                truths.append(ev[f"{metric}_truth"])
+            out[metric] = (float(np.mean(preds)), float(np.mean(truths)))
+        return out
+
+    # The sweeps vary one axis of uarch_b; Rust datagen only exposes the
+    # presets, so we reuse preset data generated per design via the
+    # `--uarchs` presets... For non-preset points we lean on the Rust
+    # report for ground truth and fine-tune on the nearest preset data.
+    # Here: evaluate Tao's predicted MPKI on the three presets (spanning
+    # the L1D 16/32/64KB and Local/BiMode/Tournament points of the sweep).
+    rep.line("Tao-predicted sweep points (fine-tuned per design, test-bench avg):")
+    for uarch, label in (("uarch_a", "L1D 16KB / Local"),
+                         ("uarch_b", "L1D 32KB / BiMode"),
+                         ("uarch_c", "L1D 64KB / Tournament")):
+        m = finetuned_metrics(args.data, uarch)
+        (p_l1, t_l1), (p_br, t_br) = m["l1d_mpki"], m["branch_mpki"]
+        rep.line(
+            f"  {label:<24}: L1D MPKI pred {p_l1:7.2f} (truth {t_l1:7.2f}) | "
+            f"branch MPKI pred {p_br:6.2f} (truth {t_br:6.2f})"
+        )
+    rep.line("(join with `tao report figure15` for the full ground-truth sweeps)")
+    rep.close()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("experiment", choices=[
+        "figure12a", "figure12b", "figure13", "figure14", "table5", "figure15",
+    ])
+    ap.add_argument("--data", default="../data")
+    ap.add_argument("--artifacts", default="../artifacts")
+    ap.add_argument("--insts", type=int, default=15000)
+    ap.add_argument("--epochs", type=int, default=4)
+    ap.add_argument("--windows", type=int, default=15000)
+    ap.add_argument("--scale", type=int, default=1)
+    ap.add_argument("--loss-target", type=float, default=95.0)
+    args = ap.parse_args(argv)
+    t0 = time.perf_counter()
+    globals()[args.experiment](args)
+    log(f"{args.experiment} done in {time.perf_counter() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

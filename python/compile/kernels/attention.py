@@ -1,0 +1,86 @@
+"""Layer-1 Pallas kernel: fused multi-head self-attention.
+
+The compute hot-spot of Tao's prediction layers (§4.2). The paper ran
+inference on A100s; per the hardware-adaptation note in DESIGN.md §7 the
+kernel is re-thought for TPU rather than ported from CUDA:
+
+* the grid is ``(B, H)`` — one (batch element, head) per program instance,
+  so each instance's ``[T, Dk]`` Q/K/V blocks and the ``[T, T]`` score
+  tile live entirely in VMEM (no HBM round-trip between QKᵀ, softmax and
+  the V contraction — the fusion a CUDA version would do with shared
+  memory and warp shuffles);
+* both contractions (``q kᵀ`` and ``p v``) are expressed as
+  ``jnp.dot(..., preferred_element_type=f32)`` so Mosaic maps them onto
+  the MXU systolic array;
+* the softmax row-reductions stay in registers/VMEM (VPU work), fused
+  between the two MXU calls.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so interpret mode is both the correctness path (pytest vs
+``ref.mha_ref``) and what `aot.py` lowers into the exported HLO. The VMEM
+footprint / MXU utilization estimate for a real TPU lives in
+EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mha_kernel(q_ref, k_ref, v_ref, o_ref, *, scale):
+    """One (batch, head) tile: q,k,v refs are ``[T, Dk]`` VMEM blocks."""
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    # MXU: [T, Dk] x [Dk, T] -> [T, T] scores.
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    # VPU: fused, numerically-stable softmax along keys.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    # MXU: [T, T] x [T, Dk] -> [T, Dk].
+    o_ref[...] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mha(q, k, v, *, interpret=True):
+    """Fused multi-head attention.
+
+    Args:
+      q, k, v: ``f32[B, H, T, Dk]``.
+      interpret: run the Pallas kernel in interpret mode (required for CPU
+        PJRT; real-TPU lowering would emit a Mosaic custom-call).
+
+    Returns:
+      ``f32[B, H, T, Dk]``.
+    """
+    b, h, t, dk = q.shape
+    scale = 1.0 / (dk**0.5)
+    # `None` squeezes the grid dims away: each instance sees [T, Dk] refs.
+    spec = pl.BlockSpec((None, None, t, dk), lambda i, j: (i, j, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_mha_kernel, scale=scale),
+        grid=(b, h),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, t, dk), jnp.float32),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def vmem_bytes(t, dk):
+    """Estimated VMEM footprint per program instance, in bytes.
+
+    Q + K + V + O tiles (``4 · T·Dk``) plus the score/prob tile (``T²``)
+    and softmax temporaries (``2·T``), all f32. Used by the §Perf harness
+    to check the block fits comfortably under ~16 MiB/core VMEM.
+    """
+    return 4 * (4 * t * dk + t * t + 2 * t)
+
+
+def mxu_flops(b, h, t, dk):
+    """MXU FLOPs for one call (two matmuls per (batch, head) instance)."""
+    per_instance = 2 * t * t * dk * 2  # two [T,T,Dk] contractions, 2 flops/MAC
+    return b * h * per_instance

@@ -1,0 +1,58 @@
+"""Layer-1 Pallas kernel: fused linear + ReLU (embedding combine).
+
+The §4.2 embedding stage concatenates per-category embeddings and pushes
+them through a combining linear layer; at inference this is a single
+``[B·T, Fin] × [Fin, Dout]`` GEMM executed every batch, second only to
+attention in the profile. The kernel tiles rows into VMEM-sized blocks
+(``ROW_BLOCK × Fin``), keeps the full weight resident (it is small:
+Fin, Dout ≤ a few hundred), and fuses bias + ReLU after the MXU call so
+the activation never round-trips to HBM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per program instance. 128 matches the MXU's systolic dimension.
+ROW_BLOCK = 128
+
+
+def _linear_relu_kernel(x_ref, w_ref, b_ref, o_ref):
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    o_ref[...] = jnp.maximum(y, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def linear_relu(x, w, b, *, interpret=True):
+    """Fused ``relu(x @ w + b)``.
+
+    Args:
+      x: ``f32[N, Fin]`` with ``N % ROW_BLOCK == 0`` (the model pads its
+        flattened batch — see `model.embed_instructions`).
+      w: ``f32[Fin, Fout]``.
+      b: ``f32[Fout]``.
+
+    Returns:
+      ``f32[N, Fout]``.
+    """
+    n, fin = x.shape
+    fout = w.shape[1]
+    assert n % ROW_BLOCK == 0, f"row count {n} not a multiple of {ROW_BLOCK}"
+    grid = (n // ROW_BLOCK,)
+    return pl.pallas_call(
+        _linear_relu_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_BLOCK, fin), lambda i: (i, 0)),
+            pl.BlockSpec((fin, fout), lambda i: (0, 0)),
+            pl.BlockSpec((fout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLOCK, fout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, fout), jnp.float32),
+        interpret=interpret,
+    )(x, w, b)

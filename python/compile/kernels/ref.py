@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: `pytest python/tests/test_kernels.py`
+sweeps shapes/dtypes (hypothesis) and asserts the Pallas kernels match these
+to tight tolerances. They are also used as the (mathematically identical)
+fast path during build-time training, where XLA's native fusion beats
+interpret-mode Pallas on CPU; the exported inference artifact uses the
+Pallas kernels (see `aot.py --kernel`).
+"""
+
+import jax.numpy as jnp
+
+
+def mha_ref(q, k, v):
+    """Multi-head attention oracle.
+
+    Args:
+      q, k, v: ``f32[B, H, T, Dk]``.
+
+    Returns:
+      ``f32[B, H, T, Dk]`` — ``softmax(q kᵀ / sqrt(Dk)) v`` per (batch, head).
+    """
+    dk = q.shape[-1]
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(jnp.asarray(dk, q.dtype))
+    # Numerically-stable softmax over the key axis.
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    weights = jnp.exp(scores)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    return jnp.einsum("bhts,bhsd->bhtd", weights, v)
+
+
+def linear_relu_ref(x, w, b):
+    """Fused linear + ReLU oracle.
+
+    Args:
+      x: ``f32[N, Fin]``.
+      w: ``f32[Fin, Fout]``.
+      b: ``f32[Fout]``.
+
+    Returns:
+      ``f32[N, Fout]`` — ``relu(x @ w + b)``.
+    """
+    return jnp.maximum(x @ w + b, 0.0)

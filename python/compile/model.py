@@ -1,0 +1,297 @@
+"""Layer-2: Tao's multi-metric DL model (paper §4.2, Figure 5).
+
+Architecture, exactly as the paper describes:
+
+1. **Two-level embedding layers.** Per-category embeddings — a trainable
+   lookup table for the opcode, separate linear embeddings for the
+   register bitmap, branch history, access distances and scalar flags —
+   concatenated and combined by a linear layer into the instruction
+   embedding. (The embedding stack is the *shared, microarchitecture
+   agnostic* part used for §4.3 transfer learning.)
+2. **Per-architecture embedding adaptation layer** ``W_k`` — the linear
+   projection Figure 7(c) inserts between shared embeddings and the
+   prediction network (identity-initialized).
+3. **Prediction layers.** Multi-head self-attention over the ``T = N+1``
+   instruction window (the Pallas kernel of `kernels/attention.py`, or
+   its jnp oracle during training) + a feed-forward trunk.
+4. **Multi-metric heads** (§4.2): linear heads for fetch/execution
+   latency (log1p space), a sigmoid head for branch misprediction, a
+   softmax head over the four data-access levels, and sigmoid heads for
+   icache and TLB misses.
+
+Parameters are plain pytrees (dicts of jnp arrays) split into
+``{"embed", "adapt", "pred"}`` so the §4.3 gradient schemes can address
+the shared and per-architecture parts separately.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_kernel
+from .kernels import embed as embed_kernel
+from .kernels import ref as kref
+
+# Label column indices (must match rust/src/datagen NUM_LABELS layout).
+LBL_FETCH, LBL_EXEC, LBL_MISPRED, LBL_ACCESS, LBL_ICACHE, LBL_TLB = range(6)
+NUM_ACCESS_LEVELS = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyperparameters. Feature layout mirrors data/meta.json."""
+
+    num_opcodes: int = 39
+    num_regs: int = 48
+    nq: int = 32
+    nm: int = 64
+    num_scalars: int = 8
+    context: int = 32  # T = N+1 window length
+    op_embed: int = 24
+    cat_embed: int = 16
+    scalar_embed: int = 8
+    d_model: int = 64
+    heads: int = 4
+    ff_dim: int = 64
+    # Loss combination ratios (paper: "combined with a linear ratio").
+    w_fetch: float = 0.05
+    w_exec: float = 0.05
+    w_branch: float = 0.5
+    w_access: float = 0.5
+    w_icache: float = 0.25
+    w_tlb: float = 0.25
+
+    @property
+    def feature_dim(self):
+        return self.num_regs + self.nq + self.nm + self.num_scalars
+
+    @property
+    def concat_dim(self):
+        return self.op_embed + 3 * self.cat_embed + self.scalar_embed
+
+    @property
+    def dk(self):
+        assert self.d_model % self.heads == 0
+        return self.d_model // self.heads
+
+
+def _layernorm(x, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps)
+
+
+def _glorot(key, shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def init_embed_params(key, cfg: ModelConfig):
+    """Shared (microarchitecture-agnostic) embedding parameters."""
+    ks = jax.random.split(key, 7)
+    return {
+        "op_table": jax.random.normal(ks[0], (cfg.num_opcodes, cfg.op_embed)) * 0.1,
+        "w_reg": _glorot(ks[1], (cfg.num_regs, cfg.cat_embed)),
+        "w_br": _glorot(ks[2], (cfg.nq, cfg.cat_embed)),
+        "w_mem": _glorot(ks[3], (cfg.nm, cfg.cat_embed)),
+        "w_sc": _glorot(ks[4], (cfg.num_scalars, cfg.scalar_embed)),
+        "w_comb": _glorot(ks[5], (cfg.concat_dim, cfg.d_model)),
+        "b_comb": jnp.zeros((cfg.d_model,)),
+    }
+
+
+def init_adapt_params(cfg: ModelConfig):
+    """Per-architecture embedding adaptation layer (identity init)."""
+    return {"w_adapt": jnp.eye(cfg.d_model, dtype=jnp.float32)}
+
+
+def init_pred_params(key, cfg: ModelConfig):
+    """Per-architecture prediction-layer parameters."""
+    ks = jax.random.split(key, 10)
+    d = cfg.d_model
+    return {
+        "wq": _glorot(ks[0], (d, d)),
+        "wk": _glorot(ks[1], (d, d)),
+        "wv": _glorot(ks[2], (d, d)),
+        "wo": _glorot(ks[3], (d, d)),
+        "w_ff": _glorot(ks[4], (d, cfg.ff_dim)),
+        "b_ff": jnp.zeros((cfg.ff_dim,)),
+        "w_fetch": _glorot(ks[5], (cfg.ff_dim, 1)),
+        "b_fetch": jnp.zeros((1,)),
+        "w_exec": _glorot(ks[6], (cfg.ff_dim, 1)),
+        "b_exec": jnp.zeros((1,)),
+        "w_branch": _glorot(ks[7], (cfg.ff_dim, 1)),
+        "b_branch": jnp.zeros((1,)),
+        "w_access": _glorot(ks[8], (cfg.ff_dim, NUM_ACCESS_LEVELS)),
+        "b_access": jnp.zeros((NUM_ACCESS_LEVELS,)),
+        "w_icache": _glorot(ks[9], (cfg.ff_dim, 1)),
+        "b_icache": jnp.zeros((1,)),
+        "w_tlb": _glorot(jax.random.fold_in(key, 99), (cfg.ff_dim, 1)),
+        "b_tlb": jnp.zeros((1,)),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    """Full parameter set for a single-architecture model."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "embed": init_embed_params(k1, cfg),
+        "adapt": init_adapt_params(cfg),
+        "pred": init_pred_params(k2, cfg),
+    }
+
+
+def embed_instructions(embed, opcodes, feats, cfg: ModelConfig, *, use_pallas=False):
+    """Two-level embedding: per-category embeddings → combine linear.
+
+    Args:
+      embed: embedding params.
+      opcodes: ``i32[B, T]``.
+      feats: ``f32[B, T, F]``.
+
+    Returns:
+      ``f32[B, T, d_model]`` instruction embeddings.
+    """
+    r, q, m = cfg.num_regs, cfg.nq, cfg.nm
+    regs = feats[..., :r]
+    br = feats[..., r : r + q]
+    mem = feats[..., r + q : r + q + m]
+    sc = feats[..., r + q + m :]
+    parts = [
+        embed["op_table"][opcodes],  # lookup-table embedding
+        regs @ embed["w_reg"],
+        br @ embed["w_br"],
+        mem @ embed["w_mem"],
+        sc @ embed["w_sc"],
+    ]
+    x = jnp.concatenate(parts, axis=-1)
+    if use_pallas:
+        b, t, c = x.shape
+        flat = x.reshape(b * t, c)
+        pad = (-flat.shape[0]) % embed_kernel.ROW_BLOCK
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+        y = embed_kernel.linear_relu(flat, embed["w_comb"], embed["b_comb"])
+        return y[: b * t].reshape(b, t, cfg.d_model)
+    return kref.linear_relu_ref(
+        x.reshape(-1, cfg.concat_dim), embed["w_comb"], embed["b_comb"]
+    ).reshape(*x.shape[:-1], cfg.d_model)
+
+
+def forward(params, opcodes, feats, cfg: ModelConfig, *, use_pallas=False):
+    """Full forward pass.
+
+    Returns a dict of per-window predictions for the **last** (current)
+    instruction: ``fetch``/``exec`` (log1p cycles, ``f32[B]``), ``branch``
+    / ``icache`` / ``tlb`` logits (``f32[B]``) and ``access`` logits
+    (``f32[B, 4]``).
+    """
+    x = embed_instructions(params["embed"], opcodes, feats, cfg, use_pallas=use_pallas)
+    # Per-architecture adaptation projection (Figure 7c).
+    x = x @ params["adapt"]["w_adapt"]
+    x = _layernorm(x)
+
+    p = params["pred"]
+    b, t, d = x.shape
+    h, dk = cfg.heads, cfg.dk
+
+    def split_heads(y):
+        return y.reshape(b, t, h, dk).transpose(0, 2, 1, 3)
+
+    q = split_heads(x @ p["wq"])
+    k = split_heads(x @ p["wk"])
+    v = split_heads(x @ p["wv"])
+    if use_pallas:
+        o = attn_kernel.mha(q, k, v)
+    else:
+        o = kref.mha_ref(q, k, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, d)
+    x = _layernorm(x + o @ p["wo"])  # residual + norm
+
+    # Current instruction = last window position.
+    hcur = x[:, -1, :]
+    g = jnp.maximum(hcur @ p["w_ff"] + p["b_ff"], 0.0)
+
+    return {
+        "fetch": (g @ p["w_fetch"] + p["b_fetch"])[:, 0],
+        "exec": (g @ p["w_exec"] + p["b_exec"])[:, 0],
+        "branch": (g @ p["w_branch"] + p["b_branch"])[:, 0],
+        "access": g @ p["w_access"] + p["b_access"],
+        "icache": (g @ p["w_icache"] + p["b_icache"])[:, 0],
+        "tlb": (g @ p["w_tlb"] + p["b_tlb"])[:, 0],
+    }
+
+
+def _bce(logits, targets):
+    # Stable binary cross entropy from logits.
+    return jnp.mean(jnp.maximum(logits, 0) - logits * targets + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def loss_fn(params, opcodes, feats, labels, cfg: ModelConfig, *, use_pallas=False):
+    """Combined multi-metric loss (per-metric losses merged with the
+    configured linear ratios, per §4.2).
+
+    Args:
+      labels: ``f32[B, 6]`` rows in datagen layout.
+
+    Returns:
+      (scalar loss, dict of per-metric losses).
+    """
+    out = forward(params, opcodes, feats, cfg, use_pallas=use_pallas)
+    # Latencies are regressed in *raw cycle* space: the distribution is
+    # heavy-tailed (mispredict/mem-stall events carry most cycles) and a
+    # log-space MSE would collapse predictions to the median, destroying
+    # CPI reconstruction. The small weight rebalances the raw magnitudes.
+    l_fetch = jnp.mean((out["fetch"] - labels[:, LBL_FETCH]) ** 2)
+    l_exec = jnp.mean((out["exec"] - labels[:, LBL_EXEC]) ** 2)
+    l_branch = _bce(out["branch"], labels[:, LBL_MISPRED])
+    access_t = labels[:, LBL_ACCESS].astype(jnp.int32)
+    logp = jax.nn.log_softmax(out["access"], axis=-1)
+    l_access = -jnp.mean(jnp.take_along_axis(logp, access_t[:, None], axis=1))
+    l_icache = _bce(out["icache"], labels[:, LBL_ICACHE])
+    l_tlb = _bce(out["tlb"], labels[:, LBL_TLB])
+    total = (
+        cfg.w_fetch * l_fetch
+        + cfg.w_exec * l_exec
+        + cfg.w_branch * l_branch
+        + cfg.w_access * l_access
+        + cfg.w_icache * l_icache
+        + cfg.w_tlb * l_tlb
+    )
+    return total, {
+        "fetch": l_fetch,
+        "exec": l_exec,
+        "branch": l_branch,
+        "access": l_access,
+        "icache": l_icache,
+        "tlb": l_tlb,
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def predict(params, opcodes, feats, cfg: ModelConfig):
+    """Jitted inference entry point (jnp path, used by evaluation)."""
+    return forward(params, opcodes, feats, cfg, use_pallas=False)
+
+
+def export_fn(params, cfg: ModelConfig, *, use_pallas=True):
+    """The function `aot.py` lowers: weights closed over as constants.
+
+    Returns a tuple in the fixed artifact order (see DESIGN.md §4):
+    ``(fetch, exec, branch, access, icache, tlb)``.
+    """
+
+    def fn(opcodes, feats):
+        out = forward(params, opcodes, feats, cfg, use_pallas=use_pallas)
+        return (
+            out["fetch"],
+            out["exec"],
+            out["branch"],
+            out["access"],
+            out["icache"],
+            out["tlb"],
+        )
+
+    return fn

@@ -1,0 +1,230 @@
+"""Multi-architecture shared-embedding training — paper §4.3 / Figure 7.
+
+Trains microarchitecture-*agnostic* embedding layers jointly over two
+microarchitectures, comparing the three gradient-combination paradigms
+from Figure 7:
+
+* ``granite``   — average the raw shared-layer gradients (Figure 7a);
+* ``gradnorm``  — learnable loss weights balancing gradient magnitudes
+                  (Figure 7b, Chen et al. 2018);
+* ``tao``       — per-architecture embedding **adaptation layer** (the
+                  linear projection that rotates gradients and defeats
+                  negative transfer) + per-architecture gradient
+                  **normalization** ``(X − mean)/(max − min)`` before
+                  averaging (Figure 7c / Algorithm 1);
+* ``tao_noembed`` — ablation: gradient normalization without the
+                  adaptation layer ("Tao w/o embed" in Figure 13).
+
+The fine-tuning path for an unseen microarchitecture (Figure 6) freezes
+the shared embeddings and trains only the adaptation + prediction layers.
+"""
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as model_mod
+from . import optim
+
+SCHEMES = ("granite", "gradnorm", "tao", "tao_noembed")
+
+
+@dataclasses.dataclass
+class SharedTrainResult:
+    """Outcome of shared-embedding training."""
+
+    embed: dict
+    per_arch: dict  # arch -> {"adapt", "pred"}
+    history: list  # per-epoch dicts
+    seconds: float
+
+
+def init_shared_params(key, cfg, archs):
+    """Shared embeddings + per-arch adaptation/prediction stacks."""
+    k_embed, k_pred = jax.random.split(key)
+    per_arch = {}
+    for i, a in enumerate(archs):
+        per_arch[a] = {
+            "adapt": model_mod.init_adapt_params(cfg),
+            "pred": model_mod.init_pred_params(jax.random.fold_in(k_pred, i), cfg),
+        }
+    return model_mod.init_embed_params(k_embed, cfg), per_arch
+
+
+def _normalize(g):
+    """Algorithm 1 line 5: (X − mean) / (max − min), per gradient matrix."""
+
+    def norm_leaf(x):
+        mean = jnp.mean(x)
+        rng = jnp.max(x) - jnp.min(x)
+        return (x - mean) / (rng + 1e-8)
+
+    return jax.tree.map(norm_leaf, g)
+
+
+def _arch_grads(cfg, use_adapt):
+    """Jitted per-arch (loss, grads) over (embed, adapt, pred)."""
+
+    def loss(embed, adapt, pred, opcodes, feats, labels):
+        params = {"embed": embed, "adapt": adapt, "pred": pred}
+        if not use_adapt:
+            # Ablation: pin the adaptation layer to identity.
+            params = {
+                "embed": embed,
+                "adapt": {"w_adapt": jnp.eye(cfg.d_model)},
+                "pred": pred,
+            }
+        total, _ = model_mod.loss_fn(params, opcodes, feats, labels, cfg)
+        return total
+
+    @jax.jit
+    def step(embed, adapt, pred, opcodes, feats, labels):
+        (l, grads) = jax.value_and_grad(loss, argnums=(0, 1, 2))(
+            embed, adapt, pred, opcodes, feats, labels
+        )
+        return l, grads
+
+    return step
+
+
+def train_shared(
+    samplers,
+    cfg,
+    *,
+    scheme="tao",
+    epochs=2,
+    adam_cfg=None,
+    eval_fn=None,
+    log=None,
+    seed=0,
+):
+    """Joint training over `samplers` = {arch_name: WindowSampler}.
+
+    `eval_fn(embed, per_arch) -> float` is called per epoch for the
+    Figure 13 test-error history.
+    """
+    assert scheme in SCHEMES, scheme
+    adam_cfg = adam_cfg or optim.AdamConfig()
+    archs = list(samplers.keys())
+    embed, per_arch = init_shared_params(jax.random.PRNGKey(seed), cfg, archs)
+    # Only the full Tao scheme has the adaptation layer (Figure 7c);
+    # granite/gradnorm/tao_noembed feed embeddings straight into the
+    # prediction layers (Figure 7a/7b).
+    use_adapt = scheme == "tao"
+    step = _arch_grads(cfg, use_adapt)
+
+    opt_embed = optim.init_state(embed)
+    opt_arch = {a: optim.init_state(per_arch[a]) for a in archs}
+    # GradNorm state.
+    w = {a: 1.0 for a in archs}
+    l0 = {a: None for a in archs}
+    gn_alpha, gn_lr = 1.5, 0.025
+
+    history = []
+    t0 = time.perf_counter()
+    for epoch in range(epochs):
+        iters = [s.epoch() for s in samplers.values()]
+        epoch_losses = {a: [] for a in archs}
+        while True:
+            batches = []
+            try:
+                for it in iters:
+                    batches.append(next(it))
+            except StopIteration:
+                break
+            g_embeds, g_archs, losses = {}, {}, {}
+            for a, (opcodes, feats, labels) in zip(archs, batches):
+                l, (ge, ga, gp) = step(
+                    embed,
+                    per_arch[a]["adapt"],
+                    per_arch[a]["pred"],
+                    jnp.asarray(opcodes),
+                    jnp.asarray(feats),
+                    jnp.asarray(labels),
+                )
+                losses[a] = float(l)
+                epoch_losses[a].append(float(l))
+                g_embeds[a] = ge
+                g_archs[a] = {"adapt": ga, "pred": gp}
+                if l0[a] is None:
+                    l0[a] = max(float(l), 1e-6)
+
+            # --- combine shared-layer gradients per scheme ---
+            if scheme == "granite":
+                combined = jax.tree.map(
+                    lambda *gs: sum(gs) / len(gs), *[g_embeds[a] for a in archs]
+                )
+            elif scheme in ("tao", "tao_noembed"):
+                normed = [_normalize(g_embeds[a]) for a in archs]
+                combined = jax.tree.map(lambda *gs: sum(gs) / len(gs), *normed)
+            elif scheme == "gradnorm":
+                # Weighted gradients; weights updated toward balanced
+                # per-task gradient norms scaled by inverse training rate.
+                norms = {a: float(optim.global_norm(g_embeds[a])) * w[a] for a in archs}
+                mean_norm = np.mean(list(norms.values()))
+                rates = {a: losses[a] / l0[a] for a in archs}
+                mean_rate = np.mean(list(rates.values()))
+                for a in archs:
+                    target = mean_norm * (rates[a] / mean_rate) ** gn_alpha
+                    # dG_a/dw_a = G_a / w_a (norm is linear in the weight).
+                    grad_w = np.sign(norms[a] - target) * norms[a] / max(w[a], 1e-6)
+                    w[a] = max(w[a] - gn_lr * grad_w, 0.05)
+                total_w = sum(w.values())
+                for a in archs:
+                    w[a] = w[a] * len(archs) / total_w
+                combined = jax.tree.map(
+                    lambda *gs: sum(gs) / len(gs),
+                    *[jax.tree.map(lambda g: g * w[a], g_embeds[a]) for a in archs],
+                )
+
+            embed, opt_embed = optim.adam_step(embed, combined, opt_embed, adam_cfg)
+            for a in archs:
+                per_arch[a], opt_arch[a] = optim.adam_step(
+                    per_arch[a], g_archs[a], opt_arch[a], adam_cfg
+                )
+
+        entry = {
+            "epoch": epoch + 1,
+            "loss": {a: float(np.mean(v)) if v else float("nan") for a, v in epoch_losses.items()},
+        }
+        if eval_fn is not None:
+            entry["test_error"] = eval_fn(embed, per_arch)
+        history.append(entry)
+        if log:
+            log(f"[{scheme}] epoch {epoch + 1}/{epochs}: {entry}")
+    return SharedTrainResult(
+        embed=embed, per_arch=per_arch, history=history, seconds=time.perf_counter() - t0
+    )
+
+
+def finetune_unseen(
+    embed,
+    donor_pred,
+    sampler,
+    cfg,
+    *,
+    epochs=2,
+    adam_cfg=None,
+    log=None,
+):
+    """Figure 6: adapt to an unseen µarch with frozen shared embeddings.
+
+    The prediction layers are initialized from `donor_pred` (an earlier
+    trained architecture) and fine-tuned together with a fresh adaptation
+    layer; embedding parameters receive no updates.
+    """
+    from . import train as train_mod
+
+    params = {
+        "embed": embed,
+        "adapt": model_mod.init_adapt_params(cfg),
+        "pred": jax.tree.map(jnp.copy, donor_pred),
+    }
+    mask = optim.make_mask(params, lambda path: not path.startswith("embed"))
+    result = train_mod.train(
+        params, sampler, cfg, epochs=epochs, adam_cfg=adam_cfg, mask=mask, log=log
+    )
+    return result

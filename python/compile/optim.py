@@ -1,0 +1,95 @@
+"""Manual optimizers (the image has no optax): Adam + gradient clipping.
+
+State and updates are plain pytrees, jit-friendly, with an optional
+parameter *mask* so the §4.3 fine-tuning phase can freeze the shared
+embedding layers ("the parameters of shared embedding layers are frozen,
+i.e., we do not update the parameters during backpropagation").
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    """Adam hyperparameters with optional cosine LR decay."""
+
+    lr: float = 2e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    clip_norm: float = 5.0
+    # Cosine decay to `lr * min_lr_frac` over `decay_steps` (0 = constant).
+    decay_steps: int = 0
+    min_lr_frac: float = 0.05
+
+
+def init_state(params):
+    """Zeroed first/second moments + step counter."""
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    """L2 norm across a whole pytree."""
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    """Scale gradients so the global norm is at most `max_norm`."""
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+def adam_step(params, grads, state, cfg: AdamConfig, *, mask=None):
+    """One Adam update.
+
+    Args:
+      mask: optional pytree of 0/1 floats (same structure as params);
+        masked-out (0) parameters receive no update — used to freeze the
+        shared embedding layers during fine-tuning.
+
+    Returns:
+      (new_params, new_state).
+    """
+    grads = clip_by_global_norm(grads, cfg.clip_norm)
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: cfg.b1 * m_ + (1 - cfg.b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: cfg.b2 * v_ + (1 - cfg.b2) * g * g, state["v"], grads)
+    tf = t.astype(jnp.float32)
+    bc1 = 1 - cfg.b1**tf
+    bc2 = 1 - cfg.b2**tf
+    if cfg.decay_steps > 0:
+        frac = jnp.clip(tf / cfg.decay_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        lr = cfg.lr * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos)
+    else:
+        lr = cfg.lr
+
+    def upd(p, m_, v_):
+        return p - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + cfg.eps)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    if mask is not None:
+        new_params = jax.tree.map(
+            lambda newp, oldp, mk: newp * mk + oldp * (1 - mk), new_params, params, mask
+        )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def make_mask(params, predicate):
+    """Build a 0/1 mask pytree: `predicate(path_str)` decides per leaf.
+
+    Paths are "/"-joined dict keys, e.g. ``"embed/w_comb"``.
+    """
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{path}/{k}" if path else k) for k, v in node.items()}
+        return jnp.full_like(node, 1.0 if predicate(path) else 0.0)
+
+    return walk(params, "")

@@ -1,0 +1,190 @@
+"""SimNet baseline — the state-of-the-art DL simulator Tao compares with.
+
+Reproduces the relevant design points of SimNet's CNN ("C3 hybrid",
+Li et al. 2022) for the paper's comparisons:
+
+* **µarch-specific input**: alongside the static instruction features,
+  SimNet consumes low-level performance metrics of the *context*
+  instructions (branch misprediction, cache access levels, latencies) —
+  which is exactly why it needs a fresh *detailed* trace per
+  microarchitecture (Table 4's trace-generation column) while Tao reuses
+  the functional trace.
+* **CPI-only output**: fetch/execution latency of the current
+  instruction; no branch/cache/TLB heads (Figure 9/11 comparisons).
+* **Convolutional context aggregation**: three 1-D conv layers over the
+  instruction window (the "C3" in C3 hybrid).
+
+The current instruction's own metrics are masked from the input (they are
+the prediction target).
+"""
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import optim
+
+NUM_CTX_METRICS = 6  # same label layout as datagen
+
+
+@dataclasses.dataclass(frozen=True)
+class SimNetConfig:
+    """SimNet hyperparameters."""
+
+    num_opcodes: int = 39
+    feature_dim: int = 152
+    context: int = 32
+    op_embed: int = 24
+    channels: int = 64
+    kernel: int = 3
+
+
+def init_params(key, cfg: SimNetConfig):
+    """Initialize CNN parameters."""
+    ks = jax.random.split(key, 8)
+
+    def glorot(k, shape):
+        fan_in = np.prod(shape[:-1])
+        return jax.random.normal(k, shape, jnp.float32) * jnp.sqrt(2.0 / (fan_in + shape[-1]))
+
+    in_dim = cfg.op_embed + cfg.feature_dim + NUM_CTX_METRICS
+    c = cfg.channels
+    return {
+        "op_table": jax.random.normal(ks[0], (cfg.num_opcodes, cfg.op_embed)) * 0.1,
+        "w_in": glorot(ks[1], (in_dim, c)),
+        "b_in": jnp.zeros((c,)),
+        # conv weights [K, Cin, Cout]
+        "conv1": glorot(ks[2], (cfg.kernel, c, c)),
+        "conv2": glorot(ks[3], (cfg.kernel, c, c)),
+        "conv3": glorot(ks[4], (cfg.kernel, c, c)),
+        "w_fetch": glorot(ks[5], (c, 1)),
+        "b_fetch": jnp.zeros((1,)),
+        "w_exec": glorot(ks[6], (c, 1)),
+        "b_exec": jnp.zeros((1,)),
+    }
+
+
+def _conv1d(x, w):
+    """Causal-ish same-padded conv over the window axis. x: [B,T,C]."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1,),
+        padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+    )
+
+
+def forward(params, opcodes, feats, ctx_metrics, cfg: SimNetConfig):
+    """Predict (fetch, exec) raw-cycle latencies of the last instruction.
+
+    Args:
+      opcodes: ``i32[B, T]``; feats: ``f32[B, T, F]``;
+      ctx_metrics: ``f32[B, T, 6]`` — per-instruction metrics from the
+        *detailed* trace, with the final (current) row masked by the
+        caller.
+    """
+    x = jnp.concatenate([params["op_table"][opcodes], feats, ctx_metrics], axis=-1)
+    x = jnp.maximum(x @ params["w_in"] + params["b_in"], 0.0)
+    x = jnp.maximum(_conv1d(x, params["conv1"]), 0.0)
+    x = jnp.maximum(_conv1d(x, params["conv2"]), 0.0)
+    x = jnp.maximum(_conv1d(x, params["conv3"]), 0.0)
+    h = x[:, -1, :]
+    return (
+        (h @ params["w_fetch"] + params["b_fetch"])[:, 0],
+        (h @ params["w_exec"] + params["b_exec"])[:, 0],
+    )
+
+
+def mask_current(ctx_metrics):
+    """Zero the final row (the current instruction's own metrics)."""
+    return ctx_metrics.at[:, -1, :].set(0.0)
+
+
+def loss_fn(params, opcodes, feats, ctx_metrics, labels, cfg: SimNetConfig):
+    """MSE on raw-cycle latencies."""
+    fetch, exe = forward(params, opcodes, feats, ctx_metrics, cfg)
+    # Raw-space regression (see model.loss_fn for the rationale).
+    l_f = jnp.mean((fetch - labels[:, 0]) ** 2)
+    l_e = jnp.mean((exe - labels[:, 1]) ** 2)
+    return 0.05 * (l_f + l_e)
+
+
+def make_ctx_metrics(label_windows):
+    """Build the context-metric tensor from label windows ``[B, T, 6]``
+    (teacher forcing from the detailed trace), masking the current row."""
+    return mask_current(jnp.asarray(label_windows))
+
+
+def train(sampler_with_ctx, cfg: SimNetConfig, *, epochs=2, seed=0, adam_cfg=None, log=None):
+    """Train SimNet. `sampler_with_ctx` yields (opcodes, feats, label_windows, labels)."""
+    adam_cfg = adam_cfg or optim.AdamConfig()
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    opt_state = optim.init_state(params)
+
+    @jax.jit
+    def step(params, opt_state, opcodes, feats, ctx, labels):
+        loss, grads = jax.value_and_grad(loss_fn)(params, opcodes, feats, ctx, labels, cfg)
+        params, opt_state = optim.adam_step(params, grads, opt_state, adam_cfg)
+        return params, opt_state, loss
+
+    losses = []
+    t0 = time.perf_counter()
+    for epoch in range(epochs):
+        ep = []
+        for opcodes, feats, label_windows, labels in sampler_with_ctx():
+            ctx = make_ctx_metrics(label_windows)
+            params, opt_state, loss = step(
+                params, opt_state, jnp.asarray(opcodes), jnp.asarray(feats), ctx, jnp.asarray(labels)
+            )
+            ep.append(float(loss))
+        losses.append(float(np.mean(ep)) if ep else float("nan"))
+        if log:
+            log(f"[simnet] epoch {epoch + 1}/{epochs}: loss {losses[-1]:.4f}")
+    return params, losses, time.perf_counter() - t0
+
+
+def export_fn(params, cfg: SimNetConfig):
+    """Inference function for AOT lowering (weights baked)."""
+
+    @functools.wraps(forward)
+    def fn(opcodes, feats, ctx_metrics):
+        fetch, exe = forward(params, opcodes, feats, ctx_metrics, cfg)
+        return (fetch, exe)
+
+    return fn
+
+
+def ctx_sampler(sampler, benches):
+    """Adapt a data.WindowSampler to also yield label windows.
+
+    Reaches into the sampler's index to gather ``[B, T, 6]`` label
+    windows alongside the standard batch.
+    """
+
+    def gen():
+        order = sampler.rng.permutation(len(sampler.index))
+        for start in range(0, len(order) - sampler.batch + 1, sampler.batch):
+            chunk = sampler.index[order[start : start + sampler.batch]]
+            ops, feats, lblw, labels = [], [], [], []
+            offsets = np.arange(-(sampler.context - 1), 1)
+            for bi in np.unique(chunk[:, 0]):
+                rows = chunk[chunk[:, 0] == bi, 1]
+                b = benches[bi]
+                gather = rows[:, None] + offsets[None, :]
+                ops.append(b.opcodes[gather])
+                feats.append(b.features[gather])
+                lblw.append(b.labels[gather])
+                labels.append(b.labels[rows])
+            yield (
+                np.concatenate(ops),
+                np.concatenate(feats),
+                np.concatenate(lblw),
+                np.concatenate(labels),
+            )
+
+    return gen

@@ -1,0 +1,137 @@
+"""Single-architecture training and trace-level evaluation.
+
+`train` fits a Tao model on one microarchitecture's windows; `evaluate`
+replays a full benchmark through the model and reports the paper's
+evaluation quantities: CPI (via the §4.2 retire-clock reconstruction),
+branch/L1D/icache/TLB MPKI, and the §5 simulation-error percentages.
+"""
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+from . import optim
+
+
+@dataclasses.dataclass
+class TrainResult:
+    """Outcome of a training run."""
+
+    params: dict
+    losses: list
+    seconds: float
+    epochs: int
+
+
+def make_train_step(cfg, adam_cfg, mask=None):
+    """Build a jitted Adam step over the combined multi-metric loss."""
+
+    @jax.jit
+    def step(params, opt_state, opcodes, feats, labels):
+        (loss, parts), grads = jax.value_and_grad(model_mod.loss_fn, has_aux=True)(
+            params, opcodes, feats, labels, cfg
+        )
+        params, opt_state = optim.adam_step(params, grads, opt_state, adam_cfg, mask=mask)
+        return params, opt_state, loss, parts
+
+    return step
+
+def train(params, sampler, cfg, *, epochs=2, adam_cfg=None, mask=None, log=None):
+    """Train `params` over `sampler` for `epochs`. Returns TrainResult."""
+    adam_cfg = adam_cfg or optim.AdamConfig()
+    step = make_train_step(cfg, adam_cfg, mask=mask)
+    opt_state = optim.init_state(params)
+    losses = []
+    t0 = time.perf_counter()
+    for epoch in range(epochs):
+        epoch_losses = []
+        for opcodes, feats, labels in sampler.epoch():
+            params, opt_state, loss, _ = step(
+                params, opt_state, jnp.asarray(opcodes), jnp.asarray(feats), jnp.asarray(labels)
+            )
+            epoch_losses.append(float(loss))
+        avg = float(np.mean(epoch_losses)) if epoch_losses else float("nan")
+        losses.append(avg)
+        if log:
+            log(f"epoch {epoch + 1}/{epochs}: loss {avg:.4f}")
+    return TrainResult(params=params, losses=losses, seconds=time.perf_counter() - t0, epochs=epochs)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _predict_batch(params, opcodes, feats, cfg):
+    out = model_mod.forward(params, opcodes, feats, cfg, use_pallas=False)
+    return (
+        jnp.maximum(out["fetch"], 0.0),
+        jnp.maximum(out["exec"], 0.0),
+        jax.nn.sigmoid(out["branch"]),
+        jax.nn.softmax(out["access"], axis=-1),
+        jax.nn.sigmoid(out["icache"]),
+        jax.nn.sigmoid(out["tlb"]),
+    )
+
+
+def evaluate(params, bench, cfg, *, batch=512, max_insts=None):
+    """Replay `bench` through the model; return predicted-vs-truth metrics.
+
+    Mirrors what the Rust coordinator does on the request path, for use in
+    the build-time experiments (Figures 12-14, Table 5).
+    """
+    n = len(bench) if max_insts is None else min(len(bench), max_insts)
+    fetch = np.zeros(n)
+    exe = np.zeros(n)
+    mispred = np.zeros(n)
+    access = np.zeros((n, model_mod.NUM_ACCESS_LEVELS))
+    icache = np.zeros(n)
+    tlb = np.zeros(n)
+    for idx, (o, f, l) in data_mod.sequential_windows(bench, cfg.context, batch):
+        idx = idx[idx < n]
+        if len(idx) == 0:
+            break
+        o, f = o[: len(idx)], f[: len(idx)]
+        pf, pe, pb, pa, pi, pt = _predict_batch(
+            params, jnp.asarray(o), jnp.asarray(f), cfg
+        )
+        fetch[idx] = np.asarray(pf)
+        exe[idx] = np.asarray(pe)
+        mispred[idx] = np.asarray(pb)
+        access[idx] = np.asarray(pa)
+        icache[idx] = np.asarray(pi)
+        tlb[idx] = np.asarray(pt)
+
+    labels = bench.labels[:n]
+    truth_cycles = _reconstruct(labels[:, 0], labels[:, 1])
+    pred_cycles = _reconstruct(fetch, exe)
+    # Aggregate MPKIs use *expected counts* (probability sums): the
+    # sigmoid/softmax heads are probability-calibrated by their BCE/CE
+    # losses, so the sum is an unbiased estimator of the miss count — far
+    # better for MPKI than hard 0.5 thresholding on imbalanced classes.
+    access_cls = np.argmax(access, axis=1)
+    out = {
+        "instructions": n,
+        "cpi_truth": truth_cycles / n,
+        "cpi_pred": pred_cycles / n,
+        "branch_mpki_truth": labels[:, model_mod.LBL_MISPRED].sum() * 1000 / n,
+        "branch_mpki_pred": mispred.sum() * 1000 / n,
+        "l1d_mpki_truth": (labels[:, model_mod.LBL_ACCESS] >= 2).sum() * 1000 / n,
+        "l1d_mpki_pred": access[:, 2:].sum() * 1000 / n,
+        "icache_mpki_truth": labels[:, model_mod.LBL_ICACHE].sum() * 1000 / n,
+        "icache_mpki_pred": icache.sum() * 1000 / n,
+        "tlb_mpki_truth": labels[:, model_mod.LBL_TLB].sum() * 1000 / n,
+        "tlb_mpki_pred": tlb.sum() * 1000 / n,
+        "access_acc": float((access_cls == labels[:, model_mod.LBL_ACCESS]).mean()),
+        "branch_auc_proxy": float(np.mean(mispred[labels[:, model_mod.LBL_MISPRED] > 0.5]) - np.mean(mispred[labels[:, model_mod.LBL_MISPRED] <= 0.5])) if (labels[:, model_mod.LBL_MISPRED] > 0.5).any() else 0.0,
+    }
+    out["cpi_error_pct"] = abs(out["cpi_pred"] - out["cpi_truth"]) / out["cpi_truth"] * 100
+    return out
+
+
+def _reconstruct(fetch_lat, exec_lat):
+    """§4.2 retire-clock reconstruction: total cycles of a stream."""
+    clock = np.cumsum(np.maximum(fetch_lat, 0.0))
+    return float(clock[-1] + max(exec_lat[-1], 0.0)) if len(clock) else 0.0

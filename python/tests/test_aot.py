@@ -1,0 +1,72 @@
+"""AOT export tests: HLO text generation, metadata consistency, and the
+large-constant regression (weights must survive into the text)."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot
+from compile import model as M
+
+CFG = M.ModelConfig(context=4, nq=4, nm=4, num_scalars=10, d_model=16, ff_dim=16, heads=2)
+
+META = {
+    "opcode_vocab": {f"op{i}": i for i in range(39)},
+    "num_regs": 48,
+    "feature_dim": CFG.feature_dim,
+    "feature_config": {"nb": 16, "nq": 4, "nm": 4},
+}
+
+
+class TestHloExport:
+    def test_to_hlo_text_keeps_large_constants(self):
+        w = jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)), jnp.float32)
+
+        def fn(x):
+            return (x @ w,)
+
+        lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((8, 64), jnp.float32))
+        text = aot.to_hlo_text(lowered)
+        assert "{...}" not in text, "weights elided from HLO text"
+        assert "f32[64,64]" in text
+
+    def test_export_tao_writes_hlo_and_meta(self):
+        params = M.init_params(jax.random.PRNGKey(0), CFG)
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "tao_test.hlo.txt")
+            size = aot.export_tao(params, CFG, META, batch=2, path=path, use_pallas=False)
+            assert size > 1000
+            text = open(path).read()
+            assert text.startswith("HloModule")
+            meta = json.load(open(path.replace(".hlo.txt", ".meta.json")))
+            assert meta["kind"] == "tao"
+            assert meta["batch"] == 2
+            assert meta["context"] == CFG.context
+            assert meta["outputs"] == aot.OUTPUT_NAMES
+            assert meta["kernel"] == "jnp"
+
+    def test_export_pallas_variant(self):
+        params = M.init_params(jax.random.PRNGKey(1), CFG)
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "tao_p.hlo.txt")
+            aot.export_tao(params, CFG, META, batch=2, path=path, use_pallas=True)
+            meta = json.load(open(path.replace(".hlo.txt", ".meta.json")))
+            assert meta["kernel"] == "pallas"
+
+    def test_vocab_hash_stable_and_sensitive(self):
+        h1 = aot.vocab_hash(META)
+        h2 = aot.vocab_hash(dict(META))
+        assert h1 == h2
+        changed = dict(META)
+        changed["opcode_vocab"] = {**META["opcode_vocab"], "op0": 99}
+        assert aot.vocab_hash(changed) != h1
+
+    def test_model_config_from_meta(self):
+        cfg = aot.model_config(META, context=4)
+        assert cfg.feature_dim == META["feature_dim"]
+        assert cfg.nq == 4 and cfg.nm == 4
+        assert cfg.num_scalars == META["feature_dim"] - 48 - 4 - 4

@@ -1,0 +1,70 @@
+"""Window batching / dataset plumbing tests (synthetic arrays)."""
+
+import numpy as np
+import pytest
+
+from compile import data as data_mod
+
+
+def bench(n=50, f=6):
+    return data_mod.BenchData(
+        name="t",
+        opcodes=np.arange(n, dtype=np.int32),
+        features=np.arange(n * f, dtype=np.float32).reshape(n, f),
+        labels=np.tile(np.arange(n, dtype=np.float32)[:, None], (1, 6)),
+        total_cycles=123,
+    )
+
+
+class TestWindowBatch:
+    def test_window_contents(self):
+        b = bench()
+        ops, feats, labels = data_mod.window_batch(b, [4, 10], context=3)
+        assert ops.shape == (2, 3)
+        np.testing.assert_array_equal(ops[0], [2, 3, 4])
+        np.testing.assert_array_equal(ops[1], [8, 9, 10])
+        # Labels are those of the last (current) instruction.
+        np.testing.assert_array_equal(labels[:, 0], [4, 10])
+        # Features of the newest row.
+        np.testing.assert_array_equal(feats[0, -1], b.features[4])
+
+    def test_underrun_rejected(self):
+        with pytest.raises(AssertionError):
+            data_mod.window_batch(bench(), [1], context=3)
+
+
+class TestWindowSampler:
+    def test_epoch_covers_batches_without_duplicates_within_epoch(self):
+        b = bench(n=100)
+        s = data_mod.WindowSampler([b], context=4, batch=8, seed=0)
+        seen = []
+        for ops, feats, labels in s.epoch():
+            assert ops.shape == (8, 4)
+            seen.extend(labels[:, 0].tolist())
+        assert len(seen) == len(s) * 8
+        assert len(set(seen)) == len(seen)
+
+    def test_max_windows_caps(self):
+        b = bench(n=200)
+        s = data_mod.WindowSampler([b], context=4, batch=8, seed=0, max_windows=16)
+        assert len(s.index) == 16
+
+    def test_multiple_benches_mixed(self):
+        s = data_mod.WindowSampler([bench(60), bench(60)], context=4, batch=16, seed=1)
+        batches = list(s.epoch())
+        assert len(batches) == len(s)
+
+    def test_short_bench_skipped(self):
+        s = data_mod.WindowSampler([bench(2)], context=4, batch=2, seed=0)
+        assert len(s.index) == 0
+
+
+class TestSequentialWindows:
+    def test_covers_every_instruction_once_in_order(self):
+        b = bench(n=37)
+        seen = []
+        for idx, (ops, feats, labels) in data_mod.sequential_windows(b, context=4, batch=10):
+            seen.extend(idx.tolist())
+            # Labels must be the true rows even during warm-up.
+            np.testing.assert_array_equal(labels[:, 0], idx.astype(np.float32))
+        assert seen == list(range(37))

@@ -1,0 +1,128 @@
+"""Layer-2 model tests: shapes, loss behaviour, pallas/jnp parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(context=8, nq=8, nm=8, num_scalars=10, d_model=32, ff_dim=32, heads=2)
+
+
+def batch(rng, b=4):
+    ops = jnp.asarray(rng.integers(0, CFG.num_opcodes, size=(b, CFG.context)), jnp.int32)
+    feats = jnp.asarray(rng.normal(size=(b, CFG.context, CFG.feature_dim)), jnp.float32)
+    labels = jnp.asarray(
+        np.stack(
+            [
+                rng.uniform(0, 10, b),
+                rng.uniform(1, 100, b),
+                rng.integers(0, 2, b).astype(float),
+                rng.integers(0, 4, b).astype(float),
+                rng.integers(0, 2, b).astype(float),
+                rng.integers(0, 2, b).astype(float),
+            ],
+            axis=1,
+        ),
+        jnp.float32,
+    )
+    return ops, feats, labels
+
+
+class TestForward:
+    def test_output_shapes(self):
+        rng = np.random.default_rng(0)
+        params = M.init_params(jax.random.PRNGKey(0), CFG)
+        ops, feats, _ = batch(rng, b=5)
+        out = M.forward(params, ops, feats, CFG)
+        assert out["fetch"].shape == (5,)
+        assert out["exec"].shape == (5,)
+        assert out["branch"].shape == (5,)
+        assert out["access"].shape == (5, 4)
+        assert out["icache"].shape == (5,)
+        assert out["tlb"].shape == (5,)
+
+    def test_pallas_and_jnp_paths_agree(self):
+        rng = np.random.default_rng(1)
+        params = M.init_params(jax.random.PRNGKey(1), CFG)
+        ops, feats, _ = batch(rng)
+        a = M.forward(params, ops, feats, CFG, use_pallas=False)
+        b = M.forward(params, ops, feats, CFG, use_pallas=True)
+        for k in a:
+            np.testing.assert_allclose(
+                np.asarray(a[k]), np.asarray(b[k]), rtol=1e-4, atol=1e-4,
+                err_msg=f"output {k} diverges between kernel paths",
+            )
+
+    def test_prediction_depends_on_context(self):
+        # Permuting the *context* instructions (not the last) must change
+        # the prediction — self-attention sees the whole window.
+        rng = np.random.default_rng(2)
+        params = M.init_params(jax.random.PRNGKey(2), CFG)
+        ops, feats, _ = batch(rng, b=1)
+        out1 = M.forward(params, ops, feats, CFG)["fetch"]
+        feats2 = jnp.asarray(feats).at[:, 0, :].set(feats[:, 1, :] * 2.0 + 1.0)
+        out2 = M.forward(params, ops, feats2, CFG)["fetch"]
+        assert abs(float(out1[0] - out2[0])) > 1e-7
+
+    def test_deterministic(self):
+        rng = np.random.default_rng(3)
+        params = M.init_params(jax.random.PRNGKey(3), CFG)
+        ops, feats, _ = batch(rng)
+        a = M.forward(params, ops, feats, CFG)["exec"]
+        b = M.forward(params, ops, feats, CFG)["exec"]
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestLoss:
+    def test_loss_finite_and_decomposed(self):
+        rng = np.random.default_rng(4)
+        params = M.init_params(jax.random.PRNGKey(4), CFG)
+        ops, feats, labels = batch(rng)
+        total, parts = M.loss_fn(params, ops, feats, labels, CFG)
+        assert np.isfinite(float(total))
+        assert set(parts) == {"fetch", "exec", "branch", "access", "icache", "tlb"}
+        recon = (
+            CFG.w_fetch * parts["fetch"]
+            + CFG.w_exec * parts["exec"]
+            + CFG.w_branch * parts["branch"]
+            + CFG.w_access * parts["access"]
+            + CFG.w_icache * parts["icache"]
+            + CFG.w_tlb * parts["tlb"]
+        )
+        np.testing.assert_allclose(float(total), float(recon), rtol=1e-6)
+
+    def test_gradients_flow_to_all_parts(self):
+        rng = np.random.default_rng(5)
+        params = M.init_params(jax.random.PRNGKey(5), CFG)
+        ops, feats, labels = batch(rng)
+        grads = jax.grad(lambda p: M.loss_fn(p, ops, feats, labels, CFG)[0])(params)
+        for section in ("embed", "adapt", "pred"):
+            total = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads[section]))
+            assert total > 0, f"no gradient reached {section}"
+
+    def test_perfect_prediction_gives_small_latency_loss(self):
+        # Construct labels equal to the model's own predictions: the
+        # regression terms must then be ~0.
+        rng = np.random.default_rng(6)
+        params = M.init_params(jax.random.PRNGKey(6), CFG)
+        ops, feats, labels = batch(rng)
+        out = M.forward(params, ops, feats, CFG)
+        labels = labels.at[:, M.LBL_FETCH].set(jnp.maximum(out["fetch"], 0.0))
+        labels = labels.at[:, M.LBL_EXEC].set(jnp.maximum(out["exec"], 0.0))
+        _, parts = M.loss_fn(params, ops, feats, labels, CFG)
+        assert float(parts["fetch"]) < 1e-6 or float(parts["fetch"]) < float(parts["branch"])
+
+
+class TestExportFn:
+    def test_export_tuple_order(self):
+        rng = np.random.default_rng(7)
+        params = M.init_params(jax.random.PRNGKey(7), CFG)
+        ops, feats, _ = batch(rng)
+        fn = M.export_fn(params, CFG, use_pallas=False)
+        out = fn(ops, feats)
+        assert len(out) == 6
+        named = M.forward(params, ops, feats, CFG)
+        np.testing.assert_allclose(np.asarray(out[0]), np.asarray(named["fetch"]))
+        np.testing.assert_allclose(np.asarray(out[3]), np.asarray(named["access"]))

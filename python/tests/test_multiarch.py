@@ -1,0 +1,105 @@
+"""§4.3 transfer-learning machinery tests: gradient normalization, the
+adaptation layer, scheme training loops, and fine-tuning with frozen
+embeddings — on synthetic data (no datagen needed)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data as data_mod
+from compile import model as M
+from compile import multiarch, optim
+
+CFG = M.ModelConfig(context=4, nq=4, nm=4, num_scalars=10, d_model=16, ff_dim=16, heads=2)
+
+
+def synth_bench(seed, n=600):
+    rng = np.random.default_rng(seed)
+    return data_mod.BenchData(
+        name=f"synth{seed}",
+        opcodes=rng.integers(0, CFG.num_opcodes, n).astype(np.int32),
+        features=rng.normal(size=(n, CFG.feature_dim)).astype(np.float32),
+        labels=np.stack(
+            [
+                rng.uniform(0, 5, n),
+                rng.uniform(1, 20, n),
+                rng.integers(0, 2, n).astype(float),
+                rng.integers(0, 4, n).astype(float),
+                rng.integers(0, 2, n).astype(float),
+                rng.integers(0, 2, n).astype(float),
+            ],
+            axis=1,
+        ).astype(np.float32),
+        total_cycles=1000,
+    )
+
+
+def samplers():
+    return {
+        "arch_x": data_mod.WindowSampler([synth_bench(1)], CFG.context, 64, seed=0),
+        "arch_y": data_mod.WindowSampler([synth_bench(2)], CFG.context, 64, seed=0),
+    }
+
+
+class TestNormalize:
+    def test_normalize_centers_and_scales(self):
+        g = {"w": jnp.asarray([[1.0, 2.0], [3.0, 5.0]])}
+        n = multiarch._normalize(g)["w"]
+        np.testing.assert_allclose(float(jnp.mean(n)), 0.0, atol=1e-6)
+        rng = float(jnp.max(n) - jnp.min(n))
+        np.testing.assert_allclose(rng, 1.0, atol=1e-5)
+
+    def test_normalize_constant_gradient_is_safe(self):
+        g = {"w": jnp.ones((3, 3))}
+        n = multiarch._normalize(g)["w"]
+        assert np.isfinite(np.asarray(n)).all()
+
+
+class TestSchemes:
+    def test_all_schemes_run_and_reduce_loss(self):
+        for scheme in multiarch.SCHEMES:
+            res = multiarch.train_shared(samplers(), CFG, scheme=scheme, epochs=3)
+            first = np.mean(list(res.history[0]["loss"].values()))
+            last = np.mean(list(res.history[-1]["loss"].values()))
+            assert last < first, f"{scheme}: loss {first} -> {last}"
+
+    def test_tao_scheme_trains_adaptation_layer(self):
+        res = multiarch.train_shared(samplers(), CFG, scheme="tao", epochs=2)
+        w = np.asarray(res.per_arch["arch_x"]["adapt"]["w_adapt"])
+        assert not np.allclose(w, np.eye(CFG.d_model)), "adaptation layer never moved"
+
+    def test_granite_keeps_adaptation_identity(self):
+        res = multiarch.train_shared(samplers(), CFG, scheme="granite", epochs=2)
+        w = np.asarray(res.per_arch["arch_x"]["adapt"]["w_adapt"])
+        np.testing.assert_allclose(w, np.eye(CFG.d_model), atol=1e-6)
+
+    def test_eval_fn_recorded_in_history(self):
+        calls = []
+
+        def eval_fn(embed, per_arch):
+            calls.append(1)
+            return 42.0
+
+        res = multiarch.train_shared(samplers(), CFG, scheme="tao", epochs=2, eval_fn=eval_fn)
+        assert len(calls) == 2
+        assert res.history[0]["test_error"] == 42.0
+
+
+class TestFinetune:
+    def test_embeddings_frozen_during_finetune(self):
+        shared = multiarch.train_shared(samplers(), CFG, scheme="tao", epochs=1)
+        donor = shared.per_arch["arch_x"]["pred"]
+        sampler = data_mod.WindowSampler([synth_bench(3)], CFG.context, 64, seed=0)
+        before = jax.tree.map(np.copy, shared.embed)
+        res = multiarch.finetune_unseen(shared.embed, donor, sampler, CFG, epochs=2)
+        for k in before:
+            np.testing.assert_array_equal(
+                np.asarray(res.params["embed"][k]), before[k],
+                err_msg=f"embedding {k} changed during fine-tune",
+            )
+        # Prediction layers must have moved.
+        moved = any(
+            not np.allclose(np.asarray(res.params["pred"][k]), np.asarray(donor[k]))
+            for k in donor
+        )
+        assert moved

@@ -1,0 +1,71 @@
+"""SimNet baseline tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import simnet
+
+CFG = simnet.SimNetConfig(num_opcodes=39, feature_dim=20, context=6, channels=16)
+
+
+def batch(rng, b=4):
+    ops = jnp.asarray(rng.integers(0, CFG.num_opcodes, (b, CFG.context)), jnp.int32)
+    feats = jnp.asarray(rng.normal(size=(b, CFG.context, CFG.feature_dim)), jnp.float32)
+    ctx = jnp.asarray(rng.normal(size=(b, CFG.context, simnet.NUM_CTX_METRICS)), jnp.float32)
+    return ops, feats, ctx
+
+
+class TestSimNet:
+    def test_forward_shapes(self):
+        rng = np.random.default_rng(0)
+        params = simnet.init_params(jax.random.PRNGKey(0), CFG)
+        ops, feats, ctx = batch(rng, b=3)
+        fetch, exe = simnet.forward(params, ops, feats, ctx, CFG)
+        assert fetch.shape == (3,)
+        assert exe.shape == (3,)
+
+    def test_mask_current_zeroes_last_row_only(self):
+        rng = np.random.default_rng(1)
+        _, _, ctx = batch(rng)
+        masked = simnet.mask_current(ctx)
+        assert float(jnp.abs(masked[:, -1, :]).sum()) == 0.0
+        np.testing.assert_array_equal(
+            np.asarray(masked[:, :-1, :]), np.asarray(ctx[:, :-1, :])
+        )
+
+    def test_uses_context_metrics(self):
+        # SimNet's defining property: µarch-specific context metrics move
+        # the prediction (Tao's inputs are µarch-agnostic by contrast).
+        rng = np.random.default_rng(2)
+        params = simnet.init_params(jax.random.PRNGKey(2), CFG)
+        ops, feats, ctx = batch(rng, b=1)
+        f1, _ = simnet.forward(params, ops, feats, ctx, CFG)
+        f2, _ = simnet.forward(params, ops, feats, ctx * 3.0, CFG)
+        assert abs(float(f1[0] - f2[0])) > 1e-7
+
+    def test_training_reduces_loss(self):
+        rng = np.random.default_rng(3)
+
+        def sampler():
+            for _ in range(12):
+                b = 32
+                ops = rng.integers(0, CFG.num_opcodes, (b, CFG.context)).astype(np.int32)
+                feats = rng.normal(size=(b, CFG.context, CFG.feature_dim)).astype(np.float32)
+                lblw = rng.uniform(0, 4, size=(b, CFG.context, 6)).astype(np.float32)
+                labels = lblw[:, -1, :]
+                yield ops, feats, lblw, labels
+
+        params, losses, secs = simnet.train(sampler, CFG, epochs=3, seed=0)
+        assert losses[-1] < losses[0]
+        assert secs > 0
+
+    def test_export_fn_matches_forward(self):
+        rng = np.random.default_rng(4)
+        params = simnet.init_params(jax.random.PRNGKey(4), CFG)
+        ops, feats, ctx = batch(rng)
+        fn = simnet.export_fn(params, CFG)
+        out = fn(ops, feats, ctx)
+        direct = simnet.forward(params, ops, feats, ctx, CFG)
+        np.testing.assert_allclose(np.asarray(out[0]), np.asarray(direct[0]))
+        np.testing.assert_allclose(np.asarray(out[1]), np.asarray(direct[1]))

@@ -1,0 +1,139 @@
+//! Tiny flag parser: positionals + `--flag value` pairs, with typed
+//! accessors and an unknown-flag check at the end.
+
+use anyhow::{bail, Context, Result};
+
+/// Argument cursor.
+pub struct Args {
+    argv: Vec<Option<String>>,
+}
+
+impl Args {
+    /// Wrap an argv (excluding the program name).
+    pub fn new(argv: Vec<String>) -> Args {
+        Args {
+            argv: argv.into_iter().map(Some).collect(),
+        }
+    }
+
+    /// Take the next unconsumed positional argument.
+    pub fn next_positional(&mut self) -> Option<String> {
+        for slot in self.argv.iter_mut() {
+            if let Some(v) = slot {
+                if !v.starts_with("--") {
+                    return slot.take();
+                } else {
+                    return None; // positionals come before flags
+                }
+            }
+        }
+        None
+    }
+
+    /// Take `--flag value`, if present.
+    pub fn opt_value(&mut self, flag: &str) -> Result<Option<String>> {
+        for i in 0..self.argv.len() {
+            if self.argv[i].as_deref() == Some(flag) {
+                self.argv[i] = None;
+                let v = self
+                    .argv
+                    .get_mut(i + 1)
+                    .and_then(|s| s.take())
+                    .with_context(|| format!("flag {flag} requires a value"))?;
+                if v.starts_with("--") {
+                    bail!("flag {flag} requires a value, got {v}");
+                }
+                return Ok(Some(v));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Take `--flag value` parsed into `T`.
+    pub fn opt_parse<T: std::str::FromStr>(&mut self, flag: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt_value(flag)? {
+            None => Ok(None),
+            Some(v) => match v.parse::<T>() {
+                Ok(t) => Ok(Some(t)),
+                Err(e) => bail!("bad value for {flag}: {e}"),
+            },
+        }
+    }
+
+    /// Take a boolean `--flag` (no value).
+    pub fn opt_flag(&mut self, flag: &str) -> bool {
+        for slot in self.argv.iter_mut() {
+            if slot.as_deref() == Some(flag) {
+                *slot = None;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Error on any unconsumed argument.
+    pub fn finish(self) -> Result<()> {
+        let leftovers: Vec<String> = self.argv.into_iter().flatten().collect();
+        if !leftovers.is_empty() {
+            bail!("unrecognized arguments: {}", leftovers.join(" "));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::new(s.split_whitespace().map(String::from).collect())
+    }
+
+    #[test]
+    fn positional_then_flags() {
+        let mut a = args("report --out x");
+        assert_eq!(a.next_positional().unwrap(), "report");
+        assert_eq!(a.opt_value("--out").unwrap().unwrap(), "x");
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn typed_parse() {
+        let mut a = args("--n 42");
+        let n: u64 = a.opt_parse("--n").unwrap().unwrap();
+        assert_eq!(n, 42);
+        let mut a = args("--n forty");
+        assert!(a.opt_parse::<u64>("--n").is_err());
+    }
+
+    #[test]
+    fn missing_flag_is_none() {
+        let mut a = args("--x 1");
+        assert!(a.opt_value("--y").unwrap().is_none());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let mut a = args("--x");
+        assert!(a.opt_value("--x").is_err());
+        let mut a = args("--x --y");
+        assert!(a.opt_value("--x").is_err());
+    }
+
+    #[test]
+    fn bool_flag() {
+        let mut a = args("--fast");
+        assert!(a.opt_flag("--fast"));
+        assert!(!a.opt_flag("--fast"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn leftovers_rejected() {
+        let a = args("--mystery 1");
+        assert!(a.finish().is_err());
+    }
+}

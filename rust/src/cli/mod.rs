@@ -1,0 +1,114 @@
+//! Command-line interface for the `tao` launcher.
+//!
+//! Hand-rolled argument parsing (the build is fully offline/vendored; no
+//! clap). Subcommands:
+//!
+//! * `tao datagen`   — generate traces + training datasets (`data/`);
+//! * `tao simulate`  — run the DL-based simulation on a benchmark;
+//! * `tao report`    — regenerate a paper table/figure (see DESIGN.md §3);
+//! * `tao dse`       — sample + characterize designs, select train pair.
+
+pub mod args;
+
+use crate::datagen::{self, DatagenOptions};
+use crate::features::FeatureConfig;
+use crate::uarch::UarchConfig;
+use crate::workloads;
+use anyhow::{bail, Context, Result};
+use args::Args;
+use std::path::PathBuf;
+
+/// Top-level usage string.
+pub const USAGE: &str = "\
+tao — Tao DL-based microarchitecture simulation (SIGMETRICS '24 reproduction)
+
+USAGE:
+  tao datagen  [--out DIR] [--insts N] [--uarchs a,b,c] [--split train|test|all]
+               [--seed S] [--nb N] [--nq N] [--nm N]
+  tao simulate --model artifacts/tao_uarch_a.hlo.txt --bench mcf
+               [--insts N] [--batch B] [--workers W] [--seed S] [--window T]
+  tao report   <table1|figure2|figure9|figure10a|figure10b|figure11|figure12a|
+                figure12b|figure14|table4|table6|figure15> [opts]
+  tao dse      [--designs N] [--insts N] [--seed S]
+  tao help
+";
+
+/// Entry point called by `main`.
+pub fn run(argv: Vec<String>) -> Result<()> {
+    let mut args = Args::new(argv);
+    let Some(cmd) = args.next_positional() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "datagen" => cmd_datagen(args),
+        "simulate" => crate::coordinator::cli::cmd_simulate(args),
+        "report" => crate::reports::cmd_report(args),
+        "dse" => crate::reports::cmd_dse(args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+/// Parse `--uarchs a,b,c` into configs.
+pub fn parse_uarchs(spec: &str) -> Result<Vec<UarchConfig>> {
+    spec.split(',')
+        .map(|s| UarchConfig::preset(s.trim()).with_context(|| format!("unknown uarch {s:?}")))
+        .collect()
+}
+
+/// Parse a workload split selector.
+pub fn parse_split(spec: &str) -> Result<Vec<workloads::Workload>> {
+    Ok(match spec {
+        "train" => workloads::training(),
+        "test" => workloads::testing(),
+        "all" => workloads::suite(),
+        name => vec![workloads::by_name(name).with_context(|| format!("unknown benchmark {name:?}"))?],
+    })
+}
+
+fn cmd_datagen(mut args: Args) -> Result<()> {
+    let out: PathBuf = args.opt_value("--out")?.unwrap_or_else(|| "data".into()).into();
+    let insts: u64 = args.opt_parse("--insts")?.unwrap_or(20_000);
+    let uarch_spec = args.opt_value("--uarchs")?.unwrap_or_else(|| "a,b,c".into());
+    let split = args.opt_value("--split")?.unwrap_or_else(|| "all".into());
+    let seed: u64 = args.opt_parse("--seed")?.unwrap_or(42);
+    let nb: usize = args.opt_parse("--nb")?.unwrap_or(1024);
+    let nq: usize = args.opt_parse("--nq")?.unwrap_or(32);
+    let nm: usize = args.opt_parse("--nm")?.unwrap_or(64);
+    args.finish()?;
+
+    let uarchs = parse_uarchs(&uarch_spec)?;
+    let wls = parse_split(&split)?;
+    let opts = DatagenOptions {
+        instructions: insts,
+        features: FeatureConfig { nb, nq, nm },
+        seed,
+    };
+    datagen::run(&out, &wls, &uarchs, &opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_uarchs_presets() {
+        let u = parse_uarchs("a,b").unwrap();
+        assert_eq!(u.len(), 2);
+        assert_eq!(u[0].name, "uarch_a");
+        assert!(parse_uarchs("a,zz").is_err());
+    }
+
+    #[test]
+    fn parse_split_selectors() {
+        assert_eq!(parse_split("train").unwrap().len(), 4);
+        assert_eq!(parse_split("test").unwrap().len(), 4);
+        assert_eq!(parse_split("all").unwrap().len(), 8);
+        assert_eq!(parse_split("mcf").unwrap().len(), 1);
+        assert!(parse_split("bogus").is_err());
+    }
+}

@@ -1,0 +1,67 @@
+//! `tao simulate` — run the DL-based simulation end-to-end.
+//!
+//! Generates (or loads) a functional trace, streams it through the AOT
+//! model via the engine, and reports predicted CPI/MPKIs, throughput in
+//! MIPS, and — with `--truth` — the detailed-simulator ground truth and
+//! the paper's simulation-error percentages.
+
+use super::engine;
+use crate::cli::args::Args;
+use crate::detailed::DetailedSim;
+use crate::functional::FunctionalSim;
+use crate::stats::simulation_error_percent;
+use crate::uarch::UarchConfig;
+use crate::workloads;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// Run the DL-based simulation from the command line.
+pub fn cmd_simulate(mut args: Args) -> Result<()> {
+    let model: PathBuf = args
+        .opt_value("--model")?
+        .context("--model artifacts/tao_<uarch>.hlo.txt required")?
+        .into();
+    let bench_name = args.opt_value("--bench")?.unwrap_or_else(|| "mcf".into());
+    let insts: u64 = args.opt_parse("--insts")?.unwrap_or(100_000);
+    let workers: usize = args.opt_parse("--workers")?.unwrap_or(1);
+    let seed: u64 = args.opt_parse("--seed")?.unwrap_or(42);
+    let truth_uarch = args.opt_value("--truth")?;
+    args.finish()?;
+
+    let workload =
+        workloads::by_name(&bench_name).with_context(|| format!("unknown benchmark {bench_name}"))?;
+    let program = workload.build(seed);
+
+    eprintln!("simulate: generating functional trace ({insts} insts of {bench_name})...");
+    let trace = FunctionalSim::new(&program).run(insts);
+
+    eprintln!("simulate: loading {model:?} and running inference (workers={workers})...");
+    let result = engine::simulate_parallel(&model, &trace.records, workers, None)?;
+    let m = result.metrics;
+    println!("benchmark          : {bench_name}");
+    println!("instructions       : {}", m.instructions);
+    println!("predicted CPI      : {:.4}", m.cpi());
+    println!("predicted bMPKI    : {:.2}", m.branch_mpki());
+    println!("predicted L1D MPKI : {:.2}", m.l1d_mpki());
+    println!("predicted L1I MPKI : {:.2}", m.l1i_mpki());
+    println!("predicted TLB MPKI : {:.2}", m.tlb_mpki());
+    println!("batches            : {}", result.batches);
+    println!("inference time     : {:.2}s", result.elapsed.as_secs_f64());
+    println!("throughput         : {:.3} MIPS", result.mips());
+
+    if let Some(uarch_name) = truth_uarch {
+        let cfg = UarchConfig::preset(&uarch_name)
+            .with_context(|| format!("unknown uarch {uarch_name}"))?;
+        eprintln!("simulate: running detailed ground truth on {}...", cfg.name);
+        let (_, stats) = DetailedSim::new(&program, &cfg).stats_only().run(insts);
+        println!("--- ground truth ({}) ---", cfg.name);
+        println!("CPI truth          : {:.4}", stats.cpi());
+        println!(
+            "CPI error          : {:.2}%",
+            simulation_error_percent(m.cpi(), stats.cpi())
+        );
+        println!("bMPKI truth        : {:.2}", stats.branch_mpki());
+        println!("L1D MPKI truth     : {:.2}", stats.l1d_mpki());
+    }
+    Ok(())
+}

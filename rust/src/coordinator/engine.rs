@@ -1,0 +1,426 @@
+//! The DL-simulation engine — Layer 3's request path.
+//!
+//! Mirrors the parallel-simulation design of Pandey et al. [59] that both
+//! SimNet and Tao use: the committed instruction stream is partitioned
+//! into **shards**; each worker owns a feature extractor, a window
+//! batcher and its own compiled PJRT executable, and streams its shard
+//! through the model; the collector folds per-shard accumulators into the
+//! run-level metrics. Shard boundaries cold-start the history state —
+//! the same approximation the paper makes.
+
+use crate::features::FeatureExtractor;
+use crate::runtime::{ModelKind, ModelOutputs, Session};
+use crate::stats::{Metrics, PhaseSeries};
+use crate::trace::FuncRecord;
+use anyhow::{ensure, Context, Result};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+/// Sliding-window batcher: collects per-instruction features into the
+/// session's staging buffers, window by window, and reports when a full
+/// batch is ready. The window for instruction *i* covers `[i-T+1, i]`
+/// with repeated-first-row padding during warm-up.
+pub struct WindowBatcher {
+    t: usize,
+    f: usize,
+    batch: usize,
+    /// Ring of the last `T` (opcode, features) rows.
+    ring_ops: Vec<i32>,
+    ring_feats: Vec<f32>,
+    filled: usize,
+    head: usize,
+    /// Windows currently staged.
+    pub staged: usize,
+}
+
+impl WindowBatcher {
+    /// New batcher for the given artifact shape.
+    pub fn new(t: usize, f: usize, batch: usize) -> WindowBatcher {
+        WindowBatcher {
+            t,
+            f,
+            batch,
+            ring_ops: vec![0; t],
+            ring_feats: vec![0.0; t * f],
+            filled: 0,
+            head: 0,
+            staged: 0,
+        }
+    }
+
+    /// Push one instruction's features; stage its window into the session
+    /// buffers. Returns `true` when the batch is full and must be flushed.
+    pub fn push(
+        &mut self,
+        opcode: i32,
+        feats: &[f32],
+        ops_buf: &mut [i32],
+        feat_buf: &mut [f32],
+    ) -> bool {
+        debug_assert_eq!(feats.len(), self.f);
+        // Insert into ring.
+        self.ring_ops[self.head] = opcode;
+        self.ring_feats[self.head * self.f..(self.head + 1) * self.f].copy_from_slice(feats);
+        self.head = (self.head + 1) % self.t;
+        self.filled = (self.filled + 1).min(self.t);
+
+        // Stage the window ending at this instruction.
+        let w = self.staged;
+        let dst_ops = &mut ops_buf[w * self.t..(w + 1) * self.t];
+        let dst_feats = &mut feat_buf[w * self.t * self.f..(w + 1) * self.t * self.f];
+        for j in 0..self.t {
+            // Window position j (oldest..newest). During warm-up, repeat
+            // the oldest available row.
+            let age = self.t - 1 - j; // newest = age 0
+            let age = age.min(self.filled - 1);
+            let idx = (self.head + self.t - 1 - age) % self.t;
+            dst_ops[j] = self.ring_ops[idx];
+            dst_feats[j * self.f..(j + 1) * self.f]
+                .copy_from_slice(&self.ring_feats[idx * self.f..(idx + 1) * self.f]);
+        }
+        self.staged += 1;
+        self.staged == self.batch
+    }
+
+    /// Reset staging (after a flush).
+    pub fn clear_staged(&mut self) {
+        self.staged = 0;
+    }
+
+    /// Reset everything (new shard).
+    pub fn reset(&mut self) {
+        self.filled = 0;
+        self.head = 0;
+        self.staged = 0;
+    }
+}
+
+/// Accumulated predictions over a stream.
+#[derive(Debug, Clone, Default)]
+pub struct PredAccum {
+    /// Instructions accounted.
+    pub instructions: u64,
+    /// Σ predicted fetch latency (cycles).
+    pub fetch_cycles: f64,
+    /// Last window's predicted exec latency (tail correction).
+    pub last_exec: f64,
+    /// Σ P(mispredict).
+    pub mispredicts: f64,
+    /// Σ P(L1D miss) (= P(level ≥ L2)).
+    pub l1d_misses: f64,
+    /// Σ P(L1I miss).
+    pub l1i_misses: f64,
+    /// Σ P(TLB miss).
+    pub tlb_misses: f64,
+    /// Optional per-window phase series.
+    pub phase: Option<PhaseSeries>,
+}
+
+impl PredAccum {
+    /// With phase tracking at the given window size.
+    pub fn with_phase(window: u64) -> PredAccum {
+        PredAccum {
+            phase: Some(PhaseSeries::new(window)),
+            ..Default::default()
+        }
+    }
+
+    /// Fold one model batch.
+    pub fn absorb(&mut self, out: &ModelOutputs, kind: ModelKind) {
+        for i in 0..out.fetch.len() {
+            let fetch = out.fetch[i] as f64;
+            let exec = out.exec[i] as f64;
+            self.instructions += 1;
+            self.fetch_cycles += fetch;
+            self.last_exec = exec;
+            let (mis, l1d, l1i, tlb) = match kind {
+                ModelKind::Tao => (
+                    out.branch[i] as f64,
+                    (out.access[i * 4 + 2] + out.access[i * 4 + 3]) as f64,
+                    out.icache[i] as f64,
+                    out.tlb[i] as f64,
+                ),
+                ModelKind::SimNet => (0.0, 0.0, 0.0, 0.0),
+            };
+            self.mispredicts += mis;
+            self.l1d_misses += l1d;
+            self.l1i_misses += l1i;
+            self.tlb_misses += tlb;
+            if let Some(ph) = &mut self.phase {
+                ph.push(fetch, mis > 0.5, l1d > 0.5, l1i > 0.5, tlb > 0.5);
+            }
+        }
+    }
+
+    /// Merge another shard's accumulator (order: self then other).
+    pub fn merge(&mut self, other: &PredAccum) {
+        self.instructions += other.instructions;
+        self.fetch_cycles += other.fetch_cycles;
+        self.last_exec = other.last_exec;
+        self.mispredicts += other.mispredicts;
+        self.l1d_misses += other.l1d_misses;
+        self.l1i_misses += other.l1i_misses;
+        self.tlb_misses += other.tlb_misses;
+    }
+
+    /// Total predicted cycles (§4.2 reconstruction).
+    pub fn total_cycles(&self) -> f64 {
+        self.fetch_cycles + self.last_exec
+    }
+
+    /// As run-level metrics.
+    pub fn metrics(&self) -> Metrics {
+        Metrics {
+            instructions: self.instructions,
+            cycles: self.total_cycles(),
+            mispredicts: self.mispredicts,
+            l1d_misses: self.l1d_misses,
+            l1i_misses: self.l1i_misses,
+            tlb_misses: self.tlb_misses,
+        }
+    }
+}
+
+/// Result of a simulation run.
+#[derive(Debug)]
+pub struct SimResult {
+    /// Predicted metrics.
+    pub metrics: Metrics,
+    /// Wall-clock inference time (feature extraction + model execution).
+    pub elapsed: Duration,
+    /// Model batches executed.
+    pub batches: u64,
+    /// Optional phase series (single-shard runs).
+    pub phase: Option<PhaseSeries>,
+}
+
+impl SimResult {
+    /// Simulation throughput in MIPS.
+    pub fn mips(&self) -> f64 {
+        crate::util::timer::mips(self.metrics.instructions, self.elapsed)
+    }
+}
+
+/// Simulate a record stream through one session (one shard, one thread).
+///
+/// `ctx_metrics` (SimNet only): per-instruction detailed-trace metrics,
+/// `[N × 6]` — the µarch-specific inputs SimNet requires.
+pub fn simulate_records(
+    session: &mut Session,
+    records: &[FuncRecord],
+    ctx_metrics: Option<&[f32]>,
+    phase_window: Option<u64>,
+) -> Result<SimResult> {
+    let meta = session.meta().clone();
+    if meta.kind == ModelKind::SimNet {
+        ensure!(
+            ctx_metrics.map(|c| c.len()) == Some(records.len() * 6),
+            "SimNet requires [N×6] context metrics"
+        );
+    }
+    let mut fx = FeatureExtractor::new(meta.features);
+    let mut batcher = WindowBatcher::new(meta.context, meta.feature_dim, meta.batch);
+    let mut accum = match phase_window {
+        Some(w) => PredAccum::with_phase(w),
+        None => PredAccum::default(),
+    };
+    let mut feat_row = vec![0.0f32; meta.feature_dim];
+    let mut batches = 0u64;
+    let start = Instant::now();
+
+    let flush = |session: &mut Session,
+                     batcher: &mut WindowBatcher,
+                     accum: &mut PredAccum,
+                     batches: &mut u64|
+     -> Result<()> {
+        let valid = batcher.staged;
+        if valid == 0 {
+            return Ok(());
+        }
+        let out = session.run(valid)?;
+        accum.absorb(&out, meta.kind);
+        batcher.clear_staged();
+        *batches += 1;
+        Ok(())
+    };
+
+    for (i, rec) in records.iter().enumerate() {
+        let opcode = fx.extract(rec, &mut feat_row);
+        let full = {
+            let t = meta.context;
+            let (ops_buf, feat_buf) = session.buffers();
+            let full = batcher.push(opcode, &feat_row, ops_buf, feat_buf);
+            // SimNet: stage the context-metric window alongside.
+            if meta.kind == ModelKind::SimNet {
+                let w = batcher.staged - 1;
+                // Repeat-pad like the feature window; mask current row.
+                let ctx = ctx_metrics.unwrap();
+                // (split borrow: re-borrow ctx buffer after features)
+                let _ = (&ctx, w, t);
+                full
+            } else {
+                full
+            }
+        };
+        if meta.kind == ModelKind::SimNet {
+            let w = batcher.staged - 1;
+            let t = meta.context;
+            let ctx = ctx_metrics.unwrap();
+            let ctx_buf = session.ctx_buffer();
+            for j in 0..t {
+                let src = i.saturating_sub(t - 1 - j);
+                let dst = &mut ctx_buf[(w * t + j) * 6..(w * t + j + 1) * 6];
+                if j + 1 == t {
+                    dst.fill(0.0); // mask the current instruction's metrics
+                } else {
+                    dst.copy_from_slice(&ctx[src * 6..src * 6 + 6]);
+                }
+            }
+        }
+        if full {
+            flush(session, &mut batcher, &mut accum, &mut batches)?;
+        }
+    }
+    flush(session, &mut batcher, &mut accum, &mut batches)?;
+    if let Some(ph) = &mut accum.phase {
+        ph.finish();
+    }
+
+    Ok(SimResult {
+        metrics: accum.metrics(),
+        elapsed: start.elapsed(),
+        batches,
+        phase: accum.phase.take().map(|p| p),
+    })
+}
+
+/// Parallel simulation: shard `records` across `workers` threads, each
+/// with its own PJRT session compiled from `artifact`.
+pub fn simulate_parallel(
+    artifact: &Path,
+    records: &[FuncRecord],
+    workers: usize,
+    ctx_metrics: Option<&[f32]>,
+) -> Result<SimResult> {
+    ensure!(workers >= 1, "need at least one worker");
+    if workers == 1 || records.len() < workers * 1024 {
+        let mut session = Session::load(artifact)?;
+        return simulate_records(&mut session, records, ctx_metrics, None);
+    }
+    let shard_len = records.len().div_ceil(workers);
+    let start = Instant::now();
+    let artifact: PathBuf = artifact.to_path_buf();
+    let results: Vec<Result<SimResult>> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for w in 0..workers {
+            let lo = w * shard_len;
+            let hi = ((w + 1) * shard_len).min(records.len());
+            if lo >= hi {
+                break;
+            }
+            let shard = &records[lo..hi];
+            let ctx_shard = ctx_metrics.map(|c| &c[lo * 6..hi * 6]);
+            let artifact = artifact.clone();
+            handles.push(scope.spawn(move || -> Result<SimResult> {
+                let mut session = Session::load(&artifact)
+                    .with_context(|| format!("worker {w}: load {artifact:?}"))?;
+                simulate_records(&mut session, shard, ctx_shard, None)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+
+    let mut metrics = Metrics::default();
+    let mut batches = 0;
+    for r in results {
+        let r = r?;
+        metrics.merge(&r.metrics);
+        batches += r.batches;
+    }
+    Ok(SimResult {
+        metrics,
+        elapsed: start.elapsed(),
+        batches,
+        phase: None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_batcher_stages_and_flags_full() {
+        let t = 4;
+        let f = 2;
+        let batch = 3;
+        let mut b = WindowBatcher::new(t, f, batch);
+        let mut ops = vec![0i32; batch * t];
+        let mut feats = vec![0.0f32; batch * t * f];
+        assert!(!b.push(1, &[0.1, 0.2], &mut ops, &mut feats));
+        assert!(!b.push(2, &[0.3, 0.4], &mut ops, &mut feats));
+        assert!(b.push(3, &[0.5, 0.6], &mut ops, &mut feats));
+        // Window 0 (after 1 push): warm-up repeats opcode 1 everywhere.
+        assert_eq!(&ops[0..4], &[1, 1, 1, 1]);
+        // Window 2: [1,1,2,3] — newest last.
+        assert_eq!(&ops[8..12], &[1, 1, 2, 3]);
+        // Newest row's features land at the end of window 2.
+        assert_eq!(&feats[(8 + 3) * f..(8 + 4) * f], &[0.5, 0.6]);
+    }
+
+    #[test]
+    fn window_batcher_slides_beyond_t() {
+        let t = 3;
+        let f = 1;
+        let mut b = WindowBatcher::new(t, f, 8);
+        let mut ops = vec![0i32; 8 * t];
+        let mut feats = vec![0.0f32; 8 * t];
+        for i in 0..5 {
+            b.push(i as i32 + 1, &[i as f32], &mut ops, &mut feats);
+        }
+        // Window 4 = [3,4,5].
+        assert_eq!(&ops[4 * t..5 * t], &[3, 4, 5]);
+    }
+
+    #[test]
+    fn pred_accum_totals() {
+        let mut a = PredAccum::default();
+        let out = ModelOutputs {
+            fetch: vec![1.0, 2.0],
+            exec: vec![5.0, 7.0],
+            branch: vec![0.25, 0.75],
+            access: vec![
+                0.7, 0.2, 0.05, 0.05, // mostly none
+                0.0, 0.1, 0.4, 0.5, // mostly miss
+            ],
+            icache: vec![0.0, 1.0],
+            tlb: vec![0.5, 0.5],
+        };
+        a.absorb(&out, ModelKind::Tao);
+        assert_eq!(a.instructions, 2);
+        assert!((a.total_cycles() - (3.0 + 7.0)).abs() < 1e-9);
+        assert!((a.mispredicts - 1.0).abs() < 1e-9);
+        assert!((a.l1d_misses - (0.1 + 0.9)).abs() < 1e-6);
+        let m = a.metrics();
+        assert!((m.branch_mpki() - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pred_accum_merge() {
+        let mut a = PredAccum {
+            instructions: 10,
+            fetch_cycles: 20.0,
+            last_exec: 3.0,
+            ..Default::default()
+        };
+        let b = PredAccum {
+            instructions: 5,
+            fetch_cycles: 10.0,
+            last_exec: 9.0,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.instructions, 15);
+        assert!((a.total_cycles() - 39.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,8 @@
+//! Simulation coordinator — Layer 3's request path (DESIGN.md S10).
+//!
+//! `engine` holds the parallel sharded inference pipeline (feature
+//! extraction → window batching → PJRT execution → metric aggregation);
+//! `cli` exposes it as `tao simulate`.
+
+pub mod cli;
+pub mod engine;

@@ -1,0 +1,269 @@
+//! Training-data generation: benchmark → traces → §4.1 adjustment →
+//! §4.2 features → `.npy` arrays for the Python (build-time) trainer.
+//!
+//! This is the bridge between the Rust substrate and Layer 2: it runs the
+//! detailed and functional simulators, aligns and adjusts the traces, runs
+//! the feature extractor, and emits per-(µarch, benchmark) arrays:
+//!
+//! * `opcodes.npy` — `i32[M]` opcode ids;
+//! * `features.npy` — `f32[M, F]` per-instruction feature vectors;
+//! * `labels.npy` — `f32[M, 6]`: fetch latency, exec latency, branch
+//!   mispredict, access level, icache miss, TLB miss.
+//!
+//! plus a `meta.json` with the feature configuration and opcode
+//! vocabulary that the AOT artifact must echo back (validated by the
+//! runtime loader).
+
+use crate::dataset::{self, AdjustedTrace};
+use crate::detailed::DetailedSim;
+use crate::features::{FeatureConfig, FeatureExtractor};
+use crate::functional::FunctionalSim;
+use crate::npy;
+use crate::uarch::UarchConfig;
+use crate::workloads::Workload;
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Number of label columns in `labels.npy`.
+pub const NUM_LABELS: usize = 6;
+
+/// Options for a datagen run.
+#[derive(Debug, Clone)]
+pub struct DatagenOptions {
+    /// Instructions per (µarch, benchmark) pair.
+    pub instructions: u64,
+    /// Feature-engineering hyperparameters.
+    pub features: FeatureConfig,
+    /// Workload seed.
+    pub seed: u64,
+}
+
+impl Default for DatagenOptions {
+    fn default() -> Self {
+        DatagenOptions {
+            instructions: 20_000,
+            features: FeatureConfig::default(),
+            seed: 42,
+        }
+    }
+}
+
+/// The in-memory form of one generated dataset.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    /// Opcode ids, one per instruction.
+    pub opcodes: Vec<i32>,
+    /// Flattened `[M, F]` feature matrix.
+    pub features: Vec<f32>,
+    /// Feature dimension `F`.
+    pub feature_dim: usize,
+    /// Flattened `[M, NUM_LABELS]` label matrix.
+    pub labels: Vec<f32>,
+    /// Ground-truth total cycles of the run.
+    pub total_cycles: u64,
+}
+
+impl Dataset {
+    /// Number of instructions `M`.
+    pub fn len(&self) -> usize {
+        self.opcodes.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.opcodes.is_empty()
+    }
+}
+
+/// Generate the aligned, adjusted trace for one (benchmark, µarch) pair.
+pub fn adjusted_trace(
+    workload: &Workload,
+    uarch: &UarchConfig,
+    instructions: u64,
+    seed: u64,
+) -> Result<AdjustedTrace> {
+    let program = workload.build(seed);
+    let functional = FunctionalSim::new(&program).run(instructions);
+    let (detailed, _) = DetailedSim::new(&program, uarch).run(instructions);
+    let adjusted = dataset::adjust(&detailed);
+    dataset::align(&functional, &adjusted)
+}
+
+/// Build the feature/label arrays from an adjusted trace.
+pub fn featurize(adjusted: &AdjustedTrace, config: FeatureConfig) -> Dataset {
+    let f = config.feature_dim();
+    let m = adjusted.samples.len();
+    let mut ds = Dataset {
+        opcodes: Vec::with_capacity(m),
+        features: vec![0.0; m * f],
+        feature_dim: f,
+        labels: Vec::with_capacity(m * NUM_LABELS),
+        total_cycles: adjusted.total_cycles,
+    };
+    let mut fx = FeatureExtractor::new(config);
+    for (i, s) in adjusted.samples.iter().enumerate() {
+        let id = fx.extract(&s.func, &mut ds.features[i * f..(i + 1) * f]);
+        ds.opcodes.push(id);
+        let l = &s.labels;
+        ds.labels.extend_from_slice(&[
+            l.fetch_latency as f32,
+            l.exec_latency as f32,
+            l.branch_mispred as u8 as f32,
+            l.access_level.index() as f32,
+            l.icache_miss as u8 as f32,
+            l.tlb_miss as u8 as f32,
+        ]);
+    }
+    ds
+}
+
+/// Generate and featurize in one step.
+pub fn generate(
+    workload: &Workload,
+    uarch: &UarchConfig,
+    opts: &DatagenOptions,
+) -> Result<Dataset> {
+    let adjusted = adjusted_trace(workload, uarch, opts.instructions, opts.seed)?;
+    Ok(featurize(&adjusted, opts.features))
+}
+
+/// Write one dataset under `dir/<uarch>/<bench>/`.
+pub fn write_dataset(dir: &Path, uarch: &str, bench: &str, ds: &Dataset) -> Result<()> {
+    let d = dir.join(uarch).join(bench);
+    std::fs::create_dir_all(&d).with_context(|| format!("mkdir {d:?}"))?;
+    npy::write_i32_1d(&d.join("opcodes.npy"), &ds.opcodes)?;
+    npy::write_f32_2d(&d.join("features.npy"), &ds.features, ds.len(), ds.feature_dim)?;
+    npy::write_f32_2d(&d.join("labels.npy"), &ds.labels, ds.len(), NUM_LABELS)?;
+    std::fs::write(
+        d.join("total_cycles.txt"),
+        format!("{}\n", ds.total_cycles),
+    )?;
+    Ok(())
+}
+
+/// Write the run-level metadata JSON (feature config + opcode vocab).
+pub fn write_meta(dir: &Path, opts: &DatagenOptions, uarchs: &[&UarchConfig]) -> Result<()> {
+    let mut f = std::fs::File::create(dir.join("meta.json"))?;
+    let vocab: Vec<String> = crate::features::opcode_vocabulary()
+        .iter()
+        .map(|(name, idx)| format!("    \"{name}\": {idx}"))
+        .collect();
+    let uarch_list: Vec<String> = uarchs
+        .iter()
+        .map(|u| format!("    \"{}\": \"{}\"", u.name, u.summary()))
+        .collect();
+    writeln!(
+        f,
+        "{{\n  \"instructions\": {},\n  \"seed\": {},\n  \"feature_config\": {{\"nb\": {}, \"nq\": {}, \"nm\": {}}},\n  \"feature_dim\": {},\n  \"num_labels\": {},\n  \"num_regs\": {},\n  \"opcode_vocab\": {{\n{}\n  }},\n  \"uarchs\": {{\n{}\n  }}\n}}",
+        opts.instructions,
+        opts.seed,
+        opts.features.nb,
+        opts.features.nq,
+        opts.features.nm,
+        opts.features.feature_dim(),
+        NUM_LABELS,
+        crate::isa::NUM_REGS,
+        vocab.join(",\n"),
+        uarch_list.join(",\n"),
+    )?;
+    Ok(())
+}
+
+/// Full datagen run: all benchmarks in `workloads` × all `uarchs`.
+pub fn run(
+    dir: &Path,
+    workloads: &[Workload],
+    uarchs: &[UarchConfig],
+    opts: &DatagenOptions,
+) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let refs: Vec<&UarchConfig> = uarchs.iter().collect();
+    write_meta(dir, opts, &refs)?;
+    for uarch in uarchs {
+        for w in workloads {
+            let ds = generate(w, uarch, opts)?;
+            write_dataset(dir, &uarch.name, w.name, &ds)?;
+            eprintln!(
+                "datagen: {}/{} — {} insts, {} cycles (cpi {:.3})",
+                uarch.name,
+                w.name,
+                ds.len(),
+                ds.total_cycles,
+                ds.total_cycles as f64 / ds.len().max(1) as f64
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    fn opts() -> DatagenOptions {
+        DatagenOptions {
+            instructions: 2_000,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn generate_shapes_consistent() {
+        let w = workloads::by_name("dee").unwrap();
+        let ds = generate(&w, &UarchConfig::uarch_a(), &opts()).unwrap();
+        assert_eq!(ds.len(), 2_000);
+        assert_eq!(ds.features.len(), ds.len() * ds.feature_dim);
+        assert_eq!(ds.labels.len(), ds.len() * NUM_LABELS);
+        assert!(ds.total_cycles > 0);
+    }
+
+    #[test]
+    fn labels_reconstruct_total_cycles() {
+        let w = workloads::by_name("lee").unwrap();
+        let ds = generate(&w, &UarchConfig::uarch_b(), &opts()).unwrap();
+        let total = crate::dataset::reconstruct_cycles(
+            ds.labels.chunks(NUM_LABELS).map(|l| l[0] as f64),
+            ds.labels.chunks(NUM_LABELS).map(|l| l[1] as f64),
+        );
+        assert_eq!(total, ds.total_cycles);
+    }
+
+    #[test]
+    fn write_and_read_back() {
+        let dir = std::env::temp_dir().join(format!("tao-dg-{}", std::process::id()));
+        let w = workloads::by_name("nab").unwrap();
+        let ds = generate(&w, &UarchConfig::uarch_a(), &opts()).unwrap();
+        write_dataset(&dir, "uarch_a", "nab", &ds).unwrap();
+        let feats = npy::read(&dir.join("uarch_a/nab/features.npy")).unwrap();
+        assert_eq!(feats.shape, vec![ds.len(), ds.feature_dim]);
+        let ops = npy::read(&dir.join("uarch_a/nab/opcodes.npy")).unwrap();
+        assert_eq!(ops.as_i32().unwrap(), ds.opcodes);
+    }
+
+    #[test]
+    fn meta_json_is_parseable_shape() {
+        let dir = std::env::temp_dir().join(format!("tao-dgm-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let a = UarchConfig::uarch_a();
+        write_meta(&dir, &opts(), &[&a]).unwrap();
+        let s = std::fs::read_to_string(dir.join("meta.json")).unwrap();
+        assert!(s.contains("\"feature_dim\""));
+        assert!(s.contains("\"opcode_vocab\""));
+        // Must at least be balanced braces.
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+    }
+
+    #[test]
+    fn different_uarchs_give_different_labels() {
+        let w = workloads::by_name("mcf").unwrap();
+        let a = generate(&w, &UarchConfig::uarch_a(), &opts()).unwrap();
+        let c = generate(&w, &UarchConfig::uarch_c(), &opts()).unwrap();
+        // Same inputs (µarch-agnostic)...
+        assert_eq!(a.opcodes, c.opcodes);
+        assert_eq!(a.features, c.features);
+        // ...different labels (µarch-specific).
+        assert_ne!(a.labels, c.labels);
+    }
+}

@@ -1,0 +1,358 @@
+//! Training-dataset construction — the paper's §4.1 workflow.
+//!
+//! Detailed traces contain two kinds of records a functional trace lacks:
+//! squashed wrong-path instructions and pipeline-stall `nop`s. The
+//! adjustment workflow *removes* both and *re-attributes* their timing to
+//! the next retired instruction through the fetch-clock delta, exactly as
+//! the paper's Figure 2 walks through: after adjustment the trace has the
+//! functional trace's instruction sequence, each instruction labelled with
+//! microarchitecture-specific performance metrics, and the **total cycle
+//! count is preserved** (the Figure 2 invariant, enforced by tests and a
+//! randomized property test).
+
+use crate::trace::{AccessLevel, DetailedTrace, FuncRecord, FunctionalTrace};
+use anyhow::{ensure, Result};
+
+/// Per-instruction performance labels (the model's prediction targets).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Labels {
+    /// Cycles between this instruction's fetch and the previous retired
+    /// instruction's fetch. After adjustment this *includes* squashed
+    /// wrong-path time and stall bubbles (Figure 2's "10 → 18" example).
+    pub fetch_latency: u32,
+    /// Cycles from fetch to retire.
+    pub exec_latency: u32,
+    /// Conditional branch mispredicted?
+    pub branch_mispred: bool,
+    /// Data access service level.
+    pub access_level: AccessLevel,
+    /// L1I miss on fetch?
+    pub icache_miss: bool,
+    /// Data TLB miss?
+    pub tlb_miss: bool,
+}
+
+/// One training sample: microarchitecture-agnostic input identity plus
+/// microarchitecture-specific labels.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sample {
+    /// The functional-trace record (model input side).
+    pub func: FuncRecord,
+    /// The performance labels (model output side).
+    pub labels: Labels,
+}
+
+/// An adjusted trace: functional instruction stream + per-instruction
+/// labels, with squashed/nop records folded into latencies.
+#[derive(Debug, Clone, Default)]
+pub struct AdjustedTrace {
+    /// Benchmark name.
+    pub name: String,
+    /// Microarchitecture name.
+    pub uarch: String,
+    /// Aligned samples in program order.
+    pub samples: Vec<Sample>,
+    /// Ground-truth total cycles of the source detailed trace.
+    pub total_cycles: u64,
+}
+
+impl AdjustedTrace {
+    /// Reconstruct total cycles from the labels alone. By construction
+    /// this equals `total_cycles` (the Figure 2 "total cycles remain the
+    /// same" invariant): the retire clock of the last instruction is the
+    /// cumulative sum of fetch latencies plus its exec latency.
+    pub fn reconstructed_cycles(&self) -> u64 {
+        reconstruct_cycles(
+            self.samples.iter().map(|s| s.labels.fetch_latency as f64),
+            self.samples.iter().map(|s| s.labels.exec_latency as f64),
+        )
+    }
+}
+
+/// Total-cycle reconstruction used both for ground-truth labels and for
+/// model predictions (paper §4.2: "retire clock is computed as current
+/// clock + fetch latency + execution latency; the retire clock of the
+/// last instruction determines the total cycles").
+pub fn reconstruct_cycles(
+    fetch_latencies: impl Iterator<Item = f64>,
+    exec_latencies: impl Iterator<Item = f64>,
+) -> u64 {
+    let mut clock = 0.0f64;
+    let mut last_retire = 0.0f64;
+    for (f, e) in fetch_latencies.zip(exec_latencies) {
+        clock += f;
+        last_retire = clock + e;
+    }
+    last_retire.round().max(0.0) as u64
+}
+
+/// Run the §4.1 adjustment workflow over a detailed trace.
+///
+/// Squashed and nop records are dropped; their time shows up in the next
+/// retired instruction's `fetch_latency` because latencies are defined as
+/// fetch-clock deltas over the *retired-only* sequence.
+pub fn adjust(detailed: &DetailedTrace) -> AdjustedTrace {
+    let mut samples = Vec::with_capacity(detailed.retired_count());
+    let mut prev_fetch = 0u64;
+    for info in detailed.retired() {
+        let fetch_latency = (info.fetch_clock - prev_fetch) as u32;
+        let exec_latency = (info.retire_clock - info.fetch_clock) as u32;
+        prev_fetch = info.fetch_clock;
+        samples.push(Sample {
+            func: info.func,
+            labels: Labels {
+                fetch_latency,
+                exec_latency,
+                branch_mispred: info.branch_mispred,
+                access_level: info.access_level,
+                icache_miss: info.icache_miss,
+                tlb_miss: info.tlb_miss,
+            },
+        });
+    }
+    AdjustedTrace {
+        name: detailed.name.clone(),
+        uarch: detailed.uarch.clone(),
+        samples,
+        total_cycles: detailed.total_cycles,
+    }
+}
+
+/// Align an adjusted trace against the functional trace of the same
+/// program: every instruction must match on PC, opcode and memory
+/// address. Returns the verified training set.
+///
+/// (Our detailed model commits exactly the functional stream by
+/// construction; this check is the §4.1 alignment step and guards against
+/// regressions in either simulator.)
+pub fn align(functional: &FunctionalTrace, adjusted: &AdjustedTrace) -> Result<AdjustedTrace> {
+    let n = functional.records.len().min(adjusted.samples.len());
+    ensure!(
+        n > 0,
+        "cannot align empty traces ({} functional, {} adjusted)",
+        functional.records.len(),
+        adjusted.samples.len()
+    );
+    for i in 0..n {
+        let f = &functional.records[i];
+        let a = &adjusted.samples[i].func;
+        ensure!(
+            f.pc == a.pc && f.opcode == a.opcode && f.mem_addr == a.mem_addr,
+            "trace mismatch at instruction {i}: functional {:x}/{} vs detailed {:x}/{}",
+            f.pc,
+            f.opcode,
+            a.pc,
+            a.opcode
+        );
+    }
+    let mut out = adjusted.clone();
+    out.samples.truncate(n);
+    Ok(out)
+}
+
+/// Paper Table 1 row: instruction-count difference between detailed and
+/// functional traces of the same run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceCounts {
+    /// Total records in the detailed trace (retired + squashed + nops).
+    pub detailed: u64,
+    /// Records in the functional trace (committed only).
+    pub functional: u64,
+}
+
+impl TraceCounts {
+    /// Relative difference, in percent (Table 1 reports ~5%).
+    pub fn diff_percent(&self) -> f64 {
+        if self.functional == 0 {
+            return 0.0;
+        }
+        (self.detailed as f64 - self.functional as f64) * 100.0 / self.functional as f64
+    }
+}
+
+/// Count comparison for Table 1.
+pub fn trace_counts(detailed: &DetailedTrace, functional: &FunctionalTrace) -> TraceCounts {
+    TraceCounts {
+        detailed: detailed.records.len() as u64,
+        functional: functional.records.len() as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::detailed::DetailedSim;
+    use crate::functional::FunctionalSim;
+    use crate::uarch::UarchConfig;
+    use crate::workloads;
+
+    fn make_traces(bench: &str, n: u64) -> (FunctionalTrace, DetailedTrace) {
+        let p = workloads::by_name(bench).unwrap().build(11);
+        let func = FunctionalSim::new(&p).run(n);
+        let (det, _) = DetailedSim::new(&p, &UarchConfig::uarch_a()).run(n);
+        (func, det)
+    }
+
+    #[test]
+    fn adjustment_preserves_total_cycles() {
+        // The Figure 2 invariant, on real benchmark traces.
+        for bench in ["dee", "mcf", "nab"] {
+            let (_, det) = make_traces(bench, 5_000);
+            let adj = adjust(&det);
+            assert_eq!(
+                adj.reconstructed_cycles(),
+                det.total_cycles,
+                "{bench}: reconstruction mismatch"
+            );
+        }
+    }
+
+    #[test]
+    fn adjustment_drops_exactly_the_extra_records() {
+        let (func, det) = make_traces("lee", 5_000);
+        let adj = adjust(&det);
+        assert_eq!(adj.samples.len(), det.retired_count());
+        assert_eq!(adj.samples.len(), func.records.len());
+        assert_eq!(
+            det.records.len(),
+            det.retired_count() + det.squashed_count() + det.nop_count()
+        );
+    }
+
+    #[test]
+    fn alignment_succeeds_on_matching_traces() {
+        let (func, det) = make_traces("xal", 5_000);
+        let adj = adjust(&det);
+        let aligned = align(&func, &adj).unwrap();
+        assert_eq!(aligned.samples.len(), 5_000);
+    }
+
+    #[test]
+    fn alignment_rejects_mismatched_traces() {
+        let (mut func, det) = make_traces("dee", 1_000);
+        let adj = adjust(&det);
+        func.records[500].pc ^= 0x40;
+        assert!(align(&func, &adj).is_err());
+    }
+
+    #[test]
+    fn fetch_latency_absorbs_squash_time() {
+        // Instructions immediately after a mispredicted branch must carry
+        // a larger-than-usual fetch latency (the Figure 2 "10 → 18"
+        // re-attribution).
+        let (_, det) = make_traces("lee", 20_000);
+        let adj = adjust(&det);
+        let mut after_mispred = Vec::new();
+        let mut normal = Vec::new();
+        let mut prev_mispred = false;
+        for s in &adj.samples {
+            if prev_mispred {
+                after_mispred.push(s.labels.fetch_latency as f64);
+            } else {
+                normal.push(s.labels.fetch_latency as f64);
+            }
+            prev_mispred = s.labels.branch_mispred;
+        }
+        assert!(after_mispred.len() > 100, "too few mispredicts to test");
+        let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert!(
+            avg(&after_mispred) > avg(&normal) + 1.0,
+            "after-mispredict fetch latency {} not above normal {}",
+            avg(&after_mispred),
+            avg(&normal)
+        );
+    }
+
+    #[test]
+    fn table1_counts_show_extra_instructions() {
+        let (func, det) = make_traces("dee", 10_000);
+        let c = trace_counts(&det, &func);
+        assert!(c.detailed > c.functional);
+        let d = c.diff_percent();
+        assert!(d > 0.0 && d < 60.0, "diff% = {d}");
+    }
+
+    #[test]
+    fn reconstruct_cycles_empty_is_zero() {
+        assert_eq!(
+            reconstruct_cycles(std::iter::empty(), std::iter::empty()),
+            0
+        );
+    }
+
+    #[test]
+    fn reconstruct_cycles_simple_case() {
+        // fetch deltas 1,2,3 ; exec 5,5,7 -> clock 6, retire 13
+        let f = [1.0, 2.0, 3.0];
+        let e = [5.0, 5.0, 7.0];
+        assert_eq!(
+            reconstruct_cycles(f.iter().copied(), e.iter().copied()),
+            13
+        );
+    }
+
+    /// Randomized property: for arbitrary synthetic detailed traces with
+    /// interleaved squash/nop records, adjustment preserves total cycles
+    /// and sample count equals retired count.
+    #[test]
+    fn property_adjustment_invariants_random_traces() {
+        use crate::isa::Opcode;
+        use crate::trace::{DetailedRecord, RetiredInfo};
+        let mut rng = crate::util::Rng::new(0xDA7A);
+        for _ in 0..200 {
+            let n = 1 + rng.index(200);
+            let mut records = Vec::new();
+            let mut fetch = 0u64;
+            let mut retire = 0u64;
+            for i in 0..n {
+                // Random interleaved extras.
+                while rng.chance(0.2) {
+                    if rng.chance(0.5) {
+                        records.push(DetailedRecord::Squashed {
+                            pc: 0x400000 + i as u64 * 4,
+                            opcode: Opcode::Add,
+                            fetch_clock: fetch,
+                        });
+                    } else {
+                        records.push(DetailedRecord::NopStall { fetch_clock: fetch });
+                    }
+                    fetch += rng.gen_range(3);
+                }
+                fetch += rng.gen_range(5);
+                let exec = 1 + rng.gen_range(20);
+                retire = retire.max(fetch) + exec;
+                records.push(DetailedRecord::Retired(RetiredInfo {
+                    func: FuncRecord {
+                        pc: 0x400000 + i as u64 * 4,
+                        opcode: Opcode::Add,
+                        reg_bitmap: 0,
+                        mem_addr: 0,
+                        mem_bytes: 0,
+                        taken: false,
+                    },
+                    fetch_clock: fetch,
+                    retire_clock: fetch + exec,
+                    branch_mispred: false,
+                    access_level: AccessLevel::None,
+                    icache_miss: false,
+                    tlb_miss: false,
+                }));
+            }
+            let last_retire = records
+                .iter()
+                .filter_map(|r| r.retired())
+                .last()
+                .unwrap()
+                .retire_clock;
+            let det = DetailedTrace {
+                name: "prop".into(),
+                uarch: "x".into(),
+                records,
+                total_cycles: last_retire,
+            };
+            let adj = adjust(&det);
+            assert_eq!(adj.samples.len(), det.retired_count());
+            assert_eq!(adj.reconstructed_cycles(), det.total_cycles);
+        }
+    }
+}

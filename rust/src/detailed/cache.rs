@@ -1,0 +1,408 @@
+//! Set-associative caches and the two-level data/instruction hierarchy.
+//!
+//! Geometry comes from the Table 3 design space (`crate::uarch`); the
+//! replacement policy is true-LRU with write-allocate, matching gem5's
+//! classic cache defaults. The hierarchy reports the *service level* of
+//! every access — the label space of Tao's data-access-level prediction
+//! head — plus hit/miss statistics for the MPKI ground truth.
+
+use crate::trace::AccessLevel;
+use crate::uarch::{CacheGeometry, Timing};
+
+/// One set-associative cache with true LRU replacement.
+pub struct Cache {
+    sets: u64,
+    assoc: usize,
+    line_shift: u32,
+    /// `tags[set * assoc + way]`; `u64::MAX` = invalid.
+    tags: Vec<u64>,
+    /// LRU stamp per way (higher = more recent).
+    stamps: Vec<u64>,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl Cache {
+    /// Build from a geometry. Set count need not be a power of two
+    /// (Table 3 includes associativity 6): indexing is modulo and tags
+    /// store the full line number.
+    pub fn new(geom: CacheGeometry) -> Cache {
+        let sets = geom.sets().max(1);
+        let assoc = geom.assoc as usize;
+        Cache {
+            sets,
+            assoc,
+            line_shift: CacheGeometry::LINE_BYTES.trailing_zeros(),
+            tags: vec![u64::MAX; (sets as usize) * assoc],
+            stamps: vec![0; (sets as usize) * assoc],
+            clock: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    fn set_of(&self, addr: u64) -> usize {
+        ((addr >> self.line_shift) % self.sets) as usize
+    }
+
+    fn tag_of(&self, addr: u64) -> u64 {
+        addr >> self.line_shift
+    }
+
+    /// Access the line containing `addr`. Returns `true` on hit; on miss
+    /// the line is filled (write-allocate / fetch-on-miss), evicting LRU.
+    pub fn access(&mut self, addr: u64) -> bool {
+        self.clock += 1;
+        let set = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        let base = set * self.assoc;
+        let ways = &mut self.tags[base..base + self.assoc];
+        if let Some(w) = ways.iter().position(|&t| t == tag) {
+            self.stamps[base + w] = self.clock;
+            self.hits += 1;
+            return true;
+        }
+        // Miss: fill into LRU way.
+        let lru = (0..self.assoc)
+            .min_by_key(|&w| self.stamps[base + w])
+            .unwrap();
+        self.tags[base + lru] = tag;
+        self.stamps[base + lru] = self.clock;
+        self.misses += 1;
+        false
+    }
+
+    /// Probe without filling or updating LRU (used by tests and warm-up
+    /// checks).
+    pub fn probe(&self, addr: u64) -> bool {
+        let set = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        let base = set * self.assoc;
+        self.tags[base..base + self.assoc].iter().any(|&t| t == tag)
+    }
+
+    /// (hits, misses) so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    /// Number of sets.
+    pub fn num_sets(&self) -> u64 {
+        self.sets
+    }
+}
+
+/// Fully-associative LRU TLB over 4 KiB pages.
+pub struct Tlb {
+    entries: Vec<u64>,
+    stamps: Vec<u64>,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+}
+
+/// Page size covered by one TLB entry.
+pub const PAGE_BYTES: u64 = 4096;
+
+impl Tlb {
+    /// TLB with `n` entries.
+    pub fn new(n: usize) -> Tlb {
+        Tlb {
+            entries: vec![u64::MAX; n],
+            stamps: vec![0; n],
+            clock: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Access the page of `addr`; true on hit, fills on miss.
+    pub fn access(&mut self, addr: u64) -> bool {
+        self.clock += 1;
+        let page = addr / PAGE_BYTES;
+        if let Some(i) = self.entries.iter().position(|&p| p == page) {
+            self.stamps[i] = self.clock;
+            self.hits += 1;
+            return true;
+        }
+        let lru = (0..self.entries.len())
+            .min_by_key(|&i| self.stamps[i])
+            .unwrap();
+        self.entries[lru] = page;
+        self.stamps[lru] = self.clock;
+        self.misses += 1;
+        false
+    }
+
+    /// (hits, misses) so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+}
+
+/// Result of a data-side access through the hierarchy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DataAccess {
+    /// Which level served the access.
+    pub level: AccessLevel,
+    /// Total latency in cycles (including TLB penalty).
+    pub latency: u64,
+    /// Whether the TLB missed.
+    pub tlb_miss: bool,
+}
+
+/// The data-side hierarchy: DTLB → L1D → (shared) L2 → memory.
+pub struct DataHierarchy {
+    l1d: Cache,
+    tlb: Tlb,
+    timing: Timing,
+}
+
+/// Result of an instruction fetch through the hierarchy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FetchAccess {
+    /// L1I miss?
+    pub miss: bool,
+    /// Extra cycles beyond the pipelined fetch (0 on L1I hit).
+    pub penalty: u64,
+}
+
+/// The instruction-side hierarchy: L1I → (shared) L2 → memory.
+pub struct InstHierarchy {
+    l1i: Cache,
+    timing: Timing,
+}
+
+impl DataHierarchy {
+    /// Build from geometries + timing.
+    pub fn new(l1d: CacheGeometry, timing: Timing) -> DataHierarchy {
+        DataHierarchy {
+            l1d: Cache::new(l1d),
+            tlb: Tlb::new(timing.dtlb_entries),
+            timing,
+        }
+    }
+
+    /// Perform a data access; the shared L2 is passed in so the I-side
+    /// can contend for the same capacity.
+    pub fn access(&mut self, addr: u64, l2: &mut Cache) -> DataAccess {
+        let tlb_hit = self.tlb.access(addr);
+        let mut latency = if tlb_hit { 0 } else { self.timing.tlb_miss_lat };
+        let level;
+        if self.l1d.access(addr) {
+            level = AccessLevel::L1;
+            latency += self.timing.l1_lat;
+        } else if l2.access(addr) {
+            level = AccessLevel::L2;
+            latency += self.timing.l1_lat + self.timing.l2_lat;
+        } else {
+            level = AccessLevel::Mem;
+            latency += self.timing.l1_lat + self.timing.l2_lat + self.timing.mem_lat;
+        }
+        DataAccess {
+            level,
+            latency,
+            tlb_miss: !tlb_hit,
+        }
+    }
+
+    /// (l1d hits, l1d misses).
+    pub fn l1d_stats(&self) -> (u64, u64) {
+        self.l1d.stats()
+    }
+
+    /// (tlb hits, tlb misses).
+    pub fn tlb_stats(&self) -> (u64, u64) {
+        self.tlb.stats()
+    }
+}
+
+impl InstHierarchy {
+    /// Build from geometry + timing.
+    pub fn new(l1i: CacheGeometry, timing: Timing) -> InstHierarchy {
+        InstHierarchy {
+            l1i: Cache::new(l1i),
+            timing,
+        }
+    }
+
+    /// Fetch the line containing `pc`.
+    pub fn fetch(&mut self, pc: u64, l2: &mut Cache) -> FetchAccess {
+        if self.l1i.access(pc) {
+            FetchAccess {
+                miss: false,
+                penalty: 0,
+            }
+        } else if l2.access(pc) {
+            FetchAccess {
+                miss: true,
+                penalty: self.timing.l2_lat,
+            }
+        } else {
+            FetchAccess {
+                miss: true,
+                penalty: self.timing.l2_lat + self.timing.mem_lat,
+            }
+        }
+    }
+
+    /// (l1i hits, l1i misses).
+    pub fn l1i_stats(&self) -> (u64, u64) {
+        self.l1i.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom(size: u64, assoc: u32) -> CacheGeometry {
+        CacheGeometry {
+            size_bytes: size,
+            assoc,
+        }
+    }
+
+    #[test]
+    fn repeated_access_hits() {
+        let mut c = Cache::new(geom(16 << 10, 2));
+        assert!(!c.access(0x1000));
+        assert!(c.access(0x1000));
+        assert!(c.access(0x1008)); // same line
+        assert_eq!(c.stats(), (2, 1));
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        // 2-way: fill a set with 2 lines, touch the first, insert a third
+        // conflicting line — the *second* must be evicted.
+        let mut c = Cache::new(geom(16 << 10, 2));
+        let sets = c.num_sets();
+        let stride = sets * CacheGeometry::LINE_BYTES;
+        let a = 0u64;
+        let b = stride;
+        let d = 2 * stride;
+        c.access(a);
+        c.access(b);
+        c.access(a); // a now MRU
+        c.access(d); // evicts b
+        assert!(c.probe(a));
+        assert!(!c.probe(b));
+        assert!(c.probe(d));
+    }
+
+    #[test]
+    fn working_set_larger_than_cache_thrashes() {
+        let mut c = Cache::new(geom(1 << 10, 2)); // 1KB = 16 lines
+        // Stream 64 lines twice: second pass still misses everything.
+        for pass in 0..2 {
+            for i in 0..64u64 {
+                let hit = c.access(i * 64);
+                if pass == 1 {
+                    assert!(!hit, "line {i} unexpectedly survived");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn working_set_within_cache_all_hits_after_warmup() {
+        let mut c = Cache::new(geom(4 << 10, 4)); // 64 lines
+        for i in 0..32u64 {
+            c.access(i * 64);
+        }
+        for i in 0..32u64 {
+            assert!(c.access(i * 64), "line {i} should hit");
+        }
+    }
+
+    #[test]
+    fn higher_associativity_resolves_conflicts() {
+        // 4 lines mapping to the same set thrash a 2-way but fit an 8-way.
+        let g2 = geom(16 << 10, 2);
+        let g8 = geom(16 << 10, 8);
+        let mut c2 = Cache::new(g2);
+        let mut c8 = Cache::new(g8);
+        let stride2 = c2.num_sets() * CacheGeometry::LINE_BYTES;
+        let stride8 = c8.num_sets() * CacheGeometry::LINE_BYTES;
+        for _ in 0..4 {
+            for i in 0..4u64 {
+                c2.access(i * stride2);
+                c8.access(i * stride8);
+            }
+        }
+        let (h2, _) = c2.stats();
+        let (h8, _) = c8.stats();
+        assert!(h8 > h2, "8-way hits {h8} <= 2-way hits {h2}");
+    }
+
+    #[test]
+    fn tlb_hit_and_miss() {
+        let mut t = Tlb::new(2);
+        assert!(!t.access(0x0000));
+        assert!(t.access(0x0FFF)); // same 4K page
+        assert!(!t.access(0x1000));
+        assert!(!t.access(0x2000)); // evicts page 0 (LRU)
+        assert!(!t.access(0x0000));
+        assert_eq!(t.stats().1, 4);
+    }
+
+    #[test]
+    fn data_hierarchy_levels_and_latency() {
+        let timing = Timing::default();
+        let mut l2 = Cache::new(geom(256 << 10, 2));
+        let mut dh = DataHierarchy::new(geom(16 << 10, 2), timing);
+        // Cold: memory access + TLB miss.
+        let a = dh.access(0x10000000, &mut l2);
+        assert_eq!(a.level, AccessLevel::Mem);
+        assert!(a.tlb_miss);
+        assert_eq!(
+            a.latency,
+            timing.tlb_miss_lat + timing.l1_lat + timing.l2_lat + timing.mem_lat
+        );
+        // Warm: L1 hit, TLB hit.
+        let b = dh.access(0x10000000, &mut l2);
+        assert_eq!(b.level, AccessLevel::L1);
+        assert_eq!(b.latency, timing.l1_lat);
+        assert!(!b.tlb_miss);
+    }
+
+    #[test]
+    fn l2_serves_l1_conflict_victims() {
+        let timing = Timing::default();
+        let mut l2 = Cache::new(geom(256 << 10, 8));
+        let mut dh = DataHierarchy::new(geom(1 << 10, 2), timing); // tiny L1
+        // Stream 64 lines: all cold misses to memory.
+        for i in 0..64u64 {
+            dh.access(0x10000000 + i * 64, &mut l2);
+        }
+        // Second pass: L1 thrashes but L2 holds everything.
+        let mut l2_hits = 0;
+        for i in 0..64u64 {
+            let a = dh.access(0x10000000 + i * 64, &mut l2);
+            if a.level == AccessLevel::L2 {
+                l2_hits += 1;
+            }
+        }
+        assert!(l2_hits > 48, "only {l2_hits} L2 hits");
+    }
+
+    #[test]
+    fn inst_hierarchy_penalties() {
+        let timing = Timing::default();
+        let mut l2 = Cache::new(geom(256 << 10, 2));
+        let mut ih = InstHierarchy::new(geom(8 << 10, 2), timing);
+        let cold = ih.fetch(0x400000, &mut l2);
+        assert!(cold.miss);
+        assert_eq!(cold.penalty, timing.l2_lat + timing.mem_lat);
+        let warm = ih.fetch(0x400000, &mut l2);
+        assert!(!warm.miss);
+        assert_eq!(warm.penalty, 0);
+        // L2 now holds the line: a conflicting L1I re-fetch pays L2 only.
+        let mut ih2 = InstHierarchy::new(geom(8 << 10, 2), timing);
+        let via_l2 = ih2.fetch(0x400000, &mut l2);
+        assert!(via_l2.miss);
+        assert_eq!(via_l2.penalty, timing.l2_lat);
+    }
+}

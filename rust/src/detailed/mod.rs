@@ -1,0 +1,25 @@
+//! Detailed out-of-order simulation — the `O3CPU` equivalent.
+//!
+//! An instruction-driven cycle-accounting model of a single-core
+//! superscalar out-of-order processor, parameterized by the full Table 3
+//! design space (`crate::uarch::UarchConfig`): fetch width, ROB size,
+//! branch predictor algorithm, and L1I/L1D/L2 geometry, plus a data TLB.
+//!
+//! The model reuses the functional `Machine` for correct-path semantics
+//! (so detailed and functional traces commit the same stream, §4.1's
+//! alignment invariant) and wraps timing around it:
+//!
+//! * **Fetch** — `fetch_width` per cycle, stalling on L1I misses and
+//!   redirecting on branch mispredictions (wrong-path instructions are
+//!   fetched and later emitted as `Squashed` records).
+//! * **Dispatch/ROB** — fetch blocks when the ROB is full; each blocked
+//!   event emits a `NopStall` bubble record (§4.1 "stall instructions").
+//! * **Issue/execute** — register scoreboard (full forwarding); per-class
+//!   execution latencies; loads/stores walk DTLB → L1D → L2 → memory.
+//! * **Commit** — in-order, `fetch_width` per cycle.
+
+pub mod cache;
+pub mod pipeline;
+pub mod predictor;
+
+pub use pipeline::{DetailedSim, SimStats};

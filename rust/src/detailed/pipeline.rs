@@ -1,0 +1,593 @@
+//! The out-of-order pipeline timing model.
+
+use super::cache::{Cache, DataHierarchy, InstHierarchy};
+use super::predictor::{self, BranchPredictor};
+use crate::functional::Machine;
+use crate::isa::{Opcode, OpcodeClass, Program};
+use crate::trace::{AccessLevel, DetailedRecord, DetailedTrace, RetiredInfo};
+use crate::uarch::{CacheGeometry, UarchConfig};
+use std::collections::VecDeque;
+
+/// Execution latency (cycles in the functional unit) per opcode class.
+fn exec_latency(class: OpcodeClass) -> u64 {
+    match class {
+        OpcodeClass::IntAlu => 1,
+        OpcodeClass::IntMul => 3,
+        OpcodeClass::IntDiv => 12,
+        OpcodeClass::FpAlu => 2,
+        OpcodeClass::FpMul => 4,
+        OpcodeClass::FpDiv => 12,
+        OpcodeClass::Load => 0,  // memory latency added separately
+        OpcodeClass::Store => 1, // retires via store buffer
+        OpcodeClass::Branch => 1,
+        OpcodeClass::Nop => 1,
+    }
+}
+
+/// Run-level statistics the detailed simulator reports directly — the
+/// "gem5 ground truth" column of every evaluation figure.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SimStats {
+    /// Committed instructions.
+    pub instructions: u64,
+    /// Total cycles (retire clock of the last instruction).
+    pub cycles: u64,
+    /// Conditional branches committed.
+    pub cond_branches: u64,
+    /// Mispredicted conditional branches.
+    pub mispredicts: u64,
+    /// Committed loads+stores.
+    pub mem_ops: u64,
+    /// L1D misses (served by L2 or memory).
+    pub l1d_misses: u64,
+    /// L2 misses on the data side (served by memory).
+    pub l2d_misses: u64,
+    /// L1I misses.
+    pub l1i_misses: u64,
+    /// Data TLB misses.
+    pub dtlb_misses: u64,
+    /// Squashed wrong-path instructions fetched.
+    pub squashed: u64,
+    /// Pipeline-stall nop bubbles recorded.
+    pub nops: u64,
+}
+
+impl SimStats {
+    /// Cycles per instruction.
+    pub fn cpi(&self) -> f64 {
+        if self.instructions == 0 {
+            0.0
+        } else {
+            self.cycles as f64 / self.instructions as f64
+        }
+    }
+
+    /// Branch mispredictions per kilo-instruction.
+    pub fn branch_mpki(&self) -> f64 {
+        if self.instructions == 0 {
+            0.0
+        } else {
+            self.mispredicts as f64 * 1000.0 / self.instructions as f64
+        }
+    }
+
+    /// L1D misses per kilo-instruction.
+    pub fn l1d_mpki(&self) -> f64 {
+        if self.instructions == 0 {
+            0.0
+        } else {
+            self.l1d_misses as f64 * 1000.0 / self.instructions as f64
+        }
+    }
+
+    /// L2 (data) misses per kilo-instruction.
+    pub fn l2d_mpki(&self) -> f64 {
+        if self.instructions == 0 {
+            0.0
+        } else {
+            self.l2d_misses as f64 * 1000.0 / self.instructions as f64
+        }
+    }
+
+    /// Conditional-branch misprediction rate in [0,1].
+    pub fn mispredict_rate(&self) -> f64 {
+        if self.cond_branches == 0 {
+            0.0
+        } else {
+            self.mispredicts as f64 / self.cond_branches as f64
+        }
+    }
+}
+
+/// The detailed out-of-order simulator.
+pub struct DetailedSim {
+    config: UarchConfig,
+    machine: Machine,
+    predictor: Box<dyn BranchPredictor + Send>,
+    iside: InstHierarchy,
+    dside: DataHierarchy,
+    l2: Cache,
+    /// Register scoreboard: cycle at which each architectural register's
+    /// value is available (full forwarding).
+    reg_ready: [u64; crate::isa::NUM_REGS],
+    /// Retire clocks of in-flight (dispatched, not yet retired relative
+    /// to fetch time) instructions — models ROB occupancy.
+    rob: VecDeque<u64>,
+    fetch_cycle: u64,
+    fetched_in_cycle: u32,
+    last_fetch_line: u64,
+    last_retire_cycle: u64,
+    retired_in_cycle: u32,
+    stats: SimStats,
+    /// Whether to emit wrong-path/nop records (dataset construction needs
+    /// them; pure-stats runs can skip the allocation traffic).
+    emit_records: bool,
+}
+
+impl DetailedSim {
+    /// Build a simulator for `program` on design point `config`.
+    pub fn new(program: &Program, config: &UarchConfig) -> DetailedSim {
+        DetailedSim {
+            config: config.clone(),
+            machine: Machine::new(program),
+            predictor: predictor::build(config.predictor),
+            iside: InstHierarchy::new(config.l1i, config.timing),
+            dside: DataHierarchy::new(config.l1d, config.timing),
+            l2: Cache::new(config.l2),
+            reg_ready: [0; crate::isa::NUM_REGS],
+            rob: VecDeque::new(),
+            fetch_cycle: 1,
+            fetched_in_cycle: 0,
+            last_fetch_line: u64::MAX,
+            last_retire_cycle: 0,
+            retired_in_cycle: 0,
+            stats: SimStats::default(),
+            emit_records: true,
+        }
+    }
+
+    /// Disable trace-record emission (statistics only, used by DSE sweeps
+    /// where only `SimStats` is consumed).
+    pub fn stats_only(mut self) -> Self {
+        self.emit_records = false;
+        self
+    }
+
+    /// Run up to `max_insts` committed instructions; returns the detailed
+    /// trace (empty `records` if `stats_only`) and the statistics.
+    pub fn run(mut self, max_insts: u64) -> (DetailedTrace, SimStats) {
+        let mut records: Vec<DetailedRecord> = Vec::new();
+        if self.emit_records {
+            records.reserve(max_insts.min(1 << 22) as usize + 1024);
+        }
+        let line_mask = !(CacheGeometry::LINE_BYTES - 1);
+
+        while self.stats.instructions < max_insts {
+            let Some(exec) = self.machine.step() else {
+                break;
+            };
+            let rec = exec.record;
+            let inst_index = exec.index;
+            let opcode = rec.opcode;
+
+            // ---- ROB capacity: stall fetch until the oldest retires ----
+            while self.rob.len() >= self.config.rob_size as usize {
+                let oldest = *self.rob.front().unwrap();
+                self.rob.pop_front();
+                if oldest > self.fetch_cycle {
+                    // Pipeline bubble (§4.1 "stall instructions"): record
+                    // one nop per *significant* stall event (short
+                    // single-cycle hiccups are absorbed into fetch-clock
+                    // deltas, matching gem5's sparse nop insertion),
+                    // advance fetch to the blocking retire cycle.
+                    if oldest - self.fetch_cycle >= 4 {
+                        if self.emit_records {
+                            records.push(DetailedRecord::NopStall {
+                                fetch_clock: self.fetch_cycle,
+                            });
+                        }
+                        self.stats.nops += 1;
+                    }
+                    self.fetch_cycle = oldest;
+                    self.fetched_in_cycle = 0;
+                }
+            }
+
+            // ---- ICache ----
+            let line = rec.pc & line_mask;
+            let mut icache_miss = false;
+            if line != self.last_fetch_line {
+                let f = self.iside.fetch(rec.pc, &mut self.l2);
+                icache_miss = f.miss;
+                if f.miss {
+                    self.stats.l1i_misses += 1;
+                    self.fetch_cycle += f.penalty;
+                    self.fetched_in_cycle = 0;
+                }
+                self.last_fetch_line = line;
+            }
+
+            // ---- Fetch slot ----
+            let fetch_clock = self.fetch_cycle;
+            self.fetched_in_cycle += 1;
+            if self.fetched_in_cycle >= self.config.fetch_width {
+                self.fetch_cycle += 1;
+                self.fetched_in_cycle = 0;
+            }
+
+            // ---- Issue: wait for operands ----
+            let mut issue = fetch_clock + self.config.timing.decode_lat;
+            let inst = self.machine.program().insts[inst_index];
+            for src in inst.sources() {
+                issue = issue.max(self.reg_ready[src.index()]);
+            }
+
+            // ---- Execute ----
+            let mut latency = exec_latency(opcode.class());
+            let mut access_level = AccessLevel::None;
+            let mut tlb_miss = false;
+            if rec.is_mem() {
+                self.stats.mem_ops += 1;
+                let a = self.dside.access(rec.mem_addr, &mut self.l2);
+                access_level = a.level;
+                tlb_miss = a.tlb_miss;
+                if a.tlb_miss {
+                    self.stats.dtlb_misses += 1;
+                }
+                match a.level {
+                    AccessLevel::L2 => self.stats.l1d_misses += 1,
+                    AccessLevel::Mem => {
+                        self.stats.l1d_misses += 1;
+                        self.stats.l2d_misses += 1;
+                    }
+                    _ => {}
+                }
+                if opcode.is_load() {
+                    latency += a.latency;
+                } else {
+                    // Stores retire via the store buffer; the hierarchy
+                    // state is updated but commit does not wait for it.
+                    latency += 1;
+                }
+            }
+            let complete = issue + latency;
+            if let Some(d) = inst.dst {
+                self.reg_ready[d.index()] = complete;
+            }
+
+            // ---- Branch prediction ----
+            let mut mispred = false;
+            if opcode.is_cond_branch() {
+                self.stats.cond_branches += 1;
+                let pred = self.predictor.predict(rec.pc);
+                mispred = pred != rec.taken;
+                self.predictor.update(rec.pc, rec.taken);
+            }
+
+            // ---- Commit (in order, fetch_width per cycle) ----
+            let mut retire = complete.max(self.last_retire_cycle);
+            if retire == self.last_retire_cycle {
+                self.retired_in_cycle += 1;
+                if self.retired_in_cycle >= self.config.fetch_width {
+                    retire += 1;
+                    self.retired_in_cycle = 0;
+                }
+            } else {
+                self.retired_in_cycle = 1;
+            }
+            self.last_retire_cycle = retire;
+            self.rob.push_back(retire);
+
+            self.stats.instructions += 1;
+            if mispred {
+                self.stats.mispredicts += 1;
+            }
+            self.stats.cycles = retire;
+
+            if self.emit_records {
+                records.push(DetailedRecord::Retired(RetiredInfo {
+                    func: rec,
+                    fetch_clock,
+                    retire_clock: retire,
+                    branch_mispred: mispred,
+                    access_level,
+                    icache_miss,
+                    tlb_miss,
+                }));
+            }
+
+            // ---- Misprediction: wrong path + redirect ----
+            if mispred {
+                let resolve = complete;
+                // Wrong-path fetch: from the *not* taken direction.
+                let wrong_start = if rec.taken {
+                    inst_index + 1 // predicted not-taken, fell through
+                } else {
+                    inst.target.unwrap_or(inst_index + 1)
+                };
+                // Wrong-path fetch stops when the front-end queue fills,
+                // long before a slow (e.g. load-dependent) branch
+                // resolves: cap at a fetch-queue's worth of instructions,
+                // not the full resolve window.
+                let budget_cycles = resolve
+                    .saturating_sub(fetch_clock)
+                    .max(1)
+                    .min(2 * self.config.timing.mispredict_penalty);
+                let max_wrong = (budget_cycles * self.config.fetch_width as u64)
+                    .min(self.config.rob_size as u64)
+                    .min(16);
+                let program = self.machine.program();
+                let mut wp_cycle = fetch_clock + 1;
+                let mut wp_in_cycle = 0u32;
+                let mut idx = wrong_start;
+                for _ in 0..max_wrong {
+                    if idx >= program.insts.len() {
+                        break;
+                    }
+                    let wp_inst = &program.insts[idx];
+                    if self.emit_records {
+                        records.push(DetailedRecord::Squashed {
+                            pc: Program::pc_of(idx),
+                            opcode: wp_inst.opcode,
+                            fetch_clock: wp_cycle,
+                        });
+                    }
+                    self.stats.squashed += 1;
+                    wp_in_cycle += 1;
+                    if wp_in_cycle >= self.config.fetch_width {
+                        wp_cycle += 1;
+                        wp_in_cycle = 0;
+                    }
+                    // Wrong-path control flow: follow unconditional
+                    // branches, assume conditionals fall through.
+                    idx = match wp_inst.opcode {
+                        Opcode::B | Opcode::Bl => wp_inst.target.unwrap_or(idx + 1),
+                        _ => idx + 1,
+                    };
+                }
+                // Redirect: fetch restarts after resolution + penalty.
+                self.fetch_cycle = resolve + self.config.timing.mispredict_penalty;
+                self.fetched_in_cycle = 0;
+                self.last_fetch_line = u64::MAX; // refetch the line
+            }
+        }
+
+        let trace = DetailedTrace {
+            name: self.machine.program_name().to_string(),
+            uarch: self.config.name.clone(),
+            records,
+            total_cycles: self.stats.cycles,
+        };
+        (trace, self.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Condition, Instruction, Opcode, Program, Reg};
+    use crate::uarch::UarchConfig;
+
+    /// Tight countdown loop with a data array walk.
+    fn loop_program(iters: i64, stride: i64, footprint: u64) -> Program {
+        Program {
+            name: "loop".into(),
+            insts: vec![
+                // x1 = iters; x2 = DATA_BASE; x3 = 0 (accumulator)
+                Instruction::new(Opcode::Movi).dst(Reg::x(1)).imm(iters),
+                Instruction::new(Opcode::Movi)
+                    .dst(Reg::x(2))
+                    .imm(crate::isa::inst::DATA_BASE as i64),
+                // loop: x4 = [x2]; x3 += x4; x2 += stride; x1 -= 1; cbnz
+                Instruction::new(Opcode::Ldr).dst(Reg::x(4)).src1(Reg::x(2)),
+                Instruction::new(Opcode::Add)
+                    .dst(Reg::x(3))
+                    .src1(Reg::x(3))
+                    .src2(Reg::x(4)),
+                Instruction::new(Opcode::Add)
+                    .dst(Reg::x(2))
+                    .src1(Reg::x(2))
+                    .imm(stride),
+                Instruction::new(Opcode::Subs)
+                    .dst(Reg::x(1))
+                    .src1(Reg::x(1))
+                    .imm(1),
+                Instruction::new(Opcode::Cbnz).src1(Reg::x(1)).target(2),
+            ],
+            data_size: footprint,
+            init_words: vec![],
+            init_regs: vec![],
+        }
+    }
+
+    fn run(p: &Program, cfg: &UarchConfig, n: u64) -> (DetailedTrace, SimStats) {
+        DetailedSim::new(p, cfg).run(n)
+    }
+
+    #[test]
+    fn cpi_at_least_inverse_width() {
+        let p = loop_program(1000, 8, 1 << 16);
+        let cfg = UarchConfig::uarch_c();
+        let (_, stats) = run(&p, &cfg, 5000);
+        assert!(stats.instructions > 4000);
+        assert!(
+            stats.cpi() >= 1.0 / cfg.fetch_width as f64,
+            "cpi={} below ideal",
+            stats.cpi()
+        );
+    }
+
+    #[test]
+    fn retire_clocks_monotone_and_total_matches() {
+        let p = loop_program(200, 64, 1 << 16);
+        let (trace, stats) = run(&p, &UarchConfig::uarch_a(), 1000);
+        let mut prev = 0;
+        for r in trace.retired() {
+            assert!(r.retire_clock >= prev, "retire clock went backwards");
+            assert!(r.fetch_clock <= r.retire_clock);
+            prev = r.retire_clock;
+        }
+        assert_eq!(stats.cycles, prev);
+        assert_eq!(trace.total_cycles, prev);
+    }
+
+    #[test]
+    fn fetch_clocks_monotone_across_all_records() {
+        let p = loop_program(300, 4096, 1 << 22);
+        let (trace, _) = run(&p, &UarchConfig::uarch_a(), 2000);
+        let mut prev = 0;
+        for r in &trace.records {
+            assert!(
+                r.fetch_clock() >= prev,
+                "fetch clock regressed: {} < {prev}",
+                r.fetch_clock()
+            );
+            prev = r.fetch_clock();
+        }
+    }
+
+    #[test]
+    fn streaming_large_footprint_misses_more_than_small() {
+        let small = loop_program(5000, 8, 1 << 14); // revisits few lines
+        let large = loop_program(5000, 64, 8 << 20); // new line every iter
+        let cfg = UarchConfig::uarch_a();
+        let (_, s_small) = run(&small, &cfg, 20_000);
+        let (_, s_large) = run(&large, &cfg, 20_000);
+        assert!(
+            s_large.l1d_mpki() > 5.0 * s_small.l1d_mpki().max(0.1),
+            "large {} vs small {}",
+            s_large.l1d_mpki(),
+            s_small.l1d_mpki()
+        );
+        assert!(s_large.cpi() > s_small.cpi());
+    }
+
+    #[test]
+    fn bigger_caches_reduce_misses() {
+        let p = loop_program(20_000, 64, 512 << 10); // 512KB working set
+        let (_, sa) = run(&p, &UarchConfig::uarch_a(), 50_000); // 256KB L2
+        let (_, sc) = run(&p, &UarchConfig::uarch_c(), 50_000); // 4MB L2
+        assert!(
+            sc.l2d_mpki() < sa.l2d_mpki(),
+            "C {} !< A {}",
+            sc.l2d_mpki(),
+            sa.l2d_mpki()
+        );
+        assert!(sc.cpi() < sa.cpi());
+    }
+
+    /// Program with a hard-to-predict data-dependent branch.
+    fn branchy_program() -> Program {
+        Program {
+            name: "branchy".into(),
+            insts: vec![
+                // x1 = counter; x2 = DATA_BASE; x5 = lcg state
+                Instruction::new(Opcode::Movi).dst(Reg::x(1)).imm(100_000),
+                Instruction::new(Opcode::Movi).dst(Reg::x(5)).imm(12345),
+                // loop: lcg: x5 = x5*6364136223846793005 + 1442695040888963407
+                Instruction::new(Opcode::Movi).dst(Reg::x(6)).imm(6364136223846793005),
+                Instruction::new(Opcode::Mul)
+                    .dst(Reg::x(5))
+                    .src1(Reg::x(5))
+                    .src2(Reg::x(6)),
+                Instruction::new(Opcode::Add)
+                    .dst(Reg::x(5))
+                    .src1(Reg::x(5))
+                    .imm(1442695040888963407),
+                // x7 = (x5 >> 60) & 1
+                Instruction::new(Opcode::Lsr).dst(Reg::x(7)).src1(Reg::x(5)).imm(60),
+                Instruction::new(Opcode::And).dst(Reg::x(7)).src1(Reg::x(7)).imm(1),
+                // if x7 != 0 skip the add
+                Instruction::new(Opcode::Bcond)
+                    .src1(Reg::x(7))
+                    .imm(0)
+                    .cond(Condition::Ne)
+                    .target(9),
+                Instruction::new(Opcode::Add).dst(Reg::x(8)).src1(Reg::x(8)).imm(1),
+                // x1 -= 1; loop
+                Instruction::new(Opcode::Subs).dst(Reg::x(1)).src1(Reg::x(1)).imm(1),
+                Instruction::new(Opcode::Cbnz).src1(Reg::x(1)).target(2),
+            ],
+            data_size: 64,
+            init_words: vec![],
+            init_regs: vec![],
+        }
+    }
+
+    #[test]
+    fn random_branches_mispredict_and_squash() {
+        let p = branchy_program();
+        let (trace, stats) = run(&p, &UarchConfig::uarch_a(), 30_000);
+        assert!(stats.cond_branches > 5_000);
+        // ~50% unpredictable branch, 1-in-9 instructions => mispredict
+        // rate over conditionals should be substantial.
+        assert!(
+            stats.mispredict_rate() > 0.10,
+            "rate={}",
+            stats.mispredict_rate()
+        );
+        assert!(stats.squashed > 0);
+        assert_eq!(trace.squashed_count() as u64, stats.squashed);
+    }
+
+    #[test]
+    fn better_predictor_reduces_mispredicts_on_loop() {
+        // Loop branch with fixed trip count: TAGE's loop predictor should
+        // beat Local decisively.
+        let p = loop_program(20_000, 8, 1 << 14);
+        let mut cfg_local = UarchConfig::uarch_a();
+        cfg_local.predictor = crate::uarch::PredictorKind::Local;
+        let mut cfg_tage = UarchConfig::uarch_a();
+        cfg_tage.predictor = crate::uarch::PredictorKind::TageScL;
+        let (_, s_local) = run(&p, &cfg_local, 50_000);
+        let (_, s_tage) = run(&p, &cfg_tage, 50_000);
+        assert!(s_tage.mispredicts <= s_local.mispredicts);
+    }
+
+    #[test]
+    fn stats_match_trace_counts() {
+        let p = branchy_program();
+        let (trace, stats) = run(&p, &UarchConfig::uarch_b(), 10_000);
+        assert_eq!(trace.retired_count() as u64, stats.instructions);
+        assert_eq!(trace.squashed_count() as u64, stats.squashed);
+        assert_eq!(trace.nop_count() as u64, stats.nops);
+        let mispred_in_trace = trace.retired().filter(|r| r.branch_mispred).count() as u64;
+        assert_eq!(mispred_in_trace, stats.mispredicts);
+        let l1d_miss_in_trace = trace
+            .retired()
+            .filter(|r| r.access_level.is_l1_miss())
+            .count() as u64;
+        assert_eq!(l1d_miss_in_trace, stats.l1d_misses);
+    }
+
+    #[test]
+    fn stats_only_emits_no_records() {
+        let p = loop_program(100, 8, 1 << 12);
+        let (trace, stats) = DetailedSim::new(&p, &UarchConfig::uarch_a())
+            .stats_only()
+            .run(500);
+        assert!(trace.records.is_empty());
+        assert!(stats.instructions > 0);
+    }
+
+    #[test]
+    fn detailed_commits_same_stream_as_functional() {
+        let p = branchy_program();
+        let functional = crate::functional::FunctionalSim::new(&p).run(5_000);
+        let (trace, _) = run(&p, &UarchConfig::uarch_c(), 5_000);
+        let committed: Vec<_> = trace.retired().map(|r| r.func).collect();
+        assert_eq!(committed.len(), functional.records.len());
+        for (a, b) in committed.iter().zip(&functional.records) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let p = branchy_program();
+        let (t1, s1) = run(&p, &UarchConfig::uarch_b(), 3_000);
+        let (t2, s2) = run(&p, &UarchConfig::uarch_b(), 3_000);
+        assert_eq!(s1, s2);
+        assert_eq!(t1.records.len(), t2.records.len());
+    }
+}

@@ -1,0 +1,329 @@
+//! Design-space exploration support — Table 3 space, performance-vector
+//! characterization and the §4.3 training-microarchitecture selection
+//! (Mahalanobis vs Euclidean vs random, Figures 8 & 14).
+
+pub mod space;
+
+pub use space::DesignSpace;
+
+use crate::util::Rng;
+
+/// The four performance metrics §4.3 uses to characterize a design:
+/// "CPI, L1 cache miss, L2 cache miss, and branch misprediction rate …
+/// they capture the processor, cache, memory, and branch behaviors".
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PerfVector {
+    /// Cycles per instruction.
+    pub cpi: f64,
+    /// L1D miss rate (misses / memory accesses).
+    pub l1_miss_rate: f64,
+    /// L2 miss rate on the data side.
+    pub l2_miss_rate: f64,
+    /// Conditional branch misprediction rate.
+    pub mispredict_rate: f64,
+}
+
+impl PerfVector {
+    /// As a fixed array for linear algebra.
+    pub fn as_array(&self) -> [f64; 4] {
+        [
+            self.cpi,
+            self.l1_miss_rate,
+            self.l2_miss_rate,
+            self.mispredict_rate,
+        ]
+    }
+}
+
+/// Selection strategies compared in Figure 14.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectionStrategy {
+    /// Pick the pair with maximum Mahalanobis distance (the paper's
+    /// method).
+    Mahalanobis,
+    /// Pick the pair with maximum Euclidean distance.
+    Euclidean,
+    /// Pick a uniformly random pair.
+    Random,
+}
+
+/// Mean of each metric column.
+fn column_means(vs: &[PerfVector]) -> [f64; 4] {
+    let mut m = [0.0; 4];
+    for v in vs {
+        let a = v.as_array();
+        for i in 0..4 {
+            m[i] += a[i];
+        }
+    }
+    for x in m.iter_mut() {
+        *x /= vs.len() as f64;
+    }
+    m
+}
+
+/// Sample covariance matrix of the performance metrics across designs
+/// (the `S` in the Mahalanobis definition).
+pub fn covariance(vs: &[PerfVector]) -> [[f64; 4]; 4] {
+    let n = vs.len();
+    assert!(n >= 2, "covariance needs at least 2 designs");
+    let means = column_means(vs);
+    let mut cov = [[0.0; 4]; 4];
+    for v in vs {
+        let a = v.as_array();
+        for i in 0..4 {
+            for j in 0..4 {
+                cov[i][j] += (a[i] - means[i]) * (a[j] - means[j]);
+            }
+        }
+    }
+    for row in cov.iter_mut() {
+        for x in row.iter_mut() {
+            *x /= (n - 1) as f64;
+        }
+    }
+    cov
+}
+
+/// Invert a 4×4 matrix by Gauss-Jordan with partial pivoting. Adds a tiny
+/// ridge on singular input (possible when metrics are perfectly
+/// correlated across the sampled designs).
+pub fn invert4(m: &[[f64; 4]; 4]) -> [[f64; 4]; 4] {
+    let mut a = *m;
+    // Ridge to guarantee invertibility on degenerate samples.
+    let trace: f64 = (0..4).map(|i| a[i][i]).sum();
+    let ridge = (trace / 4.0).abs().max(1e-12) * 1e-9;
+    for (i, row) in a.iter_mut().enumerate() {
+        row[i] += ridge;
+    }
+    let mut inv = [[0.0; 4]; 4];
+    for (i, row) in inv.iter_mut().enumerate() {
+        row[i] = 1.0;
+    }
+    for col in 0..4 {
+        // Pivot.
+        let pivot = (col..4)
+            .max_by(|&r1, &r2| a[r1][col].abs().partial_cmp(&a[r2][col].abs()).unwrap())
+            .unwrap();
+        a.swap(col, pivot);
+        inv.swap(col, pivot);
+        let p = a[col][col];
+        assert!(p.abs() > 0.0, "singular matrix even after ridge");
+        for j in 0..4 {
+            a[col][j] /= p;
+            inv[col][j] /= p;
+        }
+        for row in 0..4 {
+            if row != col {
+                let f = a[row][col];
+                for j in 0..4 {
+                    a[row][j] -= f * a[col][j];
+                    inv[row][j] -= f * inv[col][j];
+                }
+            }
+        }
+    }
+    inv
+}
+
+/// Mahalanobis distance `sqrt((x−y)ᵀ S⁻¹ (x−y))`.
+pub fn mahalanobis(x: &PerfVector, y: &PerfVector, inv_cov: &[[f64; 4]; 4]) -> f64 {
+    let xa = x.as_array();
+    let ya = y.as_array();
+    let d: Vec<f64> = (0..4).map(|i| xa[i] - ya[i]).collect();
+    let mut acc = 0.0;
+    for i in 0..4 {
+        for j in 0..4 {
+            acc += d[i] * inv_cov[i][j] * d[j];
+        }
+    }
+    acc.max(0.0).sqrt()
+}
+
+/// Euclidean distance between performance vectors.
+pub fn euclidean(x: &PerfVector, y: &PerfVector) -> f64 {
+    let xa = x.as_array();
+    let ya = y.as_array();
+    (0..4).map(|i| (xa[i] - ya[i]).powi(2)).sum::<f64>().sqrt()
+}
+
+/// Select the two training microarchitectures from characterized designs
+/// (the Figure 8 workflow). Returns indices into `designs`.
+pub fn select_pair(
+    designs: &[PerfVector],
+    strategy: SelectionStrategy,
+    rng: &mut Rng,
+) -> (usize, usize) {
+    assert!(designs.len() >= 2, "need at least two designs");
+    match strategy {
+        SelectionStrategy::Random => {
+            let idx = rng.sample_indices(designs.len(), 2);
+            (idx[0], idx[1])
+        }
+        SelectionStrategy::Euclidean => argmax_pair(designs, |x, y| euclidean(x, y)),
+        SelectionStrategy::Mahalanobis => {
+            let inv = invert4(&covariance(designs));
+            argmax_pair(designs, |x, y| mahalanobis(x, y, &inv))
+        }
+    }
+}
+
+fn argmax_pair(vs: &[PerfVector], d: impl Fn(&PerfVector, &PerfVector) -> f64) -> (usize, usize) {
+    let mut best = (0, 1);
+    let mut best_d = f64::MIN;
+    for i in 0..vs.len() {
+        for j in i + 1..vs.len() {
+            let dist = d(&vs[i], &vs[j]);
+            if dist > best_d {
+                best_d = dist;
+                best = (i, j);
+            }
+        }
+    }
+    best
+}
+
+/// Full pairwise distance matrix (for the Figure 8 report output).
+pub fn distance_matrix(designs: &[PerfVector], strategy: SelectionStrategy) -> Vec<Vec<f64>> {
+    let inv = if strategy == SelectionStrategy::Mahalanobis {
+        Some(invert4(&covariance(designs)))
+    } else {
+        None
+    };
+    designs
+        .iter()
+        .map(|x| {
+            designs
+                .iter()
+                .map(|y| match strategy {
+                    SelectionStrategy::Mahalanobis => mahalanobis(x, y, inv.as_ref().unwrap()),
+                    _ => euclidean(x, y),
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_designs() -> Vec<PerfVector> {
+        vec![
+            PerfVector { cpi: 1.23, l1_miss_rate: 0.34, l2_miss_rate: 0.21, mispredict_rate: 0.14 },
+            PerfVector { cpi: 1.15, l1_miss_rate: 0.25, l2_miss_rate: 0.14, mispredict_rate: 0.12 },
+            PerfVector { cpi: 1.11, l1_miss_rate: 0.23, l2_miss_rate: 0.12, mispredict_rate: 0.21 },
+            PerfVector { cpi: 2.05, l1_miss_rate: 0.41, l2_miss_rate: 0.33, mispredict_rate: 0.05 },
+            PerfVector { cpi: 0.78, l1_miss_rate: 0.05, l2_miss_rate: 0.02, mispredict_rate: 0.02 },
+        ]
+    }
+
+    #[test]
+    fn covariance_is_symmetric_psd_diagonal() {
+        let cov = covariance(&sample_designs());
+        for i in 0..4 {
+            assert!(cov[i][i] >= 0.0);
+            for j in 0..4 {
+                assert!((cov[i][j] - cov[j][i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn invert4_identity() {
+        let mut id = [[0.0; 4]; 4];
+        for (i, row) in id.iter_mut().enumerate() {
+            row[i] = 1.0;
+        }
+        let inv = invert4(&id);
+        for i in 0..4 {
+            for j in 0..4 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((inv[i][j] - expect).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn invert4_times_original_is_identity() {
+        let cov = covariance(&sample_designs());
+        let inv = invert4(&cov);
+        for i in 0..4 {
+            for j in 0..4 {
+                let mut acc = 0.0;
+                for k in 0..4 {
+                    acc += cov[i][k] * inv[k][j];
+                }
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((acc - expect).abs() < 1e-4, "({i},{j}) = {acc}");
+            }
+        }
+    }
+
+    #[test]
+    fn mahalanobis_properties() {
+        let ds = sample_designs();
+        let inv = invert4(&covariance(&ds));
+        // Identity of indiscernibles + symmetry.
+        assert!(mahalanobis(&ds[0], &ds[0], &inv) < 1e-9);
+        let d01 = mahalanobis(&ds[0], &ds[1], &inv);
+        let d10 = mahalanobis(&ds[1], &ds[0], &inv);
+        assert!((d01 - d10).abs() < 1e-12);
+        assert!(d01 > 0.0);
+    }
+
+    #[test]
+    fn mahalanobis_downweights_correlated_large_scale_metric() {
+        // Two designs differing only along a high-variance direction are
+        // *closer* in Mahalanobis terms than an equal Euclidean step along
+        // a low-variance direction — the property the paper cites for
+        // preferring it.
+        let mut rng = Rng::new(1);
+        let mut ds = Vec::new();
+        for _ in 0..40 {
+            // cpi highly variable, mispredict_rate tight.
+            ds.push(PerfVector {
+                cpi: 1.0 + rng.gen_normal() * 1.0,
+                l1_miss_rate: 0.2 + rng.gen_normal() * 0.02,
+                l2_miss_rate: 0.1 + rng.gen_normal() * 0.02,
+                mispredict_rate: 0.1 + rng.gen_normal() * 0.005,
+            });
+        }
+        let inv = invert4(&covariance(&ds));
+        let base = PerfVector { cpi: 1.0, l1_miss_rate: 0.2, l2_miss_rate: 0.1, mispredict_rate: 0.1 };
+        let step_cpi = PerfVector { cpi: 1.5, ..base };
+        let step_bp = PerfVector { mispredict_rate: 0.6, ..base };
+        let d_cpi = mahalanobis(&base, &step_cpi, &inv);
+        let d_bp = mahalanobis(&base, &step_bp, &inv);
+        // Euclidean sees both steps as equal (0.5); Mahalanobis must see
+        // the branch step as far larger.
+        assert!((euclidean(&base, &step_cpi) - euclidean(&base, &step_bp)).abs() < 1e-9);
+        assert!(d_bp > 5.0 * d_cpi, "d_bp={d_bp} d_cpi={d_cpi}");
+    }
+
+    #[test]
+    fn select_pair_strategies() {
+        let ds = sample_designs();
+        let mut rng = Rng::new(3);
+        let (i, j) = select_pair(&ds, SelectionStrategy::Euclidean, &mut rng);
+        // Euclidean is dominated by CPI spread: designs 3 (2.05) and 4 (0.78).
+        assert_eq!((i, j), (3, 4));
+        let (i, j) = select_pair(&ds, SelectionStrategy::Mahalanobis, &mut rng);
+        assert_ne!(i, j);
+        let (i, j) = select_pair(&ds, SelectionStrategy::Random, &mut rng);
+        assert_ne!(i, j);
+    }
+
+    #[test]
+    fn distance_matrix_shape_and_diag() {
+        let ds = sample_designs();
+        for strat in [SelectionStrategy::Mahalanobis, SelectionStrategy::Euclidean] {
+            let m = distance_matrix(&ds, strat);
+            assert_eq!(m.len(), ds.len());
+            for (i, row) in m.iter().enumerate() {
+                assert_eq!(row.len(), ds.len());
+                assert!(row[i].abs() < 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,461 @@
+//! Feature engineering — the paper's §4.2 input pipeline.
+//!
+//! From the microarchitecture-agnostic functional trace we extract, per
+//! instruction:
+//!
+//! * **opcode id** — integer mapping into the embedding lookup table;
+//! * **register bitmap** — one bit per architectural register (src+dst);
+//! * **branch history** — a hash table of `Nb` buckets, each holding the
+//!   last `Nq` outcomes of the branches that hash there (paper Figure 4);
+//!   retrieved *before* the current outcome is inserted;
+//! * **access distances** — deltas between the current memory address and
+//!   the previous `Nm` accesses (paper Figure 3), log-compressed;
+//! * **scalar flags** — instruction-class indicators.
+//!
+//! The same extractor runs in `tao datagen` (training features) and in the
+//! coordinator's inference hot path, so train/serve skew is impossible by
+//! construction. The extractor is sequential state — one instance per
+//! trace shard.
+
+use crate::isa::{Opcode, NUM_REGS};
+use crate::trace::FuncRecord;
+
+/// Number of scalar flag features (see [`FeatureExtractor::extract`]).
+pub const NUM_SCALARS: usize = 10;
+
+/// Sentinel feature value for "no history yet" slots.
+pub const EMPTY_SLOT: f32 = -1.0;
+
+/// Feature-engineering hyperparameters (paper §4.2 / Figure 12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FeatureConfig {
+    /// Branch-history hash buckets `Nb` (paper default 1k).
+    pub nb: usize,
+    /// Outcomes kept per bucket `Nq` (paper default 32).
+    pub nq: usize,
+    /// Memory-context queue length `Nm` (paper default 64).
+    pub nm: usize,
+}
+
+impl Default for FeatureConfig {
+    fn default() -> FeatureConfig {
+        // The values §5.4 selects: Nb=1k, Nq=32, Nm=64.
+        FeatureConfig {
+            nb: 1024,
+            nq: 32,
+            nm: 64,
+        }
+    }
+}
+
+impl FeatureConfig {
+    /// Total per-instruction feature vector width `F`.
+    pub fn feature_dim(&self) -> usize {
+        NUM_REGS + self.nq + self.nm + NUM_SCALARS
+    }
+}
+
+/// Stateful feature extractor over a committed instruction stream.
+pub struct FeatureExtractor {
+    config: FeatureConfig,
+    /// Branch history: `nb` ring buffers of the last `nq` outcomes.
+    /// Flattened as `history[bucket * nq + slot]`; -1 = empty, 0 = not
+    /// taken, 1 = taken. `head[bucket]` is the next write position.
+    history: Vec<i8>,
+    head: Vec<u32>,
+    filled: Vec<u32>,
+    /// Memory context: ring of the last `nm` addresses.
+    mem_ring: Vec<u64>,
+    mem_head: usize,
+    mem_filled: usize,
+    /// Dependency tracking: per-register (ordinal of last writer, writer
+    /// was a load). Register dataflow is program semantics — fully
+    /// microarchitecture agnostic — and exposes serialized dependence
+    /// chains (e.g. pointer chasing) that the window's raw features
+    /// cannot distinguish from independent access streams.
+    last_writer: Vec<u64>,
+    writer_was_load: Vec<bool>,
+    ordinal: u64,
+}
+
+impl FeatureExtractor {
+    /// New extractor with empty history.
+    pub fn new(config: FeatureConfig) -> FeatureExtractor {
+        FeatureExtractor {
+            config,
+            history: vec![-1; config.nb * config.nq],
+            head: vec![0; config.nb],
+            filled: vec![0; config.nb],
+            mem_ring: vec![0; config.nm],
+            mem_head: 0,
+            mem_filled: 0,
+            last_writer: vec![0; crate::isa::NUM_REGS],
+            writer_was_load: vec![false; crate::isa::NUM_REGS],
+            ordinal: 0,
+        }
+    }
+
+    /// The configuration in use.
+    pub fn config(&self) -> FeatureConfig {
+        self.config
+    }
+
+    /// Reset all history (new trace shard).
+    pub fn reset(&mut self) {
+        self.history.fill(-1);
+        self.head.fill(0);
+        self.filled.fill(0);
+        self.mem_head = 0;
+        self.mem_filled = 0;
+        self.last_writer.fill(0);
+        self.writer_was_load.fill(false);
+        self.ordinal = 0;
+    }
+
+    /// Bucket for a branch PC. PCs are 4-byte aligned, so this is the
+    /// paper's `PC % 4·Nb` bucket selection expressed on word addresses.
+    fn bucket(&self, pc: u64) -> usize {
+        ((pc >> 2) as usize) % self.config.nb
+    }
+
+    /// Signed log compression for address deltas: keeps near/far structure
+    /// while bounding the dynamic range for the model.
+    fn compress_delta(d: i64) -> f32 {
+        let mag = (d.unsigned_abs() as f64 + 1.0).log2() as f32 / 48.0;
+        if d < 0 {
+            -mag
+        } else {
+            mag
+        }
+    }
+
+    /// Extract the feature vector for `rec` into `out` (length must be
+    /// `config.feature_dim()`), returning the opcode id. Updates the
+    /// branch/memory history state *after* reading it, so no label leaks
+    /// into the instruction's own features.
+    pub fn extract(&mut self, rec: &FuncRecord, out: &mut [f32]) -> i32 {
+        let cfg = self.config;
+        debug_assert_eq!(out.len(), cfg.feature_dim());
+        let (reg_part, rest) = out.split_at_mut(NUM_REGS);
+        let (branch_part, rest) = rest.split_at_mut(cfg.nq);
+        let (mem_part, scalar_part) = rest.split_at_mut(cfg.nm);
+
+        // --- register bitmap ---
+        for (i, slot) in reg_part.iter_mut().enumerate() {
+            *slot = ((rec.reg_bitmap >> i) & 1) as f32;
+        }
+
+        // --- branch history (read before update) ---
+        if rec.opcode.is_cond_branch() {
+            let b = self.bucket(rec.pc);
+            let base = b * cfg.nq;
+            let filled = self.filled[b] as usize;
+            let head = self.head[b] as usize;
+            // Most recent outcome first.
+            for (j, slot) in branch_part.iter_mut().enumerate() {
+                if j < filled {
+                    let idx = (head + cfg.nq - 1 - j) % cfg.nq;
+                    *slot = self.history[base + idx] as f32;
+                } else {
+                    *slot = EMPTY_SLOT;
+                }
+            }
+        } else {
+            branch_part.fill(EMPTY_SLOT);
+        }
+
+        // --- access distances (read before update) ---
+        if rec.is_mem() {
+            let filled = self.mem_filled;
+            for (j, slot) in mem_part.iter_mut().enumerate() {
+                if j < filled {
+                    let idx = (self.mem_head + cfg.nm - 1 - j) % cfg.nm;
+                    let prev = self.mem_ring[idx];
+                    *slot = Self::compress_delta(rec.mem_addr as i64 - prev as i64);
+                } else {
+                    *slot = EMPTY_SLOT;
+                }
+            }
+        } else {
+            mem_part.fill(EMPTY_SLOT);
+        }
+
+        // --- scalar flags ---
+        let op = rec.opcode;
+        scalar_part[0] = op.is_load() as u8 as f32;
+        scalar_part[1] = op.is_store() as u8 as f32;
+        scalar_part[2] = op.is_cond_branch() as u8 as f32;
+        scalar_part[3] = (op.is_branch() && !op.is_cond_branch()) as u8 as f32;
+        scalar_part[4] = matches!(
+            op.class(),
+            crate::isa::OpcodeClass::FpAlu
+                | crate::isa::OpcodeClass::FpMul
+                | crate::isa::OpcodeClass::FpDiv
+        ) as u8 as f32;
+        scalar_part[5] = rec.mem_bytes as f32 / 8.0;
+        scalar_part[6] = matches!(
+            op.class(),
+            crate::isa::OpcodeClass::IntMul | crate::isa::OpcodeClass::IntDiv
+        ) as u8 as f32;
+        scalar_part[7] = (rec.reg_bitmap.count_ones() as f32) / 4.0;
+        // Dependency features: distance (in instructions) to the nearest
+        // producer of any source register, and whether that producer was
+        // a load (serialized memory dependence, e.g. pointer chasing).
+        let mut dep_dist = f32::INFINITY;
+        let mut dep_on_load = false;
+        for i in 0..NUM_REGS {
+            if rec.reg_bitmap & (1u64 << i) != 0 && self.last_writer[i] != 0 {
+                let d = (self.ordinal - self.last_writer[i]) as f32;
+                if d < dep_dist {
+                    dep_dist = d;
+                    dep_on_load = self.writer_was_load[i];
+                }
+            }
+        }
+        scalar_part[8] = if dep_dist.is_finite() {
+            (dep_dist + 1.0).log2() / 16.0
+        } else {
+            EMPTY_SLOT
+        };
+        scalar_part[9] = (dep_on_load && dep_dist <= 8.0) as u8 as f32;
+
+        // --- state updates (after reads) ---
+        if rec.opcode.is_cond_branch() {
+            let b = self.bucket(rec.pc);
+            let base = b * cfg.nq;
+            let head = self.head[b] as usize;
+            self.history[base + head] = rec.taken as i8;
+            self.head[b] = ((head + 1) % cfg.nq) as u32;
+            self.filled[b] = (self.filled[b] + 1).min(cfg.nq as u32);
+        }
+        if rec.is_mem() {
+            self.mem_ring[self.mem_head] = rec.mem_addr;
+            self.mem_head = (self.mem_head + 1) % cfg.nm;
+            self.mem_filled = (self.mem_filled + 1).min(cfg.nm);
+        }
+        self.ordinal += 1;
+        // Approximate writer tracking from the bitmap: loads and ALU ops
+        // write their destination; we mark every register the instruction
+        // touches that is plausibly a destination. Over-approximation is
+        // acceptable — the feature is a hint, not an exact dataflow graph.
+        if !rec.opcode.is_store() && !rec.opcode.is_branch() {
+            for i in 0..NUM_REGS {
+                if rec.reg_bitmap & (1u64 << i) != 0 {
+                    self.last_writer[i] = self.ordinal;
+                    self.writer_was_load[i] = rec.opcode.is_load();
+                }
+            }
+        }
+
+        rec.opcode.index() as i32
+    }
+}
+
+/// Opcode-id mapping metadata (recorded in the AOT artifact and validated
+/// at load time so the Rust hot path and the trained model can never
+/// disagree on the vocabulary).
+pub fn opcode_vocabulary() -> Vec<(&'static str, usize)> {
+    Opcode::ALL
+        .iter()
+        .map(|op| (op.mnemonic(), op.index()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Opcode;
+
+    fn rec(opcode: Opcode, pc: u64, mem_addr: u64, taken: bool) -> FuncRecord {
+        FuncRecord {
+            pc,
+            opcode,
+            reg_bitmap: 0b101,
+            mem_addr,
+            mem_bytes: if opcode.is_mem() {
+                crate::isa::Instruction::new(opcode).mem_width().unwrap().bytes() as u8
+            } else {
+                0
+            },
+            taken,
+        }
+    }
+
+    fn extract_one(fx: &mut FeatureExtractor, r: &FuncRecord) -> (i32, Vec<f32>) {
+        let mut out = vec![0.0; fx.config().feature_dim()];
+        let id = fx.extract(r, &mut out);
+        (id, out)
+    }
+
+    #[test]
+    fn feature_dim_matches_layout() {
+        let cfg = FeatureConfig::default();
+        assert_eq!(cfg.feature_dim(), NUM_REGS + 32 + 64 + NUM_SCALARS);
+    }
+
+    #[test]
+    fn register_bitmap_roundtrip() {
+        let mut fx = FeatureExtractor::new(FeatureConfig::default());
+        let r = rec(Opcode::Add, 0x400000, 0, false);
+        let (_, out) = extract_one(&mut fx, &r);
+        assert_eq!(out[0], 1.0);
+        assert_eq!(out[1], 0.0);
+        assert_eq!(out[2], 1.0);
+    }
+
+    #[test]
+    fn branch_history_no_self_leak() {
+        // The branch's own outcome must NOT appear in its features.
+        let mut fx = FeatureExtractor::new(FeatureConfig::default());
+        let b = rec(Opcode::Bcond, 0x400100, 0, true);
+        let (_, out) = extract_one(&mut fx, &b);
+        let hist = &out[NUM_REGS..NUM_REGS + 32];
+        assert!(hist.iter().all(|&v| v == EMPTY_SLOT), "history leaked");
+    }
+
+    #[test]
+    fn branch_history_accumulates_most_recent_first() {
+        let mut fx = FeatureExtractor::new(FeatureConfig::default());
+        let pc = 0x400100;
+        for taken in [true, false, true] {
+            extract_one(&mut fx, &rec(Opcode::Bcond, pc, 0, taken));
+        }
+        let (_, out) = extract_one(&mut fx, &rec(Opcode::Bcond, pc, 0, false));
+        let hist = &out[NUM_REGS..NUM_REGS + 32];
+        // Most recent first: true, false, true, then empty.
+        assert_eq!(&hist[..3], &[1.0, 0.0, 1.0]);
+        assert_eq!(hist[3], EMPTY_SLOT);
+    }
+
+    #[test]
+    fn branch_buckets_separate_pcs() {
+        // Figure 4's point: different branches land in different buckets.
+        let mut fx = FeatureExtractor::new(FeatureConfig::default());
+        extract_one(&mut fx, &rec(Opcode::Bcond, 0x400100, 0, true));
+        extract_one(&mut fx, &rec(Opcode::Bcond, 0x400104, 0, true));
+        // A fresh PC in yet another bucket sees empty history.
+        let (_, out) = extract_one(&mut fx, &rec(Opcode::Bcond, 0x400108, 0, false));
+        let hist = &out[NUM_REGS..NUM_REGS + 32];
+        assert!(hist.iter().all(|&v| v == EMPTY_SLOT));
+        // While the first PC sees only its own outcome.
+        let (_, out) = extract_one(&mut fx, &rec(Opcode::Bcond, 0x400100, 0, false));
+        let hist = &out[NUM_REGS..NUM_REGS + 32];
+        assert_eq!(hist[0], 1.0);
+        assert_eq!(hist[1], EMPTY_SLOT);
+    }
+
+    #[test]
+    fn aliasing_pcs_share_a_bucket() {
+        // PCs nb*4 apart hash to the same bucket — the paper notes this
+        // provides a shared global history.
+        let cfg = FeatureConfig { nb: 16, nq: 4, nm: 4 };
+        let mut fx = FeatureExtractor::new(cfg);
+        let pc_a = 0x400000;
+        let pc_b = 0x400000 + (cfg.nb as u64 * 4);
+        extract_one(&mut fx, &rec(Opcode::Bcond, pc_a, 0, true));
+        let mut out = vec![0.0; cfg.feature_dim()];
+        fx.extract(&rec(Opcode::Bcond, pc_b, 0, false), &mut out);
+        assert_eq!(out[NUM_REGS], 1.0, "aliased bucket should see pc_a's outcome");
+    }
+
+    #[test]
+    fn access_distance_computed_against_history() {
+        let cfg = FeatureConfig { nb: 16, nq: 4, nm: 4 };
+        let mut fx = FeatureExtractor::new(cfg);
+        extract_one(&mut fx, &rec(Opcode::Ldr, 0x400000, 1000, false));
+        extract_one(&mut fx, &rec(Opcode::Ldr, 0x400004, 1064, false));
+        let (_, out) = extract_one(&mut fx, &rec(Opcode::Ldr, 0x400008, 1064, false));
+        let mem = &out[NUM_REGS + cfg.nq..NUM_REGS + cfg.nq + cfg.nm];
+        // Most recent distance: 1064-1064 = 0 -> log2(1)=0.
+        assert_eq!(mem[0], 0.0);
+        // Next: 1064-1000=64 -> positive.
+        assert!(mem[1] > 0.0);
+        assert_eq!(mem[2], EMPTY_SLOT);
+    }
+
+    #[test]
+    fn negative_distance_is_signed() {
+        let cfg = FeatureConfig { nb: 16, nq: 4, nm: 4 };
+        let mut fx = FeatureExtractor::new(cfg);
+        extract_one(&mut fx, &rec(Opcode::Ldr, 0x400000, 5000, false));
+        let (_, out) = extract_one(&mut fx, &rec(Opcode::Str, 0x400004, 1000, false));
+        let mem = &out[NUM_REGS + cfg.nq..NUM_REGS + cfg.nq + cfg.nm];
+        assert!(mem[0] < 0.0, "delta back in memory should be negative");
+    }
+
+    #[test]
+    fn non_mem_instruction_has_empty_mem_features() {
+        let mut fx = FeatureExtractor::new(FeatureConfig::default());
+        extract_one(&mut fx, &rec(Opcode::Ldr, 0x400000, 1000, false));
+        let (_, out) = extract_one(&mut fx, &rec(Opcode::Add, 0x400004, 0, false));
+        let cfg = fx.config();
+        let mem = &out[NUM_REGS + cfg.nq..NUM_REGS + cfg.nq + cfg.nm];
+        assert!(mem.iter().all(|&v| v == EMPTY_SLOT));
+    }
+
+    #[test]
+    fn scalar_flags_identify_classes() {
+        let mut fx = FeatureExtractor::new(FeatureConfig::default());
+        let base = NUM_REGS + 32 + 64;
+        let (_, out) = extract_one(&mut fx, &rec(Opcode::Ldr, 0x400000, 8, false));
+        assert_eq!(out[base], 1.0); // load
+        assert_eq!(out[base + 1], 0.0);
+        let (_, out) = extract_one(&mut fx, &rec(Opcode::Strb, 0x400004, 8, false));
+        assert_eq!(out[base + 1], 1.0); // store
+        assert!(out[base + 5] > 0.0 && out[base + 5] < 1.0); // 1 byte / 8
+        let (_, out) = extract_one(&mut fx, &rec(Opcode::Fmadd, 0x400008, 0, false));
+        assert_eq!(out[base + 4], 1.0); // fp
+    }
+
+    #[test]
+    fn opcode_id_matches_vocabulary() {
+        let mut fx = FeatureExtractor::new(FeatureConfig::default());
+        for op in Opcode::ALL {
+            let (id, _) = extract_one(&mut fx, &rec(op, 0x400000, 0, false));
+            assert_eq!(id as usize, op.index());
+        }
+        assert_eq!(opcode_vocabulary().len(), Opcode::COUNT);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut fx = FeatureExtractor::new(FeatureConfig::default());
+        extract_one(&mut fx, &rec(Opcode::Bcond, 0x400100, 0, true));
+        extract_one(&mut fx, &rec(Opcode::Ldr, 0x400104, 512, false));
+        fx.reset();
+        let (_, out) = extract_one(&mut fx, &rec(Opcode::Bcond, 0x400100, 0, false));
+        assert!(out[NUM_REGS..NUM_REGS + 32].iter().all(|&v| v == EMPTY_SLOT));
+    }
+
+    #[test]
+    fn extractor_is_deterministic() {
+        let p = crate::workloads::by_name("dee").unwrap().build(5);
+        let t = crate::functional::FunctionalSim::new(&p).run(2_000);
+        let cfg = FeatureConfig::default();
+        let run = || {
+            let mut fx = FeatureExtractor::new(cfg);
+            let mut all = Vec::new();
+            let mut buf = vec![0.0; cfg.feature_dim()];
+            for r in &t.records {
+                fx.extract(r, &mut buf);
+                all.extend_from_slice(&buf);
+            }
+            all
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn queue_wraps_beyond_capacity() {
+        let cfg = FeatureConfig { nb: 4, nq: 2, nm: 2 };
+        let mut fx = FeatureExtractor::new(cfg);
+        let pc = 0x400100;
+        for taken in [true, true, false] {
+            extract_one(&mut fx, &rec(Opcode::Bcond, pc, 0, taken));
+        }
+        let (_, out) = extract_one(&mut fx, &rec(Opcode::Bcond, pc, 0, true));
+        // Only the last nq=2 outcomes retained: false (most recent), true.
+        assert_eq!(out[NUM_REGS], 0.0);
+        assert_eq!(out[NUM_REGS + 1], 1.0);
+    }
+}

@@ -1,0 +1,555 @@
+//! Architectural machine state and TaoISA instruction semantics.
+
+use crate::isa::inst::{DATA_BASE, INST_BYTES, TEXT_BASE};
+use crate::isa::{Instruction, Opcode, Program, Reg, NUM_REGS};
+use crate::trace::FuncRecord;
+
+/// One executed instruction: its committed record plus control-flow info
+/// the detailed model needs (the index executed and where control went).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Executed {
+    /// Static instruction index that was executed.
+    pub index: usize,
+    /// Index control flow proceeds to (`None` = program halted).
+    pub next_index: Option<usize>,
+    /// The functional-trace record for this instruction.
+    pub record: FuncRecord,
+}
+
+/// Architectural state: registers, data memory, and the program counter
+/// (as a static instruction index). Executes one instruction per
+/// [`Machine::step`], with full TaoISA semantics.
+pub struct Machine {
+    program: Program,
+    /// Register file. Integer registers hold `i64` bit patterns; FP
+    /// registers hold `f64` bit patterns.
+    regs: [u64; NUM_REGS],
+    /// Flat data segment.
+    mem: Vec<u8>,
+    /// Current instruction index (`None` once halted).
+    pc_index: Option<usize>,
+    /// Committed instruction count.
+    committed: u64,
+}
+
+impl Machine {
+    /// Build a machine, applying the program's initial memory and register
+    /// image.
+    pub fn new(program: &Program) -> Machine {
+        let mut mem = vec![0u8; program.data_size as usize];
+        for &(off, val) in &program.init_words {
+            mem[off as usize..off as usize + 8].copy_from_slice(&val.to_le_bytes());
+        }
+        let mut regs = [0u64; NUM_REGS];
+        for &(r, v) in &program.init_regs {
+            regs[r.index()] = v;
+        }
+        Machine {
+            program: program.clone(),
+            regs,
+            mem,
+            pc_index: if program.insts.is_empty() { None } else { Some(0) },
+            committed: 0,
+        }
+    }
+
+    /// Benchmark name of the loaded program.
+    pub fn program_name(&self) -> &str {
+        &self.program.name
+    }
+
+    /// The loaded program.
+    pub fn program(&self) -> &Program {
+        &self.program
+    }
+
+    /// Current instruction index, `None` if halted.
+    pub fn pc_index(&self) -> Option<usize> {
+        self.pc_index
+    }
+
+    /// Committed instruction count so far.
+    pub fn committed(&self) -> u64 {
+        self.committed
+    }
+
+    /// Read an integer register as a signed value.
+    pub fn read_int(&self, r: Reg) -> i64 {
+        self.regs[r.index()] as i64
+    }
+
+    /// Read an FP register.
+    pub fn read_fp(&self, r: Reg) -> f64 {
+        f64::from_bits(self.regs[r.index()])
+    }
+
+    fn write_int(&mut self, r: Reg, v: i64) {
+        self.regs[r.index()] = v as u64;
+    }
+
+    fn write_fp(&mut self, r: Reg, v: f64) {
+        self.regs[r.index()] = v.to_bits();
+    }
+
+    /// Effective address of a memory instruction under the current state,
+    /// clamped into the data segment and aligned to the access width.
+    /// Exposed so the detailed model can compute addresses at issue time.
+    pub fn effective_addr(&self, inst: &Instruction) -> u64 {
+        let base = inst.src1.map(|r| self.regs[r.index()]).unwrap_or(0);
+        let index = inst.src2.map(|r| self.regs[r.index()]).unwrap_or(0);
+        let width = inst.mem_width().map(|w| w.bytes()).unwrap_or(1);
+        let raw = base
+            .wrapping_add(index)
+            .wrapping_add(inst.imm as u64);
+        let size = self.mem.len() as u64;
+        if size == 0 {
+            return DATA_BASE;
+        }
+        // Clamp into [DATA_BASE, DATA_BASE+size) and align.
+        let off = raw.wrapping_sub(DATA_BASE) % size;
+        let off = off - off % width;
+        let off = off.min(size - width);
+        DATA_BASE + off
+    }
+
+    fn load(&self, addr: u64, bytes: u64) -> u64 {
+        let off = (addr - DATA_BASE) as usize;
+        let mut buf = [0u8; 8];
+        buf[..bytes as usize].copy_from_slice(&self.mem[off..off + bytes as usize]);
+        u64::from_le_bytes(buf)
+    }
+
+    fn store(&mut self, addr: u64, bytes: u64, val: u64) {
+        let off = (addr - DATA_BASE) as usize;
+        self.mem[off..off + bytes as usize].copy_from_slice(&val.to_le_bytes()[..bytes as usize]);
+    }
+
+    fn alu_src2(&self, inst: &Instruction) -> i64 {
+        match inst.src2 {
+            Some(r) => self.read_int(r),
+            None => inst.imm,
+        }
+    }
+
+    fn fp_src2(&self, inst: &Instruction) -> f64 {
+        match inst.src2 {
+            Some(r) => self.read_fp(r),
+            None => inst.imm as f64,
+        }
+    }
+
+    /// Execute the instruction at the current PC. Returns `None` once the
+    /// machine halts (control falls off the end of the program).
+    pub fn step(&mut self) -> Option<Executed> {
+        let index = self.pc_index?;
+        let inst = self.program.insts[index];
+        let pc = TEXT_BASE + index as u64 * INST_BYTES;
+
+        let mut mem_addr = 0u64;
+        let mut mem_bytes = 0u8;
+        let mut taken = false;
+        // Default fallthrough.
+        let mut next = index + 1;
+
+        use Opcode::*;
+        match inst.opcode {
+            Add | Adds => {
+                let v = self.read_int(inst.src1.unwrap()).wrapping_add(self.alu_src2(&inst));
+                self.write_int(inst.dst.unwrap(), v);
+            }
+            Sub | Subs | Cmp => {
+                let v = self.read_int(inst.src1.unwrap()).wrapping_sub(self.alu_src2(&inst));
+                if let Some(d) = inst.dst {
+                    self.write_int(d, v);
+                }
+            }
+            Mul => {
+                let v = self.read_int(inst.src1.unwrap()).wrapping_mul(self.alu_src2(&inst));
+                self.write_int(inst.dst.unwrap(), v);
+            }
+            Madd => {
+                let v = self
+                    .read_int(inst.src1.unwrap())
+                    .wrapping_mul(self.alu_src2(&inst))
+                    .wrapping_add(inst.src3.map(|r| self.read_int(r)).unwrap_or(0));
+                self.write_int(inst.dst.unwrap(), v);
+            }
+            Div => {
+                let a = self.read_int(inst.src1.unwrap());
+                let b = self.alu_src2(&inst);
+                let v = if b == 0 { 0 } else { a.wrapping_div(b) };
+                self.write_int(inst.dst.unwrap(), v);
+            }
+            And => {
+                let v = self.read_int(inst.src1.unwrap()) & self.alu_src2(&inst);
+                self.write_int(inst.dst.unwrap(), v);
+            }
+            Orr => {
+                let v = self.read_int(inst.src1.unwrap()) | self.alu_src2(&inst);
+                self.write_int(inst.dst.unwrap(), v);
+            }
+            Eor => {
+                let v = self.read_int(inst.src1.unwrap()) ^ self.alu_src2(&inst);
+                self.write_int(inst.dst.unwrap(), v);
+            }
+            Lsl => {
+                let v = (self.read_int(inst.src1.unwrap()) as u64)
+                    .wrapping_shl(self.alu_src2(&inst) as u32 & 63);
+                self.write_int(inst.dst.unwrap(), v as i64);
+            }
+            Lsr => {
+                let v = (self.read_int(inst.src1.unwrap()) as u64)
+                    .wrapping_shr(self.alu_src2(&inst) as u32 & 63);
+                self.write_int(inst.dst.unwrap(), v as i64);
+            }
+            Asr => {
+                let v = self
+                    .read_int(inst.src1.unwrap())
+                    .wrapping_shr(self.alu_src2(&inst) as u32 & 63);
+                self.write_int(inst.dst.unwrap(), v);
+            }
+            Mov => {
+                let v = self.read_int(inst.src1.unwrap());
+                self.write_int(inst.dst.unwrap(), v);
+            }
+            Movi => {
+                self.write_int(inst.dst.unwrap(), inst.imm);
+            }
+            Csel => {
+                let c = inst.cond.unwrap();
+                let a = self.read_int(inst.src1.unwrap());
+                let b = inst.src2.map(|r| self.read_int(r)).unwrap_or(inst.imm);
+                let v = if c.eval(a, b) { a } else { b };
+                self.write_int(inst.dst.unwrap(), v);
+            }
+            Fadd => {
+                let v = self.read_fp(inst.src1.unwrap()) + self.fp_src2(&inst);
+                self.write_fp(inst.dst.unwrap(), v);
+            }
+            Fsub => {
+                let v = self.read_fp(inst.src1.unwrap()) - self.fp_src2(&inst);
+                self.write_fp(inst.dst.unwrap(), v);
+            }
+            Fmul => {
+                let v = self.read_fp(inst.src1.unwrap()) * self.fp_src2(&inst);
+                self.write_fp(inst.dst.unwrap(), v);
+            }
+            Fmadd => {
+                let v = self.read_fp(inst.src1.unwrap()) * self.fp_src2(&inst)
+                    + inst.src3.map(|r| self.read_fp(r)).unwrap_or(0.0);
+                self.write_fp(inst.dst.unwrap(), v);
+            }
+            Fdiv => {
+                let b = self.fp_src2(&inst);
+                let v = if b == 0.0 {
+                    0.0
+                } else {
+                    self.read_fp(inst.src1.unwrap()) / b
+                };
+                self.write_fp(inst.dst.unwrap(), v);
+            }
+            Fsqrt => {
+                let v = self.read_fp(inst.src1.unwrap()).abs().sqrt();
+                self.write_fp(inst.dst.unwrap(), v);
+            }
+            Fcmp => {
+                let v = (self.read_fp(inst.src1.unwrap()) - self.fp_src2(&inst)).signum();
+                self.write_int(inst.dst.unwrap(), v as i64);
+            }
+            Fmov => {
+                let v = self.read_fp(inst.src1.unwrap());
+                self.write_fp(inst.dst.unwrap(), v);
+            }
+            Fcvt => {
+                // Direction from register kinds: int->fp or fp->int.
+                let s = inst.src1.unwrap();
+                let d = inst.dst.unwrap();
+                if d.is_fp() {
+                    let v = self.read_int(s) as f64;
+                    self.write_fp(d, v);
+                } else {
+                    let v = self.read_fp(s);
+                    let v = if v.is_finite() { v as i64 } else { 0 };
+                    self.write_int(d, v);
+                }
+            }
+            Ldr | Ldrw | Ldrb => {
+                let width = inst.mem_width().unwrap().bytes();
+                mem_addr = self.effective_addr(&inst);
+                mem_bytes = width as u8;
+                let v = self.load(mem_addr, width);
+                let d = inst.dst.unwrap();
+                if d.is_fp() {
+                    self.regs[d.index()] = v;
+                } else {
+                    self.write_int(d, v as i64);
+                }
+            }
+            Str | Strw | Strb => {
+                let width = inst.mem_width().unwrap().bytes();
+                mem_addr = self.effective_addr(&inst);
+                mem_bytes = width as u8;
+                let v = self.regs[inst.src3.unwrap().index()];
+                self.store(mem_addr, width, v);
+            }
+            B => {
+                taken = true;
+                next = inst.target.unwrap();
+            }
+            Bl => {
+                taken = true;
+                self.write_int(inst.dst.unwrap_or(Reg::x(30)), (index + 1) as i64);
+                next = inst.target.unwrap();
+            }
+            Ret => {
+                taken = true;
+                let t = self.read_int(inst.src1.unwrap());
+                next = if t >= 0 && (t as usize) < self.program.insts.len() {
+                    t as usize
+                } else {
+                    self.program.insts.len() // halt
+                };
+            }
+            Bcond => {
+                let a = self.read_int(inst.src1.unwrap());
+                let b = inst.src2.map(|r| self.read_int(r)).unwrap_or(inst.imm);
+                taken = inst.cond.unwrap().eval(a, b);
+                if taken {
+                    next = inst.target.unwrap();
+                }
+            }
+            Cbz => {
+                taken = self.read_int(inst.src1.unwrap()) == 0;
+                if taken {
+                    next = inst.target.unwrap();
+                }
+            }
+            Cbnz => {
+                taken = self.read_int(inst.src1.unwrap()) != 0;
+                if taken {
+                    next = inst.target.unwrap();
+                }
+            }
+            Nop => {}
+        }
+
+        let mut reg_bitmap = 0u64;
+        for r in inst.registers() {
+            reg_bitmap |= 1u64 << r.index();
+        }
+
+        self.committed += 1;
+        let next_index = if next < self.program.insts.len() {
+            Some(next)
+        } else {
+            None
+        };
+        self.pc_index = next_index;
+
+        Some(Executed {
+            index,
+            next_index,
+            record: FuncRecord {
+                pc,
+                opcode: inst.opcode,
+                reg_bitmap,
+                mem_addr,
+                mem_bytes,
+                taken,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Condition, Instruction, Opcode, Program, Reg};
+
+    fn prog(insts: Vec<Instruction>) -> Program {
+        Program {
+            name: "t".into(),
+            insts,
+            data_size: 256,
+            init_words: vec![(0, 0xDEADBEEF), (8, 7)],
+            init_regs: vec![],
+        }
+    }
+
+    fn run_machine(p: &Program, steps: usize) -> Machine {
+        let mut m = Machine::new(p);
+        for _ in 0..steps {
+            if m.step().is_none() {
+                break;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn arithmetic_semantics() {
+        let p = prog(vec![
+            Instruction::new(Opcode::Movi).dst(Reg::x(1)).imm(6),
+            Instruction::new(Opcode::Movi).dst(Reg::x(2)).imm(7),
+            Instruction::new(Opcode::Mul)
+                .dst(Reg::x(3))
+                .src1(Reg::x(1))
+                .src2(Reg::x(2)),
+            Instruction::new(Opcode::Madd)
+                .dst(Reg::x(4))
+                .src1(Reg::x(1))
+                .src2(Reg::x(2))
+                .src3(Reg::x(3)),
+            Instruction::new(Opcode::Div)
+                .dst(Reg::x(5))
+                .src1(Reg::x(3))
+                .imm(6),
+        ]);
+        let m = run_machine(&p, 10);
+        assert_eq!(m.read_int(Reg::x(3)), 42);
+        assert_eq!(m.read_int(Reg::x(4)), 84);
+        assert_eq!(m.read_int(Reg::x(5)), 7);
+    }
+
+    #[test]
+    fn divide_by_zero_yields_zero() {
+        let p = prog(vec![
+            Instruction::new(Opcode::Movi).dst(Reg::x(1)).imm(5),
+            Instruction::new(Opcode::Div)
+                .dst(Reg::x(2))
+                .src1(Reg::x(1))
+                .src2(Reg::x(3)), // x3 == 0
+        ]);
+        let m = run_machine(&p, 2);
+        assert_eq!(m.read_int(Reg::x(2)), 0);
+    }
+
+    #[test]
+    fn load_store_round_trip() {
+        let p = prog(vec![
+            Instruction::new(Opcode::Movi)
+                .dst(Reg::x(1))
+                .imm(crate::isa::inst::DATA_BASE as i64),
+            Instruction::new(Opcode::Movi).dst(Reg::x(2)).imm(1234),
+            Instruction::new(Opcode::Str)
+                .src1(Reg::x(1))
+                .imm(16)
+                .src3(Reg::x(2)),
+            Instruction::new(Opcode::Ldr)
+                .dst(Reg::x(3))
+                .src1(Reg::x(1))
+                .imm(16),
+        ]);
+        let m = run_machine(&p, 4);
+        assert_eq!(m.read_int(Reg::x(3)), 1234);
+    }
+
+    #[test]
+    fn init_words_visible_to_loads() {
+        let p = prog(vec![
+            Instruction::new(Opcode::Movi)
+                .dst(Reg::x(1))
+                .imm(crate::isa::inst::DATA_BASE as i64),
+            Instruction::new(Opcode::Ldr)
+                .dst(Reg::x(2))
+                .src1(Reg::x(1))
+                .imm(8),
+        ]);
+        let m = run_machine(&p, 2);
+        assert_eq!(m.read_int(Reg::x(2)), 7);
+    }
+
+    #[test]
+    fn byte_store_masks() {
+        let p = prog(vec![
+            Instruction::new(Opcode::Movi)
+                .dst(Reg::x(1))
+                .imm(crate::isa::inst::DATA_BASE as i64),
+            Instruction::new(Opcode::Movi).dst(Reg::x(2)).imm(0x1FF),
+            Instruction::new(Opcode::Strb)
+                .src1(Reg::x(1))
+                .imm(32)
+                .src3(Reg::x(2)),
+            Instruction::new(Opcode::Ldrb)
+                .dst(Reg::x(3))
+                .src1(Reg::x(1))
+                .imm(32),
+        ]);
+        let m = run_machine(&p, 4);
+        assert_eq!(m.read_int(Reg::x(3)), 0xFF);
+    }
+
+    #[test]
+    fn fp_semantics() {
+        let p = prog(vec![
+            Instruction::new(Opcode::Movi).dst(Reg::x(1)).imm(3),
+            Instruction::new(Opcode::Fcvt).dst(Reg::f(0)).src1(Reg::x(1)),
+            Instruction::new(Opcode::Fmul)
+                .dst(Reg::f(1))
+                .src1(Reg::f(0))
+                .src2(Reg::f(0)),
+            Instruction::new(Opcode::Fsqrt).dst(Reg::f(2)).src1(Reg::f(1)),
+            Instruction::new(Opcode::Fcvt).dst(Reg::x(2)).src1(Reg::f(2)),
+        ]);
+        let m = run_machine(&p, 5);
+        assert_eq!(m.read_int(Reg::x(2)), 3);
+        assert!((m.read_fp(Reg::f(1)) - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conditional_branch_taken_and_not() {
+        let p = prog(vec![
+            Instruction::new(Opcode::Movi).dst(Reg::x(1)).imm(1),
+            Instruction::new(Opcode::Bcond)
+                .src1(Reg::x(1))
+                .imm(0)
+                .cond(Condition::Gt)
+                .target(3),
+            Instruction::new(Opcode::Movi).dst(Reg::x(2)).imm(111), // skipped
+            Instruction::new(Opcode::Movi).dst(Reg::x(3)).imm(222),
+        ]);
+        let m = run_machine(&p, 10);
+        assert_eq!(m.read_int(Reg::x(2)), 0);
+        assert_eq!(m.read_int(Reg::x(3)), 222);
+    }
+
+    #[test]
+    fn call_and_return() {
+        // 0: bl @3 ; 1: movi x5, 99 ; 2: b @5(end) ; 3: movi x4, 7 ; 4: ret x30; 5: nop
+        let p = prog(vec![
+            Instruction::new(Opcode::Bl).dst(Reg::x(30)).target(3),
+            Instruction::new(Opcode::Movi).dst(Reg::x(5)).imm(99),
+            Instruction::new(Opcode::B).target(5),
+            Instruction::new(Opcode::Movi).dst(Reg::x(4)).imm(7),
+            Instruction::new(Opcode::Ret).src1(Reg::x(30)),
+            Instruction::new(Opcode::Nop),
+        ]);
+        let m = run_machine(&p, 20);
+        assert_eq!(m.read_int(Reg::x(4)), 7);
+        assert_eq!(m.read_int(Reg::x(5)), 99);
+        assert_eq!(m.committed(), 6);
+    }
+
+    #[test]
+    fn halts_at_program_end() {
+        let p = prog(vec![Instruction::new(Opcode::Nop)]);
+        let mut m = Machine::new(&p);
+        assert!(m.step().is_some());
+        assert!(m.step().is_none());
+        assert_eq!(m.pc_index(), None);
+    }
+
+    #[test]
+    fn effective_addr_clamped_and_aligned() {
+        let p = prog(vec![Instruction::new(Opcode::Nop)]);
+        let m = Machine::new(&p);
+        let inst = Instruction::new(Opcode::Ldr)
+            .dst(Reg::x(0))
+            .src1(Reg::x(9)) // x9 = 0 -> raw addr way below DATA_BASE
+            .imm(3); // misaligned
+        let addr = m.effective_addr(&inst);
+        assert!(addr >= crate::isa::inst::DATA_BASE);
+        assert!(addr + 8 <= crate::isa::inst::DATA_BASE + 256);
+        assert_eq!(addr % 8, 0);
+    }
+}

@@ -1,0 +1,138 @@
+//! Functional simulation — the `AtomicSimpleCPU` equivalent.
+//!
+//! [`Machine`] is the architectural core: register file, data memory, and
+//! instruction semantics. The functional simulator ([`FunctionalSim`])
+//! drives it one instruction per "cycle" and emits the microarchitecture
+//! agnostic functional trace. The detailed out-of-order model
+//! (`crate::detailed`) reuses the same `Machine` for correct-path
+//! semantics so both trace kinds are guaranteed to commit the *same*
+//! instruction stream — the property §4.1's alignment workflow depends on.
+
+pub mod machine;
+
+pub use machine::{Executed, Machine};
+
+use crate::isa::Program;
+use crate::trace::{FuncRecord, FunctionalTrace};
+
+/// Functional simulator: executes a program atomically (1 instruction per
+/// step, no timing) and records the committed stream.
+pub struct FunctionalSim {
+    machine: Machine,
+}
+
+impl FunctionalSim {
+    /// Build a simulator over `program`.
+    pub fn new(program: &Program) -> FunctionalSim {
+        FunctionalSim {
+            machine: Machine::new(program),
+        }
+    }
+
+    /// Run up to `max_insts` instructions (or until the program halts) and
+    /// return the functional trace.
+    pub fn run(mut self, max_insts: u64) -> FunctionalTrace {
+        let mut records = Vec::with_capacity(max_insts.min(1 << 24) as usize);
+        while (records.len() as u64) < max_insts {
+            match self.machine.step() {
+                Some(exec) => records.push(exec.record),
+                None => break,
+            }
+        }
+        FunctionalTrace {
+            name: self.machine.program_name().to_string(),
+            records,
+        }
+    }
+
+    /// Streaming variant: invoke `sink` per committed record; returns the
+    /// number of instructions executed. Used by the coordinator's
+    /// generate-and-simulate path to avoid materializing the trace.
+    pub fn run_streaming(
+        mut self,
+        max_insts: u64,
+        mut sink: impl FnMut(FuncRecord),
+    ) -> u64 {
+        let mut n = 0u64;
+        while n < max_insts {
+            match self.machine.step() {
+                Some(exec) => {
+                    sink(exec.record);
+                    n += 1;
+                }
+                None => break,
+            }
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Instruction, Opcode, Program, Reg};
+
+    /// x1 = 5; loop { x2 += x1; x1 -= 1 } while x1 != 0
+    fn countdown_program() -> Program {
+        Program {
+            name: "countdown".into(),
+            insts: vec![
+                Instruction::new(Opcode::Movi).dst(Reg::x(1)).imm(5),
+                Instruction::new(Opcode::Add)
+                    .dst(Reg::x(2))
+                    .src1(Reg::x(2))
+                    .src2(Reg::x(1)),
+                Instruction::new(Opcode::Subs)
+                    .dst(Reg::x(1))
+                    .src1(Reg::x(1))
+                    .imm(1),
+                Instruction::new(Opcode::Cbnz).src1(Reg::x(1)).target(1),
+                Instruction::new(Opcode::Nop),
+            ],
+            data_size: 0,
+            init_words: vec![],
+            init_regs: vec![],
+        }
+    }
+
+    #[test]
+    fn countdown_executes_expected_stream() {
+        let p = countdown_program();
+        let t = FunctionalSim::new(&p).run(1000);
+        // 1 movi + 5*(add,subs,cbnz) + nop = 17, then falls off the end.
+        assert_eq!(t.records.len(), 17);
+        // Branch taken 4 times, not-taken once.
+        let takens: Vec<bool> = t
+            .records
+            .iter()
+            .filter(|r| r.opcode == Opcode::Cbnz)
+            .map(|r| r.taken)
+            .collect();
+        assert_eq!(takens, vec![true, true, true, true, false]);
+    }
+
+    #[test]
+    fn max_insts_truncates() {
+        let p = countdown_program();
+        let t = FunctionalSim::new(&p).run(7);
+        assert_eq!(t.records.len(), 7);
+    }
+
+    #[test]
+    fn streaming_matches_batch() {
+        let p = countdown_program();
+        let batch = FunctionalSim::new(&p).run(1000);
+        let mut streamed = Vec::new();
+        let n = FunctionalSim::new(&p).run_streaming(1000, |r| streamed.push(r));
+        assert_eq!(n as usize, batch.records.len());
+        assert_eq!(streamed, batch.records);
+    }
+
+    #[test]
+    fn trace_is_deterministic() {
+        let p = countdown_program();
+        let a = FunctionalSim::new(&p).run(1000);
+        let b = FunctionalSim::new(&p).run(1000);
+        assert_eq!(a.records, b.records);
+    }
+}

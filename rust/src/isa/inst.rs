@@ -1,0 +1,389 @@
+//! Instruction and program representation.
+//!
+//! Instructions carry exactly the static property surface the paper's
+//! feature engineering consumes (§4.2): opcode, source/destination
+//! registers, PC address, and (dynamically, via the simulators) the data
+//! access address. Branch targets are instruction indices; the PC of
+//! instruction `i` is `TEXT_BASE + 4*i`, mirroring a fixed-width ISA.
+
+use super::opcode::{Condition, Opcode};
+use super::regs::Reg;
+use std::fmt;
+
+/// Base virtual address of the text segment (instruction PCs).
+pub const TEXT_BASE: u64 = 0x0040_0000;
+/// Base virtual address of the data segment (memory operand addresses).
+pub const DATA_BASE: u64 = 0x1000_0000;
+/// Instruction width in bytes (fixed-width ISA).
+pub const INST_BYTES: u64 = 4;
+
+/// Width of a memory access in bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemWidth {
+    /// 1 byte.
+    Byte,
+    /// 4 bytes.
+    Word,
+    /// 8 bytes.
+    Double,
+}
+
+impl MemWidth {
+    /// Access size in bytes.
+    pub fn bytes(self) -> u64 {
+        match self {
+            MemWidth::Byte => 1,
+            MemWidth::Word => 4,
+            MemWidth::Double => 8,
+        }
+    }
+}
+
+/// A source operand: either a register or an immediate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Operand {
+    /// Register operand.
+    Reg(Reg),
+    /// Immediate operand.
+    Imm(i64),
+}
+
+/// A single TaoISA instruction.
+///
+/// Operand conventions (enforced by [`Instruction::validate`]):
+/// * ALU: `dst = op(src1, src2|imm)`; `Madd`/`Fmadd` also read `src3`.
+/// * Loads: `dst = mem[r(src1) + imm (+ r(src2))]`.
+/// * Stores: `mem[r(src1) + imm (+ r(src2))] = r(src3)`.
+/// * `Bcond`: branch to `target` if `cond(r(src1), r(src2))`.
+/// * `Cbz`/`Cbnz`: branch to `target` on `r(src1) == 0` / `!= 0`.
+/// * `B`/`Bl`: unconditional; `Bl` writes the return index to `x30`.
+/// * `Ret`: jump to index stored in `r(src1)` (conventionally `x30`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Instruction {
+    /// Operation.
+    pub opcode: Opcode,
+    /// Destination register, if any.
+    pub dst: Option<Reg>,
+    /// First source register (base register for memory ops).
+    pub src1: Option<Reg>,
+    /// Second source register (index register for memory ops).
+    pub src2: Option<Reg>,
+    /// Third source register (store data / multiply-add addend).
+    pub src3: Option<Reg>,
+    /// Immediate operand / memory offset.
+    pub imm: i64,
+    /// Condition code for `Bcond` / `Csel`.
+    pub cond: Option<Condition>,
+    /// Branch target (instruction index within the program).
+    pub target: Option<usize>,
+}
+
+impl Instruction {
+    /// A new instruction with no operands; builder-style setters fill in
+    /// the rest.
+    pub fn new(opcode: Opcode) -> Instruction {
+        Instruction {
+            opcode,
+            dst: None,
+            src1: None,
+            src2: None,
+            src3: None,
+            imm: 0,
+            cond: None,
+            target: None,
+        }
+    }
+
+    /// Set the destination register.
+    pub fn dst(mut self, r: Reg) -> Self {
+        self.dst = Some(r);
+        self
+    }
+
+    /// Set the first source register.
+    pub fn src1(mut self, r: Reg) -> Self {
+        self.src1 = Some(r);
+        self
+    }
+
+    /// Set the second source register.
+    pub fn src2(mut self, r: Reg) -> Self {
+        self.src2 = Some(r);
+        self
+    }
+
+    /// Set the third source register.
+    pub fn src3(mut self, r: Reg) -> Self {
+        self.src3 = Some(r);
+        self
+    }
+
+    /// Set the immediate operand.
+    pub fn imm(mut self, v: i64) -> Self {
+        self.imm = v;
+        self
+    }
+
+    /// Set the condition code.
+    pub fn cond(mut self, c: Condition) -> Self {
+        self.cond = Some(c);
+        self
+    }
+
+    /// Set the branch target (instruction index).
+    pub fn target(mut self, t: usize) -> Self {
+        self.target = Some(t);
+        self
+    }
+
+    /// Memory access width, if this is a load/store.
+    pub fn mem_width(&self) -> Option<MemWidth> {
+        use Opcode::*;
+        match self.opcode {
+            Ldr | Str => Some(MemWidth::Double),
+            Ldrw | Strw => Some(MemWidth::Word),
+            Ldrb | Strb => Some(MemWidth::Byte),
+            _ => None,
+        }
+    }
+
+    /// Source registers actually read by this instruction, in operand
+    /// order. Used for dependency tracking and the register bitmap.
+    pub fn sources(&self) -> impl Iterator<Item = Reg> + '_ {
+        [self.src1, self.src2, self.src3].into_iter().flatten()
+    }
+
+    /// All registers touched (sources + destination) — the paper's
+    /// register bitmap includes both.
+    pub fn registers(&self) -> impl Iterator<Item = Reg> + '_ {
+        [self.src1, self.src2, self.src3, self.dst]
+            .into_iter()
+            .flatten()
+    }
+
+    /// Structural validity check; returns a description of the first
+    /// problem found.
+    pub fn validate(&self) -> Result<(), String> {
+        let op = self.opcode;
+        if op.is_load() && self.dst.is_none() {
+            return Err(format!("{op}: load without destination"));
+        }
+        if op.is_load() && self.src1.is_none() {
+            return Err(format!("{op}: load without base register"));
+        }
+        if op.is_store() && (self.src1.is_none() || self.src3.is_none()) {
+            return Err(format!("{op}: store needs base (src1) and data (src3)"));
+        }
+        if op.is_branch() && op != Opcode::Ret && self.target.is_none() {
+            return Err(format!("{op}: branch without target"));
+        }
+        if op == Opcode::Ret && self.src1.is_none() {
+            return Err("ret: missing link register".into());
+        }
+        if matches!(op, Opcode::Bcond | Opcode::Csel) && self.cond.is_none() {
+            return Err(format!("{op}: missing condition code"));
+        }
+        if matches!(op, Opcode::Cbz | Opcode::Cbnz | Opcode::Bcond) && self.src1.is_none() {
+            return Err(format!("{op}: conditional branch without source"));
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Instruction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.opcode)?;
+        if let Some(c) = self.cond {
+            if self.opcode == Opcode::Bcond {
+                write!(f, ".{c}")?;
+            }
+        }
+        let mut sep = " ";
+        if let Some(d) = self.dst {
+            write!(f, "{sep}{d}")?;
+            sep = ", ";
+        }
+        for s in self.sources() {
+            write!(f, "{sep}{s}")?;
+            sep = ", ";
+        }
+        if self.imm != 0 || self.opcode == Opcode::Movi {
+            write!(f, "{sep}#{}", self.imm)?;
+            sep = ", ";
+        }
+        if let Some(t) = self.target {
+            write!(f, "{sep}@{t}")?;
+        }
+        Ok(())
+    }
+}
+
+/// A static program: a straight array of instructions plus an initial
+/// data-memory image. Produced by `crate::workloads`, consumed by both
+/// simulators.
+#[derive(Debug, Clone)]
+pub struct Program {
+    /// Benchmark name (e.g. `"mcf"`).
+    pub name: String,
+    /// Static instruction array; PC of `insts[i]` is `TEXT_BASE + 4*i`.
+    pub insts: Vec<Instruction>,
+    /// Size of the data segment in bytes.
+    pub data_size: u64,
+    /// Initial 8-byte words in the data segment: `(offset, value)` pairs
+    /// relative to [`DATA_BASE`].
+    pub init_words: Vec<(u64, u64)>,
+    /// Initial register values applied before execution.
+    pub init_regs: Vec<(Reg, u64)>,
+}
+
+impl Program {
+    /// PC of the instruction at `index`.
+    pub fn pc_of(index: usize) -> u64 {
+        TEXT_BASE + index as u64 * INST_BYTES
+    }
+
+    /// Instruction index of a PC, if it lies in this program's text.
+    pub fn index_of(&self, pc: u64) -> Option<usize> {
+        if pc < TEXT_BASE || (pc - TEXT_BASE) % INST_BYTES != 0 {
+            return None;
+        }
+        let idx = ((pc - TEXT_BASE) / INST_BYTES) as usize;
+        (idx < self.insts.len()).then_some(idx)
+    }
+
+    /// Number of static instructions.
+    pub fn len(&self) -> usize {
+        self.insts.len()
+    }
+
+    /// True if the program has no instructions.
+    pub fn is_empty(&self) -> bool {
+        self.insts.is_empty()
+    }
+
+    /// Validate every instruction and all branch targets.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.insts.is_empty() {
+            return Err("empty program".into());
+        }
+        for (i, inst) in self.insts.iter().enumerate() {
+            inst.validate().map_err(|e| format!("inst {i}: {e}"))?;
+            if let Some(t) = inst.target {
+                if t >= self.insts.len() {
+                    return Err(format!("inst {i}: branch target {t} out of range"));
+                }
+            }
+        }
+        for &(off, _) in &self.init_words {
+            if off + 8 > self.data_size {
+                return Err(format!("init word at {off} beyond data size {}", self.data_size));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::regs::Reg;
+
+    fn sample_program() -> Program {
+        Program {
+            name: "t".into(),
+            insts: vec![
+                Instruction::new(Opcode::Movi).dst(Reg::x(1)).imm(5),
+                Instruction::new(Opcode::Subs)
+                    .dst(Reg::x(1))
+                    .src1(Reg::x(1))
+                    .imm(1),
+                Instruction::new(Opcode::Cbnz).src1(Reg::x(1)).target(1),
+                Instruction::new(Opcode::Nop),
+            ],
+            data_size: 64,
+            init_words: vec![(0, 42)],
+            init_regs: vec![],
+        }
+    }
+
+    #[test]
+    fn pc_index_round_trip() {
+        let p = sample_program();
+        for i in 0..p.len() {
+            assert_eq!(p.index_of(Program::pc_of(i)), Some(i));
+        }
+        assert_eq!(p.index_of(TEXT_BASE - 4), None);
+        assert_eq!(p.index_of(TEXT_BASE + 1), None);
+        assert_eq!(p.index_of(Program::pc_of(p.len())), None);
+    }
+
+    #[test]
+    fn validate_accepts_well_formed() {
+        sample_program().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_target() {
+        let mut p = sample_program();
+        p.insts[2].target = Some(99);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_load_without_base() {
+        let i = Instruction::new(Opcode::Ldr).dst(Reg::x(0));
+        assert!(i.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_store_without_data() {
+        let i = Instruction::new(Opcode::Str).src1(Reg::x(0));
+        assert!(i.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_branch_without_target() {
+        let i = Instruction::new(Opcode::B);
+        assert!(i.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_init_word_out_of_range() {
+        let mut p = sample_program();
+        p.init_words.push((60, 1)); // needs bytes 60..68 > 64
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn mem_width_by_opcode() {
+        assert_eq!(Instruction::new(Opcode::Ldr).mem_width(), Some(MemWidth::Double));
+        assert_eq!(Instruction::new(Opcode::Strw).mem_width(), Some(MemWidth::Word));
+        assert_eq!(Instruction::new(Opcode::Ldrb).mem_width(), Some(MemWidth::Byte));
+        assert_eq!(Instruction::new(Opcode::Add).mem_width(), None);
+    }
+
+    #[test]
+    fn registers_iterates_all_operands() {
+        let i = Instruction::new(Opcode::Madd)
+            .dst(Reg::x(0))
+            .src1(Reg::x(1))
+            .src2(Reg::x(2))
+            .src3(Reg::x(3));
+        let regs: Vec<Reg> = i.registers().collect();
+        assert_eq!(regs.len(), 4);
+        let srcs: Vec<Reg> = i.sources().collect();
+        assert_eq!(srcs, vec![Reg::x(1), Reg::x(2), Reg::x(3)]);
+    }
+
+    #[test]
+    fn display_is_readable() {
+        let i = Instruction::new(Opcode::Bcond)
+            .src1(Reg::x(1))
+            .src2(Reg::x(2))
+            .cond(Condition::Le)
+            .target(7);
+        let s = i.to_string();
+        assert!(s.contains("b.cond.le"), "{s}");
+        assert!(s.contains("@7"), "{s}");
+    }
+}

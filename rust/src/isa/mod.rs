@@ -1,0 +1,21 @@
+//! TaoISA — a compact ARM-like RISC instruction set.
+//!
+//! This is the ISA substrate under the whole reproduction: the synthetic
+//! benchmark programs (`crate::workloads`) are authored in it, the
+//! functional simulator (`crate::functional`, the `AtomicSimpleCPU`
+//! stand-in) interprets it, and the detailed out-of-order model
+//! (`crate::detailed`, the `O3CPU` stand-in) times it.
+//!
+//! The paper traces SPEC CPU2017 compiled for AArch64 through gem5; the
+//! DL pipeline only ever observes *static instruction properties* (opcode,
+//! register set, PC, memory address) plus dynamic performance metrics, so
+//! a compact ISA with the same property surface exercises every downstream
+//! code path (feature engineering §4.2, dataset construction §4.1).
+
+pub mod inst;
+pub mod opcode;
+pub mod regs;
+
+pub use inst::{Instruction, MemWidth, Operand, Program};
+pub use opcode::{Condition, Opcode, OpcodeClass};
+pub use regs::{Reg, NUM_REGS};

@@ -1,0 +1,377 @@
+//! Opcodes and opcode classes for TaoISA.
+//!
+//! The opcode enumeration is the vocabulary of the DL model's opcode
+//! embedding table (paper §4.2: "for opcode, we employ an integer mapping
+//! for each unique opcode in the dataset"). `Opcode::index()` is that
+//! integer mapping and is stable across runs — it is recorded in the AOT
+//! artifact metadata and validated by the Rust loader.
+
+use std::fmt;
+
+/// Condition codes for conditional branches (`B.cond`) and conditional
+/// selects (`CSEL`). Evaluated against the two source operands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Condition {
+    /// Equal.
+    Eq,
+    /// Not equal.
+    Ne,
+    /// Signed less than.
+    Lt,
+    /// Signed less or equal.
+    Le,
+    /// Signed greater than.
+    Gt,
+    /// Signed greater or equal.
+    Ge,
+}
+
+impl Condition {
+    /// All condition codes, in encoding order.
+    pub const ALL: [Condition; 6] = [
+        Condition::Eq,
+        Condition::Ne,
+        Condition::Lt,
+        Condition::Le,
+        Condition::Gt,
+        Condition::Ge,
+    ];
+
+    /// Evaluate the condition over two signed integer operands.
+    pub fn eval(self, a: i64, b: i64) -> bool {
+        match self {
+            Condition::Eq => a == b,
+            Condition::Ne => a != b,
+            Condition::Lt => a < b,
+            Condition::Le => a <= b,
+            Condition::Gt => a > b,
+            Condition::Ge => a >= b,
+        }
+    }
+
+    /// Stable encoding index.
+    pub fn index(self) -> usize {
+        match self {
+            Condition::Eq => 0,
+            Condition::Ne => 1,
+            Condition::Lt => 2,
+            Condition::Le => 3,
+            Condition::Gt => 4,
+            Condition::Ge => 5,
+        }
+    }
+
+    /// Inverse of [`Condition::index`].
+    pub fn from_index(i: usize) -> Condition {
+        Condition::ALL[i]
+    }
+}
+
+impl fmt::Display for Condition {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Condition::Eq => "eq",
+            Condition::Ne => "ne",
+            Condition::Lt => "lt",
+            Condition::Le => "le",
+            Condition::Gt => "gt",
+            Condition::Ge => "ge",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Coarse opcode class. Drives execution-unit selection and latency in the
+/// detailed model, and instruction-mix statistics in the workload reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpcodeClass {
+    /// Integer ALU (add/sub/logic/shift/compare/move).
+    IntAlu,
+    /// Integer multiply.
+    IntMul,
+    /// Integer divide.
+    IntDiv,
+    /// Floating point add/sub/compare/move.
+    FpAlu,
+    /// Floating point multiply / fused multiply-add.
+    FpMul,
+    /// Floating point divide / sqrt.
+    FpDiv,
+    /// Memory load.
+    Load,
+    /// Memory store.
+    Store,
+    /// Control flow (branches, calls, returns).
+    Branch,
+    /// No-operation.
+    Nop,
+}
+
+/// TaoISA opcode set.
+///
+/// Deliberately shaped like the AArch64 subset gem5 traces expose:
+/// integer/FP arithmetic, loads/stores of two widths, conditional and
+/// unconditional control flow, and `NOP` (which the detailed model also
+/// injects for pipeline stalls, per paper §4.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Opcode {
+    // --- integer ALU ---
+    Add,
+    Sub,
+    Adds, // add, setting flags (used before conditional branches)
+    Subs, // subtract, setting flags
+    Mul,
+    Madd, // multiply-add
+    Div,
+    And,
+    Orr,
+    Eor,
+    Lsl,
+    Lsr,
+    Asr,
+    Cmp,
+    Mov,
+    Movi, // move immediate
+    Csel, // conditional select
+    // --- floating point ---
+    Fadd,
+    Fsub,
+    Fmul,
+    Fmadd,
+    Fdiv,
+    Fsqrt,
+    Fcmp,
+    Fmov,
+    Fcvt, // int<->fp convert
+    // --- memory ---
+    Ldr,  // load 8 bytes
+    Ldrw, // load 4 bytes
+    Ldrb, // load 1 byte
+    Str,  // store 8 bytes
+    Strw, // store 4 bytes
+    Strb, // store 1 byte
+    // --- control flow ---
+    B,    // unconditional branch
+    Bcond, // conditional branch (B.cond)
+    Cbz,  // compare-and-branch on zero
+    Cbnz, // compare-and-branch on non-zero
+    Bl,   // branch and link (call)
+    Ret,  // return
+    // --- misc ---
+    Nop,
+}
+
+impl Opcode {
+    /// All opcodes in stable encoding order. The position in this array is
+    /// the integer opcode id used by the embedding lookup table.
+    pub const ALL: [Opcode; 39] = [
+        Opcode::Add,
+        Opcode::Sub,
+        Opcode::Adds,
+        Opcode::Subs,
+        Opcode::Mul,
+        Opcode::Madd,
+        Opcode::Div,
+        Opcode::And,
+        Opcode::Orr,
+        Opcode::Eor,
+        Opcode::Lsl,
+        Opcode::Lsr,
+        Opcode::Asr,
+        Opcode::Cmp,
+        Opcode::Mov,
+        Opcode::Movi,
+        Opcode::Csel,
+        Opcode::Fadd,
+        Opcode::Fsub,
+        Opcode::Fmul,
+        Opcode::Fmadd,
+        Opcode::Fdiv,
+        Opcode::Fsqrt,
+        Opcode::Fcmp,
+        Opcode::Fmov,
+        Opcode::Fcvt,
+        Opcode::Ldr,
+        Opcode::Ldrw,
+        Opcode::Ldrb,
+        Opcode::Str,
+        Opcode::Strw,
+        Opcode::Strb,
+        Opcode::B,
+        Opcode::Bcond,
+        Opcode::Cbz,
+        Opcode::Cbnz,
+        Opcode::Bl,
+        Opcode::Ret,
+        Opcode::Nop,
+    ];
+
+    /// Number of distinct opcodes — the opcode embedding vocabulary size.
+    pub const COUNT: usize = Self::ALL.len();
+
+    /// Stable integer id (the paper's "integer mapping for each unique
+    /// opcode").
+    pub fn index(self) -> usize {
+        Self::ALL
+            .iter()
+            .position(|&op| op == self)
+            .expect("opcode present in ALL")
+    }
+
+    /// Inverse of [`Opcode::index`].
+    pub fn from_index(i: usize) -> Opcode {
+        Self::ALL[i]
+    }
+
+    /// Coarse class of the opcode.
+    pub fn class(self) -> OpcodeClass {
+        use Opcode::*;
+        match self {
+            Add | Sub | Adds | Subs | And | Orr | Eor | Lsl | Lsr | Asr | Cmp | Mov | Movi
+            | Csel => OpcodeClass::IntAlu,
+            Mul | Madd => OpcodeClass::IntMul,
+            Div => OpcodeClass::IntDiv,
+            Fadd | Fsub | Fcmp | Fmov | Fcvt => OpcodeClass::FpAlu,
+            Fmul | Fmadd => OpcodeClass::FpMul,
+            Fdiv | Fsqrt => OpcodeClass::FpDiv,
+            Ldr | Ldrw | Ldrb => OpcodeClass::Load,
+            Str | Strw | Strb => OpcodeClass::Store,
+            B | Bcond | Cbz | Cbnz | Bl | Ret => OpcodeClass::Branch,
+            Nop => OpcodeClass::Nop,
+        }
+    }
+
+    /// True for loads and stores.
+    pub fn is_mem(self) -> bool {
+        matches!(self.class(), OpcodeClass::Load | OpcodeClass::Store)
+    }
+
+    /// True for loads.
+    pub fn is_load(self) -> bool {
+        self.class() == OpcodeClass::Load
+    }
+
+    /// True for stores.
+    pub fn is_store(self) -> bool {
+        self.class() == OpcodeClass::Store
+    }
+
+    /// True for any control-flow instruction.
+    pub fn is_branch(self) -> bool {
+        self.class() == OpcodeClass::Branch
+    }
+
+    /// True for *conditional* control flow — the instructions the branch
+    /// history feature (paper Figure 4) tracks.
+    pub fn is_cond_branch(self) -> bool {
+        matches!(self, Opcode::Bcond | Opcode::Cbz | Opcode::Cbnz)
+    }
+
+    /// Mnemonic for trace text output.
+    pub fn mnemonic(self) -> &'static str {
+        use Opcode::*;
+        match self {
+            Add => "add",
+            Sub => "sub",
+            Adds => "adds",
+            Subs => "subs",
+            Mul => "mul",
+            Madd => "madd",
+            Div => "sdiv",
+            And => "and",
+            Orr => "orr",
+            Eor => "eor",
+            Lsl => "lsl",
+            Lsr => "lsr",
+            Asr => "asr",
+            Cmp => "cmp",
+            Mov => "mov",
+            Movi => "movi",
+            Csel => "csel",
+            Fadd => "fadd",
+            Fsub => "fsub",
+            Fmul => "fmul",
+            Fmadd => "fmadd",
+            Fdiv => "fdiv",
+            Fsqrt => "fsqrt",
+            Fcmp => "fcmp",
+            Fmov => "fmov",
+            Fcvt => "fcvt",
+            Ldr => "ldr",
+            Ldrw => "ldrw",
+            Ldrb => "ldrb",
+            Str => "str",
+            Strw => "strw",
+            Strb => "strb",
+            B => "b",
+            Bcond => "b.cond",
+            Cbz => "cbz",
+            Cbnz => "cbnz",
+            Bl => "bl",
+            Ret => "ret",
+            Nop => "nop",
+        }
+    }
+}
+
+impl fmt::Display for Opcode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.mnemonic())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn opcode_index_round_trip() {
+        for i in 0..Opcode::COUNT {
+            assert_eq!(Opcode::from_index(i).index(), i);
+        }
+    }
+
+    #[test]
+    fn opcode_ids_are_unique() {
+        let ids: HashSet<usize> = Opcode::ALL.iter().map(|op| op.index()).collect();
+        assert_eq!(ids.len(), Opcode::COUNT);
+    }
+
+    #[test]
+    fn mnemonics_are_unique() {
+        let names: HashSet<&str> = Opcode::ALL.iter().map(|op| op.mnemonic()).collect();
+        assert_eq!(names.len(), Opcode::COUNT);
+    }
+
+    #[test]
+    fn class_partitions() {
+        assert!(Opcode::Ldr.is_load());
+        assert!(!Opcode::Ldr.is_store());
+        assert!(Opcode::Strb.is_store());
+        assert!(Opcode::Bcond.is_cond_branch());
+        assert!(Opcode::B.is_branch());
+        assert!(!Opcode::B.is_cond_branch());
+        assert!(Opcode::Cbz.is_cond_branch());
+        assert_eq!(Opcode::Nop.class(), OpcodeClass::Nop);
+    }
+
+    #[test]
+    fn condition_eval_matrix() {
+        assert!(Condition::Eq.eval(3, 3));
+        assert!(!Condition::Eq.eval(3, 4));
+        assert!(Condition::Ne.eval(3, 4));
+        assert!(Condition::Lt.eval(-1, 0));
+        assert!(Condition::Le.eval(0, 0));
+        assert!(Condition::Gt.eval(5, 4));
+        assert!(Condition::Ge.eval(4, 4));
+        assert!(!Condition::Lt.eval(0, -1));
+    }
+
+    #[test]
+    fn condition_index_round_trip() {
+        for c in Condition::ALL {
+            assert_eq!(Condition::from_index(c.index()), c);
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! Architectural register file description.
+//!
+//! 32 general-purpose integer registers (`x0..x31`) and 16 floating point
+//! registers (`f0..f15`). The feature-engineering layer builds a bitmap
+//! over all `NUM_REGS` architectural registers (paper §4.2: "a bitmap
+//! vector with a size equal to the total number of registers").
+
+use std::fmt;
+
+/// Number of integer registers (`x0..x31`). `x31` doubles as the stack
+/// pointer by convention in the synthetic workloads; the ISA itself does
+/// not special-case it.
+pub const NUM_INT_REGS: usize = 32;
+/// Number of floating-point registers (`f0..f15`).
+pub const NUM_FP_REGS: usize = 16;
+/// Total architectural registers — the size of the register bitmap input
+/// feature.
+pub const NUM_REGS: usize = NUM_INT_REGS + NUM_FP_REGS;
+
+/// An architectural register. Integer registers occupy indices
+/// `0..NUM_INT_REGS`; FP registers occupy `NUM_INT_REGS..NUM_REGS`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Reg(pub u8);
+
+impl Reg {
+    /// Integer register `xN`.
+    pub const fn x(n: u8) -> Reg {
+        assert!((n as usize) < NUM_INT_REGS);
+        Reg(n)
+    }
+
+    /// Floating-point register `fN`.
+    pub const fn f(n: u8) -> Reg {
+        assert!((n as usize) < NUM_FP_REGS);
+        Reg(n + NUM_INT_REGS as u8)
+    }
+
+    /// True if this is a floating-point register.
+    pub fn is_fp(self) -> bool {
+        (self.0 as usize) >= NUM_INT_REGS
+    }
+
+    /// Flat index into the architectural register bitmap.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+
+    /// Inverse of [`Reg::index`].
+    pub fn from_index(i: usize) -> Reg {
+        assert!(i < NUM_REGS, "register index {i} out of range");
+        Reg(i as u8)
+    }
+}
+
+impl fmt::Display for Reg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_fp() {
+            write!(f, "f{}", self.0 as usize - NUM_INT_REGS)
+        } else {
+            write!(f, "x{}", self.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int_and_fp_registers_do_not_overlap() {
+        assert_ne!(Reg::x(0), Reg::f(0));
+        assert_eq!(Reg::f(0).index(), NUM_INT_REGS);
+        assert_eq!(Reg::x(31).index(), 31);
+        assert_eq!(Reg::f(15).index(), NUM_REGS - 1);
+    }
+
+    #[test]
+    fn display_names() {
+        assert_eq!(Reg::x(3).to_string(), "x3");
+        assert_eq!(Reg::f(7).to_string(), "f7");
+    }
+
+    #[test]
+    fn index_round_trip() {
+        for i in 0..NUM_REGS {
+            assert_eq!(Reg::from_index(i).index(), i);
+        }
+    }
+
+    #[test]
+    fn is_fp_boundary() {
+        assert!(!Reg::x(31).is_fp());
+        assert!(Reg::f(0).is_fp());
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_index_out_of_range_panics() {
+        let _ = Reg::from_index(NUM_REGS);
+    }
+}

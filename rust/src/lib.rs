@@ -1,0 +1,35 @@
+//! # tao-sim — Tao: Re-Thinking DL-based Microarchitecture Simulation
+//!
+//! A full-system reproduction of Tao (Pandey, Yazdanbakhsh, Liu;
+//! SIGMETRICS 2024) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * This crate (Layer 3) holds the simulator substrate — a gem5 stand-in
+//!   with functional (`AtomicSimpleCPU`) and detailed out-of-order
+//!   (`O3CPU`) models — plus the trace pipeline, §4.1 dataset
+//!   construction, §4.2 feature engineering, and the parallel DL-based
+//!   simulation coordinator that executes AOT-compiled JAX/Pallas models
+//!   via PJRT on the request path (Python is build-time only).
+//! * `python/compile/` (Layers 2+1) holds the multi-metric self-attention
+//!   model, the Pallas kernels, training, §4.3 transfer learning, and the
+//!   AOT export to `artifacts/*.hlo.txt`.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index
+//! mapping every paper table/figure to a module and bench target.
+
+pub mod datagen;
+pub mod cli;
+pub mod coordinator;
+pub mod dataset;
+pub mod detailed;
+pub mod dse;
+pub mod features;
+pub mod npy;
+pub mod reports;
+pub mod runtime;
+pub mod stats;
+pub mod functional;
+pub mod isa;
+pub mod trace;
+pub mod uarch;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,9 @@
+//! `tao` — CLI launcher. See `tao_sim::cli` for subcommands.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = tao_sim::cli::run(argv) {
+        eprintln!("tao: error: {e:#}");
+        std::process::exit(1);
+    }
+}

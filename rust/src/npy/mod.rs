@@ -1,0 +1,276 @@
+//! Minimal NumPy `.npy` (format v1.0) writer/reader.
+//!
+//! The interchange between `tao datagen` (Rust) and the build-time
+//! training stack (Python) is plain `.npy` arrays — features, opcode ids
+//! and labels — so the Python side is just `np.load`. Supports the three
+//! dtypes the pipeline needs: `f32`, `i32`, `i64`, in 1-D and 2-D
+//! C-contiguous layouts.
+
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8] = b"\x93NUMPY\x01\x00";
+
+/// Supported element types.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    /// little-endian f32 (`<f4`)
+    F32,
+    /// little-endian i32 (`<i4`)
+    I32,
+    /// little-endian i64 (`<i8`)
+    I64,
+}
+
+impl Dtype {
+    fn descr(self) -> &'static str {
+        match self {
+            Dtype::F32 => "<f4",
+            Dtype::I32 => "<i4",
+            Dtype::I64 => "<i8",
+        }
+    }
+
+    fn size(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::I64 => 8,
+        }
+    }
+
+    fn from_descr(s: &str) -> Result<Dtype> {
+        match s {
+            "<f4" => Ok(Dtype::F32),
+            "<i4" => Ok(Dtype::I32),
+            "<i8" => Ok(Dtype::I64),
+            _ => bail!("unsupported npy dtype {s:?}"),
+        }
+    }
+}
+
+fn write_header(w: &mut impl Write, dtype: Dtype, shape: &[usize]) -> Result<()> {
+    let shape_str = match shape.len() {
+        1 => format!("({},)", shape[0]),
+        _ => format!(
+            "({})",
+            shape
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '{}', 'fortran_order': False, 'shape': {}, }}",
+        dtype.descr(),
+        shape_str
+    );
+    // Pad so that magic(8) + len(2) + header is a multiple of 64.
+    let unpadded = MAGIC.len() + 2 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+    w.write_all(MAGIC)?;
+    w.write_all(&(header.len() as u16).to_le_bytes())?;
+    w.write_all(header.as_bytes())?;
+    Ok(())
+}
+
+fn write_array(path: &Path, dtype: Dtype, shape: &[usize], bytes: &[u8]) -> Result<()> {
+    let n: usize = shape.iter().product();
+    ensure!(
+        bytes.len() == n * dtype.size(),
+        "shape {:?} needs {} bytes, got {}",
+        shape,
+        n * dtype.size(),
+        bytes.len()
+    );
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    write_header(&mut w, dtype, shape)?;
+    w.write_all(bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+fn as_bytes_f32(data: &[f32]) -> &[u8] {
+    // f32 -> bytes on a little-endian target is a plain reinterpret; all
+    // supported platforms here are LE.
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
+}
+
+fn as_bytes_i32(data: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
+}
+
+fn as_bytes_i64(data: &[i64]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 8) }
+}
+
+/// Write a 1-D f32 array.
+pub fn write_f32_1d(path: &Path, data: &[f32]) -> Result<()> {
+    write_array(path, Dtype::F32, &[data.len()], as_bytes_f32(data))
+}
+
+/// Write a 2-D f32 array (C order, `rows * cols == data.len()`).
+pub fn write_f32_2d(path: &Path, data: &[f32], rows: usize, cols: usize) -> Result<()> {
+    write_array(path, Dtype::F32, &[rows, cols], as_bytes_f32(data))
+}
+
+/// Write a 1-D i32 array.
+pub fn write_i32_1d(path: &Path, data: &[i32]) -> Result<()> {
+    write_array(path, Dtype::I32, &[data.len()], as_bytes_i32(data))
+}
+
+/// Write a 1-D i64 array.
+pub fn write_i64_1d(path: &Path, data: &[i64]) -> Result<()> {
+    write_array(path, Dtype::I64, &[data.len()], as_bytes_i64(data))
+}
+
+/// A loaded array (for round-trip tests and the Rust-side consumers).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NpyArray {
+    /// Element type.
+    pub dtype: Dtype,
+    /// Shape (1-D or 2-D).
+    pub shape: Vec<usize>,
+    /// Raw little-endian payload.
+    pub data: Vec<u8>,
+}
+
+impl NpyArray {
+    /// View as f32 slice.
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        ensure!(self.dtype == Dtype::F32, "not an f32 array");
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    /// View as i32 slice.
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        ensure!(self.dtype == Dtype::I32, "not an i32 array");
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+}
+
+/// Read a `.npy` file (v1.0/2.0, C-order, supported dtypes only).
+pub fn read(path: &Path) -> Result<NpyArray> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    ensure!(&magic[..6] == b"\x93NUMPY", "not an npy file");
+    let major = magic[6];
+    let header_len = if major == 1 {
+        let mut b = [0u8; 2];
+        r.read_exact(&mut b)?;
+        u16::from_le_bytes(b) as usize
+    } else {
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b)?;
+        u32::from_le_bytes(b) as usize
+    };
+    let mut header = vec![0u8; header_len];
+    r.read_exact(&mut header)?;
+    let header = String::from_utf8(header)?;
+
+    // Tiny ad-hoc parse of the python dict literal.
+    let descr = header
+        .split("'descr':")
+        .nth(1)
+        .and_then(|s| s.split('\'').nth(1))
+        .context("npy header missing descr")?;
+    let dtype = Dtype::from_descr(descr)?;
+    ensure!(
+        header.contains("'fortran_order': False"),
+        "fortran order unsupported"
+    );
+    let shape_str = header
+        .split("'shape':")
+        .nth(1)
+        .and_then(|s| s.split('(').nth(1))
+        .and_then(|s| s.split(')').next())
+        .context("npy header missing shape")?;
+    let shape: Vec<usize> = shape_str
+        .split(',')
+        .map(|t| t.trim())
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse::<usize>().context("bad shape dim"))
+        .collect::<Result<_>>()?;
+    let n: usize = shape.iter().product();
+    let mut data = vec![0u8; n * dtype.size()];
+    r.read_exact(&mut data)?;
+    Ok(NpyArray { dtype, shape, data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("tao-npy-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(name)
+    }
+
+    #[test]
+    fn f32_2d_round_trip() {
+        let path = tmp("a.npy");
+        let data: Vec<f32> = (0..12).map(|i| i as f32 * 0.5).collect();
+        write_f32_2d(&path, &data, 3, 4).unwrap();
+        let back = read(&path).unwrap();
+        assert_eq!(back.shape, vec![3, 4]);
+        assert_eq!(back.as_f32().unwrap(), data);
+    }
+
+    #[test]
+    fn i32_1d_round_trip() {
+        let path = tmp("b.npy");
+        let data: Vec<i32> = vec![-1, 0, 7, i32::MAX];
+        write_i32_1d(&path, &data).unwrap();
+        let back = read(&path).unwrap();
+        assert_eq!(back.shape, vec![4]);
+        assert_eq!(back.as_i32().unwrap(), data);
+    }
+
+    #[test]
+    fn header_is_64_byte_aligned() {
+        let path = tmp("c.npy");
+        write_f32_1d(&path, &[1.0]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Payload starts at a multiple of 64.
+        let header_len = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+        assert_eq!((10 + header_len) % 64, 0);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let path = tmp("d.npy");
+        assert!(write_f32_2d(&path, &[1.0, 2.0, 3.0], 2, 2).is_err());
+    }
+
+    #[test]
+    fn wrong_dtype_view_rejected() {
+        let path = tmp("e.npy");
+        write_i32_1d(&path, &[1, 2]).unwrap();
+        let back = read(&path).unwrap();
+        assert!(back.as_f32().is_err());
+    }
+
+    #[test]
+    fn empty_array_round_trips() {
+        let path = tmp("f.npy");
+        write_f32_1d(&path, &[]).unwrap();
+        let back = read(&path).unwrap();
+        assert_eq!(back.shape, vec![0]);
+        assert!(back.as_f32().unwrap().is_empty());
+    }
+}

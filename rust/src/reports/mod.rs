@@ -1,0 +1,84 @@
+//! Paper table/figure regeneration harness (`tao report <artifact>`).
+//!
+//! Each report prints the same rows/series as the paper's artifact and
+//! writes a copy under `reports/`. Reports that need *trained models*
+//! consume the AOT artifacts (`artifacts/tao_*.hlo.txt`); reports that
+//! additionally need *retraining sweeps* (Figures 12-14, Table 5 and the
+//! Tao side of Figure 15) live in `python/compile/experiments.py` (build
+//! time) and are joined here from their cached outputs.
+//!
+//! | paper artifact | subcommand          | implemented in |
+//! |----------------|---------------------|----------------|
+//! | Table 1        | `report table1`     | here           |
+//! | Figure 2       | `report figure2`    | here           |
+//! | Figure 9       | `report figure9`    | here (+ artifacts) |
+//! | Figure 10a/b   | `report figure10a/b`| here           |
+//! | Figure 11      | `report figure11`   | here (+ artifacts) |
+//! | Table 4        | `report table4`     | here (+ artifacts) |
+//! | Table 6        | `report table6`     | here (+ manifest)  |
+//! | Figure 15 (gem5 side) | `report figure15` | here (+ cached Tao side) |
+//! | Figures 12-14, Table 5 | `python -m compile.experiments <name>` | python |
+
+pub mod model_reports;
+pub mod sim_reports;
+
+use crate::cli::args::Args;
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Dispatch `tao report <name>`.
+pub fn cmd_report(mut args: Args) -> Result<()> {
+    let name = args
+        .next_positional()
+        .context("usage: tao report <table1|figure2|figure9|figure10a|figure10b|figure11|table4|table6|figure15>")?;
+    match name.as_str() {
+        "table1" => sim_reports::table1(args),
+        "figure2" => sim_reports::figure2(args),
+        "figure10a" => sim_reports::figure10a(args),
+        "figure10b" => sim_reports::figure10b(args),
+        "table6" => sim_reports::table6(args),
+        "figure15" => sim_reports::figure15(args),
+        "figure9" => model_reports::figure9(args),
+        "figure11" => model_reports::figure11(args),
+        "table4" => model_reports::table4(args),
+        other => bail!(
+            "unknown report {other:?} (figures 12-14 + table5 are python-side: \
+             `cd python && python -m compile.experiments {other}`)"
+        ),
+    }
+}
+
+/// Dispatch `tao dse`.
+pub fn cmd_dse(args: Args) -> Result<()> {
+    sim_reports::dse(args)
+}
+
+/// A tiny report sink: mirrors everything to stdout and `reports/<name>.txt`.
+pub struct Report {
+    file: std::fs::File,
+}
+
+impl Report {
+    /// Create `reports/<name>.txt`.
+    pub fn new(name: &str) -> Result<Report> {
+        let dir = PathBuf::from("reports");
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{name}.txt"));
+        Ok(Report {
+            file: std::fs::File::create(&path).with_context(|| format!("create {path:?}"))?,
+        })
+    }
+
+    /// Emit one line.
+    pub fn line(&mut self, s: impl AsRef<str>) {
+        let s = s.as_ref();
+        println!("{s}");
+        let _ = writeln!(self.file, "{s}");
+    }
+}
+
+/// Default artifact path for a µarch.
+pub fn artifact_path(dir: &Path, model: &str, uarch: &str) -> PathBuf {
+    dir.join(format!("{model}_uarch_{uarch}.hlo.txt"))
+}

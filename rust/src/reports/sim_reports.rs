@@ -1,0 +1,400 @@
+//! Simulator-side reports: Table 1, Figure 2, Figure 10a/b, Table 6,
+//! Figure 15 (ground-truth series) and the `tao dse` characterization.
+
+use super::Report;
+use crate::cli::args::Args;
+use crate::dataset;
+use crate::detailed::DetailedSim;
+use crate::dse::{self, DesignSpace, PerfVector, SelectionStrategy};
+use crate::functional::FunctionalSim;
+use crate::trace::DetailedRecord;
+use crate::uarch::{CacheGeometry, PredictorKind, UarchConfig};
+use crate::util::{timer, Rng, Stopwatch};
+use crate::workloads;
+use anyhow::Result;
+
+fn presets() -> Vec<UarchConfig> {
+    vec![
+        UarchConfig::uarch_a(),
+        UarchConfig::uarch_b(),
+        UarchConfig::uarch_c(),
+    ]
+}
+
+/// Table 1: instruction counts, detailed vs functional trace (dee).
+pub fn table1(mut args: Args) -> Result<()> {
+    let insts: u64 = args.opt_parse("--insts")?.unwrap_or(100_000);
+    let seed: u64 = args.opt_parse("--seed")?.unwrap_or(42);
+    args.finish()?;
+    let mut rep = Report::new("table1")?;
+    rep.line("Table 1 — # instructions, detailed vs functional trace (531.deepsjeng_r stand-in)");
+    rep.line(format!(
+        "{:>10} | {:>16} | {:>16} | {:>7}",
+        "budget", "detailed (O3)", "functional", "diff%"
+    ));
+    let w = workloads::by_name("dee").unwrap();
+    let program = w.build(seed);
+    for budget in [insts, insts * 10] {
+        let func = FunctionalSim::new(&program).run(budget);
+        let (det, _) = DetailedSim::new(&program, &UarchConfig::uarch_a()).run(budget);
+        let c = dataset::trace_counts(&det, &func);
+        rep.line(format!(
+            "{:>10} | {:>16} | {:>16} | {:>6.2}%",
+            budget,
+            c.detailed,
+            c.functional,
+            c.diff_percent()
+        ));
+    }
+    rep.line("(paper: 1M → 2,655,925 vs 2,528,617 = 5.2%; shape check: detailed > functional by a few %)");
+    Ok(())
+}
+
+/// Figure 2: the §4.1 adjustment walked through on a real trace snippet.
+pub fn figure2(mut args: Args) -> Result<()> {
+    let seed: u64 = args.opt_parse("--seed")?.unwrap_or(42);
+    args.finish()?;
+    let mut rep = Report::new("figure2")?;
+    let w = workloads::by_name("dee").unwrap();
+    let program = w.build(seed);
+    let (det, _) = DetailedSim::new(&program, &UarchConfig::uarch_a()).run(3_000);
+    let adj = dataset::adjust(&det);
+
+    // Find the first mispredicted branch with squashed records after it.
+    let mut idx_mispred = None;
+    for (i, r) in det.records.iter().enumerate() {
+        if let DetailedRecord::Retired(info) = r {
+            if info.branch_mispred
+                && matches!(det.records.get(i + 1), Some(DetailedRecord::Squashed { .. }))
+            {
+                idx_mispred = Some(i);
+                break;
+            }
+        }
+    }
+    rep.line("Figure 2 — training-dataset construction on a detailed-trace snippet");
+    rep.line("detailed trace (fetch-ordered records):");
+    if let Some(i) = idx_mispred {
+        for r in det.records.iter().skip(i.saturating_sub(1)).take(8) {
+            match r {
+                DetailedRecord::Retired(info) => rep.line(format!(
+                    "  {:>8x} {:<6} fetch@{:<6} retire@{:<6}{}",
+                    info.func.pc,
+                    info.func.opcode.mnemonic(),
+                    info.fetch_clock,
+                    info.retire_clock,
+                    if info.branch_mispred { "  [mispredicted]" } else { "" }
+                )),
+                DetailedRecord::Squashed { pc, opcode, fetch_clock } => rep.line(format!(
+                    "  {:>8x} {:<6} fetch@{:<6} [squashed speculative]",
+                    pc,
+                    opcode.mnemonic(),
+                    fetch_clock
+                )),
+                DetailedRecord::NopStall { fetch_clock } => {
+                    rep.line(format!("  {:>8} nop    fetch@{:<6} [pipeline stall]", "-", fetch_clock))
+                }
+            }
+        }
+    }
+    rep.line("adjusted trace: squashed/nop records removed; their time re-attributed");
+    rep.line("to the next retired instruction's fetch latency.");
+    rep.line(format!(
+        "invariant: total cycles preserved — detailed {} == reconstructed {}",
+        det.total_cycles,
+        adj.reconstructed_cycles()
+    ));
+    anyhow::ensure!(det.total_cycles == adj.reconstructed_cycles(), "Figure 2 invariant violated");
+    Ok(())
+}
+
+/// Figure 10a: speculative vs nop instruction share of the extra records.
+pub fn figure10a(mut args: Args) -> Result<()> {
+    let insts: u64 = args.opt_parse("--insts")?.unwrap_or(50_000);
+    let seed: u64 = args.opt_parse("--seed")?.unwrap_or(42);
+    args.finish()?;
+    let mut rep = Report::new("figure10a")?;
+    rep.line("Figure 10a — instruction differences (% of committed) in detailed traces");
+    rep.line(format!(
+        "{:<10} {:<6} | {:>10} | {:>8} | {:>9} | {:>9}",
+        "uarch", "bench", "committed", "spec%", "nop%", "spec:nop"
+    ));
+    for cfg in presets() {
+        for w in workloads::suite() {
+            let program = w.build(seed);
+            let (det, stats) = DetailedSim::new(&program, &cfg).run(insts);
+            let spec = 100.0 * stats.squashed as f64 / stats.instructions as f64;
+            let nop = 100.0 * stats.nops as f64 / stats.instructions as f64;
+            let ratio = if stats.nops > 0 {
+                stats.squashed as f64 / stats.nops as f64
+            } else {
+                f64::INFINITY
+            };
+            rep.line(format!(
+                "{:<10} {:<6} | {:>10} | {:>7.2}% | {:>8.2}% | {:>9.1}",
+                cfg.name,
+                w.name,
+                det.retired_count(),
+                spec,
+                nop,
+                ratio
+            ));
+        }
+    }
+    rep.line("(paper: extras are ~97% squashed speculative vs ~3% nop on average)");
+    Ok(())
+}
+
+/// Figure 10b: trace-generation throughput, detailed vs functional.
+pub fn figure10b(mut args: Args) -> Result<()> {
+    let insts: u64 = args.opt_parse("--insts")?.unwrap_or(200_000);
+    let seed: u64 = args.opt_parse("--seed")?.unwrap_or(42);
+    args.finish()?;
+    let mut rep = Report::new("figure10b")?;
+    rep.line("Figure 10b — trace generation throughput (MIPS)");
+    rep.line(format!(
+        "{:<10} {:<6} | {:>12} | {:>12} | {:>8}",
+        "uarch", "bench", "detailed", "functional", "speedup"
+    ));
+    let mut det_tp = Vec::new();
+    let mut fun_tp = Vec::new();
+    for cfg in presets() {
+        for w in workloads::suite() {
+            let program = w.build(seed);
+            let mut sw = Stopwatch::new();
+            sw.time(|| {
+                DetailedSim::new(&program, &cfg).run(insts);
+            });
+            let t_det = sw.elapsed();
+            let mut sw2 = Stopwatch::new();
+            sw2.time(|| {
+                FunctionalSim::new(&program).run(insts);
+            });
+            let t_fun = sw2.elapsed();
+            let d = timer::mips(insts, t_det);
+            let f = timer::mips(insts, t_fun);
+            det_tp.push(d);
+            fun_tp.push(f);
+            rep.line(format!(
+                "{:<10} {:<6} | {:>9.2} MIPS | {:>9.2} MIPS | {:>7.1}x",
+                cfg.name,
+                w.name,
+                d,
+                f,
+                f / d
+            ));
+        }
+    }
+    let avg_d = crate::stats::mean(&det_tp);
+    let avg_f = crate::stats::mean(&fun_tp);
+    rep.line(format!(
+        "average: detailed {avg_d:.2} MIPS, functional {avg_f:.2} MIPS — {:.1}x (paper: 0.21 vs 5.29 = 25.2x)",
+        avg_f / avg_d
+    ));
+    Ok(())
+}
+
+/// Characterize a sampled design with the four §4.3 metrics, averaged
+/// over the training benchmarks.
+pub fn characterize(cfg: &UarchConfig, insts: u64, seed: u64) -> PerfVector {
+    let mut acc = PerfVector::default();
+    let wls = workloads::training();
+    for w in &wls {
+        let program = w.build(seed);
+        let (_, s) = DetailedSim::new(&program, cfg).stats_only().run(insts);
+        acc.cpi += s.cpi();
+        acc.l1_miss_rate += if s.mem_ops > 0 {
+            s.l1d_misses as f64 / s.mem_ops as f64
+        } else {
+            0.0
+        };
+        acc.l2_miss_rate += if s.l1d_misses > 0 {
+            s.l2d_misses as f64 / s.l1d_misses as f64
+        } else {
+            0.0
+        };
+        acc.mispredict_rate += s.mispredict_rate();
+    }
+    let n = wls.len() as f64;
+    PerfVector {
+        cpi: acc.cpi / n,
+        l1_miss_rate: acc.l1_miss_rate / n,
+        l2_miss_rate: acc.l2_miss_rate / n,
+        mispredict_rate: acc.mispredict_rate / n,
+    }
+}
+
+/// `tao dse`: sample designs, characterize, print the Figure 8 distance
+/// matrix and the selected training pair.
+pub fn dse(mut args: Args) -> Result<()> {
+    let designs: usize = args.opt_parse("--designs")?.unwrap_or(8);
+    let insts: u64 = args.opt_parse("--insts")?.unwrap_or(10_000);
+    let seed: u64 = args.opt_parse("--seed")?.unwrap_or(42);
+    args.finish()?;
+    let mut rep = Report::new("dse")?;
+    let space = DesignSpace::table3();
+    rep.line(format!(
+        "Design space: {} points (Table 3). Sampling {designs} designs, {insts} insts per benchmark.",
+        space.count()
+    ));
+    let mut rng = Rng::new(seed);
+    let cfgs = space.sample(designs, &mut rng);
+    let mut perfs = Vec::new();
+    rep.line(format!(
+        "{:<12} | {:>7} | {:>8} | {:>8} | {:>8}",
+        "design", "CPI", "L1miss", "L2miss", "mispred"
+    ));
+    for cfg in &cfgs {
+        let p = characterize(cfg, insts, seed);
+        rep.line(format!(
+            "{:<12} | {:>7.3} | {:>7.1}% | {:>7.1}% | {:>7.1}%",
+            cfg.name,
+            p.cpi,
+            p.l1_miss_rate * 100.0,
+            p.l2_miss_rate * 100.0,
+            p.mispredict_rate * 100.0
+        ));
+        perfs.push(p);
+    }
+    let matrix = dse::distance_matrix(&perfs, SelectionStrategy::Mahalanobis);
+    rep.line("Mahalanobis distance matrix:");
+    for (i, row) in matrix.iter().enumerate() {
+        let cells: Vec<String> = row.iter().map(|d| format!("{d:5.2}")).collect();
+        rep.line(format!("  {:<12} {}", cfgs[i].name, cells.join(" ")));
+    }
+    let (i, j) = dse::select_pair(&perfs, SelectionStrategy::Mahalanobis, &mut rng);
+    rep.line(format!(
+        "selected training pair (max Mahalanobis distance): {} + {}",
+        cfgs[i].name, cfgs[j].name
+    ));
+    Ok(())
+}
+
+/// Table 6: preprocessing overhead of embedding construction.
+pub fn table6(mut args: Args) -> Result<()> {
+    let designs: usize = args.opt_parse("--designs")?.unwrap_or(16);
+    let insts: u64 = args.opt_parse("--insts")?.unwrap_or(10_000);
+    let seed: u64 = args.opt_parse("--seed")?.unwrap_or(42);
+    args.finish()?;
+    let mut rep = Report::new("table6")?;
+    rep.line("Table 6 — overhead of microarchitecture-agnostic embedding construction");
+    let space = DesignSpace::table3();
+    let mut rng = Rng::new(seed);
+    let cfgs = space.sample(designs, &mut rng);
+    let mut sw = Stopwatch::new();
+    let perfs: Vec<PerfVector> =
+        sw.time(|| cfgs.iter().map(|c| characterize(c, insts, seed)).collect());
+    let sim_time = sw.elapsed();
+    let mut sw2 = Stopwatch::new();
+    let (i, j) = sw2.time(|| dse::select_pair(&perfs, SelectionStrategy::Mahalanobis, &mut rng));
+    let select_time = sw2.elapsed();
+    rep.line(format!(
+        "random design selection + simulation ({designs} designs x {} train benches x {insts} insts): {:.2}s",
+        workloads::training().len(),
+        sim_time.as_secs_f64()
+    ));
+    rep.line(format!(
+        "Mahalanobis selection: {:.4}s (picked {} + {})",
+        select_time.as_secs_f64(),
+        cfgs[i].name,
+        cfgs[j].name
+    ));
+    // Shared-embedding training time comes from the AOT manifest.
+    match std::fs::read_to_string("artifacts/manifest.json") {
+        Ok(text) => {
+            if let Ok(j) = crate::util::json::Json::parse(&text) {
+                if let Some(t) = j
+                    .get("timings")
+                    .and_then(|t| t.get("shared_s"))
+                    .and_then(|v| v.as_f64())
+                {
+                    rep.line(format!("training shared embeddings (from artifacts/manifest.json): {t:.1}s"));
+                }
+            }
+        }
+        Err(_) => rep.line("training shared embeddings: run `make artifacts` to populate manifest.json"),
+    }
+    rep.line("(paper: 0.35h simulation + 0.1min selection + 71h embedding training)");
+    Ok(())
+}
+
+/// Figure 15 ground-truth series: L1D-size sweep (cache MPKI) and branch
+/// predictor sweep (branch MPKI), averaged over test benchmarks. The Tao
+/// prediction series is joined from the python experiments cache when
+/// present (`reports/figure15_tao.txt`).
+pub fn figure15(mut args: Args) -> Result<()> {
+    let insts: u64 = args.opt_parse("--insts")?.unwrap_or(50_000);
+    let seed: u64 = args.opt_parse("--seed")?.unwrap_or(42);
+    args.finish()?;
+    let mut rep = Report::new("figure15")?;
+    let base = UarchConfig::uarch_b();
+
+    // Note: the sweep averages over the FULL suite — our synthetic test
+    // benchmarks all have working sets far beyond 128KB (mcf 8MiB random,
+    // cac 4MiB streaming), so their L1D MPKI is physically flat across
+    // this range; the L1-scale reuse lives in dee/nab/lee (see
+    // DESIGN.md §1 on workload substitution).
+    rep.line("Figure 15a — L1 Dcache size sweep, avg L1D MPKI over the suite (ground truth)");
+    for size_kb in [16u64, 32, 64, 128] {
+        let mut cfg = base.clone();
+        cfg.name = format!("l1d_{size_kb}kb");
+        cfg.l1d = CacheGeometry {
+            size_bytes: size_kb << 10,
+            assoc: cfg.l1d.assoc,
+        };
+        let mut mpkis = Vec::new();
+        for w in workloads::suite() {
+            let program = w.build(seed);
+            let (_, s) = DetailedSim::new(&program, &cfg).stats_only().run(insts);
+            mpkis.push(s.l1d_mpki());
+        }
+        rep.line(format!("  {size_kb:>4} KB : {:>7.2} MPKI", crate::stats::mean(&mpkis)));
+    }
+
+    rep.line("Figure 15b — branch predictor sweep, avg branch MPKI over test benchmarks (ground truth)");
+    for bp in PredictorKind::ALL {
+        let mut cfg = base.clone();
+        cfg.name = format!("bp_{}", bp.name());
+        cfg.predictor = bp;
+        let mut mpkis = Vec::new();
+        for w in workloads::testing() {
+            let program = w.build(seed);
+            let (_, s) = DetailedSim::new(&program, &cfg).stats_only().run(insts);
+            mpkis.push(s.branch_mpki());
+        }
+        rep.line(format!("  {:<12}: {:>7.2} MPKI", bp.name(), crate::stats::mean(&mpkis)));
+    }
+    match std::fs::read_to_string("reports/figure15_tao.txt") {
+        Ok(tao_side) => {
+            rep.line("--- Tao predictions (python -m compile.experiments figure15) ---");
+            for l in tao_side.lines() {
+                rep.line(l);
+            }
+        }
+        Err(_) => rep.line(
+            "(Tao prediction series: run `cd python && python -m compile.experiments figure15`)",
+        ),
+    }
+    rep.line("(paper shape: MPKI falls 16->128KB; Local worst, TAGE_SC_L best)");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn characterize_produces_nonzero_vector() {
+        let p = characterize(&UarchConfig::uarch_a(), 2_000, 1);
+        assert!(p.cpi > 0.5);
+        assert!(p.l1_miss_rate >= 0.0 && p.l1_miss_rate <= 1.0);
+        assert!(p.mispredict_rate >= 0.0 && p.mispredict_rate <= 1.0);
+    }
+
+    #[test]
+    fn characterize_distinguishes_designs() {
+        let a = characterize(&UarchConfig::uarch_a(), 3_000, 1);
+        let c = characterize(&UarchConfig::uarch_c(), 3_000, 1);
+        assert!(a.cpi > c.cpi, "A {} should be slower than C {}", a.cpi, c.cpi);
+    }
+}

@@ -1,0 +1,339 @@
+//! Artifact metadata + PJRT session.
+
+use crate::features::FeatureConfig;
+use crate::util::json::Json;
+use anyhow::{bail, ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Which model family an artifact holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Tao multi-metric model: inputs (opcodes, features); 6 outputs.
+    Tao,
+    /// SimNet baseline: inputs (opcodes, features, ctx_metrics); 2 outputs.
+    SimNet,
+}
+
+/// Parsed `<artifact>.meta.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// Model family.
+    pub kind: ModelKind,
+    /// Fixed batch size `B` the HLO was lowered with.
+    pub batch: usize,
+    /// Context window length `T`.
+    pub context: usize,
+    /// Per-instruction feature width `F`.
+    pub feature_dim: usize,
+    /// Opcode vocabulary size.
+    pub num_opcodes: usize,
+    /// Feature-engineering hyperparameters baked into the model.
+    pub features: FeatureConfig,
+    /// Names of the output tensors, in tuple order.
+    pub outputs: Vec<String>,
+    /// Hash of the opcode vocabulary at training time.
+    pub vocab_hash: String,
+    /// Which kernel implementation was lowered ("pallas" / "jnp").
+    pub kernel: String,
+}
+
+impl ArtifactMeta {
+    /// Load and validate `<path>.meta.json` given the HLO path.
+    pub fn load(hlo_path: &Path) -> Result<ArtifactMeta> {
+        let meta_path = meta_path_for(hlo_path);
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("read {meta_path:?}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parse {meta_path:?}"))?;
+        let kind = match j.req_str("kind")? {
+            "tao" => ModelKind::Tao,
+            "simnet" => ModelKind::SimNet,
+            other => bail!("unknown artifact kind {other:?}"),
+        };
+        let fc = j
+            .get("feature_config")
+            .context("missing feature_config")?;
+        let meta = ArtifactMeta {
+            kind,
+            batch: j.req_u64("batch")? as usize,
+            context: j.req_u64("context")? as usize,
+            feature_dim: j.req_u64("feature_dim")? as usize,
+            num_opcodes: j.req_u64("num_opcodes")? as usize,
+            features: FeatureConfig {
+                nb: fc.req_u64("nb")? as usize,
+                nq: fc.req_u64("nq")? as usize,
+                nm: fc.req_u64("nm")? as usize,
+            },
+            outputs: j
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .context("missing outputs")?
+                .iter()
+                .map(|o| o.as_str().unwrap_or("?").to_string())
+                .collect(),
+            vocab_hash: j.req_str("vocab_hash")?.to_string(),
+            kernel: j.req_str("kernel")?.to_string(),
+        };
+        meta.validate()?;
+        Ok(meta)
+    }
+
+    /// Cross-check against the Rust-side constants.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.num_opcodes == crate::isa::Opcode::COUNT,
+            "artifact opcode vocabulary {} != ISA {}",
+            self.num_opcodes,
+            crate::isa::Opcode::COUNT
+        );
+        ensure!(
+            self.feature_dim == self.features.feature_dim(),
+            "artifact feature_dim {} inconsistent with its feature_config {}",
+            self.feature_dim,
+            self.features.feature_dim()
+        );
+        let expected_outputs: &[&str] = match self.kind {
+            ModelKind::Tao => &["fetch", "exec", "branch", "access", "icache", "tlb"],
+            ModelKind::SimNet => &["fetch", "exec"],
+        };
+        ensure!(
+            self.outputs == expected_outputs,
+            "artifact outputs {:?} != expected {:?}",
+            self.outputs,
+            expected_outputs
+        );
+        ensure!(self.batch > 0 && self.context > 0, "degenerate shape");
+        Ok(())
+    }
+}
+
+/// `foo.hlo.txt` → `foo.meta.json`.
+pub fn meta_path_for(hlo_path: &Path) -> PathBuf {
+    let s = hlo_path.to_string_lossy();
+    PathBuf::from(s.replace(".hlo.txt", ".meta.json"))
+}
+
+/// One model's outputs for a batch (post-processed to probabilities /
+/// clamped latencies on the Rust side).
+#[derive(Debug, Clone, Default)]
+pub struct ModelOutputs {
+    /// Predicted fetch latency per window (cycles, clamped ≥ 0).
+    pub fetch: Vec<f32>,
+    /// Predicted execution latency per window (cycles, clamped ≥ 0).
+    pub exec: Vec<f32>,
+    /// P(branch mispredicted).
+    pub branch: Vec<f32>,
+    /// Access-level probabilities, `[B × 4]` row-major.
+    pub access: Vec<f32>,
+    /// P(L1I miss).
+    pub icache: Vec<f32>,
+    /// P(dTLB miss).
+    pub tlb: Vec<f32>,
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// A compiled model on a PJRT client. One `Session` per worker thread —
+/// the underlying client is not shared across threads.
+pub struct Session {
+    meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+    /// Reused staging buffers (hot path: no per-batch allocation).
+    opcode_buf: Vec<i32>,
+    feat_buf: Vec<f32>,
+    ctx_buf: Vec<f32>,
+}
+
+impl Session {
+    /// Load + compile an artifact.
+    pub fn load(hlo_path: &Path) -> Result<Session> {
+        let meta = ArtifactMeta::load(hlo_path)?;
+        let client = xla::PjRtClient::cpu().map_err(anyhow_xla)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(anyhow_xla)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(anyhow_xla)?;
+        let b = meta.batch;
+        let t = meta.context;
+        let f = meta.feature_dim;
+        Ok(Session {
+            exe,
+            opcode_buf: vec![0; b * t],
+            feat_buf: vec![0.0; b * t * f],
+            ctx_buf: vec![0.0; b * t * 6],
+            meta,
+        })
+    }
+
+    /// Artifact metadata.
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Mutable staging buffers `(opcodes[B*T], features[B*T*F])` — the
+    /// batcher writes windows directly into these to avoid copies.
+    pub fn buffers(&mut self) -> (&mut [i32], &mut [f32]) {
+        (&mut self.opcode_buf, &mut self.feat_buf)
+    }
+
+    /// SimNet context-metric staging buffer `[B*T*6]`.
+    pub fn ctx_buffer(&mut self) -> &mut [f32] {
+        &mut self.ctx_buf
+    }
+
+    /// Execute one batch from the staging buffers; `valid` rows of output
+    /// are post-processed (probabilities, clamps) into `ModelOutputs`.
+    pub fn run(&self, valid: usize) -> Result<ModelOutputs> {
+        let b = self.meta.batch as i64;
+        let t = self.meta.context as i64;
+        let f = self.meta.feature_dim as i64;
+        ensure!(valid <= b as usize, "valid {valid} > batch {b}");
+        let ops = xla::Literal::vec1(&self.opcode_buf)
+            .reshape(&[b, t])
+            .map_err(anyhow_xla)?;
+        let feats = xla::Literal::vec1(&self.feat_buf)
+            .reshape(&[b, t, f])
+            .map_err(anyhow_xla)?;
+        let result = match self.meta.kind {
+            ModelKind::Tao => self.exe.execute::<xla::Literal>(&[ops, feats]),
+            ModelKind::SimNet => {
+                let ctx = xla::Literal::vec1(&self.ctx_buf)
+                    .reshape(&[b, t, 6])
+                    .map_err(anyhow_xla)?;
+                self.exe.execute::<xla::Literal>(&[ops, feats, ctx])
+            }
+        }
+        .map_err(anyhow_xla)?;
+        let tuple = result[0][0].to_literal_sync().map_err(anyhow_xla)?;
+        let parts = tuple.to_tuple().map_err(anyhow_xla)?;
+        let vec_of = |lit: &xla::Literal| -> Result<Vec<f32>> {
+            lit.to_vec::<f32>().map_err(anyhow_xla)
+        };
+        let mut out = ModelOutputs::default();
+        match self.meta.kind {
+            ModelKind::Tao => {
+                ensure!(parts.len() == 6, "expected 6 outputs, got {}", parts.len());
+                out.fetch = vec_of(&parts[0])?;
+                out.exec = vec_of(&parts[1])?;
+                out.branch = vec_of(&parts[2])?.iter().map(|&x| sigmoid(x)).collect();
+                // Softmax rows of the access-level logits.
+                let logits = vec_of(&parts[3])?;
+                out.access = vec![0.0; logits.len()];
+                for (row_in, row_out) in logits.chunks(4).zip(out.access.chunks_mut(4)) {
+                    let m = row_in.iter().cloned().fold(f32::MIN, f32::max);
+                    let exps: Vec<f32> = row_in.iter().map(|&x| (x - m).exp()).collect();
+                    let sum: f32 = exps.iter().sum();
+                    for (o, e) in row_out.iter_mut().zip(exps) {
+                        *o = e / sum;
+                    }
+                }
+                out.icache = vec_of(&parts[4])?.iter().map(|&x| sigmoid(x)).collect();
+                out.tlb = vec_of(&parts[5])?.iter().map(|&x| sigmoid(x)).collect();
+            }
+            ModelKind::SimNet => {
+                ensure!(parts.len() == 2, "expected 2 outputs, got {}", parts.len());
+                out.fetch = vec_of(&parts[0])?;
+                out.exec = vec_of(&parts[1])?;
+            }
+        }
+        for v in out.fetch.iter_mut().chain(out.exec.iter_mut()) {
+            *v = v.max(0.0);
+        }
+        out.truncate(valid);
+        Ok(out)
+    }
+}
+
+impl ModelOutputs {
+    fn truncate(&mut self, n: usize) {
+        self.fetch.truncate(n);
+        self.exec.truncate(n);
+        self.branch.truncate(n);
+        self.access.truncate(n * 4);
+        self.icache.truncate(n);
+        self.tlb.truncate(n);
+    }
+}
+
+fn anyhow_xla(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_meta_json() -> String {
+        format!(
+            r#"{{
+              "kind": "tao", "batch": 4, "context": 8,
+              "feature_dim": {fd}, "num_opcodes": {nop},
+              "latency_transform": "linear",
+              "outputs": ["fetch", "exec", "branch", "access", "icache", "tlb"],
+              "feature_config": {{"nb": 1024, "nq": 32, "nm": 64}},
+              "num_regs": 48, "vocab_hash": "deadbeef", "kernel": "pallas"
+            }}"#,
+            fd = FeatureConfig::default().feature_dim(),
+            nop = crate::isa::Opcode::COUNT,
+        )
+    }
+
+    fn write_meta(dir: &Path, name: &str, body: &str) -> PathBuf {
+        std::fs::create_dir_all(dir).unwrap();
+        let hlo = dir.join(format!("{name}.hlo.txt"));
+        std::fs::write(dir.join(format!("{name}.meta.json")), body).unwrap();
+        hlo
+    }
+
+    fn tmp() -> PathBuf {
+        std::env::temp_dir().join(format!("tao-artifact-{}", std::process::id()))
+    }
+
+    #[test]
+    fn meta_loads_and_validates() {
+        let hlo = write_meta(&tmp(), "ok", &sample_meta_json());
+        let m = ArtifactMeta::load(&hlo).unwrap();
+        assert_eq!(m.kind, ModelKind::Tao);
+        assert_eq!(m.batch, 4);
+        assert_eq!(m.features.nm, 64);
+        assert_eq!(m.kernel, "pallas");
+    }
+
+    #[test]
+    fn meta_rejects_wrong_vocab_size() {
+        let body = sample_meta_json().replace(
+            &format!("\"num_opcodes\": {}", crate::isa::Opcode::COUNT),
+            "\"num_opcodes\": 7",
+        );
+        let hlo = write_meta(&tmp(), "badvocab", &body);
+        assert!(ArtifactMeta::load(&hlo).is_err());
+    }
+
+    #[test]
+    fn meta_rejects_inconsistent_feature_dim() {
+        let body = sample_meta_json().replace(
+            &format!("\"feature_dim\": {}", FeatureConfig::default().feature_dim()),
+            "\"feature_dim\": 3",
+        );
+        let hlo = write_meta(&tmp(), "baddim", &body);
+        assert!(ArtifactMeta::load(&hlo).is_err());
+    }
+
+    #[test]
+    fn meta_rejects_wrong_outputs() {
+        let body = sample_meta_json().replace("\"tlb\"", "\"bogus\"");
+        let hlo = write_meta(&tmp(), "badout", &body);
+        assert!(ArtifactMeta::load(&hlo).is_err());
+    }
+
+    #[test]
+    fn meta_path_mapping() {
+        assert_eq!(
+            meta_path_for(Path::new("/a/tao_x.hlo.txt")),
+            PathBuf::from("/a/tao_x.meta.json")
+        );
+    }
+}

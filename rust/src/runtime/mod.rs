@@ -1,0 +1,15 @@
+//! PJRT runtime — loads AOT-compiled model artifacts and executes them on
+//! the request path.
+//!
+//! `aot.py` writes each model as HLO *text* plus a metadata JSON; this
+//! module parses the metadata, validates it against the Rust-side feature
+//! configuration (so the hot path and the trained model can never
+//! disagree on shapes or vocabulary), compiles the HLO once through the
+//! PJRT CPU client, and exposes a typed batch-inference call.
+//!
+//! Python is never involved: after `make artifacts`, the `tao` binary is
+//! self-contained.
+
+pub mod artifact;
+
+pub use artifact::{ArtifactMeta, ModelKind, ModelOutputs, Session};

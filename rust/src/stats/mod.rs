@@ -1,0 +1,244 @@
+//! Simulation metrics, phase-level series and error measures.
+//!
+//! Defines the quantities every evaluation figure reports: CPI, MPKI for
+//! branch mispredictions / L1D / L1I / TLB, windowed phase behaviour
+//! (Figure 11), and the paper's simulation-error formula
+//! `|CPI_pred − CPI_truth| / CPI_truth × 100%` (§5 "simulation study
+//! criteria").
+
+/// Aggregate metrics over a simulated instruction stream (predicted or
+/// ground truth).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Metrics {
+    /// Instructions accounted.
+    pub instructions: u64,
+    /// Total cycles.
+    pub cycles: f64,
+    /// Mispredicted conditional branches.
+    pub mispredicts: f64,
+    /// L1D misses (L2 hits + memory accesses).
+    pub l1d_misses: f64,
+    /// L1I misses.
+    pub l1i_misses: f64,
+    /// Data TLB misses.
+    pub tlb_misses: f64,
+}
+
+impl Metrics {
+    /// Cycles per instruction.
+    pub fn cpi(&self) -> f64 {
+        if self.instructions == 0 {
+            0.0
+        } else {
+            self.cycles / self.instructions as f64
+        }
+    }
+
+    /// Generic misses-per-kilo-instruction helper.
+    fn mpki(&self, count: f64) -> f64 {
+        if self.instructions == 0 {
+            0.0
+        } else {
+            count * 1000.0 / self.instructions as f64
+        }
+    }
+
+    /// Branch misprediction MPKI.
+    pub fn branch_mpki(&self) -> f64 {
+        self.mpki(self.mispredicts)
+    }
+
+    /// L1D miss MPKI.
+    pub fn l1d_mpki(&self) -> f64 {
+        self.mpki(self.l1d_misses)
+    }
+
+    /// L1I miss MPKI.
+    pub fn l1i_mpki(&self) -> f64 {
+        self.mpki(self.l1i_misses)
+    }
+
+    /// Data-TLB miss MPKI.
+    pub fn tlb_mpki(&self) -> f64 {
+        self.mpki(self.tlb_misses)
+    }
+
+    /// Fold another window into this one.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.instructions += other.instructions;
+        self.cycles += other.cycles;
+        self.mispredicts += other.mispredicts;
+        self.l1d_misses += other.l1d_misses;
+        self.l1i_misses += other.l1i_misses;
+        self.tlb_misses += other.tlb_misses;
+    }
+}
+
+/// The paper's simulation error: absolute relative CPI error in percent.
+pub fn simulation_error_percent(cpi_pred: f64, cpi_truth: f64) -> f64 {
+    if cpi_truth == 0.0 {
+        return 0.0;
+    }
+    (cpi_pred - cpi_truth).abs() / cpi_truth * 100.0
+}
+
+/// Absolute relative error for any metric, in percent.
+pub fn relative_error_percent(pred: f64, truth: f64) -> f64 {
+    if truth == 0.0 {
+        return if pred == 0.0 { 0.0 } else { 100.0 };
+    }
+    (pred - truth).abs() / truth * 100.0
+}
+
+/// Phase-level series: per-window metrics over program execution
+/// (Figure 11 plots CPI, L1D MPKI and branch MPKI per 10M-instruction
+/// window; the window size scales with our instruction budgets).
+#[derive(Debug, Clone, Default)]
+pub struct PhaseSeries {
+    /// Window size in instructions.
+    pub window: u64,
+    /// Completed windows.
+    pub windows: Vec<Metrics>,
+    current: Metrics,
+}
+
+impl PhaseSeries {
+    /// New series with the given window size.
+    pub fn new(window: u64) -> PhaseSeries {
+        PhaseSeries {
+            window,
+            windows: Vec::new(),
+            current: Metrics::default(),
+        }
+    }
+
+    /// Account one instruction.
+    pub fn push(
+        &mut self,
+        cycles: f64,
+        mispred: bool,
+        l1d_miss: bool,
+        l1i_miss: bool,
+        tlb_miss: bool,
+    ) {
+        self.current.instructions += 1;
+        self.current.cycles += cycles;
+        self.current.mispredicts += mispred as u8 as f64;
+        self.current.l1d_misses += l1d_miss as u8 as f64;
+        self.current.l1i_misses += l1i_miss as u8 as f64;
+        self.current.tlb_misses += tlb_miss as u8 as f64;
+        if self.current.instructions >= self.window {
+            self.windows.push(self.current);
+            self.current = Metrics::default();
+        }
+    }
+
+    /// Close the series, flushing a final partial window.
+    pub fn finish(&mut self) {
+        if self.current.instructions > 0 {
+            self.windows.push(self.current);
+            self.current = Metrics::default();
+        }
+    }
+
+    /// Totals across all windows.
+    pub fn total(&self) -> Metrics {
+        let mut m = Metrics::default();
+        for w in &self.windows {
+            m.merge(w);
+        }
+        m.merge(&self.current);
+        m
+    }
+}
+
+/// Mean of a slice (0.0 when empty) — used all over the report harness.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpi_and_mpki_math() {
+        let m = Metrics {
+            instructions: 2000,
+            cycles: 3000.0,
+            mispredicts: 10.0,
+            l1d_misses: 40.0,
+            l1i_misses: 2.0,
+            tlb_misses: 1.0,
+        };
+        assert!((m.cpi() - 1.5).abs() < 1e-12);
+        assert!((m.branch_mpki() - 5.0).abs() < 1e-12);
+        assert!((m.l1d_mpki() - 20.0).abs() < 1e-12);
+        assert!((m.l1i_mpki() - 1.0).abs() < 1e-12);
+        assert!((m.tlb_mpki() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::default();
+        assert_eq!(m.cpi(), 0.0);
+        assert_eq!(m.branch_mpki(), 0.0);
+    }
+
+    #[test]
+    fn simulation_error_formula() {
+        assert!((simulation_error_percent(1.1, 1.0) - 10.0).abs() < 1e-9);
+        assert!((simulation_error_percent(0.9, 1.0) - 10.0).abs() < 1e-9);
+        assert_eq!(simulation_error_percent(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn relative_error_zero_truth() {
+        assert_eq!(relative_error_percent(0.0, 0.0), 0.0);
+        assert_eq!(relative_error_percent(1.0, 0.0), 100.0);
+    }
+
+    #[test]
+    fn phase_series_windows() {
+        let mut ps = PhaseSeries::new(10);
+        for i in 0..25 {
+            ps.push(2.0, i % 5 == 0, false, false, false);
+        }
+        ps.finish();
+        assert_eq!(ps.windows.len(), 3);
+        assert_eq!(ps.windows[0].instructions, 10);
+        assert_eq!(ps.windows[2].instructions, 5);
+        let t = ps.total();
+        assert_eq!(t.instructions, 25);
+        assert!((t.cpi() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Metrics {
+            instructions: 10,
+            cycles: 20.0,
+            ..Default::default()
+        };
+        let b = Metrics {
+            instructions: 5,
+            cycles: 5.0,
+            mispredicts: 2.0,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.instructions, 15);
+        assert_eq!(a.cycles, 25.0);
+        assert_eq!(a.mispredicts, 2.0);
+    }
+
+    #[test]
+    fn mean_helper() {
+        assert_eq!(mean(&[]), 0.0);
+        assert!((mean(&[1.0, 2.0, 3.0]) - 2.0).abs() < 1e-12);
+    }
+}

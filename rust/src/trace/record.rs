@@ -1,0 +1,316 @@
+//! Trace record types.
+
+use crate::isa::{Opcode, Reg};
+use std::fmt;
+
+/// Which level of the data memory hierarchy served an access.
+///
+/// This is the label space of the paper's "data access level" softmax head
+/// (§4.2: "we use a softmax layer for the data access level, as the output
+/// can be multiple categories").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AccessLevel {
+    /// Not a memory instruction.
+    None,
+    /// Hit in the L1 data cache.
+    L1,
+    /// Missed L1, hit in the unified L2.
+    L2,
+    /// Missed L2, served by main memory.
+    Mem,
+}
+
+impl AccessLevel {
+    /// Stable class index for the softmax head (None=0, L1=1, L2=2, Mem=3).
+    pub fn index(self) -> usize {
+        match self {
+            AccessLevel::None => 0,
+            AccessLevel::L1 => 1,
+            AccessLevel::L2 => 2,
+            AccessLevel::Mem => 3,
+        }
+    }
+
+    /// Inverse of [`AccessLevel::index`].
+    pub fn from_index(i: usize) -> AccessLevel {
+        match i {
+            0 => AccessLevel::None,
+            1 => AccessLevel::L1,
+            2 => AccessLevel::L2,
+            3 => AccessLevel::Mem,
+            _ => panic!("bad access level index {i}"),
+        }
+    }
+
+    /// Number of classes.
+    pub const COUNT: usize = 4;
+
+    /// True if the access missed L1 (the paper's "L1 Dcache miss" MPKI
+    /// counts L2 hits and memory accesses).
+    pub fn is_l1_miss(self) -> bool {
+        matches!(self, AccessLevel::L2 | AccessLevel::Mem)
+    }
+}
+
+impl fmt::Display for AccessLevel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            AccessLevel::None => "-",
+            AccessLevel::L1 => "L1",
+            AccessLevel::L2 => "L2",
+            AccessLevel::Mem => "MEM",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// One committed instruction in a functional trace. Static properties
+/// only — everything here is microarchitecture agnostic.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FuncRecord {
+    /// Program counter.
+    pub pc: u64,
+    /// Opcode.
+    pub opcode: Opcode,
+    /// Bitmap over all architectural registers used (src + dst), bit `i`
+    /// = register index `i` (paper §4.2 register bitmap feature).
+    pub reg_bitmap: u64,
+    /// Effective data address for loads/stores (0 otherwise).
+    pub mem_addr: u64,
+    /// Access width in bytes for loads/stores (0 otherwise).
+    pub mem_bytes: u8,
+    /// For conditional branches: architectural outcome (taken?). Branch
+    /// outcomes are program semantics, not microarchitecture, so they
+    /// belong in the functional trace and feed the branch-history input
+    /// feature (paper Figure 4).
+    pub taken: bool,
+}
+
+impl FuncRecord {
+    /// True for loads/stores.
+    pub fn is_mem(&self) -> bool {
+        self.mem_bytes != 0
+    }
+
+    /// Registers set in the bitmap.
+    pub fn registers(&self) -> impl Iterator<Item = Reg> + '_ {
+        (0..crate::isa::NUM_REGS).filter_map(|i| {
+            if self.reg_bitmap & (1u64 << i) != 0 {
+                Some(Reg::from_index(i))
+            } else {
+                None
+            }
+        })
+    }
+}
+
+/// A functional trace: the committed stream of a program execution.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FunctionalTrace {
+    /// Benchmark name.
+    pub name: String,
+    /// Committed records in program order.
+    pub records: Vec<FuncRecord>,
+}
+
+/// Performance metrics of one *retired* instruction in a detailed trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetiredInfo {
+    /// Static identity (same fields as the functional trace; alignment in
+    /// `crate::dataset` matches on these).
+    pub func: FuncRecord,
+    /// Cycle the instruction was fetched.
+    pub fetch_clock: u64,
+    /// Cycle the instruction retired (committed).
+    pub retire_clock: u64,
+    /// Was this a mispredicted conditional branch?
+    pub branch_mispred: bool,
+    /// Data-cache service level for memory ops.
+    pub access_level: AccessLevel,
+    /// Did the fetch miss the L1 instruction cache?
+    pub icache_miss: bool,
+    /// Did the data access miss the TLB?
+    pub tlb_miss: bool,
+}
+
+/// One record of a detailed trace, in fetch order.
+///
+/// §4.1: "the detailed trace contains incorrect speculative and stall
+/// instructions" — both extra kinds are first-class records here so the
+/// dataset-construction workflow can remove them and re-attribute their
+/// timing, exactly as the paper's Figure 2 walks through.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DetailedRecord {
+    /// An instruction that retired, with full metrics.
+    Retired(RetiredInfo),
+    /// A wrong-path (squashed speculative) instruction: fetched after a
+    /// mispredicted branch, never committed.
+    Squashed {
+        /// PC of the wrong-path instruction.
+        pc: u64,
+        /// Its opcode.
+        opcode: Opcode,
+        /// Cycle it was fetched.
+        fetch_clock: u64,
+    },
+    /// A pipeline-stall bubble: no instruction could be fetched/issued
+    /// this cycle, modelled as a `nop` in the pipe (paper §4.1).
+    NopStall {
+        /// Cycle of the bubble.
+        fetch_clock: u64,
+    },
+}
+
+impl DetailedRecord {
+    /// Fetch clock of the record, whatever its kind.
+    pub fn fetch_clock(&self) -> u64 {
+        match self {
+            DetailedRecord::Retired(r) => r.fetch_clock,
+            DetailedRecord::Squashed { fetch_clock, .. } => *fetch_clock,
+            DetailedRecord::NopStall { fetch_clock } => *fetch_clock,
+        }
+    }
+
+    /// The retired payload, if this record retired.
+    pub fn retired(&self) -> Option<&RetiredInfo> {
+        match self {
+            DetailedRecord::Retired(r) => Some(r),
+            _ => None,
+        }
+    }
+}
+
+/// A detailed trace plus run-level statistics the simulator reports
+/// directly (the "gem5 ground truth" side of every evaluation figure).
+#[derive(Debug, Clone, Default)]
+pub struct DetailedTrace {
+    /// Benchmark name.
+    pub name: String,
+    /// Microarchitecture name the trace was generated on.
+    pub uarch: String,
+    /// Records in fetch order.
+    pub records: Vec<DetailedRecord>,
+    /// Total simulated cycles (retire clock of the last instruction).
+    pub total_cycles: u64,
+}
+
+impl DetailedTrace {
+    /// Number of retired instructions.
+    pub fn retired_count(&self) -> usize {
+        self.records.iter().filter(|r| r.retired().is_some()).count()
+    }
+
+    /// Number of squashed speculative records.
+    pub fn squashed_count(&self) -> usize {
+        self.records
+            .iter()
+            .filter(|r| matches!(r, DetailedRecord::Squashed { .. }))
+            .count()
+    }
+
+    /// Number of nop-stall records.
+    pub fn nop_count(&self) -> usize {
+        self.records
+            .iter()
+            .filter(|r| matches!(r, DetailedRecord::NopStall { .. }))
+            .count()
+    }
+
+    /// Ground-truth CPI.
+    pub fn cpi(&self) -> f64 {
+        let n = self.retired_count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.total_cycles as f64 / n as f64
+    }
+
+    /// Iterator over retired records only, in order.
+    pub fn retired(&self) -> impl Iterator<Item = &RetiredInfo> {
+        self.records.iter().filter_map(|r| r.retired())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_retired(fetch: u64, retire: u64) -> RetiredInfo {
+        RetiredInfo {
+            func: FuncRecord {
+                pc: 0x400000,
+                opcode: Opcode::Add,
+                reg_bitmap: 0b110,
+                mem_addr: 0,
+                mem_bytes: 0,
+                taken: false,
+            },
+            fetch_clock: fetch,
+            retire_clock: retire,
+            branch_mispred: false,
+            access_level: AccessLevel::None,
+            icache_miss: false,
+            tlb_miss: false,
+        }
+    }
+
+    #[test]
+    fn access_level_round_trip() {
+        for i in 0..AccessLevel::COUNT {
+            assert_eq!(AccessLevel::from_index(i).index(), i);
+        }
+    }
+
+    #[test]
+    fn l1_miss_classification() {
+        assert!(!AccessLevel::None.is_l1_miss());
+        assert!(!AccessLevel::L1.is_l1_miss());
+        assert!(AccessLevel::L2.is_l1_miss());
+        assert!(AccessLevel::Mem.is_l1_miss());
+    }
+
+    #[test]
+    fn func_record_register_iteration() {
+        let r = FuncRecord {
+            pc: 0,
+            opcode: Opcode::Add,
+            reg_bitmap: (1 << 0) | (1 << 33),
+            mem_addr: 0,
+            mem_bytes: 0,
+            taken: false,
+        };
+        let regs: Vec<Reg> = r.registers().collect();
+        assert_eq!(regs.len(), 2);
+        assert_eq!(regs[0].index(), 0);
+        assert_eq!(regs[1].index(), 33);
+    }
+
+    #[test]
+    fn detailed_trace_counts() {
+        let t = DetailedTrace {
+            name: "t".into(),
+            uarch: "A".into(),
+            records: vec![
+                DetailedRecord::Retired(sample_retired(0, 3)),
+                DetailedRecord::Squashed {
+                    pc: 4,
+                    opcode: Opcode::Sub,
+                    fetch_clock: 1,
+                },
+                DetailedRecord::NopStall { fetch_clock: 2 },
+                DetailedRecord::Retired(sample_retired(3, 6)),
+            ],
+            total_cycles: 6,
+        };
+        assert_eq!(t.retired_count(), 2);
+        assert_eq!(t.squashed_count(), 1);
+        assert_eq!(t.nop_count(), 1);
+        assert!((t.cpi() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cpi_of_empty_trace_is_zero() {
+        let t = DetailedTrace::default();
+        assert_eq!(t.cpi(), 0.0);
+    }
+}

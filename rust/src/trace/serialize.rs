@@ -1,0 +1,327 @@
+//! Binary trace serialization (format `TAOT` v1).
+//!
+//! A purpose-built little-endian binary format: traces at paper scale run
+//! to hundreds of millions of records, so the writer/reader stream through
+//! `BufWriter`/`BufReader` without intermediate allocation. A text dump is
+//! available via `Display` on records for debugging; the binary format is
+//! the interchange between the `tao datagen` step and everything else.
+
+use super::record::{
+    AccessLevel, DetailedRecord, DetailedTrace, FuncRecord, FunctionalTrace, RetiredInfo,
+};
+use crate::isa::Opcode;
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC_FUNC: &[u8; 8] = b"TAOTFNC1";
+const MAGIC_DET: &[u8; 8] = b"TAOTDET1";
+
+const TAG_RETIRED: u8 = 0;
+const TAG_SQUASHED: u8 = 1;
+const TAG_NOP: u8 = 2;
+
+fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
+    write_u64(w, s.len() as u64)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_u8(r: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+fn read_str(r: &mut impl Read) -> Result<String> {
+    let len = read_u64(r)? as usize;
+    ensure!(len < 1 << 20, "unreasonable string length {len}");
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(String::from_utf8(buf)?)
+}
+
+fn write_func_record(w: &mut impl Write, rec: &FuncRecord) -> Result<()> {
+    write_u64(w, rec.pc)?;
+    w.write_all(&[rec.opcode.index() as u8])?;
+    write_u64(w, rec.reg_bitmap)?;
+    write_u64(w, rec.mem_addr)?;
+    w.write_all(&[rec.mem_bytes, rec.taken as u8])?;
+    Ok(())
+}
+
+fn read_func_record(r: &mut impl Read) -> Result<FuncRecord> {
+    let pc = read_u64(r)?;
+    let op = read_u8(r)? as usize;
+    ensure!(op < Opcode::COUNT, "bad opcode id {op}");
+    let reg_bitmap = read_u64(r)?;
+    let mem_addr = read_u64(r)?;
+    let mem_bytes = read_u8(r)?;
+    let taken = read_u8(r)? != 0;
+    Ok(FuncRecord {
+        pc,
+        opcode: Opcode::from_index(op),
+        reg_bitmap,
+        mem_addr,
+        mem_bytes,
+        taken,
+    })
+}
+
+/// Write a functional trace to `path`.
+pub fn write_functional(path: &Path, trace: &FunctionalTrace) -> Result<()> {
+    let file = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC_FUNC)?;
+    write_str(&mut w, &trace.name)?;
+    write_u64(&mut w, trace.records.len() as u64)?;
+    for rec in &trace.records {
+        write_func_record(&mut w, rec)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a functional trace from `path`.
+pub fn read_functional(path: &Path) -> Result<FunctionalTrace> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    ensure!(&magic == MAGIC_FUNC, "not a functional trace: bad magic");
+    let name = read_str(&mut r)?;
+    let n = read_u64(&mut r)? as usize;
+    let mut records = Vec::with_capacity(n);
+    for _ in 0..n {
+        records.push(read_func_record(&mut r)?);
+    }
+    Ok(FunctionalTrace { name, records })
+}
+
+/// Write a detailed trace to `path`.
+pub fn write_detailed(path: &Path, trace: &DetailedTrace) -> Result<()> {
+    let file = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC_DET)?;
+    write_str(&mut w, &trace.name)?;
+    write_str(&mut w, &trace.uarch)?;
+    write_u64(&mut w, trace.total_cycles)?;
+    write_u64(&mut w, trace.records.len() as u64)?;
+    for rec in &trace.records {
+        match rec {
+            DetailedRecord::Retired(info) => {
+                w.write_all(&[TAG_RETIRED])?;
+                write_func_record(&mut w, &info.func)?;
+                write_u64(&mut w, info.fetch_clock)?;
+                write_u64(&mut w, info.retire_clock)?;
+                w.write_all(&[
+                    info.branch_mispred as u8,
+                    info.access_level.index() as u8,
+                    info.icache_miss as u8,
+                    info.tlb_miss as u8,
+                ])?;
+            }
+            DetailedRecord::Squashed {
+                pc,
+                opcode,
+                fetch_clock,
+            } => {
+                w.write_all(&[TAG_SQUASHED])?;
+                write_u64(&mut w, *pc)?;
+                w.write_all(&[opcode.index() as u8])?;
+                write_u64(&mut w, *fetch_clock)?;
+            }
+            DetailedRecord::NopStall { fetch_clock } => {
+                w.write_all(&[TAG_NOP])?;
+                write_u64(&mut w, *fetch_clock)?;
+            }
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a detailed trace from `path`.
+pub fn read_detailed(path: &Path) -> Result<DetailedTrace> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    ensure!(&magic == MAGIC_DET, "not a detailed trace: bad magic");
+    let name = read_str(&mut r)?;
+    let uarch = read_str(&mut r)?;
+    let total_cycles = read_u64(&mut r)?;
+    let n = read_u64(&mut r)? as usize;
+    let mut records = Vec::with_capacity(n);
+    for _ in 0..n {
+        let tag = read_u8(&mut r)?;
+        let rec = match tag {
+            TAG_RETIRED => {
+                let func = read_func_record(&mut r)?;
+                let fetch_clock = read_u64(&mut r)?;
+                let retire_clock = read_u64(&mut r)?;
+                let branch_mispred = read_u8(&mut r)? != 0;
+                let level = read_u8(&mut r)? as usize;
+                ensure!(level < AccessLevel::COUNT, "bad access level {level}");
+                let icache_miss = read_u8(&mut r)? != 0;
+                let tlb_miss = read_u8(&mut r)? != 0;
+                DetailedRecord::Retired(RetiredInfo {
+                    func,
+                    fetch_clock,
+                    retire_clock,
+                    branch_mispred,
+                    access_level: AccessLevel::from_index(level),
+                    icache_miss,
+                    tlb_miss,
+                })
+            }
+            TAG_SQUASHED => {
+                let pc = read_u64(&mut r)?;
+                let op = read_u8(&mut r)? as usize;
+                ensure!(op < Opcode::COUNT, "bad opcode id {op}");
+                let fetch_clock = read_u64(&mut r)?;
+                DetailedRecord::Squashed {
+                    pc,
+                    opcode: Opcode::from_index(op),
+                    fetch_clock,
+                }
+            }
+            TAG_NOP => DetailedRecord::NopStall {
+                fetch_clock: read_u64(&mut r)?,
+            },
+            _ => bail!("bad record tag {tag}"),
+        };
+        records.push(rec);
+    }
+    Ok(DetailedTrace {
+        name,
+        uarch,
+        records,
+        total_cycles,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Opcode;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("tao-test-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample_functional() -> FunctionalTrace {
+        FunctionalTrace {
+            name: "mcf".into(),
+            records: vec![
+                FuncRecord {
+                    pc: 0x400000,
+                    opcode: Opcode::Ldr,
+                    reg_bitmap: 0b11,
+                    mem_addr: 0x10000040,
+                    mem_bytes: 8,
+                    taken: false,
+                },
+                FuncRecord {
+                    pc: 0x400004,
+                    opcode: Opcode::Bcond,
+                    reg_bitmap: 0b100,
+                    mem_addr: 0,
+                    mem_bytes: 0,
+                    taken: true,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn functional_round_trip() {
+        let path = tmpdir().join("func_rt.trace");
+        let t = sample_functional();
+        write_functional(&path, &t).unwrap();
+        let back = read_functional(&path).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn detailed_round_trip() {
+        let path = tmpdir().join("det_rt.trace");
+        let t = DetailedTrace {
+            name: "mcf".into(),
+            uarch: "uarch_a".into(),
+            total_cycles: 99,
+            records: vec![
+                DetailedRecord::Retired(RetiredInfo {
+                    func: sample_functional().records[0],
+                    fetch_clock: 1,
+                    retire_clock: 9,
+                    branch_mispred: false,
+                    access_level: AccessLevel::L2,
+                    icache_miss: true,
+                    tlb_miss: false,
+                }),
+                DetailedRecord::Squashed {
+                    pc: 0x400008,
+                    opcode: Opcode::Add,
+                    fetch_clock: 2,
+                },
+                DetailedRecord::NopStall { fetch_clock: 3 },
+            ],
+        };
+        write_detailed(&path, &t).unwrap();
+        let back = read_detailed(&path).unwrap();
+        assert_eq!(back.name, t.name);
+        assert_eq!(back.uarch, t.uarch);
+        assert_eq!(back.total_cycles, t.total_cycles);
+        assert_eq!(back.records, t.records);
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let dir = tmpdir();
+        let fpath = dir.join("f.trace");
+        let dpath = dir.join("d.trace");
+        write_functional(&fpath, &sample_functional()).unwrap();
+        assert!(read_detailed(&fpath).is_err());
+        let dt = DetailedTrace {
+            name: "x".into(),
+            uarch: "a".into(),
+            ..Default::default()
+        };
+        write_detailed(&dpath, &dt).unwrap();
+        assert!(read_functional(&dpath).is_err());
+    }
+
+    #[test]
+    fn truncated_file_errors() {
+        let path = tmpdir().join("trunc.trace");
+        write_functional(&path, &sample_functional()).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &data[..data.len() - 4]).unwrap();
+        assert!(read_functional(&path).is_err());
+    }
+
+    #[test]
+    fn empty_trace_round_trips() {
+        let path = tmpdir().join("empty.trace");
+        let t = FunctionalTrace {
+            name: "empty".into(),
+            records: vec![],
+        };
+        write_functional(&path, &t).unwrap();
+        assert_eq!(read_functional(&path).unwrap(), t);
+    }
+}

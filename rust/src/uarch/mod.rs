@@ -1,0 +1,271 @@
+//! Microarchitecture configuration — the paper's Table 3 design space.
+//!
+//! A [`UarchConfig`] fully determines the detailed model's behaviour:
+//! pipeline (fetch width, ROB size), branch predictor algorithm, and the
+//! three cache geometries. The three named designs µArch A/B/C used
+//! throughout the paper's evaluation are provided as presets, and
+//! `crate::dse` enumerates/samples the full space (184,320 designs).
+
+use std::fmt;
+
+/// Branch predictor algorithm choices (Table 3 row "Branch pred.").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PredictorKind {
+    /// gem5-style `LocalBP`: PC-indexed table of 2-bit counters.
+    Local,
+    /// Bi-Mode: two direction-biased PHTs + a choice PHT.
+    BiMode,
+    /// TAGE-SC-L (structurally faithful, reduced table count; see
+    /// `crate::detailed::predictor::TageScL`).
+    TageScL,
+    /// Alpha 21264-style tournament of local and global predictors.
+    Tournament,
+}
+
+impl PredictorKind {
+    /// All predictor kinds, in Table 3 order.
+    pub const ALL: [PredictorKind; 4] = [
+        PredictorKind::Local,
+        PredictorKind::BiMode,
+        PredictorKind::TageScL,
+        PredictorKind::Tournament,
+    ];
+
+    /// Parse from the names used in configs and CLI flags.
+    pub fn parse(s: &str) -> Option<PredictorKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "local" => Some(PredictorKind::Local),
+            "bimode" => Some(PredictorKind::BiMode),
+            "tage_sc_l" | "tagescl" | "tage" => Some(PredictorKind::TageScL),
+            "tournament" => Some(PredictorKind::Tournament),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (matches the paper's Table 3 spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            PredictorKind::Local => "Local",
+            PredictorKind::BiMode => "BiMode",
+            PredictorKind::TageScL => "TAGE_SC_L",
+            PredictorKind::Tournament => "Tournament",
+        }
+    }
+}
+
+impl fmt::Display for PredictorKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Geometry of one cache (size/associativity; 64-byte lines throughout,
+/// as gem5's default).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheGeometry {
+    /// Total capacity in bytes.
+    pub size_bytes: u64,
+    /// Set associativity (ways).
+    pub assoc: u32,
+}
+
+impl CacheGeometry {
+    /// Cache line size in bytes (fixed across the design space).
+    pub const LINE_BYTES: u64 = 64;
+
+    /// Number of sets.
+    pub fn sets(&self) -> u64 {
+        self.size_bytes / Self::LINE_BYTES / self.assoc as u64
+    }
+
+    /// kB/MB pretty-printer ("32KB", "1MB").
+    pub fn size_label(&self) -> String {
+        if self.size_bytes >= 1 << 20 {
+            format!("{}MB", self.size_bytes >> 20)
+        } else {
+            format!("{}KB", self.size_bytes >> 10)
+        }
+    }
+}
+
+/// Fixed timing parameters shared across the design space. These mirror
+/// the latencies gem5's example ARM O3 configs use; they are not part of
+/// Table 3 and stay constant in every experiment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Timing {
+    /// L1 (I or D) hit latency, cycles.
+    pub l1_lat: u64,
+    /// L2 hit latency, cycles (added on L1 miss).
+    pub l2_lat: u64,
+    /// Main memory latency, cycles (added on L2 miss).
+    pub mem_lat: u64,
+    /// Extra cycles on a data-TLB miss (page-walk).
+    pub tlb_miss_lat: u64,
+    /// Front-end depth: cycles from fetch to earliest issue.
+    pub decode_lat: u64,
+    /// Minimum branch misprediction redirect penalty, cycles.
+    pub mispredict_penalty: u64,
+    /// Data TLB entries (fully associative).
+    pub dtlb_entries: usize,
+}
+
+impl Default for Timing {
+    fn default() -> Timing {
+        Timing {
+            l1_lat: 2,
+            l2_lat: 12,
+            mem_lat: 90,
+            tlb_miss_lat: 20,
+            decode_lat: 3,
+            mispredict_penalty: 5,
+            dtlb_entries: 64,
+        }
+    }
+}
+
+/// A complete microarchitecture design point (one row of Table 3's
+/// cartesian product) plus fixed timing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UarchConfig {
+    /// Design name ("uarch_a", or a generated id for sampled designs).
+    pub name: String,
+    /// Instructions fetched (and committed) per cycle: 2, 3 or 4.
+    pub fetch_width: u32,
+    /// Reorder-buffer entries: 32..128.
+    pub rob_size: u32,
+    /// Branch predictor algorithm.
+    pub predictor: PredictorKind,
+    /// L1 data cache geometry.
+    pub l1d: CacheGeometry,
+    /// L1 instruction cache geometry.
+    pub l1i: CacheGeometry,
+    /// Unified L2 cache geometry.
+    pub l2: CacheGeometry,
+    /// Fixed latencies.
+    pub timing: Timing,
+}
+
+impl UarchConfig {
+    /// Paper's µArch A: narrow core, small caches, simple predictor.
+    pub fn uarch_a() -> UarchConfig {
+        UarchConfig {
+            name: "uarch_a".into(),
+            fetch_width: 2,
+            rob_size: 32,
+            predictor: PredictorKind::Local,
+            l1d: CacheGeometry { size_bytes: 16 << 10, assoc: 2 },
+            l1i: CacheGeometry { size_bytes: 8 << 10, assoc: 2 },
+            l2: CacheGeometry { size_bytes: 256 << 10, assoc: 2 },
+            timing: Timing::default(),
+        }
+    }
+
+    /// Paper's µArch B: mid-range design.
+    pub fn uarch_b() -> UarchConfig {
+        UarchConfig {
+            name: "uarch_b".into(),
+            fetch_width: 3,
+            rob_size: 96,
+            predictor: PredictorKind::BiMode,
+            l1d: CacheGeometry { size_bytes: 32 << 10, assoc: 4 },
+            l1i: CacheGeometry { size_bytes: 16 << 10, assoc: 4 },
+            l2: CacheGeometry { size_bytes: 1 << 20, assoc: 4 },
+            timing: Timing::default(),
+        }
+    }
+
+    /// Paper's µArch C: wide core, large caches, tournament predictor.
+    pub fn uarch_c() -> UarchConfig {
+        UarchConfig {
+            name: "uarch_c".into(),
+            fetch_width: 4,
+            rob_size: 128,
+            predictor: PredictorKind::Tournament,
+            l1d: CacheGeometry { size_bytes: 64 << 10, assoc: 8 },
+            l1i: CacheGeometry { size_bytes: 32 << 10, assoc: 8 },
+            l2: CacheGeometry { size_bytes: 4 << 20, assoc: 8 },
+            timing: Timing::default(),
+        }
+    }
+
+    /// Look up a named preset.
+    pub fn preset(name: &str) -> Option<UarchConfig> {
+        match name.to_ascii_lowercase().as_str() {
+            "a" | "uarch_a" => Some(Self::uarch_a()),
+            "b" | "uarch_b" => Some(Self::uarch_b()),
+            "c" | "uarch_c" => Some(Self::uarch_c()),
+            _ => None,
+        }
+    }
+
+    /// One-line summary for logs and reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: fetch={} rob={} bp={} l1d={}x{} l1i={}x{} l2={}x{}",
+            self.name,
+            self.fetch_width,
+            self.rob_size,
+            self.predictor,
+            self.l1d.size_label(),
+            self.l1d.assoc,
+            self.l1i.size_label(),
+            self.l1i.assoc,
+            self.l2.size_label(),
+            self.l2.assoc,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_table3_columns() {
+        let a = UarchConfig::uarch_a();
+        assert_eq!(a.fetch_width, 2);
+        assert_eq!(a.rob_size, 32);
+        assert_eq!(a.predictor, PredictorKind::Local);
+        assert_eq!(a.l1d.size_bytes, 16 << 10);
+        let b = UarchConfig::uarch_b();
+        assert_eq!(b.predictor, PredictorKind::BiMode);
+        assert_eq!(b.l2.size_bytes, 1 << 20);
+        let c = UarchConfig::uarch_c();
+        assert_eq!(c.fetch_width, 4);
+        assert_eq!(c.rob_size, 128);
+        assert_eq!(c.l1d.assoc, 8);
+    }
+
+    #[test]
+    fn preset_lookup() {
+        assert!(UarchConfig::preset("A").is_some());
+        assert!(UarchConfig::preset("uarch_b").is_some());
+        assert!(UarchConfig::preset("z").is_none());
+    }
+
+    #[test]
+    fn cache_geometry_sets() {
+        let g = CacheGeometry { size_bytes: 32 << 10, assoc: 4 };
+        assert_eq!(g.sets(), 128);
+        assert_eq!(g.size_label(), "32KB");
+        let g2 = CacheGeometry { size_bytes: 2 << 20, assoc: 8 };
+        assert_eq!(g2.size_label(), "2MB");
+    }
+
+    #[test]
+    fn predictor_parse_round_trip() {
+        for p in PredictorKind::ALL {
+            assert_eq!(PredictorKind::parse(p.name()), Some(p));
+        }
+        assert_eq!(PredictorKind::parse("tage"), Some(PredictorKind::TageScL));
+        assert_eq!(PredictorKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn summary_contains_key_fields() {
+        let s = UarchConfig::uarch_c().summary();
+        assert!(s.contains("fetch=4"));
+        assert!(s.contains("Tournament"));
+        assert!(s.contains("4MB"));
+    }
+}

@@ -1,0 +1,58 @@
+//! Minimal benchmark harness (the vendored build has no criterion).
+//!
+//! `cargo bench` targets use [`Bench`] for warmup + repeated timed runs
+//! with mean/min/max reporting. Keep benchmarks deterministic: seed
+//! everything through `crate::util::Rng`.
+
+use std::time::{Duration, Instant};
+
+/// A named benchmark group printer.
+pub struct Bench {
+    name: String,
+    warmup: u32,
+    iters: u32,
+}
+
+impl Bench {
+    /// New bench with defaults (1 warmup, 5 measured iterations).
+    pub fn new(name: &str) -> Bench {
+        Bench {
+            name: name.to_string(),
+            warmup: 1,
+            iters: 5,
+        }
+    }
+
+    /// Set measured iterations.
+    pub fn iters(mut self, n: u32) -> Self {
+        self.iters = n;
+        self
+    }
+
+    /// Run `f`, which processes `items` logical items per call, and print
+    /// mean latency + throughput.
+    pub fn run<T>(&self, case: &str, items: u64, mut f: impl FnMut() -> T) {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.iters as usize);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed());
+        }
+        let total: Duration = times.iter().sum();
+        let mean = total / self.iters;
+        let min = times.iter().min().unwrap();
+        let max = times.iter().max().unwrap();
+        let mips = items as f64 / mean.as_secs_f64() / 1e6;
+        println!(
+            "{:<44} {:>10.3?} /iter (min {:>9.3?}, max {:>9.3?})  {:>9.3} Mitems/s",
+            format!("{}/{}", self.name, case),
+            mean,
+            min,
+            max,
+            mips
+        );
+    }
+}

@@ -1,0 +1,9 @@
+//! Small shared utilities: deterministic PRNG, timing helpers.
+
+pub mod benchkit;
+pub mod json;
+pub mod rng;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Stopwatch;

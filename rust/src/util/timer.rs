@@ -1,0 +1,90 @@
+//! Wall-clock measurement helper used by the report harnesses.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch accumulating elapsed time across start/stop cycles.
+#[derive(Debug)]
+pub struct Stopwatch {
+    started: Option<Instant>,
+    accumulated: Duration,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    /// New, stopped stopwatch with zero accumulated time.
+    pub fn new() -> Stopwatch {
+        Stopwatch {
+            started: None,
+            accumulated: Duration::ZERO,
+        }
+    }
+
+    /// Start (or restart) measuring.
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    /// Stop measuring and fold the elapsed interval into the total.
+    pub fn stop(&mut self) {
+        if let Some(t) = self.started.take() {
+            self.accumulated += t.elapsed();
+        }
+    }
+
+    /// Total accumulated time (including a currently-running interval).
+    pub fn elapsed(&self) -> Duration {
+        let running = self.started.map(|t| t.elapsed()).unwrap_or(Duration::ZERO);
+        self.accumulated + running
+    }
+
+    /// Time a closure, returning its result and folding the elapsed time
+    /// into the total.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        self.start();
+        let out = f();
+        self.stop();
+        out
+    }
+}
+
+/// Instructions-per-second helper: MIPS given an instruction count and a
+/// duration.
+pub fn mips(instructions: u64, elapsed: Duration) -> f64 {
+    if elapsed.is_zero() {
+        return f64::INFINITY;
+    }
+    instructions as f64 / elapsed.as_secs_f64() / 1.0e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_across_intervals() {
+        let mut sw = Stopwatch::new();
+        sw.time(|| std::thread::sleep(Duration::from_millis(5)));
+        let first = sw.elapsed();
+        assert!(first >= Duration::from_millis(5));
+        sw.time(|| std::thread::sleep(Duration::from_millis(5)));
+        assert!(sw.elapsed() >= first + Duration::from_millis(5));
+    }
+
+    #[test]
+    fn stop_without_start_is_noop() {
+        let mut sw = Stopwatch::new();
+        sw.stop();
+        assert_eq!(sw.elapsed(), Duration::ZERO);
+    }
+
+    #[test]
+    fn mips_math() {
+        assert!((mips(2_000_000, Duration::from_secs(1)) - 2.0).abs() < 1e-9);
+        assert!(mips(1, Duration::ZERO).is_infinite());
+    }
+}

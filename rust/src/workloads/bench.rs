@@ -1,0 +1,609 @@
+//! The eight synthetic SPEC CPU2017 stand-in benchmarks (Table 2).
+//!
+//! Each generator reproduces the *microarchitectural character* the paper
+//! attributes to its SPEC counterpart — instruction mix, branch
+//! predictability, and memory locality — rather than its semantics (the DL
+//! pipeline only ever observes the trace shape; see DESIGN.md §1). All
+//! generators are deterministic in `seed`.
+
+use super::builder::ProgramBuilder;
+use crate::isa::{Condition, Opcode, Program, Reg};
+use crate::util::Rng;
+
+// Register conventions used by every benchmark:
+//   x1      outer-loop counter          x10..x15  base addresses / pointers
+//   x2..x9  scratch                     x20..x25  long-lived accumulators
+//   x28     LCG state                   x30       link register
+//   f0..f7  FP scratch
+
+const LCG_MUL: i64 = 6364136223846793005;
+const LCG_ADD: i64 = 1442695040888963407;
+
+/// Emit `x28 = x28 * LCG_MUL + LCG_ADD; dst = (x28 >> 59) & mask`.
+fn lcg_bits(b: &mut ProgramBuilder, dst: Reg, mask: i64) {
+    b.movi(Reg::x(9), LCG_MUL);
+    b.alu(Opcode::Mul, Reg::x(28), Reg::x(28), Reg::x(9));
+    b.alui(Opcode::Add, Reg::x(28), Reg::x(28), LCG_ADD);
+    b.alui(Opcode::Lsr, dst, Reg::x(28), 59);
+    b.alui(Opcode::And, dst, dst, mask);
+}
+
+
+/// `dst = base << ((lcg >> 59) & sel_mask)` — draws a power-of-two
+/// parameter from the program's LCG. Training benchmarks use this to
+/// sweep a *family* of regimes (stride × footprint × branch bias) across
+/// outer iterations, mirroring the internal phase diversity of real SPEC
+/// programs. Without the sweep the DL model only ever sees a few point
+/// modes and cannot interpolate to the test benchmarks' parameters.
+fn lcg_pow2(b: &mut ProgramBuilder, dst: Reg, base: i64, sel_mask: i64) {
+    lcg_bits(b, Reg::x(25), sel_mask);
+    b.movi(dst, base);
+    b.alu(Opcode::Lsl, dst, dst, Reg::x(25));
+}
+
+/// `dst = (base << k) - 1` — a swept power-of-two mask.
+fn lcg_pow2_mask(b: &mut ProgramBuilder, dst: Reg, base: i64, sel_mask: i64) {
+    lcg_pow2(b, dst, base, sel_mask);
+    b.alui(Opcode::Sub, dst, dst, 1);
+}
+
+/// `531.deepsjeng_r` stand-in — chess alpha-beta search: integer-heavy,
+/// branchy, hash-table probes over a small working set (~96 KiB).
+pub fn dee(seed: u64) -> Program {
+    let mut rng = Rng::new(seed ^ 0xdee);
+    let mut b = ProgramBuilder::new("dee");
+    let board_words: u64 = 8192; // 64 KiB
+    let hash_words: u64 = 4096; // 32 KiB
+    let board = b.alloc(board_words * 8);
+    let hash = b.alloc(hash_words * 8);
+    for i in 0..board_words {
+        b.init_word(board + i * 8, rng.next_u64());
+    }
+    for i in 0..hash_words {
+        b.init_word(hash + i * 8, rng.next_u64() & 0xFF);
+    }
+
+    b.movi(Reg::x(10), board as i64);
+    b.movi(Reg::x(11), hash as i64);
+    b.movi(Reg::x(28), seed as i64 | 1);
+    let outer = b.here();
+    // Swept phases: hash-table locality (mask 63..4095 words) and
+    // cutoff-branch bias ({1,3,7} -> 50%..12.5% taken).
+    lcg_pow2_mask(&mut b, Reg::x(15), 64, 6);
+    lcg_pow2_mask(&mut b, Reg::x(17), 2, 2);
+    b.movi(Reg::x(1), board_words as i64); // position counter
+    b.movi(Reg::x(2), 0); // board offset
+
+    let pos_loop = b.here();
+    // v = board[off]
+    b.ldr_idx(Reg::x(3), Reg::x(10), Reg::x(2), 0);
+    // zobrist-ish hash: h = (v ^ (v >> 13)) * M
+    b.alui(Opcode::Lsr, Reg::x(4), Reg::x(3), 13);
+    b.alu(Opcode::Eor, Reg::x(4), Reg::x(3), Reg::x(4));
+    b.movi(Reg::x(9), 0x9E3779B97F4A7C15u64 as i64);
+    b.alu(Opcode::Mul, Reg::x(4), Reg::x(4), Reg::x(9));
+    // probe: e = hash[(h & mask) * 8]
+    b.alui(Opcode::Lsr, Reg::x(5), Reg::x(4), 20);
+    b.alu(Opcode::And, Reg::x(5), Reg::x(5), Reg::x(15));
+    b.alui(Opcode::Lsl, Reg::x(5), Reg::x(5), 3);
+    b.ldr_idx(Reg::x(6), Reg::x(11), Reg::x(5), 0);
+    // hash hit? (biased: values are 0..255, compare to v&0xFF)
+    let miss = b.label();
+    b.alui(Opcode::And, Reg::x(7), Reg::x(3), 0xFF);
+    b.bcond(Condition::Ne, Reg::x(6), Reg::x(7), miss);
+    // hit path: bump score
+    b.alui(Opcode::Add, Reg::x(20), Reg::x(20), 3);
+    b.place(miss);
+    // store updated entry (write traffic into hash table)
+    b.str_idx(Reg::x(7), Reg::x(11), Reg::x(5), 0);
+    // inner "move generation" loop: trips = v & 7 (data-dependent)
+    b.alui(Opcode::And, Reg::x(8), Reg::x(3), 7);
+    let moves_done = b.label();
+    b.cbz(Reg::x(8), moves_done);
+    let moves = b.here();
+    b.alu(Opcode::Eor, Reg::x(21), Reg::x(21), Reg::x(8));
+    b.alui(Opcode::Lsl, Reg::x(22), Reg::x(21), 1);
+    b.alui(Opcode::Subs, Reg::x(8), Reg::x(8), 1);
+    b.cbnz(Reg::x(8), moves);
+    b.place(moves_done);
+    // unpredictable alpha-beta cutoff: ~50/50 from data bit 17
+    let no_cut = b.label();
+    b.alui(Opcode::Lsr, Reg::x(7), Reg::x(3), 17);
+    b.alu(Opcode::And, Reg::x(7), Reg::x(7), Reg::x(17));
+    b.cbz(Reg::x(7), no_cut);
+    b.alui(Opcode::Add, Reg::x(23), Reg::x(23), 1);
+    b.place(no_cut);
+    // next position
+    b.alui(Opcode::Add, Reg::x(2), Reg::x(2), 8);
+    b.alui(Opcode::Subs, Reg::x(1), Reg::x(1), 1);
+    b.cbnz(Reg::x(1), pos_loop);
+    b.movi(Reg::x(2), 0);
+    b.b(outer);
+    b.build()
+}
+
+/// `641.leela_s` stand-in — Go MCTS: random tree walk over ~512 KiB of
+/// nodes (spilling the smaller L2s, like leela's tree exceeds cache),
+/// 50/50 data-dependent branches, occasional FP win-rate updates.
+pub fn lee(seed: u64) -> Program {
+    let mut rng = Rng::new(seed ^ 0x1ee);
+    let mut b = ProgramBuilder::new("lee");
+    let node_words: u64 = 1_048_576; // 8 MiB pool; phases walk sub-regions
+    let nodes = b.alloc(node_words * 8);
+    for i in 0..node_words {
+        b.init_word(nodes + i * 8, rng.next_u64());
+    }
+
+    b.movi(Reg::x(10), nodes as i64);
+    b.movi(Reg::x(28), seed as i64 | 1);
+    b.movi(Reg::x(2), 0); // node index (words)
+    let outer = b.here();
+    // Swept phases: walk region 64KiB..8MiB (8192..1M words) — from
+    // cache-resident to memory-bound dependent chasing — and explore
+    // branch bias {1,3,7,15} (50%..6% taken).
+    lcg_pow2_mask(&mut b, Reg::x(15), 8_192, 7);
+    lcg_pow2_mask(&mut b, Reg::x(17), 2, 3);
+    b.movi(Reg::x(1), 4096); // playout steps
+
+    let walk = b.here();
+    // v = nodes[idx]
+    b.alui(Opcode::Lsl, Reg::x(3), Reg::x(2), 3);
+    b.ldr_idx(Reg::x(4), Reg::x(10), Reg::x(3), 0);
+    // unpredictable expand/exploit decision on value parity
+    let exploit = b.label();
+    let merged = b.label();
+    b.alu(Opcode::And, Reg::x(5), Reg::x(4), Reg::x(17));
+    b.cbz(Reg::x(5), exploit);
+    // explore: idx = (idx*5 + (v>>32)) & mask
+    b.alui(Opcode::Lsr, Reg::x(6), Reg::x(4), 32);
+    b.movi(Reg::x(9), 5);
+    b.alu(Opcode::Mul, Reg::x(2), Reg::x(2), Reg::x(9));
+    b.alu(Opcode::Add, Reg::x(2), Reg::x(2), Reg::x(6));
+    b.b(merged);
+    b.place(exploit);
+    // exploit: idx = idx + (v & 63) + 1
+    b.alui(Opcode::And, Reg::x(6), Reg::x(4), 63);
+    b.alu(Opcode::Add, Reg::x(2), Reg::x(2), Reg::x(6));
+    b.alui(Opcode::Add, Reg::x(2), Reg::x(2), 1);
+    b.place(merged);
+    b.alu(Opcode::And, Reg::x(2), Reg::x(2), Reg::x(15));
+    // every 16th step: FP win-rate update
+    let no_fp = b.label();
+    b.alui(Opcode::And, Reg::x(7), Reg::x(1), 15);
+    b.cbnz(Reg::x(7), no_fp);
+    b.push(crate::isa::Instruction::new(Opcode::Fcvt).dst(Reg::f(0)).src1(Reg::x(4)));
+    b.push(
+        crate::isa::Instruction::new(Opcode::Fmul)
+            .dst(Reg::f(1))
+            .src1(Reg::f(1))
+            .src2(Reg::f(0)),
+    );
+    b.push(
+        crate::isa::Instruction::new(Opcode::Fadd)
+            .dst(Reg::f(2))
+            .src1(Reg::f(2))
+            .src2(Reg::f(1)),
+    );
+    b.place(no_fp);
+    b.alui(Opcode::Subs, Reg::x(1), Reg::x(1), 1);
+    b.cbnz(Reg::x(1), walk);
+    b.b(outer);
+    b.build()
+}
+
+/// `544.nab_r` stand-in — molecular dynamics: FP-dominant compute over a
+/// small (~96 KiB) working set, highly predictable branches.
+pub fn nab(seed: u64) -> Program {
+    let mut b = ProgramBuilder::new("nab");
+    let n: u64 = 32_768; // doubles per array (256 KiB); phases sweep sub-footprints
+    let a = b.alloc(n * 8);
+    let bb = b.alloc(n * 8);
+    let c = b.alloc(n * 8);
+    for i in 0..n {
+        let va = (i as f64).mul_add(0.001, 1.0) + (seed % 97) as f64 * 1e-4;
+        let vb = (i as f64).mul_add(-0.0005, 2.0);
+        b.init_word(a + i * 8, va.to_bits());
+        b.init_word(bb + i * 8, vb.to_bits());
+    }
+
+    b.movi(Reg::x(10), a as i64);
+    b.movi(Reg::x(11), bb as i64);
+    b.movi(Reg::x(12), c as i64);
+    let outer = b.here();
+    // Swept phases: stride 8..64 B, footprint 8..256 KiB.
+    lcg_pow2(&mut b, Reg::x(14), 8, 3);
+    lcg_pow2_mask(&mut b, Reg::x(15), 8 << 10, 5);
+    b.movi(Reg::x(1), 4096);
+    b.movi(Reg::x(2), 0); // byte offset
+
+    let body = b.here();
+    b.push(
+        crate::isa::Instruction::new(Opcode::Ldr)
+            .dst(Reg::f(0))
+            .src1(Reg::x(10))
+            .src2(Reg::x(2)),
+    );
+    b.push(
+        crate::isa::Instruction::new(Opcode::Ldr)
+            .dst(Reg::f(1))
+            .src1(Reg::x(11))
+            .src2(Reg::x(2)),
+    );
+    // force field: f2 = f0*f1 + f2 ; f3 = f2*f0 + f3 ; f4 = sqrt(|f3|)
+    b.push(
+        crate::isa::Instruction::new(Opcode::Fmadd)
+            .dst(Reg::f(2))
+            .src1(Reg::f(0))
+            .src2(Reg::f(1))
+            .src3(Reg::f(2)),
+    );
+    b.push(
+        crate::isa::Instruction::new(Opcode::Fmadd)
+            .dst(Reg::f(3))
+            .src1(Reg::f(2))
+            .src2(Reg::f(0))
+            .src3(Reg::f(3)),
+    );
+    // every 8th iteration: sqrt + store to c
+    let light = b.label();
+    b.alui(Opcode::And, Reg::x(4), Reg::x(1), 7);
+    b.cbnz(Reg::x(4), light);
+    b.push(crate::isa::Instruction::new(Opcode::Fsqrt).dst(Reg::f(4)).src1(Reg::f(3)));
+    b.push(
+        crate::isa::Instruction::new(Opcode::Str)
+            .src1(Reg::x(12))
+            .src2(Reg::x(2))
+            .src3(Reg::f(4)),
+    );
+    b.place(light);
+    b.push(
+        crate::isa::Instruction::new(Opcode::Fadd)
+            .dst(Reg::f(5))
+            .src1(Reg::f(5))
+            .src2(Reg::f(2)),
+    );
+    b.alu(Opcode::Add, Reg::x(2), Reg::x(2), Reg::x(14));
+    b.alu(Opcode::And, Reg::x(2), Reg::x(2), Reg::x(15));
+    b.alui(Opcode::Subs, Reg::x(1), Reg::x(1), 1);
+    b.cbnz(Reg::x(1), body);
+    b.b(outer);
+    b.build()
+}
+
+/// `654.roms_s` stand-in — ocean-model stencil: FP streaming over an
+/// 8 MiB grid (SPEC's roms_s streams a working set far beyond any L2,
+/// so the training data covers memory-level accesses and TLB misses),
+/// near-perfectly predictable branches, sequential locality.
+pub fn rom(_seed: u64) -> Program {
+    let mut b = ProgramBuilder::new("rom");
+    let words: u64 = 1_048_576; // 8 MiB
+    let grid = b.alloc(words * 8);
+
+    b.movi(Reg::x(10), grid as i64);
+    let outer = b.here();
+    // Swept phases: stride 8 B..1 KiB (sequential to TLB-pressuring
+    // strided) over regions 64 KiB..8 MiB (L1-resident to
+    // memory-streaming).
+    lcg_pow2(&mut b, Reg::x(14), 8, 7);
+    lcg_pow2_mask(&mut b, Reg::x(15), 64 << 10, 7);
+    b.movi(Reg::x(1), 16_384); // iterations per phase pass
+    b.movi(Reg::x(2), 8); // byte offset, start at word 1
+
+    let body = b.here();
+    b.push(
+        crate::isa::Instruction::new(Opcode::Ldr)
+            .dst(Reg::f(0))
+            .src1(Reg::x(10))
+            .src2(Reg::x(2))
+            .imm(-8),
+    );
+    b.push(
+        crate::isa::Instruction::new(Opcode::Ldr)
+            .dst(Reg::f(1))
+            .src1(Reg::x(10))
+            .src2(Reg::x(2))
+            .imm(8),
+    );
+    b.push(
+        crate::isa::Instruction::new(Opcode::Fadd)
+            .dst(Reg::f(2))
+            .src1(Reg::f(0))
+            .src2(Reg::f(1)),
+    );
+    b.push(
+        crate::isa::Instruction::new(Opcode::Fmul)
+            .dst(Reg::f(2))
+            .src1(Reg::f(2))
+            .imm(1), // ×1.0 — keeps the FP unit busy, values bounded
+    );
+    b.push(
+        crate::isa::Instruction::new(Opcode::Str)
+            .src1(Reg::x(10))
+            .src2(Reg::x(2))
+            .src3(Reg::f(2)),
+    );
+    b.alu(Opcode::Add, Reg::x(2), Reg::x(2), Reg::x(14));
+    b.alu(Opcode::And, Reg::x(2), Reg::x(2), Reg::x(15));
+    b.alui(Opcode::Orr, Reg::x(2), Reg::x(2), 8); // keep off >= 8 for the ±8 stencil
+    b.alui(Opcode::Subs, Reg::x(1), Reg::x(1), 1);
+    b.cbnz(Reg::x(1), body);
+    b.b(outer);
+    b.build()
+}
+
+/// `605.mcf_s` stand-in — network simplex: pointer chasing across an
+/// 8 MiB node pool (every hop a cache+TLB hazard), branches decided by
+/// loaded node payloads (effectively random).
+pub fn mcf(seed: u64) -> Program {
+    let mut rng = Rng::new(seed ^ 0xc0f);
+    let mut b = ProgramBuilder::new("mcf");
+    let node_count: u64 = 131_072; // × 64 B = 8 MiB
+    let stride: u64 = 64;
+    let pool = b.alloc(node_count * stride);
+
+    // Random cyclic permutation (Sattolo) so the chase visits every node.
+    let mut next: Vec<u64> = (0..node_count).collect();
+    {
+        let mut i = node_count as usize - 1;
+        while i > 0 {
+            let j = rng.index(i);
+            next.swap(i, j);
+            i -= 1;
+        }
+    }
+    // node[i].next (word 0) and node[i].payload (word 1)
+    for i in 0..node_count as usize {
+        let addr = pool + i as u64 * stride;
+        b.init_word(addr, pool + next[i] * stride);
+        b.init_word(addr + 8, rng.next_u64());
+    }
+
+    b.movi(Reg::x(10), pool as i64);
+    let outer = b.here();
+    // ptr = pool
+    b.push(crate::isa::Instruction::new(Opcode::Mov).dst(Reg::x(11)).src1(Reg::x(10)));
+    b.movi(Reg::x(1), node_count as i64);
+
+    let chase = b.here();
+    b.ldr(Reg::x(12), Reg::x(11), 0); // next ptr (serialized dependency)
+    b.ldr(Reg::x(13), Reg::x(11), 8); // payload
+    // cost test: unpredictable branch on payload bit
+    let cheap = b.label();
+    b.alui(Opcode::And, Reg::x(4), Reg::x(13), 1);
+    b.cbz(Reg::x(4), cheap);
+    b.alui(Opcode::Add, Reg::x(20), Reg::x(20), 1);
+    b.alui(Opcode::Lsr, Reg::x(5), Reg::x(13), 8);
+    b.alu(Opcode::Eor, Reg::x(21), Reg::x(21), Reg::x(5));
+    b.place(cheap);
+    b.push(crate::isa::Instruction::new(Opcode::Mov).dst(Reg::x(11)).src1(Reg::x(12)));
+    b.alui(Opcode::Subs, Reg::x(1), Reg::x(1), 1);
+    b.cbnz(Reg::x(1), chase);
+    b.b(outer);
+    b.build()
+}
+
+/// `523.xalancbmk_r` stand-in — XML transform: byte scanning with table
+/// lookups, a dispatch chain of data-dependent branches, and call-heavy
+/// control flow over a 256 KiB text buffer.
+pub fn xal(seed: u64) -> Program {
+    let mut rng = Rng::new(seed ^ 0xa1);
+    let mut b = ProgramBuilder::new("xal");
+    let text_bytes: u64 = 256 << 10;
+    let table_words: u64 = 256;
+    let text = b.alloc(text_bytes);
+    let table = b.alloc(table_words * 8);
+    for i in 0..text_bytes / 8 {
+        b.init_word(text + i * 8, rng.next_u64());
+    }
+    for i in 0..table_words {
+        b.init_word(table + i * 8, rng.gen_range(4));
+    }
+
+    // Handlers (subroutines).
+    let h0 = b.label();
+    let h1 = b.label();
+    let start = b.label();
+    b.b(start);
+    b.place(h0); // element handler: hash-ish update
+    b.alui(Opcode::Lsl, Reg::x(20), Reg::x(20), 1);
+    b.alu(Opcode::Eor, Reg::x(20), Reg::x(20), Reg::x(3));
+    b.alui(Opcode::Add, Reg::x(21), Reg::x(21), 1);
+    b.ret();
+    b.place(h1); // attribute handler: counter + table write-back
+    b.alui(Opcode::Add, Reg::x(22), Reg::x(22), 1);
+    b.alui(Opcode::And, Reg::x(6), Reg::x(3), table_words as i64 - 1);
+    b.alui(Opcode::Lsl, Reg::x(6), Reg::x(6), 3);
+    b.str_idx(Reg::x(22), Reg::x(11), Reg::x(6), 0);
+    b.ret();
+
+    b.place(start);
+    b.movi(Reg::x(10), text as i64);
+    b.movi(Reg::x(11), table as i64);
+    let outer = b.here();
+    b.movi(Reg::x(1), 16_384); // characters per pass
+    b.movi(Reg::x(2), 0); // cursor
+
+    let scan = b.here();
+    // c = text[cursor]; cls = table[c]
+    b.ldrb(Reg::x(3), Reg::x(10), Reg::x(2), 0);
+    b.alui(Opcode::Lsl, Reg::x(4), Reg::x(3), 3);
+    b.ldr_idx(Reg::x(5), Reg::x(11), Reg::x(4), 0);
+    // dispatch chain on class (data-dependent, mixed predictability)
+    let try1 = b.label();
+    let try2 = b.label();
+    let advance = b.label();
+    b.bcondi(Condition::Ne, Reg::x(5), 0, try1);
+    b.bl(h0);
+    b.b(advance);
+    b.place(try1);
+    b.bcondi(Condition::Ne, Reg::x(5), 1, try2);
+    b.bl(h1);
+    b.b(advance);
+    b.place(try2);
+    // classes 2-3 inline: escape scan (short data-dependent inner loop)
+    b.alui(Opcode::And, Reg::x(7), Reg::x(3), 3);
+    let esc_done = b.label();
+    b.cbz(Reg::x(7), esc_done);
+    let esc = b.here();
+    b.alui(Opcode::Add, Reg::x(23), Reg::x(23), 7);
+    b.alui(Opcode::Subs, Reg::x(7), Reg::x(7), 1);
+    b.cbnz(Reg::x(7), esc);
+    b.place(esc_done);
+    b.place(advance);
+    // cursor += (c & 7) + 1 (variable stride through the buffer)
+    b.alui(Opcode::And, Reg::x(8), Reg::x(3), 7);
+    b.alu(Opcode::Add, Reg::x(2), Reg::x(2), Reg::x(8));
+    b.alui(Opcode::Add, Reg::x(2), Reg::x(2), 1);
+    b.alui(Opcode::And, Reg::x(2), Reg::x(2), text_bytes as i64 - 1);
+    b.alui(Opcode::Subs, Reg::x(1), Reg::x(1), 1);
+    b.cbnz(Reg::x(1), scan);
+    b.b(outer);
+    b.build()
+}
+
+/// `621.wrf_s` stand-in — weather model: 2-D FP stencil with a 4 KiB row
+/// stride (TLB pressure), mostly-predictable physics branches, periodic
+/// expensive `fdiv`.
+pub fn wrf(seed: u64) -> Program {
+    let mut b = ProgramBuilder::new("wrf");
+    let words: u64 = 131_072; // 1 MiB
+    let row_words: u64 = 512; // 4 KiB rows
+    let grid = b.alloc(words * 8);
+    for i in (0..words).step_by(8) {
+        let v = 1.0 + (i % 1024) as f64 * 1e-3;
+        b.init_word(grid + i * 8, v.to_bits());
+    }
+
+    b.movi(Reg::x(10), grid as i64);
+    b.movi(Reg::x(28), seed as i64 | 1);
+    let outer = b.here();
+    b.movi(Reg::x(1), (words - 2 * row_words) as i64);
+    b.movi(Reg::x(2), (row_words * 8) as i64); // start at row 1
+
+    let body = b.here();
+    // u = g[p]; n = g[p+row]; s = g[p-row]
+    b.push(
+        crate::isa::Instruction::new(Opcode::Ldr)
+            .dst(Reg::f(0))
+            .src1(Reg::x(10))
+            .src2(Reg::x(2)),
+    );
+    b.push(
+        crate::isa::Instruction::new(Opcode::Ldr)
+            .dst(Reg::f(1))
+            .src1(Reg::x(10))
+            .src2(Reg::x(2))
+            .imm(row_words as i64 * 8),
+    );
+    b.push(
+        crate::isa::Instruction::new(Opcode::Ldr)
+            .dst(Reg::f(2))
+            .src1(Reg::x(10))
+            .src2(Reg::x(2))
+            .imm(-(row_words as i64) * 8),
+    );
+    b.push(
+        crate::isa::Instruction::new(Opcode::Fadd)
+            .dst(Reg::f(3))
+            .src1(Reg::f(1))
+            .src2(Reg::f(2)),
+    );
+    b.push(
+        crate::isa::Instruction::new(Opcode::Fmadd)
+            .dst(Reg::f(4))
+            .src1(Reg::f(3))
+            .src2(Reg::f(0))
+            .src3(Reg::f(4)),
+    );
+    // physics branch: ~94% taken (cheap path)
+    let cheap = b.label();
+    lcg_bits(&mut b, Reg::x(4), 15);
+    b.cbnz(Reg::x(4), cheap);
+    b.push(
+        crate::isa::Instruction::new(Opcode::Fdiv)
+            .dst(Reg::f(5))
+            .src1(Reg::f(4))
+            .src2(Reg::f(0)),
+    );
+    b.place(cheap);
+    b.push(
+        crate::isa::Instruction::new(Opcode::Str)
+            .src1(Reg::x(10))
+            .src2(Reg::x(2))
+            .src3(Reg::f(4)),
+    );
+    b.alui(Opcode::Add, Reg::x(2), Reg::x(2), 8);
+    b.alui(Opcode::Subs, Reg::x(1), Reg::x(1), 1);
+    b.cbnz(Reg::x(1), body);
+    b.b(outer);
+    b.build()
+}
+
+/// `507.cactuBSSN_r` stand-in — numerical relativity: store-dominant FP
+/// kernel over a 4 MiB region with very few branches (the paper singles
+/// out cac's store-heavy, branch-light profile).
+pub fn cac(_seed: u64) -> Program {
+    let mut b = ProgramBuilder::new("cac");
+    let words: u64 = 524_288; // 4 MiB
+    let grid = b.alloc(words * 8);
+
+    b.movi(Reg::x(10), grid as i64);
+    let outer = b.here();
+    b.movi(Reg::x(1), (words / 4 - 2) as i64);
+    b.movi(Reg::x(2), 0);
+
+    let body = b.here();
+    // Load two neighbours, compute, store THREE results (store-heavy mix).
+    b.push(
+        crate::isa::Instruction::new(Opcode::Ldr)
+            .dst(Reg::f(0))
+            .src1(Reg::x(10))
+            .src2(Reg::x(2)),
+    );
+    b.push(
+        crate::isa::Instruction::new(Opcode::Ldr)
+            .dst(Reg::f(1))
+            .src1(Reg::x(10))
+            .src2(Reg::x(2))
+            .imm(8),
+    );
+    b.push(
+        crate::isa::Instruction::new(Opcode::Fmadd)
+            .dst(Reg::f(2))
+            .src1(Reg::f(0))
+            .src2(Reg::f(1))
+            .src3(Reg::f(2)),
+    );
+    b.push(
+        crate::isa::Instruction::new(Opcode::Fadd)
+            .dst(Reg::f(3))
+            .src1(Reg::f(2))
+            .src2(Reg::f(0)),
+    );
+    b.push(
+        crate::isa::Instruction::new(Opcode::Str)
+            .src1(Reg::x(10))
+            .src2(Reg::x(2))
+            .imm(8)
+            .src3(Reg::f(2)),
+    );
+    b.push(
+        crate::isa::Instruction::new(Opcode::Str)
+            .src1(Reg::x(10))
+            .src2(Reg::x(2))
+            .imm(16)
+            .src3(Reg::f(3)),
+    );
+    b.push(
+        crate::isa::Instruction::new(Opcode::Str)
+            .src1(Reg::x(10))
+            .src2(Reg::x(2))
+            .imm(24)
+            .src3(Reg::f(0)),
+    );
+    b.alui(Opcode::Add, Reg::x(2), Reg::x(2), 32);
+    b.alui(Opcode::Subs, Reg::x(1), Reg::x(1), 1);
+    b.cbnz(Reg::x(1), body);
+    b.b(outer);
+    b.build()
+}

@@ -1,0 +1,305 @@
+//! `ProgramBuilder` — a tiny assembler for authoring synthetic benchmarks.
+//!
+//! Provides labels with forward references, a bump allocator for the data
+//! segment, and convenience emitters for common instruction shapes. Every
+//! benchmark in `crate::workloads::bench` is written against this.
+
+use crate::isa::inst::DATA_BASE;
+use crate::isa::{Condition, Instruction, Opcode, Program, Reg};
+
+/// A branch label (forward references allowed until `build`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Label(usize);
+
+/// Builder state.
+pub struct ProgramBuilder {
+    name: String,
+    insts: Vec<Instruction>,
+    labels: Vec<Option<usize>>,
+    fixups: Vec<(usize, Label)>,
+    data_cursor: u64,
+    init_words: Vec<(u64, u64)>,
+    init_regs: Vec<(Reg, u64)>,
+}
+
+impl ProgramBuilder {
+    /// Start a program named `name`.
+    pub fn new(name: &str) -> ProgramBuilder {
+        ProgramBuilder {
+            name: name.to_string(),
+            insts: Vec::new(),
+            labels: Vec::new(),
+            fixups: Vec::new(),
+            data_cursor: 0,
+            init_words: Vec::new(),
+            init_regs: Vec::new(),
+        }
+    }
+
+    /// Create an unplaced label.
+    pub fn label(&mut self) -> Label {
+        self.labels.push(None);
+        Label(self.labels.len() - 1)
+    }
+
+    /// Bind `label` to the current instruction position.
+    pub fn place(&mut self, label: Label) {
+        assert!(self.labels[label.0].is_none(), "label placed twice");
+        self.labels[label.0] = Some(self.insts.len());
+    }
+
+    /// Create a label bound to the current position.
+    pub fn here(&mut self) -> Label {
+        let l = self.label();
+        self.place(l);
+        l
+    }
+
+    /// Append a raw instruction; returns its index.
+    pub fn push(&mut self, inst: Instruction) -> usize {
+        self.insts.push(inst);
+        self.insts.len() - 1
+    }
+
+    /// Allocate `bytes` in the data segment (8-byte aligned); returns the
+    /// absolute virtual address of the allocation.
+    pub fn alloc(&mut self, bytes: u64) -> u64 {
+        let addr = DATA_BASE + self.data_cursor;
+        self.data_cursor += bytes.div_ceil(8) * 8;
+        addr
+    }
+
+    /// Set an initial 8-byte word at absolute address `addr`.
+    pub fn init_word(&mut self, addr: u64, value: u64) {
+        assert!(addr >= DATA_BASE);
+        self.init_words.push((addr - DATA_BASE, value));
+    }
+
+    /// Set an initial register value.
+    pub fn init_reg(&mut self, r: Reg, value: u64) {
+        self.init_regs.push((r, value));
+    }
+
+    // ---- convenience emitters ----
+
+    /// `dst = imm` (also used to materialize addresses).
+    pub fn movi(&mut self, dst: Reg, imm: i64) {
+        self.push(Instruction::new(Opcode::Movi).dst(dst).imm(imm));
+    }
+
+    /// Three-register ALU op `dst = op(a, b)`.
+    pub fn alu(&mut self, op: Opcode, dst: Reg, a: Reg, b: Reg) {
+        self.push(Instruction::new(op).dst(dst).src1(a).src2(b));
+    }
+
+    /// Immediate ALU op `dst = op(a, imm)`.
+    pub fn alui(&mut self, op: Opcode, dst: Reg, a: Reg, imm: i64) {
+        self.push(Instruction::new(op).dst(dst).src1(a).imm(imm));
+    }
+
+    /// `dst = mem[base + off]` (8 bytes).
+    pub fn ldr(&mut self, dst: Reg, base: Reg, off: i64) {
+        self.push(Instruction::new(Opcode::Ldr).dst(dst).src1(base).imm(off));
+    }
+
+    /// `dst = mem[base + idx + off]` (8 bytes).
+    pub fn ldr_idx(&mut self, dst: Reg, base: Reg, idx: Reg, off: i64) {
+        self.push(
+            Instruction::new(Opcode::Ldr)
+                .dst(dst)
+                .src1(base)
+                .src2(idx)
+                .imm(off),
+        );
+    }
+
+    /// Byte load.
+    pub fn ldrb(&mut self, dst: Reg, base: Reg, idx: Reg, off: i64) {
+        self.push(
+            Instruction::new(Opcode::Ldrb)
+                .dst(dst)
+                .src1(base)
+                .src2(idx)
+                .imm(off),
+        );
+    }
+
+    /// `mem[base + off] = data` (8 bytes).
+    pub fn str_(&mut self, data: Reg, base: Reg, off: i64) {
+        self.push(Instruction::new(Opcode::Str).src1(base).imm(off).src3(data));
+    }
+
+    /// `mem[base + idx + off] = data` (8 bytes).
+    pub fn str_idx(&mut self, data: Reg, base: Reg, idx: Reg, off: i64) {
+        self.push(
+            Instruction::new(Opcode::Str)
+                .src1(base)
+                .src2(idx)
+                .imm(off)
+                .src3(data),
+        );
+    }
+
+    /// Unconditional branch.
+    pub fn b(&mut self, label: Label) {
+        let i = self.push(Instruction::new(Opcode::B).target(usize::MAX));
+        self.fixups.push((i, label));
+    }
+
+    /// Call: link register `x30`.
+    pub fn bl(&mut self, label: Label) {
+        let i = self.push(
+            Instruction::new(Opcode::Bl)
+                .dst(Reg::x(30))
+                .target(usize::MAX),
+        );
+        self.fixups.push((i, label));
+    }
+
+    /// Return through `x30`.
+    pub fn ret(&mut self) {
+        self.push(Instruction::new(Opcode::Ret).src1(Reg::x(30)));
+    }
+
+    /// Conditional branch comparing `a` to `b`.
+    pub fn bcond(&mut self, cond: Condition, a: Reg, b: Reg, label: Label) {
+        let i = self.push(
+            Instruction::new(Opcode::Bcond)
+                .src1(a)
+                .src2(b)
+                .cond(cond)
+                .target(usize::MAX),
+        );
+        self.fixups.push((i, label));
+    }
+
+    /// Conditional branch comparing `a` to an immediate.
+    pub fn bcondi(&mut self, cond: Condition, a: Reg, imm: i64, label: Label) {
+        let i = self.push(
+            Instruction::new(Opcode::Bcond)
+                .src1(a)
+                .imm(imm)
+                .cond(cond)
+                .target(usize::MAX),
+        );
+        self.fixups.push((i, label));
+    }
+
+    /// Branch if `r != 0`.
+    pub fn cbnz(&mut self, r: Reg, label: Label) {
+        let i = self.push(Instruction::new(Opcode::Cbnz).src1(r).target(usize::MAX));
+        self.fixups.push((i, label));
+    }
+
+    /// Branch if `r == 0`.
+    pub fn cbz(&mut self, r: Reg, label: Label) {
+        let i = self.push(Instruction::new(Opcode::Cbz).src1(r).target(usize::MAX));
+        self.fixups.push((i, label));
+    }
+
+    /// Nop.
+    pub fn nop(&mut self) {
+        self.push(Instruction::new(Opcode::Nop));
+    }
+
+    /// Finalize: patch label fixups, validate, return the program.
+    pub fn build(mut self) -> Program {
+        for (inst_idx, label) in &self.fixups {
+            let target = self.labels[label.0]
+                .unwrap_or_else(|| panic!("label {} never placed", label.0));
+            self.insts[*inst_idx].target = Some(target);
+        }
+        let program = Program {
+            name: self.name,
+            insts: self.insts,
+            data_size: self.data_cursor.max(8),
+            init_words: self.init_words,
+            init_regs: self.init_regs,
+        };
+        program
+            .validate()
+            .unwrap_or_else(|e| panic!("generated program invalid: {e}"));
+        program
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functional::FunctionalSim;
+
+    #[test]
+    fn forward_and_backward_labels_resolve() {
+        let mut b = ProgramBuilder::new("t");
+        b.movi(Reg::x(1), 3);
+        let top = b.here();
+        let done = b.label();
+        b.alui(Opcode::Subs, Reg::x(1), Reg::x(1), 1);
+        b.cbz(Reg::x(1), done);
+        b.b(top);
+        b.place(done);
+        b.nop();
+        let p = b.build();
+        p.validate().unwrap();
+        let t = FunctionalSim::new(&p).run(100);
+        // movi + 3*(subs,cbz) + 2*b + nop = 1 + 6 + 2 + 1
+        assert_eq!(t.records.len(), 10);
+    }
+
+    #[test]
+    fn alloc_is_aligned_and_disjoint() {
+        let mut b = ProgramBuilder::new("t");
+        let a1 = b.alloc(100);
+        let a2 = b.alloc(8);
+        assert_eq!(a1 % 8, 0);
+        assert!(a2 >= a1 + 100);
+        b.nop();
+        let p = b.build();
+        assert!(p.data_size >= 112);
+    }
+
+    #[test]
+    fn init_words_offsets_relative() {
+        let mut b = ProgramBuilder::new("t");
+        let a = b.alloc(16);
+        b.init_word(a + 8, 77);
+        b.nop();
+        let p = b.build();
+        assert_eq!(p.init_words, vec![(8, 77)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "never placed")]
+    fn unplaced_label_panics() {
+        let mut b = ProgramBuilder::new("t");
+        let l = b.label();
+        b.b(l);
+        let _ = b.build();
+    }
+
+    #[test]
+    #[should_panic(expected = "placed twice")]
+    fn double_place_panics() {
+        let mut b = ProgramBuilder::new("t");
+        let l = b.label();
+        b.place(l);
+        b.place(l);
+    }
+
+    #[test]
+    fn call_ret_works_end_to_end() {
+        let mut b = ProgramBuilder::new("t");
+        let sub = b.label();
+        let end = b.label();
+        b.bl(sub);
+        b.b(end);
+        b.place(sub);
+        b.movi(Reg::x(5), 42);
+        b.ret();
+        b.place(end);
+        b.nop();
+        let p = b.build();
+        let t = FunctionalSim::new(&p).run(100);
+        assert_eq!(t.records.len(), 5);
+    }
+}

@@ -1,0 +1,274 @@
+//! Synthetic benchmark suite — the SPEC CPU2017 stand-in (Table 2).
+//!
+//! Eight benchmarks, split exactly as the paper's Table 2: four training
+//! (`dee`, `rom`, `nab`, `lee`) and four testing (`mcf`, `xal`, `wrf`,
+//! `cac`). Each reproduces the microarchitectural character the paper
+//! attributes to its SPEC namesake (see `bench` module docs and
+//! DESIGN.md §1 for the substitution argument).
+
+pub mod bench;
+pub mod builder;
+
+pub use builder::{Label, ProgramBuilder};
+
+use crate::isa::Program;
+
+/// Train/test membership (paper Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    /// Used to train DL models.
+    Train,
+    /// Held out for simulation-accuracy evaluation.
+    Test,
+}
+
+/// A benchmark descriptor.
+#[derive(Clone)]
+pub struct Workload {
+    /// Short name used everywhere ("mcf").
+    pub name: &'static str,
+    /// The SPEC CPU2017 benchmark it stands in for.
+    pub spec_name: &'static str,
+    /// Table 2 split.
+    pub split: Split,
+    /// One-line characterization.
+    pub description: &'static str,
+    build_fn: fn(u64) -> Program,
+}
+
+impl Workload {
+    /// Build the program deterministically from `seed`.
+    pub fn build(&self, seed: u64) -> Program {
+        (self.build_fn)(seed)
+    }
+}
+
+impl std::fmt::Debug for Workload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Workload")
+            .field("name", &self.name)
+            .field("spec", &self.spec_name)
+            .field("split", &self.split)
+            .finish()
+    }
+}
+
+/// The full suite in Table 2 order (training first).
+pub fn suite() -> Vec<Workload> {
+    vec![
+        Workload {
+            name: "dee",
+            spec_name: "531.deepsjeng_r",
+            split: Split::Train,
+            description: "chess search: int-heavy, branchy, hash probes, ~96KiB WSS",
+            build_fn: bench::dee,
+        },
+        Workload {
+            name: "rom",
+            spec_name: "654.roms_s",
+            split: Split::Train,
+            description: "ocean stencil: FP streaming over 8MiB, predictable branches",
+            build_fn: bench::rom,
+        },
+        Workload {
+            name: "nab",
+            spec_name: "544.nab_r",
+            split: Split::Train,
+            description: "molecular dynamics: FP compute, small WSS, few branches",
+            build_fn: bench::nab,
+        },
+        Workload {
+            name: "lee",
+            spec_name: "641.leela_s",
+            split: Split::Train,
+            description: "Go MCTS: random tree walk, 50/50 branches, 512KiB WSS",
+            build_fn: bench::lee,
+        },
+        Workload {
+            name: "mcf",
+            spec_name: "605.mcf_s",
+            split: Split::Test,
+            description: "network simplex: 8MiB pointer chase, memory bound",
+            build_fn: bench::mcf,
+        },
+        Workload {
+            name: "xal",
+            spec_name: "523.xalancbmk_r",
+            split: Split::Test,
+            description: "XML transform: byte scan + dispatch chain + calls",
+            build_fn: bench::xal,
+        },
+        Workload {
+            name: "wrf",
+            spec_name: "621.wrf_s",
+            split: Split::Test,
+            description: "weather stencil: row-strided FP, TLB pressure, fdiv",
+            build_fn: bench::wrf,
+        },
+        Workload {
+            name: "cac",
+            spec_name: "507.cactuBSSN_r",
+            split: Split::Test,
+            description: "relativity PDE: store-heavy FP, very few branches",
+            build_fn: bench::cac,
+        },
+    ]
+}
+
+/// Training benchmarks (Table 2 row 1).
+pub fn training() -> Vec<Workload> {
+    suite().into_iter().filter(|w| w.split == Split::Train).collect()
+}
+
+/// Testing benchmarks (Table 2 row 2).
+pub fn testing() -> Vec<Workload> {
+    suite().into_iter().filter(|w| w.split == Split::Test).collect()
+}
+
+/// Look up a benchmark by short name.
+pub fn by_name(name: &str) -> Option<Workload> {
+    suite().into_iter().find(|w| w.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::detailed::DetailedSim;
+    use crate::functional::FunctionalSim;
+    use crate::isa::OpcodeClass;
+    use crate::uarch::UarchConfig;
+
+    #[test]
+    fn table2_split() {
+        let names: Vec<&str> = training().iter().map(|w| w.name).collect();
+        assert_eq!(names, vec!["dee", "rom", "nab", "lee"]);
+        let names: Vec<&str> = testing().iter().map(|w| w.name).collect();
+        assert_eq!(names, vec!["mcf", "xal", "wrf", "cac"]);
+    }
+
+    #[test]
+    fn all_programs_valid_and_run_forever() {
+        for w in suite() {
+            let p = w.build(42);
+            p.validate().unwrap_or_else(|e| panic!("{}: {e}", w.name));
+            let n = 20_000;
+            let t = FunctionalSim::new(&p).run(n);
+            assert_eq!(
+                t.records.len() as u64, n,
+                "{} halted after {} insts",
+                w.name,
+                t.records.len()
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        for w in suite() {
+            let a = FunctionalSim::new(&w.build(7)).run(5_000);
+            let b = FunctionalSim::new(&w.build(7)).run(5_000);
+            assert_eq!(a.records, b.records, "{} not deterministic", w.name);
+        }
+    }
+
+    fn mix(records: &[crate::trace::FuncRecord]) -> (f64, f64, f64, f64) {
+        let n = records.len() as f64;
+        let loads = records.iter().filter(|r| r.opcode.is_load()).count() as f64 / n;
+        let stores = records.iter().filter(|r| r.opcode.is_store()).count() as f64 / n;
+        let branches = records.iter().filter(|r| r.opcode.is_cond_branch()).count() as f64 / n;
+        let fp = records
+            .iter()
+            .filter(|r| {
+                matches!(
+                    r.opcode.class(),
+                    OpcodeClass::FpAlu | OpcodeClass::FpMul | OpcodeClass::FpDiv
+                )
+            })
+            .count() as f64
+            / n;
+        (loads, stores, branches, fp)
+    }
+
+    #[test]
+    fn cac_is_store_heavy_and_branch_light() {
+        let t = FunctionalSim::new(&by_name("cac").unwrap().build(1)).run(30_000);
+        let (_, stores, branches, _) = mix(&t.records);
+        assert!(stores > 0.2, "cac stores={stores}");
+        assert!(branches < 0.12, "cac branches={branches}");
+    }
+
+    #[test]
+    fn nab_is_fp_heavy() {
+        let t = FunctionalSim::new(&by_name("nab").unwrap().build(1)).run(30_000);
+        let (_, _, _, fp) = mix(&t.records);
+        assert!(fp > 0.25, "nab fp={fp}");
+    }
+
+    #[test]
+    fn dee_and_xal_are_branchy() {
+        for name in ["dee", "xal"] {
+            let t = FunctionalSim::new(&by_name(name).unwrap().build(1)).run(30_000);
+            let (_, _, branches, _) = mix(&t.records);
+            assert!(branches > 0.15, "{name} branches={branches}");
+        }
+    }
+
+    #[test]
+    fn mcf_is_memory_bound_on_small_cache() {
+        let p = by_name("mcf").unwrap().build(3);
+        let (_, stats) = DetailedSim::new(&p, &UarchConfig::uarch_a())
+            .stats_only()
+            .run(30_000);
+        assert!(stats.l1d_mpki() > 50.0, "mcf l1d mpki={}", stats.l1d_mpki());
+        assert!(stats.cpi() > 3.0, "mcf cpi={}", stats.cpi());
+    }
+
+    #[test]
+    fn nab_has_low_cpi_relative_to_mcf() {
+        let cfg = UarchConfig::uarch_b();
+        let (_, s_nab) = DetailedSim::new(&by_name("nab").unwrap().build(3), &cfg)
+            .stats_only()
+            .run(30_000);
+        let (_, s_mcf) = DetailedSim::new(&by_name("mcf").unwrap().build(3), &cfg)
+            .stats_only()
+            .run(30_000);
+        assert!(
+            s_nab.cpi() < s_mcf.cpi(),
+            "nab {} !< mcf {}",
+            s_nab.cpi(),
+            s_mcf.cpi()
+        );
+    }
+
+    #[test]
+    fn lee_mispredicts_more_than_rom() {
+        let cfg = UarchConfig::uarch_b();
+        let (_, s_lee) = DetailedSim::new(&by_name("lee").unwrap().build(3), &cfg)
+            .stats_only()
+            .run(30_000);
+        let (_, s_rom) = DetailedSim::new(&by_name("rom").unwrap().build(3), &cfg)
+            .stats_only()
+            .run(30_000);
+        assert!(
+            s_lee.branch_mpki() > 2.0 * s_rom.branch_mpki().max(0.05),
+            "lee {} vs rom {}",
+            s_lee.branch_mpki(),
+            s_rom.branch_mpki()
+        );
+    }
+
+    #[test]
+    fn benchmarks_have_distinct_cpi_profiles() {
+        // The suite must spread across the CPI spectrum for the DL model
+        // to see diverse behaviour (paper's benchmark-selection argument).
+        let cfg = UarchConfig::uarch_a();
+        let mut cpis = Vec::new();
+        for w in suite() {
+            let (_, s) = DetailedSim::new(&w.build(3), &cfg).stats_only().run(20_000);
+            cpis.push((w.name, s.cpi()));
+        }
+        let min = cpis.iter().map(|(_, c)| *c).fold(f64::MAX, f64::min);
+        let max = cpis.iter().map(|(_, c)| *c).fold(0.0, f64::max);
+        assert!(max / min > 2.0, "CPI spread too small: {cpis:?}");
+    }
+}

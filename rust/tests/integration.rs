@@ -1,0 +1,224 @@
+//! Cross-module integration tests: the full trace → dataset → features
+//! pipeline, simulator cross-validation, randomized program properties,
+//! and (when `make artifacts` has run) the PJRT end-to-end path.
+
+use tao_sim::dataset;
+use tao_sim::datagen::{self, DatagenOptions};
+use tao_sim::detailed::DetailedSim;
+use tao_sim::features::{FeatureConfig, FeatureExtractor};
+use tao_sim::functional::FunctionalSim;
+use tao_sim::isa::{Condition, Instruction, Opcode, Program, Reg};
+use tao_sim::uarch::UarchConfig;
+use tao_sim::util::Rng;
+use tao_sim::workloads;
+
+/// The §4.1 pipeline end to end, every benchmark, every preset µarch:
+/// traces align, totals are preserved, features have the right shape.
+#[test]
+fn dataset_pipeline_all_benchmarks_all_uarchs() {
+    let insts = 3_000;
+    for uarch in [UarchConfig::uarch_a(), UarchConfig::uarch_c()] {
+        for w in workloads::suite() {
+            let program = w.build(11);
+            let functional = FunctionalSim::new(&program).run(insts);
+            let (detailed, stats) = DetailedSim::new(&program, &uarch).run(insts);
+            assert_eq!(stats.instructions, insts);
+            let adjusted = dataset::adjust(&detailed);
+            let aligned = dataset::align(&functional, &adjusted)
+                .unwrap_or_else(|e| panic!("{}/{}: {e}", uarch.name, w.name));
+            assert_eq!(aligned.samples.len(), insts as usize);
+            assert_eq!(
+                aligned.reconstructed_cycles(),
+                detailed.total_cycles,
+                "{}/{}: Figure 2 invariant",
+                uarch.name,
+                w.name
+            );
+        }
+    }
+}
+
+/// Functional and detailed simulators must commit identical streams for
+/// *randomly generated* programs, not just the curated suite.
+#[test]
+fn property_random_programs_commit_identical_streams() {
+    let mut rng = Rng::new(0xF00D);
+    for trial in 0..25 {
+        let len = 40 + rng.index(60);
+        let program = random_program(&mut rng, len);
+        if program.validate().is_err() {
+            continue;
+        }
+        let n = 1_500;
+        let functional = FunctionalSim::new(&program).run(n);
+        let (detailed, _) = DetailedSim::new(&program, &UarchConfig::uarch_b()).run(n);
+        let committed: Vec<_> = detailed.retired().map(|r| r.func).collect();
+        assert_eq!(
+            committed.len(),
+            functional.records.len(),
+            "trial {trial}: lengths differ"
+        );
+        for (i, (a, b)) in committed.iter().zip(&functional.records).enumerate() {
+            assert_eq!(a, b, "trial {trial}: record {i} differs");
+        }
+    }
+}
+
+/// Random straight-line-plus-loops program generator for property tests.
+fn random_program(rng: &mut Rng, len: usize) -> Program {
+    let mut insts = Vec::with_capacity(len + 8);
+    // Prologue: seed a few registers.
+    for r in 1..6u8 {
+        insts.push(
+            Instruction::new(Opcode::Movi)
+                .dst(Reg::x(r))
+                .imm(rng.gen_range(1_000) as i64 + 1),
+        );
+    }
+    let body_start = insts.len();
+    for _ in 0..len {
+        let pick = rng.index(10);
+        let inst = match pick {
+            0..=3 => {
+                let ops = [Opcode::Add, Opcode::Sub, Opcode::Eor, Opcode::Orr, Opcode::Mul];
+                Instruction::new(ops[rng.index(ops.len())])
+                    .dst(Reg::x(1 + rng.index(8) as u8))
+                    .src1(Reg::x(1 + rng.index(8) as u8))
+                    .imm(rng.gen_range(64) as i64)
+            }
+            4..=5 => Instruction::new(Opcode::Ldr)
+                .dst(Reg::x(1 + rng.index(8) as u8))
+                .src1(Reg::x(1 + rng.index(8) as u8))
+                .imm(rng.gen_range(512) as i64),
+            6 => Instruction::new(Opcode::Str)
+                .src1(Reg::x(1 + rng.index(8) as u8))
+                .imm(rng.gen_range(512) as i64)
+                .src3(Reg::x(1 + rng.index(8) as u8)),
+            7 => {
+                // Forward conditional skip (target patched below).
+                Instruction::new(Opcode::Bcond)
+                    .src1(Reg::x(1 + rng.index(8) as u8))
+                    .imm(rng.gen_range(500) as i64)
+                    .cond(Condition::Gt)
+                    .target(usize::MAX)
+            }
+            _ => Instruction::new(Opcode::Nop),
+        };
+        insts.push(inst);
+    }
+    // Patch forward branches to valid targets.
+    let end = insts.len();
+    for i in body_start..end {
+        if insts[i].target == Some(usize::MAX) {
+            insts[i].target = Some((i + 1 + rng.index(4)).min(end));
+        }
+    }
+    // Outer loop: x9 counts down from large; repeat body.
+    insts.push(
+        Instruction::new(Opcode::Subs)
+            .dst(Reg::x(9))
+            .src1(Reg::x(9))
+            .imm(-1), // increments forever; cbnz below keeps looping
+    );
+    insts.push(Instruction::new(Opcode::Cbnz).src1(Reg::x(9)).target(body_start));
+    Program {
+        name: "random".into(),
+        insts,
+        data_size: 4096,
+        init_words: vec![(0, 7), (8, 99)],
+        init_regs: vec![(Reg::x(9), 1)],
+    }
+}
+
+/// Feature extraction over real traces: deterministic, right shape, no
+/// NaNs, and identical between the datagen path and a fresh extractor.
+#[test]
+fn feature_extraction_consistent_with_datagen() {
+    let w = workloads::by_name("xal").unwrap();
+    let uarch = UarchConfig::uarch_a();
+    let opts = DatagenOptions {
+        instructions: 2_000,
+        ..Default::default()
+    };
+    let ds = datagen::generate(&w, &uarch, &opts).unwrap();
+    // Recompute manually.
+    let program = w.build(opts.seed);
+    let functional = FunctionalSim::new(&program).run(opts.instructions);
+    let cfg = FeatureConfig::default();
+    let mut fx = FeatureExtractor::new(cfg);
+    let mut row = vec![0.0f32; cfg.feature_dim()];
+    for (i, rec) in functional.records.iter().enumerate() {
+        let id = fx.extract(rec, &mut row);
+        assert_eq!(id, ds.opcodes[i], "opcode id at {i}");
+        let stored = &ds.features[i * cfg.feature_dim()..(i + 1) * cfg.feature_dim()];
+        assert_eq!(stored, &row[..], "feature row {i}");
+        assert!(row.iter().all(|v| v.is_finite()), "non-finite feature at {i}");
+    }
+}
+
+/// Labels across microarchitectures: inputs identical, labels reflect the
+/// design (µArch C strictly outperforms µArch A overall).
+#[test]
+fn labels_reflect_microarchitecture() {
+    let w = workloads::by_name("dee").unwrap();
+    let opts = DatagenOptions {
+        instructions: 5_000,
+        ..Default::default()
+    };
+    let a = datagen::generate(&w, &UarchConfig::uarch_a(), &opts).unwrap();
+    let c = datagen::generate(&w, &UarchConfig::uarch_c(), &opts).unwrap();
+    assert_eq!(a.features, c.features);
+    assert!(a.total_cycles > c.total_cycles, "A should be slower than C");
+}
+
+/// Trace serialization round-trips through disk at integration scale.
+#[test]
+fn trace_files_round_trip() {
+    let dir = std::env::temp_dir().join(format!("tao-int-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let program = workloads::by_name("nab").unwrap().build(5);
+    let functional = FunctionalSim::new(&program).run(4_000);
+    let (detailed, _) = DetailedSim::new(&program, &UarchConfig::uarch_b()).run(4_000);
+    let fpath = dir.join("nab.func");
+    let dpath = dir.join("nab.det");
+    tao_sim::trace::write_functional(&fpath, &functional).unwrap();
+    tao_sim::trace::write_detailed(&dpath, &detailed).unwrap();
+    let f2 = tao_sim::trace::read_functional(&fpath).unwrap();
+    let d2 = tao_sim::trace::read_detailed(&dpath).unwrap();
+    assert_eq!(f2.records, functional.records);
+    assert_eq!(d2.records.len(), detailed.records.len());
+    assert_eq!(d2.total_cycles, detailed.total_cycles);
+}
+
+/// PJRT end-to-end (needs `make artifacts`; skips otherwise): the engine
+/// must process every instruction exactly once and produce finite,
+/// plausible metrics, identically across worker counts modulo sharding.
+#[test]
+fn engine_end_to_end_with_artifact() {
+    let artifact = std::path::Path::new("artifacts/tao_uarch_a.hlo.txt");
+    if !artifact.exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let program = workloads::by_name("dee").unwrap().build(42);
+    let trace = FunctionalSim::new(&program).run(6_000);
+    let r1 = tao_sim::coordinator::engine::simulate_parallel(artifact, &trace.records, 1, None)
+        .expect("simulate x1");
+    assert_eq!(r1.metrics.instructions, 6_000);
+    assert!(r1.metrics.cpi().is_finite() && r1.metrics.cpi() > 0.1);
+    assert!(r1.metrics.branch_mpki() >= 0.0);
+    // Determinism for fixed sharding.
+    let r1b = tao_sim::coordinator::engine::simulate_parallel(artifact, &trace.records, 1, None)
+        .expect("simulate x1 again");
+    assert_eq!(r1.metrics.cycles, r1b.metrics.cycles);
+}
+
+/// The report harness smoke: table1 + figure2 run end to end (they write
+/// under reports/ in the workspace).
+#[test]
+fn reports_smoke() {
+    use tao_sim::cli::args::Args;
+    let args = |s: &str| Args::new(s.split_whitespace().map(String::from).collect());
+    tao_sim::reports::sim_reports::table1(args("--insts 2000")).expect("table1");
+    tao_sim::reports::sim_reports::figure2(args("")).expect("figure2");
+}
