@@ -1,0 +1,21 @@
+# Convenience targets. Tier-1 verify is `cargo build --release && cargo test -q`.
+
+.PHONY: build test bench bench-smoke
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Full benchmark sweep (prints to stdout).
+bench:
+	cargo bench --bench coordinator -- --json BENCH_coordinator.json
+	cargo bench --bench features -- --json BENCH_features.json
+
+# CI smoke benches: reduced counts, emits BENCH_coordinator.json (and
+# BENCH_features.json) with instructions/sec + per-batch staging
+# latency so successive PRs have a perf trajectory.
+bench-smoke:
+	cargo bench --bench coordinator -- --smoke --json BENCH_coordinator.json
+	cargo bench --bench features -- --smoke --json BENCH_features.json

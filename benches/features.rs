@@ -1,31 +1,56 @@
 //! Feature-extraction throughput — the Rust-side hot-path component in
 //! front of every model batch (paper §4.2 pipeline).
+//!
+//! Measures `extract_into` over the AoS record stream and over the SoA
+//! columnar trace (assembled per instruction via `TraceColumns::record`)
+//! to track the storage-layout effect on the extraction scan.
+//!
+//! Flags: `--smoke` (reduced counts), `--json <path>` (write metrics).
 
 use tao_sim::features::{FeatureConfig, FeatureExtractor};
 use tao_sim::functional::FunctionalSim;
-use tao_sim::util::benchkit::Bench;
+use tao_sim::util::benchkit::{Bench, BenchOpts, BenchReport};
 use tao_sim::workloads;
 
 fn main() {
-    let insts = 200_000u64;
-    let b = Bench::new("features").iters(5);
+    let opts = BenchOpts::from_env();
+    let insts: u64 = if opts.smoke { 50_000 } else { 200_000 };
+    let iters = if opts.smoke { 2 } else { 5 };
+    let mut report = BenchReport::new();
+    report.metric("smoke", if opts.smoke { 1.0 } else { 0.0 });
+    let b = Bench::new("features").iters(iters);
     for w in ["dee", "mcf", "rom"] {
         let program = workloads::by_name(w).unwrap().build(42);
         let trace = FunctionalSim::new(&program).run(insts);
+        let cols = trace.to_columns();
         for cfg in [
             FeatureConfig { nb: 256, nq: 8, nm: 16 },
             FeatureConfig::default(), // paper values: 1k / 32 / 64
         ] {
             let case = format!("{w}/nb{}-nq{}-nm{}", cfg.nb, cfg.nq, cfg.nm);
             let mut out = vec![0.0f32; cfg.feature_dim()];
-            b.run(&case, insts, || {
+            let m = b.run(&format!("{case}/aos"), insts, || {
                 let mut fx = FeatureExtractor::new(cfg);
                 let mut acc = 0i64;
                 for rec in &trace.records {
-                    acc += fx.extract(rec, &mut out) as i64;
+                    acc += fx.extract_into(rec, &mut out) as i64;
                 }
                 acc
             });
+            report.push(m);
+            let m = b.run(&format!("{case}/soa"), insts, || {
+                let mut fx = FeatureExtractor::new(cfg);
+                let mut acc = 0i64;
+                for i in 0..cols.len() {
+                    acc += fx.extract_into(&cols.record(i), &mut out) as i64;
+                }
+                acc
+            });
+            report.push(m);
         }
+    }
+    if let Some(path) = &opts.json {
+        report.write_json(path).expect("write bench json");
+        println!("wrote {}", path.display());
     }
 }

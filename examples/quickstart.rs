@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- §4.1 dataset construction ---
     let adjusted = dataset::adjust(&detailed);
-    let aligned = dataset::align(&functional, &adjusted)?;
+    let aligned = dataset::align(&functional, adjusted)?;
     assert_eq!(aligned.reconstructed_cycles(), detailed.total_cycles);
     println!(
         "dataset construction: {} aligned samples; total-cycle invariant holds ({} cycles)",

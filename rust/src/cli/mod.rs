@@ -26,7 +26,8 @@ USAGE:
   tao datagen  [--out DIR] [--insts N] [--uarchs a,b,c] [--split train|test|all]
                [--seed S] [--nb N] [--nq N] [--nm N]
   tao simulate --model artifacts/tao_uarch_a.hlo.txt --bench mcf
-               [--insts N] [--batch B] [--workers W] [--seed S] [--window T]
+               [--insts N] [--workers W] [--seed S] [--truth a|b|c]
+               [--chunk N] [--warmup N]
   tao report   <table1|figure2|figure9|figure10a|figure10b|figure11|figure12a|
                 figure12b|figure14|table4|table6|figure15> [opts]
   tao dse      [--designs N] [--insts N] [--seed S]

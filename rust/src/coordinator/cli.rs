@@ -5,7 +5,7 @@
 //! MIPS, and — with `--truth` — the detailed-simulator ground truth and
 //! the paper's simulation-error percentages.
 
-use super::engine;
+use super::engine::{self, ParallelOptions};
 use crate::cli::args::Args;
 use crate::detailed::DetailedSim;
 use crate::functional::FunctionalSim;
@@ -25,6 +25,11 @@ pub fn cmd_simulate(mut args: Args) -> Result<()> {
     let insts: u64 = args.opt_parse("--insts")?.unwrap_or(100_000);
     let workers: usize = args.opt_parse("--workers")?.unwrap_or(1);
     let seed: u64 = args.opt_parse("--seed")?.unwrap_or(42);
+    let defaults = ParallelOptions::default();
+    let opts = ParallelOptions {
+        chunk: args.opt_parse("--chunk")?.unwrap_or(defaults.chunk),
+        warmup: args.opt_parse("--warmup")?.unwrap_or(defaults.warmup),
+    };
     let truth_uarch = args.opt_value("--truth")?;
     args.finish()?;
 
@@ -33,10 +38,13 @@ pub fn cmd_simulate(mut args: Args) -> Result<()> {
     let program = workload.build(seed);
 
     eprintln!("simulate: generating functional trace ({insts} insts of {bench_name})...");
-    let trace = FunctionalSim::new(&program).run(insts);
+    let cols = FunctionalSim::new(&program).run(insts).to_columns();
 
-    eprintln!("simulate: loading {model:?} and running inference (workers={workers})...");
-    let result = engine::simulate_parallel(&model, &trace.records, workers, None)?;
+    eprintln!(
+        "simulate: loading {model:?} and running inference (workers={workers}, chunk={}, warmup={})...",
+        opts.chunk, opts.warmup
+    );
+    let result = engine::simulate_parallel_opts(&model, &cols, workers, None, opts)?;
     let m = result.metrics;
     println!("benchmark          : {bench_name}");
     println!("instructions       : {}", m.instructions);

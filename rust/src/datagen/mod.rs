@@ -87,7 +87,7 @@ pub fn adjusted_trace(
     let functional = FunctionalSim::new(&program).run(instructions);
     let (detailed, _) = DetailedSim::new(&program, uarch).run(instructions);
     let adjusted = dataset::adjust(&detailed);
-    dataset::align(&functional, &adjusted)
+    dataset::align(&functional, adjusted)
 }
 
 /// Build the feature/label arrays from an adjusted trace.
@@ -103,7 +103,9 @@ pub fn featurize(adjusted: &AdjustedTrace, config: FeatureConfig) -> Dataset {
     };
     let mut fx = FeatureExtractor::new(config);
     for (i, s) in adjusted.samples.iter().enumerate() {
-        let id = fx.extract(&s.func, &mut ds.features[i * f..(i + 1) * f]);
+        // Zero-copy: the extractor writes the row straight into the
+        // dataset matrix.
+        let id = fx.extract_into(&s.func, &mut ds.features[i * f..(i + 1) * f]);
         ds.opcodes.push(id);
         let l = &s.labels;
         ds.labels.extend_from_slice(&[

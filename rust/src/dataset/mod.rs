@@ -122,10 +122,14 @@ pub fn adjust(detailed: &DetailedTrace) -> AdjustedTrace {
 /// program: every instruction must match on PC, opcode and memory
 /// address. Returns the verified training set.
 ///
+/// Takes `adjusted` by value and truncates it in place — the caller is
+/// done with the unaligned trace, so there is no reason to clone a
+/// full-trace sample vector just to shorten it.
+///
 /// (Our detailed model commits exactly the functional stream by
 /// construction; this check is the §4.1 alignment step and guards against
 /// regressions in either simulator.)
-pub fn align(functional: &FunctionalTrace, adjusted: &AdjustedTrace) -> Result<AdjustedTrace> {
+pub fn align(functional: &FunctionalTrace, mut adjusted: AdjustedTrace) -> Result<AdjustedTrace> {
     let n = functional.records.len().min(adjusted.samples.len());
     ensure!(
         n > 0,
@@ -145,9 +149,8 @@ pub fn align(functional: &FunctionalTrace, adjusted: &AdjustedTrace) -> Result<A
             a.opcode
         );
     }
-    let mut out = adjusted.clone();
-    out.samples.truncate(n);
-    Ok(out)
+    adjusted.samples.truncate(n);
+    Ok(adjusted)
 }
 
 /// Paper Table 1 row: instruction-count difference between detailed and
@@ -223,7 +226,7 @@ mod tests {
     fn alignment_succeeds_on_matching_traces() {
         let (func, det) = make_traces("xal", 5_000);
         let adj = adjust(&det);
-        let aligned = align(&func, &adj).unwrap();
+        let aligned = align(&func, adj).unwrap();
         assert_eq!(aligned.samples.len(), 5_000);
     }
 
@@ -232,7 +235,7 @@ mod tests {
         let (mut func, det) = make_traces("dee", 1_000);
         let adj = adjust(&det);
         func.records[500].pc ^= 0x40;
-        assert!(align(&func, &adj).is_err());
+        assert!(align(&func, adj).is_err());
     }
 
     #[test]

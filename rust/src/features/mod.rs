@@ -133,7 +133,13 @@ impl FeatureExtractor {
     /// `config.feature_dim()`), returning the opcode id. Updates the
     /// branch/memory history state *after* reading it, so no label leaks
     /// into the instruction's own features.
-    pub fn extract(&mut self, rec: &FuncRecord, out: &mut [f32]) -> i32 {
+    ///
+    /// This is the allocation-free hot-path entry: callers hand in the
+    /// destination row — a dataset matrix row in `datagen`, or the window
+    /// batcher's rolling-buffer slot on the inference path — so the
+    /// features are written exactly once, in place, with no intermediate
+    /// row buffer.
+    pub fn extract_into(&mut self, rec: &FuncRecord, out: &mut [f32]) -> i32 {
         let cfg = self.config;
         debug_assert_eq!(out.len(), cfg.feature_dim());
         let (reg_part, rest) = out.split_at_mut(NUM_REGS);
@@ -248,6 +254,11 @@ impl FeatureExtractor {
         }
 
         rec.opcode.index() as i32
+    }
+
+    /// Back-compat alias for [`FeatureExtractor::extract_into`].
+    pub fn extract(&mut self, rec: &FuncRecord, out: &mut [f32]) -> i32 {
+        self.extract_into(rec, out)
     }
 }
 

@@ -327,7 +327,6 @@ pub fn figure15(mut args: Args) -> Result<()> {
     let seed: u64 = args.opt_parse("--seed")?.unwrap_or(42);
     args.finish()?;
     let mut rep = Report::new("figure15")?;
-    let base = UarchConfig::uarch_b();
 
     // Note: the sweep averages over the FULL suite — our synthetic test
     // benchmarks all have working sets far beyond 128KB (mcf 8MiB random,
@@ -335,8 +334,8 @@ pub fn figure15(mut args: Args) -> Result<()> {
     // this range; the L1-scale reuse lives in dee/nab/lee (see
     // DESIGN.md §1 on workload substitution).
     rep.line("Figure 15a — L1 Dcache size sweep, avg L1D MPKI over the suite (ground truth)");
+    let mut cfg = UarchConfig::uarch_b();
     for size_kb in [16u64, 32, 64, 128] {
-        let mut cfg = base.clone();
         cfg.name = format!("l1d_{size_kb}kb");
         cfg.l1d = CacheGeometry {
             size_bytes: size_kb << 10,
@@ -352,8 +351,10 @@ pub fn figure15(mut args: Args) -> Result<()> {
     }
 
     rep.line("Figure 15b — branch predictor sweep, avg branch MPKI over test benchmarks (ground truth)");
+    // Fresh base config for the second sweep (the first mutated l1d);
+    // constructing a preset is cheaper than cloning one per point.
+    let mut cfg = UarchConfig::uarch_b();
     for bp in PredictorKind::ALL {
-        let mut cfg = base.clone();
         cfg.name = format!("bp_{}", bp.name());
         cfg.predictor = bp;
         let mut mpkis = Vec::new();

@@ -112,6 +112,39 @@ pub fn meta_path_for(hlo_path: &Path) -> PathBuf {
     PathBuf::from(s.replace(".hlo.txt", ".meta.json"))
 }
 
+/// Write a surrogate Tao artifact (HLO text + metadata) under `dir`,
+/// shaped like the default AOT export and executable by the vendored
+/// PJRT stand-in. Support code for engine tests and benches: it lets
+/// the full extract→batch→execute→accumulate path run without trained
+/// models. Returns the `.hlo.txt` path to pass to [`Session::load`].
+pub fn write_surrogate_artifact(
+    dir: &Path,
+    name: &str,
+    batch: usize,
+    context: usize,
+) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir).with_context(|| format!("mkdir {dir:?}"))?;
+    let fc = FeatureConfig::default();
+    let meta = format!(
+        r#"{{
+          "kind": "tao", "batch": {batch}, "context": {context},
+          "feature_dim": {fd}, "num_opcodes": {nop},
+          "outputs": ["fetch", "exec", "branch", "access", "icache", "tlb"],
+          "feature_config": {{"nb": {nb}, "nq": {nq}, "nm": {nm}}},
+          "vocab_hash": "surrogate", "kernel": "surrogate"
+        }}"#,
+        fd = fc.feature_dim(),
+        nop = crate::isa::Opcode::COUNT,
+        nb = fc.nb,
+        nq = fc.nq,
+        nm = fc.nm,
+    );
+    std::fs::write(dir.join(format!("{name}.meta.json")), meta)?;
+    let hlo = dir.join(format!("{name}.hlo.txt"));
+    std::fs::write(&hlo, format!("HloModule {name}"))?;
+    Ok(hlo)
+}
+
 /// One model's outputs for a batch (post-processed to probabilities /
 /// clamped latencies on the Rust side).
 #[derive(Debug, Clone, Default)]

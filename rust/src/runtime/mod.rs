@@ -12,4 +12,4 @@
 
 pub mod artifact;
 
-pub use artifact::{ArtifactMeta, ModelKind, ModelOutputs, Session};
+pub use artifact::{write_surrogate_artifact, ArtifactMeta, ModelKind, ModelOutputs, Session};

@@ -1,0 +1,251 @@
+//! Structure-of-arrays trace storage.
+//!
+//! [`FuncRecord`] is a 32-byte struct (27 payload bytes padded to
+//! alignment); a `Vec<FuncRecord>` interleaves every field of every
+//! instruction, so the inference hot path — which reads mostly
+//! `pc`/`opcode`/`taken` for branches and `mem_addr` for memory ops —
+//! drags the whole record through the cache per touch. [`TraceColumns`]
+//! stores one densely-packed `Vec` per field instead:
+//!
+//! * sequential feature extraction streams each column at full cache-line
+//!   utilization (27 bytes/instruction, no padding, and each scan touches
+//!   only the columns it needs);
+//! * trace (de)serialization becomes straight column appends with no
+//!   intermediate record materialization (`trace::serialize`
+//!   `read_functional_columns`);
+//! * shards are cheap range views (`slice`) — no copying on partition.
+//!
+//! `record(i)` assembles a [`FuncRecord`] from the columns in registers;
+//! it is the bridge for code that still wants AoS views and costs a few
+//! loads, not an allocation.
+
+use super::record::{FuncRecord, FunctionalTrace};
+use crate::isa::Opcode;
+
+/// Columnar (structure-of-arrays) functional-trace storage.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceColumns {
+    /// Program counters.
+    pub pc: Vec<u64>,
+    /// Opcode ids (`Opcode::index()`; the ISA has < 256 opcodes, matching
+    /// the on-disk u8 encoding).
+    pub opcode: Vec<u8>,
+    /// Register bitmaps.
+    pub reg_bitmap: Vec<u64>,
+    /// Effective memory addresses (0 for non-memory ops).
+    pub mem_addr: Vec<u64>,
+    /// Access widths in bytes (0 for non-memory ops).
+    pub mem_bytes: Vec<u8>,
+    /// Branch outcomes (0/1; 0 for non-branches).
+    pub taken: Vec<u8>,
+}
+
+impl TraceColumns {
+    /// Empty columns.
+    pub fn new() -> TraceColumns {
+        TraceColumns::default()
+    }
+
+    /// Empty columns with per-field capacity for `n` records.
+    pub fn with_capacity(n: usize) -> TraceColumns {
+        TraceColumns {
+            pc: Vec::with_capacity(n),
+            opcode: Vec::with_capacity(n),
+            reg_bitmap: Vec::with_capacity(n),
+            mem_addr: Vec::with_capacity(n),
+            mem_bytes: Vec::with_capacity(n),
+            taken: Vec::with_capacity(n),
+        }
+    }
+
+    /// Number of instructions.
+    pub fn len(&self) -> usize {
+        self.pc.len()
+    }
+
+    /// True if no instructions are stored.
+    pub fn is_empty(&self) -> bool {
+        self.pc.is_empty()
+    }
+
+    /// Append one record (fields fan out to their columns).
+    pub fn push(&mut self, rec: &FuncRecord) {
+        self.push_fields(
+            rec.pc,
+            rec.opcode.index() as u8,
+            rec.reg_bitmap,
+            rec.mem_addr,
+            rec.mem_bytes,
+            rec.taken,
+        );
+    }
+
+    /// Append one record given raw field values (the deserializer's
+    /// entry point — no `FuncRecord` is materialized).
+    pub fn push_fields(
+        &mut self,
+        pc: u64,
+        opcode_id: u8,
+        reg_bitmap: u64,
+        mem_addr: u64,
+        mem_bytes: u8,
+        taken: bool,
+    ) {
+        self.pc.push(pc);
+        self.opcode.push(opcode_id);
+        self.reg_bitmap.push(reg_bitmap);
+        self.mem_addr.push(mem_addr);
+        self.mem_bytes.push(mem_bytes);
+        self.taken.push(taken as u8);
+    }
+
+    /// Assemble the `i`-th record from the columns (register-level work,
+    /// no allocation).
+    #[inline]
+    pub fn record(&self, i: usize) -> FuncRecord {
+        FuncRecord {
+            pc: self.pc[i],
+            opcode: Opcode::from_index(self.opcode[i] as usize),
+            reg_bitmap: self.reg_bitmap[i],
+            mem_addr: self.mem_addr[i],
+            mem_bytes: self.mem_bytes[i],
+            taken: self.taken[i] != 0,
+        }
+    }
+
+    /// Build columns from an AoS record slice.
+    pub fn from_records(records: &[FuncRecord]) -> TraceColumns {
+        let mut cols = TraceColumns::with_capacity(records.len());
+        for rec in records {
+            cols.push(rec);
+        }
+        cols
+    }
+
+    /// Materialize an AoS record vector (tests / compatibility).
+    pub fn to_records(&self) -> Vec<FuncRecord> {
+        (0..self.len()).map(|i| self.record(i)).collect()
+    }
+
+    /// Iterate assembled records.
+    pub fn iter(&self) -> impl Iterator<Item = FuncRecord> + '_ {
+        (0..self.len()).map(move |i| self.record(i))
+    }
+
+    /// Borrowed range view `[lo, hi)` — the zero-copy shard primitive.
+    pub fn slice(&self, lo: usize, hi: usize) -> ColumnsSlice<'_> {
+        assert!(lo <= hi && hi <= self.len(), "bad slice {lo}..{hi}");
+        ColumnsSlice {
+            cols: self,
+            lo,
+            hi,
+        }
+    }
+
+    /// Heap bytes held by the columns (diagnostics; 27 B/instruction vs
+    /// the padded `Vec<FuncRecord>` stride).
+    pub fn heap_bytes(&self) -> usize {
+        self.pc.len() * 8
+            + self.opcode.len()
+            + self.reg_bitmap.len() * 8
+            + self.mem_addr.len() * 8
+            + self.mem_bytes.len()
+            + self.taken.len()
+    }
+}
+
+impl FunctionalTrace {
+    /// Convert the record stream to columnar storage.
+    pub fn to_columns(&self) -> TraceColumns {
+        TraceColumns::from_records(&self.records)
+    }
+}
+
+/// A borrowed `[lo, hi)` view over [`TraceColumns`].
+#[derive(Debug, Clone, Copy)]
+pub struct ColumnsSlice<'a> {
+    cols: &'a TraceColumns,
+    lo: usize,
+    hi: usize,
+}
+
+impl<'a> ColumnsSlice<'a> {
+    /// Instructions in the view.
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    /// True if the view is empty.
+    pub fn is_empty(&self) -> bool {
+        self.lo == self.hi
+    }
+
+    /// Assemble the `i`-th record of the view.
+    #[inline]
+    pub fn record(&self, i: usize) -> FuncRecord {
+        debug_assert!(i < self.len());
+        self.cols.record(self.lo + i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functional::FunctionalSim;
+    use crate::workloads;
+
+    fn sample_trace(n: u64) -> FunctionalTrace {
+        let p = workloads::by_name("dee").unwrap().build(3);
+        FunctionalSim::new(&p).run(n)
+    }
+
+    #[test]
+    fn round_trips_records() {
+        let t = sample_trace(2_000);
+        let cols = t.to_columns();
+        assert_eq!(cols.len(), t.records.len());
+        assert_eq!(cols.to_records(), t.records);
+        for (i, rec) in t.records.iter().enumerate() {
+            assert_eq!(&cols.record(i), rec);
+        }
+    }
+
+    #[test]
+    fn iter_matches_records() {
+        let t = sample_trace(500);
+        let cols = t.to_columns();
+        let collected: Vec<FuncRecord> = cols.iter().collect();
+        assert_eq!(collected, t.records);
+    }
+
+    #[test]
+    fn slice_views_are_offsets() {
+        let t = sample_trace(300);
+        let cols = t.to_columns();
+        let s = cols.slice(100, 250);
+        assert_eq!(s.len(), 150);
+        assert_eq!(s.record(0), t.records[100]);
+        assert_eq!(s.record(149), t.records[249]);
+    }
+
+    #[test]
+    fn heap_bytes_smaller_than_aos() {
+        let t = sample_trace(4_000);
+        let cols = t.to_columns();
+        let aos = t.records.len() * std::mem::size_of::<FuncRecord>();
+        assert!(
+            cols.heap_bytes() < aos,
+            "SoA {} should be denser than AoS {}",
+            cols.heap_bytes(),
+            aos
+        );
+    }
+
+    #[test]
+    fn empty_columns() {
+        let cols = TraceColumns::new();
+        assert!(cols.is_empty());
+        assert_eq!(cols.heap_bytes(), 0);
+        assert!(cols.to_records().is_empty());
+    }
+}

@@ -6,6 +6,7 @@
 //! available via `Display` on records for debugging; the binary format is
 //! the interchange between the `tao datagen` step and everything else.
 
+use super::columns::TraceColumns;
 use super::record::{
     AccessLevel, DetailedRecord, DetailedTrace, FuncRecord, FunctionalTrace, RetiredInfo,
 };
@@ -107,6 +108,52 @@ pub fn read_functional(path: &Path) -> Result<FunctionalTrace> {
         records.push(read_func_record(&mut r)?);
     }
     Ok(FunctionalTrace { name, records })
+}
+
+/// Write a columnar functional trace to `path`. The on-disk format is
+/// identical to [`write_functional`] (`TAOTFNC1`), so AoS and SoA
+/// producers/consumers interoperate freely; the writer streams straight
+/// from the columns without assembling records.
+pub fn write_functional_columns(path: &Path, name: &str, cols: &TraceColumns) -> Result<()> {
+    let file = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC_FUNC)?;
+    write_str(&mut w, name)?;
+    write_u64(&mut w, cols.len() as u64)?;
+    for i in 0..cols.len() {
+        write_u64(&mut w, cols.pc[i])?;
+        w.write_all(&[cols.opcode[i]])?;
+        write_u64(&mut w, cols.reg_bitmap[i])?;
+        write_u64(&mut w, cols.mem_addr[i])?;
+        w.write_all(&[cols.mem_bytes[i], cols.taken[i]])?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a functional trace from `path` directly into columnar storage —
+/// no intermediate `Vec<FuncRecord>` is materialized; each field is
+/// appended to its column as it is decoded.
+pub fn read_functional_columns(path: &Path) -> Result<(String, TraceColumns)> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    ensure!(&magic == MAGIC_FUNC, "not a functional trace: bad magic");
+    let name = read_str(&mut r)?;
+    let n = read_u64(&mut r)? as usize;
+    let mut cols = TraceColumns::with_capacity(n);
+    for _ in 0..n {
+        let pc = read_u64(&mut r)?;
+        let op = read_u8(&mut r)?;
+        ensure!((op as usize) < Opcode::COUNT, "bad opcode id {op}");
+        let reg_bitmap = read_u64(&mut r)?;
+        let mem_addr = read_u64(&mut r)?;
+        let mem_bytes = read_u8(&mut r)?;
+        let taken = read_u8(&mut r)? != 0;
+        cols.push_fields(pc, op, reg_bitmap, mem_addr, mem_bytes, taken);
+    }
+    Ok((name, cols))
 }
 
 /// Write a detailed trace to `path`.
@@ -312,6 +359,40 @@ mod tests {
         let data = std::fs::read(&path).unwrap();
         std::fs::write(&path, &data[..data.len() - 4]).unwrap();
         assert!(read_functional(&path).is_err());
+    }
+
+    #[test]
+    fn columnar_and_aos_formats_interoperate() {
+        let dir = tmpdir();
+        let t = sample_functional();
+        let cols = t.to_columns();
+
+        // SoA writer -> AoS reader.
+        let p1 = dir.join("soa_write.trace");
+        write_functional_columns(&p1, &t.name, &cols).unwrap();
+        assert_eq!(read_functional(&p1).unwrap(), t);
+        // Byte-identical to the AoS writer.
+        let p2 = dir.join("aos_write.trace");
+        write_functional(&p2, &t).unwrap();
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+
+        // AoS writer -> SoA reader.
+        let (name, cols2) = read_functional_columns(&p2).unwrap();
+        assert_eq!(name, t.name);
+        assert_eq!(cols2, cols);
+    }
+
+    #[test]
+    fn columnar_reader_rejects_detailed_magic() {
+        let dir = tmpdir();
+        let dpath = dir.join("det_for_cols.trace");
+        let dt = DetailedTrace {
+            name: "x".into(),
+            uarch: "a".into(),
+            ..Default::default()
+        };
+        write_detailed(&dpath, &dt).unwrap();
+        assert!(read_functional_columns(&dpath).is_err());
     }
 
     #[test]

@@ -1,10 +1,66 @@
 //! Minimal benchmark harness (the vendored build has no criterion).
 //!
 //! `cargo bench` targets use [`Bench`] for warmup + repeated timed runs
-//! with mean/min/max reporting. Keep benchmarks deterministic: seed
+//! with mean/min/max reporting, and [`BenchReport`] to persist the
+//! numbers as JSON (e.g. `BENCH_coordinator.json`) so successive PRs
+//! have a perf trajectory. Keep benchmarks deterministic: seed
 //! everything through `crate::util::Rng`.
 
+use std::io::Write;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+/// Shared bench-binary flags (`--smoke`, `--json <path>`), parsed from
+/// `std::env::args`. Unknown flags (e.g. cargo's `--bench`) are
+/// ignored; a `--json` with no value is ignored too.
+#[derive(Debug, Default)]
+pub struct BenchOpts {
+    /// Reduced counts/iterations for CI smoke runs.
+    pub smoke: bool,
+    /// Write the [`BenchReport`] JSON here.
+    pub json: Option<PathBuf>,
+}
+
+impl BenchOpts {
+    /// Parse the process arguments.
+    pub fn from_env() -> BenchOpts {
+        let mut opts = BenchOpts::default();
+        let mut args = std::env::args().skip(1);
+        while let Some(a) = args.next() {
+            match a.as_str() {
+                "--smoke" => opts.smoke = true,
+                "--json" => opts.json = args.next().map(PathBuf::from),
+                _ => {}
+            }
+        }
+        opts
+    }
+}
+
+/// One benchmark case's measurements.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// `group/case` label.
+    pub name: String,
+    /// Logical items processed per iteration.
+    pub items: u64,
+    /// Mean wall-clock per iteration, nanoseconds.
+    pub mean_ns: f64,
+    /// Fastest iteration, nanoseconds.
+    pub min_ns: f64,
+    /// Slowest iteration, nanoseconds.
+    pub max_ns: f64,
+}
+
+impl Measurement {
+    /// Items per second at the mean iteration time.
+    pub fn items_per_sec(&self) -> f64 {
+        if self.mean_ns == 0.0 {
+            return f64::INFINITY;
+        }
+        self.items as f64 * 1e9 / self.mean_ns
+    }
+}
 
 /// A named benchmark group printer.
 pub struct Bench {
@@ -29,9 +85,9 @@ impl Bench {
         self
     }
 
-    /// Run `f`, which processes `items` logical items per call, and print
-    /// mean latency + throughput.
-    pub fn run<T>(&self, case: &str, items: u64, mut f: impl FnMut() -> T) {
+    /// Run `f`, which processes `items` logical items per call; print
+    /// mean latency + throughput and return the measurement.
+    pub fn run<T>(&self, case: &str, items: u64, mut f: impl FnMut() -> T) -> Measurement {
         for _ in 0..self.warmup {
             std::hint::black_box(f());
         }
@@ -43,16 +99,155 @@ impl Bench {
         }
         let total: Duration = times.iter().sum();
         let mean = total / self.iters;
-        let min = times.iter().min().unwrap();
-        let max = times.iter().max().unwrap();
-        let mips = items as f64 / mean.as_secs_f64() / 1e6;
+        let min = *times.iter().min().unwrap();
+        let max = *times.iter().max().unwrap();
+        let m = Measurement {
+            name: format!("{}/{}", self.name, case),
+            items,
+            mean_ns: mean.as_nanos() as f64,
+            min_ns: min.as_nanos() as f64,
+            max_ns: max.as_nanos() as f64,
+        };
         println!(
             "{:<44} {:>10.3?} /iter (min {:>9.3?}, max {:>9.3?})  {:>9.3} Mitems/s",
-            format!("{}/{}", self.name, case),
+            m.name,
             mean,
             min,
             max,
-            mips
+            m.items_per_sec() / 1e6
         );
+        m
+    }
+}
+
+/// Collects measurements and scalar metrics and writes them as a flat
+/// JSON document (hand-rolled — the build has no serde).
+#[derive(Debug, Default)]
+pub struct BenchReport {
+    cases: Vec<Measurement>,
+    metrics: Vec<(String, f64)>,
+}
+
+impl BenchReport {
+    /// Empty report.
+    pub fn new() -> BenchReport {
+        BenchReport::default()
+    }
+
+    /// Record a case measurement.
+    pub fn push(&mut self, m: Measurement) {
+        self.cases.push(m);
+    }
+
+    /// Record a derived scalar metric (speedups, latencies, ...).
+    pub fn metric(&mut self, key: &str, value: f64) {
+        self.metrics.push((key.to_string(), value));
+    }
+
+    /// Serialize to a JSON string.
+    pub fn to_json(&self) -> String {
+        fn num(v: f64) -> String {
+            if v.is_finite() {
+                format!("{v:.3}")
+            } else {
+                "null".to_string()
+            }
+        }
+        let mut s = String::from("{\n  \"cases\": [\n");
+        for (i, c) in self.cases.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"items\": {}, \"mean_ns\": {}, \"min_ns\": {}, \"max_ns\": {}, \"items_per_sec\": {}}}{}\n",
+                c.name,
+                c.items,
+                num(c.mean_ns),
+                num(c.min_ns),
+                num(c.max_ns),
+                num(c.items_per_sec()),
+                if i + 1 < self.cases.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n  \"metrics\": {\n");
+        for (i, (k, v)) in self.metrics.iter().enumerate() {
+            s.push_str(&format!(
+                "    \"{}\": {}{}\n",
+                k,
+                num(*v),
+                if i + 1 < self.metrics.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  }\n}\n");
+        s
+    }
+
+    /// Write the JSON document to `path`.
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json().as_bytes())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_throughput() {
+        let m = Measurement {
+            name: "g/c".into(),
+            items: 1_000,
+            mean_ns: 1e6, // 1 ms
+            min_ns: 1e6,
+            max_ns: 1e6,
+        };
+        assert!((m.items_per_sec() - 1e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn report_json_is_balanced_and_contains_cases() {
+        let mut r = BenchReport::new();
+        r.push(Measurement {
+            name: "batcher/naive".into(),
+            items: 10,
+            mean_ns: 5.0,
+            min_ns: 4.0,
+            max_ns: 6.0,
+        });
+        r.push(Measurement {
+            name: "batcher/overlap".into(),
+            items: 10,
+            mean_ns: 2.0,
+            min_ns: 2.0,
+            max_ns: 2.0,
+        });
+        r.metric("speedup", 2.5);
+        let j = r.to_json();
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+        assert!(j.contains("batcher/naive"));
+        assert!(j.contains("\"speedup\": 2.500"));
+        // The crate's own parser must accept it.
+        let parsed = crate::util::json::Json::parse(&j).expect("self-parse");
+        assert!(parsed.get("metrics").is_some());
+    }
+
+    #[test]
+    fn report_round_trips_through_file() {
+        let dir = std::env::temp_dir().join(format!("tao-bench-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let mut r = BenchReport::new();
+        r.metric("x", 1.0);
+        r.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"x\": 1.000"));
+    }
+
+    #[test]
+    fn bench_run_returns_measurement() {
+        let b = Bench::new("t").iters(1);
+        let m = b.run("noop", 100, || 1 + 1);
+        assert_eq!(m.items, 100);
+        assert!(m.mean_ns >= 0.0);
     }
 }

@@ -24,7 +24,7 @@ fn dataset_pipeline_all_benchmarks_all_uarchs() {
             let (detailed, stats) = DetailedSim::new(&program, &uarch).run(insts);
             assert_eq!(stats.instructions, insts);
             let adjusted = dataset::adjust(&detailed);
-            let aligned = dataset::align(&functional, &adjusted)
+            let aligned = dataset::align(&functional, adjusted)
                 .unwrap_or_else(|e| panic!("{}/{}: {e}", uarch.name, w.name));
             assert_eq!(aligned.samples.len(), insts as usize);
             assert_eq!(
@@ -148,7 +148,7 @@ fn feature_extraction_consistent_with_datagen() {
     let mut fx = FeatureExtractor::new(cfg);
     let mut row = vec![0.0f32; cfg.feature_dim()];
     for (i, rec) in functional.records.iter().enumerate() {
-        let id = fx.extract(rec, &mut row);
+        let id = fx.extract_into(rec, &mut row);
         assert_eq!(id, ds.opcodes[i], "opcode id at {i}");
         let stored = &ds.features[i * cfg.feature_dim()..(i + 1) * cfg.feature_dim()];
         assert_eq!(stored, &row[..], "feature row {i}");
@@ -169,6 +169,48 @@ fn labels_reflect_microarchitecture() {
     let c = datagen::generate(&w, &UarchConfig::uarch_c(), &opts).unwrap();
     assert_eq!(a.features, c.features);
     assert!(a.total_cycles > c.total_cycles, "A should be slower than C");
+}
+
+/// Acceptance gate for the overlap-aware batcher: on a ≥100k-instruction
+/// synthetic trace, the rolling-buffer batcher must stage byte-identical
+/// batches to the seed's per-window ring copy, flush for flush
+/// (the shared driver also asserts flush counts and partial flushes).
+#[test]
+fn overlap_batcher_byte_identical_to_naive_at_100k() {
+    tao_sim::coordinator::engine::check_batcher_equivalence(32, 16, 128, 100_000, 0x0B17);
+}
+
+/// The SoA pipeline end to end: functional trace -> columns -> columnar
+/// file round trip -> feature extraction parity with the AoS path.
+#[test]
+fn columnar_trace_pipeline_matches_aos() {
+    let dir = std::env::temp_dir().join(format!("tao-cols-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let program = workloads::by_name("mcf").unwrap().build(9);
+    let trace = FunctionalSim::new(&program).run(5_000);
+    let cols = trace.to_columns();
+
+    // Columnar serialization round trip, interoperable with the AoS
+    // reader/writer.
+    let path = dir.join("mcf.cols.trace");
+    tao_sim::trace::write_functional_columns(&path, &trace.name, &cols).unwrap();
+    let (name, cols2) = tao_sim::trace::read_functional_columns(&path).unwrap();
+    assert_eq!(name, trace.name);
+    assert_eq!(cols2, cols);
+    assert_eq!(tao_sim::trace::read_functional(&path).unwrap(), trace);
+
+    // Feature extraction over assembled columnar records matches AoS.
+    let cfg = FeatureConfig::default();
+    let mut fx_aos = FeatureExtractor::new(cfg);
+    let mut fx_soa = FeatureExtractor::new(cfg);
+    let mut row_a = vec![0.0f32; cfg.feature_dim()];
+    let mut row_s = vec![0.0f32; cfg.feature_dim()];
+    for (i, rec) in trace.records.iter().enumerate() {
+        let ida = fx_aos.extract_into(rec, &mut row_a);
+        let ids = fx_soa.extract_into(&cols.record(i), &mut row_s);
+        assert_eq!(ida, ids, "opcode id at {i}");
+        assert_eq!(row_a, row_s, "feature row {i}");
+    }
 }
 
 /// Trace serialization round-trips through disk at integration scale.

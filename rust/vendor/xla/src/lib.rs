@@ -1,0 +1,405 @@
+//! Offline stand-in for the `xla-rs` PJRT binding.
+//!
+//! The production build links the real PJRT CPU client and executes the
+//! AOT-lowered HLO from `python/compile/aot.py`. This container has no
+//! network access and no prebuilt libxla, so this crate vendors the small
+//! slice of the `xla-rs` API surface the runtime uses
+//! (`PjRtClient::cpu`, `HloModuleProto::from_text_file`,
+//! `XlaComputation::from_proto`, `compile`, `execute`, `Literal`) behind
+//! a **deterministic surrogate executor**:
+//!
+//! * "Compiling" records a seed hashed from the HLO text, so different
+//!   artifacts produce different (but stable) predictions.
+//! * "Executing" hashes each window of the staged inputs and maps the
+//!   hash to plausible output ranges. Two inputs → the Tao tuple shape
+//!   (fetch, exec, branch, access[4], icache, tlb); three inputs → the
+//!   SimNet tuple shape (fetch, exec). Per-window outputs depend only on
+//!   that window's bytes (plus the artifact seed), never on batch
+//!   position — exactly the property the engine's overlap-aware batcher
+//!   relies on and the equivalence tests assert.
+//!
+//! The engine, batcher, sharding, accumulation and reporting layers are
+//! therefore fully exercisable (and benchmarkable) without Python or a
+//! PJRT runtime; swap this path dependency for real xla-rs to run true
+//! model inference. Keep the API here in lock-step with
+//! `rust/src/runtime/artifact.rs`.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` (display-only).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias used across the binding.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err(msg: impl Into<String>) -> Error {
+    Error(msg.into())
+}
+
+// ---------------------------------------------------------------------
+// Literals
+// ---------------------------------------------------------------------
+
+/// Element payload of a [`Literal`].
+#[derive(Debug, Clone)]
+pub enum Data {
+    /// 32-bit floats.
+    F32(Vec<f32>),
+    /// 32-bit ints.
+    I32(Vec<i32>),
+    /// A tuple of literals (executable results).
+    Tuple(Vec<Literal>),
+}
+
+/// Element types storable in a [`Literal`].
+pub trait Element: Copy {
+    /// Wrap a slice as literal data.
+    fn wrap(v: &[Self]) -> Data;
+    /// Unwrap literal data (None on dtype mismatch).
+    fn unwrap(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl Element for f32 {
+    fn wrap(v: &[f32]) -> Data {
+        Data::F32(v.to_vec())
+    }
+    fn unwrap(d: &Data) -> Option<Vec<f32>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Element for i32 {
+    fn wrap(v: &[i32]) -> Data {
+        Data::I32(v.to_vec())
+    }
+    fn unwrap(d: &Data) -> Option<Vec<i32>> {
+        match d {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// A host-side tensor: shape + data, mirroring `xla::Literal`.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    /// Dimensions (empty for scalars; as passed to [`Literal::reshape`]).
+    shape: Vec<i64>,
+    data: Data,
+}
+
+impl Literal {
+    /// 1-D literal from a slice.
+    pub fn vec1<T: Element>(v: &[T]) -> Literal {
+        Literal {
+            shape: vec![v.len() as i64],
+            data: T::wrap(v),
+        }
+    }
+
+    /// Tuple literal.
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal {
+            shape: vec![parts.len() as i64],
+            data: Data::Tuple(parts),
+        }
+    }
+
+    /// Number of scalar elements.
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(t) => t.len(),
+        }
+    }
+
+    /// Reinterpret with a new shape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if matches!(self.data, Data::Tuple(_)) {
+            return Err(err("cannot reshape a tuple literal"));
+        }
+        if n as usize != self.element_count() {
+            return Err(err(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.shape, dims
+            )));
+        }
+        Ok(Literal {
+            shape: dims.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    /// The shape.
+    pub fn shape(&self) -> &[i64] {
+        &self.shape
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(parts) => Ok(parts),
+            _ => Err(err("not a tuple literal")),
+        }
+    }
+
+    /// Copy out the elements as `T`.
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| err("literal dtype mismatch"))
+    }
+}
+
+// ---------------------------------------------------------------------
+// HLO + client + executable
+// ---------------------------------------------------------------------
+
+/// Parsed (here: raw) HLO module text.
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Load HLO text from a file.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| err(format!("read hlo {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// A computation handle (the HLO carried through to compile).
+pub struct XlaComputation {
+    seed: u64,
+}
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            seed: fnv1a(proto.text.as_bytes(), 0xcbf2_9ce4_8422_2325),
+        }
+    }
+}
+
+/// The PJRT CPU client.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Construct the CPU client.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    /// "Compile" a computation for this client.
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable { seed: comp.seed })
+    }
+}
+
+/// A device-resident result buffer.
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to the host.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// A compiled executable (surrogate).
+pub struct PjRtLoadedExecutable {
+    seed: u64,
+}
+
+/// 64-bit FNV-1a over a byte slice, keyed by a starting state.
+fn fnv1a(bytes: &[u8], mut h: u64) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Map a hash to [0, 1).
+fn unit(h: u64) -> f32 {
+    ((h >> 11) as f64 / (1u64 << 53) as f64) as f32
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute one batch. Inputs follow the artifact convention:
+    /// `[opcodes [B,T], features [B,T,F]]` (Tao, 6 outputs) or
+    /// `[opcodes, features, ctx [B,T,6]]` (SimNet, 2 outputs).
+    ///
+    /// Outputs are a single tuple buffer, per real PJRT tupled results:
+    /// `result[0][0]` holds the tuple literal.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        if args.len() != 2 && args.len() != 3 {
+            return Err(err(format!("surrogate expects 2 or 3 inputs, got {}", args.len())));
+        }
+        let ops = args[0].borrow();
+        let feats = args[1].borrow();
+        let fshape = feats.shape();
+        if fshape.len() != 3 {
+            return Err(err(format!("features must be [B,T,F], got {fshape:?}")));
+        }
+        let (b, t, f) = (fshape[0] as usize, fshape[1] as usize, fshape[2] as usize);
+        if ops.element_count() != b * t {
+            return Err(err("opcode/feature batch shape mismatch"));
+        }
+        let fvals = feats.to_vec::<f32>()?;
+        let ovals = ops.to_vec::<i32>()?;
+
+        let simnet = args.len() == 3;
+        let mut fetch = Vec::with_capacity(b);
+        let mut exec = Vec::with_capacity(b);
+        let mut branch = Vec::with_capacity(b);
+        let mut access = Vec::with_capacity(b * 4);
+        let mut icache = Vec::with_capacity(b);
+        let mut tlb = Vec::with_capacity(b);
+        for w in 0..b {
+            // Hash this window's bytes (features + opcodes), keyed by the
+            // artifact seed. Position-independent by construction.
+            let fbytes = unsafe {
+                std::slice::from_raw_parts(
+                    fvals[w * t * f..(w + 1) * t * f].as_ptr() as *const u8,
+                    t * f * 4,
+                )
+            };
+            let obytes = unsafe {
+                std::slice::from_raw_parts(
+                    ovals[w * t..(w + 1) * t].as_ptr() as *const u8,
+                    t * 4,
+                )
+            };
+            let h = fnv1a(obytes, fnv1a(fbytes, self.seed));
+            // Plausible raw-model ranges; the runtime applies clamps,
+            // sigmoids and softmax on top.
+            fetch.push(1.0 + 4.0 * unit(h));
+            exec.push(4.0 + 12.0 * unit(h.rotate_left(7)));
+            if !simnet {
+                branch.push(4.0 * (unit(h.rotate_left(13)) - 0.5));
+                for k in 0..4u32 {
+                    access.push(3.0 * (unit(h.rotate_left(17 + 5 * k)) - 0.5));
+                }
+                icache.push(4.0 * (unit(h.rotate_left(41)) - 0.5));
+                tlb.push(4.0 * (unit(h.rotate_left(47)) - 0.5));
+            }
+        }
+
+        let mut parts = vec![
+            Literal::vec1(&fetch).reshape(&[b as i64])?,
+            Literal::vec1(&exec).reshape(&[b as i64])?,
+        ];
+        if !simnet {
+            parts.push(Literal::vec1(&branch).reshape(&[b as i64])?);
+            parts.push(Literal::vec1(&access).reshape(&[b as i64, 4])?);
+            parts.push(Literal::vec1(&icache).reshape(&[b as i64])?);
+            parts.push(Literal::vec1(&tlb).reshape(&[b as i64])?);
+        }
+        Ok(vec![vec![PjRtBuffer {
+            literal: Literal::tuple(parts),
+        }]])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exe(seed_text: &str) -> PjRtLoadedExecutable {
+        let proto = HloModuleProto {
+            text: seed_text.to_string(),
+        };
+        PjRtClient::cpu()
+            .unwrap()
+            .compile(&XlaComputation::from_proto(&proto))
+            .unwrap()
+    }
+
+    fn inputs(b: usize, t: usize, f: usize, fill: f32) -> (Literal, Literal) {
+        let ops = Literal::vec1(&vec![7i32; b * t])
+            .reshape(&[b as i64, t as i64])
+            .unwrap();
+        let feats = Literal::vec1(&vec![fill; b * t * f])
+            .reshape(&[b as i64, t as i64, f as i64])
+            .unwrap();
+        (ops, feats)
+    }
+
+    #[test]
+    fn literal_reshape_and_round_trip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let l2 = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(l2.shape(), &[2, 2]);
+        assert_eq!(l2.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn tao_shape_and_determinism() {
+        let e = exe("HloModule tao");
+        let (ops, feats) = inputs(4, 8, 5, 0.25);
+        let r1 = e.execute::<Literal>(&[ops.clone(), feats.clone()]).unwrap();
+        let parts = r1[0][0].to_literal_sync().unwrap().to_tuple().unwrap();
+        assert_eq!(parts.len(), 6);
+        assert_eq!(parts[0].to_vec::<f32>().unwrap().len(), 4);
+        assert_eq!(parts[3].to_vec::<f32>().unwrap().len(), 16);
+        let r2 = e.execute::<Literal>(&[ops, feats]).unwrap();
+        let p2 = r2[0][0].to_literal_sync().unwrap().to_tuple().unwrap();
+        assert_eq!(
+            parts[0].to_vec::<f32>().unwrap(),
+            p2[0].to_vec::<f32>().unwrap()
+        );
+    }
+
+    #[test]
+    fn simnet_shape() {
+        let e = exe("HloModule simnet");
+        let (ops, feats) = inputs(2, 4, 3, 0.5);
+        let ctx = Literal::vec1(&vec![0.0f32; 2 * 4 * 6])
+            .reshape(&[2, 4, 6])
+            .unwrap();
+        let r = e.execute::<Literal>(&[ops, feats, ctx]).unwrap();
+        let parts = r[0][0].to_literal_sync().unwrap().to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+    }
+
+    #[test]
+    fn outputs_depend_on_window_bytes_not_position() {
+        let e = exe("HloModule tao");
+        // Batch of two identical windows -> identical outputs.
+        let (ops, feats) = inputs(2, 4, 3, 0.75);
+        let r = e.execute::<Literal>(&[ops, feats]).unwrap();
+        let parts = r[0][0].to_literal_sync().unwrap().to_tuple().unwrap();
+        let fetch = parts[0].to_vec::<f32>().unwrap();
+        assert_eq!(fetch[0], fetch[1]);
+        // Different artifact seed -> different outputs.
+        let e2 = exe("HloModule other");
+        let (ops, feats) = inputs(2, 4, 3, 0.75);
+        let r2 = e2.execute::<Literal>(&[ops, feats]).unwrap();
+        let f2 = r2[0][0].to_literal_sync().unwrap().to_tuple().unwrap()[0]
+            .to_vec::<f32>()
+            .unwrap();
+        assert_ne!(fetch[0], f2[0]);
+    }
+}
