@@ -1,12 +1,26 @@
 # Convenience targets. Tier-1 verify is `cargo build --release && cargo test -q`.
+#
+# CI (.github/workflows/ci.yml) runs: build, test, fmt --check,
+# clippy -D warnings, then `bench-smoke` + `bench-gate`. `make ci`
+# reproduces the same gate locally. The bench gate compares the fresh
+# BENCH_*.json against the committed snapshots in benches/baselines/
+# (warn-only until 3 non-provisional snapshots exist, then fails on a
+# >15% items/sec regression vs the per-case baseline median); use
+# `make bench-baseline` after a trusted run to append a snapshot.
 
-.PHONY: build test bench bench-smoke
+.PHONY: build test fmt-check clippy bench bench-smoke bench-gate bench-baseline ci
 
 build:
 	cargo build --release
 
 test:
 	cargo test -q
+
+fmt-check:
+	cargo fmt --all -- --check
+
+clippy:
+	cargo clippy --workspace --all-targets -- -D warnings
 
 # Full benchmark sweep (prints to stdout).
 bench:
@@ -19,3 +33,29 @@ bench:
 bench-smoke:
 	cargo bench --bench coordinator -- --smoke --json BENCH_coordinator.json
 	cargo bench --bench features -- --smoke --json BENCH_features.json
+
+# Gate the current BENCH_*.json against benches/baselines/.
+bench-gate:
+	cargo run --release --bin bench_gate -- \
+	  BENCH_coordinator.json BENCH_features.json --baselines benches/baselines
+
+# Snapshot the current BENCH_*.json files as the next numbered baseline
+# (commit the result to extend the trajectory).
+bench-baseline:
+	@last=$$(ls benches/baselines 2>/dev/null \
+	  | sed -n 's/^\([0-9][0-9]*\)-BENCH_.*/\1/p' | sort -n | tail -1 | sed 's/^0*//'); \
+	next=$$(printf '%04d' $$(( $${last:-0} + 1 ))); \
+	for f in BENCH_coordinator.json BENCH_features.json; do \
+	  if [ -f $$f ]; then cp $$f benches/baselines/$$next-$$f; echo "baseline $$next-$$f"; fi; \
+	done
+
+# The full local CI gate. Steps run as sub-makes inside one recipe so
+# the ordering (build → ... → bench-smoke → bench-gate) holds even
+# under `make -jN`.
+ci:
+	$(MAKE) build
+	$(MAKE) test
+	$(MAKE) fmt-check
+	$(MAKE) clippy
+	$(MAKE) bench-smoke
+	$(MAKE) bench-gate

@@ -3,14 +3,49 @@
 //!
 //! Measures `extract_into` over the AoS record stream and over the SoA
 //! columnar trace (assembled per instruction via `TraceColumns::record`)
-//! to track the storage-layout effect on the extraction scan.
+//! to track the storage-layout effect on the extraction scan, plus the
+//! datagen dataset writers: the in-memory `featurize` (full `[M, F]`
+//! matrix resident) against the bounded-memory chunk-streaming sharded
+//! writer (`stream_dataset`, disk I/O included).
 //!
 //! Flags: `--smoke` (reduced counts), `--json <path>` (write metrics).
 
+use tao_sim::datagen::{self, StreamOptions};
+use tao_sim::dataset::{AdjustedTrace, Labels, Sample};
 use tao_sim::features::{FeatureConfig, FeatureExtractor};
 use tao_sim::functional::FunctionalSim;
+use tao_sim::trace::AccessLevel;
 use tao_sim::util::benchkit::{Bench, BenchOpts, BenchReport};
 use tao_sim::workloads;
+
+/// Synthetic adjusted trace over a real functional trace: cheap labels,
+/// real feature inputs — isolates datagen writer throughput from the
+/// detailed simulator.
+fn synthetic_adjusted(bench: &str, insts: u64) -> AdjustedTrace {
+    let program = workloads::by_name(bench).unwrap().build(7);
+    let trace = FunctionalSim::new(&program).run(insts);
+    let samples: Vec<Sample> = trace
+        .records
+        .iter()
+        .map(|r| Sample {
+            func: *r,
+            labels: Labels {
+                fetch_latency: 1,
+                exec_latency: 4,
+                branch_mispred: false,
+                access_level: AccessLevel::None,
+                icache_miss: false,
+                tlb_miss: false,
+            },
+        })
+        .collect();
+    AdjustedTrace {
+        name: bench.to_string(),
+        uarch: "bench".to_string(),
+        samples,
+        total_cycles: 5 * insts,
+    }
+}
 
 fn main() {
     let opts = BenchOpts::from_env();
@@ -27,7 +62,9 @@ fn main() {
             FeatureConfig { nb: 256, nq: 8, nm: 16 },
             FeatureConfig::default(), // paper values: 1k / 32 / 64
         ] {
-            let case = format!("{w}/nb{}-nq{}-nm{}", cfg.nb, cfg.nq, cfg.nm);
+            // The instruction count is part of the case name so the
+            // bench gate never cross-compares smoke and full runs.
+            let case = format!("{w}-{}k/nb{}-nq{}-nm{}", insts / 1000, cfg.nb, cfg.nq, cfg.nm);
             let mut out = vec![0.0f32; cfg.feature_dim()];
             let m = b.run(&format!("{case}/aos"), insts, || {
                 let mut fx = FeatureExtractor::new(cfg);
@@ -49,6 +86,48 @@ fn main() {
             report.push(m);
         }
     }
+    // --- datagen writers: in-memory featurize vs streamed shards ---
+    let dg_insts: u64 = if opts.smoke { 20_000 } else { 100_000 };
+    let adjusted = synthetic_adjusted("mcf", dg_insts);
+    let trace_records: Vec<_> = adjusted.samples.iter().map(|s| s.func).collect();
+    let cfg = FeatureConfig::default();
+    let dg = Bench::new("datagen").iters(if opts.smoke { 2 } else { 3 });
+    let dir = std::env::temp_dir().join(format!("tao-bench-dg-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("mkdir bench datagen dir");
+
+    let m = dg.run(&format!("in-memory-{}k", dg_insts / 1000), dg_insts, || {
+        datagen::featurize(&adjusted, cfg).len()
+    });
+    report.metric("datagen_inmem_ips", m.items_per_sec());
+    report.push(m);
+
+    for shards in [1usize, 4] {
+        let case = format!("stream-{}k/shards{shards}", dg_insts / 1000);
+        let out = dir.join(format!("s{shards}"));
+        let stream = StreamOptions {
+            chunk_size: 8_192,
+            shards,
+            keep_shards: true,
+        };
+        let m = dg.run(&case, dg_insts, || {
+            let (manifest, _) = datagen::stream_dataset(
+                &out,
+                &trace_records[..],
+                &adjusted.samples,
+                adjusted.total_cycles,
+                cfg,
+                stream,
+            )
+            .expect("stream dataset");
+            manifest.rows
+        });
+        report.metric(&format!("datagen_stream_ips_shards{shards}"), m.items_per_sec());
+        report.push(m);
+    }
+    // The kept shard files are ~100 MB per run; don't let them pile up
+    // in the temp dir across invocations.
+    let _ = std::fs::remove_dir_all(&dir);
+
     if let Some(path) = &opts.json {
         report.write_json(path).expect("write bench json");
         println!("wrote {}", path.display());

@@ -10,7 +10,7 @@
 
 pub mod args;
 
-use crate::datagen::{self, DatagenOptions};
+use crate::datagen::{self, DatagenOptions, StreamOptions};
 use crate::features::FeatureConfig;
 use crate::uarch::UarchConfig;
 use crate::workloads;
@@ -25,6 +25,7 @@ tao — Tao DL-based microarchitecture simulation (SIGMETRICS '24 reproduction)
 USAGE:
   tao datagen  [--out DIR] [--insts N] [--uarchs a,b,c] [--split train|test|all]
                [--seed S] [--nb N] [--nq N] [--nm N]
+               [--chunk-size N] [--shards K] [--keep-shards]
   tao simulate --model artifacts/tao_uarch_a.hlo.txt --bench mcf
                [--insts N] [--workers W] [--seed S] [--truth a|b|c]
                [--chunk N] [--warmup N]
@@ -67,7 +68,10 @@ pub fn parse_split(spec: &str) -> Result<Vec<workloads::Workload>> {
         "train" => workloads::training(),
         "test" => workloads::testing(),
         "all" => workloads::suite(),
-        name => vec![workloads::by_name(name).with_context(|| format!("unknown benchmark {name:?}"))?],
+        name => {
+            let w = workloads::by_name(name);
+            vec![w.with_context(|| format!("unknown benchmark {name:?}"))?]
+        }
     })
 }
 
@@ -80,7 +84,15 @@ fn cmd_datagen(mut args: Args) -> Result<()> {
     let nb: usize = args.opt_parse("--nb")?.unwrap_or(1024);
     let nq: usize = args.opt_parse("--nq")?.unwrap_or(32);
     let nm: usize = args.opt_parse("--nm")?.unwrap_or(64);
+    let default_stream = StreamOptions::default();
+    let chunk_size: usize = args
+        .opt_parse("--chunk-size")?
+        .unwrap_or(default_stream.chunk_size);
+    let shards: usize = args.opt_parse("--shards")?.unwrap_or(default_stream.shards);
+    let keep_shards = args.opt_flag("--keep-shards");
     args.finish()?;
+    anyhow::ensure!(chunk_size >= 1, "--chunk-size must be at least 1");
+    anyhow::ensure!(shards >= 1, "--shards must be at least 1");
 
     let uarchs = parse_uarchs(&uarch_spec)?;
     let wls = parse_split(&split)?;
@@ -88,6 +100,11 @@ fn cmd_datagen(mut args: Args) -> Result<()> {
         instructions: insts,
         features: FeatureConfig { nb, nq, nm },
         seed,
+        stream: StreamOptions {
+            chunk_size,
+            shards,
+            keep_shards,
+        },
     };
     datagen::run(&out, &wls, &uarchs, &opts)
 }

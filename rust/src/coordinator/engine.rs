@@ -27,7 +27,7 @@
 use crate::features::FeatureExtractor;
 use crate::runtime::{ArtifactMeta, ModelKind, ModelOutputs, Session};
 use crate::stats::{Metrics, PhaseSeries};
-use crate::trace::{ColumnsSlice, FuncRecord, TraceColumns};
+use crate::trace::{FuncRecord, TraceColumns};
 use anyhow::{ensure, Context, Result};
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -37,49 +37,10 @@ use std::time::{Duration, Instant};
 // Record sources (AoS and SoA traces feed the same engine)
 // ---------------------------------------------------------------------
 
-/// Anything the engine can stream instructions out of: an AoS record
-/// slice or columnar [`TraceColumns`]. `get` assembles the record in
-/// registers — implementations must be cheap and allocation-free.
-pub trait RecordSource {
-    /// Number of instructions.
-    fn len(&self) -> usize;
-    /// The `i`-th record.
-    fn get(&self, i: usize) -> FuncRecord;
-    /// True if no instructions.
-    fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-}
-
-impl RecordSource for [FuncRecord] {
-    fn len(&self) -> usize {
-        <[FuncRecord]>::len(self)
-    }
-    #[inline]
-    fn get(&self, i: usize) -> FuncRecord {
-        self[i]
-    }
-}
-
-impl RecordSource for TraceColumns {
-    fn len(&self) -> usize {
-        TraceColumns::len(self)
-    }
-    #[inline]
-    fn get(&self, i: usize) -> FuncRecord {
-        self.record(i)
-    }
-}
-
-impl RecordSource for ColumnsSlice<'_> {
-    fn len(&self) -> usize {
-        ColumnsSlice::len(self)
-    }
-    #[inline]
-    fn get(&self, i: usize) -> FuncRecord {
-        self.record(i)
-    }
-}
+// The trait lives with the trace layer now (`trace::source`) so datagen
+// can stream off the same abstraction; re-exported here because the
+// engine is its primary consumer and the historical home of the name.
+pub use crate::trace::RecordSource;
 
 // ---------------------------------------------------------------------
 // Window batching
@@ -511,6 +472,7 @@ fn flush_batch(
 /// chunk's first absorbed windows are not cold-started; its predictions
 /// are discarded. `accum` must be positioned at global base `start`
 /// (see [`PredAccum::at_base`]).
+#[allow(clippy::too_many_arguments)]
 fn simulate_stream<S: RecordSource + ?Sized>(
     session: &mut Session,
     scratch: &mut ShardScratch,
@@ -584,7 +546,16 @@ pub fn simulate_source<S: RecordSource + ?Sized>(
     };
     let mut scratch = ShardScratch::new(session.meta());
     let start = Instant::now();
-    let run = simulate_stream(session, &mut scratch, source, 0, source.len(), 0, ctx_metrics, accum)?;
+    let run = simulate_stream(
+        session,
+        &mut scratch,
+        source,
+        0,
+        source.len(),
+        0,
+        ctx_metrics,
+        accum,
+    )?;
     let mut accum = run.accum;
     Ok(SimResult {
         metrics: accum.metrics(),

@@ -13,20 +13,64 @@
 //! plus a `meta.json` with the feature configuration and opcode
 //! vocabulary that the AOT artifact must echo back (validated by the
 //! runtime loader).
+//!
+//! # Streaming, sharded generation
+//!
+//! At paper scale (hundreds of millions of instructions) the `[M, F]`
+//! feature matrix does not fit in RAM, so the default path is
+//! [`stream_dataset`]: K shard workers pull contiguous shards off an
+//! atomic-cursor work queue (the same pattern as
+//! `coordinator::engine::simulate_parallel`), warm their extractor to the
+//! shard start with the exact state-only
+//! [`FeatureExtractor::advance`] fast path, then stream the shard
+//! chunk-by-chunk — per-chunk §4.1 alignment, per-chunk featurization
+//! into a reused `chunk × F` buffer, per-chunk appends through the
+//! incremental [`npy::NpyWriter`] — into `features_NNN.npy` /
+//! `opcodes_NNN.npy` / `labels_NNN.npy` plus a `manifest.json`.
+//! [`merge_shards`] then reassembles the canonical single-file arrays
+//! through fixed-size copy buffers. Peak buffering is O(chunk × F) per
+//! worker regardless of trace length, and because the warm-up is exact
+//! (not approximate), the sharded output is **byte-identical** to the
+//! in-memory [`featurize`] + [`write_dataset`] path — enforced by tests.
 
-use crate::dataset::{self, AdjustedTrace};
+use crate::dataset::{self, AdjustedTrace, Labels, Sample};
 use crate::detailed::DetailedSim;
 use crate::features::{FeatureConfig, FeatureExtractor};
 use crate::functional::FunctionalSim;
-use crate::npy;
+use crate::npy::{self, Dtype, NpyWriter};
+use crate::trace::RecordSource;
 use crate::uarch::UarchConfig;
 use crate::workloads::Workload;
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 use std::io::Write;
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Number of label columns in `labels.npy`.
 pub const NUM_LABELS: usize = 6;
+
+/// Streaming knobs for the sharded datagen writer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamOptions {
+    /// Rows featurized and appended at a time. Peak buffering is
+    /// O(`chunk_size` × F) per worker, independent of trace length.
+    pub chunk_size: usize,
+    /// Shard files per array; workers stream shards off a work queue.
+    pub shards: usize,
+    /// Keep the per-shard files + `manifest.json` next to the merged
+    /// canonical arrays instead of deleting them after the merge.
+    pub keep_shards: bool,
+}
+
+impl Default for StreamOptions {
+    fn default() -> StreamOptions {
+        StreamOptions {
+            chunk_size: 8_192,
+            shards: 1,
+            keep_shards: false,
+        }
+    }
+}
 
 /// Options for a datagen run.
 #[derive(Debug, Clone)]
@@ -37,6 +81,8 @@ pub struct DatagenOptions {
     pub features: FeatureConfig,
     /// Workload seed.
     pub seed: u64,
+    /// Chunking/sharding for the streaming writer.
+    pub stream: StreamOptions,
 }
 
 impl Default for DatagenOptions {
@@ -45,6 +91,7 @@ impl Default for DatagenOptions {
             instructions: 20_000,
             features: FeatureConfig::default(),
             seed: 42,
+            stream: StreamOptions::default(),
         }
     }
 }
@@ -76,6 +123,19 @@ impl Dataset {
     }
 }
 
+/// The `labels.npy` row for one sample (column order is part of the
+/// on-disk format; the Python trainer indexes it positionally).
+fn label_row(l: &Labels) -> [f32; NUM_LABELS] {
+    [
+        l.fetch_latency as f32,
+        l.exec_latency as f32,
+        l.branch_mispred as u8 as f32,
+        l.access_level.index() as f32,
+        l.icache_miss as u8 as f32,
+        l.tlb_miss as u8 as f32,
+    ]
+}
+
 /// Generate the aligned, adjusted trace for one (benchmark, µarch) pair.
 pub fn adjusted_trace(
     workload: &Workload,
@@ -90,7 +150,9 @@ pub fn adjusted_trace(
     dataset::align(&functional, adjusted)
 }
 
-/// Build the feature/label arrays from an adjusted trace.
+/// Build the feature/label arrays from an adjusted trace, fully in
+/// memory. The oracle for [`stream_dataset`] (which must reproduce it
+/// byte for byte) and the convenient path for small traces.
 pub fn featurize(adjusted: &AdjustedTrace, config: FeatureConfig) -> Dataset {
     let f = config.feature_dim();
     let m = adjusted.samples.len();
@@ -107,20 +169,12 @@ pub fn featurize(adjusted: &AdjustedTrace, config: FeatureConfig) -> Dataset {
         // dataset matrix.
         let id = fx.extract_into(&s.func, &mut ds.features[i * f..(i + 1) * f]);
         ds.opcodes.push(id);
-        let l = &s.labels;
-        ds.labels.extend_from_slice(&[
-            l.fetch_latency as f32,
-            l.exec_latency as f32,
-            l.branch_mispred as u8 as f32,
-            l.access_level.index() as f32,
-            l.icache_miss as u8 as f32,
-            l.tlb_miss as u8 as f32,
-        ]);
+        ds.labels.extend_from_slice(&label_row(&s.labels));
     }
     ds
 }
 
-/// Generate and featurize in one step.
+/// Generate and featurize in one step (in-memory path).
 pub fn generate(
     workload: &Workload,
     uarch: &UarchConfig,
@@ -130,7 +184,7 @@ pub fn generate(
     Ok(featurize(&adjusted, opts.features))
 }
 
-/// Write one dataset under `dir/<uarch>/<bench>/`.
+/// Write one in-memory dataset under `dir/<uarch>/<bench>/`.
 pub fn write_dataset(dir: &Path, uarch: &str, bench: &str, ds: &Dataset) -> Result<()> {
     let d = dir.join(uarch).join(bench);
     std::fs::create_dir_all(&d).with_context(|| format!("mkdir {d:?}"))?;
@@ -142,6 +196,363 @@ pub fn write_dataset(dir: &Path, uarch: &str, bench: &str, ds: &Dataset) -> Resu
         format!("{}\n", ds.total_cycles),
     )?;
     Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Sharded streaming writer
+// ---------------------------------------------------------------------
+
+/// One shard's entry in `manifest.json`. Shard `index` covers global
+/// rows `[start, start + rows)` and lives in `features_NNN.npy` /
+/// `opcodes_NNN.npy` / `labels_NNN.npy` (see [`shard_file`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardEntry {
+    /// Shard number (file-name suffix).
+    pub index: usize,
+    /// First global row covered.
+    pub start: usize,
+    /// Rows in the shard.
+    pub rows: usize,
+}
+
+/// The sharded-dataset manifest: row/shape totals plus the shard table.
+/// Written by [`stream_dataset`]; consumed lazily by [`merge_shards`] —
+/// shard payloads are only ever streamed, never loaded whole.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    /// Total rows `M` across all shards.
+    pub rows: usize,
+    /// Feature dimension `F`.
+    pub feature_dim: usize,
+    /// Label columns (always [`NUM_LABELS`] today).
+    pub num_labels: usize,
+    /// Ground-truth total cycles of the run.
+    pub total_cycles: u64,
+    /// Shards in `index` order.
+    pub shards: Vec<ShardEntry>,
+}
+
+/// Shard file name for one array stem, e.g. `features_002.npy`.
+pub fn shard_file(stem: &str, index: usize) -> String {
+    format!("{stem}_{index:03}.npy")
+}
+
+impl Manifest {
+    /// Write `manifest.json` into `dir`.
+    pub fn write(&self, dir: &Path) -> Result<()> {
+        let entries: Vec<String> = self
+            .shards
+            .iter()
+            .map(|e| {
+                format!(
+                    "    {{\"index\": {}, \"start\": {}, \"rows\": {}}}",
+                    e.index, e.start, e.rows
+                )
+            })
+            .collect();
+        let mut f = std::fs::File::create(dir.join("manifest.json"))?;
+        writeln!(
+            f,
+            "{{\n  \"rows\": {},\n  \"feature_dim\": {},\n  \"num_labels\": {},\n  \"total_cycles\": {},\n  \"shards\": [\n{}\n  ]\n}}",
+            self.rows,
+            self.feature_dim,
+            self.num_labels,
+            self.total_cycles,
+            entries.join(",\n"),
+        )?;
+        Ok(())
+    }
+
+    /// Load `manifest.json` from `dir`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?;
+        let j = crate::util::json::Json::parse(&text)?;
+        let field = |k: &str| {
+            j.get(k)
+                .and_then(|v| v.as_u64())
+                .with_context(|| format!("manifest missing {k}"))
+        };
+        let shards = j
+            .get("shards")
+            .and_then(|v| v.as_arr())
+            .context("manifest missing shards")?
+            .iter()
+            .map(|e| {
+                let g = |k: &str| {
+                    e.get(k)
+                        .and_then(|v| v.as_u64())
+                        .with_context(|| format!("shard entry missing {k}"))
+                };
+                Ok(ShardEntry {
+                    index: g("index")? as usize,
+                    start: g("start")? as usize,
+                    rows: g("rows")? as usize,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            rows: field("rows")? as usize,
+            feature_dim: field("feature_dim")? as usize,
+            num_labels: field("num_labels")? as usize,
+            total_cycles: field("total_cycles")?,
+            shards,
+        })
+    }
+}
+
+/// Counters from one [`stream_dataset`] run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StreamStats {
+    /// Rows written across all shards.
+    pub rows: usize,
+    /// Chunks featurized.
+    pub chunks: u64,
+    /// Largest row count any chunk buffer ever held (≤ `chunk_size`).
+    pub peak_chunk_rows: usize,
+}
+
+/// Stream one dataset to disk in bounded memory: per-chunk §4.1
+/// alignment against `functional`, per-chunk featurization of
+/// `samples`, sharded incremental `.npy` writes, and a `manifest.json`
+/// describing the shards. Workers pull shards off an atomic-cursor
+/// queue and warm their extractor to each shard start with the exact
+/// [`FeatureExtractor::advance`] path, so the concatenated shards are
+/// byte-identical to the in-memory [`featurize`] matrix no matter the
+/// shard count or scheduling.
+pub fn stream_dataset<S>(
+    dir: &Path,
+    functional: &S,
+    samples: &[Sample],
+    total_cycles: u64,
+    config: FeatureConfig,
+    stream: StreamOptions,
+) -> Result<(Manifest, StreamStats)>
+where
+    S: RecordSource + Sync + ?Sized,
+{
+    let m = functional.len().min(samples.len());
+    ensure!(
+        m > 0,
+        "cannot stream empty traces ({} functional, {} samples)",
+        functional.len(),
+        samples.len()
+    );
+    std::fs::create_dir_all(dir).with_context(|| format!("mkdir {dir:?}"))?;
+    let chunk = stream.chunk_size.max(1);
+    let per_shard = m.div_ceil(stream.shards.max(1));
+    let shards_used = m.div_ceil(per_shard);
+    let parallel = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let workers = shards_used.min(parallel).max(1);
+    let f = config.feature_dim();
+
+    let cursor = AtomicUsize::new(0);
+    let results: Vec<Result<(Vec<ShardEntry>, StreamStats)>> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..workers {
+            let cursor = &cursor;
+            handles.push(scope.spawn(move || -> Result<(Vec<ShardEntry>, StreamStats)> {
+                let mut fx = FeatureExtractor::new(config);
+                // Instructions already folded into `fx` — the cursor
+                // hands shards out in increasing order, so the gap from
+                // here to the next shard start is replayed with the
+                // cheap state-only path.
+                let mut pos = 0usize;
+                let mut entries = Vec::new();
+                let mut stats = StreamStats::default();
+                let mut feat_chunk: Vec<f32> = Vec::with_capacity(chunk * f);
+                let mut op_chunk: Vec<i32> = Vec::with_capacity(chunk);
+                let mut label_chunk: Vec<f32> = Vec::with_capacity(chunk * NUM_LABELS);
+                loop {
+                    let s = cursor.fetch_add(1, Ordering::Relaxed);
+                    if s >= shards_used {
+                        break;
+                    }
+                    let start = s * per_shard;
+                    let end = (start + per_shard).min(m);
+                    for smp in &samples[pos..start] {
+                        fx.advance(&smp.func);
+                    }
+                    let mut feats_w = NpyWriter::create(
+                        &dir.join(shard_file("features", s)),
+                        Dtype::F32,
+                        Some(f),
+                    )?;
+                    let mut ops_w = NpyWriter::create(
+                        &dir.join(shard_file("opcodes", s)),
+                        Dtype::I32,
+                        None,
+                    )?;
+                    let mut labels_w = NpyWriter::create(
+                        &dir.join(shard_file("labels", s)),
+                        Dtype::F32,
+                        Some(NUM_LABELS),
+                    )?;
+                    let mut done = start;
+                    while done < end {
+                        let cend = (done + chunk).min(end);
+                        let rows = cend - done;
+                        dataset::align_chunk(functional, &samples[done..cend], done)?;
+                        feat_chunk.resize(rows * f, 0.0);
+                        op_chunk.clear();
+                        label_chunk.clear();
+                        for (k, smp) in samples[done..cend].iter().enumerate() {
+                            let row = &mut feat_chunk[k * f..(k + 1) * f];
+                            op_chunk.push(fx.extract_into(&smp.func, row));
+                            label_chunk.extend_from_slice(&label_row(&smp.labels));
+                        }
+                        feats_w.append_f32(&feat_chunk)?;
+                        ops_w.append_i32(&op_chunk)?;
+                        labels_w.append_f32(&label_chunk)?;
+                        stats.chunks += 1;
+                        stats.peak_chunk_rows = stats.peak_chunk_rows.max(rows);
+                        done = cend;
+                    }
+                    pos = end;
+                    let frows = feats_w.finalize()?;
+                    let orows = ops_w.finalize()?;
+                    let lrows = labels_w.finalize()?;
+                    ensure!(
+                        frows == end - start && orows == frows && lrows == frows,
+                        "shard {s}: wrote {frows}/{orows}/{lrows} rows, expected {}",
+                        end - start
+                    );
+                    entries.push(ShardEntry {
+                        index: s,
+                        start,
+                        rows: frows,
+                    });
+                    stats.rows += frows;
+                }
+                Ok((entries, stats))
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("datagen worker panicked"))
+            .collect()
+    });
+
+    let mut shards = Vec::new();
+    let mut stats = StreamStats::default();
+    for r in results {
+        let (es, st) = r?;
+        shards.extend(es);
+        stats.rows += st.rows;
+        stats.chunks += st.chunks;
+        stats.peak_chunk_rows = stats.peak_chunk_rows.max(st.peak_chunk_rows);
+    }
+    shards.sort_by_key(|e| e.index);
+    ensure!(stats.rows == m, "wrote {} rows, expected {m}", stats.rows);
+    let manifest = Manifest {
+        rows: m,
+        feature_dim: f,
+        num_labels: NUM_LABELS,
+        total_cycles,
+        shards,
+    };
+    manifest.write(dir)?;
+    Ok((manifest, stats))
+}
+
+/// Reassemble a sharded dataset into the canonical single-file arrays
+/// (`features.npy`, `opcodes.npy`, `labels.npy`) by streaming shard
+/// payloads through a fixed-size copy buffer — the merge, like the
+/// writers, holds O(1 MiB) regardless of dataset size, and the output
+/// is byte-identical to what [`write_dataset`] produces for the same
+/// data. With `remove_shards`, the shard files and manifest are deleted
+/// after a successful merge.
+pub fn merge_shards(dir: &Path, manifest: &Manifest, remove_shards: bool) -> Result<()> {
+    merge_one(dir, manifest, "features", Dtype::F32, Some(manifest.feature_dim))?;
+    merge_one(dir, manifest, "opcodes", Dtype::I32, None)?;
+    merge_one(dir, manifest, "labels", Dtype::F32, Some(manifest.num_labels))?;
+    if remove_shards {
+        for e in &manifest.shards {
+            for stem in ["features", "opcodes", "labels"] {
+                std::fs::remove_file(dir.join(shard_file(stem, e.index)))
+                    .with_context(|| format!("remove shard {stem}_{:03}", e.index))?;
+            }
+        }
+        std::fs::remove_file(dir.join("manifest.json")).context("remove manifest.json")?;
+    }
+    Ok(())
+}
+
+fn merge_one(
+    dir: &Path,
+    manifest: &Manifest,
+    stem: &str,
+    dtype: Dtype,
+    cols: Option<usize>,
+) -> Result<()> {
+    let out = dir.join(format!("{stem}.npy"));
+    let mut w = NpyWriter::create(&out, dtype, cols)?;
+    let mut buf = vec![0u8; 1 << 20];
+    for e in &manifest.shards {
+        let path = dir.join(shard_file(stem, e.index));
+        let (d, shape, mut r) = npy::open_payload(&path)?;
+        ensure!(d == dtype, "shard {path:?}: dtype {d:?}, expected {dtype:?}");
+        ensure!(
+            shape.first().copied() == Some(e.rows),
+            "shard {path:?}: shape {shape:?} disagrees with manifest rows {}",
+            e.rows
+        );
+        if let Some(c) = cols {
+            ensure!(
+                shape.get(1).copied() == Some(c),
+                "shard {path:?}: shape {shape:?}, expected {c} columns"
+            );
+        }
+        let mut remaining = shape.iter().product::<usize>() * dtype.size();
+        while remaining > 0 {
+            let n = remaining.min(buf.len());
+            std::io::Read::read_exact(&mut r, &mut buf[..n])
+                .with_context(|| format!("short read in {path:?}"))?;
+            w.append_raw(&buf[..n])?;
+            remaining -= n;
+        }
+    }
+    let rows = w.finalize()?;
+    ensure!(
+        rows == manifest.rows,
+        "merged {stem}: {rows} rows, manifest says {}",
+        manifest.rows
+    );
+    Ok(())
+}
+
+/// Generate one (benchmark, µarch) dataset straight to disk: traces →
+/// adjust → per-chunk align + featurize (sharded, bounded memory) →
+/// merged canonical arrays. The full `[M, F]` matrix never exists in
+/// memory. Returns the manifest and streaming counters.
+pub fn generate_streamed(
+    dir: &Path,
+    workload: &Workload,
+    uarch: &UarchConfig,
+    opts: &DatagenOptions,
+) -> Result<(Manifest, StreamStats)> {
+    let program = workload.build(opts.seed);
+    let functional = FunctionalSim::new(&program).run(opts.instructions);
+    let (detailed, _) = DetailedSim::new(&program, uarch).run(opts.instructions);
+    let adjusted = dataset::adjust(&detailed);
+    let d = dir.join(&uarch.name).join(workload.name);
+    std::fs::create_dir_all(&d).with_context(|| format!("mkdir {d:?}"))?;
+    let (manifest, stats) = stream_dataset(
+        &d,
+        &functional.records[..],
+        &adjusted.samples,
+        adjusted.total_cycles,
+        opts.features,
+        opts.stream,
+    )?;
+    merge_shards(&d, &manifest, !opts.stream.keep_shards)?;
+    std::fs::write(
+        d.join("total_cycles.txt"),
+        format!("{}\n", adjusted.total_cycles),
+    )?;
+    Ok((manifest, stats))
 }
 
 /// Write the run-level metadata JSON (feature config + opcode vocab).
@@ -172,7 +583,8 @@ pub fn write_meta(dir: &Path, opts: &DatagenOptions, uarchs: &[&UarchConfig]) ->
     Ok(())
 }
 
-/// Full datagen run: all benchmarks in `workloads` × all `uarchs`.
+/// Full datagen run: all benchmarks in `workloads` × all `uarchs`,
+/// through the streaming sharded writer.
 pub fn run(
     dir: &Path,
     workloads: &[Workload],
@@ -184,15 +596,16 @@ pub fn run(
     write_meta(dir, opts, &refs)?;
     for uarch in uarchs {
         for w in workloads {
-            let ds = generate(w, uarch, opts)?;
-            write_dataset(dir, &uarch.name, w.name, &ds)?;
+            let (manifest, stats) = generate_streamed(dir, w, uarch, opts)?;
             eprintln!(
-                "datagen: {}/{} — {} insts, {} cycles (cpi {:.3})",
+                "datagen: {}/{} — {} insts, {} cycles (cpi {:.3}), {} shards x {} chunks",
                 uarch.name,
                 w.name,
-                ds.len(),
-                ds.total_cycles,
-                ds.total_cycles as f64 / ds.len().max(1) as f64
+                manifest.rows,
+                manifest.total_cycles,
+                manifest.total_cycles as f64 / manifest.rows.max(1) as f64,
+                manifest.shards.len(),
+                stats.chunks,
             );
         }
     }
@@ -209,6 +622,10 @@ mod tests {
             instructions: 2_000,
             ..Default::default()
         }
+    }
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("tao-dg-{tag}-{}", std::process::id()))
     }
 
     #[test]
@@ -234,7 +651,7 @@ mod tests {
 
     #[test]
     fn write_and_read_back() {
-        let dir = std::env::temp_dir().join(format!("tao-dg-{}", std::process::id()));
+        let dir = tmp("rb");
         let w = workloads::by_name("nab").unwrap();
         let ds = generate(&w, &UarchConfig::uarch_a(), &opts()).unwrap();
         write_dataset(&dir, "uarch_a", "nab", &ds).unwrap();
@@ -246,7 +663,7 @@ mod tests {
 
     #[test]
     fn meta_json_is_parseable_shape() {
-        let dir = std::env::temp_dir().join(format!("tao-dgm-{}", std::process::id()));
+        let dir = tmp("meta");
         std::fs::create_dir_all(&dir).unwrap();
         let a = UarchConfig::uarch_a();
         write_meta(&dir, &opts(), &[&a]).unwrap();
@@ -267,5 +684,136 @@ mod tests {
         assert_eq!(a.features, c.features);
         // ...different labels (µarch-specific).
         assert_ne!(a.labels, c.labels);
+    }
+
+    #[test]
+    fn streamed_run_byte_identical_to_in_memory() {
+        // The full generate_streamed plumbing (sims included), multiple
+        // shards, a chunk size that does not divide the shard size, and
+        // cleanup of the shard files after the merge.
+        let w = workloads::by_name("dee").unwrap();
+        let uarch = UarchConfig::uarch_a();
+        let mut o = opts();
+        let ds = generate(&w, &uarch, &o).unwrap();
+        let dir_mem = tmp("mem");
+        write_dataset(&dir_mem, &uarch.name, w.name, &ds).unwrap();
+
+        o.stream = StreamOptions {
+            chunk_size: 257,
+            shards: 3,
+            keep_shards: false,
+        };
+        let dir_str = tmp("str");
+        let (manifest, stats) = generate_streamed(&dir_str, &w, &uarch, &o).unwrap();
+        assert_eq!(manifest.rows, 2_000);
+        assert_eq!(manifest.shards.len(), 3);
+        assert!(stats.peak_chunk_rows <= 257);
+        assert!(stats.chunks >= 8, "2000 rows / 257-chunks: got {}", stats.chunks);
+
+        let a = dir_mem.join("uarch_a/dee");
+        let b = dir_str.join("uarch_a/dee");
+        for name in ["features.npy", "opcodes.npy", "labels.npy", "total_cycles.txt"] {
+            assert_eq!(
+                std::fs::read(a.join(name)).unwrap(),
+                std::fs::read(b.join(name)).unwrap(),
+                "{name} differs between in-memory and streamed paths"
+            );
+        }
+        // keep_shards=false removed the shard files and manifest.
+        assert!(!b.join(shard_file("features", 0)).exists());
+        assert!(!b.join("manifest.json").exists());
+    }
+
+    #[test]
+    fn stream_keep_shards_manifest_round_trips() {
+        let w = workloads::by_name("lee").unwrap();
+        let uarch = UarchConfig::uarch_b();
+        let adjusted = adjusted_trace(&w, &uarch, 1_000, 7).unwrap();
+        let program = w.build(7);
+        let functional = FunctionalSim::new(&program).run(1_000);
+        let cfg = FeatureConfig {
+            nb: 64,
+            nq: 8,
+            nm: 16,
+        };
+        let dir = tmp("keep");
+        let (manifest, stats) = stream_dataset(
+            &dir,
+            &functional.records[..],
+            &adjusted.samples,
+            adjusted.total_cycles,
+            cfg,
+            StreamOptions {
+                chunk_size: 64,
+                shards: 4,
+                keep_shards: true,
+            },
+        )
+        .unwrap();
+        assert_eq!(stats.rows, 1_000);
+        assert_eq!(manifest.shards.iter().map(|e| e.rows).sum::<usize>(), 1_000);
+        // Shard table is contiguous and ordered.
+        let mut next = 0usize;
+        for (i, e) in manifest.shards.iter().enumerate() {
+            assert_eq!(e.index, i);
+            assert_eq!(e.start, next);
+            next += e.rows;
+        }
+        // The manifest round-trips through its JSON form.
+        assert_eq!(Manifest::load(&dir).unwrap(), manifest);
+        // Shard files survive alongside the merged arrays.
+        merge_shards(&dir, &manifest, false).unwrap();
+        assert!(dir.join(shard_file("features", 3)).exists());
+        let merged = npy::read(&dir.join("features.npy")).unwrap();
+        assert_eq!(merged.shape, vec![1_000, cfg.feature_dim()]);
+    }
+
+    #[test]
+    fn stream_rejects_misaligned_chunk() {
+        let w = workloads::by_name("nab").unwrap();
+        let uarch = UarchConfig::uarch_a();
+        let adjusted = adjusted_trace(&w, &uarch, 500, 42).unwrap();
+        let program = w.build(42);
+        let mut functional = FunctionalSim::new(&program).run(500);
+        functional.records[300].pc ^= 0x40;
+        let err = stream_dataset(
+            &tmp("mis"),
+            &functional.records[..],
+            &adjusted.samples,
+            adjusted.total_cycles,
+            FeatureConfig::default(),
+            StreamOptions::default(),
+        );
+        assert!(err.is_err(), "corrupted functional record must fail alignment");
+    }
+
+    #[test]
+    fn single_shard_file_is_canonical_array() {
+        // With one shard, the shard file itself is byte-identical to the
+        // merged canonical array (same rows, same writer).
+        let w = workloads::by_name("mcf").unwrap();
+        let uarch = UarchConfig::uarch_c();
+        let adjusted = adjusted_trace(&w, &uarch, 800, 1).unwrap();
+        let program = w.build(1);
+        let functional = FunctionalSim::new(&program).run(800);
+        let dir = tmp("one");
+        let (manifest, _) = stream_dataset(
+            &dir,
+            &functional.records[..],
+            &adjusted.samples,
+            adjusted.total_cycles,
+            FeatureConfig::default(),
+            StreamOptions {
+                chunk_size: 100,
+                shards: 1,
+                keep_shards: true,
+            },
+        )
+        .unwrap();
+        merge_shards(&dir, &manifest, false).unwrap();
+        assert_eq!(
+            std::fs::read(dir.join(shard_file("features", 0))).unwrap(),
+            std::fs::read(dir.join("features.npy")).unwrap()
+        );
     }
 }

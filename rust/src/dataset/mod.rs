@@ -10,7 +10,7 @@
 //! count is preserved** (the Figure 2 invariant, enforced by tests and a
 //! randomized property test).
 
-use crate::trace::{AccessLevel, DetailedTrace, FuncRecord, FunctionalTrace};
+use crate::trace::{AccessLevel, DetailedTrace, FuncRecord, FunctionalTrace, RecordSource};
 use anyhow::{ensure, Result};
 
 /// Per-instruction performance labels (the model's prediction targets).
@@ -137,20 +137,41 @@ pub fn align(functional: &FunctionalTrace, mut adjusted: AdjustedTrace) -> Resul
         functional.records.len(),
         adjusted.samples.len()
     );
-    for i in 0..n {
-        let f = &functional.records[i];
-        let a = &adjusted.samples[i].func;
+    align_chunk(&functional.records[..], &adjusted.samples[..n], 0)?;
+    adjusted.samples.truncate(n);
+    Ok(adjusted)
+}
+
+/// Verify one chunk of the §4.1 alignment: `samples[off]` must match the
+/// functional record at global index `base + off` on PC, opcode and
+/// memory address. [`align`] runs this over the whole trace at once; the
+/// streaming datagen path calls it once per chunk so alignment never
+/// needs the full sample vector and matrix resident together — the
+/// functional side is consumed lazily through any [`RecordSource`].
+pub fn align_chunk<S>(functional: &S, samples: &[Sample], base: usize) -> Result<()>
+where
+    S: RecordSource + ?Sized,
+{
+    ensure!(
+        base + samples.len() <= functional.len(),
+        "chunk [{base}, {}) overruns the {}-record functional trace",
+        base + samples.len(),
+        functional.len()
+    );
+    for (off, s) in samples.iter().enumerate() {
+        let f = functional.get(base + off);
+        let a = &s.func;
         ensure!(
             f.pc == a.pc && f.opcode == a.opcode && f.mem_addr == a.mem_addr,
-            "trace mismatch at instruction {i}: functional {:x}/{} vs detailed {:x}/{}",
+            "trace mismatch at instruction {}: functional {:x}/{} vs detailed {:x}/{}",
+            base + off,
             f.pc,
             f.opcode,
             a.pc,
             a.opcode
         );
     }
-    adjusted.samples.truncate(n);
-    Ok(adjusted)
+    Ok(())
 }
 
 /// Paper Table 1 row: instruction-count difference between detailed and
@@ -228,6 +249,23 @@ mod tests {
         let adj = adjust(&det);
         let aligned = align(&func, adj).unwrap();
         assert_eq!(aligned.samples.len(), 5_000);
+    }
+
+    #[test]
+    fn align_chunk_verifies_ranges_and_rejects_mismatches() {
+        let (mut func, det) = make_traces("dee", 2_000);
+        let adj = adjust(&det);
+        // Any chunking of a matching pair verifies, at any base.
+        for (base, len) in [(0usize, 500usize), (500, 1000), (1999, 1)] {
+            align_chunk(&func.records[..], &adj.samples[base..base + len], base).unwrap();
+        }
+        // A chunk overrunning the functional trace is caught.
+        assert!(align_chunk(&func.records[..], &adj.samples[1500..], 1501).is_err());
+        // A corrupted record inside the chunk is caught; chunks that do
+        // not cover it still pass.
+        func.records[15].pc ^= 0x40;
+        assert!(align_chunk(&func.records[..], &adj.samples[10..20], 10).is_err());
+        align_chunk(&func.records[..], &adj.samples[16..30], 16).unwrap();
     }
 
     #[test]

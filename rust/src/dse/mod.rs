@@ -290,7 +290,12 @@ mod tests {
             });
         }
         let inv = invert4(&covariance(&ds));
-        let base = PerfVector { cpi: 1.0, l1_miss_rate: 0.2, l2_miss_rate: 0.1, mispredict_rate: 0.1 };
+        let base = PerfVector {
+            cpi: 1.0,
+            l1_miss_rate: 0.2,
+            l2_miss_rate: 0.1,
+            mispredict_rate: 0.1,
+        };
         let step_cpi = PerfVector { cpi: 1.5, ..base };
         let step_bp = PerfVector { mispredict_rate: 0.6, ..base };
         let d_cpi = mahalanobis(&base, &step_cpi, &inv);

@@ -122,7 +122,9 @@ mod tests {
         let s = DesignSpace::table3();
         let a = s.design(12345);
         let b = s.design(12346);
-        assert_ne!(a.summary().replace("design_12345", ""), b.summary().replace("design_12346", ""));
+        let a_body = a.summary().replace("design_12345", "");
+        let b_body = b.summary().replace("design_12346", "");
+        assert_ne!(a_body, b_body);
     }
 
     #[test]

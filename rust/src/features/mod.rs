@@ -226,6 +226,27 @@ impl FeatureExtractor {
         scalar_part[9] = (dep_on_load && dep_dist <= 8.0) as u8 as f32;
 
         // --- state updates (after reads) ---
+        self.update_state(rec);
+
+        rec.opcode.index() as i32
+    }
+
+    /// Fold `rec` into the history state without computing its feature
+    /// row. This is the cheap warm-path behind sharded datagen: a shard
+    /// worker `advance`s over the instructions before its shard start
+    /// and lands on *exactly* the state a sequential `extract_into` pass
+    /// would have reached — no O(F) row writes, no approximation — so
+    /// sharded featurization stays byte-identical to the in-memory path.
+    #[inline]
+    pub fn advance(&mut self, rec: &FuncRecord) {
+        self.update_state(rec);
+    }
+
+    /// The state-update tail shared by [`FeatureExtractor::extract_into`]
+    /// (which runs it after reading the pre-update state into the row)
+    /// and [`FeatureExtractor::advance`] (which runs only this).
+    fn update_state(&mut self, rec: &FuncRecord) {
+        let cfg = self.config;
         if rec.opcode.is_cond_branch() {
             let b = self.bucket(rec.pc);
             let base = b * cfg.nq;
@@ -252,8 +273,6 @@ impl FeatureExtractor {
                 }
             }
         }
-
-        rec.opcode.index() as i32
     }
 
     /// Back-compat alias for [`FeatureExtractor::extract_into`].
@@ -454,6 +473,32 @@ mod tests {
             all
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn advance_reaches_exact_mid_trace_state() {
+        // `advance` over a prefix must leave the extractor in exactly the
+        // state `extract_into` over the same prefix would — every suffix
+        // row byte-identical, for splits at and around ring boundaries.
+        let p = crate::workloads::by_name("mcf").unwrap().build(3);
+        let t = crate::functional::FunctionalSim::new(&p).run(3_000);
+        let cfg = FeatureConfig { nb: 64, nq: 8, nm: 16 };
+        for split in [0usize, 1, 7, 100, 1023, 2999] {
+            let mut fx_full = FeatureExtractor::new(cfg);
+            let mut fx_adv = FeatureExtractor::new(cfg);
+            let mut row_full = vec![0.0f32; cfg.feature_dim()];
+            let mut row_adv = vec![0.0f32; cfg.feature_dim()];
+            for r in &t.records[..split] {
+                fx_full.extract_into(r, &mut row_full);
+                fx_adv.advance(r);
+            }
+            for (i, r) in t.records[split..].iter().enumerate() {
+                let a = fx_full.extract_into(r, &mut row_full);
+                let b = fx_adv.extract_into(r, &mut row_adv);
+                assert_eq!(a, b, "opcode id {i} rows after split {split}");
+                assert_eq!(row_full, row_adv, "row {i} after split {split}");
+            }
+        }
     }
 
     #[test]

@@ -4,13 +4,25 @@
 //! training stack (Python) is plain `.npy` arrays — features, opcode ids
 //! and labels — so the Python side is just `np.load`. Supports the three
 //! dtypes the pipeline needs: `f32`, `i32`, `i64`, in 1-D and 2-D
-//! C-contiguous layouts.
+//! C-contiguous layouts, plus an incremental [`NpyWriter`] that appends
+//! rows chunk by chunk and back-patches the final shape on finalize —
+//! the bounded-memory path behind streaming datagen.
 
 use anyhow::{bail, ensure, Context, Result};
-use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8] = b"\x93NUMPY\x01\x00";
+
+/// On-disk size of every v1.0 header this module emits: magic (8) +
+/// length field (2) + dict padded to the next multiple of 64. The dict
+/// is 53 bytes + the shape string + newline on top of the 10-byte
+/// prefix, so for the 3-character descrs used here and any shape string
+/// under 64 bytes (that covers 20-digit row counts) the total always
+/// pads to exactly 128 bytes. That fixed size is what lets [`NpyWriter`]
+/// reserve the header up front and rewrite it in place on finalize
+/// without moving the payload — byte-identical to a one-shot write.
+const HEADER_BLOCK: usize = 128;
 
 /// Supported element types.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -128,6 +140,121 @@ pub fn write_i64_1d(path: &Path, data: &[i64]) -> Result<()> {
     write_array(path, Dtype::I64, &[data.len()], as_bytes_i64(data))
 }
 
+/// Incremental `.npy` writer: reserve the (fixed-size) header, append
+/// rows chunk by chunk, then [`NpyWriter::finalize`] back-patches the
+/// true shape and fsyncs. The output is byte-identical to the one-shot
+/// `write_*` functions for the same data, but peak memory is whatever
+/// the caller buffers per append — the array itself never has to exist
+/// in RAM. Until finalize runs, the file carries a valid zero-row
+/// header, so a crashed run leaves a loadable (empty) array rather than
+/// a torn one.
+pub struct NpyWriter {
+    file: BufWriter<std::fs::File>,
+    path: PathBuf,
+    dtype: Dtype,
+    /// `None` = 1-D; `Some(c)` = 2-D with `c` columns per row.
+    cols: Option<usize>,
+    /// Elements appended so far (validated as whole rows on finalize).
+    elems: usize,
+}
+
+impl NpyWriter {
+    /// Create (truncate) `path` and reserve the header block.
+    pub fn create(path: &Path, dtype: Dtype, cols: Option<usize>) -> Result<NpyWriter> {
+        if let Some(c) = cols {
+            ensure!(c > 0, "zero-column npy shape");
+        }
+        let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+        let mut file = BufWriter::new(f);
+        file.write_all(&Self::header_bytes(dtype, 0, cols)?)?;
+        // Push the placeholder header to disk now so a crash mid-append
+        // leaves a loadable empty array, not a 0-byte file.
+        file.flush()?;
+        Ok(NpyWriter {
+            file,
+            path: path.to_path_buf(),
+            dtype,
+            cols,
+            elems: 0,
+        })
+    }
+
+    fn shape(rows: usize, cols: Option<usize>) -> Vec<usize> {
+        match cols {
+            None => vec![rows],
+            Some(c) => vec![rows, c],
+        }
+    }
+
+    fn header_bytes(dtype: Dtype, rows: usize, cols: Option<usize>) -> Result<Vec<u8>> {
+        let mut header = Vec::with_capacity(HEADER_BLOCK);
+        write_header(&mut header, dtype, &Self::shape(rows, cols))?;
+        ensure!(
+            header.len() == HEADER_BLOCK,
+            "npy header for {rows} rows is {} bytes, not the reserved {HEADER_BLOCK}",
+            header.len()
+        );
+        Ok(header)
+    }
+
+    /// Whole rows appended so far (partial trailing rows excluded).
+    pub fn rows(&self) -> usize {
+        self.elems / self.cols.unwrap_or(1)
+    }
+
+    /// Append elements already in raw little-endian form (the streaming
+    /// shard-merge path). Must be a whole number of elements; row
+    /// boundaries may fall mid-append and are validated at finalize.
+    pub fn append_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        ensure!(
+            bytes.len() % self.dtype.size() == 0,
+            "raw append of {} bytes is not whole {}-byte elements",
+            bytes.len(),
+            self.dtype.size()
+        );
+        self.file.write_all(bytes)?;
+        self.elems += bytes.len() / self.dtype.size();
+        Ok(())
+    }
+
+    /// Append f32 elements (row-major for 2-D arrays).
+    pub fn append_f32(&mut self, data: &[f32]) -> Result<()> {
+        ensure!(self.dtype == Dtype::F32, "appending f32 to {:?}", self.dtype);
+        self.append_raw(as_bytes_f32(data))
+    }
+
+    /// Append i32 elements.
+    pub fn append_i32(&mut self, data: &[i32]) -> Result<()> {
+        ensure!(self.dtype == Dtype::I32, "appending i32 to {:?}", self.dtype);
+        self.append_raw(as_bytes_i32(data))
+    }
+
+    /// Append i64 elements.
+    pub fn append_i64(&mut self, data: &[i64]) -> Result<()> {
+        ensure!(self.dtype == Dtype::I64, "appending i64 to {:?}", self.dtype);
+        self.append_raw(as_bytes_i64(data))
+    }
+
+    /// Patch the true shape into the reserved header block, flush and
+    /// fsync. Returns the final row count.
+    pub fn finalize(mut self) -> Result<usize> {
+        let per_row = self.cols.unwrap_or(1);
+        ensure!(
+            self.elems % per_row == 0,
+            "{} elements do not fill whole {per_row}-element rows",
+            self.elems
+        );
+        let rows = self.elems / per_row;
+        let header = Self::header_bytes(self.dtype, rows, self.cols)?;
+        self.file.flush()?;
+        let f = self.file.get_mut();
+        f.seek(SeekFrom::Start(0))?;
+        f.write_all(&header)?;
+        f.sync_all().with_context(|| format!("fsync {:?}", self.path))?;
+        Ok(rows)
+    }
+}
+
 /// A loaded array (for round-trip tests and the Rust-side consumers).
 #[derive(Debug, Clone, PartialEq)]
 pub struct NpyArray {
@@ -161,8 +288,12 @@ impl NpyArray {
     }
 }
 
-/// Read a `.npy` file (v1.0/2.0, C-order, supported dtypes only).
-pub fn read(path: &Path) -> Result<NpyArray> {
+/// Open a `.npy` file (v1.0/2.0, C-order, supported dtypes only) and
+/// parse its header, returning a reader positioned at the first payload
+/// byte. The streaming primitive behind [`read`] and the bounded-memory
+/// shard merge in `datagen` — callers copy the payload through a fixed
+/// buffer instead of loading it whole.
+pub fn open_payload(path: &Path) -> Result<(Dtype, Vec<usize>, BufReader<std::fs::File>)> {
     let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 8];
@@ -205,6 +336,12 @@ pub fn read(path: &Path) -> Result<NpyArray> {
         .filter(|t| !t.is_empty())
         .map(|t| t.parse::<usize>().context("bad shape dim"))
         .collect::<Result<_>>()?;
+    Ok((dtype, shape, r))
+}
+
+/// Read a `.npy` file fully into memory.
+pub fn read(path: &Path) -> Result<NpyArray> {
+    let (dtype, shape, mut r) = open_payload(path)?;
     let n: usize = shape.iter().product();
     let mut data = vec![0u8; n * dtype.size()];
     r.read_exact(&mut data)?;
@@ -272,5 +409,95 @@ mod tests {
         let back = read(&path).unwrap();
         assert_eq!(back.shape, vec![0]);
         assert!(back.as_f32().unwrap().is_empty());
+    }
+
+    #[test]
+    fn header_block_is_fixed_across_shapes() {
+        // The NpyWriter back-patch relies on every header padding to the
+        // same 128-byte block, including absurd row counts.
+        for shape in [
+            vec![0usize],
+            vec![1],
+            vec![usize::MAX / 2],
+            vec![0, 1],
+            vec![123_456_789, 154],
+            vec![usize::MAX / 4, 999_999],
+        ] {
+            for dtype in [Dtype::F32, Dtype::I32, Dtype::I64] {
+                let mut buf = Vec::new();
+                write_header(&mut buf, dtype, &shape).unwrap();
+                assert_eq!(buf.len(), HEADER_BLOCK, "shape {shape:?} {dtype:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_writer_matches_one_shot_2d() {
+        let data: Vec<f32> = (0..35 * 7).map(|i| i as f32 * 0.25 - 3.0).collect();
+        let one = tmp("w-one.npy");
+        write_f32_2d(&one, &data, 35, 7).unwrap();
+        let inc = tmp("w-inc.npy");
+        let mut w = NpyWriter::create(&inc, Dtype::F32, Some(7)).unwrap();
+        // Uneven chunks, including one that splits mid-row.
+        w.append_f32(&data[..70]).unwrap();
+        w.append_f32(&data[70..73]).unwrap();
+        w.append_f32(&data[73..140]).unwrap();
+        w.append_f32(&data[140..]).unwrap();
+        assert_eq!(w.finalize().unwrap(), 35);
+        assert_eq!(std::fs::read(&one).unwrap(), std::fs::read(&inc).unwrap());
+    }
+
+    #[test]
+    fn incremental_writer_matches_one_shot_1d_i32() {
+        let data: Vec<i32> = (0..1000).map(|i| i * 3 - 500).collect();
+        let one = tmp("w1-one.npy");
+        write_i32_1d(&one, &data).unwrap();
+        let inc = tmp("w1-inc.npy");
+        let mut w = NpyWriter::create(&inc, Dtype::I32, None).unwrap();
+        for chunk in data.chunks(137) {
+            w.append_i32(chunk).unwrap();
+        }
+        assert_eq!(w.finalize().unwrap(), 1000);
+        assert_eq!(std::fs::read(&one).unwrap(), std::fs::read(&inc).unwrap());
+    }
+
+    #[test]
+    fn incremental_writer_empty_matches_one_shot() {
+        let one = tmp("we-one.npy");
+        write_f32_1d(&one, &[]).unwrap();
+        let inc = tmp("we-inc.npy");
+        let w = NpyWriter::create(&inc, Dtype::F32, None).unwrap();
+        assert_eq!(w.finalize().unwrap(), 0);
+        assert_eq!(std::fs::read(&one).unwrap(), std::fs::read(&inc).unwrap());
+    }
+
+    #[test]
+    fn incremental_writer_rejects_partial_rows_and_wrong_dtype() {
+        let path = tmp("wbad.npy");
+        let mut w = NpyWriter::create(&path, Dtype::F32, Some(4)).unwrap();
+        assert!(w.append_i32(&[1, 2, 3, 4]).is_err());
+        w.append_f32(&[1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(w.rows(), 0);
+        // 3 elements do not fill a 4-column row.
+        assert!(w.finalize().is_err());
+
+        let mut w = NpyWriter::create(&path, Dtype::I32, None).unwrap();
+        // Raw appends must be whole elements.
+        assert!(w.append_raw(&[0u8; 6]).is_err());
+        w.append_raw(&[0u8; 8]).unwrap();
+        assert_eq!(w.finalize().unwrap(), 2);
+    }
+
+    #[test]
+    fn open_payload_positions_at_first_byte() {
+        let path = tmp("op.npy");
+        let data: Vec<i32> = vec![11, 22, 33];
+        write_i32_1d(&path, &data).unwrap();
+        let (dtype, shape, mut r) = open_payload(&path).unwrap();
+        assert_eq!(dtype, Dtype::I32);
+        assert_eq!(shape, vec![3]);
+        let mut first = [0u8; 4];
+        r.read_exact(&mut first).unwrap();
+        assert_eq!(i32::from_le_bytes(first), 11);
     }
 }

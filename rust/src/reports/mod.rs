@@ -31,7 +31,10 @@ use std::path::{Path, PathBuf};
 pub fn cmd_report(mut args: Args) -> Result<()> {
     let name = args
         .next_positional()
-        .context("usage: tao report <table1|figure2|figure9|figure10a|figure10b|figure11|table4|table6|figure15>")?;
+        .context(
+            "usage: tao report <table1|figure2|figure9|figure10a|figure10b|figure11|table4|\
+             table6|figure15>",
+        )?;
     match name.as_str() {
         "table1" => sim_reports::table1(args),
         "figure2" => sim_reports::figure2(args),

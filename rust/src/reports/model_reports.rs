@@ -255,6 +255,8 @@ pub fn table4(mut args: Args) -> Result<()> {
         timer::mips(total, t_func.elapsed()),
         total as f64 / tao_total / 1e6,
     ));
-    rep.line("(absolute seconds differ from the paper's A100 testbed; the decomposition shape is the claim)");
+    rep.line(
+        "(absolute seconds differ from the paper's A100 testbed; the decomposition shape is the claim)",
+    );
     Ok(())
 }

@@ -46,7 +46,9 @@ pub fn table1(mut args: Args) -> Result<()> {
             c.diff_percent()
         ));
     }
-    rep.line("(paper: 1M → 2,655,925 vs 2,528,617 = 5.2%; shape check: detailed > functional by a few %)");
+    rep.line(
+        "(paper: 1M → 2,655,925 vs 2,528,617 = 5.2%; shape check: detailed > functional by a few %)",
+    );
     Ok(())
 }
 
@@ -91,9 +93,11 @@ pub fn figure2(mut args: Args) -> Result<()> {
                     opcode.mnemonic(),
                     fetch_clock
                 )),
-                DetailedRecord::NopStall { fetch_clock } => {
-                    rep.line(format!("  {:>8} nop    fetch@{:<6} [pipeline stall]", "-", fetch_clock))
-                }
+                DetailedRecord::NopStall { fetch_clock } => rep.line(format!(
+                    "  {:>8} nop    fetch@{:<6} [pipeline stall]",
+                    "-",
+                    fetch_clock
+                )),
             }
         }
     }
@@ -308,11 +312,15 @@ pub fn table6(mut args: Args) -> Result<()> {
                     .and_then(|t| t.get("shared_s"))
                     .and_then(|v| v.as_f64())
                 {
-                    rep.line(format!("training shared embeddings (from artifacts/manifest.json): {t:.1}s"));
+                    rep.line(format!(
+                        "training shared embeddings (from artifacts/manifest.json): {t:.1}s"
+                    ));
                 }
             }
         }
-        Err(_) => rep.line("training shared embeddings: run `make artifacts` to populate manifest.json"),
+        Err(_) => rep.line(
+            "training shared embeddings: run `make artifacts` to populate manifest.json",
+        ),
     }
     rep.line("(paper: 0.35h simulation + 0.1min selection + 71h embedding training)");
     Ok(())
@@ -350,7 +358,9 @@ pub fn figure15(mut args: Args) -> Result<()> {
         rep.line(format!("  {size_kb:>4} KB : {:>7.2} MPKI", crate::stats::mean(&mpkis)));
     }
 
-    rep.line("Figure 15b — branch predictor sweep, avg branch MPKI over test benchmarks (ground truth)");
+    rep.line(
+        "Figure 15b — branch predictor sweep, avg branch MPKI over test benchmarks (ground truth)",
+    );
     // Fresh base config for the second sweep (the first mutated l1d);
     // constructing a preset is cheaper than cloning one per point.
     let mut cfg = UarchConfig::uarch_b();

@@ -1,0 +1,77 @@
+//! Streaming record access over any trace storage layout.
+//!
+//! Both consumers of a committed instruction stream — the coordinator's
+//! inference engine and the datagen featurization pipeline — iterate
+//! records one at a time and never need the whole trace as a slice of
+//! any particular layout. [`RecordSource`] is that read surface: AoS
+//! record slices, the SoA [`TraceColumns`], and columnar sub-range views
+//! all feed the same streaming loops.
+
+use crate::trace::{ColumnsSlice, FuncRecord, TraceColumns};
+
+/// Anything a streaming consumer can pull instructions out of: an AoS
+/// record slice or columnar [`TraceColumns`]. `get` assembles the record
+/// in registers — implementations must be cheap and allocation-free.
+pub trait RecordSource {
+    /// Number of instructions.
+    fn len(&self) -> usize;
+    /// The `i`-th record.
+    fn get(&self, i: usize) -> FuncRecord;
+    /// True if no instructions.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl RecordSource for [FuncRecord] {
+    fn len(&self) -> usize {
+        <[FuncRecord]>::len(self)
+    }
+    #[inline]
+    fn get(&self, i: usize) -> FuncRecord {
+        self[i]
+    }
+}
+
+impl RecordSource for TraceColumns {
+    fn len(&self) -> usize {
+        TraceColumns::len(self)
+    }
+    #[inline]
+    fn get(&self, i: usize) -> FuncRecord {
+        self.record(i)
+    }
+}
+
+impl RecordSource for ColumnsSlice<'_> {
+    fn len(&self) -> usize {
+        ColumnsSlice::len(self)
+    }
+    #[inline]
+    fn get(&self, i: usize) -> FuncRecord {
+        self.record(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functional::FunctionalSim;
+    use crate::workloads;
+
+    #[test]
+    fn aos_and_soa_sources_agree() {
+        let p = workloads::by_name("dee").unwrap().build(3);
+        let trace = FunctionalSim::new(&p).run(500);
+        let cols = trace.to_columns();
+        let aos: &[FuncRecord] = &trace.records;
+        assert_eq!(RecordSource::len(aos), cols.len());
+        assert!(!RecordSource::is_empty(aos));
+        for i in 0..RecordSource::len(aos) {
+            assert_eq!(RecordSource::get(aos, i), RecordSource::get(&cols, i));
+        }
+        let view = cols.slice(100, 200);
+        assert_eq!(RecordSource::len(&view), 100);
+        assert_eq!(RecordSource::get(&view, 0), trace.records[100]);
+    }
+}

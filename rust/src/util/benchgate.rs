@@ -1,0 +1,371 @@
+//! Bench-trajectory gate: compare a fresh `BENCH_*.json` report (written
+//! by [`crate::util::benchkit::BenchReport`]) against the committed
+//! snapshots under `benches/baselines/` and fail on throughput
+//! regressions once enough real data points exist.
+//!
+//! Policy (ROADMAP: "gate regressions once a few data points exist"):
+//!
+//! * Baselines are snapshots named `NNNN-BENCH_<bench>.json` (`make
+//!   bench-baseline` copies the current reports in under the next
+//!   sequence number).
+//! * A snapshot whose `metrics.provisional` is 1 seeds the trajectory
+//!   but never enforces — it marks a placeholder captured off the CI
+//!   runner, so its absolute numbers are not comparable.
+//! * With fewer than [`GateConfig::min_baselines`] enforcing snapshots,
+//!   the gate reports would-be regressions but passes (warn-only).
+//! * With enough, any case whose `items_per_sec` drops more than
+//!   [`GateConfig::tolerance`] below the median of the baselines fails.
+//!
+//! Cases are matched by name, and smoke/full runs use different case
+//! names (instruction counts are embedded), so smoke baselines never
+//! gate full runs or vice versa.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Gate thresholds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GateConfig {
+    /// Maximum tolerated fractional drop in `items_per_sec` (0.15 =
+    /// fail when current < 85% of the baseline median).
+    pub tolerance: f64,
+    /// Enforcing snapshots required before the gate fails builds.
+    pub min_baselines: usize,
+}
+
+impl Default for GateConfig {
+    fn default() -> GateConfig {
+        GateConfig {
+            tolerance: 0.15,
+            min_baselines: 3,
+        }
+    }
+}
+
+/// One case's throughput, pulled out of a report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CaseRate {
+    /// `group/case` label.
+    pub name: String,
+    /// Items per second at the mean iteration time.
+    pub items_per_sec: f64,
+}
+
+/// A parsed bench report: case rates plus the flags the gate cares
+/// about.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Report {
+    /// Per-case throughput.
+    pub cases: Vec<CaseRate>,
+    /// `metrics.provisional == 1`: placeholder numbers, never enforce.
+    pub provisional: bool,
+}
+
+/// Parse a `BENCH_*.json` document.
+pub fn parse_report(text: &str) -> Result<Report> {
+    let j = Json::parse(text)?;
+    let cases = j
+        .get("cases")
+        .and_then(|v| v.as_arr())
+        .context("bench report missing cases")?
+        .iter()
+        .map(|c| {
+            let name = c
+                .get("name")
+                .and_then(|v| v.as_str())
+                .context("case missing name")?
+                .to_string();
+            let items_per_sec = c
+                .get("items_per_sec")
+                .and_then(|v| v.as_f64())
+                .with_context(|| format!("case {name} missing items_per_sec"))?;
+            Ok(CaseRate {
+                name,
+                items_per_sec,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let metric = |k: &str| {
+        j.get("metrics")
+            .and_then(|m| m.get(k))
+            .and_then(|v| v.as_f64())
+    };
+    Ok(Report {
+        cases,
+        provisional: metric("provisional") == Some(1.0),
+    })
+}
+
+/// One regression (or would-be regression, when warn-only).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    /// Case label.
+    pub case: String,
+    /// Current items/sec.
+    pub current: f64,
+    /// Baseline-median items/sec.
+    pub reference: f64,
+}
+
+impl Finding {
+    /// Percent drop below the reference.
+    pub fn drop_percent(&self) -> f64 {
+        (1.0 - self.current / self.reference) * 100.0
+    }
+}
+
+/// Outcome of gating one report against the baseline directory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GateOutcome {
+    /// Report file name, e.g. `BENCH_coordinator.json`.
+    pub bench: String,
+    /// Enforcing (non-provisional) snapshots found.
+    pub baselines: usize,
+    /// Provisional snapshots found (trajectory seeds; never enforce).
+    pub provisional: usize,
+    /// Cases with at least one baseline data point.
+    pub compared: usize,
+    /// Cases below tolerance.
+    pub regressions: Vec<Finding>,
+}
+
+impl GateOutcome {
+    /// True when the gate is past warn-only (enough real baselines).
+    pub fn enforced(&self, cfg: &GateConfig) -> bool {
+        self.baselines >= cfg.min_baselines
+    }
+
+    /// True when the build should fail.
+    pub fn failed(&self, cfg: &GateConfig) -> bool {
+        self.enforced(cfg) && !self.regressions.is_empty()
+    }
+}
+
+/// Baseline snapshots for `bench` ("BENCH_x.json"), in sequence order.
+pub fn baseline_paths(dir: &Path, bench: &str) -> Vec<PathBuf> {
+    let suffix = format!("-{bench}");
+    let mut paths: Vec<PathBuf> = match std::fs::read_dir(dir) {
+        Err(_) => Vec::new(), // no baselines yet — warn-only territory
+        Ok(entries) => entries
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.ends_with(&suffix) && n.len() > suffix.len())
+            })
+            .collect(),
+    };
+    paths.sort();
+    paths
+}
+
+fn median(mut v: Vec<f64>) -> Option<f64> {
+    v.retain(|x| x.is_finite());
+    if v.is_empty() {
+        return None;
+    }
+    v.sort_by(|a, b| a.total_cmp(b));
+    Some(v[v.len() / 2])
+}
+
+/// Gate one current report against the snapshots in `baselines_dir`.
+pub fn check(current: &Path, baselines_dir: &Path, cfg: &GateConfig) -> Result<GateOutcome> {
+    let bench = current
+        .file_name()
+        .and_then(|n| n.to_str())
+        .with_context(|| format!("bad report path {current:?}"))?
+        .to_string();
+    let text =
+        std::fs::read_to_string(current).with_context(|| format!("read report {current:?}"))?;
+    let report = parse_report(&text).with_context(|| format!("parse {bench}"))?;
+
+    let mut enforcing = 0usize;
+    let mut provisional = 0usize;
+    let mut history: Vec<Report> = Vec::new();
+    for path in baseline_paths(baselines_dir, &bench) {
+        let text =
+            std::fs::read_to_string(&path).with_context(|| format!("read baseline {path:?}"))?;
+        let snap = parse_report(&text).with_context(|| format!("parse baseline {path:?}"))?;
+        if snap.provisional {
+            provisional += 1;
+        } else {
+            enforcing += 1;
+            history.push(snap);
+        }
+    }
+
+    let mut compared = 0usize;
+    let mut regressions = Vec::new();
+    for case in &report.cases {
+        let rates: Vec<f64> = history
+            .iter()
+            .flat_map(|s| &s.cases)
+            .filter(|c| c.name == case.name)
+            .map(|c| c.items_per_sec)
+            .collect();
+        let Some(reference) = median(rates) else {
+            continue;
+        };
+        compared += 1;
+        if case.items_per_sec < reference * (1.0 - cfg.tolerance) {
+            regressions.push(Finding {
+                case: case.name.clone(),
+                current: case.items_per_sec,
+                reference,
+            });
+        }
+    }
+    Ok(GateOutcome {
+        bench,
+        baselines: enforcing,
+        provisional,
+        compared,
+        regressions,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::benchkit::{BenchReport, Measurement};
+
+    fn report_json(cases: &[(&str, f64)], provisional: bool) -> String {
+        let mut r = BenchReport::new();
+        for (name, ips) in cases {
+            // mean_ns chosen so items_per_sec comes out at `ips`.
+            r.push(Measurement {
+                name: name.to_string(),
+                items: 1_000_000,
+                mean_ns: 1_000_000.0 * 1e9 / ips,
+                min_ns: 1.0,
+                max_ns: 2.0,
+            });
+        }
+        r.metric("smoke", 1.0);
+        if provisional {
+            r.metric("provisional", 1.0);
+        }
+        r.to_json()
+    }
+
+    fn fixture(tag: &str) -> (PathBuf, PathBuf) {
+        let root = std::env::temp_dir().join(format!("tao-gate-{tag}-{}", std::process::id()));
+        let baselines = root.join("baselines");
+        std::fs::create_dir_all(&baselines).unwrap();
+        (root, baselines)
+    }
+
+    fn write_snap(dir: &Path, seq: usize, bench: &str, json: &str) {
+        std::fs::write(dir.join(format!("{seq:04}-{bench}")), json).unwrap();
+    }
+
+    #[test]
+    fn parses_benchkit_reports() {
+        let r = parse_report(&report_json(&[("g/a", 100e6), ("g/b", 5e6)], false)).unwrap();
+        assert_eq!(r.cases.len(), 2);
+        assert_eq!(r.cases[0].name, "g/a");
+        assert!((r.cases[0].items_per_sec - 100e6).abs() / 100e6 < 1e-3);
+        assert!(!r.provisional);
+        assert!(parse_report(&report_json(&[], true)).unwrap().provisional);
+    }
+
+    #[test]
+    fn synthetic_regression_fails_once_enforced() {
+        let (root, baselines) = fixture("fail");
+        let bench = "BENCH_x.json";
+        for seq in 1..=3 {
+            write_snap(&baselines, seq, bench, &report_json(&[("g/a", 100e6)], false));
+        }
+        // 20% drop > 15% tolerance: regression, and 3 baselines enforce.
+        let current = root.join(bench);
+        std::fs::write(&current, report_json(&[("g/a", 80e6)], false)).unwrap();
+        let cfg = GateConfig::default();
+        let o = check(&current, &baselines, &cfg).unwrap();
+        assert_eq!(o.baselines, 3);
+        assert_eq!(o.compared, 1);
+        assert_eq!(o.regressions.len(), 1);
+        assert!(o.regressions[0].drop_percent() > 19.0);
+        assert!(o.failed(&cfg), "a >15% regression with 3 baselines must fail");
+
+        // A 10% drop stays inside tolerance.
+        std::fs::write(&current, report_json(&[("g/a", 90e6)], false)).unwrap();
+        let o = check(&current, &baselines, &cfg).unwrap();
+        assert!(o.regressions.is_empty());
+        assert!(!o.failed(&cfg));
+    }
+
+    #[test]
+    fn warn_only_until_enough_real_baselines() {
+        let (root, baselines) = fixture("warn");
+        let bench = "BENCH_y.json";
+        // Two real + three provisional snapshots: still warn-only.
+        for seq in 1..=3 {
+            write_snap(&baselines, seq, bench, &report_json(&[("g/a", 100e6)], true));
+        }
+        for seq in 4..=5 {
+            write_snap(&baselines, seq, bench, &report_json(&[("g/a", 100e6)], false));
+        }
+        let current = root.join(bench);
+        std::fs::write(&current, report_json(&[("g/a", 50e6)], false)).unwrap();
+        let cfg = GateConfig::default();
+        let o = check(&current, &baselines, &cfg).unwrap();
+        assert_eq!(o.baselines, 2);
+        assert_eq!(o.provisional, 3);
+        // The halving is still *reported*...
+        assert_eq!(o.regressions.len(), 1);
+        // ...but does not fail the build yet.
+        assert!(!o.failed(&cfg));
+    }
+
+    #[test]
+    fn empty_or_missing_baseline_dir_is_warn_only() {
+        let (root, baselines) = fixture("empty");
+        let bench = "BENCH_z.json";
+        let current = root.join(bench);
+        std::fs::write(&current, report_json(&[("g/a", 1e6)], false)).unwrap();
+        let cfg = GateConfig::default();
+        let o = check(&current, &baselines, &cfg).unwrap();
+        assert_eq!(o.baselines, 0);
+        assert_eq!(o.compared, 0);
+        assert!(!o.failed(&cfg));
+        // A directory that does not exist at all behaves the same.
+        let o = check(&current, &root.join("nope"), &cfg).unwrap();
+        assert!(!o.failed(&cfg));
+    }
+
+    #[test]
+    fn unknown_and_disjoint_cases_are_ignored() {
+        let (root, baselines) = fixture("disjoint");
+        let bench = "BENCH_w.json";
+        for seq in 1..=3 {
+            // Baselines carry a case the current run does not, and miss
+            // one the current run has (e.g. smoke vs full names).
+            write_snap(&baselines, seq, bench, &report_json(&[("g/old-200k", 9e6)], false));
+        }
+        let current = root.join(bench);
+        std::fs::write(&current, report_json(&[("g/new-50k", 1e6)], false)).unwrap();
+        let cfg = GateConfig::default();
+        let o = check(&current, &baselines, &cfg).unwrap();
+        assert_eq!(o.baselines, 3);
+        assert_eq!(o.compared, 0);
+        assert!(!o.failed(&cfg));
+    }
+
+    #[test]
+    fn median_is_robust_to_one_noisy_snapshot() {
+        let (root, baselines) = fixture("median");
+        let bench = "BENCH_m.json";
+        write_snap(&baselines, 1, bench, &report_json(&[("g/a", 100e6)], false));
+        write_snap(&baselines, 2, bench, &report_json(&[("g/a", 102e6)], false));
+        // One wildly fast outlier must not move the reference much.
+        write_snap(&baselines, 3, bench, &report_json(&[("g/a", 500e6)], false));
+        let current = root.join(bench);
+        std::fs::write(&current, report_json(&[("g/a", 95e6)], false)).unwrap();
+        let cfg = GateConfig::default();
+        let o = check(&current, &baselines, &cfg).unwrap();
+        // Against median 102e6 a 95e6 run is a ~7% dip: clean.
+        assert!(o.regressions.is_empty());
+    }
+}

@@ -1,5 +1,7 @@
-//! Small shared utilities: deterministic PRNG, timing helpers.
+//! Small shared utilities: deterministic PRNG, timing helpers, bench
+//! harness + trajectory gate.
 
+pub mod benchgate;
 pub mod benchkit;
 pub mod json;
 pub mod rng;

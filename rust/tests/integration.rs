@@ -1,13 +1,15 @@
 //! Cross-module integration tests: the full trace → dataset → features
 //! pipeline, simulator cross-validation, randomized program properties,
-//! and (when `make artifacts` has run) the PJRT end-to-end path.
+//! streaming sharded datagen vs the in-memory oracle, and (when
+//! `make artifacts` has run) the PJRT end-to-end path.
 
-use tao_sim::dataset;
-use tao_sim::datagen::{self, DatagenOptions};
+use tao_sim::datagen::{self, DatagenOptions, StreamOptions};
+use tao_sim::dataset::{self, AdjustedTrace, Labels, Sample};
 use tao_sim::detailed::DetailedSim;
 use tao_sim::features::{FeatureConfig, FeatureExtractor};
 use tao_sim::functional::FunctionalSim;
 use tao_sim::isa::{Condition, Instruction, Opcode, Program, Reg};
+use tao_sim::trace::{AccessLevel, FuncRecord, FunctionalTrace};
 use tao_sim::uarch::UarchConfig;
 use tao_sim::util::Rng;
 use tao_sim::workloads;
@@ -211,6 +213,175 @@ fn columnar_trace_pipeline_matches_aos() {
         assert_eq!(ida, ids, "opcode id at {i}");
         assert_eq!(row_a, row_s, "feature row {i}");
     }
+}
+
+/// Synthetic functional trace + matching adjusted trace, no simulators:
+/// random opcode mix (branches and memory ops exercise every extractor
+/// history structure), random-but-consistent labels.
+fn synthetic_pair(n: usize, seed: u64) -> (FunctionalTrace, AdjustedTrace) {
+    let mut rng = Rng::new(seed);
+    let mut records = Vec::with_capacity(n);
+    let mut samples = Vec::with_capacity(n);
+    let mut clock = 0u64;
+    let mut last_retire = 0u64;
+    for i in 0..n {
+        let opcode = match rng.index(10) {
+            0..=3 => Opcode::Add,
+            4..=5 => Opcode::Ldr,
+            6 => Opcode::Str,
+            7..=8 => Opcode::Bcond,
+            _ => Opcode::Mul,
+        };
+        let is_mem = matches!(opcode, Opcode::Ldr | Opcode::Str);
+        let rec = FuncRecord {
+            pc: 0x400000 + (i as u64 % 4096) * 4,
+            opcode,
+            reg_bitmap: 1 + rng.index(255) as u64,
+            mem_addr: if is_mem { 0x10000 + rng.index(1 << 16) as u64 } else { 0 },
+            mem_bytes: if is_mem { 8 } else { 0 },
+            taken: rng.chance(0.5),
+        };
+        records.push(rec);
+        let fetch = 1 + rng.gen_range(3) as u32;
+        let exec = 1 + rng.gen_range(20) as u32;
+        clock += fetch as u64;
+        last_retire = clock + exec as u64;
+        samples.push(Sample {
+            func: rec,
+            labels: Labels {
+                fetch_latency: fetch,
+                exec_latency: exec,
+                branch_mispred: opcode == Opcode::Bcond && rng.chance(0.1),
+                access_level: if is_mem { AccessLevel::L1 } else { AccessLevel::None },
+                icache_miss: rng.chance(0.01),
+                tlb_miss: rng.chance(0.005),
+            },
+        });
+    }
+    let functional = FunctionalTrace {
+        name: "synthetic".into(),
+        records,
+    };
+    let adjusted = AdjustedTrace {
+        name: "synthetic".into(),
+        uarch: "synthetic".into(),
+        samples,
+        total_cycles: last_retire,
+    };
+    (functional, adjusted)
+}
+
+/// Streaming acceptance gate, single shard: a ~50k-row synthetic trace
+/// streamed in 4k-row chunks (the trace is >10x larger than any chunk
+/// buffer) must produce byte-identical `.npy` files to the seed's
+/// in-memory featurize-then-write path.
+#[test]
+fn streaming_datagen_single_shard_byte_identical_at_50k() {
+    let n = 50_000;
+    let (functional, adjusted) = synthetic_pair(n, 0x5EED_DA7A);
+    let cfg = FeatureConfig {
+        nb: 128,
+        nq: 16,
+        nm: 32,
+    };
+    let root = std::env::temp_dir().join(format!("tao-int-dg1-{}", std::process::id()));
+
+    // In-memory oracle.
+    let aligned = dataset::align(&functional, adjusted.clone()).unwrap();
+    assert_eq!(aligned.samples.len(), n);
+    let ds = datagen::featurize(&aligned, cfg);
+    datagen::write_dataset(&root, "mem", "syn", &ds).unwrap();
+
+    // Streamed, one shard, 4k chunks.
+    let chunk = 4_096;
+    let out = root.join("stream");
+    let (manifest, stats) = datagen::stream_dataset(
+        &out,
+        &functional.records[..],
+        &adjusted.samples,
+        adjusted.total_cycles,
+        cfg,
+        StreamOptions {
+            chunk_size: chunk,
+            shards: 1,
+            keep_shards: true,
+        },
+    )
+    .unwrap();
+    datagen::merge_shards(&out, &manifest, false).unwrap();
+
+    // Peak buffering really was bounded by the chunk size.
+    assert!(stats.peak_chunk_rows <= chunk);
+    assert_eq!(stats.chunks, (n as u64).div_ceil(chunk as u64));
+    assert!(n >= 10 * chunk, "trace must dwarf the chunk buffer");
+
+    let mem = root.join("mem/syn");
+    for name in ["features.npy", "opcodes.npy", "labels.npy"] {
+        assert_eq!(
+            std::fs::read(mem.join(name)).unwrap(),
+            std::fs::read(out.join(name)).unwrap(),
+            "{name}: streamed output differs from the in-memory path"
+        );
+    }
+}
+
+/// Multi-shard: the manifest must describe shards that reassemble —
+/// lazily, shard by shard — into exactly the aligned in-memory dataset.
+#[test]
+fn streaming_datagen_multi_shard_manifest_reassembles() {
+    let n = 50_000;
+    let (functional, adjusted) = synthetic_pair(n, 0xCAFE);
+    let cfg = FeatureConfig {
+        nb: 64,
+        nq: 8,
+        nm: 16,
+    };
+    let root = std::env::temp_dir().join(format!("tao-int-dgN-{}", std::process::id()));
+
+    let aligned = dataset::align(&functional, adjusted.clone()).unwrap();
+    let ds = datagen::featurize(&aligned, cfg);
+    datagen::write_dataset(&root, "mem", "syn", &ds).unwrap();
+
+    let out = root.join("stream");
+    let (manifest, _) = datagen::stream_dataset(
+        &out,
+        &functional.records[..],
+        &adjusted.samples,
+        adjusted.total_cycles,
+        cfg,
+        StreamOptions {
+            chunk_size: 1_000,
+            shards: 5,
+            keep_shards: true,
+        },
+    )
+    .unwrap();
+
+    // The manifest tiles [0, n) with 5 contiguous shards.
+    assert_eq!(manifest.rows, n);
+    assert_eq!(manifest.shards.len(), 5);
+    let mut next = 0usize;
+    for e in &manifest.shards {
+        assert_eq!(e.start, next);
+        next += e.rows;
+    }
+    assert_eq!(next, n);
+    // It round-trips through its JSON form (the lazy-consumer surface).
+    assert_eq!(datagen::Manifest::load(&out).unwrap(), manifest);
+
+    // Reassembly is byte-identical to the in-memory dataset files.
+    datagen::merge_shards(&out, &manifest, true).unwrap();
+    let mem = root.join("mem/syn");
+    for name in ["features.npy", "opcodes.npy", "labels.npy"] {
+        assert_eq!(
+            std::fs::read(mem.join(name)).unwrap(),
+            std::fs::read(out.join(name)).unwrap(),
+            "{name}: multi-shard reassembly differs from the in-memory path"
+        );
+    }
+    // merge_shards(remove) cleaned the shard files + manifest up.
+    assert!(!out.join(datagen::shard_file("features", 0)).exists());
+    assert!(!out.join("manifest.json").exists());
 }
 
 /// Trace serialization round-trips through disk at integration scale.

@@ -1,0 +1,86 @@
+//! CI bench gate — compare fresh `BENCH_*.json` reports against the
+//! committed snapshots in `benches/baselines/` (see
+//! `tao_sim::util::benchgate` for the policy: warn-only until enough
+//! non-provisional baselines exist, then fail on a >tolerance
+//! instructions/sec regression).
+//!
+//! ```text
+//! bench_gate BENCH_coordinator.json BENCH_features.json \
+//!     [--baselines DIR] [--tolerance 0.15] [--min-baselines 3]
+//! ```
+//!
+//! Exit codes: 0 clean or warn-only, 1 enforced regression, 2 usage or
+//! I/O error.
+
+use anyhow::Result;
+use std::path::PathBuf;
+use tao_sim::cli::args::Args;
+use tao_sim::util::benchgate::{check, GateConfig, GateOutcome};
+
+fn main() {
+    match run() {
+        Ok(true) => {}
+        Ok(false) => std::process::exit(1),
+        Err(e) => {
+            eprintln!("bench_gate: error: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn print_outcome(o: &GateOutcome, cfg: &GateConfig) {
+    println!(
+        "bench_gate: {} — {} case(s) compared, {} enforcing + {} provisional baseline(s)",
+        o.bench, o.compared, o.baselines, o.provisional
+    );
+    for f in &o.regressions {
+        println!(
+            "  REGRESSION {}: {:.3e} items/s vs baseline median {:.3e} (-{:.1}%, tolerance {:.0}%)",
+            f.case,
+            f.current,
+            f.reference,
+            f.drop_percent(),
+            cfg.tolerance * 100.0
+        );
+    }
+    if o.failed(cfg) {
+        println!("  gate: FAIL");
+    } else if !o.regressions.is_empty() {
+        println!(
+            "  gate: warn-only ({} enforcing baseline(s) < {}) — would fail once enough accrue",
+            o.baselines, cfg.min_baselines
+        );
+    } else {
+        println!("  gate: clean");
+    }
+}
+
+fn run() -> Result<bool> {
+    let mut args = Args::new(std::env::args().skip(1).collect());
+    let mut reports = Vec::new();
+    while let Some(p) = args.next_positional() {
+        reports.push(PathBuf::from(p));
+    }
+    let baselines: PathBuf = args
+        .opt_value("--baselines")?
+        .unwrap_or_else(|| "benches/baselines".into())
+        .into();
+    let tolerance: f64 = args.opt_parse("--tolerance")?.unwrap_or(0.15);
+    let min_baselines: usize = args.opt_parse("--min-baselines")?.unwrap_or(3);
+    args.finish()?;
+    anyhow::ensure!(
+        !reports.is_empty(),
+        "usage: bench_gate <BENCH_*.json>... [--baselines DIR] [--tolerance T] [--min-baselines N]"
+    );
+    let cfg = GateConfig {
+        tolerance,
+        min_baselines,
+    };
+    let mut ok = true;
+    for report in &reports {
+        let outcome = check(report, &baselines, &cfg)?;
+        print_outcome(&outcome, &cfg);
+        ok &= !outcome.failed(&cfg);
+    }
+    Ok(ok)
+}
