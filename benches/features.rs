@@ -124,6 +124,44 @@ fn main() {
         report.metric(&format!("datagen_stream_ips_shards{shards}"), m.items_per_sec());
         report.push(m);
     }
+    // --- pull-based chunk sources (end-to-end streaming pipeline) ---
+    // stream-src/slice: the sequential pull writer over the in-memory
+    // paired adapter (per-chunk alignment included) — isolates the
+    // ChunkSource plumbing cost against `stream-*k/shards1` above.
+    // stream-src/e2e: generator-backed SimPairSource — functional +
+    // detailed simulation, alignment, featurization and shard writes in
+    // one O(chunk) pass (the `tao datagen --stream` hot path).
+    let src_stream = StreamOptions {
+        chunk_size: 8_192,
+        shards: 1,
+        keep_shards: true,
+    };
+    let out = dir.join("src-slice");
+    let m = dg.run(&format!("stream-src-{}k/slice", dg_insts / 1000), dg_insts, || {
+        let mut source = datagen::PairedSliceSource::new(
+            &trace_records[..],
+            &adjusted.samples,
+            adjusted.total_cycles,
+        );
+        let (manifest, _) = datagen::stream_dataset_source(&out, &mut source, cfg, src_stream)
+            .expect("stream dataset from slice source");
+        manifest.rows
+    });
+    report.metric("datagen_stream_src_slice_ips", m.items_per_sec());
+    report.push(m);
+
+    let wl = workloads::by_name("mcf").unwrap();
+    let uarch = tao_sim::uarch::UarchConfig::uarch_a();
+    let out = dir.join("src-e2e");
+    let m = dg.run(&format!("stream-src-{}k/e2e", dg_insts / 1000), dg_insts, || {
+        let mut source = datagen::SimPairSource::new(&wl, &uarch, dg_insts, 7);
+        let (manifest, _) = datagen::stream_dataset_source(&out, &mut source, cfg, src_stream)
+            .expect("stream dataset from generator source");
+        manifest.rows
+    });
+    report.metric("datagen_stream_src_e2e_ips", m.items_per_sec());
+    report.push(m);
+
     // The kept shard files are ~100 MB per run; don't let them pile up
     // in the temp dir across invocations.
     let _ = std::fs::remove_dir_all(&dir);

@@ -25,10 +25,10 @@ tao — Tao DL-based microarchitecture simulation (SIGMETRICS '24 reproduction)
 USAGE:
   tao datagen  [--out DIR] [--insts N] [--uarchs a,b,c] [--split train|test|all]
                [--seed S] [--nb N] [--nq N] [--nm N]
-               [--chunk-size N] [--shards K] [--keep-shards]
+               [--chunk-size N] [--shards K] [--keep-shards] [--stream]
   tao simulate --model artifacts/tao_uarch_a.hlo.txt --bench mcf
                [--insts N] [--workers W] [--seed S] [--truth a|b|c]
-               [--chunk N] [--warmup N]
+               [--chunk N] [--warmup N] [--stream] [--max-resident N]
   tao report   <table1|figure2|figure9|figure10a|figure10b|figure11|figure12a|
                 figure12b|figure14|table4|table6|figure15> [opts]
   tao dse      [--designs N] [--insts N] [--seed S]
@@ -90,6 +90,7 @@ fn cmd_datagen(mut args: Args) -> Result<()> {
         .unwrap_or(default_stream.chunk_size);
     let shards: usize = args.opt_parse("--shards")?.unwrap_or(default_stream.shards);
     let keep_shards = args.opt_flag("--keep-shards");
+    let from_generator = args.opt_flag("--stream");
     args.finish()?;
     anyhow::ensure!(chunk_size >= 1, "--chunk-size must be at least 1");
     anyhow::ensure!(shards >= 1, "--shards must be at least 1");
@@ -105,6 +106,7 @@ fn cmd_datagen(mut args: Args) -> Result<()> {
             shards,
             keep_shards,
         },
+        from_generator,
     };
     datagen::run(&out, &wls, &uarchs, &opts)
 }

@@ -26,25 +26,53 @@ pub fn cmd_simulate(mut args: Args) -> Result<()> {
     let workers: usize = args.opt_parse("--workers")?.unwrap_or(1);
     let seed: u64 = args.opt_parse("--seed")?.unwrap_or(42);
     let defaults = ParallelOptions::default();
-    let opts = ParallelOptions {
+    let mut opts = ParallelOptions {
         chunk: args.opt_parse("--chunk")?.unwrap_or(defaults.chunk),
         warmup: args.opt_parse("--warmup")?.unwrap_or(defaults.warmup),
     };
     let truth_uarch = args.opt_value("--truth")?;
+    let stream = args.opt_flag("--stream");
+    let max_resident: usize = args.opt_parse("--max-resident")?.unwrap_or(1 << 20);
     args.finish()?;
+    anyhow::ensure!(max_resident >= 1, "--max-resident must be positive");
 
     let workload =
         workloads::by_name(&bench_name).with_context(|| format!("unknown benchmark {bench_name}"))?;
     let program = workload.build(seed);
 
-    eprintln!("simulate: generating functional trace ({insts} insts of {bench_name})...");
-    let cols = FunctionalSim::new(&program).run(insts).to_columns();
-
-    eprintln!(
-        "simulate: loading {model:?} and running inference (workers={workers}, chunk={}, warmup={})...",
-        opts.chunk, opts.warmup
-    );
-    let result = engine::simulate_parallel_opts(&model, &cols, workers, None, opts)?;
+    let result = if stream {
+        // Pull-based pipeline: the functional simulator generates
+        // records only as inference workers pull chunks, so the trace is
+        // never resident. Peak buffering is ≈ workers × (chunk + warmup)
+        // records; clamp the pull grain to honor --max-resident, and
+        // refuse outright when the warm-up alone overflows the budget
+        // (a silent clamp would both break the bound and burn a full
+        // warm-up re-run per tiny chunk).
+        let per_worker = max_resident / workers.max(1);
+        anyhow::ensure!(
+            per_worker > opts.warmup,
+            "--max-resident {max_resident} cannot hold {} workers x (chunk + {} warmup) \
+             records; raise --max-resident or lower --warmup",
+            workers.max(1),
+            opts.warmup
+        );
+        opts.chunk = opts.chunk.min(per_worker - opts.warmup);
+        eprintln!(
+            "simulate: streaming {insts} insts of {bench_name} from the generator \
+             (workers={workers}, chunk={}, warmup={}, max-resident={max_resident})...",
+            opts.chunk, opts.warmup
+        );
+        let mut source = FunctionalSim::new(&program).into_chunks(insts);
+        engine::simulate_parallel_chunked(&model, &mut source, workers, opts)?
+    } else {
+        eprintln!("simulate: generating functional trace ({insts} insts of {bench_name})...");
+        let cols = FunctionalSim::new(&program).run(insts).to_columns();
+        eprintln!(
+            "simulate: loading {model:?} and running inference (workers={workers}, chunk={}, warmup={})...",
+            opts.chunk, opts.warmup
+        );
+        engine::simulate_parallel_opts(&model, &cols, workers, None, opts)?
+    };
     let m = result.metrics;
     println!("benchmark          : {bench_name}");
     println!("instructions       : {}", m.instructions);

@@ -27,20 +27,22 @@
 use crate::features::FeatureExtractor;
 use crate::runtime::{ArtifactMeta, ModelKind, ModelOutputs, Session};
 use crate::stats::{Metrics, PhaseSeries};
-use crate::trace::{FuncRecord, TraceColumns};
+use crate::trace::{ChunkBuf, FuncRecord, TraceColumns, CTX_WIDTH};
 use anyhow::{ensure, Context, Result};
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 // ---------------------------------------------------------------------
 // Record sources (AoS and SoA traces feed the same engine)
 // ---------------------------------------------------------------------
 
-// The trait lives with the trace layer now (`trace::source`) so datagen
-// can stream off the same abstraction; re-exported here because the
-// engine is its primary consumer and the historical home of the name.
-pub use crate::trace::RecordSource;
+// The traits live with the trace layer now (`trace::source`,
+// `trace::chunk`) so datagen can stream off the same abstractions;
+// re-exported here because the engine is their primary consumer and the
+// historical home of the names.
+pub use crate::trace::{ChunkSource, RecordSource};
 
 // ---------------------------------------------------------------------
 // Window batching
@@ -234,6 +236,93 @@ impl NaiveWindowBatcher {
     }
 }
 
+/// Overlap-aware stager for SimNet's per-instruction context metrics.
+///
+/// The seed staged each instruction's context *window* eagerly — `T`
+/// rows of [`CTX_WIDTH`] metrics gathered per instruction straight into
+/// the session buffer, `O(T·6)` copied per push. Context windows overlap
+/// exactly like feature windows, so this is [`WindowBatcher`]'s rolling
+/// buffer specialised to the fixed-width ctx channel: each instruction's
+/// 6 metrics are written **once**; [`CtxBatcher::materialize`] emits the
+/// `[B,T,6]` staging buffer with one contiguous copy per window, zeroing
+/// each window's own (newest) row — SimNet masks the current
+/// instruction's metrics, which are what the model predicts.
+///
+/// Must be driven in lockstep with the feature [`WindowBatcher`] (one
+/// `push` per `commit_row`, cleared/reset together) so the two stay on
+/// the same window grid.
+pub struct CtxBatcher {
+    t: usize,
+    batch: usize,
+    /// Rolling ctx rows, `(batch + t - 1) * CTX_WIDTH` values.
+    roll: Vec<f32>,
+    warmed: bool,
+    staged: usize,
+}
+
+impl CtxBatcher {
+    /// New stager for the given artifact shape.
+    pub fn new(t: usize, batch: usize) -> CtxBatcher {
+        assert!(t >= 1 && batch >= 1, "degenerate ctx batcher shape");
+        CtxBatcher {
+            t,
+            batch,
+            roll: vec![0.0; (batch + t - 1) * CTX_WIDTH],
+            warmed: false,
+            staged: 0,
+        }
+    }
+
+    /// Stage one instruction's context row. The first row of a shard
+    /// also seeds the `T-1` repeat-pad warm-up rows, mirroring
+    /// [`WindowBatcher::commit_row`].
+    #[inline]
+    pub fn push(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), CTX_WIDTH);
+        debug_assert!(self.staged < self.batch, "push past a full batch");
+        let idx = self.t - 1 + self.staged;
+        self.roll[idx * CTX_WIDTH..(idx + 1) * CTX_WIDTH].copy_from_slice(row);
+        if !self.warmed {
+            for j in 0..self.t - 1 {
+                self.roll
+                    .copy_within(idx * CTX_WIDTH..(idx + 1) * CTX_WIDTH, j * CTX_WIDTH);
+            }
+            self.warmed = true;
+        }
+        self.staged += 1;
+    }
+
+    /// Materialize the staged windows into the session's `[B,T,6]` ctx
+    /// buffer (one contiguous copy per window, then the newest-row
+    /// mask).
+    pub fn materialize(&self, ctx_buf: &mut [f32]) {
+        let (t, c) = (self.t, CTX_WIDTH);
+        debug_assert!(ctx_buf.len() >= self.batch * t * c);
+        for w in 0..self.staged {
+            ctx_buf[w * t * c..(w + 1) * t * c]
+                .copy_from_slice(&self.roll[w * c..(w + t) * c]);
+            ctx_buf[(w * t + t - 1) * c..(w * t + t) * c].fill(0.0);
+        }
+    }
+
+    /// Roll the last `T-1` rows to the front after a flush (window
+    /// history for the next batch).
+    pub fn clear_staged(&mut self) {
+        if self.staged > 0 {
+            let c = CTX_WIDTH;
+            self.roll
+                .copy_within(self.staged * c..(self.staged + self.t - 1) * c, 0);
+            self.staged = 0;
+        }
+    }
+
+    /// Reset everything (new shard).
+    pub fn reset(&mut self) {
+        self.staged = 0;
+        self.warmed = false;
+    }
+}
+
 /// Drive [`WindowBatcher`] and [`NaiveWindowBatcher`] over `n` seeded
 /// random rows and panic unless they stage byte-identical batches,
 /// flush for flush (including the final partial flush). Shared support
@@ -418,11 +507,13 @@ impl SimResult {
     }
 }
 
-/// Per-worker reusable state: one extractor + one batcher, reset per
-/// chunk so chunk streaming allocates nothing on the hot path.
+/// Per-worker reusable state: one extractor, one feature batcher and
+/// one ctx stager, reset per chunk so chunk streaming allocates nothing
+/// on the hot path.
 pub struct ShardScratch {
     fx: FeatureExtractor,
     batcher: WindowBatcher,
+    ctx: CtxBatcher,
 }
 
 impl ShardScratch {
@@ -431,7 +522,14 @@ impl ShardScratch {
         ShardScratch {
             fx: FeatureExtractor::new(meta.features),
             batcher: WindowBatcher::new(meta.context, meta.feature_dim, meta.batch),
+            ctx: CtxBatcher::new(meta.context, meta.batch),
         }
+    }
+
+    fn reset(&mut self) {
+        self.fx.reset();
+        self.batcher.reset();
+        self.ctx.reset();
     }
 }
 
@@ -443,26 +541,65 @@ struct ShardRun {
 
 fn flush_batch(
     session: &mut Session,
-    batcher: &mut WindowBatcher,
+    scratch: &mut ShardScratch,
     accum: &mut PredAccum,
     skip: &mut usize,
     batches: &mut u64,
     kind: ModelKind,
 ) -> Result<()> {
-    let staged = batcher.staged;
+    let staged = scratch.batcher.staged;
     if staged == 0 {
         return Ok(());
     }
     {
         let (ops_buf, feat_buf) = session.buffers();
-        batcher.materialize(ops_buf, feat_buf);
+        scratch.batcher.materialize(ops_buf, feat_buf);
+    }
+    if kind == ModelKind::SimNet {
+        scratch.ctx.materialize(session.ctx_buffer());
     }
     let out = session.run(staged)?;
     let skip_now = (*skip).min(out.fetch.len());
     accum.absorb_range(&out, kind, skip_now);
     *skip -= skip_now;
-    batcher.clear_staged();
+    scratch.batcher.clear_staged();
+    scratch.ctx.clear_staged();
     *batches += 1;
+    Ok(())
+}
+
+/// Stage one record (and, for SimNet, its context row) into the
+/// scratch's batchers and flush through the session when the batch
+/// fills. The single per-record core shared by the resident
+/// ([`simulate_stream`]) and pull-based ([`simulate_chunked`]) paths —
+/// one body, so the byte-identity guarantees between them cannot drift.
+/// SimNet callers must have validated ctx presence/length up front.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn stage_record(
+    session: &mut Session,
+    scratch: &mut ShardScratch,
+    rec: &FuncRecord,
+    ctx_row: Option<&[f32]>,
+    accum: &mut PredAccum,
+    skip: &mut usize,
+    batches: &mut u64,
+    kind: ModelKind,
+) -> Result<()> {
+    let row = scratch.batcher.begin_row();
+    let opcode = scratch.fx.extract_into(rec, row);
+    let full = scratch.batcher.commit_row(opcode);
+    if kind == ModelKind::SimNet {
+        // Stage the context row alongside the feature row: the rolling
+        // CtxBatcher repeat-pads and masks at flush time,
+        // byte-identical to the seed's per-instruction window copy.
+        scratch
+            .ctx
+            .push(ctx_row.expect("SimNet ctx validated by the caller"));
+    }
+    if full {
+        flush_batch(session, scratch, accum, skip, batches, kind)?;
+    }
     Ok(())
 }
 
@@ -483,50 +620,32 @@ fn simulate_stream<S: RecordSource + ?Sized>(
     ctx_metrics: Option<&[f32]>,
     mut accum: PredAccum,
 ) -> Result<ShardRun> {
-    let (kind, t) = {
-        let m = session.meta();
-        (m.kind, m.context)
-    };
+    let kind = session.meta().kind;
     ensure!(start <= end && end <= source.len(), "bad stream range");
     ensure!(warmup <= start, "warm-up region precedes the trace");
     if kind == ModelKind::SimNet {
         ensure!(
-            ctx_metrics.map(|c| c.len()) == Some(source.len() * 6),
+            ctx_metrics.map(|c| c.len()) == Some(source.len() * CTX_WIDTH),
             "SimNet requires [N×6] context metrics"
         );
     }
-    scratch.fx.reset();
-    scratch.batcher.reset();
+    scratch.reset();
     let base = start - warmup;
     let mut skip = warmup;
     let mut batches = 0u64;
 
     for i in base..end {
         let rec = source.get(i);
-        let row = scratch.batcher.begin_row();
-        let opcode = scratch.fx.extract_into(&rec, row);
-        let full = scratch.batcher.commit_row(opcode);
-        if kind == ModelKind::SimNet {
-            // Stage the context-metric window alongside: repeat-pad like
-            // the feature window, mask the current instruction's row.
-            let w = scratch.batcher.staged - 1;
-            let ctx = ctx_metrics.unwrap();
-            let ctx_buf = session.ctx_buffer();
-            for j in 0..t {
-                let src = i.saturating_sub(t - 1 - j).max(base);
-                let dst = &mut ctx_buf[(w * t + j) * 6..(w * t + j + 1) * 6];
-                if j + 1 == t {
-                    dst.fill(0.0);
-                } else {
-                    dst.copy_from_slice(&ctx[src * 6..src * 6 + 6]);
-                }
-            }
-        }
-        if full {
-            flush_batch(session, &mut scratch.batcher, &mut accum, &mut skip, &mut batches, kind)?;
-        }
+        // Only sliced for SimNet, where the length check above holds;
+        // Tao sessions ignore ctx entirely.
+        let ctx_row = if kind == ModelKind::SimNet {
+            ctx_metrics.map(|c| &c[i * CTX_WIDTH..(i + 1) * CTX_WIDTH])
+        } else {
+            None
+        };
+        stage_record(session, scratch, &rec, ctx_row, &mut accum, &mut skip, &mut batches, kind)?;
     }
-    flush_batch(session, &mut scratch.batcher, &mut accum, &mut skip, &mut batches, kind)?;
+    flush_batch(session, scratch, &mut accum, &mut skip, &mut batches, kind)?;
     if let Some(ph) = &mut accum.phase {
         ph.finish();
     }
@@ -534,6 +653,12 @@ fn simulate_stream<S: RecordSource + ?Sized>(
 }
 
 /// Simulate a whole source through one session (one shard, one thread).
+///
+/// Stays zero-copy for resident sources — records are read straight off
+/// the [`RecordSource`], no chunk staging. The pull-based
+/// [`simulate_chunked`] shares the same per-record core
+/// ([`stage_record`]), and the oracle tests assert the two paths
+/// produce identical results.
 pub fn simulate_source<S: RecordSource + ?Sized>(
     session: &mut Session,
     source: &S,
@@ -561,6 +686,65 @@ pub fn simulate_source<S: RecordSource + ?Sized>(
         metrics: accum.metrics(),
         elapsed: start.elapsed(),
         batches: run.batches,
+        phase: accum.phase.take(),
+    })
+}
+
+/// Stream a pull-based chunk source through one session, pulling at
+/// most `chunk_rows` instructions at a time. Extractor, window-batcher
+/// and ctx state roll across chunk boundaries — the warm-up handoff
+/// between chunks is the state itself, not an approximate re-run — so
+/// the metrics are identical to a fully resident pass over the same
+/// records while peak trace buffering stays O(`chunk_rows`).
+pub fn simulate_chunked<C: ChunkSource + ?Sized>(
+    session: &mut Session,
+    source: &mut C,
+    chunk_rows: usize,
+    phase_window: Option<u64>,
+) -> Result<SimResult> {
+    ensure!(chunk_rows >= 1, "chunk_rows must be positive");
+    let kind = session.meta().kind;
+    let mut scratch = ShardScratch::new(session.meta());
+    let mut accum = match phase_window {
+        Some(w) => PredAccum::with_phase(w),
+        None => PredAccum::default(),
+    };
+    let start = Instant::now();
+    let mut skip = 0usize;
+    let mut batches = 0u64;
+    let mut buf = ChunkBuf::new();
+    loop {
+        let n = source.next_chunk(&mut buf, chunk_rows)?;
+        if n == 0 {
+            break;
+        }
+        ensure!(
+            buf.cols.len() == n,
+            "chunk source reported {n} rows but buffered {}",
+            buf.cols.len()
+        );
+        if kind == ModelKind::SimNet {
+            ensure!(
+                buf.ctx.len() == n * CTX_WIDTH,
+                "SimNet requires [n×6] context metrics per chunk ({} for {n} records)",
+                buf.ctx.len()
+            );
+        }
+        for i in 0..n {
+            let rec = buf.cols.record(i);
+            let ctx_row = (kind == ModelKind::SimNet)
+                .then(|| &buf.ctx[i * CTX_WIDTH..(i + 1) * CTX_WIDTH]);
+            stage_record(session, &mut scratch, &rec, ctx_row, &mut accum, &mut skip, &mut batches, kind)?;
+        }
+    }
+    flush_batch(session, &mut scratch, &mut accum, &mut skip, &mut batches, kind)?;
+    if let Some(ph) = &mut accum.phase {
+        ph.finish();
+    }
+    Ok(SimResult {
+        metrics: accum.metrics(),
+        elapsed: start.elapsed(),
+        batches,
         phase: accum.phase.take(),
     })
 }
@@ -721,10 +905,190 @@ pub fn simulate_parallel_opts<S: RecordSource + Sync + ?Sized>(
     })
 }
 
+// ---------------------------------------------------------------------
+// Parallel streaming over a pull-based source
+// ---------------------------------------------------------------------
+
+/// Work item dispensed to a parallel worker: an owned chunk whose first
+/// `warmup` rows replay the tail of the previous chunk (the exact
+/// warm-up state handoff); absorbed rows start at global ordinal `base`.
+struct ChunkItem {
+    cols: TraceColumns,
+    ctx: Vec<f32>,
+    warmup: usize,
+    base: usize,
+}
+
+/// Serialized pull side of [`simulate_parallel_chunked`]: workers take
+/// turns pulling the next chunk out of the (forward-only) source; the
+/// puller keeps the last `warmup` rows of each dispensed item and
+/// prepends them to the next, reproducing exactly the overlap grid of
+/// the random-access [`simulate_parallel_opts`] — chunk `k`'s warm-up is
+/// `min(warmup, k·chunk)` rows in both.
+struct ChunkPuller<'a, C: ?Sized> {
+    source: &'a mut C,
+    warmup: usize,
+    carry_cols: TraceColumns,
+    carry_ctx: Vec<f32>,
+    buf: ChunkBuf,
+    base: usize,
+    done: bool,
+}
+
+impl<'a, C: ChunkSource + ?Sized> ChunkPuller<'a, C> {
+    fn new(source: &'a mut C, warmup: usize) -> ChunkPuller<'a, C> {
+        ChunkPuller {
+            source,
+            warmup,
+            carry_cols: TraceColumns::new(),
+            carry_ctx: Vec::new(),
+            buf: ChunkBuf::new(),
+            base: 0,
+            done: false,
+        }
+    }
+
+    fn next(&mut self, chunk: usize) -> Result<Option<ChunkItem>> {
+        if self.done {
+            return Ok(None);
+        }
+        let n = match self.source.next_chunk(&mut self.buf, chunk) {
+            Ok(n) => n,
+            Err(e) => {
+                self.done = true;
+                return Err(e);
+            }
+        };
+        if n == 0 {
+            self.done = true;
+            return Ok(None);
+        }
+        let keep = self.carry_cols.len();
+        let mut cols = TraceColumns::with_capacity(keep + n);
+        cols.extend_from(&self.carry_cols, 0, keep);
+        cols.extend_from(&self.buf.cols, 0, n);
+        let mut ctx = Vec::new();
+        if self.buf.has_ctx() {
+            ctx.reserve(self.carry_ctx.len() + n * CTX_WIDTH);
+            ctx.extend_from_slice(&self.carry_ctx);
+            ctx.extend_from_slice(&self.buf.ctx);
+        }
+        let item = ChunkItem {
+            warmup: keep,
+            base: self.base,
+            cols,
+            ctx,
+        };
+        self.base += n;
+        let total = item.cols.len();
+        let next_keep = self.warmup.min(total);
+        self.carry_cols.clear();
+        self.carry_cols.extend_from(&item.cols, total - next_keep, total);
+        self.carry_ctx.clear();
+        if !item.ctx.is_empty() {
+            self.carry_ctx
+                .extend_from_slice(&item.ctx[(total - next_keep) * CTX_WIDTH..]);
+        }
+        Ok(Some(item))
+    }
+}
+
+/// Parallel streaming simulation over any pull-based [`ChunkSource`] —
+/// a live simulator, a trace file, or an in-memory adapter. Workers pull
+/// `opts.chunk`-row chunks through a shared [`ChunkPuller`] (the pull is
+/// serialized; the expensive extract→batch→execute work is not), each
+/// chunk re-running its carried `opts.warmup`-row prefix with discarded
+/// predictions. When the source reports a length hint, the chunk grid
+/// and small-stream sequential fallback adapt exactly like
+/// [`simulate_parallel_opts`] — for exact-hint sources (the in-memory
+/// adapters, trace files) the two paths absorb byte-identical windows;
+/// hint-less sources use `opts.chunk` verbatim. Peak resident trace is
+/// O(workers × (chunk + warmup)) rows regardless of stream length.
+pub fn simulate_parallel_chunked<C>(
+    artifact: &Path,
+    source: &mut C,
+    workers: usize,
+    opts: ParallelOptions,
+) -> Result<SimResult>
+where
+    C: ChunkSource + Send + ?Sized,
+{
+    ensure!(workers >= 1, "need at least one worker");
+    ensure!(opts.chunk >= 1, "chunk must be positive");
+    let mut chunk = opts.chunk;
+    if let Some(n) = source.len_hint() {
+        if workers == 1 || n < workers * 1024 {
+            // Sequential pull: state rolls across chunks, so the result
+            // is exact regardless of the pull grain — same as the slice
+            // path's sequential fallback.
+            let mut session = Session::load(artifact)?;
+            return simulate_chunked(&mut session, source, chunk, None);
+        }
+        // Mirror the slice path's grid adaptation: shrink the chunk so
+        // every worker gets at least one on small-to-medium streams.
+        chunk = opts.chunk.min(n.div_ceil(workers)).max(1);
+    } else if workers == 1 {
+        let mut session = Session::load(artifact)?;
+        return simulate_chunked(&mut session, source, chunk, None);
+    }
+    let start_wall = Instant::now();
+    let puller = Mutex::new(ChunkPuller::new(source, opts.warmup));
+    let results: Vec<Result<(PredAccum, u64)>> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for w in 0..workers {
+            let puller = &puller;
+            handles.push(scope.spawn(move || -> Result<(PredAccum, u64)> {
+                let mut session = Session::load(artifact)
+                    .with_context(|| format!("worker {w}: load {artifact:?}"))?;
+                let mut scratch = ShardScratch::new(session.meta());
+                let mut folded = PredAccum::default();
+                let mut batches = 0u64;
+                loop {
+                    let item = puller.lock().expect("puller poisoned").next(chunk)?;
+                    let Some(item) = item else { break };
+                    let ctx = (!item.ctx.is_empty()).then_some(&item.ctx[..]);
+                    let run = simulate_stream(
+                        &mut session,
+                        &mut scratch,
+                        &item.cols,
+                        item.warmup,
+                        item.cols.len(),
+                        item.warmup,
+                        ctx,
+                        PredAccum::at_base(item.base as u64),
+                    )?;
+                    folded.merge(&run.accum);
+                    batches += run.batches;
+                }
+                Ok((folded, batches))
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("worker panicked"))
+            .collect()
+    });
+
+    let mut accum = PredAccum::default();
+    let mut batches = 0u64;
+    for r in results {
+        let (a, b) = r?;
+        accum.merge(&a);
+        batches += b;
+    }
+    Ok(SimResult {
+        metrics: accum.metrics(),
+        elapsed: start_wall.elapsed(),
+        batches,
+        phase: None,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::isa::Opcode;
+    use crate::trace::SliceChunkSource;
     use std::path::PathBuf;
 
     // --- window batcher ---
@@ -798,6 +1162,77 @@ mod tests {
         // Warm-up padding re-seeded from the new first row.
         assert_eq!(&ops[0..t], &[9, 9, 9]);
         assert_eq!(&feats[0..t], &[9.0, 9.0, 9.0]);
+    }
+
+    // --- ctx batcher ---
+
+    /// The seed's per-instruction ctx staging: gather instruction `i`'s
+    /// T-row context window (repeat-pad clamped at `base`), masking the
+    /// newest row. The oracle [`CtxBatcher`] must reproduce byte for
+    /// byte.
+    fn stage_ctx_naive(ctx: &[f32], base: usize, i: usize, w: usize, t: usize, out: &mut [f32]) {
+        for j in 0..t {
+            let src = i.saturating_sub(t - 1 - j).max(base);
+            let dst = &mut out[(w * t + j) * CTX_WIDTH..(w * t + j + 1) * CTX_WIDTH];
+            if j + 1 == t {
+                dst.fill(0.0);
+            } else {
+                dst.copy_from_slice(&ctx[src * CTX_WIDTH..(src + 1) * CTX_WIDTH]);
+            }
+        }
+    }
+
+    fn check_ctx_batcher_equivalence(t: usize, batch: usize, base: usize, end: usize, seed: u64) {
+        let mut rng = crate::util::Rng::new(seed);
+        let ctx: Vec<f32> = (0..end * CTX_WIDTH)
+            .map(|_| rng.index(1000) as f32 / 1000.0)
+            .collect();
+        let mut fast = CtxBatcher::new(t, batch);
+        let mut naive_buf = vec![0.0f32; batch * t * CTX_WIDTH];
+        let mut fast_buf = vec![0.0f32; batch * t * CTX_WIDTH];
+        let mut w = 0usize;
+        for i in base..end {
+            fast.push(&ctx[i * CTX_WIDTH..(i + 1) * CTX_WIDTH]);
+            stage_ctx_naive(&ctx, base, i, w, t, &mut naive_buf);
+            w += 1;
+            if w == batch || i + 1 == end {
+                fast.materialize(&mut fast_buf);
+                assert_eq!(
+                    &fast_buf[..w * t * CTX_WIDTH],
+                    &naive_buf[..w * t * CTX_WIDTH],
+                    "ctx staging diverged at flush ending {i} (t={t} batch={batch} base={base})"
+                );
+                fast.clear_staged();
+                w = 0;
+            }
+        }
+    }
+
+    #[test]
+    fn ctx_batcher_matches_naive_staging() {
+        check_ctx_batcher_equivalence(8, 4, 0, 100, 0xC0);
+        check_ctx_batcher_equivalence(4, 16, 0, 50, 0xC1);
+        // Shard warm-up region starting past the trace head.
+        check_ctx_batcher_equivalence(16, 3, 5, 40, 0xC2);
+        // T = 1: every window is just its own masked row.
+        check_ctx_batcher_equivalence(1, 5, 0, 23, 0xC3);
+        check_ctx_batcher_equivalence(12, 32, 100, 2_000, 0xC4);
+    }
+
+    #[test]
+    fn ctx_batcher_reset_restarts_warmup() {
+        let mut b = CtxBatcher::new(3, 4);
+        b.push(&[1.0; CTX_WIDTH]);
+        b.push(&[2.0; CTX_WIDTH]);
+        b.reset();
+        b.push(&[9.0; CTX_WIDTH]);
+        let mut buf = vec![0.0f32; 4 * 3 * CTX_WIDTH];
+        b.materialize(&mut buf);
+        // Warm-up pad rows re-seeded from the new first row; the
+        // window's own (newest) row is masked to zero.
+        assert_eq!(&buf[..CTX_WIDTH], &[9.0; CTX_WIDTH]);
+        assert_eq!(&buf[CTX_WIDTH..2 * CTX_WIDTH], &[9.0; CTX_WIDTH]);
+        assert_eq!(&buf[2 * CTX_WIDTH..3 * CTX_WIDTH], &[0.0; CTX_WIDTH]);
     }
 
     // --- accumulators ---
@@ -1039,6 +1474,90 @@ mod tests {
         // Work-queue scheduling order must not affect the result.
         assert_eq!(a.metrics.cycles, b.metrics.cycles);
         assert_eq!(a.metrics.mispredicts, b.metrics.mispredicts);
+    }
+
+    #[test]
+    fn chunked_pull_matches_resident_source() {
+        let artifact = fake_artifact("chunkeq", 8, 4);
+        let p = crate::workloads::by_name("mcf").unwrap().build(5);
+        let trace = crate::functional::FunctionalSim::new(&p).run(5_000);
+        let cols = trace.to_columns();
+        let mut s1 = Session::load(&artifact).unwrap();
+        let r1 = simulate_columns(&mut s1, &cols, None, None).unwrap();
+        // Odd-sized pulls over the same records: state rolls across the
+        // chunk boundaries, so nothing changes.
+        let mut s2 = Session::load(&artifact).unwrap();
+        let mut src = SliceChunkSource::new(&cols, None).unwrap();
+        let r2 = simulate_chunked(&mut s2, &mut src, 257, None).unwrap();
+        assert_eq!(r1.metrics.instructions, r2.metrics.instructions);
+        assert_eq!(r1.metrics.cycles, r2.metrics.cycles);
+        assert_eq!(r1.metrics.mispredicts, r2.metrics.mispredicts);
+        assert_eq!(r1.batches, r2.batches);
+        // A generator-backed source commits the same stream, so the
+        // metrics match without the trace ever being resident.
+        let mut s3 = Session::load(&artifact).unwrap();
+        let mut generated = crate::functional::FunctionalSim::new(&p).into_chunks(5_000);
+        let r3 = simulate_chunked(&mut s3, &mut generated, 1_024, None).unwrap();
+        assert_eq!(r1.metrics.cycles, r3.metrics.cycles);
+        assert_eq!(r1.metrics.instructions, r3.metrics.instructions);
+        assert_eq!(r1.batches, r3.batches);
+    }
+
+    #[test]
+    fn parallel_chunked_matches_parallel_slices() {
+        let artifact = fake_artifact("parchunk", 16, 8);
+        let p = crate::workloads::by_name("dee").unwrap().build(11);
+        let trace = crate::functional::FunctionalSim::new(&p).run(20_000);
+        let opts = ParallelOptions {
+            chunk: 2_048,
+            warmup: 512,
+        };
+        let by_slice =
+            simulate_parallel_opts(&artifact, &trace.records[..], 3, None, opts).unwrap();
+        let cols = trace.to_columns();
+        let mut src = SliceChunkSource::new(&cols, None).unwrap();
+        let by_pull = simulate_parallel_chunked(&artifact, &mut src, 3, opts).unwrap();
+        assert_eq!(by_pull.metrics.instructions, by_slice.metrics.instructions);
+        // Same chunk grid + warm-up overlap => identical absorbed
+        // windows; the f32 outputs sum exactly in f64 at this scale, so
+        // the totals are equal across any fold order.
+        assert_eq!(by_pull.metrics.cycles, by_slice.metrics.cycles);
+        assert_eq!(by_pull.metrics.mispredicts, by_slice.metrics.mispredicts);
+        assert_eq!(by_pull.batches, by_slice.batches);
+
+        // Default opts: chunk (64k) exceeds n/workers, so the slice path
+        // shrinks its grid — the pull path must adapt identically off
+        // the length hint.
+        let defaults = ParallelOptions::default();
+        let by_slice =
+            simulate_parallel_opts(&artifact, &trace.records[..], 3, None, defaults).unwrap();
+        let mut src = SliceChunkSource::new(&cols, None).unwrap();
+        let by_pull = simulate_parallel_chunked(&artifact, &mut src, 3, defaults).unwrap();
+        assert_eq!(by_pull.metrics.cycles, by_slice.metrics.cycles);
+        assert_eq!(by_pull.batches, by_slice.batches);
+    }
+
+    #[test]
+    fn parallel_chunked_single_worker_is_sequential_pull() {
+        let artifact = fake_artifact("parone", 8, 4);
+        let records = uniform_records(4_000);
+        let mut session = Session::load(&artifact).unwrap();
+        let seq = simulate_records(&mut session, &records, None, None).unwrap();
+        let cols = TraceColumns::from_records(&records);
+        let mut src = SliceChunkSource::new(&cols, None).unwrap();
+        let one = simulate_parallel_chunked(
+            &artifact,
+            &mut src,
+            1,
+            ParallelOptions {
+                chunk: 777,
+                warmup: 64,
+            },
+        )
+        .unwrap();
+        assert_eq!(one.metrics.instructions, seq.metrics.instructions);
+        assert_eq!(one.metrics.cycles, seq.metrics.cycles);
+        assert_eq!(one.batches, seq.batches);
     }
 
     #[test]

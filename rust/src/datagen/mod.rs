@@ -36,18 +36,20 @@
 use crate::dataset::{self, AdjustedTrace, Labels, Sample};
 use crate::detailed::DetailedSim;
 use crate::features::{FeatureConfig, FeatureExtractor};
-use crate::functional::FunctionalSim;
+use crate::functional::{FunctionalSim, Machine};
 use crate::npy::{self, Dtype, NpyWriter};
-use crate::trace::RecordSource;
+use crate::trace::{ChunkBuf, ChunkSource, RecordSource, LABEL_WIDTH};
 use crate::uarch::UarchConfig;
 use crate::workloads::Workload;
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::io::Write;
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Number of label columns in `labels.npy`.
-pub const NUM_LABELS: usize = 6;
+/// Number of label columns in `labels.npy`. Pinned to the chunk
+/// pipeline's label-channel width: a [`ChunkSource`] label row *is* a
+/// `labels.npy` row.
+pub const NUM_LABELS: usize = LABEL_WIDTH;
 
 /// Streaming knobs for the sharded datagen writer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -83,6 +85,10 @@ pub struct DatagenOptions {
     pub seed: u64,
     /// Chunking/sharding for the streaming writer.
     pub stream: StreamOptions,
+    /// Pull the trace straight out of the simulators
+    /// ([`SimPairSource`]) instead of materializing it first — the
+    /// end-to-end O(chunk) path behind `tao datagen --stream`.
+    pub from_generator: bool,
 }
 
 impl Default for DatagenOptions {
@@ -92,6 +98,7 @@ impl Default for DatagenOptions {
             features: FeatureConfig::default(),
             seed: 42,
             stream: StreamOptions::default(),
+            from_generator: false,
         }
     }
 }
@@ -523,6 +530,320 @@ fn merge_one(
     Ok(())
 }
 
+// ---------------------------------------------------------------------
+// Pull-based chunk sources (trace side of the streaming pipeline)
+// ---------------------------------------------------------------------
+
+/// Generator-backed [`ChunkSource`] for datagen: runs the functional
+/// machine and the detailed simulator **in lockstep**, one committed
+/// instruction at a time, and yields aligned (record, label-row)
+/// chunks. This is the whole §4.1 workflow — adjust (fetch-clock deltas
+/// over the retired-only stream) and align (per-record PC/opcode/
+/// address cross-check) — streamed: no functional trace, no detailed
+/// record vector and no sample vector ever exist. Ground-truth total
+/// cycles are available from [`ChunkSource::total_cycles`] once the
+/// stream is exhausted.
+pub struct SimPairSource {
+    functional: Machine,
+    detailed: DetailedSim,
+    remaining: u64,
+    prev_fetch: u64,
+    produced: usize,
+    done: bool,
+}
+
+impl SimPairSource {
+    /// Build the paired simulators for one (benchmark, µarch) run.
+    pub fn new(
+        workload: &Workload,
+        uarch: &UarchConfig,
+        instructions: u64,
+        seed: u64,
+    ) -> SimPairSource {
+        let program = workload.build(seed);
+        SimPairSource {
+            functional: Machine::new(&program),
+            detailed: DetailedSim::new(&program, uarch),
+            remaining: instructions,
+            prev_fetch: 0,
+            produced: 0,
+            done: false,
+        }
+    }
+
+    /// Records yielded so far.
+    pub fn produced(&self) -> usize {
+        self.produced
+    }
+}
+
+impl ChunkSource for SimPairSource {
+    fn len_hint(&self) -> Option<usize> {
+        // Upper bound: the program may halt before the budget runs out.
+        Some(self.remaining as usize)
+    }
+
+    fn total_cycles(&self) -> Option<u64> {
+        self.done.then(|| self.detailed.total_cycles())
+    }
+
+    fn next_chunk(&mut self, buf: &mut ChunkBuf, max_rows: usize) -> Result<usize> {
+        ensure!(max_rows >= 1, "zero-length chunk request");
+        buf.clear();
+        let n = (max_rows as u64).min(self.remaining);
+        for _ in 0..n {
+            let Some(info) = self.detailed.step_commit(None) else {
+                self.remaining = 0;
+                break;
+            };
+            let Some(exec) = self.functional.step() else {
+                bail!(
+                    "functional stream halted before the detailed stream \
+                     at instruction {}",
+                    self.produced
+                );
+            };
+            let f = exec.record;
+            let d = &info.func;
+            // The §4.1 alignment check, streamed record by record.
+            ensure!(
+                f.pc == d.pc && f.opcode == d.opcode && f.mem_addr == d.mem_addr,
+                "trace mismatch at instruction {}: functional {:x}/{} vs detailed {:x}/{}",
+                self.produced,
+                f.pc,
+                f.opcode,
+                d.pc,
+                d.opcode
+            );
+            let labels = Labels {
+                fetch_latency: (info.fetch_clock - self.prev_fetch) as u32,
+                exec_latency: (info.retire_clock - info.fetch_clock) as u32,
+                branch_mispred: info.branch_mispred,
+                access_level: info.access_level,
+                icache_miss: info.icache_miss,
+                tlb_miss: info.tlb_miss,
+            };
+            self.prev_fetch = info.fetch_clock;
+            buf.cols.push(d);
+            buf.labels.extend_from_slice(&label_row(&labels));
+            self.produced += 1;
+            self.remaining -= 1;
+        }
+        if self.remaining == 0 {
+            self.done = true;
+        }
+        Ok(buf.len())
+    }
+}
+
+/// Trivial in-memory adapter: a resident [`RecordSource`] plus its
+/// aligned samples as a [`ChunkSource`] — the byte-identity oracle for
+/// the streaming writers. Alignment is re-verified chunk by chunk as it
+/// pulls (the streaming equivalent of [`dataset::align`]).
+pub struct PairedSliceSource<'a, S: RecordSource + ?Sized> {
+    functional: &'a S,
+    samples: &'a [Sample],
+    total_cycles: u64,
+    pos: usize,
+    m: usize,
+}
+
+impl<'a, S: RecordSource + ?Sized> PairedSliceSource<'a, S> {
+    /// Pair a functional source with its samples; yields
+    /// `min(functional.len(), samples.len())` records.
+    pub fn new(
+        functional: &'a S,
+        samples: &'a [Sample],
+        total_cycles: u64,
+    ) -> PairedSliceSource<'a, S> {
+        let m = functional.len().min(samples.len());
+        PairedSliceSource {
+            functional,
+            samples,
+            total_cycles,
+            pos: 0,
+            m,
+        }
+    }
+}
+
+impl<S: RecordSource + ?Sized> ChunkSource for PairedSliceSource<'_, S> {
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.m - self.pos)
+    }
+
+    fn total_cycles(&self) -> Option<u64> {
+        Some(self.total_cycles)
+    }
+
+    fn next_chunk(&mut self, buf: &mut ChunkBuf, max_rows: usize) -> Result<usize> {
+        ensure!(max_rows >= 1, "zero-length chunk request");
+        buf.clear();
+        let end = (self.pos + max_rows).min(self.m);
+        dataset::align_chunk(self.functional, &self.samples[self.pos..end], self.pos)?;
+        for s in &self.samples[self.pos..end] {
+            buf.cols.push(&s.func);
+            buf.labels.extend_from_slice(&label_row(&s.labels));
+        }
+        let n = end - self.pos;
+        self.pos = end;
+        Ok(n)
+    }
+}
+
+/// Stream any label-carrying [`ChunkSource`] to a sharded on-disk
+/// dataset in one sequential pass: pull a chunk, featurize it into a
+/// reused `chunk × F` buffer, append through the incremental
+/// [`NpyWriter`]s, rotate shard files on the same per-shard row grid as
+/// [`stream_dataset`] (so shard files and manifest are byte-identical
+/// whenever the source's length hint is exact). Peak buffering is
+/// O(chunk × F) regardless of stream length — with a generator-backed
+/// source the trace itself never exists.
+pub fn stream_dataset_source<C: ChunkSource + ?Sized>(
+    dir: &Path,
+    source: &mut C,
+    config: FeatureConfig,
+    stream: StreamOptions,
+) -> Result<(Manifest, StreamStats)> {
+    std::fs::create_dir_all(dir).with_context(|| format!("mkdir {dir:?}"))?;
+    let chunk = stream.chunk_size.max(1);
+    let f = config.feature_dim();
+    // Shard grid from the length hint; sources with no hint write a
+    // single shard (the merged output is identical either way).
+    let per_shard = source
+        .len_hint()
+        .map(|m| m.div_ceil(stream.shards.max(1)).max(1));
+    let mut fx = FeatureExtractor::new(config);
+    let mut buf = ChunkBuf::new();
+    let mut feat_chunk: Vec<f32> = Vec::with_capacity(chunk * f);
+    let mut op_chunk: Vec<i32> = Vec::with_capacity(chunk);
+    let mut stats = StreamStats::default();
+    let mut shards: Vec<ShardEntry> = Vec::new();
+    let mut open: Option<ShardWriters> = None;
+    loop {
+        let n = source.next_chunk(&mut buf, chunk)?;
+        if n == 0 {
+            break;
+        }
+        ensure!(
+            buf.labels.len() == n * NUM_LABELS,
+            "chunk source carries no label channel ({} label values for {n} records)",
+            buf.labels.len()
+        );
+        feat_chunk.resize(n * f, 0.0);
+        op_chunk.clear();
+        for i in 0..n {
+            let rec = buf.cols.record(i);
+            op_chunk.push(fx.extract_into(&rec, &mut feat_chunk[i * f..(i + 1) * f]));
+        }
+        stats.chunks += 1;
+        stats.peak_chunk_rows = stats.peak_chunk_rows.max(n);
+        // Append, splitting the chunk across shard-file boundaries.
+        let mut off = 0usize;
+        while off < n {
+            if open.is_none() {
+                open = Some(ShardWriters::create(dir, shards.len(), stats.rows, f)?);
+            }
+            let w = open.as_mut().unwrap();
+            let room = per_shard
+                .map_or(n - off, |p| (p - w.rows).min(n - off));
+            w.feats.append_f32(&feat_chunk[off * f..(off + room) * f])?;
+            w.ops.append_i32(&op_chunk[off..off + room])?;
+            w.labels
+                .append_f32(&buf.labels[off * NUM_LABELS..(off + room) * NUM_LABELS])?;
+            w.rows += room;
+            stats.rows += room;
+            off += room;
+            if Some(w.rows) == per_shard {
+                let entry = open.take().unwrap().finalize(shards.len())?;
+                shards.push(entry);
+            }
+        }
+    }
+    if let Some(w) = open.take() {
+        shards.push(w.finalize(shards.len())?);
+    }
+    ensure!(stats.rows > 0, "cannot stream an empty trace");
+    let total_cycles = source
+        .total_cycles()
+        .context("chunk source reported no total cycles after exhaustion")?;
+    let manifest = Manifest {
+        rows: stats.rows,
+        feature_dim: f,
+        num_labels: NUM_LABELS,
+        total_cycles,
+        shards,
+    };
+    manifest.write(dir)?;
+    Ok((manifest, stats))
+}
+
+/// One open shard's three incremental array writers plus its row
+/// bookkeeping (support for [`stream_dataset_source`]'s rotation).
+struct ShardWriters {
+    start: usize,
+    rows: usize,
+    feats: NpyWriter,
+    ops: NpyWriter,
+    labels: NpyWriter,
+}
+
+impl ShardWriters {
+    fn create(dir: &Path, index: usize, start: usize, f: usize) -> Result<ShardWriters> {
+        Ok(ShardWriters {
+            start,
+            rows: 0,
+            feats: NpyWriter::create(&dir.join(shard_file("features", index)), Dtype::F32, Some(f))?,
+            ops: NpyWriter::create(&dir.join(shard_file("opcodes", index)), Dtype::I32, None)?,
+            labels: NpyWriter::create(
+                &dir.join(shard_file("labels", index)),
+                Dtype::F32,
+                Some(NUM_LABELS),
+            )?,
+        })
+    }
+
+    fn finalize(self, index: usize) -> Result<ShardEntry> {
+        let frows = self.feats.finalize()?;
+        let orows = self.ops.finalize()?;
+        let lrows = self.labels.finalize()?;
+        ensure!(
+            frows == self.rows && orows == frows && lrows == frows,
+            "shard {index}: wrote {frows}/{orows}/{lrows} rows, expected {}",
+            self.rows
+        );
+        Ok(ShardEntry {
+            index,
+            start: self.start,
+            rows: frows,
+        })
+    }
+}
+
+/// Generator-backed end-to-end streaming datagen for one (benchmark,
+/// µarch) pair: simulate → align → featurize → shard-write → merge with
+/// O(chunk) peak buffering — no functional trace, no detailed trace, no
+/// sample vector, no `[M, F]` matrix. Byte-identical outputs to
+/// [`generate_streamed`] (and to the fully in-memory path) for the same
+/// options.
+pub fn generate_streamed_source(
+    dir: &Path,
+    workload: &Workload,
+    uarch: &UarchConfig,
+    opts: &DatagenOptions,
+) -> Result<(Manifest, StreamStats)> {
+    let mut source = SimPairSource::new(workload, uarch, opts.instructions, opts.seed);
+    let d = dir.join(&uarch.name).join(workload.name);
+    std::fs::create_dir_all(&d).with_context(|| format!("mkdir {d:?}"))?;
+    let (manifest, stats) = stream_dataset_source(&d, &mut source, opts.features, opts.stream)?;
+    merge_shards(&d, &manifest, !opts.stream.keep_shards)?;
+    std::fs::write(
+        d.join("total_cycles.txt"),
+        format!("{}\n", manifest.total_cycles),
+    )?;
+    Ok((manifest, stats))
+}
+
 /// Generate one (benchmark, µarch) dataset straight to disk: traces →
 /// adjust → per-chunk align + featurize (sharded, bounded memory) →
 /// merged canonical arrays. The full `[M, F]` matrix never exists in
@@ -596,7 +917,11 @@ pub fn run(
     write_meta(dir, opts, &refs)?;
     for uarch in uarchs {
         for w in workloads {
-            let (manifest, stats) = generate_streamed(dir, w, uarch, opts)?;
+            let (manifest, stats) = if opts.from_generator {
+                generate_streamed_source(dir, w, uarch, opts)?
+            } else {
+                generate_streamed(dir, w, uarch, opts)?
+            };
             eprintln!(
                 "datagen: {}/{} — {} insts, {} cycles (cpi {:.3}), {} shards x {} chunks",
                 uarch.name,
@@ -766,6 +1091,127 @@ mod tests {
         assert!(dir.join(shard_file("features", 3)).exists());
         let merged = npy::read(&dir.join("features.npy")).unwrap();
         assert_eq!(merged.shape, vec![1_000, cfg.feature_dim()]);
+    }
+
+    #[test]
+    fn paired_slice_source_matches_parallel_stream_writer() {
+        // The sequential pull writer must produce the same shard files,
+        // merged arrays and manifest as the parallel in-memory writer.
+        let w = workloads::by_name("dee").unwrap();
+        let uarch = UarchConfig::uarch_b();
+        let adjusted = adjusted_trace(&w, &uarch, 1_500, 3).unwrap();
+        let program = w.build(3);
+        let functional = FunctionalSim::new(&program).run(1_500);
+        let cfg = FeatureConfig {
+            nb: 64,
+            nq: 8,
+            nm: 16,
+        };
+        let stream = StreamOptions {
+            chunk_size: 129,
+            shards: 4,
+            keep_shards: true,
+        };
+        let dir_par = tmp("src-par");
+        let (m_par, _) = stream_dataset(
+            &dir_par,
+            &functional.records[..],
+            &adjusted.samples,
+            adjusted.total_cycles,
+            cfg,
+            stream,
+        )
+        .unwrap();
+        let dir_seq = tmp("src-seq");
+        let mut source =
+            PairedSliceSource::new(&functional.records[..], &adjusted.samples, adjusted.total_cycles);
+        let (m_seq, stats) = stream_dataset_source(&dir_seq, &mut source, cfg, stream).unwrap();
+        assert_eq!(m_seq, m_par);
+        assert!(stats.peak_chunk_rows <= 129);
+        for e in &m_seq.shards {
+            for stem in ["features", "opcodes", "labels"] {
+                let name = shard_file(stem, e.index);
+                assert_eq!(
+                    std::fs::read(dir_par.join(&name)).unwrap(),
+                    std::fs::read(dir_seq.join(&name)).unwrap(),
+                    "{name} differs between parallel and sequential writers"
+                );
+            }
+        }
+        merge_shards(&dir_par, &m_par, false).unwrap();
+        merge_shards(&dir_seq, &m_seq, false).unwrap();
+        for name in ["features.npy", "opcodes.npy", "labels.npy"] {
+            assert_eq!(
+                std::fs::read(dir_par.join(name)).unwrap(),
+                std::fs::read(dir_seq.join(name)).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn generator_source_byte_identical_to_in_memory() {
+        // End-to-end: simulators pulled through SimPairSource vs the
+        // fully materialized generate() + write_dataset() path.
+        let w = workloads::by_name("mcf").unwrap();
+        let uarch = UarchConfig::uarch_a();
+        let mut o = opts();
+        o.stream = StreamOptions {
+            chunk_size: 171,
+            shards: 2,
+            keep_shards: false,
+        };
+        let ds = generate(&w, &uarch, &o).unwrap();
+        let dir_mem = tmp("gen-mem");
+        write_dataset(&dir_mem, &uarch.name, w.name, &ds).unwrap();
+        let dir_gen = tmp("gen-src");
+        let (manifest, stats) = generate_streamed_source(&dir_gen, &w, &uarch, &o).unwrap();
+        assert_eq!(manifest.rows, 2_000);
+        assert_eq!(manifest.total_cycles, ds.total_cycles);
+        assert!(stats.peak_chunk_rows <= 171);
+        let a = dir_mem.join("uarch_a/mcf");
+        let b = dir_gen.join("uarch_a/mcf");
+        for name in ["features.npy", "opcodes.npy", "labels.npy", "total_cycles.txt"] {
+            assert_eq!(
+                std::fs::read(a.join(name)).unwrap(),
+                std::fs::read(b.join(name)).unwrap(),
+                "{name} differs between in-memory and generator-streamed paths"
+            );
+        }
+        assert!(!b.join(shard_file("features", 0)).exists());
+    }
+
+    #[test]
+    fn sim_pair_source_reports_cycles_only_when_done() {
+        let w = workloads::by_name("lee").unwrap();
+        let mut src = SimPairSource::new(&w, &UarchConfig::uarch_a(), 300, 1);
+        assert_eq!(src.total_cycles(), None);
+        let mut buf = crate::trace::ChunkBuf::new();
+        assert!(src.next_chunk(&mut buf, 0).is_err());
+        while src.next_chunk(&mut buf, 100).unwrap() > 0 {
+            assert_eq!(buf.labels.len(), buf.len() * NUM_LABELS);
+        }
+        assert_eq!(src.produced(), 300);
+        let cycles = src.total_cycles().expect("cycles after exhaustion");
+        let (det, _) = DetailedSim::new(&w.build(1), &UarchConfig::uarch_a()).run(300);
+        assert_eq!(cycles, det.total_cycles);
+    }
+
+    #[test]
+    fn label_free_source_rejected_by_stream_writer() {
+        let w = workloads::by_name("dee").unwrap();
+        let program = w.build(9);
+        let functional = FunctionalSim::new(&program).run(500);
+        let cols = functional.to_columns();
+        // A bare trace source has no label channel: the dataset writer
+        // must refuse it rather than write empty labels.
+        let mut source = crate::trace::SliceChunkSource::new(&cols, None).unwrap();
+        let err = stream_dataset_source(
+            &tmp("nolabel"),
+            &mut source,
+            FeatureConfig::default(),
+            StreamOptions::default(),
+        );
+        assert!(err.is_err());
     }
 
     #[test]

@@ -160,12 +160,52 @@ impl DetailedSim {
         if self.emit_records {
             records.reserve(max_insts.min(1 << 22) as usize + 1024);
         }
-        let line_mask = !(CacheGeometry::LINE_BYTES - 1);
-
         while self.stats.instructions < max_insts {
-            let Some(exec) = self.machine.step() else {
+            let emit = self.emit_records.then_some(&mut records);
+            if self.step_commit(emit).is_none() {
                 break;
-            };
+            }
+        }
+        let trace = DetailedTrace {
+            name: self.machine.program_name().to_string(),
+            uarch: self.config.name.clone(),
+            records,
+            total_cycles: self.stats.cycles,
+        };
+        (trace, self.stats)
+    }
+
+    /// Ground-truth cycles so far (the retire clock of the last
+    /// committed instruction). After a bounded run this is the trace's
+    /// `total_cycles`.
+    pub fn total_cycles(&self) -> u64 {
+        self.stats.cycles
+    }
+
+    /// The statistics accumulated so far.
+    pub fn stats(&self) -> &SimStats {
+        &self.stats
+    }
+
+    /// Advance the pipeline until the next instruction commits and
+    /// return its retired record, or `None` once the program halts.
+    ///
+    /// This is the resumable core [`DetailedSim::run`] loops over, and
+    /// the pull surface behind the streaming datagen source
+    /// (`datagen::SimPairSource`): callers that only need the retired
+    /// stream pass `emit: None` and no record vector ever exists. With
+    /// `emit: Some(v)`, the squashed / nop-stall records produced along
+    /// the way are appended to `v` in fetch order, the retired record
+    /// included — exactly the batch trace layout.
+    pub fn step_commit(
+        &mut self,
+        mut emit: Option<&mut Vec<DetailedRecord>>,
+    ) -> Option<RetiredInfo> {
+        let line_mask = !(CacheGeometry::LINE_BYTES - 1);
+        let Some(exec) = self.machine.step() else {
+            return None;
+        };
+        {
             let rec = exec.record;
             let inst_index = exec.index;
             let opcode = rec.opcode;
@@ -181,8 +221,8 @@ impl DetailedSim {
                     // deltas, matching gem5's sparse nop insertion),
                     // advance fetch to the blocking retire cycle.
                     if oldest - self.fetch_cycle >= 4 {
-                        if self.emit_records {
-                            records.push(DetailedRecord::NopStall {
+                        if let Some(v) = emit.as_mut() {
+                            v.push(DetailedRecord::NopStall {
                                 fetch_clock: self.fetch_cycle,
                             });
                         }
@@ -284,16 +324,17 @@ impl DetailedSim {
             }
             self.stats.cycles = retire;
 
-            if self.emit_records {
-                records.push(DetailedRecord::Retired(RetiredInfo {
-                    func: rec,
-                    fetch_clock,
-                    retire_clock: retire,
-                    branch_mispred: mispred,
-                    access_level,
-                    icache_miss,
-                    tlb_miss,
-                }));
+            let info = RetiredInfo {
+                func: rec,
+                fetch_clock,
+                retire_clock: retire,
+                branch_mispred: mispred,
+                access_level,
+                icache_miss,
+                tlb_miss,
+            };
+            if let Some(v) = emit.as_mut() {
+                v.push(DetailedRecord::Retired(info));
             }
 
             // ---- Misprediction: wrong path + redirect ----
@@ -325,8 +366,8 @@ impl DetailedSim {
                         break;
                     }
                     let wp_inst = &program.insts[idx];
-                    if self.emit_records {
-                        records.push(DetailedRecord::Squashed {
+                    if let Some(v) = emit.as_mut() {
+                        v.push(DetailedRecord::Squashed {
                             pc: Program::pc_of(idx),
                             opcode: wp_inst.opcode,
                             fetch_clock: wp_cycle,
@@ -350,15 +391,9 @@ impl DetailedSim {
                 self.fetched_in_cycle = 0;
                 self.last_fetch_line = u64::MAX; // refetch the line
             }
-        }
 
-        let trace = DetailedTrace {
-            name: self.machine.program_name().to_string(),
-            uarch: self.config.name.clone(),
-            records,
-            total_cycles: self.stats.cycles,
-        };
-        (trace, self.stats)
+            Some(info)
+        }
     }
 }
 
@@ -558,6 +593,34 @@ mod tests {
             .filter(|r| r.access_level.is_l1_miss())
             .count() as u64;
         assert_eq!(l1d_miss_in_trace, stats.l1d_misses);
+    }
+
+    #[test]
+    fn step_commit_matches_batch_run() {
+        let p = branchy_program();
+        let (trace, stats) = run(&p, &UarchConfig::uarch_a(), 3_000);
+        let mut sim = DetailedSim::new(&p, &UarchConfig::uarch_a());
+        let mut records = Vec::new();
+        let mut retired = Vec::new();
+        while (retired.len() as u64) < 3_000 {
+            let Some(info) = sim.step_commit(Some(&mut records)) else {
+                break;
+            };
+            retired.push(info);
+        }
+        // Pull-based stepping reproduces the batch run record for
+        // record, stat for stat.
+        assert_eq!(records, trace.records);
+        assert_eq!(sim.total_cycles(), stats.cycles);
+        assert_eq!(sim.stats(), &stats);
+        let from_trace: Vec<RetiredInfo> = trace.retired().copied().collect();
+        assert_eq!(retired, from_trace);
+        // emit: None yields the same retired stream with no record
+        // vector at all.
+        let mut lean = DetailedSim::new(&p, &UarchConfig::uarch_a());
+        for want in &from_trace {
+            assert_eq!(lean.step_commit(None).as_ref(), Some(want));
+        }
     }
 
     #[test]

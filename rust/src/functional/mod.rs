@@ -13,7 +13,8 @@ pub mod machine;
 pub use machine::{Executed, Machine};
 
 use crate::isa::Program;
-use crate::trace::{FuncRecord, FunctionalTrace};
+use crate::trace::{ChunkBuf, ChunkSource, FuncRecord, FunctionalTrace};
+use anyhow::{ensure, Result};
 
 /// Functional simulator: executes a program atomically (1 instruction per
 /// step, no timing) and records the committed stream.
@@ -45,6 +46,18 @@ impl FunctionalSim {
         }
     }
 
+    /// Convert into a pull-based chunk source bounded by `max_insts`:
+    /// the machine steps only when a consumer pulls, so
+    /// simulate-while-inferring pipelines hold O(chunk) records, never
+    /// the trace. (`tao simulate --stream` and the engine's
+    /// `simulate_parallel_chunked` run on this.)
+    pub fn into_chunks(self, max_insts: u64) -> FuncChunkSource {
+        FuncChunkSource {
+            machine: self.machine,
+            remaining: max_insts,
+        }
+    }
+
     /// Streaming variant: invoke `sink` per committed record; returns the
     /// number of instructions executed. Used by the coordinator's
     /// generate-and-simulate path to avoid materializing the trace.
@@ -64,6 +77,48 @@ impl FunctionalSim {
             }
         }
         n
+    }
+}
+
+/// Generator-backed [`ChunkSource`]: commits instructions on demand,
+/// straight into the pulled chunk's columns. The cheapest producer in
+/// the streaming pipeline — no trace, no records vector, just the
+/// architectural machine state plus the consumer's chunk buffer.
+pub struct FuncChunkSource {
+    machine: Machine,
+    remaining: u64,
+}
+
+impl FuncChunkSource {
+    /// The program name (trace name of an equivalent batch run).
+    pub fn name(&self) -> &str {
+        self.machine.program_name()
+    }
+}
+
+impl ChunkSource for FuncChunkSource {
+    fn len_hint(&self) -> Option<usize> {
+        // Upper bound: the program may halt before the budget runs out.
+        Some(self.remaining as usize)
+    }
+
+    fn next_chunk(&mut self, buf: &mut ChunkBuf, max_rows: usize) -> Result<usize> {
+        ensure!(max_rows >= 1, "zero-length chunk request");
+        buf.clear();
+        let n = (max_rows as u64).min(self.remaining);
+        for _ in 0..n {
+            match self.machine.step() {
+                Some(exec) => {
+                    buf.cols.push(&exec.record);
+                    self.remaining -= 1;
+                }
+                None => {
+                    self.remaining = 0;
+                    break;
+                }
+            }
+        }
+        Ok(buf.len())
     }
 }
 
@@ -126,6 +181,28 @@ mod tests {
         let n = FunctionalSim::new(&p).run_streaming(1000, |r| streamed.push(r));
         assert_eq!(n as usize, batch.records.len());
         assert_eq!(streamed, batch.records);
+    }
+
+    #[test]
+    fn chunk_source_matches_batch_run() {
+        let p = countdown_program();
+        let batch = FunctionalSim::new(&p).run(1000);
+        let mut src = FunctionalSim::new(&p).into_chunks(1000);
+        assert_eq!(src.name(), "countdown");
+        let mut buf = ChunkBuf::new();
+        let mut streamed = Vec::new();
+        loop {
+            let n = src.next_chunk(&mut buf, 5).unwrap();
+            if n == 0 {
+                break;
+            }
+            streamed.extend(buf.cols.iter());
+        }
+        // The program halts at 17 instructions: the source stops there
+        // too, budget notwithstanding.
+        assert_eq!(streamed, batch.records);
+        assert_eq!(src.len_hint(), Some(0));
+        assert!(src.next_chunk(&mut buf, 0).is_err());
     }
 
     #[test]

@@ -1,0 +1,425 @@
+//! Pull-based chunked streaming over trace storage.
+//!
+//! [`RecordSource`](super::source::RecordSource) is the random-access
+//! read surface for traces that are already resident. At paper scale the
+//! trace never *is* resident: it comes out of a simulator or off disk,
+//! hundreds of millions of records long, and the consumers (the
+//! inference engine, the datagen featurizer) only ever walk it forward.
+//! [`ChunkSource`] is the pull surface for that case: consumers ask for
+//! the next bounded [`TraceColumns`] chunk, producers fill it, and the
+//! only state that crosses a chunk boundary is whatever the consumer
+//! carries (extractor history, window-batcher tail) — the exact warm-up
+//! handoff, not an approximation.
+//!
+//! Three producers cover the pipeline:
+//!
+//! * [`SliceChunkSource`] — trivial adapter over any in-memory
+//!   [`RecordSource`]; keeps existing callers and the byte-identity
+//!   oracles working against the streaming paths.
+//! * [`FileChunkSource`] — streams the `TAOTFNC1` on-disk format chunk
+//!   by chunk (the whole-file `read_functional_columns` is a thin
+//!   accumulation loop over it).
+//! * the simulator-backed sources (`functional::FuncChunkSource`,
+//!   `datagen::SimPairSource`) — generate records on demand so
+//!   simulate→featurize→write runs in O(chunk) memory end to end.
+
+use super::columns::TraceColumns;
+use super::serialize::{read_func_fields, read_func_header};
+use super::source::RecordSource;
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{BufReader, Read};
+use std::path::{Path, PathBuf};
+
+/// f32 values per record in the context-metric channel (the SimNet
+/// baseline's µarch-specific model inputs).
+pub const CTX_WIDTH: usize = 6;
+
+/// f32 values per record in the label channel (one `labels.npy` row;
+/// `datagen::NUM_LABELS` is pinned to this).
+pub const LABEL_WIDTH: usize = 6;
+
+/// A reusable chunk of trace data: the record columns plus the optional
+/// per-record side channels a producer carries. Channel presence is
+/// all-or-nothing for a given source and constant across its chunks.
+#[derive(Debug, Clone, Default)]
+pub struct ChunkBuf {
+    /// The records, columnar.
+    pub cols: TraceColumns,
+    /// Context metrics, [`CTX_WIDTH`] per record; empty if the source
+    /// carries none.
+    pub ctx: Vec<f32>,
+    /// Training-label rows, [`LABEL_WIDTH`] per record; empty if the
+    /// source carries none.
+    pub labels: Vec<f32>,
+}
+
+impl ChunkBuf {
+    /// Empty buffer.
+    pub fn new() -> ChunkBuf {
+        ChunkBuf::default()
+    }
+
+    /// Records in the chunk.
+    pub fn len(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// True if no records are buffered.
+    pub fn is_empty(&self) -> bool {
+        self.cols.is_empty()
+    }
+
+    /// Drop all records and channel data, keeping allocations.
+    pub fn clear(&mut self) {
+        self.cols.clear();
+        self.ctx.clear();
+        self.labels.clear();
+    }
+
+    /// True if the chunk carries context metrics.
+    pub fn has_ctx(&self) -> bool {
+        !self.ctx.is_empty()
+    }
+
+    /// True if the chunk carries label rows.
+    pub fn has_labels(&self) -> bool {
+        !self.labels.is_empty()
+    }
+}
+
+/// A pull-based producer of bounded trace chunks.
+///
+/// Contract: `next_chunk` clears `buf` and appends up to `max_rows`
+/// records (plus any side channels the source carries, in lockstep);
+/// it returns the number appended, `0` meaning the stream is exhausted.
+/// `max_rows == 0` is a caller error and must be rejected, not looped
+/// on. Sources are forward-only; pulled records are gone.
+pub trait ChunkSource {
+    /// Records remaining, if the source knows. An upper bound is
+    /// allowed (a generator bounded by an instruction budget may halt
+    /// early); consumers must treat `0` from `next_chunk` as the truth.
+    fn len_hint(&self) -> Option<usize>;
+
+    /// Pull the next chunk into `buf`. See the trait docs for the
+    /// contract.
+    fn next_chunk(&mut self, buf: &mut ChunkBuf, max_rows: usize) -> Result<usize>;
+
+    /// Ground-truth total cycles for label-carrying sources (the
+    /// detailed trace's retire clock), available once the stream is
+    /// exhausted. `None` for label-free sources or while running.
+    fn total_cycles(&self) -> Option<u64> {
+        None
+    }
+}
+
+impl<C: ChunkSource + ?Sized> ChunkSource for &mut C {
+    fn len_hint(&self) -> Option<usize> {
+        (**self).len_hint()
+    }
+    fn next_chunk(&mut self, buf: &mut ChunkBuf, max_rows: usize) -> Result<usize> {
+        (**self).next_chunk(buf, max_rows)
+    }
+    fn total_cycles(&self) -> Option<u64> {
+        (**self).total_cycles()
+    }
+}
+
+// ---------------------------------------------------------------------
+// In-memory adapter
+// ---------------------------------------------------------------------
+
+/// Chunked pull over any in-memory [`RecordSource`], optionally paired
+/// with a `[N × 6]` context-metric array. The trivial adapter that lets
+/// resident traces feed the streaming consumers (and the oracle for
+/// asserting the streamed paths byte-identical to the in-memory ones).
+pub struct SliceChunkSource<'a, S: RecordSource + ?Sized> {
+    source: &'a S,
+    ctx: Option<&'a [f32]>,
+    pos: usize,
+}
+
+impl<'a, S: RecordSource + ?Sized> SliceChunkSource<'a, S> {
+    /// Wrap a record source; `ctx`, when given, must hold
+    /// [`CTX_WIDTH`] values per record.
+    pub fn new(source: &'a S, ctx: Option<&'a [f32]>) -> Result<SliceChunkSource<'a, S>> {
+        if let Some(c) = ctx {
+            ensure!(
+                c.len() == source.len() * CTX_WIDTH,
+                "context metrics: {} values for {} records",
+                c.len(),
+                source.len()
+            );
+        }
+        Ok(SliceChunkSource { source, ctx, pos: 0 })
+    }
+}
+
+impl<S: RecordSource + ?Sized> ChunkSource for SliceChunkSource<'_, S> {
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.source.len() - self.pos)
+    }
+
+    fn next_chunk(&mut self, buf: &mut ChunkBuf, max_rows: usize) -> Result<usize> {
+        ensure!(max_rows >= 1, "zero-length chunk request");
+        buf.clear();
+        let end = (self.pos + max_rows).min(self.source.len());
+        for i in self.pos..end {
+            buf.cols.push(&self.source.get(i));
+        }
+        if let Some(c) = self.ctx {
+            buf.ctx
+                .extend_from_slice(&c[self.pos * CTX_WIDTH..end * CTX_WIDTH]);
+        }
+        let n = end - self.pos;
+        self.pos = end;
+        Ok(n)
+    }
+}
+
+// ---------------------------------------------------------------------
+// File-backed source
+// ---------------------------------------------------------------------
+
+/// Streams a `TAOTFNC1` functional-trace file in bounded chunks. The
+/// header is validated on open; records are decoded straight into the
+/// chunk's columns; a truncated tail, a bad opcode id, a record count
+/// that disagrees with the payload, and trailing garbage after the last
+/// record all surface as errors, never panics.
+pub struct FileChunkSource {
+    path: PathBuf,
+    name: String,
+    reader: BufReader<std::fs::File>,
+    declared: usize,
+    read: usize,
+}
+
+impl FileChunkSource {
+    /// Open `path` and validate the `TAOTFNC1` header.
+    pub fn open(path: &Path) -> Result<FileChunkSource> {
+        let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+        let mut reader = BufReader::new(file);
+        let (name, declared) = read_func_header(&mut reader)
+            .with_context(|| format!("{path:?}: bad functional-trace header"))?;
+        let mut src = FileChunkSource {
+            path: path.to_path_buf(),
+            name,
+            reader,
+            declared,
+            read: 0,
+        };
+        if declared == 0 {
+            src.check_eof()?;
+        }
+        Ok(src)
+    }
+
+    /// Trace name from the header.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Records declared by the header but not yet pulled.
+    pub fn remaining(&self) -> usize {
+        self.declared - self.read
+    }
+
+    /// After the declared record count is consumed, the file must end.
+    fn check_eof(&mut self) -> Result<()> {
+        let mut probe = [0u8; 1];
+        match self.reader.read(&mut probe) {
+            Ok(0) => Ok(()),
+            Ok(_) => bail!(
+                "{:?}: trailing bytes after the {} declared records",
+                self.path,
+                self.declared
+            ),
+            Err(e) => Err(e).with_context(|| format!("probe EOF in {:?}", self.path)),
+        }
+    }
+}
+
+impl ChunkSource for FileChunkSource {
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.remaining())
+    }
+
+    fn next_chunk(&mut self, buf: &mut ChunkBuf, max_rows: usize) -> Result<usize> {
+        ensure!(max_rows >= 1, "zero-length chunk request");
+        buf.clear();
+        let n = max_rows.min(self.remaining());
+        for k in 0..n {
+            let (pc, op, reg_bitmap, mem_addr, mem_bytes, taken) =
+                read_func_fields(&mut self.reader).with_context(|| {
+                    format!(
+                        "{:?}: truncated or corrupt at record {} of {}",
+                        self.path,
+                        self.read + k,
+                        self.declared
+                    )
+                })?;
+            buf.cols
+                .push_fields(pc, op, reg_bitmap, mem_addr, mem_bytes, taken);
+        }
+        self.read += n;
+        if n > 0 && self.remaining() == 0 {
+            self.check_eof()?;
+        }
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functional::FunctionalSim;
+    use crate::trace::{read_functional_columns, write_functional_columns};
+    use crate::workloads;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tao-chunk-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(format!("{tag}.trace"))
+    }
+
+    fn sample_cols(n: u64) -> TraceColumns {
+        let p = workloads::by_name("dee").unwrap().build(3);
+        FunctionalSim::new(&p).run(n).to_columns()
+    }
+
+    #[test]
+    fn slice_source_streams_whole_trace_in_chunks() {
+        let cols = sample_cols(1_000);
+        let mut src = SliceChunkSource::new(&cols, None).unwrap();
+        assert_eq!(src.len_hint(), Some(1_000));
+        let mut buf = ChunkBuf::new();
+        let mut rebuilt = TraceColumns::new();
+        let mut pulls = 0;
+        loop {
+            let n = src.next_chunk(&mut buf, 137).unwrap();
+            if n == 0 {
+                break;
+            }
+            assert!(n <= 137);
+            assert!(!buf.has_ctx() && !buf.has_labels());
+            rebuilt.extend_from(&buf.cols, 0, n);
+            pulls += 1;
+        }
+        assert_eq!(rebuilt, cols);
+        assert_eq!(pulls, 1_000usize.div_ceil(137));
+        assert_eq!(src.len_hint(), Some(0));
+    }
+
+    #[test]
+    fn slice_source_carries_ctx_in_lockstep() {
+        let cols = sample_cols(50);
+        let ctx: Vec<f32> = (0..50 * CTX_WIDTH).map(|i| i as f32).collect();
+        let mut src = SliceChunkSource::new(&cols, Some(&ctx)).unwrap();
+        let mut buf = ChunkBuf::new();
+        let n = src.next_chunk(&mut buf, 7).unwrap();
+        assert_eq!(n, 7);
+        assert_eq!(buf.ctx, &ctx[..7 * CTX_WIDTH]);
+        let n = src.next_chunk(&mut buf, 7).unwrap();
+        assert_eq!(n, 7);
+        assert_eq!(buf.ctx, &ctx[7 * CTX_WIDTH..14 * CTX_WIDTH]);
+        // Mis-sized ctx is rejected up front.
+        assert!(SliceChunkSource::new(&cols, Some(&ctx[..5])).is_err());
+    }
+
+    #[test]
+    fn zero_length_chunk_request_is_an_error() {
+        let cols = sample_cols(10);
+        let mut buf = ChunkBuf::new();
+        let mut slice_src = SliceChunkSource::new(&cols, None).unwrap();
+        assert!(slice_src.next_chunk(&mut buf, 0).is_err());
+        let path = tmp("zero");
+        write_functional_columns(&path, "z", &cols).unwrap();
+        let mut file_src = FileChunkSource::open(&path).unwrap();
+        assert!(file_src.next_chunk(&mut buf, 0).is_err());
+    }
+
+    #[test]
+    fn file_source_matches_whole_file_reader() {
+        let cols = sample_cols(2_000);
+        let path = tmp("roundtrip");
+        write_functional_columns(&path, "dee", &cols).unwrap();
+        let mut src = FileChunkSource::open(&path).unwrap();
+        assert_eq!(src.name(), "dee");
+        assert_eq!(src.remaining(), 2_000);
+        let mut buf = ChunkBuf::new();
+        let mut rebuilt = TraceColumns::new();
+        while src.next_chunk(&mut buf, 333).unwrap() > 0 {
+            rebuilt.extend_from(&buf.cols, 0, buf.len());
+        }
+        assert_eq!(rebuilt, cols);
+        let (name, whole) = read_functional_columns(&path).unwrap();
+        assert_eq!(name, "dee");
+        assert_eq!(whole, cols);
+    }
+
+    #[test]
+    fn file_source_rejects_corrupt_header() {
+        let path = tmp("badmagic");
+        let cols = sample_cols(5);
+        write_functional_columns(&path, "x", &cols).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(FileChunkSource::open(&path).is_err());
+        // A header cut off mid-name also errors (never panics).
+        bytes[0] ^= 0xFF; // restore the magic
+        std::fs::write(&path, &bytes[..10]).unwrap();
+        assert!(FileChunkSource::open(&path).is_err());
+    }
+
+    #[test]
+    fn file_source_errors_on_truncated_tail() {
+        let path = tmp("trunc");
+        let cols = sample_cols(100);
+        write_functional_columns(&path, "x", &cols).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 11]).unwrap();
+        let mut src = FileChunkSource::open(&path).unwrap();
+        let mut buf = ChunkBuf::new();
+        // Chunks before the cut stream fine; the one crossing it errors.
+        let mut result = Ok(0);
+        for _ in 0..10 {
+            result = src.next_chunk(&mut buf, 10);
+            if result.is_err() {
+                break;
+            }
+        }
+        assert!(result.is_err(), "truncated tail must surface as an error");
+    }
+
+    #[test]
+    fn file_source_errors_on_trailing_garbage() {
+        let path = tmp("trailing");
+        let cols = sample_cols(20);
+        write_functional_columns(&path, "x", &cols).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"junk");
+        std::fs::write(&path, &bytes).unwrap();
+        let mut src = FileChunkSource::open(&path).unwrap();
+        let mut buf = ChunkBuf::new();
+        let mut result = Ok(0);
+        for _ in 0..3 {
+            result = src.next_chunk(&mut buf, 10);
+            if result.is_err() {
+                break;
+            }
+        }
+        assert!(result.is_err(), "trailing garbage must surface as an error");
+        // The whole-file reader shares the check.
+        assert!(read_functional_columns(&path).is_err());
+    }
+
+    #[test]
+    fn file_source_empty_trace_is_ok() {
+        let path = tmp("empty");
+        write_functional_columns(&path, "e", &TraceColumns::new()).unwrap();
+        let mut src = FileChunkSource::open(&path).unwrap();
+        let mut buf = ChunkBuf::new();
+        assert_eq!(src.next_chunk(&mut buf, 8).unwrap(), 0);
+        assert_eq!(src.len_hint(), Some(0));
+    }
+}

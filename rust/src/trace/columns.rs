@@ -132,6 +132,49 @@ impl TraceColumns {
         (0..self.len()).map(move |i| self.record(i))
     }
 
+    /// Drop all records, keeping the allocations (chunk-buffer reuse).
+    pub fn clear(&mut self) {
+        self.pc.clear();
+        self.opcode.clear();
+        self.reg_bitmap.clear();
+        self.mem_addr.clear();
+        self.mem_bytes.clear();
+        self.taken.clear();
+    }
+
+    /// Keep only the first `n` records.
+    pub fn truncate(&mut self, n: usize) {
+        self.pc.truncate(n);
+        self.opcode.truncate(n);
+        self.reg_bitmap.truncate(n);
+        self.mem_addr.truncate(n);
+        self.mem_bytes.truncate(n);
+        self.taken.truncate(n);
+    }
+
+    /// Append `other[lo..hi)` column-wise (chunk concatenation; straight
+    /// `Vec` extends, no record assembly).
+    pub fn extend_from(&mut self, other: &TraceColumns, lo: usize, hi: usize) {
+        assert!(lo <= hi && hi <= other.len(), "bad extend range {lo}..{hi}");
+        self.pc.extend_from_slice(&other.pc[lo..hi]);
+        self.opcode.extend_from_slice(&other.opcode[lo..hi]);
+        self.reg_bitmap.extend_from_slice(&other.reg_bitmap[lo..hi]);
+        self.mem_addr.extend_from_slice(&other.mem_addr[lo..hi]);
+        self.mem_bytes.extend_from_slice(&other.mem_bytes[lo..hi]);
+        self.taken.extend_from_slice(&other.taken[lo..hi]);
+    }
+
+    /// True if every column holds the same record count (writers reject
+    /// ragged columns instead of panicking mid-serialization).
+    pub fn is_consistent(&self) -> bool {
+        let n = self.pc.len();
+        self.opcode.len() == n
+            && self.reg_bitmap.len() == n
+            && self.mem_addr.len() == n
+            && self.mem_bytes.len() == n
+            && self.taken.len() == n
+    }
+
     /// Borrowed range view `[lo, hi)` — the zero-copy shard primitive.
     pub fn slice(&self, lo: usize, hi: usize) -> ColumnsSlice<'_> {
         assert!(lo <= hi && hi <= self.len(), "bad slice {lo}..{hi}");
@@ -239,6 +282,26 @@ mod tests {
             cols.heap_bytes(),
             aos
         );
+    }
+
+    #[test]
+    fn clear_truncate_extend_round_trip() {
+        let t = sample_trace(400);
+        let cols = t.to_columns();
+        let mut acc = TraceColumns::new();
+        acc.extend_from(&cols, 0, 150);
+        acc.extend_from(&cols, 150, 400);
+        assert_eq!(acc, cols);
+        assert!(acc.is_consistent());
+        acc.truncate(100);
+        assert_eq!(acc.len(), 100);
+        assert_eq!(acc.record(99), t.records[99]);
+        acc.clear();
+        assert!(acc.is_empty() && acc.is_consistent());
+        // Ragged columns are detectable.
+        let mut ragged = cols.clone();
+        ragged.pc.pop();
+        assert!(!ragged.is_consistent());
     }
 
     #[test]

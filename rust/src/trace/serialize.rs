@@ -62,17 +62,45 @@ fn write_func_record(w: &mut impl Write, rec: &FuncRecord) -> Result<()> {
     Ok(())
 }
 
-fn read_func_record(r: &mut impl Read) -> Result<FuncRecord> {
+/// Decode one functional record's raw fields (the columnar/streaming
+/// readers append these straight to their columns; [`read_func_record`]
+/// assembles them). Opcode ids are validated here so every reader shares
+/// the check.
+pub(crate) fn read_func_fields(
+    r: &mut impl Read,
+) -> Result<(u64, u8, u64, u64, u8, bool)> {
     let pc = read_u64(r)?;
-    let op = read_u8(r)? as usize;
-    ensure!(op < Opcode::COUNT, "bad opcode id {op}");
+    let op = read_u8(r)?;
+    ensure!((op as usize) < Opcode::COUNT, "bad opcode id {op}");
     let reg_bitmap = read_u64(r)?;
     let mem_addr = read_u64(r)?;
     let mem_bytes = read_u8(r)?;
     let taken = read_u8(r)? != 0;
+    Ok((pc, op, reg_bitmap, mem_addr, mem_bytes, taken))
+}
+
+/// Read + validate a `TAOTFNC1` header, returning the trace name and
+/// declared record count. The count is a claim about the payload, not a
+/// preallocation size — readers cap their reserves so a corrupt header
+/// cannot trigger an allocation abort.
+pub(crate) fn read_func_header(r: &mut impl Read) -> Result<(String, usize)> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    ensure!(&magic == MAGIC_FUNC, "not a functional trace: bad magic");
+    let name = read_str(r)?;
+    let n = read_u64(r)?;
+    ensure!(
+        usize::try_from(n).is_ok(),
+        "unrepresentable record count {n}"
+    );
+    Ok((name, n as usize))
+}
+
+fn read_func_record(r: &mut impl Read) -> Result<FuncRecord> {
+    let (pc, op, reg_bitmap, mem_addr, mem_bytes, taken) = read_func_fields(r)?;
     Ok(FuncRecord {
         pc,
-        opcode: Opcode::from_index(op),
+        opcode: Opcode::from_index(op as usize),
         reg_bitmap,
         mem_addr,
         mem_bytes,
@@ -98,15 +126,22 @@ pub fn write_functional(path: &Path, trace: &FunctionalTrace) -> Result<()> {
 pub fn read_functional(path: &Path) -> Result<FunctionalTrace> {
     let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
     let mut r = BufReader::new(file);
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    ensure!(&magic == MAGIC_FUNC, "not a functional trace: bad magic");
-    let name = read_str(&mut r)?;
-    let n = read_u64(&mut r)? as usize;
-    let mut records = Vec::with_capacity(n);
-    for _ in 0..n {
-        records.push(read_func_record(&mut r)?);
+    let (name, n) = read_func_header(&mut r)?;
+    // Capped reserve: a corrupt header count must error on decode, not
+    // abort on allocation.
+    let mut records = Vec::with_capacity(n.min(1 << 22));
+    for i in 0..n {
+        records.push(
+            read_func_record(&mut r).with_context(|| format!("record {i} of {n}"))?,
+        );
     }
+    // Same EOF probe as the chunked reader: both readers of the format
+    // must agree on what a valid file is.
+    let mut probe = [0u8; 1];
+    ensure!(
+        r.read(&mut probe)? == 0,
+        "trailing bytes after the {n} declared records"
+    );
     Ok(FunctionalTrace { name, records })
 }
 
@@ -115,6 +150,16 @@ pub fn read_functional(path: &Path) -> Result<FunctionalTrace> {
 /// producers/consumers interoperate freely; the writer streams straight
 /// from the columns without assembling records.
 pub fn write_functional_columns(path: &Path, name: &str, cols: &TraceColumns) -> Result<()> {
+    ensure!(
+        cols.is_consistent(),
+        "ragged trace columns: {} pcs / {} opcodes / {} bitmaps / {} addrs / {} widths / {} outcomes",
+        cols.pc.len(),
+        cols.opcode.len(),
+        cols.reg_bitmap.len(),
+        cols.mem_addr.len(),
+        cols.mem_bytes.len(),
+        cols.taken.len()
+    );
     let file = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
     let mut w = BufWriter::new(file);
     w.write_all(MAGIC_FUNC)?;
@@ -132,28 +177,24 @@ pub fn write_functional_columns(path: &Path, name: &str, cols: &TraceColumns) ->
 }
 
 /// Read a functional trace from `path` directly into columnar storage —
-/// no intermediate `Vec<FuncRecord>` is materialized; each field is
-/// appended to its column as it is decoded.
+/// no intermediate `Vec<FuncRecord>` is materialized. An accumulation
+/// loop over the chunked [`FileChunkSource`](crate::trace::chunk), so
+/// the whole-file and streaming readers share one decode + validation
+/// path (truncated tails, bad opcode ids and trailing garbage all
+/// error).
 pub fn read_functional_columns(path: &Path) -> Result<(String, TraceColumns)> {
-    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
-    let mut r = BufReader::new(file);
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    ensure!(&magic == MAGIC_FUNC, "not a functional trace: bad magic");
-    let name = read_str(&mut r)?;
-    let n = read_u64(&mut r)? as usize;
-    let mut cols = TraceColumns::with_capacity(n);
-    for _ in 0..n {
-        let pc = read_u64(&mut r)?;
-        let op = read_u8(&mut r)?;
-        ensure!((op as usize) < Opcode::COUNT, "bad opcode id {op}");
-        let reg_bitmap = read_u64(&mut r)?;
-        let mem_addr = read_u64(&mut r)?;
-        let mem_bytes = read_u8(&mut r)?;
-        let taken = read_u8(&mut r)? != 0;
-        cols.push_fields(pc, op, reg_bitmap, mem_addr, mem_bytes, taken);
+    use crate::trace::chunk::{ChunkBuf, ChunkSource, FileChunkSource};
+    let mut src = FileChunkSource::open(path)?;
+    let mut cols = TraceColumns::with_capacity(src.remaining().min(1 << 22));
+    let mut buf = ChunkBuf::new();
+    loop {
+        let n = src.next_chunk(&mut buf, 1 << 16)?;
+        if n == 0 {
+            break;
+        }
+        cols.extend_from(&buf.cols, 0, n);
     }
-    Ok((name, cols))
+    Ok((src.name().to_string(), cols))
 }
 
 /// Write a detailed trace to `path`.
@@ -359,6 +400,12 @@ mod tests {
         let data = std::fs::read(&path).unwrap();
         std::fs::write(&path, &data[..data.len() - 4]).unwrap();
         assert!(read_functional(&path).is_err());
+        // Trailing garbage is rejected by both readers of the format.
+        let mut padded = data.clone();
+        padded.extend_from_slice(b"junk");
+        std::fs::write(&path, &padded).unwrap();
+        assert!(read_functional(&path).is_err());
+        assert!(read_functional_columns(&path).is_err());
     }
 
     #[test]
