@@ -8,7 +8,7 @@
 # >15% items/sec regression vs the per-case baseline median); use
 # `make bench-baseline` after a trusted run to append a snapshot.
 
-.PHONY: build test fmt-check clippy bench bench-smoke bench-gate bench-baseline ci
+.PHONY: build test fmt-check clippy bench bench-smoke bench-serve bench-gate bench-baseline ci
 
 build:
 	cargo build --release
@@ -22,22 +22,45 @@ fmt-check:
 clippy:
 	cargo clippy --workspace --all-targets -- -D warnings
 
-# Full benchmark sweep (prints to stdout).
+# Full benchmark sweep (prints to stdout). Includes the serve smoke so
+# a following bench-gate finds all three BENCH_*.json reports.
 bench:
 	cargo bench --bench coordinator -- --json BENCH_coordinator.json
 	cargo bench --bench features -- --json BENCH_features.json
+	$(MAKE) bench-serve
 
-# CI smoke benches: reduced counts, emits BENCH_coordinator.json (and
-# BENCH_features.json) with instructions/sec + per-batch staging
-# latency so successive PRs have a perf trajectory.
+# CI smoke benches: reduced counts, emits BENCH_coordinator.json,
+# BENCH_features.json and BENCH_serve.json (via bench-serve) with
+# instructions/sec + per-batch staging latency so successive PRs have a
+# perf trajectory.
 bench-smoke:
 	cargo bench --bench coordinator -- --smoke --json BENCH_coordinator.json
 	cargo bench --bench features -- --smoke --json BENCH_features.json
+	$(MAKE) bench-serve
+
+# Serving smoke: start `tao serve` on an ephemeral port with the
+# surrogate artifact set, replay a mixed scenario load (verifying every
+# served result against the offline engine and that packed occupancy
+# beats per-request occupancy), emit BENCH_serve.json, drain.
+bench-serve: build
+	d=$$(mktemp -d /tmp/tao-serve.XXXXXX); \
+	target/release/tao serve --surrogate-dir $$d/artifacts \
+	  --port-file $$d/port --admission-wait-ms 150 & \
+	serve_pid=$$!; \
+	target/release/tao loadgen --port-file $$d/port \
+	  --json BENCH_serve.json --verify-models $$d/artifacts \
+	  --assert-occupancy --shutdown; status=$$?; \
+	if [ $$status -ne 0 ]; then kill $$serve_pid 2>/dev/null || true; fi; \
+	wait $$serve_pid; serve_status=$$?; \
+	rm -rf $$d; \
+	if [ $$status -eq 0 ]; then status=$$serve_status; fi; \
+	exit $$status
 
 # Gate the current BENCH_*.json against benches/baselines/.
 bench-gate:
 	cargo run --release --bin bench_gate -- \
-	  BENCH_coordinator.json BENCH_features.json --baselines benches/baselines
+	  BENCH_coordinator.json BENCH_features.json BENCH_serve.json \
+	  --baselines benches/baselines
 
 # Snapshot the current BENCH_*.json files as the next numbered baseline
 # (commit the result to extend the trajectory).
@@ -45,7 +68,7 @@ bench-baseline:
 	@last=$$(ls benches/baselines 2>/dev/null \
 	  | sed -n 's/^\([0-9][0-9]*\)-BENCH_.*/\1/p' | sort -n | tail -1 | sed 's/^0*//'); \
 	next=$$(printf '%04d' $$(( $${last:-0} + 1 ))); \
-	for f in BENCH_coordinator.json BENCH_features.json; do \
+	for f in BENCH_coordinator.json BENCH_features.json BENCH_serve.json; do \
 	  if [ -f $$f ]; then cp $$f benches/baselines/$$next-$$f; echo "baseline $$next-$$f"; fi; \
 	done
 

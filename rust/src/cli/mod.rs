@@ -5,6 +5,8 @@
 //!
 //! * `tao datagen`   — generate traces + training datasets (`data/`);
 //! * `tao simulate`  — run the DL-based simulation on a benchmark;
+//! * `tao serve`     — the concurrent simulation service daemon;
+//! * `tao loadgen`   — replay mixed scenarios against a daemon;
 //! * `tao report`    — regenerate a paper table/figure (see DESIGN.md §3);
 //! * `tao dse`       — sample + characterize designs, select train pair.
 
@@ -29,6 +31,14 @@ USAGE:
   tao simulate --model artifacts/tao_uarch_a.hlo.txt --bench mcf
                [--insts N] [--workers W] [--seed S] [--truth a|b|c]
                [--chunk N] [--warmup N] [--stream] [--max-resident N]
+  tao serve    --model A.hlo.txt [--model B.hlo.txt ...] | --surrogate-dir DIR
+               [--addr H:P | --port P] [--port-file F] [--queue-depth N]
+               [--max-active N] [--cache-entries N] [--max-insts N]
+               [--admission-wait-ms N] [--no-pipeline] [--stats-out F]
+  tao loadgen  --addr H:P | --port-file F  [--jobs N] [--threads K]
+               [--solo-jobs N] [--insts N] [--seed S] [--chunk N]
+               [--json BENCH_serve.json] [--verify-models DIR]
+               [--assert-occupancy] [--shutdown] [--wait-secs N]
   tao report   <table1|figure2|figure9|figure10a|figure10b|figure11|figure12a|
                 figure12b|figure14|table4|table6|figure15> [opts]
   tao dse      [--designs N] [--insts N] [--seed S]
@@ -45,6 +55,8 @@ pub fn run(argv: Vec<String>) -> Result<()> {
     match cmd.as_str() {
         "datagen" => cmd_datagen(args),
         "simulate" => crate::coordinator::cli::cmd_simulate(args),
+        "serve" => crate::serve::cli::cmd_serve(args),
+        "loadgen" => crate::serve::cli::cmd_loadgen(args),
         "report" => crate::reports::cmd_report(args),
         "dse" => crate::reports::cmd_dse(args),
         "help" | "--help" | "-h" => {

@@ -360,6 +360,119 @@ pub fn check_batcher_equivalence(t: usize, f: usize, batch: usize, n: usize, see
 }
 
 // ---------------------------------------------------------------------
+// Window-level staging (cross-job batch packing)
+// ---------------------------------------------------------------------
+
+/// One stream's window producer, emitting windows *individually* so a
+/// scheduler can pack windows from many concurrent streams into a
+/// single fixed-`B` model batch (the serving layer's cross-job
+/// packing). Internally this is the overlap-aware [`WindowBatcher`]
+/// (and SimNet [`CtxBatcher`]) specialized to `batch = 1`: each record
+/// writes its feature row once into the rolling buffer and the window
+/// materializes with one contiguous copy into whatever batch slot the
+/// caller chose — the same per-window copy cost as the whole-batch
+/// flush path, byte for byte the same staging.
+///
+/// Two extra gears support the chunk-level prediction cache:
+///
+/// * [`WindowStager::advance_only`] — exact state-only fast-forward
+///   (extractor history advances, no feature row is produced);
+/// * [`WindowStager::roll_only`] — extract the row into the rolling
+///   window history but emit no window.
+///
+/// A cache hit replays a chunk by `advance_only` over all but its last
+/// `T-1` records and `roll_only` over those — after which the stager's
+/// state is byte-identical to having staged every window, at feature
+/// extraction cost for `T-1` rows and zero model cost.
+pub struct WindowStager {
+    fx: FeatureExtractor,
+    batcher: WindowBatcher,
+    ctx: CtxBatcher,
+    kind: ModelKind,
+    t: usize,
+}
+
+impl WindowStager {
+    /// Stager sized for an artifact.
+    pub fn new(meta: &ArtifactMeta) -> WindowStager {
+        WindowStager {
+            fx: FeatureExtractor::new(meta.features),
+            batcher: WindowBatcher::new(meta.context, meta.feature_dim, 1),
+            ctx: CtxBatcher::new(meta.context, 1),
+            kind: meta.kind,
+            t: meta.context,
+        }
+    }
+
+    /// The context window length `T` (callers size batch slots off it).
+    pub fn context(&self) -> usize {
+        self.t
+    }
+
+    /// Records that must be [`WindowStager::roll_only`]-ed (not merely
+    /// advanced) at the tail of a skipped region so the rolling window
+    /// history stays exact: `T - 1`.
+    pub fn history_rows(&self) -> usize {
+        self.t - 1
+    }
+
+    /// Stage one record's window into the caller's batch slot:
+    /// `ops_slot` is `[T]`, `feat_slot` is `[T*F]`, and for SimNet
+    /// artifacts `ctx_slot` is `[T*6]` with `ctx_row` the record's 6
+    /// context metrics. Slots receive exactly the bytes the whole-batch
+    /// path would have staged for this window.
+    pub fn stage_window(
+        &mut self,
+        rec: &FuncRecord,
+        ctx_row: Option<&[f32]>,
+        ops_slot: &mut [i32],
+        feat_slot: &mut [f32],
+        ctx_slot: Option<&mut [f32]>,
+    ) {
+        let row = self.batcher.begin_row();
+        let opcode = self.fx.extract_into(rec, row);
+        let full = self.batcher.commit_row(opcode);
+        debug_assert!(full, "batch=1 stager must fill on every commit");
+        self.batcher.materialize(ops_slot, feat_slot);
+        if self.kind == ModelKind::SimNet {
+            self.ctx.push(ctx_row.expect("SimNet stager requires a ctx row"));
+            self.ctx
+                .materialize(ctx_slot.expect("SimNet stager requires a ctx slot"));
+        }
+        self.batcher.clear_staged();
+        self.ctx.clear_staged();
+    }
+
+    /// Extract the record into the rolling window history without
+    /// emitting a window (cache-hit tail refill).
+    pub fn roll_only(&mut self, rec: &FuncRecord, ctx_row: Option<&[f32]>) {
+        let row = self.batcher.begin_row();
+        let opcode = self.fx.extract_into(rec, row);
+        self.batcher.commit_row(opcode);
+        if self.kind == ModelKind::SimNet {
+            self.ctx.push(ctx_row.expect("SimNet stager requires a ctx row"));
+        }
+        self.batcher.clear_staged();
+        self.ctx.clear_staged();
+    }
+
+    /// Advance extractor state only (cache-hit fast-forward). The
+    /// rolling window history goes stale; callers must follow with at
+    /// least [`WindowStager::history_rows`] `roll_only`/`stage_window`
+    /// calls before the next emitted window.
+    pub fn advance_only(&mut self, rec: &FuncRecord) {
+        self.fx.advance(rec);
+    }
+
+    /// Reset for a new stream.
+    pub fn reset(&mut self) {
+        self.fx.reset();
+        self.batcher.reset();
+        self.ctx.reset();
+    }
+}
+
+// ---------------------------------------------------------------------
 // Prediction accumulation
 // ---------------------------------------------------------------------
 
@@ -422,38 +535,52 @@ impl PredAccum {
     /// overlap predictions that belong to a neighbouring shard).
     pub fn absorb_range(&mut self, out: &ModelOutputs, kind: ModelKind, skip: usize) {
         for i in skip..out.fetch.len() {
-            let fetch = out.fetch[i] as f64;
-            let exec = out.exec[i] as f64;
-            self.instructions += 1;
-            self.ordinal += 1;
-            self.fetch_cycles += fetch;
-            self.last_exec = exec;
-            self.last_exec_at = self.ordinal;
-            let (mis, l1d, l1i, tlb) = match kind {
-                ModelKind::Tao => (
-                    out.branch[i] as f64,
-                    (out.access[i * 4 + 2] + out.access[i * 4 + 3]) as f64,
-                    out.icache[i] as f64,
-                    out.tlb[i] as f64,
-                ),
-                ModelKind::SimNet => (0.0, 0.0, 0.0, 0.0),
-            };
-            self.mispredicts += mis;
-            self.l1d_misses += l1d;
-            self.l1i_misses += l1i;
-            self.tlb_misses += tlb;
-            if let Some(ph) = &mut self.phase {
-                ph.push(fetch, mis > 0.5, l1d > 0.5, l1i > 0.5, tlb > 0.5);
-            }
+            self.absorb_one(out, kind, i);
+        }
+    }
+
+    /// Fold a single output row — the window-level demux surface. The
+    /// serving scheduler packs windows from many jobs into one batch
+    /// and routes each output row back to its job's accumulator with
+    /// this call; a whole-batch [`PredAccum::absorb_range`] is just the
+    /// loop over it, so the two paths share one fold body.
+    pub fn absorb_one(&mut self, out: &ModelOutputs, kind: ModelKind, i: usize) {
+        let fetch = out.fetch[i] as f64;
+        let exec = out.exec[i] as f64;
+        self.instructions += 1;
+        self.ordinal += 1;
+        self.fetch_cycles += fetch;
+        self.last_exec = exec;
+        self.last_exec_at = self.ordinal;
+        let (mis, l1d, l1i, tlb) = match kind {
+            ModelKind::Tao => (
+                out.branch[i] as f64,
+                (out.access[i * 4 + 2] + out.access[i * 4 + 3]) as f64,
+                out.icache[i] as f64,
+                out.tlb[i] as f64,
+            ),
+            ModelKind::SimNet => (0.0, 0.0, 0.0, 0.0),
+        };
+        self.mispredicts += mis;
+        self.l1d_misses += l1d;
+        self.l1i_misses += l1i;
+        self.tlb_misses += tlb;
+        if let Some(ph) = &mut self.phase {
+            ph.push(fetch, mis > 0.5, l1d > 0.5, l1i > 0.5, tlb > 0.5);
         }
     }
 
     /// Merge another shard's accumulator. Order-independent: any fold
     /// order over a set of disjoint shards reconstructs the same
     /// run-level metrics (the tail correction follows the globally last
-    /// instruction, not merge order).
+    /// instruction, not merge order). The internal absorb cursor also
+    /// advances by the merged instruction count, so a *consecutive*
+    /// shard's accumulator can be folded mid-stream and absorption can
+    /// resume afterwards at the correct global ordinal — the serving
+    /// cache replays chunk-level accumulators this way.
     pub fn merge(&mut self, other: &PredAccum) {
         self.instructions += other.instructions;
+        self.ordinal += other.instructions;
         self.fetch_cycles += other.fetch_cycles;
         if other.last_exec_at > self.last_exec_at {
             self.last_exec = other.last_exec;
@@ -1558,6 +1685,178 @@ mod tests {
         assert_eq!(one.metrics.instructions, seq.metrics.instructions);
         assert_eq!(one.metrics.cycles, seq.metrics.cycles);
         assert_eq!(one.batches, seq.batches);
+    }
+
+    // --- window-level stager (cross-job packing surface) ---
+
+    fn stager_meta(kind: ModelKind, batch: usize, context: usize) -> ArtifactMeta {
+        let fc = crate::features::FeatureConfig::default();
+        ArtifactMeta {
+            kind,
+            batch,
+            context,
+            feature_dim: fc.feature_dim(),
+            num_opcodes: crate::isa::Opcode::COUNT,
+            features: fc,
+            outputs: vec![],
+            vocab_hash: "test".into(),
+            kernel: "test".into(),
+        }
+    }
+
+    fn sample_records(n: u64, seed: u64) -> Vec<FuncRecord> {
+        let p = crate::workloads::by_name("mcf").unwrap().build(seed);
+        crate::functional::FunctionalSim::new(&p).run(n).records
+    }
+
+    #[test]
+    fn window_stager_bytes_match_batch_staging() {
+        let (b, t) = (16, 8);
+        let meta = stager_meta(ModelKind::Tao, b, t);
+        let f = meta.feature_dim;
+        let records = sample_records(1_000, 9);
+
+        // Reference: the whole-batch staging path.
+        let mut fx = FeatureExtractor::new(meta.features);
+        let mut batcher = WindowBatcher::new(t, f, b);
+        let mut ref_ops = vec![0i32; b * t];
+        let mut ref_feats = vec![0.0f32; b * t * f];
+
+        // Stager: windows packed one slot at a time.
+        let mut stager = WindowStager::new(&meta);
+        let mut ops = vec![0i32; b * t];
+        let mut feats = vec![0.0f32; b * t * f];
+        let mut slot = 0usize;
+
+        for (i, rec) in records.iter().enumerate() {
+            let row = batcher.begin_row();
+            let opcode = fx.extract_into(rec, row);
+            let full = batcher.commit_row(opcode);
+            stager.stage_window(
+                rec,
+                None,
+                &mut ops[slot * t..(slot + 1) * t],
+                &mut feats[slot * t * f..(slot + 1) * t * f],
+                None,
+            );
+            slot += 1;
+            if full || i + 1 == records.len() {
+                let valid = batcher.materialize(&mut ref_ops, &mut ref_feats);
+                assert_eq!(valid, slot, "staged count at record {i}");
+                assert_eq!(ref_ops[..valid * t], ops[..valid * t], "opcodes at {i}");
+                assert_eq!(
+                    ref_feats[..valid * t * f],
+                    feats[..valid * t * f],
+                    "features at {i}"
+                );
+                batcher.clear_staged();
+                slot = 0;
+            }
+        }
+    }
+
+    #[test]
+    fn window_stager_fast_forward_is_exact() {
+        let t = 8;
+        let meta = stager_meta(ModelKind::Tao, 4, t);
+        let f = meta.feature_dim;
+        let records = sample_records(600, 3);
+
+        // Reference: stage every record, keep every window.
+        let mut full = WindowStager::new(&meta);
+        let mut full_windows = Vec::new();
+        for rec in &records {
+            let mut ops = vec![0i32; t];
+            let mut feats = vec![0.0f32; t * f];
+            full.stage_window(rec, None, &mut ops, &mut feats, None);
+            full_windows.push((ops, feats));
+        }
+
+        // Fast-forward path: skip the first k records the way a cache
+        // hit does (advance-only, then roll the last T-1), then stage
+        // the rest and compare windows byte for byte.
+        for k in [0usize, 3, t - 1, t, 57, 300] {
+            let mut ff = WindowStager::new(&meta);
+            let hist = ff.history_rows();
+            for (i, rec) in records[..k].iter().enumerate() {
+                if i + hist < k {
+                    ff.advance_only(rec);
+                } else {
+                    ff.roll_only(rec, None);
+                }
+            }
+            for (i, rec) in records.iter().enumerate().skip(k) {
+                let mut ops = vec![0i32; t];
+                let mut feats = vec![0.0f32; t * f];
+                ff.stage_window(rec, None, &mut ops, &mut feats, None);
+                assert_eq!(full_windows[i].0, ops, "ops window {i} after skip {k}");
+                assert_eq!(full_windows[i].1, feats, "feat window {i} after skip {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn window_stager_stages_simnet_ctx_with_mask() {
+        let (b, t) = (4, 6);
+        let meta = stager_meta(ModelKind::SimNet, b, t);
+        let f = meta.feature_dim;
+        let records = sample_records(100, 5);
+        let ctx: Vec<f32> = (0..records.len() * CTX_WIDTH).map(|i| i as f32 * 0.5).collect();
+
+        // Reference ctx staging: the whole-batch CtxBatcher.
+        let mut ref_ctx = CtxBatcher::new(t, b);
+        let mut ref_buf = vec![0.0f32; b * t * CTX_WIDTH];
+
+        let mut stager = WindowStager::new(&meta);
+        let mut ops = vec![0i32; t];
+        let mut feats = vec![0.0f32; t * f];
+        let mut got = vec![0.0f32; b * t * CTX_WIDTH];
+        let mut slot = 0usize;
+        for (i, rec) in records.iter().enumerate() {
+            let row = &ctx[i * CTX_WIDTH..(i + 1) * CTX_WIDTH];
+            ref_ctx.push(row);
+            let dst = &mut got[slot * t * CTX_WIDTH..(slot + 1) * t * CTX_WIDTH];
+            stager.stage_window(rec, Some(row), &mut ops, &mut feats, Some(dst));
+            slot += 1;
+            if slot == b || i + 1 == records.len() {
+                ref_ctx.materialize(&mut ref_buf);
+                assert_eq!(
+                    ref_buf[..slot * t * CTX_WIDTH],
+                    got[..slot * t * CTX_WIDTH],
+                    "ctx staging diverged at record {i}"
+                );
+                ref_ctx.clear_staged();
+                slot = 0;
+            }
+        }
+    }
+
+    #[test]
+    fn pred_accum_merge_advances_absorb_cursor() {
+        // Absorb 2 rows, merge a 3-instruction consecutive shard, then
+        // absorb again: the resumed ordinals must continue at 6, so the
+        // tail correction tracks the true last instruction.
+        let row = |v: f32| ModelOutputs {
+            fetch: vec![v],
+            exec: vec![v],
+            branch: vec![0.0],
+            access: vec![0.0; 4],
+            icache: vec![0.0],
+            tlb: vec![0.0],
+        };
+        let mut a = PredAccum::default();
+        a.absorb(&row(1.0), ModelKind::Tao);
+        a.absorb(&row(2.0), ModelKind::Tao);
+        let mut mid = PredAccum::at_base(2);
+        mid.absorb(&row(3.0), ModelKind::Tao);
+        mid.absorb(&row(4.0), ModelKind::Tao);
+        mid.absorb(&row(5.0), ModelKind::Tao);
+        a.merge(&mid);
+        a.absorb(&row(6.0), ModelKind::Tao);
+        assert_eq!(a.instructions, 6);
+        assert_eq!(a.last_exec_at, 6);
+        assert!((a.last_exec - 6.0).abs() < 1e-12);
+        assert!((a.total_cycles() - (21.0 + 6.0)).abs() < 1e-12);
     }
 
     #[test]

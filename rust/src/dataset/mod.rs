@@ -118,6 +118,34 @@ pub fn adjust(detailed: &DetailedTrace) -> AdjustedTrace {
     }
 }
 
+/// Per-instruction detailed-trace metrics for SimNet's µarch-specific
+/// context input, `[N × 6]` in datagen label order: runs the detailed
+/// simulator for `insts` instructions on `cfg` and flattens the
+/// adjusted labels. Shared by the Figure 9 / Table 4 reports and the
+/// serving layer's SimNet jobs (which is the paper's point — SimNet's
+/// input itself costs a detailed simulation per target design).
+pub fn simnet_ctx_metrics(
+    program: &crate::isa::Program,
+    cfg: &crate::uarch::UarchConfig,
+    insts: u64,
+) -> Vec<f32> {
+    let (det, _) = crate::detailed::DetailedSim::new(program, cfg).run(insts);
+    let adj = adjust(&det);
+    let mut ctx = Vec::with_capacity(adj.samples.len() * 6);
+    for s in &adj.samples {
+        let l = &s.labels;
+        ctx.extend_from_slice(&[
+            l.fetch_latency as f32,
+            l.exec_latency as f32,
+            l.branch_mispred as u8 as f32,
+            l.access_level.index() as f32,
+            l.icache_miss as u8 as f32,
+            l.tlb_miss as u8 as f32,
+        ]);
+    }
+    ctx
+}
+
 /// Align an adjusted trace against the functional trace of the same
 /// program: every instruction must match on PC, opcode and memory
 /// address. Returns the verified training set.

@@ -22,25 +22,9 @@ fn artifacts_dir(args: &mut Args) -> Result<PathBuf> {
         .into())
 }
 
-/// Per-instruction detailed-trace metrics for SimNet's µarch-specific
-/// context input, `[N × 6]` in datagen label order.
-fn simnet_ctx_metrics(program: &crate::isa::Program, cfg: &UarchConfig, insts: u64) -> Vec<f32> {
-    let (det, _) = DetailedSim::new(program, cfg).run(insts);
-    let adj = crate::dataset::adjust(&det);
-    let mut ctx = Vec::with_capacity(adj.samples.len() * 6);
-    for s in &adj.samples {
-        let l = &s.labels;
-        ctx.extend_from_slice(&[
-            l.fetch_latency as f32,
-            l.exec_latency as f32,
-            l.branch_mispred as u8 as f32,
-            l.access_level.index() as f32,
-            l.icache_miss as u8 as f32,
-            l.tlb_miss as u8 as f32,
-        ]);
-    }
-    ctx
-}
+// SimNet's µarch-specific context input now comes from the shared
+// `dataset::simnet_ctx_metrics` (the serving layer needs it too).
+use crate::dataset::simnet_ctx_metrics;
 
 /// Figure 9: CPI simulation error for {µArch A,B,C} × test benchmarks,
 /// Tao vs SimNet.

@@ -123,13 +123,31 @@ pub fn write_surrogate_artifact(
     batch: usize,
     context: usize,
 ) -> Result<PathBuf> {
+    write_surrogate_artifact_kind(dir, name, ModelKind::Tao, batch, context)
+}
+
+/// [`write_surrogate_artifact`] with an explicit model family; the
+/// SimNet variant declares the 2-output shape and the ctx input the
+/// vendored PJRT stand-in already understands, so serve/loadgen tests
+/// can exercise mixed Tao/SimNet lanes without trained models.
+pub fn write_surrogate_artifact_kind(
+    dir: &Path,
+    name: &str,
+    kind: ModelKind,
+    batch: usize,
+    context: usize,
+) -> Result<PathBuf> {
     std::fs::create_dir_all(dir).with_context(|| format!("mkdir {dir:?}"))?;
     let fc = FeatureConfig::default();
+    let (kind_str, outputs) = match kind {
+        ModelKind::Tao => ("tao", r#"["fetch", "exec", "branch", "access", "icache", "tlb"]"#),
+        ModelKind::SimNet => ("simnet", r#"["fetch", "exec"]"#),
+    };
     let meta = format!(
         r#"{{
-          "kind": "tao", "batch": {batch}, "context": {context},
+          "kind": "{kind_str}", "batch": {batch}, "context": {context},
           "feature_dim": {fd}, "num_opcodes": {nop},
-          "outputs": ["fetch", "exec", "branch", "access", "icache", "tlb"],
+          "outputs": {outputs},
           "feature_config": {{"nb": {nb}, "nq": {nq}, "nm": {nm}}},
           "vocab_hash": "surrogate", "kernel": "surrogate"
         }}"#,
@@ -220,20 +238,44 @@ impl Session {
     /// Execute one batch from the staging buffers; `valid` rows of output
     /// are post-processed (probabilities, clamps) into `ModelOutputs`.
     pub fn run(&self, valid: usize) -> Result<ModelOutputs> {
+        let ctx = match self.meta.kind {
+            ModelKind::Tao => None,
+            ModelKind::SimNet => Some(&self.ctx_buf[..]),
+        };
+        self.run_on(&self.opcode_buf, &self.feat_buf, ctx, valid)
+    }
+
+    /// Execute one batch straight from caller-owned staging buffers
+    /// (`opcodes [B*T]`, `features [B*T*F]`, SimNet `ctx [B*T*6]`).
+    /// The external-buffer surface the serving scheduler's pipelined
+    /// executor uses: the stager fills one buffer set while the model
+    /// executes from the other, with no hand-off copy through the
+    /// session's internal buffers.
+    pub fn run_on(
+        &self,
+        opcodes: &[i32],
+        features: &[f32],
+        ctx: Option<&[f32]>,
+        valid: usize,
+    ) -> Result<ModelOutputs> {
         let b = self.meta.batch as i64;
         let t = self.meta.context as i64;
         let f = self.meta.feature_dim as i64;
         ensure!(valid <= b as usize, "valid {valid} > batch {b}");
-        let ops = xla::Literal::vec1(&self.opcode_buf)
+        ensure!(opcodes.len() == (b * t) as usize, "opcode staging shape");
+        ensure!(features.len() == (b * t * f) as usize, "feature staging shape");
+        let ops = xla::Literal::vec1(opcodes)
             .reshape(&[b, t])
             .map_err(anyhow_xla)?;
-        let feats = xla::Literal::vec1(&self.feat_buf)
+        let feats = xla::Literal::vec1(features)
             .reshape(&[b, t, f])
             .map_err(anyhow_xla)?;
         let result = match self.meta.kind {
             ModelKind::Tao => self.exe.execute::<xla::Literal>(&[ops, feats]),
             ModelKind::SimNet => {
-                let ctx = xla::Literal::vec1(&self.ctx_buf)
+                let ctx = ctx.context("SimNet execution requires a ctx staging buffer")?;
+                ensure!(ctx.len() == (b * t * 6) as usize, "ctx staging shape");
+                let ctx = xla::Literal::vec1(ctx)
                     .reshape(&[b, t, 6])
                     .map_err(anyhow_xla)?;
                 self.exe.execute::<xla::Literal>(&[ops, feats, ctx])
@@ -293,6 +335,103 @@ impl ModelOutputs {
 
 fn anyhow_xla(e: xla::Error) -> anyhow::Error {
     anyhow::anyhow!("xla: {e}")
+}
+
+// ---------------------------------------------------------------------
+// Artifact pool
+// ---------------------------------------------------------------------
+
+/// One artifact registered in an [`ArtifactPool`]: validated metadata
+/// plus a content fingerprint over the HLO text and the metadata JSON.
+/// The fingerprint keys the serving layer's chunk-level prediction
+/// cache, so two artifacts hit the same cache entries iff their model
+/// bytes are identical.
+#[derive(Debug, Clone)]
+pub struct PooledArtifact {
+    /// Registry name (the `.hlo.txt` file stem).
+    pub name: String,
+    /// Path to the HLO text.
+    pub hlo_path: PathBuf,
+    /// Validated metadata.
+    pub meta: ArtifactMeta,
+    /// FNV-1a over HLO text ++ metadata JSON.
+    pub fingerprint: u64,
+}
+
+impl PooledArtifact {
+    /// Compile a fresh session for this artifact (one per worker
+    /// thread; the underlying client is not shared across threads).
+    pub fn open_session(&self) -> Result<Session> {
+        Session::load(&self.hlo_path)
+    }
+}
+
+/// A set of artifacts shared across concurrent simulation jobs: the
+/// serving daemon loads every `--model` once at startup, validates the
+/// metadata, fingerprints the bytes, and hands lanes/jobs cheap
+/// references instead of re-reading `meta.json` per request.
+#[derive(Debug, Default)]
+pub struct ArtifactPool {
+    arts: Vec<PooledArtifact>,
+}
+
+impl ArtifactPool {
+    /// Load and fingerprint every artifact. Names (file stems) must be
+    /// unique — they are the request-side registry keys.
+    pub fn load(hlo_paths: &[PathBuf]) -> Result<ArtifactPool> {
+        use crate::util::hash::{fnv1a64, FNV_OFFSET};
+        let mut arts: Vec<PooledArtifact> = Vec::with_capacity(hlo_paths.len());
+        for path in hlo_paths {
+            let meta = ArtifactMeta::load(path)?;
+            let name = artifact_name(path)?;
+            ensure!(
+                arts.iter().all(|a| a.name != name),
+                "duplicate artifact name {name:?} in pool"
+            );
+            let hlo_bytes =
+                std::fs::read(path).with_context(|| format!("read {path:?}"))?;
+            let meta_bytes = std::fs::read(meta_path_for(path))
+                .with_context(|| format!("read {:?}", meta_path_for(path)))?;
+            let fingerprint = fnv1a64(&meta_bytes, fnv1a64(&hlo_bytes, FNV_OFFSET));
+            arts.push(PooledArtifact {
+                name,
+                hlo_path: path.clone(),
+                meta,
+                fingerprint,
+            });
+        }
+        Ok(ArtifactPool { arts })
+    }
+
+    /// Look up an artifact by registry name.
+    pub fn get(&self, name: &str) -> Option<&PooledArtifact> {
+        self.arts.iter().find(|a| a.name == name)
+    }
+
+    /// All artifacts, load order.
+    pub fn iter(&self) -> impl Iterator<Item = &PooledArtifact> {
+        self.arts.iter()
+    }
+
+    /// Number of artifacts.
+    pub fn len(&self) -> usize {
+        self.arts.len()
+    }
+
+    /// True when no artifacts are loaded.
+    pub fn is_empty(&self) -> bool {
+        self.arts.is_empty()
+    }
+}
+
+/// Registry name for an artifact path: the file name with the
+/// `.hlo.txt` suffix stripped.
+pub fn artifact_name(hlo_path: &Path) -> Result<String> {
+    let file = hlo_path
+        .file_name()
+        .and_then(|s| s.to_str())
+        .with_context(|| format!("non-utf8 artifact path {hlo_path:?}"))?;
+    Ok(file.strip_suffix(".hlo.txt").unwrap_or(file).to_string())
 }
 
 #[cfg(test)]
@@ -368,5 +507,63 @@ mod tests {
             meta_path_for(Path::new("/a/tao_x.hlo.txt")),
             PathBuf::from("/a/tao_x.meta.json")
         );
+    }
+
+    #[test]
+    fn artifact_names_strip_hlo_suffix() {
+        assert_eq!(artifact_name(Path::new("/a/tao_x.hlo.txt")).unwrap(), "tao_x");
+        assert_eq!(artifact_name(Path::new("plain")).unwrap(), "plain");
+    }
+
+    #[test]
+    fn pool_loads_fingerprints_and_rejects_duplicates() {
+        let dir = tmp().join("pool");
+        let a = write_surrogate_artifact(&dir, "pool_a", 4, 8).unwrap();
+        let b = write_surrogate_artifact(&dir, "pool_b", 4, 8).unwrap();
+        let sn =
+            write_surrogate_artifact_kind(&dir, "pool_sn", ModelKind::SimNet, 4, 8).unwrap();
+        let pool = ArtifactPool::load(&[a.clone(), b, sn]).unwrap();
+        assert_eq!(pool.len(), 3);
+        let pa = pool.get("pool_a").unwrap();
+        let pb = pool.get("pool_b").unwrap();
+        let psn = pool.get("pool_sn").unwrap();
+        assert_eq!(pa.meta.kind, ModelKind::Tao);
+        assert_eq!(psn.meta.kind, ModelKind::SimNet);
+        // Different model bytes ⇒ different cache-key fingerprints.
+        assert_ne!(pa.fingerprint, pb.fingerprint);
+        assert_ne!(pa.fingerprint, psn.fingerprint);
+        assert!(pool.get("missing").is_none());
+        // Same file twice collides on the registry name.
+        assert!(ArtifactPool::load(&[a.clone(), a]).is_err());
+    }
+
+    #[test]
+    fn run_on_matches_run_from_internal_buffers() {
+        let dir = tmp().join("runon");
+        let hlo = write_surrogate_artifact(&dir, "runon", 4, 8).unwrap();
+        let mut session = Session::load(&hlo).unwrap();
+        let (b, t, f) = (4, 8, session.meta().feature_dim);
+        let mut ops = vec![0i32; b * t];
+        let mut feats = vec![0.0f32; b * t * f];
+        for (i, o) in ops.iter_mut().enumerate() {
+            *o = (i % 7) as i32;
+        }
+        for (i, v) in feats.iter_mut().enumerate() {
+            *v = (i % 13) as f32 * 0.25;
+        }
+        {
+            let (ob, fb) = session.buffers();
+            ob.copy_from_slice(&ops);
+            fb.copy_from_slice(&feats);
+        }
+        let via_internal = session.run(3).unwrap();
+        let via_external = session.run_on(&ops, &feats, None, 3).unwrap();
+        assert_eq!(via_internal.fetch, via_external.fetch);
+        assert_eq!(via_internal.exec, via_external.exec);
+        assert_eq!(via_internal.branch, via_external.branch);
+        assert_eq!(via_internal.access, via_external.access);
+        // Shape violations surface as errors.
+        assert!(session.run_on(&ops[..1], &feats, None, 1).is_err());
+        assert!(session.run_on(&ops, &feats, None, 5).is_err());
     }
 }

@@ -12,4 +12,7 @@
 
 pub mod artifact;
 
-pub use artifact::{write_surrogate_artifact, ArtifactMeta, ModelKind, ModelOutputs, Session};
+pub use artifact::{
+    artifact_name, write_surrogate_artifact, write_surrogate_artifact_kind, ArtifactMeta,
+    ArtifactPool, ModelKind, ModelOutputs, PooledArtifact, Session,
+};

@@ -1,0 +1,316 @@
+//! Chunk-level prediction cache (LRU).
+//!
+//! Tao's economic argument is that one functional trace is generated
+//! once and reused across microarchitectures (PAPER.md §4.1). The
+//! serving cache operationalizes that at chunk granularity: the
+//! per-chunk *prediction accumulator* — the folded model outputs for
+//! every window whose instruction lands in the chunk — is memoized
+//! under a key that pins down everything the predictions depend on:
+//!
+//! * **artifact fingerprint** — which model bytes ran;
+//! * **warm-up prefix hash** — a rolling hash over every chunk the
+//!   stream pulled before this one. Extractor and window-history state
+//!   at a chunk boundary is a pure function of the whole prefix, so
+//!   equal prefix hash + equal content ⇒ byte-identical staged windows
+//!   ⇒ identical predictions. This is the exact-state analogue of the
+//!   engine's warm-up overlap re-run — nothing is approximated;
+//! * **chunk content hash** — the chunk's column bytes plus, for
+//!   SimNet, its µarch-specific context rows (so jobs against
+//!   different detailed designs key separately, while Tao jobs reuse
+//!   the µarch-agnostic functional chunks across design sweeps).
+//!
+//! A hit replays the accumulator via the order-independent
+//! [`PredAccum::merge`](crate::coordinator::engine::PredAccum::merge)
+//! and skips model execution entirely; the consumer fast-forwards its
+//! extractor state with
+//! [`WindowStager::advance_only`](crate::coordinator::engine::WindowStager)
+//! (exact, state-only), so a later miss resumes bit-for-bit.
+
+use crate::coordinator::engine::PredAccum;
+use crate::trace::ChunkBuf;
+use crate::util::hash::{fnv1a64, fnv1a64_u64, FNV_OFFSET};
+use std::collections::HashMap;
+
+/// Cache key: (artifact fingerprint, warm-up prefix hash, chunk
+/// content hash). See the module docs for what each part pins down.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ChunkKey {
+    /// Artifact (model bytes) fingerprint.
+    pub artifact: u64,
+    /// Rolling hash of every prior chunk's content hash.
+    pub prefix: u64,
+    /// This chunk's content hash.
+    pub content: u64,
+}
+
+/// Hash a pulled chunk's content: every record column, plus the ctx
+/// side channel when the source carries one.
+pub fn hash_chunk(buf: &ChunkBuf) -> u64 {
+    let mut h = fnv1a64_u64(buf.cols.len() as u64, FNV_OFFSET);
+    for i in 0..buf.cols.len() {
+        h = fnv1a64_u64(buf.cols.pc[i], h);
+        h = fnv1a64(&[buf.cols.opcode[i], buf.cols.mem_bytes[i], buf.cols.taken[i]], h);
+        h = fnv1a64_u64(buf.cols.reg_bitmap[i], h);
+        h = fnv1a64_u64(buf.cols.mem_addr[i], h);
+    }
+    for v in &buf.ctx {
+        h = fnv1a64(&v.to_le_bytes(), h);
+    }
+    h
+}
+
+/// Advance a warm-up prefix hash past a chunk with the given content
+/// hash (the rolling chain that makes [`ChunkKey::prefix`]).
+pub fn chain_prefix(prefix: u64, content: u64) -> u64 {
+    fnv1a64_u64(content, prefix)
+}
+
+/// The prefix hash of an empty stream.
+pub const PREFIX_SEED: u64 = FNV_OFFSET;
+
+/// Cumulative cache counters (monotonic; snapshot for deltas).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups that found an entry.
+    pub hits: u64,
+    /// Lookups that found nothing.
+    pub misses: u64,
+    /// Entries inserted.
+    pub insertions: u64,
+    /// Entries evicted by capacity pressure.
+    pub evictions: u64,
+    /// Entries currently resident.
+    pub entries: u64,
+}
+
+struct Slot {
+    key: ChunkKey,
+    value: PredAccum,
+    prev: usize,
+    next: usize,
+}
+
+const NIL: usize = usize::MAX;
+
+/// A fixed-capacity LRU map from [`ChunkKey`] to the chunk's folded
+/// prediction accumulator. Intrusive doubly-linked recency list over a
+/// slot arena: get/insert are O(1); eviction drops the least recently
+/// used entry. `capacity == 0` disables the cache (every lookup
+/// misses, nothing is stored).
+pub struct PredictionCache {
+    capacity: usize,
+    map: HashMap<ChunkKey, usize>,
+    slots: Vec<Slot>,
+    free: Vec<usize>,
+    head: usize, // most recently used
+    tail: usize, // least recently used
+    stats: CacheStats,
+}
+
+impl PredictionCache {
+    /// Cache holding at most `capacity` chunk entries.
+    pub fn new(capacity: usize) -> PredictionCache {
+        PredictionCache {
+            capacity,
+            map: HashMap::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            entries: self.map.len() as u64,
+            ..self.stats
+        }
+    }
+
+    fn unlink(&mut self, i: usize) {
+        let (prev, next) = (self.slots[i].prev, self.slots[i].next);
+        if prev == NIL {
+            self.head = next;
+        } else {
+            self.slots[prev].next = next;
+        }
+        if next == NIL {
+            self.tail = prev;
+        } else {
+            self.slots[next].prev = prev;
+        }
+    }
+
+    fn push_front(&mut self, i: usize) {
+        self.slots[i].prev = NIL;
+        self.slots[i].next = self.head;
+        if self.head != NIL {
+            self.slots[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    /// Look up a chunk, refreshing its recency. Returns a clone of the
+    /// stored accumulator (cheap: a handful of scalars; phase series
+    /// are never cached).
+    pub fn get(&mut self, key: &ChunkKey) -> Option<PredAccum> {
+        match self.map.get(key).copied() {
+            Some(i) => {
+                self.stats.hits += 1;
+                self.unlink(i);
+                self.push_front(i);
+                Some(self.slots[i].value.clone())
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a fully-folded chunk accumulator, evicting the LRU entry
+    /// at capacity. Re-inserting an existing key refreshes it.
+    pub fn insert(&mut self, key: ChunkKey, value: PredAccum) {
+        if self.capacity == 0 {
+            return;
+        }
+        if let Some(&i) = self.map.get(&key) {
+            self.slots[i].value = value;
+            self.unlink(i);
+            self.push_front(i);
+            return;
+        }
+        if self.map.len() >= self.capacity {
+            let lru = self.tail;
+            debug_assert_ne!(lru, NIL);
+            self.unlink(lru);
+            self.map.remove(&self.slots[lru].key);
+            self.free.push(lru);
+            self.stats.evictions += 1;
+        }
+        let i = match self.free.pop() {
+            Some(i) => {
+                self.slots[i] = Slot { key, value, prev: NIL, next: NIL };
+                i
+            }
+            None => {
+                self.slots.push(Slot { key, value, prev: NIL, next: NIL });
+                self.slots.len() - 1
+            }
+        };
+        self.map.insert(key, i);
+        self.push_front(i);
+        self.stats.insertions += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::runtime::{ModelKind, ModelOutputs};
+
+    fn key(n: u64) -> ChunkKey {
+        ChunkKey { artifact: 1, prefix: 2, content: n }
+    }
+
+    fn accum(insts: u64) -> PredAccum {
+        let n = insts as usize;
+        let mut a = PredAccum::default();
+        let out = ModelOutputs {
+            fetch: vec![2.0; n],
+            exec: vec![1.0; n],
+            branch: vec![0.0; n],
+            access: vec![0.0; n * 4],
+            icache: vec![0.0; n],
+            tlb: vec![0.0; n],
+        };
+        a.absorb(&out, ModelKind::Tao);
+        a
+    }
+
+    #[test]
+    fn hit_and_miss_counting() {
+        let mut c = PredictionCache::new(4);
+        assert!(c.get(&key(1)).is_none());
+        c.insert(key(1), accum(10));
+        let got = c.get(&key(1)).unwrap();
+        assert_eq!(got.instructions, 10);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.insertions, s.entries), (1, 1, 1, 1));
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = PredictionCache::new(2);
+        c.insert(key(1), accum(1));
+        c.insert(key(2), accum(2));
+        // Touch 1 so 2 becomes LRU.
+        assert!(c.get(&key(1)).is_some());
+        c.insert(key(3), accum(3));
+        assert!(c.get(&key(2)).is_none(), "LRU entry must be evicted");
+        assert!(c.get(&key(1)).is_some());
+        assert!(c.get(&key(3)).is_some());
+        assert_eq!(c.stats().evictions, 1);
+        assert_eq!(c.stats().entries, 2);
+    }
+
+    #[test]
+    fn reinsert_refreshes_without_eviction() {
+        let mut c = PredictionCache::new(2);
+        c.insert(key(1), accum(1));
+        c.insert(key(2), accum(2));
+        c.insert(key(1), accum(11));
+        assert_eq!(c.stats().evictions, 0);
+        assert_eq!(c.get(&key(1)).unwrap().instructions, 11);
+    }
+
+    #[test]
+    fn zero_capacity_disables_storage() {
+        let mut c = PredictionCache::new(0);
+        c.insert(key(1), accum(1));
+        assert!(c.get(&key(1)).is_none());
+        assert_eq!(c.stats().entries, 0);
+    }
+
+    #[test]
+    fn chunk_hash_sensitive_to_columns_and_ctx() {
+        use crate::trace::ChunkBuf;
+        let mut a = ChunkBuf::new();
+        a.cols.push_fields(0x400000, 3, 0b11, 0, 0, false);
+        let mut b = ChunkBuf::new();
+        b.cols.push_fields(0x400000, 3, 0b11, 0, 0, true);
+        assert_ne!(hash_chunk(&a), hash_chunk(&b));
+        let base = hash_chunk(&a);
+        a.ctx.extend_from_slice(&[1.0; 6]);
+        assert_ne!(hash_chunk(&a), base, "ctx rows must key the chunk");
+        // Prefix chaining is order-sensitive.
+        assert_ne!(
+            chain_prefix(chain_prefix(PREFIX_SEED, 1), 2),
+            chain_prefix(chain_prefix(PREFIX_SEED, 2), 1)
+        );
+    }
+
+    #[test]
+    fn many_inserts_stay_bounded() {
+        let mut c = PredictionCache::new(8);
+        for i in 0..100 {
+            c.insert(key(i), accum(i));
+            if i >= 3 {
+                // Keep a couple of keys hot; they must survive.
+                c.get(&key(i - 1));
+                c.get(&key(i - 2));
+            }
+        }
+        let s = c.stats();
+        assert_eq!(s.entries, 8);
+        assert_eq!(s.insertions, 100);
+        assert_eq!(s.evictions, 92);
+        assert!(c.get(&key(99)).is_some());
+    }
+}

@@ -1,0 +1,174 @@
+//! `tao serve` / `tao loadgen` command-line entry points.
+
+use super::loadgen::{run_loadgen, LoadgenOptions};
+use super::server::{Server, ServeConfig};
+use crate::cli::args::Args;
+use crate::runtime::{
+    write_surrogate_artifact, write_surrogate_artifact_kind, ArtifactPool, ModelKind,
+};
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// Process-wide drain request flag, set by SIGINT/SIGTERM.
+static SIGNALLED: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_signal(_signum: i32) {
+    // Only async-signal-safe work here: flip the atomic.
+    SIGNALLED.store(true, Ordering::SeqCst);
+}
+
+/// Route SIGINT/SIGTERM into [`SIGNALLED`] (zero-dep: straight libc
+/// `signal(2)`, which std already links).
+#[cfg(unix)]
+fn install_signal_handlers() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    let handler: extern "C" fn(i32) = on_signal;
+    let handler = handler as usize;
+    unsafe {
+        signal(2, handler); // SIGINT
+        signal(15, handler); // SIGTERM
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
+
+/// Write the dev/CI surrogate artifact set under `dir`: two Tao models
+/// and one SimNet baseline, all `B = 64`, `T = 16` — small jobs leave
+/// tail-heavy batches, which is exactly the traffic shape cross-job
+/// packing exists for. Returns the `.hlo.txt` paths.
+pub fn write_surrogate_set(dir: &std::path::Path) -> Result<Vec<PathBuf>> {
+    Ok(vec![
+        write_surrogate_artifact(dir, "serve_tao_a", 64, 16)?,
+        write_surrogate_artifact(dir, "serve_tao_b", 64, 16)?,
+        write_surrogate_artifact_kind(dir, "serve_simnet_a", ModelKind::SimNet, 64, 16)?,
+    ])
+}
+
+/// `tao serve` — run the simulation service daemon.
+pub fn cmd_serve(mut args: Args) -> Result<()> {
+    let mut models: Vec<PathBuf> = Vec::new();
+    while let Some(m) = args.opt_value("--model")? {
+        models.push(m.into());
+    }
+    let surrogate_dir: Option<PathBuf> = args.opt_value("--surrogate-dir")?.map(Into::into);
+    let defaults = ServeConfig::default();
+    let addr_flag = args.opt_value("--addr")?;
+    let port: Option<u16> = args.opt_parse("--port")?;
+    let cfg = ServeConfig {
+        addr: addr_flag.unwrap_or_else(|| format!("127.0.0.1:{}", port.unwrap_or(0))),
+        queue_depth: args.opt_parse("--queue-depth")?.unwrap_or(defaults.queue_depth),
+        max_active: args.opt_parse("--max-active")?.unwrap_or(defaults.max_active),
+        cache_entries: args.opt_parse("--cache-entries")?.unwrap_or(defaults.cache_entries),
+        max_insts: args.opt_parse("--max-insts")?.unwrap_or(defaults.max_insts),
+        pipeline: !args.opt_flag("--no-pipeline"),
+        admission_wait_ms: args
+            .opt_parse("--admission-wait-ms")?
+            .unwrap_or(defaults.admission_wait_ms),
+    };
+    let port_file: Option<PathBuf> = args.opt_value("--port-file")?.map(Into::into);
+    let stats_out: Option<PathBuf> = args.opt_value("--stats-out")?.map(Into::into);
+    args.finish()?;
+
+    if let Some(dir) = &surrogate_dir {
+        let mut set = write_surrogate_set(dir)?;
+        eprintln!("serve: wrote surrogate artifact set under {}", dir.display());
+        models.append(&mut set);
+    }
+    anyhow::ensure!(
+        !models.is_empty(),
+        "serve needs --model <artifact.hlo.txt> (repeatable) or --surrogate-dir DIR"
+    );
+    let pool = ArtifactPool::load(&models)?;
+    let server = Server::bind(pool, &cfg)?;
+    let addr = server.local_addr()?;
+    eprintln!(
+        "serve: listening on {addr} ({} artifact(s), queue {}, cache {} chunks)",
+        models.len(),
+        cfg.queue_depth,
+        cfg.cache_entries
+    );
+    if let Some(pf) = &port_file {
+        std::fs::write(pf, addr.to_string()).with_context(|| format!("write {pf:?}"))?;
+    }
+
+    install_signal_handlers();
+    let handle = server.handle();
+    std::thread::spawn(move || loop {
+        if SIGNALLED.load(Ordering::SeqCst) {
+            eprintln!("serve: signal received — draining");
+            handle.request_shutdown();
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    });
+
+    let stats = server.run()?;
+    if let Some(path) = &stats_out {
+        std::fs::write(path, stats.to_json()).with_context(|| format!("write {path:?}"))?;
+        eprintln!("serve: wrote final stats to {}", path.display());
+    }
+    Ok(())
+}
+
+/// Resolve the daemon address from `--addr` or a `--port-file` written
+/// by `tao serve`, waiting for the file (and the socket) to appear.
+fn resolve_addr(
+    addr: Option<String>,
+    port_file: Option<PathBuf>,
+    wait: Duration,
+) -> Result<String> {
+    if let Some(a) = addr {
+        return Ok(a);
+    }
+    let pf = port_file.context("need --addr HOST:PORT or --port-file PATH")?;
+    let deadline = Instant::now() + wait;
+    loop {
+        match std::fs::read_to_string(&pf) {
+            Ok(s) if !s.trim().is_empty() => {
+                let addr = s.trim().to_string();
+                // The daemon writes the file after binding, but give
+                // the health endpoint a chance too.
+                if super::http::http_get(&addr, "/healthz").is_ok() {
+                    return Ok(addr);
+                }
+                if Instant::now() >= deadline {
+                    return Ok(addr);
+                }
+            }
+            _ if Instant::now() >= deadline => {
+                anyhow::bail!("port file {pf:?} did not appear within {wait:?}")
+            }
+            _ => {}
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+/// `tao loadgen` — replay mixed scenarios against a daemon.
+pub fn cmd_loadgen(mut args: Args) -> Result<()> {
+    let defaults = LoadgenOptions::default();
+    let addr = args.opt_value("--addr")?;
+    let port_file: Option<PathBuf> = args.opt_value("--port-file")?.map(Into::into);
+    let wait_secs: u64 = args.opt_parse("--wait-secs")?.unwrap_or(30);
+    let opts = LoadgenOptions {
+        addr: resolve_addr(addr, port_file, Duration::from_secs(wait_secs))?,
+        jobs: args.opt_parse("--jobs")?.unwrap_or(defaults.jobs),
+        threads: args.opt_parse("--threads")?.unwrap_or(defaults.threads),
+        solo_jobs: args.opt_parse("--solo-jobs")?.unwrap_or(defaults.solo_jobs),
+        insts: args.opt_parse("--insts")?.unwrap_or(defaults.insts),
+        seed: args.opt_parse("--seed")?.unwrap_or(defaults.seed),
+        chunk: args.opt_parse("--chunk")?.unwrap_or(defaults.chunk),
+        json_out: args.opt_value("--json")?.map(Into::into),
+        verify_models: args.opt_value("--verify-models")?.map(Into::into),
+        assert_occupancy: args.opt_flag("--assert-occupancy"),
+        shutdown_after: args.opt_flag("--shutdown"),
+    };
+    args.finish()?;
+    run_loadgen(&opts)?;
+    Ok(())
+}

@@ -1,0 +1,277 @@
+//! Minimal HTTP/1.1 over `std::net` — just enough for the serving
+//! protocol, hand-rolled in the repo's zero-dependency idiom.
+//!
+//! One request per connection (`Connection: close` semantics): the
+//! daemon reads a request, writes a response, closes. Limits guard the
+//! parser — 8 KiB of headers, 1 MiB of body — and every malformed
+//! input surfaces as an error, never a panic. The client side
+//! ([`http_get`], [`http_post`]) is the same code path loadgen and the
+//! loopback tests use.
+
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// Maximum accepted header section (request line + headers).
+pub const MAX_HEADER_BYTES: usize = 8 << 10;
+
+/// Maximum accepted body.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// A parsed request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    /// `GET` / `POST` / ...
+    pub method: String,
+    /// Request target (path only; no query parsing).
+    pub path: String,
+    /// Raw body bytes decoded per `Content-Length`.
+    pub body: String,
+}
+
+/// Read one HTTP/1.1 request from a buffered stream.
+pub fn read_request<R: BufRead>(reader: &mut R) -> Result<Request> {
+    // Hard-cap the header section *at the reader*: `read_line` grows
+    // its buffer until a newline arrives, so without the `take` a
+    // newline-free stream would buffer unboundedly before the
+    // per-line size check ever ran. One byte of slack lets the check
+    // below distinguish "exactly at the limit" from "over it".
+    let mut capped = reader.take(MAX_HEADER_BYTES as u64 + 1);
+    let mut line = String::new();
+    let mut header_bytes = 0usize;
+    capped.read_line(&mut line).context("read request line")?;
+    ensure!(!line.is_empty(), "empty request");
+    header_bytes += line.len();
+    ensure!(header_bytes <= MAX_HEADER_BYTES, "header section too large");
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("missing method")?.to_string();
+    let path = parts.next().context("missing path")?.to_string();
+    let version = parts.next().context("missing HTTP version")?;
+    ensure!(version.starts_with("HTTP/1."), "unsupported version {version:?}");
+
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        let n = capped.read_line(&mut header).context("read header")?;
+        ensure!(n > 0, "truncated request header");
+        header_bytes += n;
+        ensure!(header_bytes <= MAX_HEADER_BYTES, "header section too large");
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        let Some((name, value)) = header.split_once(':') else {
+            bail!("malformed header {header:?}");
+        };
+        if name.eq_ignore_ascii_case("content-length") {
+            content_length = value
+                .trim()
+                .parse()
+                .with_context(|| format!("bad Content-Length {value:?}"))?;
+            ensure!(content_length <= MAX_BODY_BYTES, "body too large");
+        }
+    }
+    let reader = capped.into_inner();
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).context("read body")?;
+    let body = String::from_utf8(body).context("non-utf8 body")?;
+    Ok(Request { method, path, body })
+}
+
+/// Write an HTTP/1.1 response with a JSON body.
+pub fn write_response<W: Write>(w: &mut W, status: u16, body: &str) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Response",
+    };
+    write!(
+        w,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    w.flush()?;
+    Ok(())
+}
+
+/// A client-side response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Status code.
+    pub status: u16,
+    /// Body text.
+    pub body: String,
+}
+
+fn read_response<R: BufRead>(reader: &mut R) -> Result<Response> {
+    let mut line = String::new();
+    reader.read_line(&mut line).context("read status line")?;
+    let mut parts = line.split_whitespace();
+    let version = parts.next().context("missing version")?;
+    ensure!(version.starts_with("HTTP/1."), "bad status line {line:?}");
+    let status: u16 = parts
+        .next()
+        .context("missing status code")?
+        .parse()
+        .context("bad status code")?;
+    let mut content_length: Option<usize> = None;
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header).context("read header")?;
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = Some(value.trim().parse().context("bad Content-Length")?);
+            }
+        }
+    }
+    let body = match content_length {
+        Some(n) => {
+            ensure!(n <= MAX_BODY_BYTES, "response body too large");
+            let mut buf = vec![0u8; n];
+            reader.read_exact(&mut buf).context("read body")?;
+            String::from_utf8(buf).context("non-utf8 body")?
+        }
+        None => {
+            let mut buf = String::new();
+            reader.read_to_string(&mut buf).context("read body to EOF")?;
+            buf
+        }
+    };
+    Ok(Response { status, body })
+}
+
+fn request<A: ToSocketAddrs>(
+    addr: A,
+    method: &str,
+    path: &str,
+    body: &str,
+    timeout: Duration,
+) -> Result<Response> {
+    let addr = addr
+        .to_socket_addrs()
+        .context("resolve address")?
+        .next()
+        .context("no address")?;
+    let stream = TcpStream::connect_timeout(&addr, timeout)
+        .with_context(|| format!("connect {addr}"))?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let mut writer = stream.try_clone()?;
+    write!(
+        writer,
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    writer.flush()?;
+    read_response(&mut BufReader::new(stream))
+}
+
+/// Default client timeout. Jobs block server-side until completion, so
+/// this bounds an entire simulation request.
+pub const CLIENT_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// `GET path` against `addr`.
+pub fn http_get<A: ToSocketAddrs>(addr: A, path: &str) -> Result<Response> {
+    request(addr, "GET", path, "", CLIENT_TIMEOUT)
+}
+
+/// `POST path` with a JSON body against `addr`.
+pub fn http_post<A: ToSocketAddrs>(addr: A, path: &str, body: &str) -> Result<Response> {
+    request(addr, "POST", path, body, CLIENT_TIMEOUT)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = "POST /v1/simulate HTTP/1.1\r\nHost: x\r\nContent-Length: 11\r\n\r\nhello world";
+        let req = read_request(&mut Cursor::new(raw)).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/simulate");
+        assert_eq!(req.body, "hello world");
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let raw = "GET /healthz HTTP/1.1\r\n\r\n";
+        let req = read_request(&mut Cursor::new(raw)).unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.body, "");
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        for raw in [
+            "",
+            "GARBAGE\r\n\r\n",
+            "GET /x SPDY/3\r\n\r\n",
+            "GET /x HTTP/1.1\r\nno-colon-header\r\n\r\n",
+            "POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n",
+            "POST /x HTTP/1.1\r\nContent-Length: 99\r\n\r\nshort",
+        ] {
+            assert!(read_request(&mut Cursor::new(raw)).is_err(), "{raw:?}");
+        }
+        // Over-limit body is refused before allocation.
+        let huge = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert!(read_request(&mut Cursor::new(huge)).is_err());
+    }
+
+    #[test]
+    fn newline_free_flood_is_capped_at_the_reader() {
+        // A request line that never ends must fail at MAX_HEADER_BYTES,
+        // not buffer the whole stream.
+        let flood = "G".repeat(4 * MAX_HEADER_BYTES);
+        assert!(read_request(&mut Cursor::new(flood)).is_err());
+        // One endless header line is equally bounded.
+        let flood = format!("GET /x HTTP/1.1\r\nX: {}", "y".repeat(4 * MAX_HEADER_BYTES));
+        assert!(read_request(&mut Cursor::new(flood)).is_err());
+        // A request missing its terminating blank line is truncated,
+        // not silently treated as header-complete.
+        let cut = "GET /x HTTP/1.1\r\nHost: a\r\n";
+        assert!(read_request(&mut Cursor::new(cut)).is_err());
+    }
+
+    #[test]
+    fn response_round_trips_through_client_parser() {
+        let mut wire = Vec::new();
+        write_response(&mut wire, 429, r#"{"error":"queue full","retryable":true}"#).unwrap();
+        let resp = read_response(&mut Cursor::new(wire)).unwrap();
+        assert_eq!(resp.status, 429);
+        assert!(resp.body.contains("queue full"));
+    }
+
+    #[test]
+    fn loopback_get_and_post() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            for _ in 0..2 {
+                let (stream, _) = listener.accept().unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let req = read_request(&mut reader).unwrap();
+                let body = format!("{{\"echo\":\"{} {}\",\"len\":{}}}", req.method, req.path, req.body.len());
+                let mut stream = stream;
+                write_response(&mut stream, 200, &body).unwrap();
+            }
+        });
+        let r = http_get(addr, "/healthz").unwrap();
+        assert_eq!(r.status, 200);
+        assert!(r.body.contains("GET /healthz"));
+        let r = http_post(addr, "/v1/simulate", "{\"x\":1}").unwrap();
+        assert!(r.body.contains("\"len\":7"));
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,350 @@
+//! `tao loadgen` — replay mixed scenarios against a running daemon and
+//! measure the serving economics: requests/sec, packed-batch occupancy
+//! (concurrent vs solo), and chunk-cache hit rates, emitted as
+//! `BENCH_serve.json` for the bench-trajectory gate.
+//!
+//! Three phases, each bracketed by `/v1/stats` snapshots:
+//!
+//! 1. **solo** — scenarios one at a time (disjoint seed space): every
+//!    request pads its own tail windows, the per-request occupancy
+//!    baseline.
+//! 2. **concurrent cold** — the full mix from `threads` client
+//!    threads: lanes pack windows across jobs, so occupancy rises and
+//!    the tail padding amortizes across traffic.
+//! 3. **concurrent warm** — the cold mix replayed verbatim: every
+//!    chunk hits the prediction cache; model execution drops to zero.
+//!
+//! `--verify` recomputes every job offline through
+//! [`simulate_chunked`](crate::coordinator::engine::simulate_chunked)
+//! and demands *identical* metrics — cold and warm — which is the
+//! serving subsystem's correctness contract.
+
+use super::http::{http_get, http_post};
+use super::protocol::{
+    artifacts_from_json, error_retryable, resolve_ctx_uarch, JobOutcome, JobSpec,
+    StatsSnapshot,
+};
+use crate::stats::Metrics;
+use crate::util::benchkit::{BenchReport, Measurement};
+use crate::workloads::{mixed_scenarios, ScenarioArtifact, ScenarioJob};
+use anyhow::{bail, ensure, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Loadgen options (see `tao loadgen --help`).
+#[derive(Debug, Clone)]
+pub struct LoadgenOptions {
+    /// Daemon address (`host:port`).
+    pub addr: String,
+    /// Concurrent-phase job count.
+    pub jobs: usize,
+    /// Client threads in the concurrent phases.
+    pub threads: usize,
+    /// Solo-phase job count.
+    pub solo_jobs: usize,
+    /// Base trace length for the mix.
+    pub insts: u64,
+    /// Scenario seed base.
+    pub seed: u64,
+    /// Per-job chunk size (cache granularity).
+    pub chunk: usize,
+    /// Write `BENCH_serve.json` here.
+    pub json_out: Option<PathBuf>,
+    /// Verify every served result against the offline engine, loading
+    /// artifacts from this directory.
+    pub verify_models: Option<PathBuf>,
+    /// Fail unless concurrent occupancy exceeds solo occupancy.
+    pub assert_occupancy: bool,
+    /// POST `/v1/shutdown` when done.
+    pub shutdown_after: bool,
+}
+
+impl Default for LoadgenOptions {
+    fn default() -> LoadgenOptions {
+        LoadgenOptions {
+            addr: "127.0.0.1:8080".into(),
+            jobs: 24,
+            threads: 8,
+            solo_jobs: 6,
+            insts: 150,
+            seed: 42,
+            chunk: 64,
+            json_out: None,
+            verify_models: None,
+            assert_occupancy: false,
+            shutdown_after: false,
+        }
+    }
+}
+
+fn to_spec(j: &ScenarioJob, chunk: usize) -> JobSpec {
+    JobSpec {
+        bench: j.bench.clone(),
+        insts: j.insts,
+        seed: j.seed,
+        artifact: j.artifact.clone(),
+        chunk,
+        ctx_uarch: j.ctx_uarch.clone(),
+    }
+}
+
+/// Submit one job, retrying on retryable backpressure (429/503 during
+/// transient queue-full states), and parse the outcome.
+fn submit(addr: &str, spec: &JobSpec) -> Result<JobOutcome> {
+    let body = spec.to_json();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let resp = http_post(addr, "/v1/simulate", &body)?;
+        match resp.status {
+            200 => return JobOutcome::from_json(&resp.body),
+            429 | 503 if error_retryable(&resp.body) && Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            s => bail!("job {spec:?} failed with {s}: {}", resp.body),
+        }
+    }
+}
+
+fn stats(addr: &str) -> Result<StatsSnapshot> {
+    let resp = http_get(addr, "/v1/stats")?;
+    ensure!(resp.status == 200, "stats returned {}", resp.status);
+    StatsSnapshot::from_json(&resp.body)
+}
+
+/// Run the concurrent phase: `threads` workers pull specs off a shared
+/// cursor and submit; results return in spec order.
+fn run_concurrent(addr: &str, specs: &[JobSpec], threads: usize) -> Result<Vec<JobOutcome>> {
+    let cursor = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<JobOutcome>>> = Mutex::new(vec![None; specs.len()]);
+    let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for _ in 0..threads.max(1) {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= specs.len() {
+                    break;
+                }
+                match submit(addr, &specs[i]) {
+                    Ok(out) => results.lock().expect("results")[i] = Some(out),
+                    Err(e) => errors.lock().expect("errors").push(format!("{e:#}")),
+                }
+            });
+        }
+    });
+    let errors = errors.into_inner().expect("errors");
+    ensure!(errors.is_empty(), "concurrent jobs failed: {}", errors.join("; "));
+    results
+        .into_inner()
+        .expect("results")
+        .into_iter()
+        .map(|o| o.context("missing job result"))
+        .collect()
+}
+
+/// Offline oracle for one job spec: the same (trace, artifact,
+/// chunking) through the single-stream engine. Shared by `--verify`
+/// and the loopback integration tests.
+pub fn offline_reference(spec: &JobSpec, models_dir: &Path) -> Result<Metrics> {
+    use crate::coordinator::engine::simulate_chunked;
+    use crate::functional::FunctionalSim;
+    use crate::runtime::{ModelKind, Session};
+    use crate::trace::OwnedChunkSource;
+
+    let hlo = models_dir.join(format!("{}.hlo.txt", spec.artifact));
+    let mut session = Session::load(&hlo).with_context(|| format!("load {hlo:?}"))?;
+    let program = crate::workloads::by_name(&spec.bench)
+        .with_context(|| format!("unknown benchmark {:?}", spec.bench))?
+        .build(spec.seed);
+    let result = match session.meta().kind {
+        ModelKind::Tao => {
+            let mut src = FunctionalSim::new(&program).into_chunks(spec.insts);
+            simulate_chunked(&mut session, &mut src, spec.chunk, None)?
+        }
+        ModelKind::SimNet => {
+            let sel = spec.ctx_uarch.as_deref().context("SimNet spec without ctx_uarch")?;
+            let cfg = resolve_ctx_uarch(sel)?;
+            let cols = FunctionalSim::new(&program).run(spec.insts).to_columns();
+            let ctx = crate::dataset::simnet_ctx_metrics(&program, &cfg, spec.insts);
+            let mut src = OwnedChunkSource::new(cols, Some(ctx))?;
+            simulate_chunked(&mut session, &mut src, spec.chunk, None)?
+        }
+    };
+    Ok(result.metrics)
+}
+
+/// Exact-equality check between a served outcome and the offline
+/// oracle (all six metric fields, bit for bit).
+pub fn assert_identical(served: &Metrics, offline: &Metrics, tag: &str) -> Result<()> {
+    ensure!(
+        served.instructions == offline.instructions
+            && served.cycles == offline.cycles
+            && served.mispredicts == offline.mispredicts
+            && served.l1d_misses == offline.l1d_misses
+            && served.l1i_misses == offline.l1i_misses
+            && served.tlb_misses == offline.tlb_misses,
+        "{tag}: served metrics diverge from offline: served={served:?} offline={offline:?}"
+    );
+    Ok(())
+}
+
+fn verify_all(specs: &[JobSpec], outs: &[JobOutcome], dir: &Path, phase: &str) -> Result<()> {
+    for (spec, out) in specs.iter().zip(outs) {
+        let offline = offline_reference(spec, dir)?;
+        assert_identical(
+            &out.metrics,
+            &offline,
+            &format!("{phase} {}/{}@{}", spec.bench, spec.artifact, spec.seed),
+        )?;
+    }
+    Ok(())
+}
+
+fn phase_case(name: &str, insts: u64, elapsed: Duration) -> Measurement {
+    let ns = elapsed.as_nanos() as f64;
+    Measurement { name: name.into(), items: insts, mean_ns: ns, min_ns: ns, max_ns: ns }
+}
+
+/// Run the full loadgen sweep. Returns the final report (also written
+/// to `--json` when configured).
+pub fn run_loadgen(opts: &LoadgenOptions) -> Result<BenchReport> {
+    ensure!(opts.jobs >= 1, "--jobs must be at least 1");
+    ensure!(
+        opts.solo_jobs >= 1,
+        "--solo-jobs must be at least 1 (the solo phase is the occupancy baseline)"
+    );
+    ensure!(opts.insts >= 2, "--insts must be at least 2");
+    let addr = opts.addr.as_str();
+    let health = http_get(addr, "/healthz").context("daemon unreachable")?;
+    ensure!(health.status == 200, "daemon unhealthy: {}", health.status);
+    let arts_resp = http_get(addr, "/v1/artifacts")?;
+    ensure!(arts_resp.status == 200, "artifact listing failed");
+    let arts: Vec<ScenarioArtifact> = artifacts_from_json(&arts_resp.body)?
+        .into_iter()
+        .map(|a| ScenarioArtifact { simnet: a.is_simnet(), name: a.name })
+        .collect();
+    ensure!(!arts.is_empty(), "daemon serves no artifacts");
+    eprintln!(
+        "loadgen: {} artifact(s) at {addr}: {}",
+        arts.len(),
+        arts.iter().map(|a| a.name.as_str()).collect::<Vec<_>>().join(", ")
+    );
+
+    let mut report = BenchReport::new();
+
+    // Phase 1: solo (disjoint seed space so it cannot warm phase 2/3).
+    let solo_specs: Vec<JobSpec> =
+        mixed_scenarios(&arts, opts.solo_jobs, opts.insts, opts.seed + 500_000)
+            .iter()
+            .map(|j| to_spec(j, opts.chunk))
+            .collect();
+    let before = stats(addr)?;
+    let t0 = Instant::now();
+    let mut solo_outs = Vec::new();
+    for spec in &solo_specs {
+        solo_outs.push(submit(addr, spec)?);
+    }
+    let solo_elapsed = t0.elapsed();
+    let solo_delta = stats(addr)?.delta_from(&before);
+    let solo_insts: u64 = solo_specs.iter().map(|s| s.insts).sum();
+    report.push(phase_case("serve/solo", solo_insts, solo_elapsed));
+    report.metric("occupancy_solo", solo_delta.occupancy());
+
+    // Phase 2: concurrent, cold cache (fresh seed space).
+    let specs: Vec<JobSpec> = mixed_scenarios(&arts, opts.jobs, opts.insts, opts.seed)
+        .iter()
+        .map(|j| to_spec(j, opts.chunk))
+        .collect();
+    let total_insts: u64 = specs.iter().map(|s| s.insts).sum();
+    let before = stats(addr)?;
+    let t0 = Instant::now();
+    let cold_outs = run_concurrent(addr, &specs, opts.threads)?;
+    let cold_elapsed = t0.elapsed();
+    let cold_delta = stats(addr)?.delta_from(&before);
+    report.push(phase_case("serve/concurrent_cold", total_insts, cold_elapsed));
+    report.metric("occupancy_concurrent", cold_delta.occupancy());
+    report.metric(
+        "requests_per_sec_cold",
+        specs.len() as f64 / cold_elapsed.as_secs_f64().max(1e-9),
+    );
+
+    // Phase 3: concurrent, warm cache (identical specs).
+    let before = stats(addr)?;
+    let t0 = Instant::now();
+    let warm_outs = run_concurrent(addr, &specs, opts.threads)?;
+    let warm_elapsed = t0.elapsed();
+    let warm_delta = stats(addr)?.delta_from(&before);
+    report.push(phase_case("serve/concurrent_warm", total_insts, warm_elapsed));
+    let warm_lookups = warm_delta.cache_hits + warm_delta.cache_misses;
+    report.metric(
+        "cache_hit_rate_warm",
+        warm_delta.cache_hits as f64 / (warm_lookups.max(1)) as f64,
+    );
+    report.metric(
+        "requests_per_sec_warm",
+        specs.len() as f64 / warm_elapsed.as_secs_f64().max(1e-9),
+    );
+    report.metric(
+        "warm_speedup",
+        cold_elapsed.as_secs_f64() / warm_elapsed.as_secs_f64().max(1e-9),
+    );
+
+    eprintln!(
+        "loadgen: solo occupancy {:.1}% over {} batches; concurrent {:.1}% over {}; \
+         warm hit-rate {:.1}% ({} hits)",
+        solo_delta.occupancy() * 100.0,
+        solo_delta.batches,
+        cold_delta.occupancy() * 100.0,
+        cold_delta.batches,
+        100.0 * warm_delta.cache_hits as f64 / warm_lookups.max(1) as f64,
+        warm_delta.cache_hits,
+    );
+
+    if let Some(dir) = &opts.verify_models {
+        verify_all(&solo_specs, &solo_outs, dir, "solo")?;
+        verify_all(&specs, &cold_outs, dir, "cold")?;
+        verify_all(&specs, &warm_outs, dir, "warm")?;
+        // Warm-vs-cold served results must agree with each other too
+        // (same spec, cache on vs off the path).
+        for ((spec, cold), warm) in specs.iter().zip(&cold_outs).zip(&warm_outs) {
+            assert_identical(
+                &warm.metrics,
+                &cold.metrics,
+                &format!("warm-vs-cold {}/{}", spec.bench, spec.artifact),
+            )?;
+        }
+        // Only demand warm hits when the daemon actually caches
+        // (`--cache-entries 0` is a supported configuration and the
+        // equality checks above still hold there).
+        if warm_delta.cache_entries > 0 {
+            ensure!(
+                warm_delta.cache_hits > 0,
+                "warm phase produced no cache hits — cache is not engaging"
+            );
+        }
+        eprintln!(
+            "loadgen: verified {} served results identical to offline engine runs",
+            solo_specs.len() + 2 * specs.len()
+        );
+    }
+
+    if opts.assert_occupancy {
+        ensure!(
+            cold_delta.occupancy() > solo_delta.occupancy(),
+            "packed occupancy {:.3} did not exceed solo occupancy {:.3}",
+            cold_delta.occupancy(),
+            solo_delta.occupancy()
+        );
+    }
+
+    if let Some(path) = &opts.json_out {
+        report.write_json(path).with_context(|| format!("write {path:?}"))?;
+        eprintln!("loadgen: wrote {}", path.display());
+    }
+    if opts.shutdown_after {
+        let resp = http_post(addr, "/v1/shutdown", "")?;
+        ensure!(resp.status == 200, "shutdown returned {}", resp.status);
+    }
+    Ok(report)
+}

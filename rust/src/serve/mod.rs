@@ -1,0 +1,41 @@
+//! `tao serve` — the concurrent simulation service (Layer 3's
+//! always-on face).
+//!
+//! The paper's economics say a functional trace is generated once and
+//! reused across microarchitectures; NeuroScalar frames DL performance
+//! prediction as an in-the-wild *service*, not an offline tool. This
+//! subsystem turns the PR 1–3 streaming pipeline into that service: a
+//! multi-client daemon speaking hand-rolled HTTP/1.1 + `util::json`
+//! over `std::net` (zero new dependencies), built from five pieces:
+//!
+//! * [`protocol`] — wire types; bit-exact `f64` metric round-trips.
+//! * [`http`] — the minimal HTTP/1.1 server/client layer.
+//! * [`queue`] — bounded admission with backpressure (429/503s
+//!   instead of unbounded memory).
+//! * [`scheduler`] — per-artifact lanes that pack context windows
+//!   **across concurrent jobs** into the fixed-`B` model batch and
+//!   demux outputs to per-job accumulators; double-buffered executor
+//!   threads overlap staging with model execution.
+//! * [`cache`] — the LRU chunk-level prediction cache keyed by
+//!   (artifact, warm-up prefix, chunk content): repeated trace regions
+//!   across requests and design sweeps skip model execution entirely,
+//!   with results *identical* to the offline engine.
+//!
+//! [`server`] wires them together; [`loadgen`] is the measurement
+//! client (`BENCH_serve.json`); [`cli`] holds the `tao serve` /
+//! `tao loadgen` entry points.
+
+pub mod cache;
+pub mod cli;
+pub mod http;
+pub mod loadgen;
+pub mod protocol;
+pub mod queue;
+pub mod scheduler;
+pub mod server;
+
+pub use cache::PredictionCache;
+pub use protocol::{JobOutcome, JobSpec, StatsSnapshot};
+pub use queue::JobQueue;
+pub use scheduler::{LaneConfig, ServeCounters};
+pub use server::{Server, ServeConfig};

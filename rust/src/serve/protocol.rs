@@ -1,0 +1,583 @@
+//! The `tao serve` wire protocol: JSON request/response bodies.
+//!
+//! Everything rides the repo's hand-rolled [`util::json`](crate::util::json)
+//! — no serde. Requests parse strictly (unknown benchmarks, artifacts
+//! and malformed fields are rejected with 400s before admission);
+//! responses render deterministically (sorted keys) and `f64` metric
+//! sums round-trip bit-exactly, which is what lets clients assert
+//! served results *identical* to offline runs.
+//!
+//! Endpoints (see docs/SERVE.md for the full reference):
+//!
+//! * `POST /v1/simulate` — body [`JobSpec`]; blocks until the job
+//!   completes; 200 with [`JobOutcome`], 429 when the admission queue
+//!   is full (retryable), 503 while draining (retryable).
+//! * `GET  /v1/stats` — serving counters (queue, packing occupancy,
+//!   cache hit rates).
+//! * `POST /v1/shutdown` — begin graceful drain.
+//! * `GET  /healthz` — liveness.
+
+use crate::stats::Metrics;
+use crate::uarch::UarchConfig;
+use crate::util::json::Json;
+use anyhow::{ensure, Context, Result};
+
+/// Default per-job streaming chunk (instructions per cache unit).
+pub const DEFAULT_CHUNK: usize = 4_096;
+
+/// A simulation request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// Benchmark short name (`workloads::by_name`).
+    pub bench: String,
+    /// Instructions to simulate.
+    pub insts: u64,
+    /// Trace seed.
+    pub seed: u64,
+    /// Artifact registry name (the `.hlo.txt` stem the daemon loaded).
+    pub artifact: String,
+    /// Streaming chunk size — also the prediction-cache granularity.
+    pub chunk: usize,
+    /// Detailed design providing SimNet's µarch-specific context input:
+    /// a preset name (`a`, `uarch_b`, ...) or `design:<index>` into the
+    /// Table 3 space. Required for SimNet artifacts, ignored for Tao.
+    pub ctx_uarch: Option<String>,
+}
+
+/// Largest integer the JSON number channel carries exactly (`f64`
+/// mantissa). User-controlled u64 fields are rejected above this
+/// rather than silently rounded.
+pub const MAX_SAFE_JSON_INT: u64 = 1 << 53;
+
+impl JobSpec {
+    /// Parse a `/v1/simulate` body.
+    pub fn from_json(text: &str) -> Result<JobSpec> {
+        let j = Json::parse(text).context("malformed JSON body")?;
+        let spec = JobSpec {
+            bench: j.req_str("bench")?.to_string(),
+            insts: j.req_u64("insts")?,
+            seed: j.get("seed").and_then(Json::as_u64).unwrap_or(42),
+            artifact: j.req_str("artifact")?.to_string(),
+            chunk: j.get("chunk").and_then(Json::as_u64).unwrap_or(DEFAULT_CHUNK as u64)
+                as usize,
+            ctx_uarch: j.get("ctx_uarch").and_then(Json::as_str).map(str::to_string),
+        };
+        ensure!(spec.insts >= 1, "insts must be positive");
+        ensure!(spec.chunk >= 1, "chunk must be positive");
+        for (name, v) in [
+            ("insts", spec.insts),
+            ("seed", spec.seed),
+            ("chunk", spec.chunk as u64),
+        ] {
+            ensure!(
+                v <= MAX_SAFE_JSON_INT,
+                "{name} {v} exceeds the exact JSON integer range (2^53)"
+            );
+        }
+        Ok(spec)
+    }
+
+    /// Render as a `/v1/simulate` body.
+    pub fn to_json(&self) -> String {
+        let mut pairs = vec![
+            ("bench", Json::of_str(&self.bench)),
+            ("insts", Json::of_u64(self.insts)),
+            ("seed", Json::of_u64(self.seed)),
+            ("artifact", Json::of_str(&self.artifact)),
+            ("chunk", Json::of_u64(self.chunk as u64)),
+        ];
+        if let Some(u) = &self.ctx_uarch {
+            pairs.push(("ctx_uarch", Json::of_str(u)));
+        }
+        Json::obj(pairs).render()
+    }
+}
+
+/// Resolve a [`JobSpec::ctx_uarch`] selector: a µarch preset name or
+/// `design:<index>` into the paper's Table 3 design space.
+pub fn resolve_ctx_uarch(spec: &str) -> Result<UarchConfig> {
+    if let Some(idx) = spec.strip_prefix("design:") {
+        let idx: u64 = idx.parse().with_context(|| format!("bad design index {idx:?}"))?;
+        let space = crate::dse::DesignSpace::table3();
+        ensure!(
+            idx < space.count(),
+            "design index {idx} out of range (Table 3 has {})",
+            space.count()
+        );
+        return Ok(space.design(idx));
+    }
+    UarchConfig::preset(spec).with_context(|| format!("unknown uarch {spec:?}"))
+}
+
+/// A completed job's response body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobOutcome {
+    /// Server-assigned job id.
+    pub job_id: u64,
+    /// Predicted run-level metrics.
+    pub metrics: Metrics,
+    /// Windows this job contributed to packed batches (cache hits
+    /// contribute none).
+    pub windows: u64,
+    /// Prediction-cache chunk hits for this job.
+    pub cache_hits: u64,
+    /// Prediction-cache chunk misses for this job.
+    pub cache_misses: u64,
+    /// Wall-clock from admission to completion, milliseconds.
+    pub elapsed_ms: f64,
+}
+
+fn metrics_json(m: &Metrics) -> Json {
+    Json::obj([
+        ("instructions", Json::of_u64(m.instructions)),
+        ("cycles", Json::Num(m.cycles)),
+        ("mispredicts", Json::Num(m.mispredicts)),
+        ("l1d_misses", Json::Num(m.l1d_misses)),
+        ("l1i_misses", Json::Num(m.l1i_misses)),
+        ("tlb_misses", Json::Num(m.tlb_misses)),
+        ("cpi", Json::Num(m.cpi())),
+    ])
+}
+
+fn metrics_from_json(j: &Json) -> Result<Metrics> {
+    Ok(Metrics {
+        instructions: j.req_u64("instructions")?,
+        cycles: j.req_f64("cycles")?,
+        mispredicts: j.req_f64("mispredicts")?,
+        l1d_misses: j.req_f64("l1d_misses")?,
+        l1i_misses: j.req_f64("l1i_misses")?,
+        tlb_misses: j.req_f64("tlb_misses")?,
+    })
+}
+
+impl JobOutcome {
+    /// Render the 200 response body.
+    pub fn to_json(&self) -> String {
+        Json::obj([
+            ("job_id", Json::of_u64(self.job_id)),
+            ("metrics", metrics_json(&self.metrics)),
+            ("windows", Json::of_u64(self.windows)),
+            (
+                "cache",
+                Json::obj([
+                    ("hits", Json::of_u64(self.cache_hits)),
+                    ("misses", Json::of_u64(self.cache_misses)),
+                ]),
+            ),
+            ("elapsed_ms", Json::Num(self.elapsed_ms)),
+        ])
+        .render()
+    }
+
+    /// Parse a 200 response body.
+    pub fn from_json(text: &str) -> Result<JobOutcome> {
+        let j = Json::parse(text).context("malformed job outcome")?;
+        let cache = j.get("cache").context("missing cache")?;
+        Ok(JobOutcome {
+            job_id: j.req_u64("job_id")?,
+            metrics: metrics_from_json(j.get("metrics").context("missing metrics")?)?,
+            windows: j.req_u64("windows")?,
+            cache_hits: cache.req_u64("hits")?,
+            cache_misses: cache.req_u64("misses")?,
+            elapsed_ms: j.req_f64("elapsed_ms")?,
+        })
+    }
+}
+
+/// An error response body (any non-200 status).
+pub fn error_body(message: &str, retryable: bool) -> String {
+    Json::obj([
+        ("error", Json::of_str(message)),
+        ("retryable", Json::Bool(retryable)),
+    ])
+    .render()
+}
+
+/// Parse an error body's `retryable` flag (false when absent/garbled).
+pub fn error_retryable(text: &str) -> bool {
+    Json::parse(text)
+        .ok()
+        .and_then(|j| match j.get("retryable") {
+            Some(Json::Bool(b)) => Some(*b),
+            _ => None,
+        })
+        .unwrap_or(false)
+}
+
+/// Snapshot of the daemon's serving counters (`GET /v1/stats`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StatsSnapshot {
+    /// Jobs accepted into the queue.
+    pub jobs_submitted: u64,
+    /// Jobs completed (response sent).
+    pub jobs_done: u64,
+    /// Jobs rejected by admission control (queue full / draining).
+    pub jobs_rejected: u64,
+    /// Jobs queued, not yet admitted to a lane.
+    pub queue_depth: u64,
+    /// Jobs currently active inside lanes.
+    pub active_jobs: u64,
+    /// Model batches executed.
+    pub batches: u64,
+    /// Windows packed into those batches.
+    pub packed_windows: u64,
+    /// Slots available in those batches (Σ per-lane `B`).
+    pub batch_slots: u64,
+    /// Prediction-cache hits.
+    pub cache_hits: u64,
+    /// Prediction-cache misses.
+    pub cache_misses: u64,
+    /// Prediction-cache evictions.
+    pub cache_evictions: u64,
+    /// Prediction-cache resident entries.
+    pub cache_entries: u64,
+}
+
+impl StatsSnapshot {
+    /// Mean packed-batch occupancy in `[0, 1]` (1.0 when no batch ran).
+    pub fn occupancy(&self) -> f64 {
+        if self.batch_slots == 0 {
+            1.0
+        } else {
+            self.packed_windows as f64 / self.batch_slots as f64
+        }
+    }
+
+    /// Counter-wise difference (`self - earlier`) for phase deltas.
+    pub fn delta_from(&self, earlier: &StatsSnapshot) -> StatsSnapshot {
+        StatsSnapshot {
+            jobs_submitted: self.jobs_submitted - earlier.jobs_submitted,
+            jobs_done: self.jobs_done - earlier.jobs_done,
+            jobs_rejected: self.jobs_rejected - earlier.jobs_rejected,
+            queue_depth: self.queue_depth,
+            active_jobs: self.active_jobs,
+            batches: self.batches - earlier.batches,
+            packed_windows: self.packed_windows - earlier.packed_windows,
+            batch_slots: self.batch_slots - earlier.batch_slots,
+            cache_hits: self.cache_hits - earlier.cache_hits,
+            cache_misses: self.cache_misses - earlier.cache_misses,
+            cache_evictions: self.cache_evictions - earlier.cache_evictions,
+            cache_entries: self.cache_entries,
+        }
+    }
+
+    /// Render the `/v1/stats` body.
+    pub fn to_json(&self) -> String {
+        Json::obj([
+            ("jobs_submitted", Json::of_u64(self.jobs_submitted)),
+            ("jobs_done", Json::of_u64(self.jobs_done)),
+            ("jobs_rejected", Json::of_u64(self.jobs_rejected)),
+            ("queue_depth", Json::of_u64(self.queue_depth)),
+            ("active_jobs", Json::of_u64(self.active_jobs)),
+            ("batches", Json::of_u64(self.batches)),
+            ("packed_windows", Json::of_u64(self.packed_windows)),
+            ("batch_slots", Json::of_u64(self.batch_slots)),
+            ("occupancy", Json::Num(self.occupancy())),
+            ("cache_hits", Json::of_u64(self.cache_hits)),
+            ("cache_misses", Json::of_u64(self.cache_misses)),
+            ("cache_evictions", Json::of_u64(self.cache_evictions)),
+            ("cache_entries", Json::of_u64(self.cache_entries)),
+        ])
+        .render()
+    }
+
+    /// Parse a `/v1/stats` body.
+    pub fn from_json(text: &str) -> Result<StatsSnapshot> {
+        let j = Json::parse(text).context("malformed stats")?;
+        Ok(StatsSnapshot {
+            jobs_submitted: j.req_u64("jobs_submitted")?,
+            jobs_done: j.req_u64("jobs_done")?,
+            jobs_rejected: j.req_u64("jobs_rejected")?,
+            queue_depth: j.req_u64("queue_depth")?,
+            active_jobs: j.req_u64("active_jobs")?,
+            batches: j.req_u64("batches")?,
+            packed_windows: j.req_u64("packed_windows")?,
+            batch_slots: j.req_u64("batch_slots")?,
+            cache_hits: j.req_u64("cache_hits")?,
+            cache_misses: j.req_u64("cache_misses")?,
+            cache_evictions: j.req_u64("cache_evictions")?,
+            cache_entries: j.req_u64("cache_entries")?,
+        })
+    }
+}
+
+/// One artifact's registry entry (`GET /v1/artifacts`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactInfo {
+    /// Registry name requests use.
+    pub name: String,
+    /// `"tao"` or `"simnet"`.
+    pub kind: String,
+    /// Fixed model batch `B`.
+    pub batch: u64,
+    /// Context window `T`.
+    pub context: u64,
+}
+
+impl ArtifactInfo {
+    /// True for SimNet artifacts (which need `ctx_uarch`).
+    pub fn is_simnet(&self) -> bool {
+        self.kind == "simnet"
+    }
+}
+
+/// Render the `/v1/artifacts` body from the daemon's pool.
+pub fn artifacts_json(pool: &crate::runtime::ArtifactPool) -> String {
+    let items: Vec<Json> = pool
+        .iter()
+        .map(|a| {
+            Json::obj([
+                ("name", Json::of_str(&a.name)),
+                (
+                    "kind",
+                    Json::of_str(match a.meta.kind {
+                        crate::runtime::ModelKind::Tao => "tao",
+                        crate::runtime::ModelKind::SimNet => "simnet",
+                    }),
+                ),
+                ("batch", Json::of_u64(a.meta.batch as u64)),
+                ("context", Json::of_u64(a.meta.context as u64)),
+            ])
+        })
+        .collect();
+    Json::obj([("artifacts", Json::Arr(items))]).render()
+}
+
+/// Parse a `/v1/artifacts` body.
+pub fn artifacts_from_json(text: &str) -> Result<Vec<ArtifactInfo>> {
+    let j = Json::parse(text).context("malformed artifacts body")?;
+    let items = j
+        .get("artifacts")
+        .and_then(Json::as_arr)
+        .context("missing artifacts array")?;
+    items
+        .iter()
+        .map(|a| {
+            Ok(ArtifactInfo {
+                name: a.req_str("name")?.to_string(),
+                kind: a.req_str("kind")?.to_string(),
+                batch: a.req_u64("batch")?,
+                context: a.req_u64("context")?,
+            })
+        })
+        .collect()
+}
+
+/// Admission ceiling for SimNet jobs, regardless of `--max-insts`.
+/// Unlike Tao jobs (generator-backed, O(chunk) resident), a SimNet job
+/// materializes its functional trace *and* its detailed-sim context
+/// array up front (~51 B/instruction resident for the job's lifetime),
+/// so the streaming-sized default limit would let a handful of
+/// requests blow the daemon's memory envelope.
+pub const SIMNET_MAX_INSTS: u64 = 1_000_000;
+
+/// Validate a parsed spec against the server's registries (bench and
+/// artifact existence, kind/ctx pairing, admission size limits).
+/// Returns the artifact's model kind on success.
+pub fn validate_spec(
+    spec: &JobSpec,
+    pool: &crate::runtime::ArtifactPool,
+    max_insts: u64,
+) -> Result<crate::runtime::ModelKind> {
+    ensure!(
+        crate::workloads::by_name(&spec.bench).is_some(),
+        "unknown benchmark {:?}",
+        spec.bench
+    );
+    ensure!(
+        spec.insts <= max_insts,
+        "insts {} exceeds the admission limit {max_insts}",
+        spec.insts
+    );
+    let art = pool
+        .get(&spec.artifact)
+        .with_context(|| format!("unknown artifact {:?}", spec.artifact))?;
+    match art.meta.kind {
+        crate::runtime::ModelKind::SimNet => {
+            let cap = max_insts.min(SIMNET_MAX_INSTS);
+            ensure!(
+                spec.insts <= cap,
+                "insts {} exceeds the SimNet admission limit {cap} \
+                 (SimNet jobs hold their trace + detailed context resident)",
+                spec.insts
+            );
+            let sel = spec
+                .ctx_uarch
+                .as_deref()
+                .context("SimNet artifacts require ctx_uarch (a preset or design:<index>)")?;
+            resolve_ctx_uarch(sel)?;
+        }
+        crate::runtime::ModelKind::Tao => {}
+    }
+    Ok(art.meta.kind)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_spec_round_trips() {
+        let spec = JobSpec {
+            bench: "mcf".into(),
+            insts: 5_000,
+            seed: 7,
+            artifact: "tao_a".into(),
+            chunk: 257,
+            ctx_uarch: Some("design:123".into()),
+        };
+        assert_eq!(JobSpec::from_json(&spec.to_json()).unwrap(), spec);
+        // Defaults fill in.
+        let min = JobSpec::from_json(r#"{"bench":"mcf","insts":10,"artifact":"x"}"#).unwrap();
+        assert_eq!(min.seed, 42);
+        assert_eq!(min.chunk, DEFAULT_CHUNK);
+        assert_eq!(min.ctx_uarch, None);
+        // Degenerate values rejected.
+        assert!(JobSpec::from_json(r#"{"bench":"mcf","insts":0,"artifact":"x"}"#).is_err());
+        assert!(
+            JobSpec::from_json(r#"{"bench":"mcf","insts":1,"artifact":"x","chunk":0}"#).is_err()
+        );
+        assert!(JobSpec::from_json("{nope").is_err());
+        // Integers past the exact f64 range are rejected, not rounded.
+        let big = format!(
+            r#"{{"bench":"mcf","insts":10,"artifact":"x","seed":{}}}"#,
+            (1u64 << 53) + 2
+        );
+        assert!(JobSpec::from_json(&big).is_err(), "oversized seed must be rejected");
+    }
+
+    #[test]
+    fn job_outcome_round_trips_exact_metrics() {
+        let out = JobOutcome {
+            job_id: 9,
+            metrics: Metrics {
+                instructions: 12_345,
+                cycles: 98765.432109876,
+                mispredicts: 1.0 / 3.0,
+                l1d_misses: 0.1 + 0.2,
+                l1i_misses: 0.0,
+                tlb_misses: 17.25,
+            },
+            windows: 12_000,
+            cache_hits: 2,
+            cache_misses: 3,
+            elapsed_ms: 12.5,
+        };
+        let back = JobOutcome::from_json(&out.to_json()).unwrap();
+        assert_eq!(back.metrics.cycles.to_bits(), out.metrics.cycles.to_bits());
+        assert_eq!(back.metrics.mispredicts.to_bits(), out.metrics.mispredicts.to_bits());
+        assert_eq!(back, out);
+    }
+
+    #[test]
+    fn stats_round_trip_and_occupancy() {
+        let s = StatsSnapshot {
+            batches: 10,
+            packed_windows: 600,
+            batch_slots: 640,
+            ..Default::default()
+        };
+        assert!((s.occupancy() - 0.9375).abs() < 1e-12);
+        let back = StatsSnapshot::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        let earlier = StatsSnapshot {
+            batches: 4,
+            packed_windows: 100,
+            batch_slots: 256,
+            ..Default::default()
+        };
+        let d = back.delta_from(&earlier);
+        assert_eq!(d.batches, 6);
+        assert_eq!(d.packed_windows, 500);
+    }
+
+    #[test]
+    fn ctx_uarch_selectors_resolve() {
+        assert_eq!(resolve_ctx_uarch("a").unwrap().name, "uarch_a");
+        let d = resolve_ctx_uarch("design:12345").unwrap();
+        assert_eq!(d.name, "design_12345");
+        assert!(resolve_ctx_uarch("design:999999999").is_err());
+        assert!(resolve_ctx_uarch("design:abc").is_err());
+        assert!(resolve_ctx_uarch("zz").is_err());
+    }
+
+    #[test]
+    fn error_bodies_carry_retryability() {
+        assert!(error_retryable(&error_body("queue full", true)));
+        assert!(!error_retryable(&error_body("bad request", false)));
+        assert!(!error_retryable("garbage"));
+    }
+
+    #[test]
+    fn artifact_listing_round_trips() {
+        let dir = std::env::temp_dir().join(format!("tao-proto-{}", std::process::id()));
+        let a = crate::runtime::write_surrogate_artifact(&dir, "al_tao", 16, 8).unwrap();
+        let b = crate::runtime::write_surrogate_artifact_kind(
+            &dir,
+            "al_sn",
+            crate::runtime::ModelKind::SimNet,
+            32,
+            4,
+        )
+        .unwrap();
+        let pool = crate::runtime::ArtifactPool::load(&[a, b]).unwrap();
+        let infos = artifacts_from_json(&artifacts_json(&pool)).unwrap();
+        assert_eq!(infos.len(), 2);
+        assert_eq!(infos[0].name, "al_tao");
+        assert!(!infos[0].is_simnet());
+        assert_eq!(infos[0].batch, 16);
+        assert!(infos[1].is_simnet());
+        assert_eq!(infos[1].context, 4);
+    }
+
+    #[test]
+    fn validate_spec_checks_registries() {
+        let dir = std::env::temp_dir()
+            .join(format!("tao-proto-{}", std::process::id()));
+        let tao =
+            crate::runtime::write_surrogate_artifact(&dir, "vp_tao", 4, 8).unwrap();
+        let sn = crate::runtime::write_surrogate_artifact_kind(
+            &dir,
+            "vp_sn",
+            crate::runtime::ModelKind::SimNet,
+            4,
+            8,
+        )
+        .unwrap();
+        let pool = crate::runtime::ArtifactPool::load(&[tao, sn]).unwrap();
+        let mut spec = JobSpec {
+            bench: "mcf".into(),
+            insts: 100,
+            seed: 1,
+            artifact: "vp_tao".into(),
+            chunk: 64,
+            ctx_uarch: None,
+        };
+        assert_eq!(
+            validate_spec(&spec, &pool, 1_000).unwrap(),
+            crate::runtime::ModelKind::Tao
+        );
+        spec.insts = 2_000;
+        assert!(validate_spec(&spec, &pool, 1_000).is_err(), "admission size limit");
+        spec.insts = 100;
+        spec.bench = "nope".into();
+        assert!(validate_spec(&spec, &pool, 1_000).is_err());
+        spec.bench = "mcf".into();
+        spec.artifact = "missing".into();
+        assert!(validate_spec(&spec, &pool, 1_000).is_err());
+        spec.artifact = "vp_sn".into();
+        assert!(validate_spec(&spec, &pool, 1_000).is_err(), "SimNet needs ctx_uarch");
+        spec.ctx_uarch = Some("b".into());
+        assert_eq!(
+            validate_spec(&spec, &pool, 1_000).unwrap(),
+            crate::runtime::ModelKind::SimNet
+        );
+        // SimNet jobs get the tighter resident-trace ceiling even when
+        // the general limit is huge.
+        spec.insts = SIMNET_MAX_INSTS + 1;
+        assert!(validate_spec(&spec, &pool, u64::MAX).is_err(), "SimNet resident cap");
+        spec.artifact = "vp_tao".into();
+        spec.ctx_uarch = None;
+        assert!(validate_spec(&spec, &pool, u64::MAX).is_ok(), "Tao streams past the cap");
+    }
+}

@@ -1,0 +1,219 @@
+//! Bounded admission queue for simulation jobs.
+//!
+//! Backpressure happens here, not in the socket layer: the queue holds
+//! at most `capacity` pending jobs; a submit against a full queue fails
+//! immediately and the HTTP handler turns that into a retryable 429,
+//! so heavy traffic degrades into fast rejections instead of unbounded
+//! memory growth. Closing the queue (graceful drain) fails *new*
+//! submits with a retryable 503 while lanes keep popping until the
+//! backlog — jobs the server already accepted — is empty.
+//!
+//! Lanes pop selectively by artifact name ([`JobQueue::pop_for`]): one
+//! queue serves every lane, and the bound covers the whole daemon.
+
+use super::protocol::{JobOutcome, JobSpec};
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// A job admitted to the queue: the parsed spec plus the channel the
+/// lane answers on (the HTTP handler blocks on the receiver).
+pub struct QueuedJob {
+    /// Parsed, validated request.
+    pub spec: JobSpec,
+    /// Completion channel back to the waiting connection handler.
+    pub done: std::sync::mpsc::Sender<Result<JobOutcome, String>>,
+    /// Admission timestamp (for `elapsed_ms`).
+    pub admitted_at: Instant,
+}
+
+/// Why a submit was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The queue is at capacity — retry later.
+    Full,
+    /// The daemon is draining — retry against another instance.
+    Closed,
+}
+
+struct State {
+    pending: VecDeque<QueuedJob>,
+    closed: bool,
+}
+
+/// The shared bounded queue.
+pub struct JobQueue {
+    state: Mutex<State>,
+    cond: Condvar,
+    capacity: usize,
+}
+
+impl JobQueue {
+    /// Queue admitting at most `capacity` pending jobs.
+    pub fn new(capacity: usize) -> JobQueue {
+        assert!(capacity >= 1, "queue capacity must be positive");
+        JobQueue {
+            state: Mutex::new(State { pending: VecDeque::new(), closed: false }),
+            cond: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Admit a job, or refuse with backpressure. On refusal the job is
+    /// handed back so the caller can answer its completion channel.
+    pub fn submit(&self, job: QueuedJob) -> Result<(), (QueuedJob, SubmitError)> {
+        let mut st = self.state.lock().expect("queue poisoned");
+        if st.closed {
+            return Err((job, SubmitError::Closed));
+        }
+        if st.pending.len() >= self.capacity {
+            return Err((job, SubmitError::Full));
+        }
+        st.pending.push_back(job);
+        drop(st);
+        self.cond.notify_all();
+        Ok(())
+    }
+
+    /// Pop the oldest pending job whose spec targets `artifact`,
+    /// waiting up to `timeout` for one to arrive. Returns `None` on
+    /// timeout or when the queue is closed with no matching job left.
+    pub fn pop_for(&self, artifact: &str, timeout: Duration) -> Option<QueuedJob> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().expect("queue poisoned");
+        loop {
+            if let Some(i) = st.pending.iter().position(|j| j.spec.artifact == artifact) {
+                return st.pending.remove(i);
+            }
+            if st.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (next, timed_out) = self
+                .cond
+                .wait_timeout(st, deadline - now)
+                .expect("queue poisoned");
+            st = next;
+            if timed_out.timed_out() && st.pending.iter().all(|j| j.spec.artifact != artifact)
+            {
+                return None;
+            }
+        }
+    }
+
+    /// Begin draining: new submits fail with [`SubmitError::Closed`];
+    /// already-admitted jobs stay poppable.
+    pub fn close(&self) {
+        self.state.lock().expect("queue poisoned").closed = true;
+        self.cond.notify_all();
+    }
+
+    /// True once [`JobQueue::close`] has run.
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().expect("queue poisoned").closed
+    }
+
+    /// True when closed and fully drained (lanes may exit).
+    pub fn is_drained(&self) -> bool {
+        let st = self.state.lock().expect("queue poisoned");
+        st.closed && st.pending.is_empty()
+    }
+
+    /// Jobs waiting for a lane.
+    pub fn depth(&self) -> usize {
+        self.state.lock().expect("queue poisoned").pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn job(artifact: &str) -> (QueuedJob, mpsc::Receiver<Result<JobOutcome, String>>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            QueuedJob {
+                spec: JobSpec {
+                    bench: "mcf".into(),
+                    insts: 10,
+                    seed: 1,
+                    artifact: artifact.into(),
+                    chunk: 8,
+                    ctx_uarch: None,
+                },
+                done: tx,
+                admitted_at: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let q = JobQueue::new(2);
+        let (j1, _r1) = job("a");
+        let (j2, _r2) = job("a");
+        let (j3, _r3) = job("a");
+        assert!(q.submit(j1).is_ok());
+        assert!(q.submit(j2).is_ok());
+        match q.submit(j3) {
+            Err((_, SubmitError::Full)) => {}
+            other => panic!("expected Full, got {:?}", other.map(|_| ()).map_err(|(_, e)| e)),
+        }
+        assert_eq!(q.depth(), 2);
+        // Popping frees a slot.
+        assert!(q.pop_for("a", Duration::from_millis(10)).is_some());
+        let (j4, _r4) = job("a");
+        assert!(q.submit(j4).is_ok());
+    }
+
+    #[test]
+    fn pop_filters_by_artifact() {
+        let q = JobQueue::new(8);
+        let (ja, _ra) = job("lane_a");
+        let (jb, _rb) = job("lane_b");
+        q.submit(ja).unwrap();
+        q.submit(jb).unwrap();
+        // lane_b's worker skips lane_a's job.
+        let got = q.pop_for("lane_b", Duration::from_millis(10)).unwrap();
+        assert_eq!(got.spec.artifact, "lane_b");
+        assert_eq!(q.depth(), 1);
+        assert!(q.pop_for("lane_b", Duration::from_millis(10)).is_none());
+        assert!(q.pop_for("lane_a", Duration::from_millis(10)).is_some());
+    }
+
+    #[test]
+    fn close_rejects_new_but_drains_backlog() {
+        let q = JobQueue::new(4);
+        let (j1, _r1) = job("a");
+        q.submit(j1).unwrap();
+        q.close();
+        let (j2, _r2) = job("a");
+        match q.submit(j2) {
+            Err((_, SubmitError::Closed)) => {}
+            _ => panic!("expected Closed"),
+        }
+        assert!(!q.is_drained(), "backlog still pending");
+        assert!(q.pop_for("a", Duration::from_millis(10)).is_some());
+        assert!(q.is_drained());
+        // Closed + drained: pop returns immediately, no timeout wait.
+        let t0 = Instant::now();
+        assert!(q.pop_for("a", Duration::from_secs(5)).is_none());
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn pop_wakes_on_cross_thread_submit() {
+        let q = std::sync::Arc::new(JobQueue::new(4));
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.pop_for("a", Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(20));
+        let (j, _r) = job("a");
+        q.submit(j).unwrap();
+        assert!(t.join().unwrap().is_some());
+    }
+}

@@ -1,0 +1,978 @@
+//! Lane scheduler: cross-job batch packing with a pipelined executor.
+//!
+//! Every artifact the daemon loaded gets a **lane** — a worker thread
+//! owning a compiled session for that artifact. A lane admits up to
+//! `max_active` concurrent jobs and packs context windows **from all
+//! of them** into the artifact's fixed-`B` model batch: the batch is a
+//! shared bus, not a per-request allocation. SimNet showed fixed-batch
+//! DL inference collapses when batches run underfilled; per-request
+//! execution pays that tail padding on *every* request, while packing
+//! amortizes it across traffic — the only underfilled batch is the
+//! final drain flush when a lane runs out of work entirely.
+//!
+//! Demux rides the engine's order-independent accumulators: each
+//! output row routes back to its job's
+//! [`PredAccum`](crate::coordinator::engine::PredAccum) via
+//! `absorb_one`, in stream order per job (batches execute FIFO, slots
+//! absorb in order), so a job's folded metrics are bit-identical to an
+//! offline [`simulate_chunked`](crate::coordinator::engine::simulate_chunked)
+//! run of the same (trace, artifact, chunking) — the loopback tests
+//! assert exactly that.
+//!
+//! The executor is **double-buffered** (the open ROADMAP pipelining
+//! item): two staging buffer sets rotate through a `sync_channel(1)`
+//! to a dedicated executor thread, so feature extraction and window
+//! packing of batch `k+1` overlap model execution of batch `k`.
+//!
+//! Chunk-level caching happens at the pack boundary: each job pulls
+//! its trace in `chunk`-row units, keys them by (artifact fingerprint,
+//! warm-up prefix hash, content hash), and on a hit skips straight
+//! past the chunk — merging the memoized accumulator and fast-
+//! forwarding extractor state exactly (see [`super::cache`]).
+
+use super::cache::{chain_prefix, hash_chunk, ChunkKey, PredictionCache, PREFIX_SEED};
+use super::protocol::{resolve_ctx_uarch, JobOutcome, JobSpec, StatsSnapshot};
+use super::queue::{JobQueue, QueuedJob};
+use crate::coordinator::engine::{PredAccum, WindowStager};
+use crate::functional::FunctionalSim;
+use crate::runtime::{ModelKind, ModelOutputs, PooledArtifact};
+use crate::trace::{ChunkBuf, ChunkSource, OwnedChunkSource, CTX_WIDTH};
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Lane tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct LaneConfig {
+    /// Concurrent jobs a lane packs from.
+    pub max_active: usize,
+    /// Double-buffered executor thread (false = execute inline, mainly
+    /// for deterministic unit tests).
+    pub pipeline: bool,
+    /// Batch-formation window: when an idle lane admits its first job,
+    /// wait this long for more jobs so the first batches already pack
+    /// cross-job (the classic dynamic-batching admission delay).
+    pub admission_wait: Duration,
+}
+
+impl Default for LaneConfig {
+    fn default() -> LaneConfig {
+        LaneConfig {
+            max_active: 16,
+            pipeline: true,
+            admission_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Daemon-wide serving counters (lanes update, `/v1/stats` snapshots).
+#[derive(Debug, Default)]
+pub struct ServeCounters {
+    /// Jobs accepted into the queue.
+    pub jobs_submitted: AtomicU64,
+    /// Jobs answered (success or error).
+    pub jobs_done: AtomicU64,
+    /// Jobs refused by admission control.
+    pub jobs_rejected: AtomicU64,
+    /// Jobs currently active inside lanes.
+    pub active_jobs: AtomicU64,
+    /// Model batches executed.
+    pub batches: AtomicU64,
+    /// Windows packed into executed batches.
+    pub packed_windows: AtomicU64,
+    /// Slots available in executed batches (Σ lane `B`).
+    pub batch_slots: AtomicU64,
+}
+
+impl ServeCounters {
+    /// Assemble the `/v1/stats` snapshot.
+    pub fn snapshot(
+        &self,
+        queue: &JobQueue,
+        cache: &Mutex<PredictionCache>,
+    ) -> StatsSnapshot {
+        let cs = cache.lock().expect("cache poisoned").stats();
+        StatsSnapshot {
+            jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
+            jobs_done: self.jobs_done.load(Ordering::Relaxed),
+            jobs_rejected: self.jobs_rejected.load(Ordering::Relaxed),
+            queue_depth: queue.depth() as u64,
+            active_jobs: self.active_jobs.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            packed_windows: self.packed_windows.load(Ordering::Relaxed),
+            batch_slots: self.batch_slots.load(Ordering::Relaxed),
+            cache_hits: cs.hits,
+            cache_misses: cs.misses,
+            cache_evictions: cs.evictions,
+            cache_entries: cs.entries,
+        }
+    }
+}
+
+static NEXT_JOB_ID: AtomicU64 = AtomicU64::new(1);
+
+// ---------------------------------------------------------------------
+// Per-job stream state
+// ---------------------------------------------------------------------
+
+/// A stream-ordered accounting segment: one pulled chunk, either
+/// skipped via the cache or awaiting its windows' model outputs.
+enum Segment {
+    /// Cached chunk: merge `accum` once absorption reaches `start`.
+    Hit { start: u64, accum: PredAccum },
+    /// Computed chunk: rows fold into `accum` alongside the job
+    /// accumulator; when absorption reaches `end` the delta is
+    /// published to the cache under `key`.
+    Miss { key: ChunkKey, end: u64, accum: PredAccum },
+}
+
+struct ActiveJob {
+    id: u64,
+    spec: JobSpec,
+    kind: ModelKind,
+    source: Box<dyn ChunkSource + Send>,
+    stager: WindowStager,
+    accum: PredAccum,
+    buf: ChunkBuf,
+    pos: usize,
+    buf_len: usize,
+    prefix: u64,
+    emitted: u64,
+    absorbed: u64,
+    segments: VecDeque<Segment>,
+    stream_done: bool,
+    hits: u64,
+    misses: u64,
+    windows: u64,
+    dead: Option<String>,
+    done: std::sync::mpsc::Sender<Result<JobOutcome, String>>,
+    admitted_at: Instant,
+}
+
+impl ActiveJob {
+    fn prepare(
+        spec: JobSpec,
+        done: std::sync::mpsc::Sender<Result<JobOutcome, String>>,
+        admitted_at: Instant,
+        art: &PooledArtifact,
+    ) -> Result<ActiveJob> {
+        let workload = crate::workloads::by_name(&spec.bench)
+            .with_context(|| format!("unknown benchmark {:?}", spec.bench))?;
+        let program = workload.build(spec.seed);
+        let kind = art.meta.kind;
+        let source: Box<dyn ChunkSource + Send> = match kind {
+            // Tao consumes the µarch-agnostic functional stream; jobs
+            // pull it straight off the generator, never resident.
+            ModelKind::Tao => Box::new(FunctionalSim::new(&program).into_chunks(spec.insts)),
+            // SimNet needs the detailed trace of its target design as
+            // a per-instruction context input — materialized up front
+            // (that cost is the paper's argument against SimNet).
+            ModelKind::SimNet => {
+                let sel = spec
+                    .ctx_uarch
+                    .as_deref()
+                    .context("SimNet artifacts require ctx_uarch")?;
+                let cfg = resolve_ctx_uarch(sel)?;
+                let cols = FunctionalSim::new(&program).run(spec.insts).to_columns();
+                let ctx = crate::dataset::simnet_ctx_metrics(&program, &cfg, spec.insts);
+                Box::new(OwnedChunkSource::new(cols, Some(ctx))?)
+            }
+        };
+        Ok(ActiveJob {
+            id: NEXT_JOB_ID.fetch_add(1, Ordering::Relaxed),
+            kind,
+            source,
+            stager: WindowStager::new(&art.meta),
+            accum: PredAccum::default(),
+            buf: ChunkBuf::new(),
+            pos: 0,
+            buf_len: 0,
+            prefix: PREFIX_SEED,
+            emitted: 0,
+            absorbed: 0,
+            segments: VecDeque::new(),
+            stream_done: false,
+            hits: 0,
+            misses: 0,
+            windows: 0,
+            dead: None,
+            done,
+            admitted_at,
+            spec,
+        })
+    }
+
+    /// Emit the next window into the caller's batch slot, pulling (and
+    /// cache-probing) chunks as needed. `Ok(false)` means the stream is
+    /// exhausted.
+    fn next_window(
+        &mut self,
+        cache: &Mutex<PredictionCache>,
+        artifact_fp: u64,
+        ops_slot: &mut [i32],
+        feat_slot: &mut [f32],
+        ctx_slot: Option<&mut [f32]>,
+    ) -> Result<bool> {
+        loop {
+            if self.pos < self.buf_len {
+                let i = self.pos;
+                let rec = self.buf.cols.record(i);
+                let ctx_row = (self.kind == ModelKind::SimNet)
+                    .then(|| &self.buf.ctx[i * CTX_WIDTH..(i + 1) * CTX_WIDTH]);
+                self.stager.stage_window(&rec, ctx_row, ops_slot, feat_slot, ctx_slot);
+                self.pos += 1;
+                self.emitted += 1;
+                self.windows += 1;
+                return Ok(true);
+            }
+            if self.stream_done {
+                return Ok(false);
+            }
+            let n = self.source.next_chunk(&mut self.buf, self.spec.chunk)?;
+            if n == 0 {
+                self.stream_done = true;
+                return Ok(false);
+            }
+            if self.kind == ModelKind::SimNet {
+                anyhow::ensure!(
+                    self.buf.ctx.len() == n * CTX_WIDTH,
+                    "SimNet source must carry [n×6] ctx metrics"
+                );
+            }
+            self.buf_len = n;
+            self.pos = 0;
+            let content = hash_chunk(&self.buf);
+            let key = ChunkKey { artifact: artifact_fp, prefix: self.prefix, content };
+            self.prefix = chain_prefix(self.prefix, content);
+            let hit = cache.lock().expect("cache poisoned").get(&key);
+            match hit {
+                Some(delta) if delta.instructions == n as u64 => {
+                    // Cache hit: skip the whole chunk. Fast-forward the
+                    // extractor exactly (state-only advance; the last
+                    // T-1 rows roll through the window history so a
+                    // later miss stages bit-identical windows) and
+                    // queue the memoized accumulator for in-order
+                    // merging.
+                    let hist = self.stager.history_rows();
+                    for i in 0..n {
+                        let rec = self.buf.cols.record(i);
+                        if i + hist < n {
+                            self.stager.advance_only(&rec);
+                        } else {
+                            let ctx_row = (self.kind == ModelKind::SimNet)
+                                .then(|| &self.buf.ctx[i * CTX_WIDTH..(i + 1) * CTX_WIDTH]);
+                            self.stager.roll_only(&rec, ctx_row);
+                        }
+                    }
+                    self.segments
+                        .push_back(Segment::Hit { start: self.emitted, accum: delta });
+                    self.hits += 1;
+                    self.emitted += n as u64;
+                    self.pos = n;
+                    self.pump(cache);
+                }
+                _ => {
+                    self.misses += 1;
+                    self.segments.push_back(Segment::Miss {
+                        key,
+                        end: self.emitted + n as u64,
+                        accum: PredAccum::at_base(self.emitted),
+                    });
+                }
+            }
+        }
+    }
+
+    /// Fold one routed output row (stream order per job is guaranteed
+    /// by FIFO batches + in-order slots).
+    fn absorb_row(
+        &mut self,
+        out: &ModelOutputs,
+        row: usize,
+        cache: &Mutex<PredictionCache>,
+    ) {
+        self.accum.absorb_one(out, self.kind, row);
+        match self.segments.front_mut() {
+            Some(Segment::Miss { accum, .. }) => accum.absorb_one(out, self.kind, row),
+            _ => debug_assert!(false, "output row with no open miss segment"),
+        }
+        self.absorbed += 1;
+        self.pump(cache);
+    }
+
+    /// Settle stream-ordered segments: merge hit accumulators the
+    /// moment absorption reaches them; publish completed miss deltas
+    /// to the cache.
+    fn pump(&mut self, cache: &Mutex<PredictionCache>) {
+        loop {
+            match self.segments.front() {
+                Some(Segment::Hit { start, .. }) if *start == self.absorbed => {
+                    let Some(Segment::Hit { accum, .. }) = self.segments.pop_front() else {
+                        unreachable!()
+                    };
+                    self.absorbed += accum.instructions;
+                    self.accum.merge(&accum);
+                }
+                Some(Segment::Miss { end, .. }) if *end == self.absorbed => {
+                    let Some(Segment::Miss { key, accum, .. }) = self.segments.pop_front()
+                    else {
+                        unreachable!()
+                    };
+                    cache.lock().expect("cache poisoned").insert(key, accum);
+                }
+                _ => break,
+            }
+        }
+    }
+
+    fn is_complete(&self) -> bool {
+        self.stream_done && self.segments.is_empty() && self.absorbed == self.emitted
+    }
+
+    fn outcome(&self) -> JobOutcome {
+        JobOutcome {
+            job_id: self.id,
+            metrics: self.accum.metrics(),
+            windows: self.windows,
+            cache_hits: self.hits,
+            cache_misses: self.misses,
+            elapsed_ms: self.admitted_at.elapsed().as_secs_f64() * 1e3,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Batch buffers + executor
+// ---------------------------------------------------------------------
+
+struct BatchBuffers {
+    ops: Vec<i32>,
+    feats: Vec<f32>,
+    ctx: Vec<f32>,
+}
+
+impl BatchBuffers {
+    fn new(b: usize, t: usize, f: usize, kind: ModelKind) -> BatchBuffers {
+        BatchBuffers {
+            ops: vec![0; b * t],
+            feats: vec![0.0; b * t * f],
+            ctx: match kind {
+                ModelKind::SimNet => vec![0.0; b * t * CTX_WIDTH],
+                ModelKind::Tao => Vec::new(),
+            },
+        }
+    }
+}
+
+struct StagedBatch {
+    bufs: BatchBuffers,
+    valid: usize,
+    routes: Vec<u64>,
+}
+
+struct ExecDone {
+    out: ModelOutputs,
+    routes: Vec<u64>,
+    bufs: BatchBuffers,
+}
+
+/// A failed batch: what went wrong plus the jobs whose windows rode in
+/// it (so only those jobs die — an executor hiccup on job A's batch
+/// must not 500 job B).
+struct BatchError {
+    msg: String,
+    routes: Vec<u64>,
+}
+
+/// What comes back from the executor: a finished batch or its failure.
+type ExecMsg = Result<ExecDone, BatchError>;
+
+enum Executor {
+    Inline(crate::runtime::Session),
+    Pipelined {
+        to_exec: SyncSender<StagedBatch>,
+        from_exec: Receiver<ExecMsg>,
+        handle: std::thread::JoinHandle<()>,
+    },
+}
+
+fn spawn_executor(art: &PooledArtifact, kind: ModelKind) -> Executor {
+    // sync_channel(1): the stager may queue one staged batch while the
+    // executor runs another — double buffering, bounded by the two
+    // rotating buffer sets.
+    let (to_exec, rx_batch) = sync_channel::<StagedBatch>(1);
+    let (tx_done, from_exec) = sync_channel::<ExecMsg>(2);
+    let art = art.clone();
+    let handle = std::thread::spawn(move || {
+        let session = match art.open_session() {
+            Ok(s) => s,
+            Err(e) => {
+                let _ = tx_done.send(Err(BatchError {
+                    msg: format!("open session: {e:#}"),
+                    routes: Vec::new(),
+                }));
+                return;
+            }
+        };
+        for batch in rx_batch {
+            let ctx = match kind {
+                ModelKind::SimNet => Some(&batch.bufs.ctx[..]),
+                ModelKind::Tao => None,
+            };
+            let msg = match session.run_on(&batch.bufs.ops, &batch.bufs.feats, ctx, batch.valid)
+            {
+                Ok(out) => Ok(ExecDone { out, routes: batch.routes, bufs: batch.bufs }),
+                Err(e) => Err(BatchError {
+                    msg: format!("model execution: {e:#}"),
+                    routes: batch.routes,
+                }),
+            };
+            if tx_done.send(msg).is_err() {
+                return;
+            }
+        }
+    });
+    Executor::Pipelined { to_exec, from_exec, handle }
+}
+
+// ---------------------------------------------------------------------
+// The lane
+// ---------------------------------------------------------------------
+
+/// Run one artifact lane until the queue is closed and drained. Pops
+/// jobs targeting `art` from the shared queue, packs windows across
+/// every active job into the artifact's `[B, T, F]` batch, executes
+/// (pipelined by default), demuxes outputs to per-job accumulators,
+/// and answers each job's completion channel.
+pub fn run_lane(
+    art: PooledArtifact,
+    queue: Arc<JobQueue>,
+    cache: Arc<Mutex<PredictionCache>>,
+    counters: Arc<ServeCounters>,
+    cfg: LaneConfig,
+) -> Result<()> {
+    let (b, t, f) = (art.meta.batch, art.meta.context, art.meta.feature_dim);
+    let kind = art.meta.kind;
+    let fp = art.fingerprint;
+    let mut exec = if cfg.pipeline {
+        spawn_executor(&art, kind)
+    } else {
+        Executor::Inline(art.open_session()?)
+    };
+    let n_bufs = if cfg.pipeline { 2 } else { 1 };
+    let mut free: Vec<BatchBuffers> =
+        (0..n_bufs).map(|_| BatchBuffers::new(b, t, f, kind)).collect();
+    let mut active: Vec<ActiveJob> = Vec::new();
+    let mut in_flight = 0usize;
+    let mut rr = 0usize;
+
+    loop {
+        // Absorb every result that is already done (non-blocking).
+        loop {
+            match try_recv_done(&mut exec) {
+                Ok(Some(msg)) => {
+                    // Saturating: an executor-startup error arrives
+                    // without a corresponding in-flight batch.
+                    in_flight = in_flight.saturating_sub(1);
+                    handle_exec_msg(msg, &mut active, &mut free, &cache, b, t, f, kind);
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    fail_lane(&e, &mut active, &counters);
+                    return lane_zombie(&art, &queue, &counters, e);
+                }
+            }
+        }
+        finalize(&mut active, &counters);
+
+        // Admission: fill spare capacity; when waking from idle, hold
+        // the batch-formation window so the first batches pack.
+        let was_idle = active.is_empty() && in_flight == 0;
+        while active.len() < cfg.max_active {
+            let timeout = if active.is_empty() && in_flight == 0 {
+                Duration::from_millis(50)
+            } else {
+                Duration::ZERO
+            };
+            match queue.pop_for(&art.name, timeout) {
+                Some(qj) => admit(qj, &art, &mut active, &counters),
+                None => break,
+            }
+        }
+        if was_idle && !active.is_empty() && !cfg.admission_wait.is_zero() {
+            let deadline = Instant::now() + cfg.admission_wait;
+            while active.len() < cfg.max_active {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match queue.pop_for(&art.name, deadline - now) {
+                    Some(qj) => admit(qj, &art, &mut active, &counters),
+                    None => break,
+                }
+            }
+        }
+        finalize(&mut active, &counters);
+
+        if active.is_empty() && in_flight == 0 {
+            if queue.is_drained() {
+                break;
+            }
+            continue;
+        }
+
+        // Stage and dispatch one packed batch (or wait for capacity).
+        if let Some(mut bufs) = free.pop() {
+            let (valid, routes) = pack(&mut active, &mut rr, &mut bufs, &cache, fp, b, t, f);
+            if valid > 0 {
+                counters.batches.fetch_add(1, Ordering::Relaxed);
+                counters.packed_windows.fetch_add(valid as u64, Ordering::Relaxed);
+                counters.batch_slots.fetch_add(b as u64, Ordering::Relaxed);
+                match &mut exec {
+                    Executor::Inline(session) => {
+                        let ctx = match kind {
+                            ModelKind::SimNet => Some(&bufs.ctx[..]),
+                            ModelKind::Tao => None,
+                        };
+                        match session.run_on(&bufs.ops, &bufs.feats, ctx, valid) {
+                            Ok(out) => {
+                                demux(&out, &routes, &mut active, &cache);
+                                free.push(bufs);
+                            }
+                            Err(e) => {
+                                // Scope the failure to the jobs in
+                                // this batch, as the pipelined path
+                                // does.
+                                let msg = format!("model execution: {e:#}");
+                                for job in active.iter_mut() {
+                                    if routes.contains(&job.id) {
+                                        job.dead = Some(format!("batch failed: {msg}"));
+                                    }
+                                }
+                                free.push(bufs);
+                            }
+                        }
+                    }
+                    Executor::Pipelined { to_exec, .. } => {
+                        if to_exec.send(StagedBatch { bufs, valid, routes }).is_err() {
+                            let e = "executor thread exited".to_string();
+                            fail_lane(&e, &mut active, &counters);
+                            return lane_zombie(&art, &queue, &counters, e);
+                        }
+                        in_flight += 1;
+                    }
+                }
+            } else {
+                // No job can emit: everything active is stream-done and
+                // waiting on in-flight outputs (or already complete).
+                free.push(bufs);
+                if in_flight > 0 {
+                    match recv_done_blocking(&mut exec) {
+                        Ok(msg) => {
+                            in_flight = in_flight.saturating_sub(1);
+                            handle_exec_msg(msg, &mut active, &mut free, &cache, b, t, f, kind);
+                        }
+                        Err(e) => {
+                            fail_lane(&e, &mut active, &counters);
+                            return lane_zombie(&art, &queue, &counters, e);
+                        }
+                    }
+                }
+            }
+        } else {
+            // Both buffers in flight: block for one to come home.
+            match recv_done_blocking(&mut exec) {
+                Ok(msg) => {
+                    in_flight = in_flight.saturating_sub(1);
+                    handle_exec_msg(msg, &mut active, &mut free, &cache, b, t, f, kind);
+                }
+                Err(e) => {
+                    fail_lane(&e, &mut active, &counters);
+                    return lane_zombie(&art, &queue, &counters, e);
+                }
+            }
+        }
+        finalize(&mut active, &counters);
+    }
+
+    if let Executor::Pipelined { to_exec, from_exec, handle } = exec {
+        drop(to_exec);
+        drop(from_exec);
+        let _ = handle.join();
+    }
+    Ok(())
+}
+
+fn admit(
+    qj: QueuedJob,
+    art: &PooledArtifact,
+    active: &mut Vec<ActiveJob>,
+    counters: &ServeCounters,
+) {
+    let QueuedJob { spec, done, admitted_at } = qj;
+    match ActiveJob::prepare(spec, done.clone(), admitted_at, art) {
+        Ok(job) => {
+            counters.active_jobs.fetch_add(1, Ordering::Relaxed);
+            active.push(job);
+        }
+        Err(e) => {
+            let _ = done.send(Err(format!("job preparation failed: {e:#}")));
+            counters.jobs_done.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn pack(
+    active: &mut [ActiveJob],
+    rr: &mut usize,
+    bufs: &mut BatchBuffers,
+    cache: &Mutex<PredictionCache>,
+    fp: u64,
+    b: usize,
+    t: usize,
+    f: usize,
+) -> (usize, Vec<u64>) {
+    let mut routes = Vec::with_capacity(b);
+    let mut slot = 0usize;
+    let n = active.len();
+    while slot < b && n > 0 {
+        let mut progressed = false;
+        for k in 0..n {
+            if slot == b {
+                break;
+            }
+            let j = (*rr + k) % n;
+            let job = &mut active[j];
+            if job.dead.is_some() {
+                continue;
+            }
+            let ops_slot = &mut bufs.ops[slot * t..(slot + 1) * t];
+            let feat_slot = &mut bufs.feats[slot * t * f..(slot + 1) * t * f];
+            let ctx_slot = match job.kind {
+                ModelKind::SimNet => {
+                    Some(&mut bufs.ctx[slot * t * CTX_WIDTH..(slot + 1) * t * CTX_WIDTH])
+                }
+                ModelKind::Tao => None,
+            };
+            match job.next_window(cache, fp, ops_slot, feat_slot, ctx_slot) {
+                Ok(true) => {
+                    routes.push(job.id);
+                    slot += 1;
+                    progressed = true;
+                }
+                Ok(false) => {}
+                Err(e) => job.dead = Some(format!("{e:#}")),
+            }
+        }
+        *rr = (*rr + 1) % n;
+        if !progressed {
+            break;
+        }
+    }
+    (slot, routes)
+}
+
+fn demux(
+    out: &ModelOutputs,
+    routes: &[u64],
+    active: &mut [ActiveJob],
+    cache: &Mutex<PredictionCache>,
+) {
+    for (row, id) in routes.iter().enumerate() {
+        if let Some(job) = active.iter_mut().find(|j| j.id == *id && j.dead.is_none()) {
+            job.absorb_row(out, row, cache);
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_exec_msg(
+    msg: ExecMsg,
+    active: &mut Vec<ActiveJob>,
+    free: &mut Vec<BatchBuffers>,
+    cache: &Mutex<PredictionCache>,
+    b: usize,
+    t: usize,
+    f: usize,
+    kind: ModelKind,
+) {
+    match msg {
+        Ok(done) => {
+            demux(&done.out, &done.routes, active, cache);
+            free.push(done.bufs);
+        }
+        Err(e) => {
+            // Only the jobs whose windows rode in the failed batch
+            // die; the rest keep streaming. The staged buffers died
+            // with the batch, so mint a fresh set to keep the
+            // free/in-flight invariant.
+            for job in active.iter_mut() {
+                if e.routes.contains(&job.id) {
+                    job.dead = Some(format!("batch failed: {}", e.msg));
+                }
+            }
+            free.push(BatchBuffers::new(b, t, f, kind));
+        }
+    }
+}
+
+fn finalize(active: &mut Vec<ActiveJob>, counters: &ServeCounters) {
+    active.retain(|job| {
+        if let Some(err) = &job.dead {
+            let _ = job.done.send(Err(err.clone()));
+        } else if job.is_complete() {
+            let _ = job.done.send(Ok(job.outcome()));
+        } else {
+            return true;
+        }
+        counters.active_jobs.fetch_sub(1, Ordering::Relaxed);
+        counters.jobs_done.fetch_add(1, Ordering::Relaxed);
+        false
+    });
+}
+
+fn fail_lane(err: &str, active: &mut Vec<ActiveJob>, counters: &ServeCounters) {
+    for job in active.drain(..) {
+        let _ = job.done.send(Err(format!("lane failed: {err}")));
+        counters.active_jobs.fetch_sub(1, Ordering::Relaxed);
+        counters.jobs_done.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Terminal state for a lane whose executor died: keep answering this
+/// artifact's jobs with retryable-looking errors until drain, so
+/// waiting connections never hang.
+fn lane_zombie(
+    art: &PooledArtifact,
+    queue: &JobQueue,
+    counters: &ServeCounters,
+    err: String,
+) -> Result<()> {
+    eprintln!("serve: lane {:?} failed: {err}", art.name);
+    loop {
+        match queue.pop_for(&art.name, Duration::from_millis(200)) {
+            Some(qj) => {
+                let _ = qj.done.send(Err(format!("lane {:?} failed: {err}", art.name)));
+                counters.jobs_done.fetch_add(1, Ordering::Relaxed);
+            }
+            None => {
+                if queue.is_drained() {
+                    anyhow::bail!("lane {:?} failed: {err}", art.name);
+                }
+            }
+        }
+    }
+}
+
+fn try_recv_done(exec: &mut Executor) -> Result<Option<ExecMsg>, String> {
+    match exec {
+        Executor::Inline(_) => Ok(None),
+        Executor::Pipelined { from_exec, .. } => match from_exec.try_recv() {
+            Ok(msg) => Ok(Some(msg)),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err("executor thread exited".into()),
+        },
+    }
+}
+
+fn recv_done_blocking(exec: &mut Executor) -> Result<ExecMsg, String> {
+    match exec {
+        Executor::Inline(_) => Err("inline executor has no in-flight batches".into()),
+        Executor::Pipelined { from_exec, .. } => {
+            from_exec.recv().map_err(|_| "executor thread exited".to_string())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine;
+    use crate::runtime::{write_surrogate_artifact, ArtifactPool, Session};
+    use crate::stats::Metrics;
+    use std::sync::mpsc;
+
+    fn pooled(name: &str, b: usize, t: usize) -> PooledArtifact {
+        let dir = std::env::temp_dir().join(format!("tao-sched-{}", std::process::id()));
+        let hlo = write_surrogate_artifact(&dir, name, b, t).unwrap();
+        ArtifactPool::load(&[hlo]).unwrap().get(name).unwrap().clone()
+    }
+
+    fn spec(artifact: &str, bench: &str, insts: u64, seed: u64, chunk: usize) -> JobSpec {
+        JobSpec {
+            bench: bench.into(),
+            insts,
+            seed,
+            artifact: artifact.into(),
+            chunk,
+            ctx_uarch: None,
+        }
+    }
+
+    /// The offline oracle: `simulate_chunked` over the same generator
+    /// stream, artifact and chunk grid.
+    fn offline(art: &PooledArtifact, s: &JobSpec) -> Metrics {
+        let program = crate::workloads::by_name(&s.bench).unwrap().build(s.seed);
+        let mut session = Session::load(&art.hlo_path).unwrap();
+        let mut src = FunctionalSim::new(&program).into_chunks(s.insts);
+        engine::simulate_chunked(&mut session, &mut src, s.chunk, None)
+            .unwrap()
+            .metrics
+    }
+
+    fn submit(
+        queue: &JobQueue,
+        s: &JobSpec,
+    ) -> mpsc::Receiver<Result<JobOutcome, String>> {
+        let (tx, rx) = mpsc::channel();
+        queue
+            .submit(QueuedJob { spec: s.clone(), done: tx, admitted_at: Instant::now() })
+            .map_err(|_| "submit failed")
+            .unwrap();
+        rx
+    }
+
+    fn assert_metrics_identical(got: &Metrics, want: &Metrics, tag: &str) {
+        assert_eq!(got.instructions, want.instructions, "{tag}: instructions");
+        assert_eq!(got.cycles, want.cycles, "{tag}: cycles");
+        assert_eq!(got.mispredicts, want.mispredicts, "{tag}: mispredicts");
+        assert_eq!(got.l1d_misses, want.l1d_misses, "{tag}: l1d");
+        assert_eq!(got.l1i_misses, want.l1i_misses, "{tag}: l1i");
+        assert_eq!(got.tlb_misses, want.tlb_misses, "{tag}: tlb");
+    }
+
+    #[test]
+    fn packed_lane_demuxes_to_offline_metrics_and_caches() {
+        let art = pooled("sched_eq", 8, 6);
+        let specs = vec![
+            spec("sched_eq", "mcf", 701, 5, 97),
+            spec("sched_eq", "dee", 400, 9, 64),
+            spec("sched_eq", "xal", 333, 2, 50),
+        ];
+        let cache = Arc::new(Mutex::new(PredictionCache::new(256)));
+        let counters = Arc::new(ServeCounters::default());
+        let cfg = LaneConfig {
+            max_active: 8,
+            pipeline: false,
+            admission_wait: Duration::ZERO,
+        };
+        let mut batches_after_cold = 0;
+        for pass in 0..2 {
+            let queue = Arc::new(JobQueue::new(16));
+            let rxs: Vec<_> = specs.iter().map(|s| submit(&queue, s)).collect();
+            queue.close();
+            run_lane(art.clone(), queue, cache.clone(), counters.clone(), cfg).unwrap();
+            for (s, rx) in specs.iter().zip(&rxs) {
+                let got = rx.recv().unwrap().unwrap();
+                let want = offline(&art, s);
+                assert_metrics_identical(&got.metrics, &want, &format!("pass {pass} {}", s.bench));
+                if pass == 0 {
+                    assert_eq!(got.cache_hits, 0, "cold pass must miss");
+                    assert!(got.cache_misses > 0);
+                    assert_eq!(got.windows, s.insts, "every window packed once");
+                } else {
+                    assert_eq!(
+                        got.cache_hits,
+                        s.insts.div_ceil(s.chunk as u64),
+                        "warm pass must hit every chunk"
+                    );
+                    assert_eq!(got.windows, 0, "warm pass skips model execution");
+                }
+            }
+            if pass == 0 {
+                batches_after_cold = counters.batches.load(Ordering::Relaxed);
+                assert!(batches_after_cold > 0);
+            } else {
+                assert_eq!(
+                    counters.batches.load(Ordering::Relaxed),
+                    batches_after_cold,
+                    "warm pass must execute zero batches"
+                );
+            }
+        }
+        // Three interleaved jobs share batches: far fewer slots wasted
+        // than three solo runs (each would pad its own tail).
+        let packed = counters.packed_windows.load(Ordering::Relaxed);
+        let slots = counters.batch_slots.load(Ordering::Relaxed);
+        assert_eq!(packed, 701 + 400 + 333);
+        assert!(slots >= packed);
+    }
+
+    #[test]
+    fn pipelined_lane_matches_offline_too() {
+        let art = pooled("sched_pipe", 16, 8);
+        let specs = vec![
+            spec("sched_pipe", "mcf", 900, 11, 128),
+            spec("sched_pipe", "nab", 555, 3, 111),
+        ];
+        let cache = Arc::new(Mutex::new(PredictionCache::new(0)));
+        let counters = Arc::new(ServeCounters::default());
+        let cfg = LaneConfig {
+            max_active: 4,
+            pipeline: true,
+            admission_wait: Duration::ZERO,
+        };
+        let queue = Arc::new(JobQueue::new(16));
+        let rxs: Vec<_> = specs.iter().map(|s| submit(&queue, s)).collect();
+        queue.close();
+        run_lane(art.clone(), queue, cache, counters, cfg).unwrap();
+        for (s, rx) in specs.iter().zip(&rxs) {
+            let got = rx.recv().unwrap().unwrap();
+            assert_metrics_identical(&got.metrics, &offline(&art, s), &s.bench);
+            // Cache disabled: every chunk misses, nothing is stored.
+            assert_eq!(got.cache_hits, 0);
+        }
+    }
+
+    #[test]
+    fn simnet_lane_needs_and_uses_ctx() {
+        let dir = std::env::temp_dir().join(format!("tao-sched-{}", std::process::id()));
+        let hlo = crate::runtime::write_surrogate_artifact_kind(
+            &dir,
+            "sched_sn",
+            ModelKind::SimNet,
+            8,
+            4,
+        )
+        .unwrap();
+        let art = ArtifactPool::load(&[hlo]).unwrap().get("sched_sn").unwrap().clone();
+        let mut s = spec("sched_sn", "dee", 300, 7, 77);
+        s.ctx_uarch = Some("b".into());
+        let cache = Arc::new(Mutex::new(PredictionCache::new(64)));
+        let counters = Arc::new(ServeCounters::default());
+        let cfg = LaneConfig {
+            max_active: 4,
+            pipeline: false,
+            admission_wait: Duration::ZERO,
+        };
+        let queue = Arc::new(JobQueue::new(4));
+        let rx = submit(&queue, &s);
+        queue.close();
+        run_lane(art.clone(), queue, cache.clone(), counters.clone(), cfg).unwrap();
+        let got = rx.recv().unwrap().unwrap();
+        // Offline SimNet oracle: same trace + ctx through simulate_chunked.
+        let program = crate::workloads::by_name("dee").unwrap().build(7);
+        let cols = FunctionalSim::new(&program).run(300).to_columns();
+        let cfg_u = resolve_ctx_uarch("b").unwrap();
+        let ctx = crate::dataset::simnet_ctx_metrics(&program, &cfg_u, 300);
+        let mut session = Session::load(&art.hlo_path).unwrap();
+        let mut src = OwnedChunkSource::new(cols, Some(ctx)).unwrap();
+        let want = engine::simulate_chunked(&mut session, &mut src, 77, None)
+            .unwrap()
+            .metrics;
+        assert_metrics_identical(&got.metrics, &want, "simnet");
+
+        // A job missing ctx_uarch fails at preparation with an error
+        // response, not a hang.
+        let queue = Arc::new(JobQueue::new(4));
+        let bad = spec("sched_sn", "dee", 100, 1, 50);
+        let rx = submit(&queue, &bad);
+        queue.close();
+        run_lane(art, queue, cache, counters, cfg).unwrap();
+        assert!(rx.recv().unwrap().is_err());
+    }
+}

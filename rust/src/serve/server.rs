@@ -1,0 +1,297 @@
+//! The serving daemon: socket accept loop, request routing, graceful
+//! drain.
+//!
+//! Threading model: one accept loop (non-blocking poll so shutdown is
+//! observed promptly), one short-lived thread per connection (a
+//! connection is one request: parse → validate → submit → block on the
+//! job's completion channel → respond), one lane thread per artifact
+//! plus its pipelined executor ([`super::scheduler`]).
+//!
+//! Graceful shutdown (`POST /v1/shutdown`, or SIGINT via the CLI):
+//! stop accepting, close the admission queue — new submits get a
+//! retryable 503 — let lanes finish the backlog and every in-flight
+//! job, join everything, and flush the final stats (cache hit rates,
+//! packing occupancy) to stderr and to the caller.
+
+use super::cache::PredictionCache;
+use super::http::{read_request, write_response};
+use super::protocol::{error_body, validate_spec, JobSpec, StatsSnapshot};
+use super::queue::{JobQueue, QueuedJob, SubmitError};
+use super::scheduler::{run_lane, LaneConfig, ServeCounters};
+use crate::runtime::ArtifactPool;
+use anyhow::{ensure, Context, Result};
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Daemon configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address (`127.0.0.1:0` for an ephemeral port).
+    pub addr: String,
+    /// Admission-queue capacity (backpressure bound).
+    pub queue_depth: usize,
+    /// Concurrent jobs packed per lane.
+    pub max_active: usize,
+    /// Prediction-cache capacity in chunk entries (0 disables).
+    pub cache_entries: usize,
+    /// Largest `insts` a request may ask for.
+    pub max_insts: u64,
+    /// Double-buffered executor threads.
+    pub pipeline: bool,
+    /// Lane batch-formation window, milliseconds.
+    pub admission_wait_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            queue_depth: 64,
+            max_active: 16,
+            cache_entries: 1024,
+            max_insts: 10_000_000,
+            pipeline: true,
+            admission_wait_ms: 2,
+        }
+    }
+}
+
+struct Shared {
+    pool: ArtifactPool,
+    queue: Arc<JobQueue>,
+    cache: Arc<Mutex<PredictionCache>>,
+    counters: Arc<ServeCounters>,
+    shutdown: AtomicBool,
+    max_insts: u64,
+}
+
+/// A cloneable control handle: request shutdown / read stats from
+/// outside the accept loop (the CLI's SIGINT watcher uses this).
+#[derive(Clone)]
+pub struct ServerHandle {
+    shared: Arc<Shared>,
+}
+
+impl ServerHandle {
+    /// Begin graceful drain (idempotent).
+    pub fn request_shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Current serving counters.
+    pub fn stats(&self) -> StatsSnapshot {
+        self.shared
+            .counters
+            .snapshot(&self.shared.queue, &self.shared.cache)
+    }
+}
+
+/// A bound, lanes-running daemon. [`Server::run`] serves until drain.
+pub struct Server {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    lanes: Vec<std::thread::JoinHandle<Result<()>>>,
+}
+
+impl Server {
+    /// Bind the socket and start one lane per pooled artifact.
+    pub fn bind(pool: ArtifactPool, cfg: &ServeConfig) -> Result<Server> {
+        ensure!(!pool.is_empty(), "serve needs at least one --model artifact");
+        ensure!(cfg.queue_depth >= 1, "queue depth must be positive");
+        ensure!(cfg.max_active >= 1, "max active jobs must be positive");
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("bind {}", cfg.addr))?;
+        listener.set_nonblocking(true).context("set_nonblocking")?;
+        let queue = Arc::new(JobQueue::new(cfg.queue_depth));
+        let cache = Arc::new(Mutex::new(PredictionCache::new(cfg.cache_entries)));
+        let counters = Arc::new(ServeCounters::default());
+        let lane_cfg = LaneConfig {
+            max_active: cfg.max_active,
+            pipeline: cfg.pipeline,
+            admission_wait: Duration::from_millis(cfg.admission_wait_ms),
+        };
+        let mut lanes = Vec::new();
+        for art in pool.iter() {
+            let art = art.clone();
+            let queue = queue.clone();
+            let cache = cache.clone();
+            let counters = counters.clone();
+            lanes.push(std::thread::spawn(move || {
+                run_lane(art, queue, cache, counters, lane_cfg)
+            }));
+        }
+        let shared = Arc::new(Shared {
+            pool,
+            queue,
+            cache,
+            counters,
+            shutdown: AtomicBool::new(false),
+            max_insts: cfg.max_insts,
+        });
+        Ok(Server { listener, shared, lanes })
+    }
+
+    /// The bound address (read the ephemeral port here).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("local_addr")
+    }
+
+    /// Control handle for shutdown/stats from other threads.
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { shared: self.shared.clone() }
+    }
+
+    /// Serve until a graceful shutdown completes; returns the final
+    /// counter snapshot after the drain.
+    pub fn run(self) -> Result<StatsSnapshot> {
+        let Server { listener, shared, lanes } = self;
+        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        let mut draining = false;
+        loop {
+            // Keep accepting through the drain: connections racing the
+            // shutdown get the documented retryable 503 (and stats and
+            // health stay readable) instead of a reset from the
+            // listener's backlog. The loop ends once every lane has
+            // finished its backlog and in-flight jobs.
+            if !draining && shared.shutdown.load(Ordering::SeqCst) {
+                draining = true;
+                shared.queue.close();
+            }
+            if draining && lanes.iter().all(|h| h.is_finished()) {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    // The listener is non-blocking (shutdown polling);
+                    // accepted sockets must not inherit that (they do
+                    // on some platforms).
+                    if stream.set_nonblocking(false).is_err() {
+                        continue;
+                    }
+                    let shared = shared.clone();
+                    conns.push(std::thread::spawn(move || {
+                        handle_connection(stream, &shared);
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => {
+                    // EMFILE/ECONNABORTED and friends are transient
+                    // overload, not reasons to drop every in-flight
+                    // job — log, back off, keep serving. A wedged
+                    // socket still exits via /v1/shutdown or SIGINT.
+                    eprintln!("serve: accept error (continuing): {e}");
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            }
+            if conns.len() >= 64 {
+                conns.retain(|h| !h.is_finished());
+            }
+        }
+
+        // Lanes have drained (backlog + in-flight all answered); stop
+        // accepting, join everything, flush stats.
+        for lane in lanes {
+            match lane.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => eprintln!("serve: lane exited with error: {e:#}"),
+                Err(_) => eprintln!("serve: lane panicked"),
+            }
+        }
+        for conn in conns {
+            let _ = conn.join();
+        }
+        let stats = shared.counters.snapshot(&shared.queue, &shared.cache);
+        eprintln!(
+            "serve: drained — {} jobs done, {} rejected; {} batches at {:.1}% occupancy; \
+             cache {} hits / {} misses / {} evictions ({} resident)",
+            stats.jobs_done,
+            stats.jobs_rejected,
+            stats.batches,
+            stats.occupancy() * 100.0,
+            stats.cache_hits,
+            stats.cache_misses,
+            stats.cache_evictions,
+            stats.cache_entries,
+        );
+        Ok(stats)
+    }
+}
+
+fn handle_connection(stream: TcpStream, shared: &Shared) {
+    if let Err(e) = serve_connection(stream, shared) {
+        eprintln!("serve: connection error: {e:#}");
+    }
+}
+
+fn serve_connection(stream: TcpStream, shared: &Shared) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    let mut reader = BufReader::new(stream.try_clone().context("clone stream")?);
+    let mut out = stream;
+    let req = match read_request(&mut reader) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = write_response(&mut out, 400, &error_body(&format!("{e:#}"), false));
+            return Ok(());
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => write_response(&mut out, 200, "{\"ok\":true}"),
+        ("GET", "/v1/stats") => {
+            let stats = shared.counters.snapshot(&shared.queue, &shared.cache);
+            write_response(&mut out, 200, &stats.to_json())
+        }
+        ("GET", "/v1/artifacts") => {
+            write_response(&mut out, 200, &super::protocol::artifacts_json(&shared.pool))
+        }
+        ("POST", "/v1/shutdown") => {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            write_response(&mut out, 200, "{\"draining\":true}")
+        }
+        ("POST", "/v1/simulate") => handle_simulate(&mut out, &req.body, shared),
+        ("GET" | "POST", _) => {
+            write_response(&mut out, 404, &error_body("no such endpoint", false))
+        }
+        _ => write_response(&mut out, 405, &error_body("method not allowed", false)),
+    }
+}
+
+fn handle_simulate(out: &mut TcpStream, body: &str, shared: &Shared) -> Result<()> {
+    if shared.shutdown.load(Ordering::SeqCst) || shared.queue.is_closed() {
+        shared.counters.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+        return write_response(out, 503, &error_body("draining", true));
+    }
+    let spec = match JobSpec::from_json(body) {
+        Ok(s) => s,
+        Err(e) => return write_response(out, 400, &error_body(&format!("{e:#}"), false)),
+    };
+    if let Err(e) = validate_spec(&spec, &shared.pool, shared.max_insts) {
+        return write_response(out, 400, &error_body(&format!("{e:#}"), false));
+    }
+    let (tx, rx) = std::sync::mpsc::channel();
+    let job = QueuedJob { spec, done: tx, admitted_at: std::time::Instant::now() };
+    match shared.queue.submit(job) {
+        Ok(()) => {}
+        Err((_, SubmitError::Full)) => {
+            shared.counters.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+            return write_response(out, 429, &error_body("queue full", true));
+        }
+        Err((_, SubmitError::Closed)) => {
+            shared.counters.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+            return write_response(out, 503, &error_body("draining", true));
+        }
+    }
+    shared.counters.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+    // Block until the lane answers. Lanes always answer — completion,
+    // job error, drain, or lane failure — so this cannot leak.
+    match rx.recv() {
+        Ok(Ok(outcome)) => write_response(out, 200, &outcome.to_json()),
+        Ok(Err(msg)) => write_response(out, 500, &error_body(&msg, false)),
+        Err(_) => write_response(out, 500, &error_body("job dropped", false)),
+    }
+}

@@ -176,6 +176,55 @@ impl<S: RecordSource + ?Sized> ChunkSource for SliceChunkSource<'_, S> {
     }
 }
 
+/// Chunked pull over *owned* columns (plus an optional owned
+/// `[N × 6]` context-metric array) — the self-contained sibling of
+/// [`SliceChunkSource`] for consumers that outlive the scope that built
+/// the trace, e.g. a serving job that materializes a functional trace
+/// and its detailed SimNet context up front and then streams it from a
+/// scheduler thread.
+pub struct OwnedChunkSource {
+    cols: TraceColumns,
+    ctx: Vec<f32>,
+    pos: usize,
+}
+
+impl OwnedChunkSource {
+    /// Take ownership of a trace; `ctx`, when given, must hold
+    /// [`CTX_WIDTH`] values per record.
+    pub fn new(cols: TraceColumns, ctx: Option<Vec<f32>>) -> Result<OwnedChunkSource> {
+        let ctx = ctx.unwrap_or_default();
+        if !ctx.is_empty() {
+            ensure!(
+                ctx.len() == cols.len() * CTX_WIDTH,
+                "context metrics: {} values for {} records",
+                ctx.len(),
+                cols.len()
+            );
+        }
+        Ok(OwnedChunkSource { cols, ctx, pos: 0 })
+    }
+}
+
+impl ChunkSource for OwnedChunkSource {
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.cols.len() - self.pos)
+    }
+
+    fn next_chunk(&mut self, buf: &mut ChunkBuf, max_rows: usize) -> Result<usize> {
+        ensure!(max_rows >= 1, "zero-length chunk request");
+        buf.clear();
+        let end = (self.pos + max_rows).min(self.cols.len());
+        buf.cols.extend_from(&self.cols, self.pos, end);
+        if !self.ctx.is_empty() {
+            buf.ctx
+                .extend_from_slice(&self.ctx[self.pos * CTX_WIDTH..end * CTX_WIDTH]);
+        }
+        let n = end - self.pos;
+        self.pos = end;
+        Ok(n)
+    }
+}
+
 // ---------------------------------------------------------------------
 // File-backed source
 // ---------------------------------------------------------------------
@@ -323,6 +372,27 @@ mod tests {
         assert_eq!(buf.ctx, &ctx[7 * CTX_WIDTH..14 * CTX_WIDTH]);
         // Mis-sized ctx is rejected up front.
         assert!(SliceChunkSource::new(&cols, Some(&ctx[..5])).is_err());
+    }
+
+    #[test]
+    fn owned_source_matches_slice_source() {
+        let cols = sample_cols(500);
+        let ctx: Vec<f32> = (0..500 * CTX_WIDTH).map(|i| i as f32).collect();
+        let mut slice_src = SliceChunkSource::new(&cols, Some(&ctx)).unwrap();
+        let mut owned_src = OwnedChunkSource::new(cols.clone(), Some(ctx.clone())).unwrap();
+        let (mut a, mut b) = (ChunkBuf::new(), ChunkBuf::new());
+        loop {
+            let na = slice_src.next_chunk(&mut a, 77).unwrap();
+            let nb = owned_src.next_chunk(&mut b, 77).unwrap();
+            assert_eq!(na, nb);
+            assert_eq!(a.cols, b.cols);
+            assert_eq!(a.ctx, b.ctx);
+            if na == 0 {
+                break;
+            }
+        }
+        // Mis-sized ctx is rejected up front.
+        assert!(OwnedChunkSource::new(cols, Some(vec![0.0; 5])).is_err());
     }
 
     #[test]

@@ -1,0 +1,57 @@
+//! Shared non-cryptographic hashing (64-bit FNV-1a).
+//!
+//! Used wherever the repo needs a stable, dependency-free content
+//! fingerprint: artifact fingerprints in the runtime pool, chunk
+//! content / warm-up prefix keys in the serving prediction cache. Not
+//! collision-resistant against adversaries — these are correctness
+//! *hints* keyed alongside exact lengths, not security boundaries.
+
+/// The FNV-1a 64-bit offset basis (the canonical empty-input state).
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold `bytes` into an FNV-1a state. Chain calls to hash multi-part
+/// payloads: `fnv1a64(b, fnv1a64(a, FNV_OFFSET))` hashes `a ++ b`.
+pub fn fnv1a64(bytes: &[u8], mut state: u64) -> u64 {
+    for &b in bytes {
+        state ^= b as u64;
+        state = state.wrapping_mul(FNV_PRIME);
+    }
+    state
+}
+
+/// Fold one `u64` (little-endian) into an FNV-1a state. Handy for
+/// chaining hashes of hashes (e.g. the serving cache's rolling
+/// warm-up-prefix key).
+pub fn fnv1a64_u64(value: u64, state: u64) -> u64 {
+    fnv1a64(&value.to_le_bytes(), state)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_reference_vectors() {
+        // Standard FNV-1a test vectors.
+        assert_eq!(fnv1a64(b"", FNV_OFFSET), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a", FNV_OFFSET), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar", FNV_OFFSET), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn chaining_equals_concatenation() {
+        let whole = fnv1a64(b"hello world", FNV_OFFSET);
+        let chained = fnv1a64(b" world", fnv1a64(b"hello", FNV_OFFSET));
+        assert_eq!(whole, chained);
+    }
+
+    #[test]
+    fn u64_fold_is_order_sensitive() {
+        let a = fnv1a64_u64(2, fnv1a64_u64(1, FNV_OFFSET));
+        let b = fnv1a64_u64(1, fnv1a64_u64(2, FNV_OFFSET));
+        assert_ne!(a, b);
+        assert_ne!(fnv1a64_u64(0, FNV_OFFSET), FNV_OFFSET);
+    }
+}

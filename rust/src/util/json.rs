@@ -1,8 +1,12 @@
-//! Minimal JSON parser (vendored-build friendly; no serde).
+//! Minimal JSON parser + serializer (vendored-build friendly; no serde).
 //!
-//! Supports the subset the artifact metadata uses: objects, arrays,
-//! strings (with escapes), numbers, booleans and null. Strict enough to
-//! reject malformed input; small enough to audit.
+//! Supports the subset the artifact metadata and the serving protocol
+//! use: objects, arrays, strings (with escapes), numbers, booleans and
+//! null. Strict enough to reject malformed input; small enough to
+//! audit. Serialization goes through [`Json`]'s `Display` impl; object
+//! keys render sorted (`BTreeMap`), so documents are deterministic and
+//! diff-friendly. `f64` values round-trip exactly: Rust's shortest
+//! round-trip `Display` feeds back through the parser's `str::parse`.
 
 use anyhow::{bail, ensure, Result};
 use std::collections::BTreeMap;
@@ -90,6 +94,91 @@ impl Json {
         self.get(key)
             .and_then(Json::as_str)
             .ok_or_else(|| anyhow::anyhow!("missing/invalid string field {key:?}"))
+    }
+
+    /// Required finite number field.
+    pub fn req_f64(&self, key: &str) -> Result<f64> {
+        self.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid number field {key:?}"))
+    }
+
+    /// Build an object from key/value pairs (serialization helper).
+    pub fn obj(pairs: impl IntoIterator<Item = (&'static str, Json)>) -> Json {
+        Json::Obj(
+            pairs
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        )
+    }
+
+    /// String value constructor.
+    pub fn of_str(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+
+    /// Number constructor (`u64` counters included — exact below 2^53,
+    /// which covers every counter this repo emits).
+    pub fn of_u64(v: u64) -> Json {
+        Json::Num(v as f64)
+    }
+
+    /// Serialize to a compact JSON string.
+    pub fn render(&self) -> String {
+        self.to_string()
+    }
+}
+
+fn escape_into(out: &mut std::fmt::Formatter<'_>, s: &str) -> std::fmt::Result {
+    use std::fmt::Write;
+    out.write_char('"')?;
+    for c in s.chars() {
+        match c {
+            '"' => out.write_str("\\\"")?,
+            '\\' => out.write_str("\\\\")?,
+            '\n' => out.write_str("\\n")?,
+            '\t' => out.write_str("\\t")?,
+            '\r' => out.write_str("\\r")?,
+            c if (c as u32) < 0x20 => write!(out, "\\u{:04x}", c as u32)?,
+            c => out.write_char(c)?,
+        }
+    }
+    out.write_char('"')
+}
+
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => f.write_str(if *b { "true" } else { "false" }),
+            // JSON has no NaN/Inf; emit null rather than invalid tokens.
+            Json::Num(n) if !n.is_finite() => f.write_str("null"),
+            Json::Num(n) => write!(f, "{n}"),
+            Json::Str(s) => escape_into(f, s),
+            Json::Arr(items) => {
+                f.write_str("[")?;
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(map) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    escape_into(f, k)?;
+                    f.write_str(":")?;
+                    write!(f, "{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
     }
 }
 
@@ -302,6 +391,48 @@ mod tests {
         assert_eq!(Json::parse("42").unwrap().as_u64().unwrap(), 42);
         assert_eq!(Json::parse("-1.5").unwrap().as_f64().unwrap(), -1.5);
         assert!(Json::parse("1.5").unwrap().as_u64().is_none());
+    }
+
+    #[test]
+    fn render_round_trips_through_parser() {
+        let doc = Json::obj([
+            ("name", Json::of_str("mcf \"quoted\"\n")),
+            ("count", Json::of_u64(12345)),
+            ("cycles", Json::Num(1234.56789)),
+            ("flags", Json::Arr(vec![Json::Bool(true), Json::Null])),
+            ("nested", Json::obj([("x", Json::Num(-2.5))])),
+        ]);
+        let text = doc.render();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, doc);
+    }
+
+    #[test]
+    fn render_f64_is_bit_exact_round_trip() {
+        // Serving equality checks compare f64 metric sums across the
+        // HTTP boundary; the shortest round-trip Display + str::parse
+        // pair must reproduce the exact bits.
+        for v in [
+            0.1f64 + 0.2,
+            1.0 / 3.0,
+            6.02214076e5,
+            123456789.123456789,
+            f64::MIN_POSITIVE,
+        ] {
+            let text = Json::Num(v).render();
+            let back = Json::parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "{text}");
+        }
+        // Non-finite values degrade to null, not invalid JSON.
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).render(), "null");
+    }
+
+    #[test]
+    fn render_escapes_control_characters() {
+        let j = Json::of_str("a\u{1}b");
+        assert_eq!(j.render(), "\"a\\u0001b\"");
+        assert_eq!(Json::parse(&j.render()).unwrap(), j);
     }
 
     #[test]

@@ -1,8 +1,9 @@
 //! Small shared utilities: deterministic PRNG, timing helpers, bench
-//! harness + trajectory gate.
+//! harness + trajectory gate, content hashing.
 
 pub mod benchgate;
 pub mod benchkit;
+pub mod hash;
 pub mod json;
 pub mod rng;
 pub mod timer;

@@ -8,8 +8,10 @@
 
 pub mod bench;
 pub mod builder;
+pub mod scenarios;
 
 pub use builder::{Label, ProgramBuilder};
+pub use scenarios::{mixed_scenarios, ScenarioArtifact, ScenarioJob};
 
 use crate::isa::Program;
 

@@ -1,0 +1,131 @@
+//! Serving scenario mixes for `tao loadgen`.
+//!
+//! A scenario is one simulation request: a benchmark trace (bench ×
+//! seed × length) against an artifact, with a Table-3 detailed design
+//! attached when the artifact is a SimNet baseline (its µarch-specific
+//! context input). Mixes are deterministic in the seed so phases can
+//! be replayed exactly — the warm-cache phase replays the cold phase's
+//! scenarios verbatim, and disjoint seed bases keep phases from
+//! cross-warming each other.
+
+/// One loadgen job, serving-layer agnostic (the loadgen client maps it
+/// onto the wire protocol's `JobSpec`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScenarioJob {
+    /// Benchmark short name.
+    pub bench: String,
+    /// Trace length.
+    pub insts: u64,
+    /// Trace seed.
+    pub seed: u64,
+    /// Artifact registry name.
+    pub artifact: String,
+    /// Context design for SimNet artifacts.
+    pub ctx_uarch: Option<String>,
+}
+
+/// An artifact available for scenario building.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScenarioArtifact {
+    /// Registry name.
+    pub name: String,
+    /// Needs a `ctx_uarch` (SimNet baseline).
+    pub simnet: bool,
+}
+
+/// Context designs rotated across SimNet scenarios: the three preset
+/// µarchs plus sampled Table 3 design points (`dse::DesignSpace`
+/// indices), so a mix genuinely sweeps the design space.
+pub const CTX_DESIGNS: [&str; 5] = ["a", "b", "c", "design:12345", "design:67890"];
+
+/// Build `jobs` mixed scenarios: benches cycle in Table 2 suite order,
+/// trace lengths rotate through three deliberately batch-misaligned
+/// sizes around `base_insts` (tail-heavy small requests are where
+/// cross-job packing pays), artifacts round-robin, and each job gets a
+/// distinct trace seed derived from `seed_base`.
+pub fn mixed_scenarios(
+    artifacts: &[ScenarioArtifact],
+    jobs: usize,
+    base_insts: u64,
+    seed_base: u64,
+) -> Vec<ScenarioJob> {
+    assert!(!artifacts.is_empty(), "scenario mix needs at least one artifact");
+    assert!(base_insts >= 2, "scenario traces must be non-trivial");
+    let suite = super::suite();
+    // Four sizes against the usual three-artifact sets: coprime cycle
+    // lengths, so sizes and artifacts cross fully instead of pairing.
+    let sizes = [
+        base_insts,
+        base_insts / 2 + 1,
+        base_insts + base_insts / 2 + 3,
+        base_insts / 3 + 2,
+    ];
+    (0..jobs)
+        .map(|i| {
+            let art = &artifacts[i % artifacts.len()];
+            ScenarioJob {
+                bench: suite[i % suite.len()].name.to_string(),
+                insts: sizes[i % sizes.len()],
+                seed: seed_base + i as u64,
+                artifact: art.name.clone(),
+                ctx_uarch: art
+                    .simnet
+                    .then(|| CTX_DESIGNS[i % CTX_DESIGNS.len()].to_string()),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arts() -> Vec<ScenarioArtifact> {
+        vec![
+            ScenarioArtifact { name: "tao_x".into(), simnet: false },
+            ScenarioArtifact { name: "tao_y".into(), simnet: false },
+            ScenarioArtifact { name: "simnet_x".into(), simnet: true },
+        ]
+    }
+
+    #[test]
+    fn mix_is_deterministic_and_covers_artifacts() {
+        let a = mixed_scenarios(&arts(), 24, 150, 1000);
+        let b = mixed_scenarios(&arts(), 24, 150, 1000);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 24);
+        for art in arts() {
+            assert!(a.iter().any(|j| j.artifact == art.name), "{} unused", art.name);
+        }
+        // Every SimNet job carries a context design; Tao jobs none.
+        for j in &a {
+            assert_eq!(j.ctx_uarch.is_some(), j.artifact == "simnet_x");
+        }
+        // All seeds distinct (no accidental intra-phase cache hits).
+        let mut seeds: Vec<u64> = a.iter().map(|j| j.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 24);
+        // Disjoint seed bases don't collide.
+        let c = mixed_scenarios(&arts(), 24, 150, 5000);
+        assert!(a.iter().zip(&c).all(|(x, y)| x.seed != y.seed));
+    }
+
+    #[test]
+    fn mix_rotates_table3_designs() {
+        let sim_only = vec![ScenarioArtifact { name: "sn".into(), simnet: true }];
+        let jobs = mixed_scenarios(&sim_only, 10, 100, 0);
+        let designs: std::collections::HashSet<_> =
+            jobs.iter().filter_map(|j| j.ctx_uarch.clone()).collect();
+        assert_eq!(designs.len(), CTX_DESIGNS.len());
+        assert!(designs.contains("design:12345"));
+    }
+
+    #[test]
+    fn benches_cycle_suite_order() {
+        let jobs = mixed_scenarios(&arts(), 9, 100, 0);
+        assert_eq!(jobs[0].bench, "dee");
+        assert_eq!(jobs[8].bench, "dee");
+        assert_eq!(jobs[4].bench, "mcf");
+    }
+}

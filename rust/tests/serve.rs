@@ -1,0 +1,223 @@
+//! Serving-subsystem integration tests: a real `tao serve` daemon on a
+//! loopback socket, concurrent mixed jobs (Tao + SimNet artifacts,
+//! preset and Table-3 context designs), and the correctness contract —
+//! served per-job `Metrics` *identical* to the offline
+//! `simulate_chunked` engine, cold cache and warm cache alike — plus
+//! admission backpressure and graceful drain.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use tao_sim::runtime::ArtifactPool;
+use tao_sim::serve::cli::write_surrogate_set;
+use tao_sim::serve::http::{http_get, http_post};
+use tao_sim::serve::loadgen::{assert_identical, offline_reference};
+use tao_sim::serve::protocol::{JobOutcome, JobSpec, StatsSnapshot};
+use tao_sim::serve::{ServeConfig, Server};
+use tao_sim::workloads::{mixed_scenarios, ScenarioArtifact};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("tao-serve-test-{}-{tag}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn get_stats(addr: &str) -> StatsSnapshot {
+    let resp = http_get(addr, "/v1/stats").unwrap();
+    assert_eq!(resp.status, 200);
+    StatsSnapshot::from_json(&resp.body).unwrap()
+}
+
+fn post_job(addr: &str, spec: &JobSpec) -> JobOutcome {
+    let resp = http_post(addr, "/v1/simulate", &spec.to_json()).unwrap();
+    assert_eq!(resp.status, 200, "job {spec:?} failed: {}", resp.body);
+    JobOutcome::from_json(&resp.body).unwrap()
+}
+
+/// The tentpole contract: concurrent mixed jobs through the daemon,
+/// every served result byte-identical to the offline engine — then a
+/// second pass where every chunk hits the prediction cache, with
+/// identical results, zero extra batches, and higher packed occupancy
+/// than per-request execution would reach.
+#[test]
+fn loopback_concurrent_jobs_match_offline_cold_and_cached() {
+    let dir = temp_dir("equality");
+    let models = write_surrogate_set(&dir).unwrap();
+    let pool = ArtifactPool::load(&models).unwrap();
+    let batch = pool.get("serve_tao_a").unwrap().meta.batch as u64;
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        queue_depth: 32,
+        max_active: 16,
+        cache_entries: 512,
+        max_insts: 1_000_000,
+        pipeline: true,
+        admission_wait_ms: 100,
+    };
+    let server = Server::bind(pool, &cfg).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let srv = std::thread::spawn(move || server.run());
+
+    let arts = vec![
+        ScenarioArtifact { name: "serve_tao_a".into(), simnet: false },
+        ScenarioArtifact { name: "serve_tao_b".into(), simnet: false },
+        ScenarioArtifact { name: "serve_simnet_a".into(), simnet: true },
+    ];
+    let specs: Vec<JobSpec> = mixed_scenarios(&arts, 12, 150, 7)
+        .iter()
+        .map(|j| JobSpec {
+            bench: j.bench.clone(),
+            insts: j.insts,
+            seed: j.seed,
+            artifact: j.artifact.clone(),
+            chunk: 48,
+            ctx_uarch: j.ctx_uarch.clone(),
+        })
+        .collect();
+
+    let submit_all = |tag: &str| -> Vec<JobOutcome> {
+        let mut outs: Vec<Option<JobOutcome>> = vec![None; specs.len()];
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = specs
+                .iter()
+                .map(|spec| {
+                    let addr = addr.clone();
+                    scope.spawn(move || post_job(&addr, spec))
+                })
+                .collect();
+            for (slot, h) in outs.iter_mut().zip(handles) {
+                *slot = Some(h.join().unwrap_or_else(|_| panic!("{tag}: client panicked")));
+            }
+        });
+        outs.into_iter().map(Option::unwrap).collect()
+    };
+
+    // Pass 1: cold cache. Every chunk misses; every window executes.
+    let cold = submit_all("cold");
+    let after_cold = get_stats(&addr);
+    for (spec, out) in specs.iter().zip(&cold) {
+        let offline = offline_reference(spec, &dir).unwrap();
+        assert_identical(&out.metrics, &offline, &format!("cold {spec:?}")).unwrap();
+        assert_eq!(out.metrics.instructions, spec.insts);
+        assert_eq!(out.cache_hits, 0, "cold pass must not hit");
+        assert_eq!(out.windows, spec.insts);
+    }
+
+    // Cross-job packing beats per-request batches: measured occupancy
+    // must exceed what the same jobs would reach executing solo (each
+    // padding its own tail to the batch boundary).
+    let solo_slots: u64 = specs.iter().map(|s| s.insts.div_ceil(batch) * batch).sum();
+    let solo_windows: u64 = specs.iter().map(|s| s.insts).sum();
+    let solo_occupancy = solo_windows as f64 / solo_slots as f64;
+    assert!(
+        after_cold.occupancy() > solo_occupancy,
+        "packed occupancy {:.3} must exceed solo occupancy {:.3}",
+        after_cold.occupancy(),
+        solo_occupancy
+    );
+    assert_eq!(after_cold.packed_windows, solo_windows);
+
+    // Pass 2: warm cache. Identical metrics, every chunk hits, zero
+    // additional model batches.
+    let warm = submit_all("warm");
+    let after_warm = get_stats(&addr);
+    for (spec, out) in specs.iter().zip(&warm) {
+        let offline = offline_reference(spec, &dir).unwrap();
+        assert_identical(&out.metrics, &offline, &format!("warm {spec:?}")).unwrap();
+        assert_eq!(
+            out.cache_hits,
+            spec.insts.div_ceil(spec.chunk as u64),
+            "warm pass must hit every chunk of {spec:?}"
+        );
+        assert_eq!(out.windows, 0, "warm pass must skip model execution");
+    }
+    assert_eq!(after_warm.batches, after_cold.batches, "warm pass executed batches");
+    assert!(after_warm.cache_hits > after_cold.cache_hits);
+
+    // Graceful drain: shutdown, then the daemon exits cleanly.
+    let resp = http_post(&addr, "/v1/shutdown", "").unwrap();
+    assert_eq!(resp.status, 200);
+    let final_stats = srv.join().unwrap().unwrap();
+    assert_eq!(final_stats.jobs_done, 2 * specs.len() as u64);
+    assert_eq!(final_stats.active_jobs, 0);
+    assert_eq!(final_stats.queue_depth, 0);
+
+    // The socket is gone (or refuses) after drain.
+    assert!(http_get(&addr, "/healthz").is_err(), "daemon still accepting after drain");
+}
+
+/// Admission control: with a single-slot lane and a single-slot queue,
+/// a third concurrent job gets a retryable 429; draining finishes both
+/// accepted jobs.
+#[test]
+fn backpressure_rejects_and_drain_finishes_in_flight_jobs() {
+    let dir = temp_dir("backpressure");
+    // T = 1 keeps per-window surrogate hashing cheap while the jobs
+    // are long enough to stay in flight during the assertions.
+    let hlo = tao_sim::runtime::write_surrogate_artifact(&dir, "bp", 8, 1).unwrap();
+    let pool = ArtifactPool::load(&[hlo]).unwrap();
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        queue_depth: 1,
+        max_active: 1,
+        cache_entries: 0,
+        max_insts: 1_000_000,
+        pipeline: true,
+        admission_wait_ms: 0,
+    };
+    let server = Server::bind(pool, &cfg).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let srv = std::thread::spawn(move || server.run());
+
+    let spec = |seed: u64| JobSpec {
+        bench: "mcf".into(),
+        insts: 120_000,
+        seed,
+        artifact: "bp".into(),
+        chunk: 4_096,
+        ctx_uarch: None,
+    };
+    let wait_until = |pred: &dyn Fn(&StatsSnapshot) -> bool, what: &str| {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let s = get_stats(&addr);
+            if pred(&s) {
+                return;
+            }
+            assert!(Instant::now() < deadline, "timed out waiting for {what}: {s:?}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    };
+
+    std::thread::scope(|scope| {
+        // Job 1 occupies the lane.
+        let a = {
+            let (addr, s) = (addr.clone(), spec(1));
+            scope.spawn(move || post_job(&addr, &s))
+        };
+        wait_until(&|s| s.active_jobs == 1, "job 1 active");
+        // Job 2 fills the queue's single slot.
+        let b = {
+            let (addr, s) = (addr.clone(), spec(2));
+            scope.spawn(move || post_job(&addr, &s))
+        };
+        wait_until(&|s| s.queue_depth == 1, "job 2 queued");
+        // Job 3 must bounce with a retryable 429.
+        let resp = http_post(&addr, "/v1/simulate", &spec(3).to_json()).unwrap();
+        assert_eq!(resp.status, 429, "expected backpressure, got: {}", resp.body);
+        assert!(tao_sim::serve::protocol::error_retryable(&resp.body));
+
+        // Drain mid-flight: both accepted jobs must still complete.
+        let resp = http_post(&addr, "/v1/shutdown", "").unwrap();
+        assert_eq!(resp.status, 200);
+        let out_a = a.join().unwrap();
+        let out_b = b.join().unwrap();
+        assert_eq!(out_a.metrics.instructions, 120_000);
+        assert_eq!(out_b.metrics.instructions, 120_000);
+        assert!(out_a.metrics.cycles > 0.0 && out_b.metrics.cycles > 0.0);
+    });
+
+    let final_stats = srv.join().unwrap().unwrap();
+    assert_eq!(final_stats.jobs_done, 2);
+    assert_eq!(final_stats.jobs_rejected, 1);
+}

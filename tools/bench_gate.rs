@@ -5,9 +5,14 @@
 //! instructions/sec regression).
 //!
 //! ```text
-//! bench_gate BENCH_coordinator.json BENCH_features.json \
+//! bench_gate BENCH_coordinator.json BENCH_features.json BENCH_serve.json \
 //!     [--baselines DIR] [--tolerance 0.15] [--min-baselines 3]
 //! ```
+//!
+//! `BENCH_serve.json` comes out of `make bench-serve` (`tao loadgen`
+//! against a local `tao serve`): its cases carry simulated
+//! instructions/sec per serving phase (solo, concurrent cold,
+//! concurrent warm), so the same items/sec trajectory policy applies.
 //!
 //! Exit codes: 0 clean or warn-only, 1 enforced regression, 2 usage or
 //! I/O error.
