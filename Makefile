@@ -32,7 +32,9 @@ bench:
 # CI smoke benches: reduced counts, emits BENCH_coordinator.json,
 # BENCH_features.json and BENCH_serve.json (via bench-serve) with
 # instructions/sec + per-batch staging latency so successive PRs have a
-# perf trajectory.
+# perf trajectory. BENCH_coordinator.json also records pipelined-vs-
+# serial engine items/sec per worker count plus the stage/execute
+# occupancy counters (pipeline_* metrics; bench-gate surfaces them).
 bench-smoke:
 	cargo bench --bench coordinator -- --smoke --json BENCH_coordinator.json
 	cargo bench --bench features -- --smoke --json BENCH_features.json

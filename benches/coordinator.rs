@@ -20,6 +20,7 @@ use std::path::{Path, PathBuf};
 use tao_sim::coordinator::engine::{self, NaiveWindowBatcher, ParallelOptions, WindowBatcher};
 use tao_sim::features::FeatureConfig;
 use tao_sim::functional::FunctionalSim;
+use tao_sim::trace::SliceChunkSource;
 use tao_sim::util::benchkit::{Bench, BenchOpts, BenchReport};
 use tao_sim::workloads;
 
@@ -124,18 +125,77 @@ fn main() {
     let program = workloads::by_name("dee").unwrap().build(42);
     let cols = FunctionalSim::new(&program).run(insts).to_columns();
     let eb = Bench::new("engine").iters(if opts.smoke { 1 } else { 2 });
-    let popts = ParallelOptions {
+    let serial_opts = ParallelOptions {
         chunk: 8_192,
         warmup: 1_024,
+        pipeline: false,
     };
+    let popts = ParallelOptions { pipeline: true, ..serial_opts };
+
+    // Pipelined (double-buffered stage/execute, the default path) vs
+    // the serial single-threaded oracle, per worker count — the
+    // offline-pipelining trajectory the gate watches.
     for workers in [1usize, 2, 4] {
-        let m = eb.run(&format!("dee-{}k/workers{workers}", insts / 1000), insts, || {
+        let ms = eb.run(&format!("dee-{}k/serial-workers{workers}", insts / 1000), insts, || {
+            engine::simulate_parallel_opts(&artifact, &cols, workers, None, serial_opts)
+                .expect("simulate")
+                .metrics
+                .instructions
+        });
+        let mp = eb.run(&format!("dee-{}k/workers{workers}", insts / 1000), insts, || {
             engine::simulate_parallel_opts(&artifact, &cols, workers, None, popts)
                 .expect("simulate")
                 .metrics
                 .instructions
         });
-        report.metric(&format!("engine_ips_workers{workers}"), m.items_per_sec());
+        report.metric(&format!("engine_serial_ips_workers{workers}"), ms.items_per_sec());
+        report.metric(&format!("engine_ips_workers{workers}"), mp.items_per_sec());
+        report.metric(
+            &format!("pipeline_speedup_workers{workers}"),
+            mp.items_per_sec() / ms.items_per_sec(),
+        );
+        report.push(ms);
+        report.push(mp);
+    }
+
+    // Occupancy counters from one instrumented pipelined run: is the
+    // pipeline execute-bound (executor busy, stager stalling on free
+    // buffers) or stage-bound (executor idling)?
+    let occ = engine::simulate_parallel_opts(&artifact, &cols, 2, None, popts).expect("simulate");
+    if let Some(ps) = occ.pipeline {
+        report.metric("pipeline_batches", ps.batches as f64);
+        report.metric("pipeline_exec_busy_frac", ps.exec_busy_fraction());
+        report.metric("pipeline_exec_idle_ms", ps.exec_idle_ns as f64 / 1e6);
+        report.metric("pipeline_stage_stall_ms", ps.stage_stall_ns as f64 / 1e6);
+        println!(
+            "engine: pipeline occupancy — {} batches, exec busy {:.1}%, stage stall {:.1}ms",
+            ps.batches,
+            ps.exec_busy_fraction() * 100.0,
+            ps.stage_stall_ns as f64 / 1e6,
+        );
+    }
+
+    // The chunked pull path (every `tao simulate --stream` run):
+    // dispatch-thread chunk prefetch + per-worker pipelining vs the
+    // fully serial pull.
+    for pipeline in [false, true] {
+        let tag = if pipeline { "chunked-pipelined" } else { "chunked-serial" };
+        let m = eb.run(&format!("dee-{}k/{tag}-workers2", insts / 1000), insts, || {
+            let mut src = SliceChunkSource::new(&cols, None).unwrap();
+            engine::simulate_parallel_chunked(
+                &artifact,
+                &mut src,
+                2,
+                ParallelOptions { pipeline, ..serial_opts },
+            )
+            .expect("simulate")
+            .metrics
+            .instructions
+        });
+        report.metric(
+            &format!("engine_chunked_{}_ips", if pipeline { "pipelined" } else { "serial" }),
+            m.items_per_sec(),
+        );
         report.push(m);
     }
 

@@ -29,6 +29,9 @@ pub fn cmd_simulate(mut args: Args) -> Result<()> {
     let mut opts = ParallelOptions {
         chunk: args.opt_parse("--chunk")?.unwrap_or(defaults.chunk),
         warmup: args.opt_parse("--warmup")?.unwrap_or(defaults.warmup),
+        // Double-buffered stage/execute workers; --no-pipeline runs the
+        // single-threaded oracle staging for A/B timing and debugging.
+        pipeline: !args.opt_flag("--no-pipeline"),
     };
     let truth_uarch = args.opt_value("--truth")?;
     let stream = args.opt_flag("--stream");
@@ -43,20 +46,23 @@ pub fn cmd_simulate(mut args: Args) -> Result<()> {
     let result = if stream {
         // Pull-based pipeline: the functional simulator generates
         // records only as inference workers pull chunks, so the trace is
-        // never resident. Peak buffering is ≈ workers × (chunk + warmup)
-        // records; clamp the pull grain to honor --max-resident, and
-        // refuse outright when the warm-up alone overflows the budget
-        // (a silent clamp would both break the bound and burn a full
-        // warm-up re-run per tiny chunk).
-        let per_worker = max_resident / workers.max(1);
+        // never resident. Peak buffering: each worker holds one
+        // (chunk + warmup)-row item, the dispatch thread's bounded
+        // prefetch channel holds up to `workers` more, plus one item in
+        // dispatch limbo — (2·workers + 1) items total. Clamp the pull
+        // grain so that whole budget honors --max-resident, and refuse
+        // outright when the warm-up alone overflows it (a silent clamp
+        // would both break the bound and burn a full warm-up re-run per
+        // tiny chunk).
+        let slots = 2 * workers.max(1) + 1;
+        let per_item = max_resident / slots;
         anyhow::ensure!(
-            per_worker > opts.warmup,
-            "--max-resident {max_resident} cannot hold {} workers x (chunk + {} warmup) \
-             records; raise --max-resident or lower --warmup",
-            workers.max(1),
+            per_item > opts.warmup,
+            "--max-resident {max_resident} cannot hold {slots} prefetched/in-flight items \
+             x (chunk + {} warmup) records; raise --max-resident or lower --warmup",
             opts.warmup
         );
-        opts.chunk = opts.chunk.min(per_worker - opts.warmup);
+        opts.chunk = opts.chunk.min(per_item - opts.warmup);
         eprintln!(
             "simulate: streaming {insts} insts of {bench_name} from the generator \
              (workers={workers}, chunk={}, warmup={}, max-resident={max_resident})...",

@@ -23,14 +23,26 @@
 //!   per worker), and each chunk re-runs a warm-up overlap region whose
 //!   predictions are discarded, so the cold-start approximation no
 //!   longer sits inside the measured region at every shard boundary.
+//! * **Double-buffered stage/execute** — each worker stages window
+//!   batch k+1 while batch k executes on a dedicated executor thread
+//!   (the shared [`crate::coordinator::pipeline::ExecPipeline`]); the
+//!   chunked paths additionally prefetch the next chunk off the source
+//!   on a bounded side thread. The single-threaded staging loop is
+//!   kept (`ParallelOptions::pipeline = false`) as the bit-identity
+//!   oracle.
 
+use crate::coordinator::pipeline::{
+    spawn_exec_pipeline, ExecBatch, ExecBuffers, ExecPipeline, PipeMsg, PipelineStats,
+};
 use crate::features::FeatureExtractor;
 use crate::runtime::{ArtifactMeta, ModelKind, ModelOutputs, Session};
 use crate::stats::{Metrics, PhaseSeries};
-use crate::trace::{ChunkBuf, FuncRecord, TraceColumns, CTX_WIDTH};
-use anyhow::{ensure, Context, Result};
+use crate::trace::{ChunkBuf, ChunkPrefetcher, FuncRecord, TraceColumns, CTX_WIDTH};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::VecDeque;
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -570,17 +582,10 @@ impl PredAccum {
         }
     }
 
-    /// Merge another shard's accumulator. Order-independent: any fold
-    /// order over a set of disjoint shards reconstructs the same
-    /// run-level metrics (the tail correction follows the globally last
-    /// instruction, not merge order). The internal absorb cursor also
-    /// advances by the merged instruction count, so a *consecutive*
-    /// shard's accumulator can be folded mid-stream and absorption can
-    /// resume afterwards at the correct global ordinal — the serving
-    /// cache replays chunk-level accumulators this way.
-    pub fn merge(&mut self, other: &PredAccum) {
+    /// The sums + tail selection shared by [`PredAccum::merge`] and
+    /// [`PredAccum::merge_from`]; everything except the absorb cursor.
+    fn fold(&mut self, other: &PredAccum) {
         self.instructions += other.instructions;
-        self.ordinal += other.instructions;
         self.fetch_cycles += other.fetch_cycles;
         if other.last_exec_at > self.last_exec_at {
             self.last_exec = other.last_exec;
@@ -590,6 +595,34 @@ impl PredAccum {
         self.l1d_misses += other.l1d_misses;
         self.l1i_misses += other.l1i_misses;
         self.tlb_misses += other.tlb_misses;
+    }
+
+    /// Merge a **consecutive** shard's accumulator. Order-independent
+    /// for the visible metrics: any fold order over a set of disjoint
+    /// shards reconstructs the same run-level metrics (the tail
+    /// correction follows the globally last instruction, not merge
+    /// order). The internal absorb cursor advances by the merged
+    /// instruction count, so a shard that directly follows this
+    /// accumulator's absorbed region can be folded mid-stream and
+    /// absorption can resume afterwards at the correct global ordinal —
+    /// the serving cache replays chunk-level accumulators this way.
+    pub fn merge(&mut self, other: &PredAccum) {
+        self.fold(other);
+        self.ordinal += other.instructions;
+    }
+
+    /// Merge a shard's accumulator **without assuming it follows the
+    /// absorbed region**: the pipelined workers fold per-chunk tails in
+    /// completion order, which is not global stream order, and
+    /// [`PredAccum::merge`]'s cursor advance would mis-place a later
+    /// absorb. `merge_from` instead jumps the cursor to the farthest
+    /// shard end seen so far, so no ordinal is ever re-tagged: once the
+    /// merged shards tile a prefix of the stream, absorption resumes at
+    /// the correct global ordinal regardless of arrival order. Visible
+    /// metrics are identical to [`PredAccum::merge`].
+    pub fn merge_from(&mut self, other: &PredAccum) {
+        self.fold(other);
+        self.ordinal = self.ordinal.max(other.ordinal);
     }
 
     /// Total predicted cycles (§4.2 reconstruction).
@@ -625,6 +658,9 @@ pub struct SimResult {
     pub batches: u64,
     /// Optional phase series (single-shard runs).
     pub phase: Option<PhaseSeries>,
+    /// Stage/execute occupancy counters, summed across workers
+    /// (pipelined runs only; `None` on the serial paths).
+    pub pipeline: Option<PipelineStats>,
 }
 
 impl SimResult {
@@ -814,6 +850,7 @@ pub fn simulate_source<S: RecordSource + ?Sized>(
         elapsed: start.elapsed(),
         batches: run.batches,
         phase: accum.phase.take(),
+        pipeline: None,
     })
 }
 
@@ -873,6 +910,7 @@ pub fn simulate_chunked<C: ChunkSource + ?Sized>(
         elapsed: start.elapsed(),
         batches,
         phase: accum.phase.take(),
+        pipeline: None,
     })
 }
 
@@ -900,6 +938,332 @@ pub fn simulate_columns(
 }
 
 // ---------------------------------------------------------------------
+// Pipelined execution (double-buffered stage/execute per worker)
+// ---------------------------------------------------------------------
+
+/// Routing tag the offline workers attach to each batch through the
+/// [`ExecPipeline`]: how many leading output rows are warm-up overlap
+/// whose predictions must be discarded.
+struct BatchTag {
+    skip: usize,
+}
+
+/// One shard whose model outputs have not fully come back yet. Batches
+/// never span shards (each shard ends with its own partial flush), so
+/// completions always fold into the front of the queue.
+struct PendingShard {
+    accum: PredAccum,
+    /// Batch rows still expected; `None` for an open-ended stream
+    /// (sequential chunked runs settle at finish, not per shard).
+    remaining: Option<usize>,
+}
+
+/// A worker's folded output.
+struct WorkerOut {
+    accum: PredAccum,
+    batches: u64,
+    stats: Option<PipelineStats>,
+}
+
+/// The stage side of one offline worker: the extractor and batchers
+/// run on the worker thread, filling one [`ExecBuffers`] set while the
+/// [`ExecPipeline`]'s executor thread runs the model from the other —
+/// the serving scheduler's double-buffering, extracted to the engine.
+///
+/// Completions arrive FIFO (submission order), so absorbing on receipt
+/// folds outputs in exactly the order the single-threaded
+/// [`simulate_stream`] loop would have — bit-identical accumulators,
+/// oracle-tested.
+struct PipelinedWorker {
+    pipe: ExecPipeline<BatchTag>,
+    scratch: ShardScratch,
+    kind: ModelKind,
+    pending: VecDeque<PendingShard>,
+    folded: PredAccum,
+    batches: u64,
+    /// Warm-up rows of the current shard not yet attributed to a batch.
+    skip: usize,
+}
+
+impl PipelinedWorker {
+    /// Spawn the executor thread for `artifact` (the session compiles
+    /// on that thread) and size the staging state off `meta`.
+    fn new(artifact: &Path, meta: &ArtifactMeta) -> PipelinedWorker {
+        let path = artifact.to_path_buf();
+        let pipe = spawn_exec_pipeline(
+            move || Session::load(&path).with_context(|| format!("load {path:?}")),
+            meta.kind,
+            meta.batch,
+            meta.context,
+            meta.feature_dim,
+            2,
+        );
+        PipelinedWorker {
+            pipe,
+            scratch: ShardScratch::new(meta),
+            kind: meta.kind,
+            pending: VecDeque::new(),
+            folded: PredAccum::default(),
+            batches: 0,
+            skip: 0,
+        }
+    }
+
+    /// Open a new shard: reset the staging state (fresh extractor /
+    /// window history) and queue its accumulator for in-order
+    /// absorption. `rows` is the total batch rows the shard will stage
+    /// (warm-up included); `None` marks an open-ended stream.
+    fn begin_shard(&mut self, accum: PredAccum, rows: Option<usize>, warmup: usize) {
+        debug_assert!(rows != Some(0), "empty shard");
+        debug_assert_eq!(self.scratch.batcher.staged, 0, "shard began mid-batch");
+        self.scratch.reset();
+        self.skip = warmup;
+        self.pending.push_back(PendingShard { accum, remaining: rows });
+    }
+
+    /// Fold one completion into the front shard; hands the buffer set
+    /// back for restaging.
+    fn absorb_msg(
+        &mut self,
+        msg: PipeMsg<ExecBuffers, ExecBatch<BatchTag>, ModelOutputs>,
+    ) -> Result<ExecBuffers> {
+        let (buf, payload, result) = match msg {
+            PipeMsg::Done { buf, payload, result } => (buf, payload, result),
+            PipeMsg::InitFailed { msg } => bail!("pipelined executor: {msg}"),
+        };
+        let out = result.map_err(|e| anyhow::anyhow!("pipelined executor: {e}"))?;
+        let shard = self.pending.front_mut().expect("batch output with no open shard");
+        shard.accum.absorb_range(&out, self.kind, payload.tag.skip);
+        if let Some(remaining) = &mut shard.remaining {
+            debug_assert!(*remaining >= payload.valid, "shard over-absorbed");
+            *remaining -= payload.valid;
+            if *remaining == 0 {
+                let done = self.pending.pop_front().expect("front shard vanished");
+                self.folded.merge_from(&done.accum);
+            }
+        }
+        Ok(buf)
+    }
+
+    /// A free buffer set to stage into — from the free list, or by
+    /// blocking on the oldest in-flight batch (the double-buffer
+    /// rotation point).
+    fn acquire(&mut self) -> Result<ExecBuffers> {
+        if let Some(buf) = self.pipe.take_buf() {
+            return Ok(buf);
+        }
+        let msg = self.pipe.recv()?;
+        self.absorb_msg(msg)
+    }
+
+    /// Materialize the staged windows into a free buffer set and hand
+    /// them to the executor thread. No-op when nothing is staged.
+    fn flush(&mut self) -> Result<()> {
+        let staged = self.scratch.batcher.staged;
+        if staged == 0 {
+            return Ok(());
+        }
+        let mut bufs = self.acquire()?;
+        self.scratch.batcher.materialize(&mut bufs.ops, &mut bufs.feats);
+        if self.kind == ModelKind::SimNet {
+            self.scratch.ctx.materialize(&mut bufs.ctx);
+        }
+        self.scratch.batcher.clear_staged();
+        self.scratch.ctx.clear_staged();
+        let skip_now = self.skip.min(staged);
+        self.skip -= skip_now;
+        self.pipe
+            .submit(bufs, ExecBatch { valid: staged, tag: BatchTag { skip: skip_now } })?;
+        self.batches += 1;
+        Ok(())
+    }
+
+    /// Stage one record (and, for SimNet, its context row); flushes
+    /// through the pipeline when the batch fills. The pipelined twin of
+    /// [`stage_record`] — same batchers, same flush grid.
+    fn stage(&mut self, rec: &FuncRecord, ctx_row: Option<&[f32]>) -> Result<()> {
+        let row = self.scratch.batcher.begin_row();
+        let opcode = self.scratch.fx.extract_into(rec, row);
+        let full = self.scratch.batcher.commit_row(opcode);
+        if self.kind == ModelKind::SimNet {
+            self.scratch
+                .ctx
+                .push(ctx_row.expect("SimNet ctx validated by the caller"));
+        }
+        if full {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Flush the partial tail, drain every in-flight batch, join the
+    /// executor. Returns the folded accumulator (or, for an open-ended
+    /// stream, its single accumulator with phase tracking intact), the
+    /// batch count and the occupancy counters.
+    fn finish(mut self) -> Result<(PredAccum, u64, PipelineStats)> {
+        self.flush()?;
+        while self.pipe.in_flight() > 0 {
+            let msg = self.pipe.recv()?;
+            let buf = self.absorb_msg(msg)?;
+            self.pipe.release(buf);
+        }
+        let stats = self.pipe.stats();
+        self.pipe.shutdown();
+        match self.pending.pop_front() {
+            None => Ok((self.folded, self.batches, stats)),
+            Some(open) if open.remaining.is_none() && self.pending.is_empty() => {
+                Ok((open.accum, self.batches, stats))
+            }
+            Some(_) => bail!("pipelined worker finished with unabsorbed shards"),
+        }
+    }
+}
+
+/// Pipelined twin of [`simulate_stream`]: stage `source[start-warmup ..
+/// end]` through the worker's pipeline, absorbing predictions only for
+/// `[start, end)`. Same validation, same flush grid, same skip
+/// accounting — the outputs fold in identical order.
+fn run_shard_pipelined<S: RecordSource + ?Sized>(
+    worker: &mut PipelinedWorker,
+    source: &S,
+    start: usize,
+    end: usize,
+    warmup: usize,
+    ctx_metrics: Option<&[f32]>,
+    accum: PredAccum,
+) -> Result<()> {
+    let kind = worker.kind;
+    ensure!(start <= end && end <= source.len(), "bad stream range");
+    ensure!(warmup <= start, "warm-up region precedes the trace");
+    if kind == ModelKind::SimNet {
+        ensure!(
+            ctx_metrics.map(|c| c.len()) == Some(source.len() * CTX_WIDTH),
+            "SimNet requires [N×6] context metrics"
+        );
+    }
+    let base = start - warmup;
+    if base == end {
+        return Ok(());
+    }
+    worker.begin_shard(accum, Some(end - base), warmup);
+    for i in base..end {
+        let rec = source.get(i);
+        let ctx_row = if kind == ModelKind::SimNet {
+            ctx_metrics.map(|c| &c[i * CTX_WIDTH..(i + 1) * CTX_WIDTH])
+        } else {
+            None
+        };
+        worker.stage(&rec, ctx_row)?;
+    }
+    worker.flush()
+}
+
+/// Pipelined sequential fallback over a resident source: one worker,
+/// one shard covering the whole range — identical staging and absorb
+/// order to [`simulate_source`], with execution overlapped.
+fn simulate_range_pipelined<S: RecordSource + ?Sized>(
+    artifact: &Path,
+    source: &S,
+    ctx_metrics: Option<&[f32]>,
+) -> Result<SimResult> {
+    let meta = ArtifactMeta::load(artifact).with_context(|| format!("load {artifact:?}"))?;
+    let start = Instant::now();
+    let mut worker = PipelinedWorker::new(artifact, &meta);
+    let accum = PredAccum::default();
+    run_shard_pipelined(&mut worker, source, 0, source.len(), 0, ctx_metrics, accum)?;
+    let (accum, batches, stats) = worker.finish()?;
+    Ok(SimResult {
+        metrics: accum.metrics(),
+        elapsed: start.elapsed(),
+        batches,
+        phase: None,
+        pipeline: Some(stats),
+    })
+}
+
+/// Pipelined twin of [`simulate_chunked`]: the same rolling-state
+/// sequential pull (results identical to a fully resident pass), with
+/// two overlaps added — batch staging overlaps model execution through
+/// the [`ExecPipeline`], and the next chunk is prefetched off the
+/// source on a bounded side thread ([`ChunkPrefetcher`]) so source I/O
+/// (file reads / functional-sim generation) overlaps both. Peak trace
+/// buffering stays O(`chunk_rows`) times the small fixed pool.
+pub fn simulate_chunked_pipelined<C>(
+    artifact: &Path,
+    source: &mut C,
+    chunk_rows: usize,
+    phase_window: Option<u64>,
+) -> Result<SimResult>
+where
+    C: ChunkSource + Send + ?Sized,
+{
+    ensure!(chunk_rows >= 1, "chunk_rows must be positive");
+    let meta = ArtifactMeta::load(artifact).with_context(|| format!("load {artifact:?}"))?;
+    let kind = meta.kind;
+    let seed = match phase_window {
+        Some(w) => PredAccum::with_phase(w),
+        None => PredAccum::default(),
+    };
+    let start = Instant::now();
+    let (mut accum, batches, stats) =
+        std::thread::scope(|scope| -> Result<(PredAccum, u64, PipelineStats)> {
+            let mut prefetch = ChunkPrefetcher::spawn(scope, source, chunk_rows, 2);
+            let mut worker = PipelinedWorker::new(artifact, &meta);
+            worker.begin_shard(seed, None, 0);
+            while let Some(buf) = prefetch.next()? {
+                let n = buf.len();
+                if kind == ModelKind::SimNet {
+                    ensure!(
+                        buf.ctx.len() == n * CTX_WIDTH,
+                        "SimNet requires [n×6] context metrics per chunk ({} for {n} records)",
+                        buf.ctx.len()
+                    );
+                }
+                for i in 0..n {
+                    let rec = buf.cols.record(i);
+                    let ctx_row = (kind == ModelKind::SimNet)
+                        .then(|| &buf.ctx[i * CTX_WIDTH..(i + 1) * CTX_WIDTH]);
+                    worker.stage(&rec, ctx_row)?;
+                }
+                prefetch.recycle(buf);
+            }
+            worker.finish()
+        })?;
+    if let Some(ph) = &mut accum.phase {
+        ph.finish();
+    }
+    Ok(SimResult {
+        metrics: accum.metrics(),
+        elapsed: start.elapsed(),
+        batches,
+        phase: accum.phase.take(),
+        pipeline: Some(stats),
+    })
+}
+
+/// Fold per-worker results into the run-level [`SimResult`].
+fn collect_workers(results: Vec<Result<WorkerOut>>, start_wall: Instant) -> Result<SimResult> {
+    let mut accum = PredAccum::default();
+    let mut batches = 0u64;
+    let mut stats: Option<PipelineStats> = None;
+    for r in results {
+        let out = r?;
+        accum.merge_from(&out.accum);
+        batches += out.batches;
+        if let Some(s) = out.stats {
+            stats.get_or_insert_with(PipelineStats::default).absorb(&s);
+        }
+    }
+    Ok(SimResult {
+        metrics: accum.metrics(),
+        elapsed: start_wall.elapsed(),
+        batches,
+        phase: None,
+        pipeline: stats,
+    })
+}
+
+// ---------------------------------------------------------------------
 // Parallel streaming
 // ---------------------------------------------------------------------
 
@@ -910,6 +1274,11 @@ pub struct ParallelOptions {
     pub chunk: usize,
     /// Warm-up overlap re-run before each chunk (predictions discarded).
     pub warmup: usize,
+    /// Double-buffered stage/execute pipelining per worker (staging of
+    /// batch k+1 overlaps model execution of batch k on a dedicated
+    /// executor thread). `false` runs the original single-threaded
+    /// stage→execute loop — kept as the bit-identity oracle.
+    pub pipeline: bool,
 }
 
 impl Default for ParallelOptions {
@@ -920,6 +1289,7 @@ impl Default for ParallelOptions {
         ParallelOptions {
             chunk: 65_536,
             warmup: 4_096,
+            pipeline: true,
         }
     }
 }
@@ -966,7 +1336,12 @@ pub fn simulate_parallel_opts<S: RecordSource + Sync + ?Sized>(
     ensure!(opts.chunk >= 1, "chunk must be positive");
     let n = source.len();
     if workers == 1 || n < workers * 1024 {
-        // Sequential path: exact, no chunk boundaries at all.
+        // Sequential path: exact, no chunk boundaries at all. The
+        // pipelined variant overlaps staging with execution; the serial
+        // one is the single-threaded oracle.
+        if opts.pipeline {
+            return simulate_range_pipelined(artifact, source, ctx_metrics);
+        }
         let mut session = Session::load(artifact)?;
         return simulate_source(&mut session, source, ctx_metrics, None);
     }
@@ -977,38 +1352,36 @@ pub fn simulate_parallel_opts<S: RecordSource + Sync + ?Sized>(
     let chunks = n.div_ceil(chunk);
     let start_wall = Instant::now();
     let cursor = AtomicUsize::new(0);
-    let results: Vec<Result<(PredAccum, u64)>> = std::thread::scope(|scope| {
+    let results: Vec<Result<WorkerOut>> = std::thread::scope(|scope| {
         let mut handles = Vec::new();
         for w in 0..workers.min(chunks) {
             let cursor = &cursor;
-            handles.push(scope.spawn(move || -> Result<(PredAccum, u64)> {
-                let mut session = Session::load(artifact)
-                    .with_context(|| format!("worker {w}: load {artifact:?}"))?;
-                let mut scratch = ShardScratch::new(session.meta());
-                let mut folded = PredAccum::default();
-                let mut batches = 0u64;
-                loop {
-                    let c = cursor.fetch_add(1, Ordering::Relaxed);
-                    if c >= chunks {
-                        break;
-                    }
-                    let start = c * chunk;
-                    let end = (start + chunk).min(n);
-                    let warm = opts.warmup.min(start);
-                    let run = simulate_stream(
-                        &mut session,
-                        &mut scratch,
+            handles.push(scope.spawn(move || -> Result<WorkerOut> {
+                if opts.pipeline {
+                    slice_worker_pipelined(
+                        artifact,
                         source,
-                        start,
-                        end,
-                        warm,
                         ctx_metrics,
-                        PredAccum::at_base(start as u64),
-                    )?;
-                    folded.merge(&run.accum);
-                    batches += run.batches;
+                        cursor,
+                        chunks,
+                        chunk,
+                        n,
+                        opts.warmup,
+                        w,
+                    )
+                } else {
+                    slice_worker_serial(
+                        artifact,
+                        source,
+                        ctx_metrics,
+                        cursor,
+                        chunks,
+                        chunk,
+                        n,
+                        opts.warmup,
+                        w,
+                    )
                 }
-                Ok((folded, batches))
             }));
         }
         handles
@@ -1016,20 +1389,92 @@ pub fn simulate_parallel_opts<S: RecordSource + Sync + ?Sized>(
             .map(|h| h.join().expect("worker panicked"))
             .collect()
     });
+    collect_workers(results, start_wall)
+}
 
-    let mut accum = PredAccum::default();
+/// One serial worker of [`simulate_parallel_opts`] (the oracle path):
+/// stage→execute on a single thread per chunk pulled off the cursor.
+#[allow(clippy::too_many_arguments)]
+fn slice_worker_serial<S: RecordSource + Sync + ?Sized>(
+    artifact: &Path,
+    source: &S,
+    ctx_metrics: Option<&[f32]>,
+    cursor: &AtomicUsize,
+    chunks: usize,
+    chunk: usize,
+    n: usize,
+    warmup: usize,
+    w: usize,
+) -> Result<WorkerOut> {
+    let mut session =
+        Session::load(artifact).with_context(|| format!("worker {w}: load {artifact:?}"))?;
+    let mut scratch = ShardScratch::new(session.meta());
+    let mut folded = PredAccum::default();
     let mut batches = 0u64;
-    for r in results {
-        let (a, b) = r?;
-        accum.merge(&a);
-        batches += b;
+    loop {
+        let c = cursor.fetch_add(1, Ordering::Relaxed);
+        if c >= chunks {
+            break;
+        }
+        let start = c * chunk;
+        let end = (start + chunk).min(n);
+        let warm = warmup.min(start);
+        let run = simulate_stream(
+            &mut session,
+            &mut scratch,
+            source,
+            start,
+            end,
+            warm,
+            ctx_metrics,
+            PredAccum::at_base(start as u64),
+        )?;
+        folded.merge(&run.accum);
+        batches += run.batches;
     }
-    Ok(SimResult {
-        metrics: accum.metrics(),
-        elapsed: start_wall.elapsed(),
-        batches,
-        phase: None,
-    })
+    Ok(WorkerOut { accum: folded, batches, stats: None })
+}
+
+/// One pipelined worker of [`simulate_parallel_opts`]: same chunk
+/// cursor, same warm-up grid, but the model executes from the other
+/// buffer set while this thread stages the next batch — and because
+/// staging state lives on this side, the worker rolls straight into
+/// chunk k+1 while chunk k's tail batches are still executing.
+#[allow(clippy::too_many_arguments)]
+fn slice_worker_pipelined<S: RecordSource + Sync + ?Sized>(
+    artifact: &Path,
+    source: &S,
+    ctx_metrics: Option<&[f32]>,
+    cursor: &AtomicUsize,
+    chunks: usize,
+    chunk: usize,
+    n: usize,
+    warmup: usize,
+    w: usize,
+) -> Result<WorkerOut> {
+    let meta =
+        ArtifactMeta::load(artifact).with_context(|| format!("worker {w}: load {artifact:?}"))?;
+    let mut worker = PipelinedWorker::new(artifact, &meta);
+    loop {
+        let c = cursor.fetch_add(1, Ordering::Relaxed);
+        if c >= chunks {
+            break;
+        }
+        let start = c * chunk;
+        let end = (start + chunk).min(n);
+        let warm = warmup.min(start);
+        run_shard_pipelined(
+            &mut worker,
+            source,
+            start,
+            end,
+            warm,
+            ctx_metrics,
+            PredAccum::at_base(start as u64),
+        )?;
+    }
+    let (accum, batches, stats) = worker.finish()?;
+    Ok(WorkerOut { accum, batches, stats: Some(stats) })
 }
 
 // ---------------------------------------------------------------------
@@ -1046,11 +1491,11 @@ struct ChunkItem {
     base: usize,
 }
 
-/// Serialized pull side of [`simulate_parallel_chunked`]: workers take
-/// turns pulling the next chunk out of the (forward-only) source; the
-/// puller keeps the last `warmup` rows of each dispensed item and
-/// prepends them to the next, reproducing exactly the overlap grid of
-/// the random-access [`simulate_parallel_opts`] — chunk `k`'s warm-up is
+/// Pull side of [`simulate_parallel_chunked`], driven by its bounded
+/// dispatch thread: the puller walks the (forward-only) source, keeps
+/// the last `warmup` rows of each dispensed item and prepends them to
+/// the next, reproducing exactly the overlap grid of the random-access
+/// [`simulate_parallel_opts`] — chunk `k`'s warm-up is
 /// `min(warmup, k·chunk)` rows in both.
 struct ChunkPuller<'a, C: ?Sized> {
     source: &'a mut C,
@@ -1121,16 +1566,21 @@ impl<'a, C: ChunkSource + ?Sized> ChunkPuller<'a, C> {
 }
 
 /// Parallel streaming simulation over any pull-based [`ChunkSource`] —
-/// a live simulator, a trace file, or an in-memory adapter. Workers pull
-/// `opts.chunk`-row chunks through a shared [`ChunkPuller`] (the pull is
-/// serialized; the expensive extract→batch→execute work is not), each
-/// chunk re-running its carried `opts.warmup`-row prefix with discarded
-/// predictions. When the source reports a length hint, the chunk grid
-/// and small-stream sequential fallback adapt exactly like
-/// [`simulate_parallel_opts`] — for exact-hint sources (the in-memory
-/// adapters, trace files) the two paths absorb byte-identical windows;
-/// hint-less sources use `opts.chunk` verbatim. Peak resident trace is
-/// O(workers × (chunk + warmup)) rows regardless of stream length.
+/// a live simulator, a trace file, or an in-memory adapter. A bounded
+/// dispatch thread owns the [`ChunkPuller`] and prefetches up to
+/// `workers` warm-up-carrying chunk items ahead of the consumers, so
+/// source I/O (file reads / functional-sim stepping) overlaps worker
+/// staging *and* model execution; each item re-runs its carried
+/// `opts.warmup`-row prefix with discarded predictions. When the source
+/// reports a length hint, the chunk grid and small-stream sequential
+/// fallback adapt exactly like [`simulate_parallel_opts`] — for
+/// exact-hint sources (the in-memory adapters, trace files) the two
+/// paths absorb byte-identical windows; hint-less sources use
+/// `opts.chunk` verbatim. Peak resident trace is bounded by
+/// (2·workers + 1) items of (chunk + warmup) rows regardless of stream
+/// length — one per worker, up to `workers` queued in the dispatch
+/// channel, one in dispatch limbo (`tao simulate --max-resident`
+/// clamps the pull grain off exactly this accounting).
 pub fn simulate_parallel_chunked<C>(
     artifact: &Path,
     source: &mut C,
@@ -1143,51 +1593,86 @@ where
     ensure!(workers >= 1, "need at least one worker");
     ensure!(opts.chunk >= 1, "chunk must be positive");
     let mut chunk = opts.chunk;
+    let mut sequential = workers == 1;
     if let Some(n) = source.len_hint() {
         if workers == 1 || n < workers * 1024 {
-            // Sequential pull: state rolls across chunks, so the result
-            // is exact regardless of the pull grain — same as the slice
-            // path's sequential fallback.
-            let mut session = Session::load(artifact)?;
-            return simulate_chunked(&mut session, source, chunk, None);
+            sequential = true;
+        } else {
+            // Mirror the slice path's grid adaptation: shrink the chunk
+            // so every worker gets at least one on small-to-medium
+            // streams.
+            chunk = opts.chunk.min(n.div_ceil(workers)).max(1);
         }
-        // Mirror the slice path's grid adaptation: shrink the chunk so
-        // every worker gets at least one on small-to-medium streams.
-        chunk = opts.chunk.min(n.div_ceil(workers)).max(1);
-    } else if workers == 1 {
+    }
+    if sequential {
+        // Sequential pull: state rolls across chunks, so the result is
+        // exact regardless of the pull grain — same as the slice path's
+        // sequential fallback.
+        if opts.pipeline {
+            return simulate_chunked_pipelined(artifact, source, chunk, None);
+        }
         let mut session = Session::load(artifact)?;
         return simulate_chunked(&mut session, source, chunk, None);
     }
     let start_wall = Instant::now();
-    let puller = Mutex::new(ChunkPuller::new(source, opts.warmup));
-    let results: Vec<Result<(PredAccum, u64)>> = std::thread::scope(|scope| {
+    let cancelled = AtomicBool::new(false);
+    let (item_tx, item_rx) = sync_channel::<Result<ChunkItem>>(workers);
+    let item_rx = Mutex::new(item_rx);
+    let results: Vec<Result<WorkerOut>> = std::thread::scope(|scope| {
+        // Dispatch thread: owns the (forward-only) puller, prefetching
+        // items into the bounded channel. `try_send` + cancellation
+        // polling keeps it from wedging the scope join if every worker
+        // bails early.
+        {
+            let src = &mut *source;
+            let cancelled = &cancelled;
+            scope.spawn(move || {
+                let mut puller = ChunkPuller::new(src, opts.warmup);
+                loop {
+                    // Fail fast: a worker error dooms the run, so stop
+                    // paying source I/O for it (also checked while the
+                    // channel is full, below).
+                    if cancelled.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let (mut msg, stop) = match puller.next(chunk) {
+                        Ok(Some(item)) => (Ok(item), false),
+                        Ok(None) => return,
+                        Err(e) => (Err(e), true),
+                    };
+                    loop {
+                        match item_tx.try_send(msg) {
+                            Ok(()) => break,
+                            Err(TrySendError::Full(m)) => {
+                                if cancelled.load(Ordering::Relaxed) {
+                                    return;
+                                }
+                                msg = m;
+                                std::thread::sleep(Duration::from_micros(200));
+                            }
+                            Err(TrySendError::Disconnected(_)) => return,
+                        }
+                    }
+                    if stop {
+                        return;
+                    }
+                }
+            });
+        }
         let mut handles = Vec::new();
         for w in 0..workers {
-            let puller = &puller;
-            handles.push(scope.spawn(move || -> Result<(PredAccum, u64)> {
-                let mut session = Session::load(artifact)
-                    .with_context(|| format!("worker {w}: load {artifact:?}"))?;
-                let mut scratch = ShardScratch::new(session.meta());
-                let mut folded = PredAccum::default();
-                let mut batches = 0u64;
-                loop {
-                    let item = puller.lock().expect("puller poisoned").next(chunk)?;
-                    let Some(item) = item else { break };
-                    let ctx = (!item.ctx.is_empty()).then_some(&item.ctx[..]);
-                    let run = simulate_stream(
-                        &mut session,
-                        &mut scratch,
-                        &item.cols,
-                        item.warmup,
-                        item.cols.len(),
-                        item.warmup,
-                        ctx,
-                        PredAccum::at_base(item.base as u64),
-                    )?;
-                    folded.merge(&run.accum);
-                    batches += run.batches;
+            let item_rx = &item_rx;
+            let cancelled = &cancelled;
+            handles.push(scope.spawn(move || -> Result<WorkerOut> {
+                let r = if opts.pipeline {
+                    chunked_worker_pipelined(artifact, item_rx, w)
+                } else {
+                    chunked_worker_serial(artifact, item_rx, w)
+                };
+                if r.is_err() {
+                    cancelled.store(true, Ordering::Relaxed);
                 }
-                Ok((folded, batches))
+                r
             }));
         }
         handles
@@ -1195,20 +1680,72 @@ where
             .map(|h| h.join().expect("worker panicked"))
             .collect()
     });
+    collect_workers(results, start_wall)
+}
 
-    let mut accum = PredAccum::default();
-    let mut batches = 0u64;
-    for r in results {
-        let (a, b) = r?;
-        accum.merge(&a);
-        batches += b;
+/// Take the next dispatched chunk item; `None` once the dispatch
+/// thread has exhausted the source and closed the channel.
+fn next_chunk_item(rx: &Mutex<Receiver<Result<ChunkItem>>>) -> Result<Option<ChunkItem>> {
+    match rx.lock().expect("chunk item channel poisoned").recv() {
+        Ok(Ok(item)) => Ok(Some(item)),
+        Ok(Err(e)) => Err(e),
+        Err(_) => Ok(None),
     }
-    Ok(SimResult {
-        metrics: accum.metrics(),
-        elapsed: start_wall.elapsed(),
-        batches,
-        phase: None,
-    })
+}
+
+/// One serial worker of [`simulate_parallel_chunked`] (oracle path).
+fn chunked_worker_serial(
+    artifact: &Path,
+    items: &Mutex<Receiver<Result<ChunkItem>>>,
+    w: usize,
+) -> Result<WorkerOut> {
+    let mut session =
+        Session::load(artifact).with_context(|| format!("worker {w}: load {artifact:?}"))?;
+    let mut scratch = ShardScratch::new(session.meta());
+    let mut folded = PredAccum::default();
+    let mut batches = 0u64;
+    while let Some(item) = next_chunk_item(items)? {
+        let ctx = (!item.ctx.is_empty()).then_some(&item.ctx[..]);
+        let run = simulate_stream(
+            &mut session,
+            &mut scratch,
+            &item.cols,
+            item.warmup,
+            item.cols.len(),
+            item.warmup,
+            ctx,
+            PredAccum::at_base(item.base as u64),
+        )?;
+        folded.merge(&run.accum);
+        batches += run.batches;
+    }
+    Ok(WorkerOut { accum: folded, batches, stats: None })
+}
+
+/// One pipelined worker of [`simulate_parallel_chunked`]: same items,
+/// same warm-up grid, staging overlapped with execution.
+fn chunked_worker_pipelined(
+    artifact: &Path,
+    items: &Mutex<Receiver<Result<ChunkItem>>>,
+    w: usize,
+) -> Result<WorkerOut> {
+    let meta =
+        ArtifactMeta::load(artifact).with_context(|| format!("worker {w}: load {artifact:?}"))?;
+    let mut worker = PipelinedWorker::new(artifact, &meta);
+    while let Some(item) = next_chunk_item(items)? {
+        let ctx = (!item.ctx.is_empty()).then_some(&item.ctx[..]);
+        run_shard_pipelined(
+            &mut worker,
+            &item.cols,
+            item.warmup,
+            item.cols.len(),
+            item.warmup,
+            ctx,
+            PredAccum::at_base(item.base as u64),
+        )?;
+    }
+    let (accum, batches, stats) = worker.finish()?;
+    Ok(WorkerOut { accum, batches, stats: Some(stats) })
 }
 
 #[cfg(test)]
@@ -1573,6 +2110,7 @@ mod tests {
                 ParallelOptions {
                     chunk: 3_000,
                     warmup: 64,
+                    pipeline: true,
                 },
             )
             .unwrap();
@@ -1593,6 +2131,7 @@ mod tests {
         let opts = ParallelOptions {
             chunk: 2_048,
             warmup: 512,
+            pipeline: true,
         };
         let a = simulate_parallel_opts(&artifact, &trace.records[..], 3, None, opts).unwrap();
         let b = simulate_parallel_opts(&artifact, &trace.records[..], 3, None, opts).unwrap();
@@ -1638,6 +2177,7 @@ mod tests {
         let opts = ParallelOptions {
             chunk: 2_048,
             warmup: 512,
+            pipeline: true,
         };
         let by_slice =
             simulate_parallel_opts(&artifact, &trace.records[..], 3, None, opts).unwrap();
@@ -1679,6 +2219,7 @@ mod tests {
             ParallelOptions {
                 chunk: 777,
                 warmup: 64,
+                pipeline: true,
             },
         )
         .unwrap();
@@ -1872,9 +2413,177 @@ mod tests {
             ParallelOptions {
                 chunk: 1_024,
                 warmup: 100_000,
+                pipeline: true,
             },
         )
         .unwrap();
         assert_eq!(r.metrics.instructions, 5_000);
+    }
+
+    // --- pipelined stage/execute vs the serial oracle ---
+
+    #[test]
+    fn pred_accum_merge_from_interleaved_absorb() {
+        // Absorb rows 1-2, then fold shards [4,6) and [2,4) OUT OF
+        // ORDER via merge_from, then absorb again: the cursor must sit
+        // at the farthest merged end (6), never re-tagging an ordinal,
+        // so the resumed absorb is instruction 7 and owns the tail.
+        let row = |v: f32| ModelOutputs {
+            fetch: vec![v],
+            exec: vec![v],
+            branch: vec![0.0],
+            access: vec![0.0; 4],
+            icache: vec![0.0],
+            tlb: vec![0.0],
+        };
+        let mut a = PredAccum::default();
+        a.absorb(&row(1.0), ModelKind::Tao);
+        a.absorb(&row(2.0), ModelKind::Tao);
+        let mut late = PredAccum::at_base(4);
+        late.absorb(&row(5.0), ModelKind::Tao);
+        late.absorb(&row(6.0), ModelKind::Tao);
+        let mut early = PredAccum::at_base(2);
+        early.absorb(&row(3.0), ModelKind::Tao);
+        early.absorb(&row(4.0), ModelKind::Tao);
+        // Out-of-order pipelined tails: the later shard completes first.
+        a.merge_from(&late);
+        assert_eq!(a.last_exec_at, 6, "tail must follow the latest ordinal");
+        a.merge_from(&early);
+        assert_eq!(a.instructions, 6);
+        assert_eq!(a.last_exec_at, 6);
+        assert!((a.last_exec - 6.0).abs() < 1e-12);
+        // Resume absorption: instruction 7 takes over the tail.
+        a.absorb(&row(7.0), ModelKind::Tao);
+        assert_eq!(a.instructions, 7);
+        assert_eq!(a.last_exec_at, 7);
+        assert!((a.total_cycles() - (28.0 + 7.0)).abs() < 1e-12);
+        // Plain merge on the same interleave would have mis-placed the
+        // cursor after the first (out-of-order) fold.
+        let mut b = PredAccum::default();
+        b.absorb(&row(1.0), ModelKind::Tao);
+        b.absorb(&row(2.0), ModelKind::Tao);
+        b.merge(&late);
+        b.absorb(&row(9.0), ModelKind::Tao);
+        assert_eq!(b.last_exec_at, 5, "merge resumes at base+count, not the shard end");
+    }
+
+    #[test]
+    fn pipelined_parallel_opts_matches_serial_oracle() {
+        let artifact = fake_artifact("pipeq", 16, 8);
+        let p = crate::workloads::by_name("mcf").unwrap().build(3);
+        let trace = crate::functional::FunctionalSim::new(&p).run(16_000);
+        let serial_opts = ParallelOptions {
+            chunk: 2_048,
+            warmup: 512,
+            pipeline: false,
+        };
+        let piped_opts = ParallelOptions { pipeline: true, ..serial_opts };
+        for workers in [2, 3] {
+            let serial =
+                simulate_parallel_opts(&artifact, &trace.records[..], workers, None, serial_opts)
+                    .unwrap();
+            let piped =
+                simulate_parallel_opts(&artifact, &trace.records[..], workers, None, piped_opts)
+                    .unwrap();
+            assert_eq!(piped.metrics.instructions, serial.metrics.instructions);
+            assert_eq!(piped.metrics.cycles, serial.metrics.cycles, "workers={workers}");
+            assert_eq!(piped.metrics.mispredicts, serial.metrics.mispredicts);
+            assert_eq!(piped.metrics.l1d_misses, serial.metrics.l1d_misses);
+            assert_eq!(piped.batches, serial.batches);
+            assert!(serial.pipeline.is_none());
+            let stats = piped.pipeline.expect("pipelined run must report occupancy");
+            assert_eq!(stats.batches, piped.batches, "every batch rode the pipeline");
+        }
+    }
+
+    #[test]
+    fn pipelined_sequential_fallback_matches_serial_oracle() {
+        // n < workers*1024 forces the sequential fallback on both
+        // sides: simulate_range_pipelined vs simulate_source.
+        let artifact = fake_artifact("pipefall", 8, 4);
+        let p = crate::workloads::by_name("dee").unwrap().build(7);
+        let trace = crate::functional::FunctionalSim::new(&p).run(3_000);
+        let serial = simulate_parallel_opts(
+            &artifact,
+            &trace.records[..],
+            4,
+            None,
+            ParallelOptions { chunk: 1_024, warmup: 128, pipeline: false },
+        )
+        .unwrap();
+        let piped = simulate_parallel_opts(
+            &artifact,
+            &trace.records[..],
+            4,
+            None,
+            ParallelOptions { chunk: 1_024, warmup: 128, pipeline: true },
+        )
+        .unwrap();
+        assert_eq!(piped.metrics.instructions, serial.metrics.instructions);
+        assert_eq!(piped.metrics.cycles, serial.metrics.cycles);
+        assert_eq!(piped.batches, serial.batches);
+    }
+
+    #[test]
+    fn pipelined_chunked_sequential_matches_session_path() {
+        // simulate_chunked_pipelined (prefetch + executor thread) must
+        // reproduce simulate_chunked exactly, phase series included.
+        let artifact = fake_artifact("pipechunk", 8, 4);
+        let p = crate::workloads::by_name("xal").unwrap().build(2);
+        let trace = crate::functional::FunctionalSim::new(&p).run(4_000);
+        let cols = trace.to_columns();
+        let mut session = Session::load(&artifact).unwrap();
+        let mut src = SliceChunkSource::new(&cols, None).unwrap();
+        let serial = simulate_chunked(&mut session, &mut src, 333, Some(256)).unwrap();
+        let mut src = SliceChunkSource::new(&cols, None).unwrap();
+        let piped = simulate_chunked_pipelined(&artifact, &mut src, 333, Some(256)).unwrap();
+        assert_eq!(piped.metrics.instructions, serial.metrics.instructions);
+        assert_eq!(piped.metrics.cycles, serial.metrics.cycles);
+        assert_eq!(piped.metrics.mispredicts, serial.metrics.mispredicts);
+        assert_eq!(piped.batches, serial.batches);
+        let (sp, pp) = (serial.phase.unwrap(), piped.phase.unwrap());
+        assert_eq!(sp.windows.len(), pp.windows.len());
+        for (i, (a, b)) in sp.windows.iter().zip(&pp.windows).enumerate() {
+            assert_eq!(a.instructions, b.instructions, "phase window {i}");
+            assert_eq!(a.cycles, b.cycles, "phase window {i}");
+            assert_eq!(a.mispredicts, b.mispredicts, "phase window {i}");
+        }
+    }
+
+    #[test]
+    fn pipelined_parallel_chunked_matches_serial_oracle_small() {
+        let artifact = fake_artifact("pipepull", 16, 8);
+        let p = crate::workloads::by_name("lee").unwrap().build(5);
+        let trace = crate::functional::FunctionalSim::new(&p).run(12_000);
+        let cols = trace.to_columns();
+        let serial_opts = ParallelOptions {
+            chunk: 2_048,
+            warmup: 256,
+            pipeline: false,
+        };
+        let piped_opts = ParallelOptions { pipeline: true, ..serial_opts };
+        let mut src = SliceChunkSource::new(&cols, None).unwrap();
+        let serial = simulate_parallel_chunked(&artifact, &mut src, 3, serial_opts).unwrap();
+        let mut src = SliceChunkSource::new(&cols, None).unwrap();
+        let piped = simulate_parallel_chunked(&artifact, &mut src, 3, piped_opts).unwrap();
+        assert_eq!(piped.metrics.instructions, serial.metrics.instructions);
+        assert_eq!(piped.metrics.cycles, serial.metrics.cycles);
+        assert_eq!(piped.metrics.mispredicts, serial.metrics.mispredicts);
+        assert_eq!(piped.batches, serial.batches);
+    }
+
+    #[test]
+    fn pipelined_run_propagates_bad_artifact_errors() {
+        // A missing artifact must fail the run, not hang the pipeline.
+        let missing = std::env::temp_dir().join("tao-engine-nope/absent.hlo.txt");
+        let records = uniform_records(3_000);
+        let r = simulate_parallel_opts(
+            &missing,
+            &records[..],
+            2,
+            None,
+            ParallelOptions { chunk: 1_024, warmup: 0, pipeline: true },
+        );
+        assert!(r.is_err());
     }
 }

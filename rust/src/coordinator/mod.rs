@@ -2,7 +2,10 @@
 //!
 //! `engine` holds the parallel sharded inference pipeline (feature
 //! extraction → window batching → PJRT execution → metric aggregation);
-//! `cli` exposes it as `tao simulate`.
+//! `pipeline` is the double-buffered stage/execute core the engine
+//! workers and the serving lanes share; `cli` exposes the engine as
+//! `tao simulate`.
 
 pub mod cli;
 pub mod engine;
+pub mod pipeline;

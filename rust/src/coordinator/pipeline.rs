@@ -1,0 +1,473 @@
+//! Reusable double-buffered stage/execute pipeline.
+//!
+//! PR 4 proved the shape on the serving path: a staging thread fills
+//! one buffer set while a dedicated executor thread runs the model
+//! from the other, the two sets rotating through a `sync_channel(1)`
+//! and `Session::run_on` executing straight from caller buffers — no
+//! hand-off copy. That machinery lived privately inside
+//! `serve::scheduler`; this module is its engine-level extraction, so
+//! the offline `simulate_parallel*` workers, the sequential chunked
+//! path and the serving lanes all share one implementation (and the
+//! datagen shard writer reuses the generic core for
+//! featurize-while-write).
+//!
+//! Two layers:
+//!
+//! * [`StagePipeline`] — the generic core: N rotating buffer sets, a
+//!   caller-side free list, a `sync_channel(1)` to a worker thread
+//!   whose state is built *on* the thread (PJRT clients are not shared
+//!   across threads), FIFO completion so the stager absorbs results in
+//!   submission order, and occupancy counters (executor busy/idle,
+//!   stager stall) for the bench reports.
+//! * [`ExecPipeline`] — the model-execution specialization
+//!   ([`ExecBuffers`] staging sets, `Session::run_on` as the step),
+//!   generic over a per-batch routing payload: the serving lane tags
+//!   batches with per-row job routes, the offline workers with the
+//!   warm-up skip count.
+//!
+//! Ordering contract: the worker processes submissions FIFO and the
+//! completion channel preserves that order, so a stager that absorbs
+//! results as it receives them folds outputs in exactly the order a
+//! single-threaded stage→execute loop would have — the bit-identity
+//! the offline oracle tests assert.
+
+use crate::runtime::{ModelKind, ModelOutputs, Session};
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::sync::Arc;
+use std::time::Instant;
+
+// ---------------------------------------------------------------------
+// Occupancy counters
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+struct PipeCounters {
+    batches: AtomicU64,
+    stage_stall_ns: AtomicU64,
+    exec_busy_ns: AtomicU64,
+    exec_idle_ns: AtomicU64,
+}
+
+/// Snapshot of a pipeline's occupancy counters (exported into
+/// `BENCH_coordinator.json` by the engine benches).
+///
+/// Reading the overlap: `exec_busy_fraction` near 1 means the pipeline
+/// is **execute-bound** — the executor never waits, staging hides
+/// entirely behind model time. High `stage_stall_ns` relative to wall
+/// time means the stager kept waiting for a free buffer set (also
+/// execute-bound); high `exec_idle_ns` means **stage-bound** — the
+/// model finishes before the next batch is staged.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PipelineStats {
+    /// Batches executed through the pipeline.
+    pub batches: u64,
+    /// Time the staging side spent blocked waiting on a completion
+    /// (no free buffer set), nanoseconds.
+    pub stage_stall_ns: u64,
+    /// Time the executor thread spent running the step, nanoseconds.
+    pub exec_busy_ns: u64,
+    /// Time the executor thread spent waiting for a staged batch,
+    /// nanoseconds.
+    pub exec_idle_ns: u64,
+}
+
+impl PipelineStats {
+    /// Fold another pipeline's counters in (cross-worker aggregation).
+    pub fn absorb(&mut self, other: &PipelineStats) {
+        self.batches += other.batches;
+        self.stage_stall_ns += other.stage_stall_ns;
+        self.exec_busy_ns += other.exec_busy_ns;
+        self.exec_idle_ns += other.exec_idle_ns;
+    }
+
+    /// Fraction of executor wall time spent executing (vs waiting for
+    /// the stager): ~1.0 = execute-bound, low = stage-bound.
+    pub fn exec_busy_fraction(&self) -> f64 {
+        let total = self.exec_busy_ns + self.exec_idle_ns;
+        if total == 0 {
+            0.0
+        } else {
+            self.exec_busy_ns as f64 / total as f64
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Generic stage/execute pipeline
+// ---------------------------------------------------------------------
+
+/// A staged buffer on its way to the worker thread.
+struct Staged<B, P> {
+    buf: B,
+    payload: P,
+}
+
+/// What comes back from the worker thread, in submission order.
+pub enum PipeMsg<B, P, R> {
+    /// One submission processed: the buffer (for reuse), its payload
+    /// and the step's result. A step error is scoped to this payload —
+    /// the worker keeps running.
+    Done {
+        /// The rotating buffer set, ready for reuse.
+        buf: B,
+        /// The payload submitted with the buffer.
+        payload: P,
+        /// The step's output, or its error message.
+        result: Result<R, String>,
+    },
+    /// The worker's init hook failed; no submissions were processed
+    /// and none ever will be.
+    InitFailed {
+        /// The init error.
+        msg: String,
+    },
+}
+
+/// Double-buffered stage/execute core: the caller stages into buffer
+/// sets from the free list and [`StagePipeline::submit`]s them; a
+/// dedicated worker thread (state built on-thread by the `init` hook)
+/// runs the step over each and sends the result back FIFO.
+pub struct StagePipeline<B, P, R> {
+    to_exec: Option<SyncSender<Staged<B, P>>>,
+    from_exec: Receiver<PipeMsg<B, P, R>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    free: Vec<B>,
+    in_flight: usize,
+    counters: Arc<PipeCounters>,
+}
+
+impl<B, P, R> StagePipeline<B, P, R>
+where
+    B: Send + 'static,
+    P: Send + 'static,
+    R: Send + 'static,
+{
+    /// Spawn the worker thread. `bufs` are the rotating buffer sets
+    /// (two for classic double buffering); `init` runs **on the worker
+    /// thread** and builds the step closure (e.g. compiles a PJRT
+    /// session — clients are not shared across threads).
+    pub fn spawn<I, S>(bufs: Vec<B>, init: I) -> StagePipeline<B, P, R>
+    where
+        I: FnOnce() -> Result<S> + Send + 'static,
+        S: FnMut(&B, &P) -> Result<R> + 'static,
+    {
+        assert!(!bufs.is_empty(), "pipeline needs at least one buffer set");
+        // sync_channel(1): the stager may queue one staged batch while
+        // the worker runs another — bounded by the rotating buffer
+        // sets. The completion channel holds every possible in-flight
+        // result (≤ bufs) plus slack, so the worker never blocks on
+        // send and shutdown joins cleanly.
+        let (to_exec, rx_staged) = sync_channel::<Staged<B, P>>(1);
+        let (tx_done, from_exec) = sync_channel::<PipeMsg<B, P, R>>(bufs.len() + 2);
+        let counters = Arc::new(PipeCounters::default());
+        let exec_counters = counters.clone();
+        let handle = std::thread::spawn(move || {
+            let mut step = match init() {
+                Ok(s) => s,
+                Err(e) => {
+                    let _ = tx_done.send(PipeMsg::InitFailed { msg: format!("{e:#}") });
+                    return;
+                }
+            };
+            loop {
+                let idle = Instant::now();
+                let staged = match rx_staged.recv() {
+                    Ok(s) => s,
+                    Err(_) => return,
+                };
+                exec_counters
+                    .exec_idle_ns
+                    .fetch_add(idle.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                let busy = Instant::now();
+                let result = step(&staged.buf, &staged.payload).map_err(|e| format!("{e:#}"));
+                exec_counters
+                    .exec_busy_ns
+                    .fetch_add(busy.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                exec_counters.batches.fetch_add(1, Ordering::Relaxed);
+                let msg = PipeMsg::Done {
+                    buf: staged.buf,
+                    payload: staged.payload,
+                    result,
+                };
+                if tx_done.send(msg).is_err() {
+                    return;
+                }
+            }
+        });
+        StagePipeline {
+            to_exec: Some(to_exec),
+            from_exec,
+            handle: Some(handle),
+            free: bufs,
+            in_flight: 0,
+            counters,
+        }
+    }
+}
+
+impl<B, P, R> StagePipeline<B, P, R> {
+    /// Take a free buffer set to stage into, if one is available. When
+    /// `None`, block on [`StagePipeline::recv`] to get one back.
+    pub fn take_buf(&mut self) -> Option<B> {
+        self.free.pop()
+    }
+
+    /// Return a buffer set to the free list.
+    pub fn release(&mut self, buf: B) {
+        self.free.push(buf);
+    }
+
+    /// Submit a staged buffer for execution.
+    pub fn submit(&mut self, buf: B, payload: P) -> Result<()> {
+        let Some(tx) = &self.to_exec else {
+            bail!("pipeline already shut down");
+        };
+        if tx.send(Staged { buf, payload }).is_err() {
+            // The worker exited early — an InitFailed explains why.
+            match self.from_exec.try_recv() {
+                Ok(PipeMsg::InitFailed { msg }) => bail!("pipeline worker failed to start: {msg}"),
+                _ => bail!("pipeline worker thread exited"),
+            }
+        }
+        self.in_flight += 1;
+        Ok(())
+    }
+
+    /// Completions not yet received.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Non-blocking poll for the next completion (FIFO).
+    pub fn try_recv(&mut self) -> Result<Option<PipeMsg<B, P, R>>> {
+        match self.from_exec.try_recv() {
+            Ok(msg) => {
+                if matches!(msg, PipeMsg::Done { .. }) {
+                    self.in_flight -= 1;
+                }
+                Ok(Some(msg))
+            }
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => bail!("pipeline worker thread exited"),
+        }
+    }
+
+    /// Block for the next completion (FIFO). Wait time is recorded as
+    /// staging stall in the occupancy counters.
+    pub fn recv(&mut self) -> Result<PipeMsg<B, P, R>> {
+        let t0 = Instant::now();
+        let msg = self
+            .from_exec
+            .recv()
+            .map_err(|_| anyhow::anyhow!("pipeline worker thread exited"))?;
+        self.counters
+            .stage_stall_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if matches!(msg, PipeMsg::Done { .. }) {
+            self.in_flight -= 1;
+        }
+        Ok(msg)
+    }
+
+    /// Occupancy counter snapshot.
+    pub fn stats(&self) -> PipelineStats {
+        PipelineStats {
+            batches: self.counters.batches.load(Ordering::Relaxed),
+            stage_stall_ns: self.counters.stage_stall_ns.load(Ordering::Relaxed),
+            exec_busy_ns: self.counters.exec_busy_ns.load(Ordering::Relaxed),
+            exec_idle_ns: self.counters.exec_idle_ns.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Close the submission side and join the worker thread. Also runs
+    /// on drop; callers that want the join to happen at a defined point
+    /// (before reading files the worker wrote, say) call it explicitly.
+    pub fn shutdown(&mut self) {
+        self.to_exec.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl<B, P, R> Drop for StagePipeline<B, P, R> {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Model-execution specialization
+// ---------------------------------------------------------------------
+
+/// One rotating staging buffer set for model execution: the `[B,T]`
+/// opcodes, `[B,T,F]` features and (SimNet) `[B,T,6]` context metrics
+/// the batchers materialize into and `Session::run_on` executes from.
+pub struct ExecBuffers {
+    /// `[B*T]` opcode staging.
+    pub ops: Vec<i32>,
+    /// `[B*T*F]` feature staging.
+    pub feats: Vec<f32>,
+    /// `[B*T*6]` SimNet context staging (empty for Tao artifacts).
+    pub ctx: Vec<f32>,
+}
+
+impl ExecBuffers {
+    /// Buffers sized for an artifact shape.
+    pub fn new(b: usize, t: usize, f: usize, kind: ModelKind) -> ExecBuffers {
+        ExecBuffers {
+            ops: vec![0; b * t],
+            feats: vec![0.0; b * t * f],
+            ctx: match kind {
+                ModelKind::SimNet => vec![0.0; b * t * crate::trace::CTX_WIDTH],
+                ModelKind::Tao => Vec::new(),
+            },
+        }
+    }
+}
+
+/// Per-batch execution request: how many staged windows are valid plus
+/// a caller-defined routing tag (job routes for the serving lane, the
+/// warm-up skip count for the offline workers).
+pub struct ExecBatch<P> {
+    /// Valid windows staged in the buffers.
+    pub valid: usize,
+    /// Caller routing tag, returned with the outputs.
+    pub tag: P,
+}
+
+/// The model-execution pipeline: [`ExecBuffers`] through
+/// `Session::run_on` on a dedicated executor thread.
+pub type ExecPipeline<P> = StagePipeline<ExecBuffers, ExecBatch<P>, ModelOutputs>;
+
+/// Spawn an [`ExecPipeline`] with `sets` rotating buffer sets (two for
+/// double buffering). `open` runs on the executor thread and compiles
+/// the session there — PJRT clients are not shared across threads.
+pub fn spawn_exec_pipeline<P, F>(
+    open: F,
+    kind: ModelKind,
+    b: usize,
+    t: usize,
+    f: usize,
+    sets: usize,
+) -> ExecPipeline<P>
+where
+    P: Send + 'static,
+    F: FnOnce() -> Result<Session> + Send + 'static,
+{
+    let bufs = (0..sets.max(1)).map(|_| ExecBuffers::new(b, t, f, kind)).collect();
+    StagePipeline::spawn(bufs, move || {
+        let session = open()?;
+        Ok(move |bufs: &ExecBuffers, batch: &ExecBatch<P>| {
+            let ctx = match kind {
+                ModelKind::SimNet => Some(&bufs.ctx[..]),
+                ModelKind::Tao => None,
+            };
+            session.run_on(&bufs.ops, &bufs.feats, ctx, batch.valid)
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Doubling pipeline: results come back FIFO, buffers rotate, and
+    /// the stats count every batch.
+    #[test]
+    fn stage_pipeline_runs_fifo_and_recycles_buffers() {
+        let mut pipe: StagePipeline<Vec<u64>, u64, u64> = StagePipeline::spawn(
+            vec![Vec::new(), Vec::new()],
+            || Ok(|buf: &Vec<u64>, mul: &u64| Ok(buf.iter().sum::<u64>() * mul)),
+        );
+        let mut got = Vec::new();
+        for k in 0..10u64 {
+            let mut buf = match pipe.take_buf() {
+                Some(b) => b,
+                None => match pipe.recv().unwrap() {
+                    PipeMsg::Done { buf, result, .. } => {
+                        got.push(result.unwrap());
+                        buf
+                    }
+                    PipeMsg::InitFailed { msg } => panic!("init failed: {msg}"),
+                },
+            };
+            buf.clear();
+            buf.extend([k, k + 1]);
+            pipe.submit(buf, 10).unwrap();
+        }
+        while pipe.in_flight() > 0 {
+            match pipe.recv().unwrap() {
+                PipeMsg::Done { buf, result, .. } => {
+                    got.push(result.unwrap());
+                    pipe.release(buf);
+                }
+                PipeMsg::InitFailed { msg } => panic!("init failed: {msg}"),
+            }
+        }
+        // FIFO: (k + k+1) * 10 in submission order.
+        let want: Vec<u64> = (0..10).map(|k| (2 * k + 1) * 10).collect();
+        assert_eq!(got, want);
+        assert_eq!(pipe.stats().batches, 10);
+        pipe.shutdown();
+    }
+
+    #[test]
+    fn step_errors_are_scoped_to_their_batch() {
+        let mut pipe: StagePipeline<u64, (), u64> = StagePipeline::spawn(
+            vec![0u64],
+            || {
+                Ok(|buf: &u64, _: &()| {
+                    if *buf == 3 {
+                        anyhow::bail!("unlucky batch");
+                    }
+                    Ok(*buf)
+                })
+            },
+        );
+        for v in [1u64, 3, 5] {
+            let _ = pipe.take_buf();
+            pipe.submit(v, ()).unwrap();
+            match pipe.recv().unwrap() {
+                PipeMsg::Done { buf, result, .. } => {
+                    if v == 3 {
+                        assert!(result.unwrap_err().contains("unlucky"));
+                    } else {
+                        assert_eq!(result.unwrap(), v);
+                    }
+                    pipe.release(buf);
+                }
+                PipeMsg::InitFailed { msg } => panic!("init failed: {msg}"),
+            }
+        }
+        // The worker survived the failed batch.
+        assert_eq!(pipe.stats().batches, 3);
+    }
+
+    #[test]
+    fn init_failure_surfaces_once() {
+        let mut pipe: StagePipeline<u64, (), u64> = StagePipeline::spawn(vec![0u64], || {
+            let fail: Result<fn(&u64, &()) -> Result<u64>> = Err(anyhow::anyhow!("no device"));
+            fail
+        });
+        match pipe.recv().unwrap() {
+            PipeMsg::InitFailed { msg } => assert!(msg.contains("no device")),
+            PipeMsg::Done { .. } => panic!("expected init failure"),
+        }
+        // Submitting after the failure reports it instead of hanging.
+        let buf = pipe.take_buf().unwrap();
+        assert!(pipe.submit(buf, ()).is_err());
+    }
+
+    #[test]
+    fn exec_buffers_shape_by_kind() {
+        let tao = ExecBuffers::new(4, 8, 3, ModelKind::Tao);
+        assert_eq!(tao.ops.len(), 32);
+        assert_eq!(tao.feats.len(), 96);
+        assert!(tao.ctx.is_empty());
+        let sn = ExecBuffers::new(4, 8, 3, ModelKind::SimNet);
+        assert_eq!(sn.ctx.len(), 4 * 8 * crate::trace::CTX_WIDTH);
+    }
+}

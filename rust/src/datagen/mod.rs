@@ -33,6 +33,7 @@
 //! (not approximate), the sharded output is **byte-identical** to the
 //! in-memory [`featurize`] + [`write_dataset`] path — enforced by tests.
 
+use crate::coordinator::pipeline::{PipeMsg, StagePipeline};
 use crate::dataset::{self, AdjustedTrace, Labels, Sample};
 use crate::detailed::DetailedSim;
 use crate::features::{FeatureConfig, FeatureExtractor};
@@ -43,7 +44,7 @@ use crate::uarch::UarchConfig;
 use crate::workloads::Workload;
 use anyhow::{bail, ensure, Context, Result};
 use std::io::Write;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Number of label columns in `labels.npy`. Pinned to the chunk
@@ -691,14 +692,121 @@ impl<S: RecordSource + ?Sized> ChunkSource for PairedSliceSource<'_, S> {
     }
 }
 
+/// One featurized chunk on its way to the shard-writer thread (a
+/// rotating buffer set of the write pipeline).
+#[derive(Default)]
+struct FeatChunk {
+    rows: usize,
+    feats: Vec<f32>,
+    ops: Vec<i32>,
+    labels: Vec<f32>,
+}
+
+/// Commands through the write pipeline.
+enum WriteCmd {
+    /// Append the buffer's rows (splitting across shard boundaries).
+    Append,
+    /// Finalize the open shard and hand back the shard table.
+    Finish,
+}
+
+/// The write pipeline: featurized chunks in, `.npy` appends out, shard
+/// table back on [`WriteCmd::Finish`].
+type WriterPipe = StagePipeline<FeatChunk, WriteCmd, Option<(Vec<ShardEntry>, usize)>>;
+
+/// The shard-writer thread's state: the open shard's three incremental
+/// writers plus the rotation bookkeeping (exactly the append loop the
+/// stager used to run inline).
+struct ShardSink {
+    dir: PathBuf,
+    per_shard: Option<usize>,
+    f: usize,
+    open: Option<ShardWriters>,
+    shards: Vec<ShardEntry>,
+    rows: usize,
+}
+
+impl ShardSink {
+    /// Append one featurized chunk, splitting across shard-file
+    /// boundaries on the same per-shard row grid as [`stream_dataset`].
+    fn append(&mut self, c: &FeatChunk) -> Result<()> {
+        let mut off = 0usize;
+        while off < c.rows {
+            if self.open.is_none() {
+                self.open =
+                    Some(ShardWriters::create(&self.dir, self.shards.len(), self.rows, self.f)?);
+            }
+            let w = self.open.as_mut().unwrap();
+            let room = self.per_shard.map_or(c.rows - off, |p| (p - w.rows).min(c.rows - off));
+            w.feats.append_f32(&c.feats[off * self.f..(off + room) * self.f])?;
+            w.ops.append_i32(&c.ops[off..off + room])?;
+            w.labels
+                .append_f32(&c.labels[off * NUM_LABELS..(off + room) * NUM_LABELS])?;
+            w.rows += room;
+            self.rows += room;
+            off += room;
+            if Some(w.rows) == self.per_shard {
+                let entry = self.open.take().unwrap().finalize(self.shards.len())?;
+                self.shards.push(entry);
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<(Vec<ShardEntry>, usize)> {
+        if let Some(w) = self.open.take() {
+            let entry = w.finalize(self.shards.len())?;
+            self.shards.push(entry);
+        }
+        Ok((std::mem::take(&mut self.shards), self.rows))
+    }
+}
+
+/// A free featurized-chunk buffer, absorbing completed writes while
+/// waiting (the write pipeline's rotation point).
+fn writer_buffer(pipe: &mut WriterPipe) -> Result<FeatChunk> {
+    if let Some(b) = pipe.take_buf() {
+        return Ok(b);
+    }
+    match pipe.recv()? {
+        PipeMsg::Done { buf, result, .. } => {
+            result.map_err(|e| anyhow::anyhow!("shard writer: {e}"))?;
+            Ok(buf)
+        }
+        PipeMsg::InitFailed { msg } => bail!("shard writer: {msg}"),
+    }
+}
+
+/// Drain the write pipeline and return the shard table the
+/// [`WriteCmd::Finish`] command produced.
+fn drain_writer(pipe: &mut WriterPipe) -> Result<(Vec<ShardEntry>, usize)> {
+    let mut table = None;
+    while pipe.in_flight() > 0 {
+        match pipe.recv()? {
+            PipeMsg::Done { buf, result, .. } => {
+                if let Some(t) = result.map_err(|e| anyhow::anyhow!("shard writer: {e}"))? {
+                    table = Some(t);
+                }
+                pipe.release(buf);
+            }
+            PipeMsg::InitFailed { msg } => bail!("shard writer: {msg}"),
+        }
+    }
+    table.context("shard writer returned no shard table")
+}
+
 /// Stream any label-carrying [`ChunkSource`] to a sharded on-disk
-/// dataset in one sequential pass: pull a chunk, featurize it into a
-/// reused `chunk × F` buffer, append through the incremental
-/// [`NpyWriter`]s, rotate shard files on the same per-shard row grid as
-/// [`stream_dataset`] (so shard files and manifest are byte-identical
-/// whenever the source's length hint is exact). Peak buffering is
-/// O(chunk × F) regardless of stream length — with a generator-backed
-/// source the trace itself never exists.
+/// dataset in one sequential pass — **featurize-while-write**: this
+/// thread pulls chunk k+1 and featurizes it into one rotating buffer
+/// set while a writer thread (the engine's [`StagePipeline`], the same
+/// double-buffering as the inference workers) appends chunk k through
+/// the incremental [`NpyWriter`]s, rotating shard files on the same
+/// per-shard row grid as [`stream_dataset`] (so shard files and
+/// manifest are byte-identical whenever the source's length hint is
+/// exact — appends run FIFO, so the bytes cannot reorder). Peak
+/// buffering is O(chunk × F) for each of the two buffer sets,
+/// regardless of stream length — with a generator-backed source the
+/// trace itself never exists.
 pub fn stream_dataset_source<C: ChunkSource + ?Sized>(
     dir: &Path,
     source: &mut C,
@@ -715,11 +823,23 @@ pub fn stream_dataset_source<C: ChunkSource + ?Sized>(
         .map(|m| m.div_ceil(stream.shards.max(1)).max(1));
     let mut fx = FeatureExtractor::new(config);
     let mut buf = ChunkBuf::new();
-    let mut feat_chunk: Vec<f32> = Vec::with_capacity(chunk * f);
-    let mut op_chunk: Vec<i32> = Vec::with_capacity(chunk);
     let mut stats = StreamStats::default();
-    let mut shards: Vec<ShardEntry> = Vec::new();
-    let mut open: Option<ShardWriters> = None;
+    let sink_dir = dir.to_path_buf();
+    let mut pipe: WriterPipe =
+        StagePipeline::spawn(vec![FeatChunk::default(), FeatChunk::default()], move || {
+            let mut sink = ShardSink {
+                dir: sink_dir,
+                per_shard,
+                f,
+                open: None,
+                shards: Vec::new(),
+                rows: 0,
+            };
+            Ok(move |c: &FeatChunk, cmd: &WriteCmd| match cmd {
+                WriteCmd::Append => sink.append(c).map(|()| None),
+                WriteCmd::Finish => sink.finish().map(Some),
+            })
+        });
     loop {
         let n = source.next_chunk(&mut buf, chunk)?;
         if n == 0 {
@@ -730,40 +850,32 @@ pub fn stream_dataset_source<C: ChunkSource + ?Sized>(
             "chunk source carries no label channel ({} label values for {n} records)",
             buf.labels.len()
         );
-        feat_chunk.resize(n * f, 0.0);
-        op_chunk.clear();
+        let mut fc = writer_buffer(&mut pipe)?;
+        fc.rows = n;
+        fc.feats.clear();
+        fc.feats.resize(n * f, 0.0);
+        fc.ops.clear();
         for i in 0..n {
             let rec = buf.cols.record(i);
-            op_chunk.push(fx.extract_into(&rec, &mut feat_chunk[i * f..(i + 1) * f]));
+            fc.ops.push(fx.extract_into(&rec, &mut fc.feats[i * f..(i + 1) * f]));
         }
+        fc.labels.clear();
+        fc.labels.extend_from_slice(&buf.labels);
         stats.chunks += 1;
         stats.peak_chunk_rows = stats.peak_chunk_rows.max(n);
-        // Append, splitting the chunk across shard-file boundaries.
-        let mut off = 0usize;
-        while off < n {
-            if open.is_none() {
-                open = Some(ShardWriters::create(dir, shards.len(), stats.rows, f)?);
-            }
-            let w = open.as_mut().unwrap();
-            let room = per_shard
-                .map_or(n - off, |p| (p - w.rows).min(n - off));
-            w.feats.append_f32(&feat_chunk[off * f..(off + room) * f])?;
-            w.ops.append_i32(&op_chunk[off..off + room])?;
-            w.labels
-                .append_f32(&buf.labels[off * NUM_LABELS..(off + room) * NUM_LABELS])?;
-            w.rows += room;
-            stats.rows += room;
-            off += room;
-            if Some(w.rows) == per_shard {
-                let entry = open.take().unwrap().finalize(shards.len())?;
-                shards.push(entry);
-            }
-        }
-    }
-    if let Some(w) = open.take() {
-        shards.push(w.finalize(shards.len())?);
+        stats.rows += n;
+        pipe.submit(fc, WriteCmd::Append)?;
     }
     ensure!(stats.rows > 0, "cannot stream an empty trace");
+    let fc = writer_buffer(&mut pipe)?;
+    pipe.submit(fc, WriteCmd::Finish)?;
+    let (shards, written) = drain_writer(&mut pipe)?;
+    pipe.shutdown();
+    ensure!(
+        written == stats.rows,
+        "shard writer wrote {written} rows, expected {}",
+        stats.rows
+    );
     let total_cycles = source
         .total_cycles()
         .context("chunk source reported no total cycles after exhaustion")?;

@@ -69,6 +69,7 @@ pub fn cmd_serve(mut args: Args) -> Result<()> {
         admission_wait_ms: args
             .opt_parse("--admission-wait-ms")?
             .unwrap_or(defaults.admission_wait_ms),
+        prep_depth: args.opt_parse("--prep-depth")?.unwrap_or(defaults.prep_depth),
     };
     let port_file: Option<PathBuf> = args.opt_value("--port-file")?.map(Into::into);
     let stats_out: Option<PathBuf> = args.opt_value("--stats-out")?.map(Into::into);

@@ -14,8 +14,11 @@
 //!   instead of unbounded memory).
 //! * [`scheduler`] — per-artifact lanes that pack context windows
 //!   **across concurrent jobs** into the fixed-`B` model batch and
-//!   demux outputs to per-job accumulators; double-buffered executor
-//!   threads overlap staging with model execution.
+//!   demux outputs to per-job accumulators; execution runs through the
+//!   shared engine-level double-buffered
+//!   [`ExecPipeline`](crate::coordinator::pipeline::ExecPipeline)
+//!   (staging overlaps model execution), and job preparation runs on a
+//!   bounded prep stage off the lane thread.
 //! * [`cache`] — the LRU chunk-level prediction cache keyed by
 //!   (artifact, warm-up prefix, chunk content): repeated trace regions
 //!   across requests and design sweeps skip model execution entirely,

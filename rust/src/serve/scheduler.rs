@@ -19,10 +19,21 @@
 //! run of the same (trace, artifact, chunking) — the loopback tests
 //! assert exactly that.
 //!
-//! The executor is **double-buffered** (the open ROADMAP pipelining
-//! item): two staging buffer sets rotate through a `sync_channel(1)`
-//! to a dedicated executor thread, so feature extraction and window
-//! packing of batch `k+1` overlap model execution of batch `k`.
+//! The executor is **double-buffered** through the engine-level
+//! [`ExecPipeline`](crate::coordinator::pipeline::ExecPipeline) — the
+//! machinery born here in PR 4 and since extracted into
+//! `coordinator::pipeline` so the offline `simulate_parallel*` workers
+//! share the same implementation: two staging buffer sets rotate
+//! through a `sync_channel(1)` to a dedicated executor thread, so
+//! feature extraction and window packing of batch `k+1` overlap model
+//! execution of batch `k`.
+//!
+//! Job **preparation** (building the trace source — for SimNet,
+//! materializing the functional trace and running the detailed sim for
+//! its ctx metrics) runs on a bounded prep stage off the lane thread
+//! ([`LaneConfig::prep_depth`]), so admissions no longer stall active
+//! jobs; resident prepared-but-unadmitted bytes stay bounded by the
+//! prep-queue depth.
 //!
 //! Chunk-level caching happens at the pack boundary: each job pulls
 //! its trace in `chunk`-row units, keys them by (artifact fingerprint,
@@ -34,13 +45,18 @@ use super::cache::{chain_prefix, hash_chunk, ChunkKey, PredictionCache, PREFIX_S
 use super::protocol::{resolve_ctx_uarch, JobOutcome, JobSpec, StatsSnapshot};
 use super::queue::{JobQueue, QueuedJob};
 use crate::coordinator::engine::{PredAccum, WindowStager};
+use crate::coordinator::pipeline::{
+    spawn_exec_pipeline, ExecBatch, ExecBuffers, ExecPipeline, PipeMsg,
+};
 use crate::functional::FunctionalSim;
 use crate::runtime::{ModelKind, ModelOutputs, PooledArtifact};
 use crate::trace::{ChunkBuf, ChunkSource, OwnedChunkSource, CTX_WIDTH};
 use anyhow::{Context, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
+};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -56,6 +72,12 @@ pub struct LaneConfig {
     /// wait this long for more jobs so the first batches already pack
     /// cross-job (the classic dynamic-batching admission delay).
     pub admission_wait: Duration,
+    /// Jobs prepared off the lane thread ahead of admission (trace
+    /// source construction; for SimNet, the detailed-sim ctx
+    /// materialization). Bounds resident prepared-but-unadmitted jobs;
+    /// 0 prepares inline on the lane thread (the pre-prep-stage
+    /// behavior, mainly for deterministic unit tests).
+    pub prep_depth: usize,
 }
 
 impl Default for LaneConfig {
@@ -64,6 +86,7 @@ impl Default for LaneConfig {
             max_active: 16,
             pipeline: true,
             admission_wait: Duration::from_millis(2),
+            prep_depth: 2,
         }
     }
 }
@@ -345,97 +368,331 @@ impl ActiveJob {
 }
 
 // ---------------------------------------------------------------------
-// Batch buffers + executor
+// Executor (the shared engine pipeline) + prep stage
 // ---------------------------------------------------------------------
 
-struct BatchBuffers {
-    ops: Vec<i32>,
-    feats: Vec<f32>,
-    ctx: Vec<f32>,
+/// A finished batch back from the executor: the jobs whose windows
+/// rode in it, plus the outputs — or a failure scoped to exactly those
+/// jobs (an executor hiccup on job A's batch must not 500 job B).
+struct ExecOutcome {
+    routes: Vec<u64>,
+    result: Result<ModelOutputs, String>,
 }
 
-impl BatchBuffers {
-    fn new(b: usize, t: usize, f: usize, kind: ModelKind) -> BatchBuffers {
-        BatchBuffers {
-            ops: vec![0; b * t],
-            feats: vec![0.0; b * t * f],
-            ctx: match kind {
-                ModelKind::SimNet => vec![0.0; b * t * CTX_WIDTH],
-                ModelKind::Tao => Vec::new(),
+/// The lane's execution backend. The pipelined variant is the shared
+/// engine [`ExecPipeline`] (this module's PR 4 double-buffering,
+/// extracted); inline executes synchronously on the lane thread for
+/// deterministic unit tests.
+enum Executor {
+    Inline {
+        session: crate::runtime::Session,
+        bufs: Option<ExecBuffers>,
+    },
+    Pipelined(ExecPipeline<Vec<u64>>),
+}
+
+impl Executor {
+    fn start(art: &PooledArtifact, cfg: &LaneConfig) -> Result<Executor> {
+        let (b, t, f) = (art.meta.batch, art.meta.context, art.meta.feature_dim);
+        let kind = art.meta.kind;
+        Ok(if cfg.pipeline {
+            let session_art = art.clone();
+            Executor::Pipelined(spawn_exec_pipeline(
+                move || session_art.open_session(),
+                kind,
+                b,
+                t,
+                f,
+                2,
+            ))
+        } else {
+            Executor::Inline {
+                session: art.open_session()?,
+                bufs: Some(ExecBuffers::new(b, t, f, kind)),
+            }
+        })
+    }
+
+    fn in_flight(&self) -> usize {
+        match self {
+            Executor::Inline { .. } => 0,
+            Executor::Pipelined(p) => p.in_flight(),
+        }
+    }
+
+    /// A free staging buffer set, if one is available right now.
+    fn stage_buffer(&mut self) -> Option<ExecBuffers> {
+        match self {
+            Executor::Inline { bufs, .. } => bufs.take(),
+            Executor::Pipelined(p) => p.take_buf(),
+        }
+    }
+
+    fn release(&mut self, b: ExecBuffers) {
+        match self {
+            Executor::Inline { bufs, .. } => *bufs = Some(b),
+            Executor::Pipelined(p) => p.release(b),
+        }
+    }
+
+    /// Run (inline) or enqueue (pipelined) one packed batch. Inline
+    /// returns the outcome immediately; pipelined outcomes come back
+    /// through [`Executor::try_done`] / [`Executor::recv_done`].
+    /// `Err` is lane-fatal.
+    fn dispatch(
+        &mut self,
+        bufs: ExecBuffers,
+        valid: usize,
+        routes: Vec<u64>,
+        kind: ModelKind,
+    ) -> Result<Option<ExecOutcome>, String> {
+        match self {
+            Executor::Inline { session, bufs: slot } => {
+                let ctx = match kind {
+                    ModelKind::SimNet => Some(&bufs.ctx[..]),
+                    ModelKind::Tao => None,
+                };
+                let result = session
+                    .run_on(&bufs.ops, &bufs.feats, ctx, valid)
+                    .map_err(|e| format!("model execution: {e:#}"));
+                *slot = Some(bufs);
+                Ok(Some(ExecOutcome { routes, result }))
+            }
+            Executor::Pipelined(p) => {
+                p.submit(bufs, ExecBatch { valid, tag: routes })
+                    .map_err(|e| format!("{e:#}"))?;
+                Ok(None)
+            }
+        }
+    }
+
+    /// Non-blocking poll for a finished batch.
+    fn try_done(&mut self) -> Result<Option<ExecOutcome>, String> {
+        match self {
+            Executor::Inline { .. } => Ok(None),
+            Executor::Pipelined(p) => match p.try_recv() {
+                Ok(None) => Ok(None),
+                Ok(Some(msg)) => Self::map_msg(p, msg).map(Some),
+                Err(e) => Err(format!("{e:#}")),
             },
+        }
+    }
+
+    /// Block for the oldest in-flight batch.
+    fn recv_done(&mut self) -> Result<ExecOutcome, String> {
+        match self {
+            Executor::Inline { .. } => Err("inline executor has no in-flight batches".into()),
+            Executor::Pipelined(p) => {
+                let msg = p.recv().map_err(|e| format!("{e:#}"))?;
+                Self::map_msg(p, msg)
+            }
+        }
+    }
+
+    fn map_msg(
+        p: &mut ExecPipeline<Vec<u64>>,
+        msg: PipeMsg<ExecBuffers, ExecBatch<Vec<u64>>, ModelOutputs>,
+    ) -> Result<ExecOutcome, String> {
+        match msg {
+            PipeMsg::Done { buf, payload, result } => {
+                p.release(buf);
+                Ok(ExecOutcome {
+                    routes: payload.tag,
+                    result: result.map_err(|e| format!("model execution: {e}")),
+                })
+            }
+            PipeMsg::InitFailed { msg } => Err(format!("open session: {msg}")),
         }
     }
 }
 
-struct StagedBatch {
-    bufs: BatchBuffers,
-    valid: usize,
-    routes: Vec<u64>,
+/// A prepared job (or its preparation failure, with the completion
+/// channel so the waiting connection gets an answer).
+type PrepResult =
+    Result<Box<ActiveJob>, (std::sync::mpsc::Sender<Result<JobOutcome, String>>, String)>;
+
+struct PrepLane {
+    tx: SyncSender<QueuedJob>,
+    rx: Receiver<PrepResult>,
+    handle: std::thread::JoinHandle<()>,
+    /// Raised by [`PrepStage::abort`]: skip the (expensive) preparation
+    /// of still-queued jobs so failing lanes answer promptly.
+    aborting: Arc<std::sync::atomic::AtomicBool>,
 }
 
-struct ExecDone {
-    out: ModelOutputs,
-    routes: Vec<u64>,
-    bufs: BatchBuffers,
+/// Bounded off-lane job preparation: popped queue jobs go to a prep
+/// thread that builds their trace sources (the SimNet detailed-sim ctx
+/// materialization is the expensive case), so the lane keeps packing
+/// for active jobs while admissions materialize. At most `depth` jobs
+/// sit prepared-but-unadmitted (both channels are `depth`-bounded), so
+/// resident bytes stay bounded by the prep-queue depth — the reason
+/// preparation does not simply run on the connection threads.
+struct PrepStage {
+    lane: Option<PrepLane>,
+    in_flight: usize,
 }
 
-/// A failed batch: what went wrong plus the jobs whose windows rode in
-/// it (so only those jobs die — an executor hiccup on job A's batch
-/// must not 500 job B).
-struct BatchError {
-    msg: String,
-    routes: Vec<u64>,
-}
-
-/// What comes back from the executor: a finished batch or its failure.
-type ExecMsg = Result<ExecDone, BatchError>;
-
-enum Executor {
-    Inline(crate::runtime::Session),
-    Pipelined {
-        to_exec: SyncSender<StagedBatch>,
-        from_exec: Receiver<ExecMsg>,
-        handle: std::thread::JoinHandle<()>,
-    },
-}
-
-fn spawn_executor(art: &PooledArtifact, kind: ModelKind) -> Executor {
-    // sync_channel(1): the stager may queue one staged batch while the
-    // executor runs another — double buffering, bounded by the two
-    // rotating buffer sets.
-    let (to_exec, rx_batch) = sync_channel::<StagedBatch>(1);
-    let (tx_done, from_exec) = sync_channel::<ExecMsg>(2);
-    let art = art.clone();
-    let handle = std::thread::spawn(move || {
-        let session = match art.open_session() {
-            Ok(s) => s,
-            Err(e) => {
-                let _ = tx_done.send(Err(BatchError {
-                    msg: format!("open session: {e:#}"),
-                    routes: Vec::new(),
-                }));
-                return;
+impl PrepStage {
+    fn start(art: &PooledArtifact, depth: usize) -> PrepStage {
+        if depth == 0 {
+            return PrepStage { lane: None, in_flight: 0 };
+        }
+        let (tx, rx_jobs) = sync_channel::<QueuedJob>(depth);
+        let (tx_done, rx) = sync_channel::<PrepResult>(depth);
+        let art = art.clone();
+        let aborting = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let abort_flag = aborting.clone();
+        let handle = std::thread::spawn(move || {
+            for qj in rx_jobs {
+                let QueuedJob { spec, done, admitted_at } = qj;
+                let res = if abort_flag.load(Ordering::Relaxed) {
+                    // The lane is failing: don't burn a detailed-sim
+                    // run per queued job; abort() answers them.
+                    Err((done, "lane aborted during preparation".to_string()))
+                } else {
+                    match ActiveJob::prepare(spec, done.clone(), admitted_at, &art) {
+                        Ok(job) => Ok(Box::new(job)),
+                        Err(e) => Err((done, format!("job preparation failed: {e:#}"))),
+                    }
+                };
+                if tx_done.send(res).is_err() {
+                    return;
+                }
             }
-        };
-        for batch in rx_batch {
-            let ctx = match kind {
-                ModelKind::SimNet => Some(&batch.bufs.ctx[..]),
-                ModelKind::Tao => None,
-            };
-            let msg = match session.run_on(&batch.bufs.ops, &batch.bufs.feats, ctx, batch.valid)
-            {
-                Ok(out) => Ok(ExecDone { out, routes: batch.routes, bufs: batch.bufs }),
-                Err(e) => Err(BatchError {
-                    msg: format!("model execution: {e:#}"),
-                    routes: batch.routes,
-                }),
-            };
-            if tx_done.send(msg).is_err() {
-                return;
+        });
+        PrepStage { lane: Some(PrepLane { tx, rx, handle, aborting }), in_flight: 0 }
+    }
+
+    /// Jobs handed to the prep thread and not yet admitted/answered.
+    fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Hand one popped job to the prep stage. With no prep thread
+    /// (depth 0) the job prepares inline and is admitted right here.
+    /// The caller must keep `in_flight() < depth` so the send never
+    /// blocks the lane.
+    fn begin(
+        &mut self,
+        qj: QueuedJob,
+        art: &PooledArtifact,
+        active: &mut Vec<ActiveJob>,
+        counters: &ServeCounters,
+    ) {
+        match &self.lane {
+            Some(l) => match l.tx.try_send(qj) {
+                Ok(()) => self.in_flight += 1,
+                // Prep thread gone (it only exits with us) or the
+                // bound was violated: fall back to inline prep rather
+                // than lose the job.
+                Err(TrySendError::Full(qj)) | Err(TrySendError::Disconnected(qj)) => {
+                    admit_prepared(prepare_inline(qj, art), active, counters)
+                }
+            },
+            None => admit_prepared(prepare_inline(qj, art), active, counters),
+        }
+    }
+
+    /// Non-blocking poll for a prepared job.
+    fn try_ready(&mut self) -> Option<PrepResult> {
+        let lane = self.lane.as_ref()?;
+        match lane.rx.try_recv() {
+            Ok(res) => {
+                self.in_flight -= 1;
+                Some(res)
+            }
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                self.reap();
+                None
             }
         }
-    });
-    Executor::Pipelined { to_exec, from_exec, handle }
+    }
+
+    /// Block up to `timeout` for a prepared job (idle lane, admissions
+    /// still materializing).
+    fn ready_timeout(&mut self, timeout: Duration) -> Option<PrepResult> {
+        let lane = self.lane.as_ref()?;
+        match lane.rx.recv_timeout(timeout) {
+            Ok(res) => {
+                self.in_flight -= 1;
+                Some(res)
+            }
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => {
+                self.reap();
+                None
+            }
+        }
+    }
+
+    /// The prep thread died (it only exits on its own if
+    /// `ActiveJob::prepare` panicked). Its in-flight jobs are gone —
+    /// their completion senders dropped with it, so waiting connections
+    /// get "job dropped" — and the lane must not keep waiting on them:
+    /// zero the counter and fall back to inline prep for future jobs.
+    fn reap(&mut self) {
+        if let Some(l) = self.lane.take() {
+            eprintln!(
+                "serve: prep thread died with {} job(s) in flight; preparing inline from now on",
+                self.in_flight
+            );
+            let _ = l.handle.join();
+        }
+        self.in_flight = 0;
+    }
+
+    /// Clean shutdown: close the intake and join (no jobs in flight).
+    fn shutdown(self) {
+        if let Some(l) = self.lane {
+            drop(l.tx);
+            let _ = l.handle.join();
+        }
+    }
+
+    /// Lane-failure shutdown: answer every in-prep job with the lane
+    /// error so no connection hangs. Raising `aborting` first makes the
+    /// prep thread skip still-queued preparations, so the answers (and
+    /// the zombie drain behind them) are prompt.
+    fn abort(self, err: &str, counters: &ServeCounters) {
+        let Some(l) = self.lane else { return };
+        l.aborting.store(true, Ordering::Relaxed);
+        drop(l.tx);
+        for res in l.rx.iter() {
+            let done = match res {
+                Ok(job) => job.done.clone(),
+                Err((done, _)) => done,
+            };
+            let _ = done.send(Err(format!("lane failed: {err}")));
+            counters.jobs_done.fetch_add(1, Ordering::Relaxed);
+        }
+        let _ = l.handle.join();
+    }
+}
+
+/// Prepare a job on the current thread (prep stage disabled or
+/// unavailable).
+fn prepare_inline(qj: QueuedJob, art: &PooledArtifact) -> PrepResult {
+    let QueuedJob { spec, done, admitted_at } = qj;
+    match ActiveJob::prepare(spec, done.clone(), admitted_at, art) {
+        Ok(job) => Ok(Box::new(job)),
+        Err(e) => Err((done, format!("job preparation failed: {e:#}"))),
+    }
+}
+
+/// Admit a prepared job into the lane's active set (or answer its
+/// preparation failure).
+fn admit_prepared(res: PrepResult, active: &mut Vec<ActiveJob>, counters: &ServeCounters) {
+    match res {
+        Ok(job) => {
+            counters.active_jobs.fetch_add(1, Ordering::Relaxed);
+            active.push(*job);
+        }
+        Err((done, msg)) => {
+            let _ = done.send(Err(msg));
+            counters.jobs_done.fetch_add(1, Ordering::Relaxed);
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -443,10 +700,11 @@ fn spawn_executor(art: &PooledArtifact, kind: ModelKind) -> Executor {
 // ---------------------------------------------------------------------
 
 /// Run one artifact lane until the queue is closed and drained. Pops
-/// jobs targeting `art` from the shared queue, packs windows across
-/// every active job into the artifact's `[B, T, F]` batch, executes
-/// (pipelined by default), demuxes outputs to per-job accumulators,
-/// and answers each job's completion channel.
+/// jobs targeting `art` from the shared queue into the bounded prep
+/// stage, packs windows across every active job into the artifact's
+/// `[B, T, F]` batch, executes (pipelined through the shared engine
+/// [`ExecPipeline`] by default), demuxes outputs to per-job
+/// accumulators, and answers each job's completion channel.
 pub fn run_lane(
     art: PooledArtifact,
     queue: Arc<JobQueue>,
@@ -457,67 +715,86 @@ pub fn run_lane(
     let (b, t, f) = (art.meta.batch, art.meta.context, art.meta.feature_dim);
     let kind = art.meta.kind;
     let fp = art.fingerprint;
-    let mut exec = if cfg.pipeline {
-        spawn_executor(&art, kind)
-    } else {
-        Executor::Inline(art.open_session()?)
-    };
-    let n_bufs = if cfg.pipeline { 2 } else { 1 };
-    let mut free: Vec<BatchBuffers> =
-        (0..n_bufs).map(|_| BatchBuffers::new(b, t, f, kind)).collect();
+    let mut exec = Executor::start(&art, &cfg)?;
+    let mut prep = PrepStage::start(&art, cfg.prep_depth);
     let mut active: Vec<ActiveJob> = Vec::new();
-    let mut in_flight = 0usize;
     let mut rr = 0usize;
+
+    macro_rules! fatal {
+        ($e:expr) => {{
+            let e: String = $e;
+            fail_lane(&e, &mut active, &counters);
+            prep.abort(&e, &counters);
+            return lane_zombie(&art, &queue, &counters, e);
+        }};
+    }
 
     loop {
         // Absorb every result that is already done (non-blocking).
         loop {
-            match try_recv_done(&mut exec) {
-                Ok(Some(msg)) => {
-                    // Saturating: an executor-startup error arrives
-                    // without a corresponding in-flight batch.
-                    in_flight = in_flight.saturating_sub(1);
-                    handle_exec_msg(msg, &mut active, &mut free, &cache, b, t, f, kind);
-                }
+            match exec.try_done() {
+                Ok(Some(outcome)) => apply_outcome(outcome, &mut active, &cache),
                 Ok(None) => break,
-                Err(e) => {
-                    fail_lane(&e, &mut active, &counters);
-                    return lane_zombie(&art, &queue, &counters, e);
-                }
+                Err(e) => fatal!(e),
             }
         }
         finalize(&mut active, &counters);
 
-        // Admission: fill spare capacity; when waking from idle, hold
-        // the batch-formation window so the first batches pack.
-        let was_idle = active.is_empty() && in_flight == 0;
-        while active.len() < cfg.max_active {
-            let timeout = if active.is_empty() && in_flight == 0 {
-                Duration::from_millis(50)
-            } else {
-                Duration::ZERO
-            };
-            match queue.pop_for(&art.name, timeout) {
-                Some(qj) => admit(qj, &art, &mut active, &counters),
+        // Admission: admit whatever the prep stage finished, refill it
+        // from the queue up to spare capacity; when waking from idle,
+        // hold the batch-formation window so the first batches pack.
+        let was_idle = active.is_empty() && exec.in_flight() == 0 && prep.in_flight() == 0;
+        while active.len() + prep.in_flight() < cfg.max_active {
+            match prep.try_ready() {
+                Some(res) => admit_prepared(res, &mut active, &counters),
                 None => break,
             }
         }
-        if was_idle && !active.is_empty() && !cfg.admission_wait.is_zero() {
+        while active.len() + prep.in_flight() < cfg.max_active
+            && prep.in_flight() < cfg.prep_depth.max(1)
+        {
+            let timeout =
+                if active.is_empty() && exec.in_flight() == 0 && prep.in_flight() == 0 {
+                    Duration::from_millis(50)
+                } else {
+                    Duration::ZERO
+                };
+            match queue.pop_for(&art.name, timeout) {
+                Some(qj) => prep.begin(qj, &art, &mut active, &counters),
+                None => break,
+            }
+        }
+        if was_idle
+            && (!active.is_empty() || prep.in_flight() > 0)
+            && !cfg.admission_wait.is_zero()
+        {
             let deadline = Instant::now() + cfg.admission_wait;
-            while active.len() < cfg.max_active {
+            while active.len() + prep.in_flight() < cfg.max_active
+                && prep.in_flight() < cfg.prep_depth.max(1)
+            {
                 let now = Instant::now();
                 if now >= deadline {
                     break;
                 }
                 match queue.pop_for(&art.name, deadline - now) {
-                    Some(qj) => admit(qj, &art, &mut active, &counters),
+                    Some(qj) => prep.begin(qj, &art, &mut active, &counters),
                     None => break,
                 }
             }
         }
+        while let Some(res) = prep.try_ready() {
+            admit_prepared(res, &mut active, &counters);
+        }
         finalize(&mut active, &counters);
 
-        if active.is_empty() && in_flight == 0 {
+        if active.is_empty() && exec.in_flight() == 0 {
+            if prep.in_flight() > 0 {
+                // Admissions are still materializing off-thread.
+                if let Some(res) = prep.ready_timeout(Duration::from_millis(50)) {
+                    admit_prepared(res, &mut active, &counters);
+                }
+                continue;
+            }
             if queue.is_drained() {
                 break;
             }
@@ -525,111 +802,50 @@ pub fn run_lane(
         }
 
         // Stage and dispatch one packed batch (or wait for capacity).
-        if let Some(mut bufs) = free.pop() {
+        if let Some(mut bufs) = exec.stage_buffer() {
             let (valid, routes) = pack(&mut active, &mut rr, &mut bufs, &cache, fp, b, t, f);
             if valid > 0 {
                 counters.batches.fetch_add(1, Ordering::Relaxed);
                 counters.packed_windows.fetch_add(valid as u64, Ordering::Relaxed);
                 counters.batch_slots.fetch_add(b as u64, Ordering::Relaxed);
-                match &mut exec {
-                    Executor::Inline(session) => {
-                        let ctx = match kind {
-                            ModelKind::SimNet => Some(&bufs.ctx[..]),
-                            ModelKind::Tao => None,
-                        };
-                        match session.run_on(&bufs.ops, &bufs.feats, ctx, valid) {
-                            Ok(out) => {
-                                demux(&out, &routes, &mut active, &cache);
-                                free.push(bufs);
-                            }
-                            Err(e) => {
-                                // Scope the failure to the jobs in
-                                // this batch, as the pipelined path
-                                // does.
-                                let msg = format!("model execution: {e:#}");
-                                for job in active.iter_mut() {
-                                    if routes.contains(&job.id) {
-                                        job.dead = Some(format!("batch failed: {msg}"));
-                                    }
-                                }
-                                free.push(bufs);
-                            }
-                        }
-                    }
-                    Executor::Pipelined { to_exec, .. } => {
-                        if to_exec.send(StagedBatch { bufs, valid, routes }).is_err() {
-                            let e = "executor thread exited".to_string();
-                            fail_lane(&e, &mut active, &counters);
-                            return lane_zombie(&art, &queue, &counters, e);
-                        }
-                        in_flight += 1;
-                    }
+                match exec.dispatch(bufs, valid, routes, kind) {
+                    Ok(Some(outcome)) => apply_outcome(outcome, &mut active, &cache),
+                    Ok(None) => {}
+                    Err(e) => fatal!(e),
                 }
             } else {
                 // No job can emit: everything active is stream-done and
                 // waiting on in-flight outputs (or already complete).
-                free.push(bufs);
-                if in_flight > 0 {
-                    match recv_done_blocking(&mut exec) {
-                        Ok(msg) => {
-                            in_flight = in_flight.saturating_sub(1);
-                            handle_exec_msg(msg, &mut active, &mut free, &cache, b, t, f, kind);
-                        }
-                        Err(e) => {
-                            fail_lane(&e, &mut active, &counters);
-                            return lane_zombie(&art, &queue, &counters, e);
-                        }
+                exec.release(bufs);
+                if exec.in_flight() > 0 {
+                    match exec.recv_done() {
+                        Ok(outcome) => apply_outcome(outcome, &mut active, &cache),
+                        Err(e) => fatal!(e),
                     }
                 }
             }
         } else {
-            // Both buffers in flight: block for one to come home.
-            match recv_done_blocking(&mut exec) {
-                Ok(msg) => {
-                    in_flight = in_flight.saturating_sub(1);
-                    handle_exec_msg(msg, &mut active, &mut free, &cache, b, t, f, kind);
-                }
-                Err(e) => {
-                    fail_lane(&e, &mut active, &counters);
-                    return lane_zombie(&art, &queue, &counters, e);
-                }
+            // Both buffer sets in flight: block for one to come home.
+            match exec.recv_done() {
+                Ok(outcome) => apply_outcome(outcome, &mut active, &cache),
+                Err(e) => fatal!(e),
             }
         }
         finalize(&mut active, &counters);
     }
 
-    if let Executor::Pipelined { to_exec, from_exec, handle } = exec {
-        drop(to_exec);
-        drop(from_exec);
-        let _ = handle.join();
+    prep.shutdown();
+    if let Executor::Pipelined(mut p) = exec {
+        p.shutdown();
     }
     Ok(())
-}
-
-fn admit(
-    qj: QueuedJob,
-    art: &PooledArtifact,
-    active: &mut Vec<ActiveJob>,
-    counters: &ServeCounters,
-) {
-    let QueuedJob { spec, done, admitted_at } = qj;
-    match ActiveJob::prepare(spec, done.clone(), admitted_at, art) {
-        Ok(job) => {
-            counters.active_jobs.fetch_add(1, Ordering::Relaxed);
-            active.push(job);
-        }
-        Err(e) => {
-            let _ = done.send(Err(format!("job preparation failed: {e:#}")));
-            counters.jobs_done.fetch_add(1, Ordering::Relaxed);
-        }
-    }
 }
 
 #[allow(clippy::too_many_arguments)]
 fn pack(
     active: &mut [ActiveJob],
     rr: &mut usize,
-    bufs: &mut BatchBuffers,
+    bufs: &mut ExecBuffers,
     cache: &Mutex<PredictionCache>,
     fp: u64,
     b: usize,
@@ -689,33 +905,18 @@ fn demux(
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn handle_exec_msg(
-    msg: ExecMsg,
-    active: &mut Vec<ActiveJob>,
-    free: &mut Vec<BatchBuffers>,
-    cache: &Mutex<PredictionCache>,
-    b: usize,
-    t: usize,
-    f: usize,
-    kind: ModelKind,
-) {
-    match msg {
-        Ok(done) => {
-            demux(&done.out, &done.routes, active, cache);
-            free.push(done.bufs);
-        }
-        Err(e) => {
-            // Only the jobs whose windows rode in the failed batch
-            // die; the rest keep streaming. The staged buffers died
-            // with the batch, so mint a fresh set to keep the
-            // free/in-flight invariant.
+/// Fold one finished batch back into the lane: demux outputs to the
+/// routed jobs, or — on a scoped batch failure — kill exactly the jobs
+/// whose windows rode in it (the rest keep streaming).
+fn apply_outcome(outcome: ExecOutcome, active: &mut [ActiveJob], cache: &Mutex<PredictionCache>) {
+    match outcome.result {
+        Ok(out) => demux(&out, &outcome.routes, active, cache),
+        Err(msg) => {
             for job in active.iter_mut() {
-                if e.routes.contains(&job.id) {
-                    job.dead = Some(format!("batch failed: {}", e.msg));
+                if outcome.routes.contains(&job.id) {
+                    job.dead = Some(format!("batch failed: {msg}"));
                 }
             }
-            free.push(BatchBuffers::new(b, t, f, kind));
         }
     }
 }
@@ -764,26 +965,6 @@ fn lane_zombie(
                     anyhow::bail!("lane {:?} failed: {err}", art.name);
                 }
             }
-        }
-    }
-}
-
-fn try_recv_done(exec: &mut Executor) -> Result<Option<ExecMsg>, String> {
-    match exec {
-        Executor::Inline(_) => Ok(None),
-        Executor::Pipelined { from_exec, .. } => match from_exec.try_recv() {
-            Ok(msg) => Ok(Some(msg)),
-            Err(TryRecvError::Empty) => Ok(None),
-            Err(TryRecvError::Disconnected) => Err("executor thread exited".into()),
-        },
-    }
-}
-
-fn recv_done_blocking(exec: &mut Executor) -> Result<ExecMsg, String> {
-    match exec {
-        Executor::Inline(_) => Err("inline executor has no in-flight batches".into()),
-        Executor::Pipelined { from_exec, .. } => {
-            from_exec.recv().map_err(|_| "executor thread exited".to_string())
         }
     }
 }
@@ -859,6 +1040,7 @@ mod tests {
             max_active: 8,
             pipeline: false,
             admission_wait: Duration::ZERO,
+            prep_depth: 0,
         };
         let mut batches_after_cold = 0;
         for pass in 0..2 {
@@ -915,6 +1097,7 @@ mod tests {
             max_active: 4,
             pipeline: true,
             admission_wait: Duration::ZERO,
+            prep_depth: 2,
         };
         let queue = Arc::new(JobQueue::new(16));
         let rxs: Vec<_> = specs.iter().map(|s| submit(&queue, s)).collect();
@@ -948,6 +1131,7 @@ mod tests {
             max_active: 4,
             pipeline: false,
             admission_wait: Duration::ZERO,
+            prep_depth: 2,
         };
         let queue = Arc::new(JobQueue::new(4));
         let rx = submit(&queue, &s);
@@ -966,13 +1150,59 @@ mod tests {
             .metrics;
         assert_metrics_identical(&got.metrics, &want, "simnet");
 
-        // A job missing ctx_uarch fails at preparation with an error
-        // response, not a hang.
+        // A job missing ctx_uarch fails at preparation (on the prep
+        // thread) with an error response, not a hang.
         let queue = Arc::new(JobQueue::new(4));
         let bad = spec("sched_sn", "dee", 100, 1, 50);
         let rx = submit(&queue, &bad);
         queue.close();
         run_lane(art, queue, cache, counters, cfg).unwrap();
         assert!(rx.recv().unwrap().is_err());
+    }
+
+    /// The bounded prep stage must change *when* jobs materialize, not
+    /// what they compute: off-thread-prepped lanes answer with metrics
+    /// identical to inline-prepped ones, and every job is answered.
+    #[test]
+    fn prep_stage_admissions_match_inline_prep() {
+        let art = pooled("sched_prep", 8, 4);
+        let specs = vec![
+            spec("sched_prep", "mcf", 450, 13, 64),
+            spec("sched_prep", "dee", 300, 4, 50),
+            spec("sched_prep", "xal", 275, 8, 44),
+            spec("sched_prep", "nab", 333, 2, 77),
+        ];
+        let mut answers: Vec<Vec<Metrics>> = Vec::new();
+        for prep_depth in [0usize, 1, 2] {
+            let cache = Arc::new(Mutex::new(PredictionCache::new(0)));
+            let counters = Arc::new(ServeCounters::default());
+            let cfg = LaneConfig {
+                max_active: 3, // < job count: admissions interleave packing
+                pipeline: prep_depth != 0,
+                admission_wait: Duration::ZERO,
+                prep_depth,
+            };
+            let queue = Arc::new(JobQueue::new(8));
+            let rxs: Vec<_> = specs.iter().map(|s| submit(&queue, s)).collect();
+            queue.close();
+            run_lane(art.clone(), queue, cache, counters.clone(), cfg).unwrap();
+            let got: Vec<Metrics> =
+                rxs.iter().map(|rx| rx.recv().unwrap().unwrap().metrics).collect();
+            assert_eq!(
+                counters.jobs_done.load(Ordering::Relaxed),
+                specs.len() as u64,
+                "prep_depth={prep_depth}: every job answered"
+            );
+            assert_eq!(counters.active_jobs.load(Ordering::Relaxed), 0);
+            answers.push(got);
+        }
+        for (s, rx0) in specs.iter().zip(&answers[0]) {
+            assert_metrics_identical(rx0, &offline(&art, s), &format!("inline {}", s.bench));
+        }
+        for depth_answers in &answers[1..] {
+            for ((s, a), b) in specs.iter().zip(&answers[0]).zip(depth_answers) {
+                assert_metrics_identical(b, a, &format!("prep vs inline {}", s.bench));
+            }
+        }
     }
 }

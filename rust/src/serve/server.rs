@@ -43,6 +43,9 @@ pub struct ServeConfig {
     pub pipeline: bool,
     /// Lane batch-formation window, milliseconds.
     pub admission_wait_ms: u64,
+    /// Jobs prepared off the lane thread ahead of admission (bounds
+    /// resident prepared-but-unadmitted jobs; 0 prepares inline).
+    pub prep_depth: usize,
 }
 
 impl Default for ServeConfig {
@@ -55,6 +58,7 @@ impl Default for ServeConfig {
             max_insts: 10_000_000,
             pipeline: true,
             admission_wait_ms: 2,
+            prep_depth: 2,
         }
     }
 }
@@ -112,6 +116,7 @@ impl Server {
             max_active: cfg.max_active,
             pipeline: cfg.pipeline,
             admission_wait: Duration::from_millis(cfg.admission_wait_ms),
+            prep_depth: cfg.prep_depth,
         };
         let mut lanes = Vec::new();
         for art in pool.iter() {

@@ -29,6 +29,7 @@ use super::source::RecordSource;
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{BufReader, Read};
 use std::path::{Path, PathBuf};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 
 /// f32 values per record in the context-metric channel (the SimNet
 /// baseline's µarch-specific model inputs).
@@ -317,6 +318,122 @@ impl ChunkSource for FileChunkSource {
     }
 }
 
+// ---------------------------------------------------------------------
+// Prefetching puller
+// ---------------------------------------------------------------------
+
+/// Runs a [`ChunkSource`] on a scoped side thread, keeping up to
+/// `depth` pulled chunks buffered ahead of the consumer, so source I/O
+/// (file reads, functional-sim generation) overlaps whatever the
+/// consumer does with each chunk — for the pipelined engine paths,
+/// both feature staging *and* model execution.
+///
+/// Buffers recycle through a return channel: steady-state allocation
+/// is `depth + 1` [`ChunkBuf`]s regardless of stream length, so the
+/// bounded-memory guarantees of the chunked consumers survive the
+/// prefetch. Chunks arrive strictly in source order; a source error is
+/// delivered once, in order, and ends the stream — exactly the
+/// semantics of pulling the source directly.
+pub struct ChunkPrefetcher {
+    rx: Receiver<Result<ChunkBuf>>,
+    recycle: SyncSender<ChunkBuf>,
+    done: bool,
+}
+
+impl ChunkPrefetcher {
+    /// Spawn the prefetch thread inside `scope`, pulling `max_rows`-row
+    /// chunks from `source` and running at most `depth` chunks ahead.
+    pub fn spawn<'scope, 'env, C>(
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        source: &'scope mut C,
+        max_rows: usize,
+        depth: usize,
+    ) -> ChunkPrefetcher
+    where
+        C: ChunkSource + Send + ?Sized,
+    {
+        assert!(max_rows >= 1, "zero-length chunk request");
+        let depth = depth.max(1);
+        let (tx, rx) = sync_channel::<Result<ChunkBuf>>(depth);
+        let (recycle, recycle_rx) = sync_channel::<ChunkBuf>(depth + 1);
+        scope.spawn(move || {
+            let mut spares: Vec<ChunkBuf> = (0..depth + 1).map(|_| ChunkBuf::new()).collect();
+            loop {
+                let mut buf = match spares.pop() {
+                    Some(b) => b,
+                    // All buffers are downstream: wait for one to come
+                    // back (or for the consumer to hang up).
+                    None => match recycle_rx.recv() {
+                        Ok(b) => b,
+                        Err(_) => return,
+                    },
+                };
+                match source.next_chunk(&mut buf, max_rows) {
+                    // `next_chunk` cleared the buffer, so an empty buf
+                    // is the in-band end-of-stream marker.
+                    Ok(0) => {
+                        let _ = tx.send(Ok(buf));
+                        return;
+                    }
+                    Ok(n) => {
+                        if buf.cols.len() != n {
+                            let _ = tx.send(Err(anyhow::anyhow!(
+                                "chunk source reported {n} rows but buffered {}",
+                                buf.cols.len()
+                            )));
+                            return;
+                        }
+                        if tx.send(Ok(buf)).is_err() {
+                            return;
+                        }
+                    }
+                    Err(e) => {
+                        let _ = tx.send(Err(e));
+                        return;
+                    }
+                }
+            }
+        });
+        ChunkPrefetcher { rx, recycle, done: false }
+    }
+
+    /// The next prefetched chunk, `None` once the stream is exhausted.
+    /// Pass consumed chunks back via [`ChunkPrefetcher::recycle`] to
+    /// keep the buffer pool bounded.
+    pub fn next(&mut self) -> Result<Option<ChunkBuf>> {
+        if self.done {
+            return Ok(None);
+        }
+        match self.rx.recv() {
+            Ok(Ok(buf)) => {
+                if buf.is_empty() {
+                    self.done = true;
+                    Ok(None)
+                } else {
+                    Ok(Some(buf))
+                }
+            }
+            Ok(Err(e)) => {
+                self.done = true;
+                Err(e)
+            }
+            // The producer only exits after sending its end marker or
+            // error; a bare disconnect means the scope is unwinding.
+            Err(_) => {
+                self.done = true;
+                Ok(None)
+            }
+        }
+    }
+
+    /// Return a consumed chunk's buffer to the prefetch thread.
+    pub fn recycle(&mut self, buf: ChunkBuf) {
+        // After end-of-stream the producer is gone; dropping the
+        // buffer then is fine.
+        let _ = self.recycle.send(buf);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -491,5 +608,75 @@ mod tests {
         let mut buf = ChunkBuf::new();
         assert_eq!(src.next_chunk(&mut buf, 8).unwrap(), 0);
         assert_eq!(src.len_hint(), Some(0));
+    }
+
+    #[test]
+    fn prefetcher_yields_same_chunks_as_direct_pulls() {
+        let cols = sample_cols(1_000);
+        let ctx: Vec<f32> = (0..1_000 * CTX_WIDTH).map(|i| i as f32 * 0.25).collect();
+        // Direct reference pulls.
+        let mut direct = SliceChunkSource::new(&cols, Some(&ctx)).unwrap();
+        let mut want: Vec<(TraceColumns, Vec<f32>)> = Vec::new();
+        let mut buf = ChunkBuf::new();
+        while direct.next_chunk(&mut buf, 97).unwrap() > 0 {
+            want.push((buf.cols.clone(), buf.ctx.clone()));
+        }
+        // Prefetched pulls (depth 2 < chunk count, so recycling cycles).
+        let mut src = SliceChunkSource::new(&cols, Some(&ctx)).unwrap();
+        let got: Vec<(TraceColumns, Vec<f32>)> = std::thread::scope(|scope| {
+            let mut pre = ChunkPrefetcher::spawn(scope, &mut src, 97, 2);
+            let mut got = Vec::new();
+            while let Some(buf) = pre.next().unwrap() {
+                got.push((buf.cols.clone(), buf.ctx.clone()));
+                pre.recycle(buf);
+            }
+            // Exhausted streams keep answering None.
+            assert!(pre.next().unwrap().is_none());
+            got
+        });
+        assert_eq!(got.len(), want.len());
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn prefetcher_surfaces_source_errors_in_order() {
+        let path = tmp("pre-trunc");
+        let cols = sample_cols(100);
+        write_functional_columns(&path, "x", &cols).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 11]).unwrap();
+        let mut src = FileChunkSource::open(&path).unwrap();
+        std::thread::scope(|scope| {
+            let mut pre = ChunkPrefetcher::spawn(scope, &mut src, 10, 2);
+            let mut pulled = 0usize;
+            let err = loop {
+                match pre.next() {
+                    Ok(Some(buf)) => {
+                        pulled += buf.len();
+                        pre.recycle(buf);
+                    }
+                    Ok(None) => panic!("truncated tail must error, not end the stream"),
+                    Err(e) => break e,
+                }
+            };
+            assert!(pulled < 100, "error must arrive before the declared record count");
+            assert!(format!("{err:#}").contains("truncated"), "unexpected error: {err:#}");
+            // After the error the stream is over.
+            assert!(pre.next().unwrap().is_none());
+        });
+    }
+
+    #[test]
+    fn prefetcher_consumer_can_stop_early() {
+        // Dropping the prefetcher mid-stream must not deadlock the
+        // scope join (the producer notices the hang-up and exits).
+        let cols = sample_cols(2_000);
+        let mut src = SliceChunkSource::new(&cols, None).unwrap();
+        std::thread::scope(|scope| {
+            let mut pre = ChunkPrefetcher::spawn(scope, &mut src, 64, 2);
+            let buf = pre.next().unwrap().expect("first chunk");
+            assert_eq!(buf.len(), 64);
+            // Drop without recycling or draining.
+        });
     }
 }

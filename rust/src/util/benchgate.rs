@@ -60,6 +60,9 @@ pub struct Report {
     pub cases: Vec<CaseRate>,
     /// `metrics.provisional == 1`: placeholder numbers, never enforce.
     pub provisional: bool,
+    /// All scalar metrics in the report (sorted keys), e.g. the
+    /// `pipeline_*` occupancy/speedup numbers.
+    pub metrics: Vec<(String, f64)>,
 }
 
 /// Parse a `BENCH_*.json` document.
@@ -86,14 +89,20 @@ pub fn parse_report(text: &str) -> Result<Report> {
             })
         })
         .collect::<Result<Vec<_>>>()?;
-    let metric = |k: &str| {
-        j.get("metrics")
-            .and_then(|m| m.get(k))
-            .and_then(|v| v.as_f64())
+    let metrics: Vec<(String, f64)> = match j.get("metrics") {
+        Some(Json::Obj(map)) => map
+            .iter()
+            .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+            .collect(),
+        _ => Vec::new(),
     };
+    let provisional = metrics
+        .iter()
+        .any(|(k, v)| k == "provisional" && *v == 1.0);
     Ok(Report {
         cases,
-        provisional: metric("provisional") == Some(1.0),
+        provisional,
+        metrics,
     })
 }
 
@@ -128,6 +137,10 @@ pub struct GateOutcome {
     pub compared: usize,
     /// Cases below tolerance.
     pub regressions: Vec<Finding>,
+    /// The report's `pipeline_*` metrics (stage/execute speedups and
+    /// occupancy counters), surfaced informationally so the
+    /// pipelined-vs-serial trajectory is visible in every gate run.
+    pub pipeline_metrics: Vec<(String, f64)>,
 }
 
 impl GateOutcome {
@@ -217,12 +230,19 @@ pub fn check(current: &Path, baselines_dir: &Path, cfg: &GateConfig) -> Result<G
             });
         }
     }
+    let pipeline_metrics: Vec<(String, f64)> = report
+        .metrics
+        .iter()
+        .filter(|(k, _)| k.starts_with("pipeline_"))
+        .cloned()
+        .collect();
     Ok(GateOutcome {
         bench,
         baselines: enforcing,
         provisional,
         compared,
         regressions,
+        pipeline_metrics,
     })
 }
 
@@ -351,6 +371,31 @@ mod tests {
         assert_eq!(o.baselines, 3);
         assert_eq!(o.compared, 0);
         assert!(!o.failed(&cfg));
+    }
+
+    #[test]
+    fn pipeline_metrics_surface_in_outcome() {
+        let (root, baselines) = fixture("pipe");
+        let bench = "BENCH_p.json";
+        let mut r = BenchReport::new();
+        r.push(Measurement {
+            name: "e/w2".into(),
+            items: 100,
+            mean_ns: 1e6,
+            min_ns: 1.0,
+            max_ns: 2.0,
+        });
+        r.metric("pipeline_speedup_workers2", 1.25);
+        r.metric("pipeline_exec_busy_frac", 0.9);
+        r.metric("smoke", 1.0);
+        let current = root.join(bench);
+        std::fs::write(&current, r.to_json()).unwrap();
+        let o = check(&current, &baselines, &GateConfig::default()).unwrap();
+        assert_eq!(o.pipeline_metrics.len(), 2, "only pipeline_* metrics surface");
+        assert!(o
+            .pipeline_metrics
+            .iter()
+            .any(|(k, v)| k == "pipeline_speedup_workers2" && (*v - 1.25).abs() < 1e-9));
     }
 
     #[test]

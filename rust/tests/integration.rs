@@ -433,6 +433,7 @@ fn chunk_sources_identical_engine_metrics_at_100k() {
     let opts = ParallelOptions {
         chunk: 8_192,
         warmup: 1_024,
+        pipeline: true,
     };
     let by_slice = engine::simulate_parallel_opts(&artifact, &cols, 3, None, opts).unwrap();
     let mut slice_src = SliceChunkSource::new(&cols, None).unwrap();
@@ -538,6 +539,50 @@ fn chunk_sources_identical_datagen_outputs_at_100k() {
     assert_eq!(m_gen.total_cycles, ds.total_cycles);
 }
 
+/// Offline-pipelining acceptance gate: at 100k instructions, the
+/// double-buffered stage/execute workers (+ dispatch-thread chunk
+/// prefetch) must produce **identical** `Metrics` and batch counts to
+/// the serial single-threaded staging across 1/2/4 workers — worker 1
+/// exercising the sequential pipelined pull (`ChunkPrefetcher` +
+/// executor thread) against the session-driven `simulate_chunked`.
+#[test]
+fn pipelined_parallel_chunked_identical_to_serial_at_100k() {
+    use tao_sim::coordinator::engine::{self, ParallelOptions};
+    use tao_sim::trace::SliceChunkSource;
+
+    let n: u64 = 100_000;
+    let dir = std::env::temp_dir().join(format!("tao-int-pipe-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let artifact = tao_sim::runtime::write_surrogate_artifact(&dir, "pipe", 64, 4).unwrap();
+    let program = workloads::by_name("mcf").unwrap().build(29);
+    let cols = FunctionalSim::new(&program).run(n).to_columns();
+    let serial_opts = ParallelOptions {
+        chunk: 8_192,
+        warmup: 1_024,
+        pipeline: false,
+    };
+    let piped_opts = ParallelOptions { pipeline: true, ..serial_opts };
+    for workers in [1usize, 2, 4] {
+        let mut src = SliceChunkSource::new(&cols, None).unwrap();
+        let serial = engine::simulate_parallel_chunked(&artifact, &mut src, workers, serial_opts)
+            .unwrap();
+        let mut src = SliceChunkSource::new(&cols, None).unwrap();
+        let piped = engine::simulate_parallel_chunked(&artifact, &mut src, workers, piped_opts)
+            .unwrap();
+        assert_eq!(piped.metrics.instructions, n, "workers={workers}");
+        assert_eq!(piped.metrics.instructions, serial.metrics.instructions);
+        assert_eq!(piped.metrics.cycles, serial.metrics.cycles, "workers={workers}");
+        assert_eq!(piped.metrics.mispredicts, serial.metrics.mispredicts);
+        assert_eq!(piped.metrics.l1d_misses, serial.metrics.l1d_misses);
+        assert_eq!(piped.metrics.l1i_misses, serial.metrics.l1i_misses);
+        assert_eq!(piped.metrics.tlb_misses, serial.metrics.tlb_misses);
+        assert_eq!(piped.batches, serial.batches, "workers={workers}");
+        assert!(serial.pipeline.is_none(), "serial path must not report occupancy");
+        let stats = piped.pipeline.expect("pipelined run reports occupancy");
+        assert_eq!(stats.batches, piped.batches, "every batch rode the pipeline");
+    }
+}
+
 /// Bounded-memory acceptance gate at the paper's "millions of
 /// instructions" scale. `#[ignore]`d in the default (debug) test run;
 /// CI's bounded-memory job runs it in release under a peak-RSS budget
@@ -580,6 +625,7 @@ fn million_instruction_streaming_smoke() {
     let popts = tao_sim::coordinator::engine::ParallelOptions {
         chunk: 16_384,
         warmup: 2_048,
+        pipeline: true,
     };
     let r = tao_sim::coordinator::engine::simulate_parallel_chunked(&artifact, &mut source, 4, popts)
         .unwrap();

@@ -53,6 +53,10 @@ fn loopback_concurrent_jobs_match_offline_cold_and_cached() {
         max_insts: 1_000_000,
         pipeline: true,
         admission_wait_ms: 100,
+        // Jobs prepare off the lane thread: the loopback equality
+        // assertions below prove the shared ExecPipeline + prep stage
+        // leave served results bit-identical to the offline engine.
+        prep_depth: 2,
     };
     let server = Server::bind(pool, &cfg).unwrap();
     let addr = server.local_addr().unwrap().to_string();
@@ -164,6 +168,9 @@ fn backpressure_rejects_and_drain_finishes_in_flight_jobs() {
         max_insts: 1_000_000,
         pipeline: true,
         admission_wait_ms: 0,
+        // max_active bounds (active + in-prep), so job 2 stays in the
+        // queue and the single-slot backpressure stays deterministic.
+        prep_depth: 2,
     };
     let server = Server::bind(pool, &cfg).unwrap();
     let addr = server.local_addr().unwrap().to_string();

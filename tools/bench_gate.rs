@@ -38,6 +38,16 @@ fn print_outcome(o: &GateOutcome, cfg: &GateConfig) {
         "bench_gate: {} — {} case(s) compared, {} enforcing + {} provisional baseline(s)",
         o.bench, o.compared, o.baselines, o.provisional
     );
+    // Pipelined-vs-serial trajectory (informational): speedups and
+    // occupancy counters the coordinator bench exports.
+    for (k, v) in &o.pipeline_metrics {
+        let warn = if k.starts_with("pipeline_speedup") && *v < 1.0 {
+            "  (WARN: pipelined below serial on this run)"
+        } else {
+            ""
+        };
+        println!("  {k}: {v:.3}{warn}");
+    }
     for f in &o.regressions {
         println!(
             "  REGRESSION {}: {:.3e} items/s vs baseline median {:.3e} (-{:.1}%, tolerance {:.0}%)",
