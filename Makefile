@@ -8,7 +8,8 @@
 # >15% items/sec regression vs the per-case baseline median); use
 # `make bench-baseline` after a trusted run to append a snapshot.
 
-.PHONY: build test fmt-check clippy bench bench-smoke bench-serve bench-gate bench-baseline ci
+.PHONY: build test fmt-check clippy bench bench-smoke bench-serve chaos-smoke \
+        bench-gate bench-baseline ci
 
 build:
 	cargo build --release
@@ -52,6 +53,26 @@ bench-serve: build
 	target/release/tao loadgen --port-file $$d/port \
 	  --json BENCH_serve.json --verify-models $$d/artifacts \
 	  --assert-occupancy --shutdown; status=$$?; \
+	if [ $$status -ne 0 ]; then kill $$serve_pid 2>/dev/null || true; fi; \
+	wait $$serve_pid; serve_status=$$?; \
+	rm -rf $$d; \
+	if [ $$status -eq 0 ]; then status=$$serve_status; fi; \
+	exit $$status
+
+# Chaos smoke (mirrors CI's chaos-smoke job): a daemon with every
+# server-side fault probe armed at low probability plus a journaled
+# cache takes the two-round `loadgen --chaos` soak — every job must
+# end typed, every success bit-identical to the offline engine.
+chaos-smoke: build
+	d=$$(mktemp -d /tmp/tao-chaos.XXXXXX); \
+	TAO_FAULTS='chunk_decode=0.002,exec_panic=0.001,queue_stall=0.002,cache_torn_write=0.002' \
+	target/release/tao serve --surrogate-dir $$d/artifacts \
+	  --port-file $$d/port --cache-journal $$d/cache.tjr \
+	  --admission-wait-ms 150 & \
+	serve_pid=$$!; \
+	target/release/tao loadgen --port-file $$d/port --chaos \
+	  --jobs 24 --threads 8 --json BENCH_chaos.json \
+	  --verify-models $$d/artifacts --shutdown; status=$$?; \
 	if [ $$status -ne 0 ]; then kill $$serve_pid 2>/dev/null || true; fi; \
 	wait $$serve_pid; serve_status=$$?; \
 	rm -rf $$d; \

@@ -35,10 +35,13 @@ USAGE:
                [--addr H:P | --port P] [--port-file F] [--queue-depth N]
                [--max-active N] [--cache-entries N] [--max-insts N]
                [--admission-wait-ms N] [--no-pipeline] [--stats-out F]
+               [--cache-journal F] [--default-deadline-ms N]
+               [--read-timeout-ms N] [--write-timeout-ms N]
+               [--faults probe=prob,...]   (also: TAO_FAULTS env var)
   tao loadgen  --addr H:P | --port-file F  [--jobs N] [--threads K]
                [--solo-jobs N] [--insts N] [--seed S] [--chunk N]
                [--json BENCH_serve.json] [--verify-models DIR]
-               [--assert-occupancy] [--shutdown] [--wait-secs N]
+               [--assert-occupancy] [--shutdown] [--wait-secs N] [--chaos]
   tao report   <table1|figure2|figure9|figure10a|figure10b|figure11|figure12a|
                 figure12b|figure14|table4|table6|figure15> [opts]
   tao dse      [--designs N] [--insts N] [--seed S]

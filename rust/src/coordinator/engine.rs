@@ -38,8 +38,10 @@ use crate::features::FeatureExtractor;
 use crate::runtime::{ArtifactMeta, ModelKind, ModelOutputs, Session};
 use crate::stats::{Metrics, PhaseSeries};
 use crate::trace::{ChunkBuf, ChunkPrefetcher, FuncRecord, TraceColumns, CTX_WIDTH};
-use anyhow::{bail, ensure, Context, Result};
+use crate::util::fault::{panic_message, relock};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
@@ -641,6 +643,54 @@ impl PredAccum {
             tlb_misses: self.tlb_misses,
         }
     }
+
+    /// Size of the cache-journal encoding: the eight public scalars,
+    /// 8 bytes each.
+    pub const JOURNAL_BYTES: usize = 64;
+
+    /// Serialize the visible accumulator state for the serving cache
+    /// journal: the eight public scalars, little-endian, `f64` as raw
+    /// bits so recovery is bit-exact. The private absorb cursor and
+    /// the phase series are deliberately dropped — [`PredAccum::merge`]
+    /// / [`PredAccum::merge_from`] never read the *other* side's
+    /// cursor, and cached chunk deltas never carry phase — so a
+    /// decoded accumulator folds exactly like the one encoded. The
+    /// codec lives here (not in `serve`) because the private cursor
+    /// keeps `PredAccum` unconstructible outside this module.
+    pub fn encode_journal(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.instructions.to_le_bytes());
+        out.extend_from_slice(&self.fetch_cycles.to_le_bytes());
+        out.extend_from_slice(&self.last_exec.to_le_bytes());
+        out.extend_from_slice(&self.last_exec_at.to_le_bytes());
+        out.extend_from_slice(&self.mispredicts.to_le_bytes());
+        out.extend_from_slice(&self.l1d_misses.to_le_bytes());
+        out.extend_from_slice(&self.l1i_misses.to_le_bytes());
+        out.extend_from_slice(&self.tlb_misses.to_le_bytes());
+    }
+
+    /// Inverse of [`PredAccum::encode_journal`].
+    pub fn decode_journal(bytes: &[u8]) -> Result<PredAccum> {
+        ensure!(
+            bytes.len() == PredAccum::JOURNAL_BYTES,
+            "journal accumulator record must be {} bytes, got {}",
+            PredAccum::JOURNAL_BYTES,
+            bytes.len()
+        );
+        let u = |i: usize| u64::from_le_bytes(bytes[i * 8..(i + 1) * 8].try_into().unwrap());
+        let f = |i: usize| f64::from_bits(u(i));
+        Ok(PredAccum {
+            instructions: u(0),
+            fetch_cycles: f(1),
+            last_exec: f(2),
+            last_exec_at: u(3),
+            mispredicts: f(4),
+            l1d_misses: f(5),
+            l1i_misses: f(6),
+            tlb_misses: f(7),
+            phase: None,
+            ordinal: 0,
+        })
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -1241,6 +1291,15 @@ where
     })
 }
 
+/// Join one parallel worker, converting a panic into an error value.
+/// Re-panicking inside a `thread::scope` closure would abandon sibling
+/// threads still blocked on channels mid-join — a panicked worker must
+/// fail the run the same way an erroring worker does.
+fn join_worker(h: std::thread::ScopedJoinHandle<'_, Result<WorkerOut>>) -> Result<WorkerOut> {
+    h.join()
+        .unwrap_or_else(|p| Err(anyhow!("worker panicked: {}", panic_message(p.as_ref()))))
+}
+
 /// Fold per-worker results into the run-level [`SimResult`].
 fn collect_workers(results: Vec<Result<WorkerOut>>, start_wall: Instant) -> Result<SimResult> {
     let mut accum = PredAccum::default();
@@ -1357,37 +1416,45 @@ pub fn simulate_parallel_opts<S: RecordSource + Sync + ?Sized>(
         for w in 0..workers.min(chunks) {
             let cursor = &cursor;
             handles.push(scope.spawn(move || -> Result<WorkerOut> {
-                if opts.pipeline {
-                    slice_worker_pipelined(
-                        artifact,
-                        source,
-                        ctx_metrics,
-                        cursor,
-                        chunks,
-                        chunk,
-                        n,
-                        opts.warmup,
-                        w,
-                    )
-                } else {
-                    slice_worker_serial(
-                        artifact,
-                        source,
-                        ctx_metrics,
-                        cursor,
-                        chunks,
-                        chunk,
-                        n,
-                        opts.warmup,
-                        w,
-                    )
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    if opts.pipeline {
+                        slice_worker_pipelined(
+                            artifact,
+                            source,
+                            ctx_metrics,
+                            cursor,
+                            chunks,
+                            chunk,
+                            n,
+                            opts.warmup,
+                            w,
+                        )
+                    } else {
+                        slice_worker_serial(
+                            artifact,
+                            source,
+                            ctx_metrics,
+                            cursor,
+                            chunks,
+                            chunk,
+                            n,
+                            opts.warmup,
+                            w,
+                        )
+                    }
+                }))
+                .unwrap_or_else(|p| {
+                    Err(anyhow!("worker {w} panicked: {}", panic_message(p.as_ref())))
+                });
+                if r.is_err() {
+                    // Fast-forward the cursor: siblings stop pulling
+                    // chunks for a run that is already doomed.
+                    cursor.fetch_max(chunks, Ordering::Relaxed);
                 }
+                r
             }));
         }
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("worker panicked"))
-            .collect()
+        handles.into_iter().map(join_worker).collect()
     });
     collect_workers(results, start_wall)
 }
@@ -1664,21 +1731,28 @@ where
             let item_rx = &item_rx;
             let cancelled = &cancelled;
             handles.push(scope.spawn(move || -> Result<WorkerOut> {
-                let r = if opts.pipeline {
-                    chunked_worker_pipelined(artifact, item_rx, w)
-                } else {
-                    chunked_worker_serial(artifact, item_rx, w)
-                };
+                // A worker panic must also set `cancelled`: the
+                // dispatch thread's try_send loop only exits on the
+                // flag (the receiver outlives the scope), so an
+                // unobserved panic in every worker would leave it
+                // spinning against a full channel forever.
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    if opts.pipeline {
+                        chunked_worker_pipelined(artifact, item_rx, cancelled, w)
+                    } else {
+                        chunked_worker_serial(artifact, item_rx, cancelled, w)
+                    }
+                }))
+                .unwrap_or_else(|p| {
+                    Err(anyhow!("worker {w} panicked: {}", panic_message(p.as_ref())))
+                });
                 if r.is_err() {
                     cancelled.store(true, Ordering::Relaxed);
                 }
                 r
             }));
         }
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("worker panicked"))
-            .collect()
+        handles.into_iter().map(join_worker).collect()
     });
     collect_workers(results, start_wall)
 }
@@ -1686,7 +1760,7 @@ where
 /// Take the next dispatched chunk item; `None` once the dispatch
 /// thread has exhausted the source and closed the channel.
 fn next_chunk_item(rx: &Mutex<Receiver<Result<ChunkItem>>>) -> Result<Option<ChunkItem>> {
-    match rx.lock().expect("chunk item channel poisoned").recv() {
+    match relock(rx).recv() {
         Ok(Ok(item)) => Ok(Some(item)),
         Ok(Err(e)) => Err(e),
         Err(_) => Ok(None),
@@ -1697,6 +1771,7 @@ fn next_chunk_item(rx: &Mutex<Receiver<Result<ChunkItem>>>) -> Result<Option<Chu
 fn chunked_worker_serial(
     artifact: &Path,
     items: &Mutex<Receiver<Result<ChunkItem>>>,
+    cancelled: &AtomicBool,
     w: usize,
 ) -> Result<WorkerOut> {
     let mut session =
@@ -1705,6 +1780,11 @@ fn chunked_worker_serial(
     let mut folded = PredAccum::default();
     let mut batches = 0u64;
     while let Some(item) = next_chunk_item(items)? {
+        if cancelled.load(Ordering::Relaxed) {
+            // A sibling already failed the run; stop consuming so the
+            // first typed error surfaces promptly.
+            break;
+        }
         let ctx = (!item.ctx.is_empty()).then_some(&item.ctx[..]);
         let run = simulate_stream(
             &mut session,
@@ -1727,12 +1807,16 @@ fn chunked_worker_serial(
 fn chunked_worker_pipelined(
     artifact: &Path,
     items: &Mutex<Receiver<Result<ChunkItem>>>,
+    cancelled: &AtomicBool,
     w: usize,
 ) -> Result<WorkerOut> {
     let meta =
         ArtifactMeta::load(artifact).with_context(|| format!("worker {w}: load {artifact:?}"))?;
     let mut worker = PipelinedWorker::new(artifact, &meta);
     while let Some(item) = next_chunk_item(items)? {
+        if cancelled.load(Ordering::Relaxed) {
+            break;
+        }
         let ctx = (!item.ctx.is_empty()).then_some(&item.ctx[..]);
         run_shard_pipelined(
             &mut worker,
@@ -1942,6 +2026,44 @@ mod tests {
         assert!((a.last_exec - 7.0).abs() < 1e-12);
         assert_eq!(a.last_exec_at, 102);
         assert!((a.mispredicts - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pred_accum_journal_codec_round_trips_bit_exactly() {
+        let mut a = PredAccum::at_base(4_096);
+        let out = ModelOutputs {
+            fetch: vec![1.5, 2.25, 0.125],
+            exec: vec![5.0, 7.75, 3.5],
+            branch: vec![0.25, 0.75, 1.0 / 3.0],
+            access: vec![0.7, 0.2, 0.05, 0.05, 0.0, 0.1, 0.4, 0.5, 0.25, 0.25, 0.25, 0.25],
+            icache: vec![0.0, 1.0, 0.5],
+            tlb: vec![0.5, 0.5, 0.1],
+        };
+        a.absorb(&out, ModelKind::Tao);
+        let mut bytes = Vec::new();
+        a.encode_journal(&mut bytes);
+        assert_eq!(bytes.len(), PredAccum::JOURNAL_BYTES);
+        let back = PredAccum::decode_journal(&bytes).unwrap();
+        // Every visible scalar round-trips to the bit, so a recovered
+        // cache entry folds exactly like the original did.
+        assert_eq!(back.instructions, a.instructions);
+        assert_eq!(back.fetch_cycles.to_bits(), a.fetch_cycles.to_bits());
+        assert_eq!(back.last_exec.to_bits(), a.last_exec.to_bits());
+        assert_eq!(back.last_exec_at, a.last_exec_at);
+        assert_eq!(back.mispredicts.to_bits(), a.mispredicts.to_bits());
+        assert_eq!(back.l1d_misses.to_bits(), a.l1d_misses.to_bits());
+        assert_eq!(back.l1i_misses.to_bits(), a.l1i_misses.to_bits());
+        assert_eq!(back.tlb_misses.to_bits(), a.tlb_misses.to_bits());
+        // Folding the decoded delta mid-stream matches folding the
+        // original (the serving cache's replay pattern).
+        let mut via_orig = PredAccum::at_base(4_096);
+        via_orig.merge(&a);
+        let mut via_back = PredAccum::at_base(4_096);
+        via_back.merge(&back);
+        assert_eq!(via_orig.metrics().cycles.to_bits(), via_back.metrics().cycles.to_bits());
+        assert_eq!(via_orig.ordinal, via_back.ordinal);
+        // Wrong-length records are rejected.
+        assert!(PredAccum::decode_journal(&bytes[..63]).is_err());
     }
 
     #[test]

@@ -30,9 +30,17 @@
 //! results as it receives them folds outputs in exactly the order a
 //! single-threaded stage→execute loop would have — the bit-identity
 //! the offline oracle tests assert.
+//!
+//! Panic isolation: the worker catches unwinds from both hooks. An
+//! `init` panic surfaces as [`PipeMsg::InitFailed`]; a step panic
+//! comes back as that batch's error value and the worker keeps
+//! serving, so a poisoned batch can never wedge a scope join or take
+//! down a serving lane's executor silently.
 
 use crate::runtime::{ModelKind, ModelOutputs, Session};
+use crate::util::fault::panic_message;
 use anyhow::{bail, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
 use std::sync::Arc;
@@ -164,10 +172,16 @@ where
         let counters = Arc::new(PipeCounters::default());
         let exec_counters = counters.clone();
         let handle = std::thread::spawn(move || {
-            let mut step = match init() {
-                Ok(s) => s,
-                Err(e) => {
+            let mut step = match catch_unwind(AssertUnwindSafe(init)) {
+                Ok(Ok(s)) => s,
+                Ok(Err(e)) => {
                     let _ = tx_done.send(PipeMsg::InitFailed { msg: format!("{e:#}") });
+                    return;
+                }
+                Err(p) => {
+                    let _ = tx_done.send(PipeMsg::InitFailed {
+                        msg: format!("init panicked: {}", panic_message(p.as_ref())),
+                    });
                     return;
                 }
             };
@@ -181,7 +195,13 @@ where
                     .exec_idle_ns
                     .fetch_add(idle.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 let busy = Instant::now();
-                let result = step(&staged.buf, &staged.payload).map_err(|e| format!("{e:#}"));
+                // A step panic is a batch-scoped error like any other:
+                // the staged buffers are only borrowed, so they return
+                // to rotation and the worker keeps serving.
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    step(&staged.buf, &staged.payload).map_err(|e| format!("{e:#}"))
+                }))
+                .unwrap_or_else(|p| Err(format!("step panicked: {}", panic_message(p.as_ref()))));
                 exec_counters
                     .exec_busy_ns
                     .fetch_add(busy.elapsed().as_nanos() as u64, Ordering::Relaxed);
@@ -444,6 +464,55 @@ mod tests {
         }
         // The worker survived the failed batch.
         assert_eq!(pipe.stats().batches, 3);
+    }
+
+    #[test]
+    fn step_panics_become_batch_scoped_errors() {
+        let mut pipe: StagePipeline<u64, (), u64> = StagePipeline::spawn(vec![0u64], || {
+            Ok(|buf: &u64, _: &()| {
+                if *buf == 3 {
+                    panic!("executor blew up on {buf}");
+                }
+                Ok(*buf)
+            })
+        });
+        for v in [1u64, 3, 5] {
+            let _ = pipe.take_buf();
+            pipe.submit(v, ()).unwrap();
+            match pipe.recv().unwrap() {
+                PipeMsg::Done { buf, result, .. } => {
+                    if v == 3 {
+                        let msg = result.unwrap_err();
+                        assert!(msg.contains("step panicked"), "got {msg}");
+                        assert!(msg.contains("blew up"), "got {msg}");
+                    } else {
+                        assert_eq!(result.unwrap(), v);
+                    }
+                    pipe.release(buf);
+                }
+                PipeMsg::InitFailed { msg } => panic!("init failed: {msg}"),
+            }
+        }
+        // The worker survived the panicked batch and kept serving.
+        assert_eq!(pipe.stats().batches, 3);
+    }
+
+    #[test]
+    fn init_panic_surfaces_as_init_failure() {
+        let mut pipe: StagePipeline<u64, (), u64> =
+            StagePipeline::spawn(vec![0u64], || -> Result<fn(&u64, &()) -> Result<u64>> {
+                panic!("device exploded during open")
+            });
+        match pipe.recv().unwrap() {
+            PipeMsg::InitFailed { msg } => {
+                assert!(msg.contains("init panicked"), "got {msg}");
+                assert!(msg.contains("device exploded"), "got {msg}");
+            }
+            PipeMsg::Done { .. } => panic!("expected init failure"),
+        }
+        // Submitting after the panic reports failure instead of hanging.
+        let buf = pipe.take_buf().unwrap();
+        assert!(pipe.submit(buf, ()).is_err());
     }
 
     #[test]

@@ -25,7 +25,14 @@
 //! extractor state with
 //! [`WindowStager::advance_only`](crate::coordinator::engine::WindowStager)
 //! (exact, state-only), so a later miss resumes bit-for-bit.
+//!
+//! With a [`CacheJournal`](super::journal::CacheJournal) attached,
+//! every fresh insert is also appended to an on-disk journal and a
+//! restarted daemon warm-loads the recovered entries — the cache
+//! survives crashes without changing a single served bit (keys embed
+//! the artifact fingerprint, so stale model bytes simply never hit).
 
+use super::journal::CacheJournal;
 use crate::coordinator::engine::PredAccum;
 use crate::trace::ChunkBuf;
 use crate::util::hash::{fnv1a64, fnv1a64_u64, FNV_OFFSET};
@@ -81,6 +88,8 @@ pub struct CacheStats {
     pub evictions: u64,
     /// Entries currently resident.
     pub entries: u64,
+    /// Entries replayed from the crash-safe journal at startup.
+    pub recovered: u64,
 }
 
 struct Slot {
@@ -105,6 +114,7 @@ pub struct PredictionCache {
     head: usize, // most recently used
     tail: usize, // least recently used
     stats: CacheStats,
+    journal: Option<CacheJournal>,
 }
 
 impl PredictionCache {
@@ -118,6 +128,36 @@ impl PredictionCache {
             head: NIL,
             tail: NIL,
             stats: CacheStats::default(),
+            journal: None,
+        }
+    }
+
+    /// Replay journal-recovered entries (append order, so a duplicated
+    /// key resolves last-wins) without re-journaling them. Returns the
+    /// number replayed. Call *before* [`PredictionCache::attach_journal`].
+    pub fn warm_load(&mut self, entries: Vec<(ChunkKey, PredAccum)>) -> usize {
+        debug_assert!(self.journal.is_none(), "warm_load would re-journal recovered entries");
+        let n = entries.len();
+        for (key, value) in entries {
+            self.insert(key, value);
+        }
+        self.stats.recovered += n as u64;
+        n
+    }
+
+    /// Attach an open journal: every subsequent fresh insert is
+    /// appended to it. An append failure disables persistence for the
+    /// rest of the process (logged once) — serving never stops for a
+    /// full disk.
+    pub fn attach_journal(&mut self, journal: CacheJournal) {
+        self.journal = Some(journal);
+    }
+
+    /// Flush the journal to stable storage, if one is attached.
+    pub fn sync_journal(&mut self) -> anyhow::Result<()> {
+        match &mut self.journal {
+            Some(j) => j.sync(),
+            None => Ok(()),
         }
     }
 
@@ -184,6 +224,14 @@ impl PredictionCache {
             self.unlink(i);
             self.push_front(i);
             return;
+        }
+        if let Some(j) = &mut self.journal {
+            // Journal only fresh inserts: a refresh stores the same
+            // deterministic value, and evicted entries stay replayable.
+            if let Err(e) = j.append(&key, &value) {
+                eprintln!("tao serve: cache journal append failed, persistence disabled: {e:#}");
+                self.journal = None;
+            }
         }
         if self.map.len() >= self.capacity {
             let lru = self.tail;
@@ -294,6 +342,45 @@ mod tests {
             chain_prefix(chain_prefix(PREFIX_SEED, 1), 2),
             chain_prefix(chain_prefix(PREFIX_SEED, 2), 1)
         );
+    }
+
+    #[test]
+    fn journal_round_trip_restores_hits() {
+        let _gate = crate::util::fault::exclusive();
+        crate::util::fault::disarm_all();
+        let dir =
+            std::env::temp_dir().join(format!("tao-cache-journal-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.journal");
+        let _ = std::fs::remove_file(&path);
+
+        // First life: populate a journaled cache.
+        let (journal, rec) = CacheJournal::open(&path).unwrap();
+        assert!(rec.entries.is_empty());
+        let mut c = PredictionCache::new(8);
+        c.attach_journal(journal);
+        for n in 1..=3 {
+            c.insert(key(n), accum(n));
+        }
+        c.get(&key(1)); // refreshes are not journaled
+        c.insert(key(2), accum(2));
+        c.sync_journal().unwrap();
+        drop(c);
+
+        // Second life: recover, warm-load, and hit without recompute.
+        let (journal, rec) = CacheJournal::open(&path).unwrap();
+        assert_eq!(rec.entries.len(), 3, "one record per fresh insert");
+        assert_eq!(rec.truncated_bytes, 0);
+        let mut c = PredictionCache::new(8);
+        assert_eq!(c.warm_load(rec.entries), 3);
+        c.attach_journal(journal);
+        let s = c.stats();
+        assert_eq!((s.recovered, s.entries), (3, 3));
+        for n in 1..=3 {
+            let got = c.get(&key(n)).expect("recovered entry must hit");
+            assert_eq!(got.instructions, accum(n).instructions);
+            assert_eq!(got.fetch_cycles.to_bits(), accum(n).fetch_cycles.to_bits());
+        }
     }
 
     #[test]

@@ -70,10 +70,30 @@ pub fn cmd_serve(mut args: Args) -> Result<()> {
             .opt_parse("--admission-wait-ms")?
             .unwrap_or(defaults.admission_wait_ms),
         prep_depth: args.opt_parse("--prep-depth")?.unwrap_or(defaults.prep_depth),
+        read_timeout_ms: args
+            .opt_parse("--read-timeout-ms")?
+            .unwrap_or(defaults.read_timeout_ms),
+        write_timeout_ms: args
+            .opt_parse("--write-timeout-ms")?
+            .unwrap_or(defaults.write_timeout_ms),
+        default_deadline_ms: args
+            .opt_parse("--default-deadline-ms")?
+            .unwrap_or(defaults.default_deadline_ms),
+        cache_journal: args.opt_value("--cache-journal")?.map(Into::into),
     };
     let port_file: Option<PathBuf> = args.opt_value("--port-file")?.map(Into::into);
     let stats_out: Option<PathBuf> = args.opt_value("--stats-out")?.map(Into::into);
+    let faults: Option<String> = args.opt_value("--faults")?;
     args.finish()?;
+
+    // Chaos probes: `--faults name=prob,...` or the TAO_FAULTS env var
+    // (flag wins). Disarmed probes cost one relaxed atomic load.
+    if let Some(spec) = &faults {
+        crate::util::fault::arm_from_spec(spec)?;
+        eprintln!("serve: fault probes armed from --faults: {spec}");
+    } else if crate::util::fault::arm_from_env()? {
+        eprintln!("serve: fault probes armed from TAO_FAULTS");
+    }
 
     if let Some(dir) = &surrogate_dir {
         let mut set = write_surrogate_set(dir)?;
@@ -168,6 +188,7 @@ pub fn cmd_loadgen(mut args: Args) -> Result<()> {
         verify_models: args.opt_value("--verify-models")?.map(Into::into),
         assert_occupancy: args.opt_flag("--assert-occupancy"),
         shutdown_after: args.opt_flag("--shutdown"),
+        chaos: args.opt_flag("--chaos"),
     };
     args.finish()?;
     run_loadgen(&opts)?;

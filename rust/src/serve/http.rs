@@ -4,8 +4,12 @@
 //! One request per connection (`Connection: close` semantics): the
 //! daemon reads a request, writes a response, closes. Limits guard the
 //! parser — 8 KiB of headers, 1 MiB of body — and every malformed
-//! input surfaces as an error, never a panic. The client side
-//! ([`http_get`], [`http_post`]) is the same code path loadgen and the
+//! input surfaces as an error, never a panic. [`read_error_status`]
+//! classifies read failures for the server: limit violations answer
+//! 413, a stalled client tripping the per-connection read timeout
+//! answers 408, everything else malformed 400. The client side
+//! ([`http_get`], [`http_post`], and the deliberately abusive
+//! [`http_post_stalled`]) is the same code path loadgen and the
 //! loopback tests use.
 
 use anyhow::{bail, ensure, Context, Result};
@@ -86,9 +90,12 @@ pub fn write_response<W: Write>(w: &mut W, status: u16, body: &str) -> Result<()
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
         429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Response",
     };
     write!(
@@ -98,6 +105,27 @@ pub fn write_response<W: Write>(w: &mut W, status: u16, body: &str) -> Result<()
     )?;
     w.flush()?;
     Ok(())
+}
+
+/// Map a request-read failure to its response status: 408 for a
+/// stalled/timed-out read (the socket's read timeout fired mid
+/// request), 413 for an over-limit header section or body, 400 for
+/// everything merely malformed.
+pub fn read_error_status(e: &anyhow::Error) -> u16 {
+    for cause in e.chain() {
+        if let Some(io) = cause.downcast_ref::<std::io::Error>() {
+            if matches!(
+                io.kind(),
+                std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+            ) {
+                return 408;
+            }
+        }
+    }
+    if format!("{e:#}").contains("too large") {
+        return 413;
+    }
+    400
 }
 
 /// A client-side response.
@@ -190,6 +218,43 @@ pub fn http_post<A: ToSocketAddrs>(addr: A, path: &str, body: &str) -> Result<Re
     request(addr, "POST", path, body, CLIENT_TIMEOUT)
 }
 
+/// A slow-loris-shaped `POST`: send the headers and half the body,
+/// stall, then (best-effort) send the rest and read the response. The
+/// chaos client uses short stalls to rough up the daemon; the
+/// timeout tests use stalls past the server's read timeout to assert
+/// the 408 path. Writes after the stall are best-effort because a
+/// server that already answered 408 may have closed its read side.
+pub fn http_post_stalled<A: ToSocketAddrs>(
+    addr: A,
+    path: &str,
+    body: &str,
+    stall: Duration,
+) -> Result<Response> {
+    let addr = addr
+        .to_socket_addrs()
+        .context("resolve address")?
+        .next()
+        .context("no address")?;
+    let stream = TcpStream::connect_timeout(&addr, CLIENT_TIMEOUT)
+        .with_context(|| format!("connect {addr}"))?;
+    stream.set_read_timeout(Some(CLIENT_TIMEOUT))?;
+    stream.set_write_timeout(Some(CLIENT_TIMEOUT))?;
+    let mut writer = stream.try_clone()?;
+    let half = body.len() / 2;
+    write!(
+        writer,
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{}",
+        body.len(),
+        &body[..half]
+    )?;
+    writer.flush()?;
+    std::thread::sleep(stall);
+    let _ = writer.write_all(body[half..].as_bytes());
+    let _ = writer.flush();
+    read_response(&mut BufReader::new(stream))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -242,6 +307,39 @@ mod tests {
         // not silently treated as header-complete.
         let cut = "GET /x HTTP/1.1\r\nHost: a\r\n";
         assert!(read_request(&mut Cursor::new(cut)).is_err());
+    }
+
+    #[test]
+    fn read_errors_classify_to_statuses() {
+        // A stalled read surfaces as an io timeout somewhere in the
+        // chain → 408.
+        let io = std::io::Error::new(std::io::ErrorKind::TimedOut, "stalled");
+        let e = anyhow::Error::new(io).context("read request line");
+        assert_eq!(read_error_status(&e), 408);
+        let io = std::io::Error::new(std::io::ErrorKind::WouldBlock, "stalled");
+        assert_eq!(read_error_status(&anyhow::Error::new(io)), 408);
+        // Limit violations → 413; anything else malformed → 400.
+        let flood = "G".repeat(4 * MAX_HEADER_BYTES);
+        let e = read_request(&mut Cursor::new(flood)).unwrap_err();
+        assert_eq!(read_error_status(&e), 413);
+        let huge =
+            format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        let e = read_request(&mut Cursor::new(huge)).unwrap_err();
+        assert_eq!(read_error_status(&e), 413);
+        let e = read_request(&mut Cursor::new("GARBAGE\r\n\r\n")).unwrap_err();
+        assert_eq!(read_error_status(&e), 400);
+    }
+
+    #[test]
+    fn timeout_reasons_render() {
+        for (status, reason) in
+            [(408, "Request Timeout"), (413, "Payload Too Large"), (504, "Gateway Timeout")]
+        {
+            let mut wire = Vec::new();
+            write_response(&mut wire, status, "{}").unwrap();
+            let text = String::from_utf8(wire).unwrap();
+            assert!(text.starts_with(&format!("HTTP/1.1 {status} {reason}")), "{text}");
+        }
     }
 
     #[test]

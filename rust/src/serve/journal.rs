@@ -1,0 +1,322 @@
+//! Append-only crash-safe journal for the prediction cache.
+//!
+//! The PR-4 prediction cache evaporated on restart; this journal makes
+//! it durable without changing a single served bit. Every *fresh*
+//! cache insert appends one CRC-framed record; on startup the daemon
+//! replays the journal into the cache ([`PredictionCache::warm_load`]
+//! (super::PredictionCache::warm_load)), so a restarted daemon serves
+//! previously-computed chunks as hits with metrics identical to the
+//! first run — the accumulator codec
+//! ([`PredAccum::encode_journal`]) stores `f64`s as raw bits.
+//!
+//! On-disk format (all integers little-endian):
+//!
+//! ```text
+//! [magic "TAOJRNL1": 8 bytes]
+//! repeated records:
+//!   [len:   u32]   // payload length; fixed per version (88)
+//!   [crc32: u32]   // IEEE CRC-32 of the payload
+//!   [payload: len] // ChunkKey (artifact, prefix, content: 3×u64)
+//!                  // + PredAccum journal encoding (64 bytes)
+//! ```
+//!
+//! Durability model: each append is one unbuffered `write_all`, so a
+//! `kill -9` (or the injected [`Probe::CacheTornWrite`] fault) loses
+//! at most a torn tail record. Recovery walks the file from the magic,
+//! stops at the first short/garbled/CRC-bad frame, and truncates there
+//! — a crash can cost the tail entry, never produce a wrong answer.
+//! `fsync` happens once per graceful drain, not per append. Chunk keys
+//! embed the artifact fingerprint, so a journal replayed under changed
+//! model bytes simply never hits.
+
+use super::cache::ChunkKey;
+use crate::coordinator::engine::PredAccum;
+use crate::util::fault::{self, Probe};
+use crate::util::hash::crc32;
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// File magic: format name + version.
+const MAGIC: &[u8; 8] = b"TAOJRNL1";
+/// Record payload: [`ChunkKey`] (3×u64) + accumulator encoding.
+const PAYLOAD_BYTES: usize = 24 + PredAccum::JOURNAL_BYTES;
+/// Full frame: length + CRC header, then the payload.
+const FRAME_BYTES: usize = 8 + PAYLOAD_BYTES;
+
+/// An open cache journal, positioned for appends.
+pub struct CacheJournal {
+    file: File,
+    path: PathBuf,
+    /// A torn-write fault fired: the file ends mid-frame, exactly as a
+    /// crash would leave it. Further appends are dropped so the torn
+    /// tail survives for the recovery path to exercise.
+    torn: bool,
+}
+
+/// What [`CacheJournal::open`] recovered from an existing file.
+pub struct Recovered {
+    /// Replayable entries, in append order (replay preserves it, so a
+    /// duplicated key resolves last-wins).
+    pub entries: Vec<(ChunkKey, PredAccum)>,
+    /// Bytes of torn/garbled tail truncated away (0 = clean file).
+    pub truncated_bytes: u64,
+}
+
+impl CacheJournal {
+    /// Open `path` (creating it if absent), validate + recover its
+    /// contents, truncate any torn tail, and return the journal ready
+    /// for appends. Fails on a file that is not a cache journal at all
+    /// (wrong magic) rather than clobbering it.
+    pub fn open(path: &Path) -> Result<(CacheJournal, Recovered)> {
+        let bytes = match std::fs::read(path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(e).with_context(|| format!("read cache journal {path:?}")),
+        };
+        if bytes.len() >= MAGIC.len() && &bytes[..MAGIC.len()] != MAGIC {
+            bail!("{path:?} is not a cache journal (bad magic); refusing to overwrite");
+        }
+        let mut entries = Vec::new();
+        let mut valid = bytes.len().min(MAGIC.len());
+        if valid == MAGIC.len() {
+            let mut off = MAGIC.len();
+            while bytes.len() - off >= 8 {
+                let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+                let crc = u32::from_le_bytes(bytes[off + 4..off + 8].try_into().unwrap());
+                if len != PAYLOAD_BYTES || bytes.len() - off - 8 < len {
+                    break; // garbled length or torn payload
+                }
+                let payload = &bytes[off + 8..off + 8 + len];
+                if crc32(payload) != crc {
+                    break; // torn or bit-rotted record
+                }
+                let k = |i: usize| {
+                    u64::from_le_bytes(payload[i * 8..(i + 1) * 8].try_into().unwrap())
+                };
+                let key = ChunkKey { artifact: k(0), prefix: k(1), content: k(2) };
+                let accum = PredAccum::decode_journal(&payload[24..])?;
+                entries.push((key, accum));
+                off += 8 + len;
+                valid = off;
+            }
+        }
+        let truncated_bytes = (bytes.len() - valid) as u64;
+        let file = std::fs::OpenOptions::new()
+            .append(true)
+            .create(true)
+            .open(path)
+            .with_context(|| format!("open cache journal {path:?}"))?;
+        // Drop the torn tail (or a torn 8-byte header from a crash
+        // during creation) so appends resume on a frame boundary.
+        file.set_len(valid as u64)
+            .with_context(|| format!("truncate cache journal {path:?}"))?;
+        let mut journal = CacheJournal { file, path: path.to_path_buf(), torn: false };
+        if valid < MAGIC.len() {
+            journal
+                .file
+                .write_all(MAGIC)
+                .with_context(|| format!("initialize cache journal {path:?}"))?;
+        }
+        Ok((journal, Recovered { entries, truncated_bytes }))
+    }
+
+    /// Append one cache entry. A single unbuffered `write_all` per
+    /// frame: a crash mid-append costs at most this one record. Under
+    /// an armed [`Probe::CacheTornWrite`] the frame is cut short and
+    /// the journal goes inert, simulating exactly that crash without
+    /// killing the process.
+    pub fn append(&mut self, key: &ChunkKey, value: &PredAccum) -> Result<()> {
+        if self.torn {
+            return Ok(());
+        }
+        let mut payload = Vec::with_capacity(PAYLOAD_BYTES);
+        payload.extend_from_slice(&key.artifact.to_le_bytes());
+        payload.extend_from_slice(&key.prefix.to_le_bytes());
+        payload.extend_from_slice(&key.content.to_le_bytes());
+        value.encode_journal(&mut payload);
+        debug_assert_eq!(payload.len(), PAYLOAD_BYTES);
+        let mut frame = Vec::with_capacity(FRAME_BYTES);
+        frame.extend_from_slice(&(PAYLOAD_BYTES as u32).to_le_bytes());
+        frame.extend_from_slice(&crc32(&payload).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        if fault::should_fire(Probe::CacheTornWrite) {
+            self.torn = true;
+            return self
+                .file
+                .write_all(&frame[..FRAME_BYTES / 2])
+                .with_context(|| format!("torn append to cache journal {:?}", self.path));
+        }
+        self.file
+            .write_all(&frame)
+            .with_context(|| format!("append to cache journal {:?}", self.path))
+    }
+
+    /// Flush to stable storage (called once per graceful drain).
+    pub fn sync(&mut self) -> Result<()> {
+        self.file
+            .sync_data()
+            .with_context(|| format!("fsync cache journal {:?}", self.path))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{ModelKind, ModelOutputs};
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tao-journal-{}-{tag}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d.join("cache.journal")
+    }
+
+    fn key(n: u64) -> ChunkKey {
+        ChunkKey { artifact: 7, prefix: n.wrapping_mul(31), content: n }
+    }
+
+    fn accum(insts: u64) -> PredAccum {
+        let n = insts as usize;
+        let mut a = PredAccum::default();
+        let out = ModelOutputs {
+            fetch: vec![2.5; n],
+            exec: vec![1.25; n],
+            branch: vec![1.0 / 3.0; n],
+            access: vec![0.25; n * 4],
+            icache: vec![0.1; n],
+            tlb: vec![0.9; n],
+        };
+        a.absorb(&out, ModelKind::Tao);
+        a
+    }
+
+    fn reopen(path: &Path) -> Recovered {
+        let (_j, rec) = CacheJournal::open(path).unwrap();
+        rec
+    }
+
+    #[test]
+    fn round_trips_entries_bit_exactly() {
+        let _gate = fault::exclusive();
+        fault::disarm_all();
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let (mut j, rec) = CacheJournal::open(&path).unwrap();
+        assert!(rec.entries.is_empty());
+        assert_eq!(rec.truncated_bytes, 0);
+        for n in 1..=5u64 {
+            j.append(&key(n), &accum(n)).unwrap();
+        }
+        j.sync().unwrap();
+        drop(j);
+        let rec = reopen(&path);
+        assert_eq!(rec.entries.len(), 5);
+        assert_eq!(rec.truncated_bytes, 0);
+        for (n, (k, a)) in (1..=5u64).zip(&rec.entries) {
+            assert_eq!(*k, key(n));
+            let want = accum(n);
+            assert_eq!(a.instructions, want.instructions);
+            assert_eq!(a.fetch_cycles.to_bits(), want.fetch_cycles.to_bits());
+            assert_eq!(a.last_exec.to_bits(), want.last_exec.to_bits());
+            assert_eq!(a.tlb_misses.to_bits(), want.tlb_misses.to_bits());
+        }
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_appends_resume() {
+        let _gate = fault::exclusive();
+        fault::disarm_all();
+        let path = tmp("torn-tail");
+        let _ = std::fs::remove_file(&path);
+        let (mut j, _) = CacheJournal::open(&path).unwrap();
+        j.append(&key(1), &accum(1)).unwrap();
+        j.append(&key(2), &accum(2)).unwrap();
+        drop(j);
+        // Simulate a crash mid-append: chop the last record in half.
+        let full = std::fs::metadata(&path).unwrap().len();
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(full - (FRAME_BYTES as u64) / 2).unwrap();
+        drop(f);
+        let (mut j, rec) = CacheJournal::open(&path).unwrap();
+        assert_eq!(rec.entries.len(), 1, "torn record must not replay");
+        assert_eq!(rec.truncated_bytes, (FRAME_BYTES as u64) / 2);
+        // Appends after recovery land on a clean frame boundary.
+        j.append(&key(3), &accum(3)).unwrap();
+        drop(j);
+        let rec = reopen(&path);
+        assert_eq!(rec.entries.len(), 2);
+        assert_eq!(rec.entries[1].0, key(3));
+    }
+
+    #[test]
+    fn crc_corruption_stops_replay() {
+        let _gate = fault::exclusive();
+        fault::disarm_all();
+        let path = tmp("crc");
+        let _ = std::fs::remove_file(&path);
+        let (mut j, _) = CacheJournal::open(&path).unwrap();
+        for n in 1..=3u64 {
+            j.append(&key(n), &accum(n)).unwrap();
+        }
+        drop(j);
+        // Flip one payload byte in the middle record.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let off = MAGIC.len() + FRAME_BYTES + 8 + 5;
+        bytes[off] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let rec = reopen(&path);
+        // Replay stops at the first bad record — suffix entries after
+        // corruption are not trusted (the stream prefix is broken).
+        assert_eq!(rec.entries.len(), 1);
+        assert_eq!(rec.truncated_bytes, 2 * FRAME_BYTES as u64);
+    }
+
+    #[test]
+    fn duplicate_keys_replay_in_append_order() {
+        let _gate = fault::exclusive();
+        fault::disarm_all();
+        let path = tmp("dups");
+        let _ = std::fs::remove_file(&path);
+        let (mut j, _) = CacheJournal::open(&path).unwrap();
+        j.append(&key(1), &accum(1)).unwrap();
+        j.append(&key(1), &accum(9)).unwrap();
+        drop(j);
+        let rec = reopen(&path);
+        assert_eq!(rec.entries.len(), 2);
+        // Last-wins falls out of replay order.
+        assert_eq!(rec.entries[1].1.instructions, 9);
+    }
+
+    #[test]
+    fn foreign_files_are_refused() {
+        let _gate = fault::exclusive();
+        fault::disarm_all();
+        let path = tmp("foreign");
+        std::fs::write(&path, b"definitely not a journal").unwrap();
+        assert!(CacheJournal::open(&path).is_err());
+        // A torn sub-magic header (crash during creation) recovers.
+        std::fs::write(&path, &MAGIC[..3]).unwrap();
+        let (_j, rec) = CacheJournal::open(&path).unwrap();
+        assert!(rec.entries.is_empty());
+    }
+
+    #[test]
+    fn torn_write_probe_leaves_recoverable_tail() {
+        let _gate = fault::exclusive();
+        fault::disarm_all();
+        let path = tmp("torn-probe");
+        let _ = std::fs::remove_file(&path);
+        let (mut j, _) = CacheJournal::open(&path).unwrap();
+        j.append(&key(1), &accum(1)).unwrap();
+        fault::arm_nth(Probe::CacheTornWrite, 1);
+        j.append(&key(2), &accum(2)).unwrap(); // cut short mid-frame
+        fault::disarm_all();
+        j.append(&key(3), &accum(3)).unwrap(); // inert: journal is torn
+        drop(j);
+        let rec = reopen(&path);
+        assert_eq!(rec.entries.len(), 1, "only the pre-tear record survives");
+        assert_eq!(rec.entries[0].0, key(1));
+        assert_eq!(rec.truncated_bytes, (FRAME_BYTES as u64) / 2);
+    }
+}

@@ -18,18 +18,29 @@
 //! [`simulate_chunked`](crate::coordinator::engine::simulate_chunked)
 //! and demands *identical* metrics — cold and warm — which is the
 //! serving subsystem's correctness contract.
+//!
+//! `--chaos` swaps the measurement sweep for a robustness soak
+//! ([`run_chaos`] via [`run_loadgen`]): the mixed scenario set replays
+//! twice from all client threads while ~2% of submissions stall
+//! mid-body ([`Probe::SlowClient`]) — typically against a daemon with
+//! its own probes armed via `TAO_FAULTS`. Retryable answers resubmit
+//! with capped exponential backoff + deterministic jitter; the pass
+//! criteria are the failure contract: every job ends *typed* (outcome
+//! or [`ServeError`]), nothing hangs, and every success is still
+//! bit-identical to the offline engine.
 
-use super::http::{http_get, http_post};
+use super::http::{http_get, http_post, http_post_stalled};
 use super::protocol::{
-    artifacts_from_json, error_retryable, resolve_ctx_uarch, JobOutcome, JobSpec,
-    StatsSnapshot,
+    artifacts_from_json, resolve_ctx_uarch, JobOutcome, JobSpec, ServeError, StatsSnapshot,
 };
 use crate::stats::Metrics;
 use crate::util::benchkit::{BenchReport, Measurement};
+use crate::util::fault::{self, Probe};
+use crate::util::rng::Rng;
 use crate::workloads::{mixed_scenarios, ScenarioArtifact, ScenarioJob};
 use anyhow::{bail, ensure, Context, Result};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -59,6 +70,8 @@ pub struct LoadgenOptions {
     pub assert_occupancy: bool,
     /// POST `/v1/shutdown` when done.
     pub shutdown_after: bool,
+    /// Run the chaos soak instead of the measurement sweep.
+    pub chaos: bool,
 }
 
 impl Default for LoadgenOptions {
@@ -75,6 +88,7 @@ impl Default for LoadgenOptions {
             verify_models: None,
             assert_occupancy: false,
             shutdown_after: false,
+            chaos: false,
         }
     }
 }
@@ -87,23 +101,40 @@ fn to_spec(j: &ScenarioJob, chunk: usize) -> JobSpec {
         artifact: j.artifact.clone(),
         chunk,
         ctx_uarch: j.ctx_uarch.clone(),
+        deadline_ms: None,
     }
 }
 
-/// Submit one job, retrying on retryable backpressure (429/503 during
-/// transient queue-full states), and parse the outcome.
+/// Exponential backoff with deterministic jitter: `10ms × 2^attempt`
+/// capped at 500ms, then drawn uniformly from [½·base, 1½·base) so a
+/// thundering herd of rejected clients decorrelates — deterministically
+/// (the rng is seeded from the spec, never the clock).
+fn backoff_delay(attempt: u32, rng: &mut Rng) -> Duration {
+    let base = (10u64 << attempt.min(6)).min(500);
+    Duration::from_millis(base / 2 + rng.gen_range(base.max(1)))
+}
+
+/// Submit one job, resubmitting on every *retryable* typed answer
+/// (429 queue-full, 503 draining/lane-restart, 504 deadline) with
+/// capped exponential backoff + jitter. Terminal answers and transport
+/// failures bail.
 fn submit(addr: &str, spec: &JobSpec) -> Result<JobOutcome> {
     let body = spec.to_json();
     let deadline = Instant::now() + Duration::from_secs(120);
+    let mut rng = Rng::new(spec.seed ^ spec.insts.rotate_left(17));
+    let mut attempt = 0u32;
     loop {
         let resp = http_post(addr, "/v1/simulate", &body)?;
-        match resp.status {
-            200 => return JobOutcome::from_json(&resp.body),
-            429 | 503 if error_retryable(&resp.body) && Instant::now() < deadline => {
-                std::thread::sleep(Duration::from_millis(20));
-            }
-            s => bail!("job {spec:?} failed with {s}: {}", resp.body),
+        if resp.status == 200 {
+            return JobOutcome::from_json(&resp.body);
         }
+        let err = ServeError::from_body(resp.status, &resp.body);
+        if err.code.retryable() && Instant::now() < deadline {
+            std::thread::sleep(backoff_delay(attempt, &mut rng));
+            attempt += 1;
+            continue;
+        }
+        bail!("job {spec:?} failed with {}: {err}", resp.status);
     }
 }
 
@@ -206,9 +237,13 @@ fn phase_case(name: &str, insts: u64, elapsed: Duration) -> Measurement {
     Measurement { name: name.into(), items: insts, mean_ns: ns, min_ns: ns, max_ns: ns }
 }
 
-/// Run the full loadgen sweep. Returns the final report (also written
-/// to `--json` when configured).
+/// Run the full loadgen sweep (or the chaos soak with `--chaos`).
+/// Returns the final report (also written to `--json` when
+/// configured).
 pub fn run_loadgen(opts: &LoadgenOptions) -> Result<BenchReport> {
+    if opts.chaos {
+        return run_chaos(opts);
+    }
     ensure!(opts.jobs >= 1, "--jobs must be at least 1");
     ensure!(
         opts.solo_jobs >= 1,
@@ -341,6 +376,175 @@ pub fn run_loadgen(opts: &LoadgenOptions) -> Result<BenchReport> {
     if let Some(path) = &opts.json_out {
         report.write_json(path).with_context(|| format!("write {path:?}"))?;
         eprintln!("loadgen: wrote {}", path.display());
+    }
+    if opts.shutdown_after {
+        let resp = http_post(addr, "/v1/shutdown", "")?;
+        ensure!(resp.status == 200, "shutdown returned {}", resp.status);
+    }
+    Ok(report)
+}
+
+/// One chaos submission: maybe stall mid-body (the client-side
+/// [`Probe::SlowClient`] abuse), resubmit retryable answers with
+/// capped backoff, and return *terminal* typed answers as values —
+/// the soak tolerates and counts them. An outer `Err` means an
+/// untyped transport failure, which the soak treats as a robustness
+/// bug in the daemon.
+#[allow(clippy::type_complexity)]
+fn submit_chaos(
+    addr: &str,
+    spec: &JobSpec,
+    round: u64,
+    retries: &AtomicU64,
+    stalls: &AtomicU64,
+) -> Result<Result<JobOutcome, ServeError>> {
+    let body = spec.to_json();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut rng = Rng::new(spec.seed ^ spec.insts.rotate_left(17) ^ (round << 56));
+    let mut attempt = 0u32;
+    loop {
+        let resp = if fault::should_fire(Probe::SlowClient) {
+            stalls.fetch_add(1, Ordering::Relaxed);
+            http_post_stalled(addr, "/v1/simulate", &body, Duration::from_millis(250))?
+        } else {
+            http_post(addr, "/v1/simulate", &body)?
+        };
+        if resp.status == 200 {
+            return Ok(Ok(JobOutcome::from_json(&resp.body)?));
+        }
+        let err = ServeError::from_body(resp.status, &resp.body);
+        if err.code.retryable() && Instant::now() < deadline {
+            retries.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(backoff_delay(attempt, &mut rng));
+            attempt += 1;
+            continue;
+        }
+        return Ok(Err(err));
+    }
+}
+
+/// Chaos soak (`--chaos`): replay the mixed scenario set twice —
+/// cold, then against a warmed cache, so the retry and cache paths
+/// interact — from all client threads, stalling ~2% of submissions
+/// mid-body. The daemon under test typically has its own probes armed
+/// via `TAO_FAULTS`. Pass criteria are the failure contract, not
+/// throughput: every job ends typed, nothing hangs, at least one job
+/// succeeds, and (with `--verify-models`) every success is
+/// bit-identical to the offline engine.
+pub fn run_chaos(opts: &LoadgenOptions) -> Result<BenchReport> {
+    ensure!(opts.jobs >= 1, "--jobs must be at least 1");
+    ensure!(opts.insts >= 2, "--insts must be at least 2");
+    let addr = opts.addr.as_str();
+    let health = http_get(addr, "/healthz").context("daemon unreachable")?;
+    ensure!(health.status == 200, "daemon unhealthy: {}", health.status);
+    let arts_resp = http_get(addr, "/v1/artifacts")?;
+    ensure!(arts_resp.status == 200, "artifact listing failed");
+    let arts: Vec<ScenarioArtifact> = artifacts_from_json(&arts_resp.body)?
+        .into_iter()
+        .map(|a| ScenarioArtifact { simnet: a.is_simnet(), name: a.name })
+        .collect();
+    ensure!(!arts.is_empty(), "daemon serves no artifacts");
+
+    let specs: Vec<JobSpec> = mixed_scenarios(&arts, opts.jobs, opts.insts, opts.seed)
+        .iter()
+        .map(|j| to_spec(j, opts.chunk))
+        .collect();
+    let total_insts: u64 = specs.iter().map(|s| s.insts).sum();
+    eprintln!(
+        "chaos: {} jobs x 2 rounds against {addr} ({} artifact(s)), ~2% stalled submissions",
+        specs.len(),
+        arts.len()
+    );
+
+    // Client-side abuse: ~2% of submissions stall mid-body for 250ms
+    // (short of the server's default read timeout, so they must still
+    // be served, not 408'd).
+    fault::arm(Probe::SlowClient, 20_000);
+    let retries = AtomicU64::new(0);
+    let stalls = AtomicU64::new(0);
+    let mut all: Vec<(usize, Result<JobOutcome, ServeError>)> = Vec::new();
+    let t0 = Instant::now();
+    for round in 0..2u64 {
+        let cursor = AtomicUsize::new(0);
+        let results: Mutex<Vec<Option<Result<JobOutcome, ServeError>>>> =
+            Mutex::new(vec![None; specs.len()]);
+        let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            for _ in 0..opts.threads.max(1) {
+                scope.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= specs.len() {
+                        break;
+                    }
+                    match submit_chaos(addr, &specs[i], round, &retries, &stalls) {
+                        Ok(res) => results.lock().expect("results")[i] = Some(res),
+                        Err(e) => errors.lock().expect("errors").push(format!("{e:#}")),
+                    }
+                });
+            }
+        });
+        let errors = errors.into_inner().expect("errors");
+        ensure!(
+            errors.is_empty(),
+            "chaos round {round}: untyped transport failures: {}",
+            errors.join("; ")
+        );
+        for (i, res) in results.into_inner().expect("results").into_iter().enumerate() {
+            all.push((i, res.context("missing chaos result")?));
+        }
+    }
+    // Neutralize the client-side probe without clobbering any probes a
+    // same-process harness armed for the daemon.
+    fault::arm(Probe::SlowClient, 0);
+    let elapsed = t0.elapsed();
+
+    let mut succeeded = 0u64;
+    let mut failed_typed = 0u64;
+    let mut verified = 0u64;
+    for (i, res) in &all {
+        match res {
+            Ok(out) => {
+                succeeded += 1;
+                if let Some(dir) = &opts.verify_models {
+                    let spec = &specs[*i];
+                    let offline = offline_reference(spec, dir)?;
+                    assert_identical(
+                        &out.metrics,
+                        &offline,
+                        &format!("chaos {}/{}@{}", spec.bench, spec.artifact, spec.seed),
+                    )?;
+                    verified += 1;
+                }
+            }
+            Err(se) => {
+                failed_typed += 1;
+                eprintln!("chaos: job {i} ended typed: {se}");
+            }
+        }
+    }
+    ensure!(succeeded > 0, "chaos soak: every job failed — daemon never served");
+
+    let mut report = BenchReport::new();
+    report.push(phase_case("serve/chaos", 2 * total_insts, elapsed));
+    report.metric("chaos_jobs_ok", succeeded as f64);
+    report.metric("chaos_jobs_failed_typed", failed_typed as f64);
+    report.metric("chaos_retries", retries.load(Ordering::Relaxed) as f64);
+    report.metric("chaos_stalled_submits", stalls.load(Ordering::Relaxed) as f64);
+    eprintln!(
+        "chaos: {} submissions — {} ok ({} verified), {} typed failures, \
+         {} retries, {} stalled posts, {:.1}s",
+        all.len(),
+        succeeded,
+        verified,
+        failed_typed,
+        retries.load(Ordering::Relaxed),
+        stalls.load(Ordering::Relaxed),
+        elapsed.as_secs_f64(),
+    );
+
+    if let Some(path) = &opts.json_out {
+        report.write_json(path).with_context(|| format!("write {path:?}"))?;
+        eprintln!("chaos: wrote {}", path.display());
     }
     if opts.shutdown_after {
         let resp = http_post(addr, "/v1/shutdown", "")?;

@@ -23,14 +23,25 @@
 //!   (artifact, warm-up prefix, chunk content): repeated trace regions
 //!   across requests and design sweeps skip model execution entirely,
 //!   with results *identical* to the offline engine.
+//! * [`journal`] — the crash-safe on-disk journal behind the cache:
+//!   CRC-framed appends, torn-tail truncation on recovery, warm-load
+//!   at startup.
 //!
-//! [`server`] wires them together; [`loadgen`] is the measurement
-//! client (`BENCH_serve.json`); [`cli`] holds the `tao serve` /
+//! The daemon is built to *degrade*, not die: jobs carry deadlines,
+//! failures are typed retryable/terminal ([`protocol::ServeError`]),
+//! panicked lanes are isolated and respawned by a supervisor, and
+//! every failure mode is rehearsable via [`crate::util::fault`]
+//! probes. Under faults and retries, every successfully served result
+//! is still bit-identical to the offline engine.
+//!
+//! [`server`] wires them together; [`loadgen`] is the measurement +
+//! chaos client (`BENCH_serve.json`); [`cli`] holds the `tao serve` /
 //! `tao loadgen` entry points.
 
 pub mod cache;
 pub mod cli;
 pub mod http;
+pub mod journal;
 pub mod loadgen;
 pub mod protocol;
 pub mod queue;
@@ -38,7 +49,8 @@ pub mod scheduler;
 pub mod server;
 
 pub use cache::PredictionCache;
-pub use protocol::{JobOutcome, JobSpec, StatsSnapshot};
+pub use journal::CacheJournal;
+pub use protocol::{ErrorCode, JobOutcome, JobSpec, ServeError, StatsSnapshot};
 pub use queue::JobQueue;
 pub use scheduler::{LaneConfig, ServeCounters};
 pub use server::{Server, ServeConfig};

@@ -10,12 +10,14 @@
 //! Endpoints (see docs/SERVE.md for the full reference):
 //!
 //! * `POST /v1/simulate` — body [`JobSpec`]; blocks until the job
-//!   completes; 200 with [`JobOutcome`], 429 when the admission queue
-//!   is full (retryable), 503 while draining (retryable).
+//!   completes; 200 with [`JobOutcome`], otherwise a typed
+//!   [`ServeError`] body whose [`ErrorCode`] fixes the HTTP status and
+//!   whether the client should retry (docs/SERVE.md "Failure
+//!   semantics" has the full taxonomy table).
 //! * `GET  /v1/stats` — serving counters (queue, packing occupancy,
-//!   cache hit rates).
+//!   cache hit rates, lane restarts).
 //! * `POST /v1/shutdown` — begin graceful drain.
-//! * `GET  /healthz` — liveness.
+//! * `GET  /healthz` — readiness (`serving`/`degraded`/`draining`).
 
 use crate::stats::Metrics;
 use crate::uarch::UarchConfig;
@@ -42,6 +44,11 @@ pub struct JobSpec {
     /// a preset name (`a`, `uarch_b`, ...) or `design:<index>` into the
     /// Table 3 space. Required for SimNet artifacts, ignored for Tao.
     pub ctx_uarch: Option<String>,
+    /// Per-job deadline in milliseconds, measured from admission. An
+    /// expired job is cancelled (its lane slot reclaimed) and answered
+    /// with a retryable [`ErrorCode::DeadlineExceeded`]. `None` takes
+    /// the server's `--default-deadline-ms`.
+    pub deadline_ms: Option<u64>,
 }
 
 /// Largest integer the JSON number channel carries exactly (`f64`
@@ -61,13 +68,16 @@ impl JobSpec {
             chunk: j.get("chunk").and_then(Json::as_u64).unwrap_or(DEFAULT_CHUNK as u64)
                 as usize,
             ctx_uarch: j.get("ctx_uarch").and_then(Json::as_str).map(str::to_string),
+            deadline_ms: j.get("deadline_ms").and_then(Json::as_u64),
         };
         ensure!(spec.insts >= 1, "insts must be positive");
         ensure!(spec.chunk >= 1, "chunk must be positive");
+        ensure!(spec.deadline_ms != Some(0), "deadline_ms must be positive");
         for (name, v) in [
             ("insts", spec.insts),
             ("seed", spec.seed),
             ("chunk", spec.chunk as u64),
+            ("deadline_ms", spec.deadline_ms.unwrap_or(0)),
         ] {
             ensure!(
                 v <= MAX_SAFE_JSON_INT,
@@ -88,6 +98,9 @@ impl JobSpec {
         ];
         if let Some(u) = &self.ctx_uarch {
             pairs.push(("ctx_uarch", Json::of_str(u)));
+        }
+        if let Some(d) = self.deadline_ms {
+            pairs.push(("deadline_ms", Json::of_u64(d)));
         }
         Json::obj(pairs).render()
     }
@@ -204,6 +217,159 @@ pub fn error_retryable(text: &str) -> bool {
         .unwrap_or(false)
 }
 
+/// The serving error taxonomy. Every non-200 response carries one of
+/// these codes; the code alone fixes the HTTP status and whether a
+/// retry can succeed, so clients never have to pattern-match message
+/// strings (docs/SERVE.md "Failure semantics" tabulates all of them).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Malformed or unresolvable request (bad JSON, unknown
+    /// bench/artifact, over admission limits).
+    BadRequest,
+    /// The client stalled past the per-connection read timeout.
+    RequestTimeout,
+    /// Request header or body exceeds the server's size limits.
+    TooLarge,
+    /// Admission queue full — back off and retry.
+    QueueFull,
+    /// The daemon is draining and admits nothing new.
+    Draining,
+    /// The job's lane thread failed or is restarting; the job did not
+    /// run (or did not complete) and is safe to resubmit.
+    LaneFailed,
+    /// A packed model batch failed to execute; the affected jobs are
+    /// safe to resubmit.
+    ExecFailed,
+    /// The job's deadline expired before it completed.
+    DeadlineExceeded,
+    /// The job itself failed deterministically (e.g. its trace chunk
+    /// would not decode) — resubmitting the same spec fails again.
+    JobFailed,
+    /// Unexpected server-side failure.
+    Internal,
+}
+
+impl ErrorCode {
+    /// The HTTP status this code travels under.
+    pub fn http_status(self) -> u16 {
+        match self {
+            ErrorCode::BadRequest => 400,
+            ErrorCode::RequestTimeout => 408,
+            ErrorCode::TooLarge => 413,
+            ErrorCode::QueueFull => 429,
+            ErrorCode::Draining | ErrorCode::LaneFailed | ErrorCode::ExecFailed => 503,
+            ErrorCode::DeadlineExceeded => 504,
+            ErrorCode::JobFailed | ErrorCode::Internal => 500,
+        }
+    }
+
+    /// Can an identical resubmission succeed?
+    pub fn retryable(self) -> bool {
+        matches!(
+            self,
+            ErrorCode::QueueFull
+                | ErrorCode::Draining
+                | ErrorCode::LaneFailed
+                | ErrorCode::ExecFailed
+                | ErrorCode::DeadlineExceeded
+        )
+    }
+
+    /// Wire name (the body's `code` field).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::RequestTimeout => "request_timeout",
+            ErrorCode::TooLarge => "too_large",
+            ErrorCode::QueueFull => "queue_full",
+            ErrorCode::Draining => "draining",
+            ErrorCode::LaneFailed => "lane_failed",
+            ErrorCode::ExecFailed => "exec_failed",
+            ErrorCode::DeadlineExceeded => "deadline_exceeded",
+            ErrorCode::JobFailed => "job_failed",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    /// Inverse of [`ErrorCode::as_str`].
+    pub fn from_str(name: &str) -> Option<ErrorCode> {
+        ALL_CODES.iter().copied().find(|c| c.as_str() == name)
+    }
+}
+
+const ALL_CODES: [ErrorCode; 10] = [
+    ErrorCode::BadRequest,
+    ErrorCode::RequestTimeout,
+    ErrorCode::TooLarge,
+    ErrorCode::QueueFull,
+    ErrorCode::Draining,
+    ErrorCode::LaneFailed,
+    ErrorCode::ExecFailed,
+    ErrorCode::DeadlineExceeded,
+    ErrorCode::JobFailed,
+    ErrorCode::Internal,
+];
+
+/// A typed serving error: taxonomy code + human-readable message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeError {
+    /// Taxonomy code (fixes status + retryability).
+    pub code: ErrorCode,
+    /// Human-readable detail for logs; carries no contract.
+    pub message: String,
+}
+
+impl ServeError {
+    /// Construct.
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> ServeError {
+        ServeError { code, message: message.into() }
+    }
+
+    /// Render the response body. Keeps the legacy `retryable` flag so
+    /// older clients (`error_retryable`) classify correctly.
+    pub fn to_json(&self) -> String {
+        Json::obj([
+            ("code", Json::of_str(self.code.as_str())),
+            ("error", Json::of_str(&self.message)),
+            ("retryable", Json::Bool(self.code.retryable())),
+        ])
+        .render()
+    }
+
+    /// Classify a non-200 response. Falls back to the HTTP status when
+    /// the body carries no recognizable code (proxy/garbled bodies).
+    pub fn from_body(status: u16, text: &str) -> ServeError {
+        let j = Json::parse(text).ok();
+        let code = j
+            .as_ref()
+            .and_then(|j| j.get("code"))
+            .and_then(Json::as_str)
+            .and_then(ErrorCode::from_str)
+            .unwrap_or(match status {
+                400 => ErrorCode::BadRequest,
+                408 => ErrorCode::RequestTimeout,
+                413 => ErrorCode::TooLarge,
+                429 => ErrorCode::QueueFull,
+                503 => ErrorCode::Draining,
+                504 => ErrorCode::DeadlineExceeded,
+                _ => ErrorCode::Internal,
+            });
+        let message = j
+            .as_ref()
+            .and_then(|j| j.get("error"))
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .unwrap_or_else(|| text.to_string());
+        ServeError { code, message }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code.as_str(), self.message)
+    }
+}
+
 /// Snapshot of the daemon's serving counters (`GET /v1/stats`).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct StatsSnapshot {
@@ -231,6 +397,10 @@ pub struct StatsSnapshot {
     pub cache_evictions: u64,
     /// Prediction-cache resident entries.
     pub cache_entries: u64,
+    /// Prediction-cache entries warm-loaded from the journal at start.
+    pub cache_recovered: u64,
+    /// Lane threads respawned after a panic or fatal lane error.
+    pub lane_restarts: u64,
 }
 
 impl StatsSnapshot {
@@ -258,6 +428,8 @@ impl StatsSnapshot {
             cache_misses: self.cache_misses - earlier.cache_misses,
             cache_evictions: self.cache_evictions - earlier.cache_evictions,
             cache_entries: self.cache_entries,
+            cache_recovered: self.cache_recovered,
+            lane_restarts: self.lane_restarts - earlier.lane_restarts,
         }
     }
 
@@ -277,6 +449,8 @@ impl StatsSnapshot {
             ("cache_misses", Json::of_u64(self.cache_misses)),
             ("cache_evictions", Json::of_u64(self.cache_evictions)),
             ("cache_entries", Json::of_u64(self.cache_entries)),
+            ("cache_recovered", Json::of_u64(self.cache_recovered)),
+            ("lane_restarts", Json::of_u64(self.lane_restarts)),
         ])
         .render()
     }
@@ -297,6 +471,8 @@ impl StatsSnapshot {
             cache_misses: j.req_u64("cache_misses")?,
             cache_evictions: j.req_u64("cache_evictions")?,
             cache_entries: j.req_u64("cache_entries")?,
+            cache_recovered: j.req_u64("cache_recovered")?,
+            lane_restarts: j.req_u64("lane_restarts")?,
         })
     }
 }
@@ -425,6 +601,7 @@ mod tests {
             artifact: "tao_a".into(),
             chunk: 257,
             ctx_uarch: Some("design:123".into()),
+            deadline_ms: Some(5_000),
         };
         assert_eq!(JobSpec::from_json(&spec.to_json()).unwrap(), spec);
         // Defaults fill in.
@@ -432,11 +609,16 @@ mod tests {
         assert_eq!(min.seed, 42);
         assert_eq!(min.chunk, DEFAULT_CHUNK);
         assert_eq!(min.ctx_uarch, None);
+        assert_eq!(min.deadline_ms, None);
         // Degenerate values rejected.
         assert!(JobSpec::from_json(r#"{"bench":"mcf","insts":0,"artifact":"x"}"#).is_err());
         assert!(
             JobSpec::from_json(r#"{"bench":"mcf","insts":1,"artifact":"x","chunk":0}"#).is_err()
         );
+        assert!(JobSpec::from_json(
+            r#"{"bench":"mcf","insts":1,"artifact":"x","deadline_ms":0}"#
+        )
+        .is_err());
         assert!(JobSpec::from_json("{nope").is_err());
         // Integers past the exact f64 range are rejected, not rounded.
         let big = format!(
@@ -509,6 +691,33 @@ mod tests {
     }
 
     #[test]
+    fn serve_errors_round_trip_and_classify() {
+        for code in ALL_CODES {
+            assert_eq!(ErrorCode::from_str(code.as_str()), Some(code));
+            let err = ServeError::new(code, format!("probe {}", code.as_str()));
+            let back = ServeError::from_body(code.http_status(), &err.to_json());
+            assert_eq!(back, err);
+            // The legacy flag matches the taxonomy.
+            assert_eq!(error_retryable(&err.to_json()), code.retryable());
+        }
+        assert_eq!(ErrorCode::from_str("nope"), None);
+        // Garbled bodies fall back to the HTTP status.
+        assert_eq!(ServeError::from_body(429, "garbage").code, ErrorCode::QueueFull);
+        assert_eq!(ServeError::from_body(504, "").code, ErrorCode::DeadlineExceeded);
+        assert_eq!(ServeError::from_body(500, "{}").code, ErrorCode::Internal);
+        // Retryability is exactly the transient set.
+        assert!(ErrorCode::QueueFull.retryable());
+        assert!(ErrorCode::LaneFailed.retryable());
+        assert!(ErrorCode::DeadlineExceeded.retryable());
+        assert!(!ErrorCode::JobFailed.retryable());
+        assert!(!ErrorCode::BadRequest.retryable());
+        assert_eq!(
+            ServeError::new(ErrorCode::ExecFailed, "batch died").to_string(),
+            "exec_failed: batch died"
+        );
+    }
+
+    #[test]
     fn artifact_listing_round_trips() {
         let dir = std::env::temp_dir().join(format!("tao-proto-{}", std::process::id()));
         let a = crate::runtime::write_surrogate_artifact(&dir, "al_tao", 16, 8).unwrap();
@@ -552,6 +761,7 @@ mod tests {
             artifact: "vp_tao".into(),
             chunk: 64,
             ctx_uarch: None,
+            deadline_ms: None,
         };
         assert_eq!(
             validate_spec(&spec, &pool, 1_000).unwrap(),

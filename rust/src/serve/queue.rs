@@ -11,9 +11,10 @@
 //! Lanes pop selectively by artifact name ([`JobQueue::pop_for`]): one
 //! queue serves every lane, and the bound covers the whole daemon.
 
-use super::protocol::{JobOutcome, JobSpec};
+use super::protocol::{JobOutcome, JobSpec, ServeError};
+use crate::util::fault::{self, Probe};
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 /// A job admitted to the queue: the parsed spec plus the channel the
@@ -22,9 +23,19 @@ pub struct QueuedJob {
     /// Parsed, validated request.
     pub spec: JobSpec,
     /// Completion channel back to the waiting connection handler.
-    pub done: std::sync::mpsc::Sender<Result<JobOutcome, String>>,
+    pub done: std::sync::mpsc::Sender<Result<JobOutcome, ServeError>>,
     /// Admission timestamp (for `elapsed_ms`).
     pub admitted_at: Instant,
+    /// Absolute cancellation deadline (spec `deadline_ms` or the
+    /// server default, resolved at admission). `None` = no deadline.
+    pub deadline: Option<Instant>,
+}
+
+impl QueuedJob {
+    /// Has this job's deadline passed?
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
 }
 
 /// Why a submit was refused.
@@ -62,7 +73,7 @@ impl JobQueue {
     /// Admit a job, or refuse with backpressure. On refusal the job is
     /// handed back so the caller can answer its completion channel.
     pub fn submit(&self, job: QueuedJob) -> Result<(), (QueuedJob, SubmitError)> {
-        let mut st = self.state.lock().expect("queue poisoned");
+        let mut st = fault::relock(&self.state);
         if st.closed {
             return Err((job, SubmitError::Closed));
         }
@@ -79,8 +90,13 @@ impl JobQueue {
     /// waiting up to `timeout` for one to arrive. Returns `None` on
     /// timeout or when the queue is closed with no matching job left.
     pub fn pop_for(&self, artifact: &str, timeout: Duration) -> Option<QueuedJob> {
+        if fault::should_fire(Probe::QueueStall) {
+            // Injected consumer stall: bounded, so it degrades latency
+            // without violating any liveness contract.
+            std::thread::sleep(Duration::from_millis(50));
+        }
         let deadline = Instant::now() + timeout;
-        let mut st = self.state.lock().expect("queue poisoned");
+        let mut st = fault::relock(&self.state);
         loop {
             if let Some(i) = st.pending.iter().position(|j| j.spec.artifact == artifact) {
                 return st.pending.remove(i);
@@ -95,7 +111,7 @@ impl JobQueue {
             let (next, timed_out) = self
                 .cond
                 .wait_timeout(st, deadline - now)
-                .expect("queue poisoned");
+                .unwrap_or_else(PoisonError::into_inner);
             st = next;
             if timed_out.timed_out() && st.pending.iter().all(|j| j.spec.artifact != artifact)
             {
@@ -107,24 +123,24 @@ impl JobQueue {
     /// Begin draining: new submits fail with [`SubmitError::Closed`];
     /// already-admitted jobs stay poppable.
     pub fn close(&self) {
-        self.state.lock().expect("queue poisoned").closed = true;
+        fault::relock(&self.state).closed = true;
         self.cond.notify_all();
     }
 
     /// True once [`JobQueue::close`] has run.
     pub fn is_closed(&self) -> bool {
-        self.state.lock().expect("queue poisoned").closed
+        fault::relock(&self.state).closed
     }
 
     /// True when closed and fully drained (lanes may exit).
     pub fn is_drained(&self) -> bool {
-        let st = self.state.lock().expect("queue poisoned");
+        let st = fault::relock(&self.state);
         st.closed && st.pending.is_empty()
     }
 
     /// Jobs waiting for a lane.
     pub fn depth(&self) -> usize {
-        self.state.lock().expect("queue poisoned").pending.len()
+        fault::relock(&self.state).pending.len()
     }
 }
 
@@ -133,7 +149,7 @@ mod tests {
     use super::*;
     use std::sync::mpsc;
 
-    fn job(artifact: &str) -> (QueuedJob, mpsc::Receiver<Result<JobOutcome, String>>) {
+    fn job(artifact: &str) -> (QueuedJob, mpsc::Receiver<Result<JobOutcome, ServeError>>) {
         let (tx, rx) = mpsc::channel();
         (
             QueuedJob {
@@ -144,12 +160,25 @@ mod tests {
                     artifact: artifact.into(),
                     chunk: 8,
                     ctx_uarch: None,
+                    deadline_ms: None,
                 },
                 done: tx,
                 admitted_at: Instant::now(),
+                deadline: None,
             },
             rx,
         )
+    }
+
+    #[test]
+    fn deadline_expiry_is_visible() {
+        let (mut j, _r) = job("a");
+        let now = Instant::now();
+        assert!(!j.expired(now), "no deadline never expires");
+        j.deadline = Some(now + Duration::from_secs(60));
+        assert!(!j.expired(now));
+        j.deadline = Some(now);
+        assert!(j.expired(now));
     }
 
     #[test]

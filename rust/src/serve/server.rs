@@ -10,21 +10,36 @@
 //! Graceful shutdown (`POST /v1/shutdown`, or SIGINT via the CLI):
 //! stop accepting, close the admission queue — new submits get a
 //! retryable 503 — let lanes finish the backlog and every in-flight
-//! job, join everything, and flush the final stats (cache hit rates,
-//! packing occupancy) to stderr and to the caller.
+//! job, join everything, fsync the cache journal, and flush the final
+//! stats (cache hit rates, packing occupancy) to stderr and to the
+//! caller.
+//!
+//! Fault tolerance: each lane runs under a **supervisor** thread that
+//! catches lane-fatal errors *and panics*, answers the artifact's
+//! queued jobs retryably through an exponential backoff, and respawns
+//! the lane — one poisoned artifact or injected panic degrades that
+//! lane, never the daemon. `/healthz` reports the resulting readiness
+//! state (`starting` / `serving` / `degraded` / `draining`), and with
+//! [`ServeConfig::cache_journal`] set, the prediction cache persists
+//! across crashes via the crash-safe journal ([`super::journal`]).
 
 use super::cache::PredictionCache;
-use super::http::{read_request, write_response};
-use super::protocol::{error_body, validate_spec, JobSpec, StatsSnapshot};
+use super::http::{read_error_status, read_request, write_response};
+use super::journal::CacheJournal;
+use super::protocol::{
+    error_body, validate_spec, ErrorCode, JobSpec, ServeError, StatsSnapshot,
+};
 use super::queue::{JobQueue, QueuedJob, SubmitError};
 use super::scheduler::{run_lane, LaneConfig, ServeCounters};
-use crate::runtime::ArtifactPool;
+use crate::runtime::{ArtifactPool, PooledArtifact};
+use crate::util::fault::{panic_message, relock};
 use anyhow::{ensure, Context, Result};
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Daemon configuration.
 #[derive(Debug, Clone)]
@@ -46,6 +61,20 @@ pub struct ServeConfig {
     /// Jobs prepared off the lane thread ahead of admission (bounds
     /// resident prepared-but-unadmitted jobs; 0 prepares inline).
     pub prep_depth: usize,
+    /// Per-connection socket read timeout, milliseconds: a client that
+    /// stalls mid-request this long gets a 408 and the thread back.
+    pub read_timeout_ms: u64,
+    /// Per-connection socket write timeout, milliseconds (a client not
+    /// draining its response).
+    pub write_timeout_ms: u64,
+    /// Default job deadline, milliseconds, for specs that don't carry
+    /// their own `deadline_ms` (0 = no default; expired jobs die with
+    /// a retryable `deadline_exceeded`).
+    pub default_deadline_ms: u64,
+    /// Crash-safe cache journal path: recovered entries warm-load at
+    /// bind, fresh inserts append, drain fsyncs. `None` keeps the
+    /// cache memory-only.
+    pub cache_journal: Option<std::path::PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -59,6 +88,10 @@ impl Default for ServeConfig {
             pipeline: true,
             admission_wait_ms: 2,
             prep_depth: 2,
+            read_timeout_ms: 10_000,
+            write_timeout_ms: 30_000,
+            default_deadline_ms: 300_000,
+            cache_journal: None,
         }
     }
 }
@@ -69,7 +102,14 @@ struct Shared {
     cache: Arc<Mutex<PredictionCache>>,
     counters: Arc<ServeCounters>,
     shutdown: AtomicBool,
+    /// Flipped when the accept loop starts; `/healthz` says `starting`
+    /// until then.
+    started: AtomicBool,
     max_insts: u64,
+    read_timeout: Duration,
+    write_timeout: Duration,
+    /// Applied to specs without their own `deadline_ms`.
+    default_deadline: Option<Duration>,
 }
 
 /// A cloneable control handle: request shutdown / read stats from
@@ -106,11 +146,35 @@ impl Server {
         ensure!(!pool.is_empty(), "serve needs at least one --model artifact");
         ensure!(cfg.queue_depth >= 1, "queue depth must be positive");
         ensure!(cfg.max_active >= 1, "max active jobs must be positive");
+        ensure!(cfg.read_timeout_ms >= 1, "read timeout must be positive");
+        ensure!(cfg.write_timeout_ms >= 1, "write timeout must be positive");
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("bind {}", cfg.addr))?;
         listener.set_nonblocking(true).context("set_nonblocking")?;
         let queue = Arc::new(JobQueue::new(cfg.queue_depth));
         let cache = Arc::new(Mutex::new(PredictionCache::new(cfg.cache_entries)));
+        if let Some(path) = cfg.cache_journal.as_deref().filter(|_| cfg.cache_entries > 0) {
+            // Persistence is best-effort: an unreadable journal logs
+            // and degrades to a memory-only cache; it never stops the
+            // daemon from binding.
+            match CacheJournal::open(path) {
+                Ok((journal, rec)) => {
+                    if rec.truncated_bytes > 0 {
+                        eprintln!(
+                            "serve: cache journal {path:?}: truncated {} torn tail byte(s)",
+                            rec.truncated_bytes
+                        );
+                    }
+                    let mut c = relock(&cache);
+                    let n = c.warm_load(rec.entries);
+                    c.attach_journal(journal);
+                    eprintln!("serve: cache journal {path:?}: recovered {n} chunk entries");
+                }
+                Err(e) => eprintln!(
+                    "serve: cache journal {path:?} unavailable, persistence disabled: {e:#}"
+                ),
+            }
+        }
         let counters = Arc::new(ServeCounters::default());
         let lane_cfg = LaneConfig {
             max_active: cfg.max_active,
@@ -125,7 +189,7 @@ impl Server {
             let cache = cache.clone();
             let counters = counters.clone();
             lanes.push(std::thread::spawn(move || {
-                run_lane(art, queue, cache, counters, lane_cfg)
+                lane_supervisor(art, queue, cache, counters, lane_cfg)
             }));
         }
         let shared = Arc::new(Shared {
@@ -134,7 +198,12 @@ impl Server {
             cache,
             counters,
             shutdown: AtomicBool::new(false),
+            started: AtomicBool::new(false),
             max_insts: cfg.max_insts,
+            read_timeout: Duration::from_millis(cfg.read_timeout_ms),
+            write_timeout: Duration::from_millis(cfg.write_timeout_ms),
+            default_deadline: (cfg.default_deadline_ms > 0)
+                .then(|| Duration::from_millis(cfg.default_deadline_ms)),
         });
         Ok(Server { listener, shared, lanes })
     }
@@ -153,6 +222,7 @@ impl Server {
     /// counter snapshot after the drain.
     pub fn run(self) -> Result<StatsSnapshot> {
         let Server { listener, shared, lanes } = self;
+        shared.started.store(true, Ordering::SeqCst);
         let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
         let mut draining = false;
         loop {
@@ -204,16 +274,22 @@ impl Server {
             match lane.join() {
                 Ok(Ok(())) => {}
                 Ok(Err(e)) => eprintln!("serve: lane exited with error: {e:#}"),
-                Err(_) => eprintln!("serve: lane panicked"),
+                Err(_) => eprintln!("serve: lane supervisor panicked"),
             }
         }
         for conn in conns {
             let _ = conn.join();
         }
+        // Make the cache journal durable before reporting the drain
+        // complete (appends are unbuffered writes; this is the fsync).
+        if let Err(e) = relock(&shared.cache).sync_journal() {
+            eprintln!("serve: cache journal fsync failed: {e:#}");
+        }
         let stats = shared.counters.snapshot(&shared.queue, &shared.cache);
         eprintln!(
             "serve: drained — {} jobs done, {} rejected; {} batches at {:.1}% occupancy; \
-             cache {} hits / {} misses / {} evictions ({} resident)",
+             cache {} hits / {} misses / {} evictions ({} resident, {} recovered); \
+             {} lane restart(s)",
             stats.jobs_done,
             stats.jobs_rejected,
             stats.batches,
@@ -222,9 +298,91 @@ impl Server {
             stats.cache_misses,
             stats.cache_evictions,
             stats.cache_entries,
+            stats.cache_recovered,
+            stats.lane_restarts,
         );
         Ok(stats)
     }
+}
+
+/// Keep one artifact's lane alive until the queue drains: run it under
+/// `catch_unwind`, and on a lane-fatal error **or panic** answer the
+/// artifact's queued jobs with a retryable `lane_failed` through an
+/// exponential backoff, then respawn the lane. In-flight jobs of a
+/// *panicked* lane are answered by their completion senders dropping
+/// (the HTTP layer maps that to a retryable 503); a lane that failed
+/// cleanly already answered them itself.
+fn lane_supervisor(
+    art: PooledArtifact,
+    queue: Arc<JobQueue>,
+    cache: Arc<Mutex<PredictionCache>>,
+    counters: Arc<ServeCounters>,
+    cfg: LaneConfig,
+) -> Result<()> {
+    let mut failures = 0u32;
+    loop {
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            run_lane(art.clone(), queue.clone(), cache.clone(), counters.clone(), cfg)
+        }));
+        let err = match run {
+            // Clean exit: the queue closed and drained.
+            Ok(Ok(())) => return Ok(()),
+            Ok(Err(e)) => format!("{e:#}"),
+            Err(p) => format!("lane panicked: {}", panic_message(p.as_ref())),
+        };
+        failures += 1;
+        counters.lane_restarts.fetch_add(1, Ordering::Relaxed);
+        counters.lanes_down.fetch_add(1, Ordering::Relaxed);
+        let backoff = Duration::from_millis((50u64 << failures.min(5)).min(2_000));
+        eprintln!(
+            "serve: lane {:?} down ({err}); respawn in {}ms (restart #{failures})",
+            art.name,
+            backoff.as_millis()
+        );
+        // Answer this artifact's queued jobs retryably while backing
+        // off — a waiting connection must never hang on a down lane.
+        let until = Instant::now() + backoff;
+        loop {
+            let now = Instant::now();
+            if now >= until {
+                break;
+            }
+            match queue.pop_for(&art.name, until - now) {
+                Some(qj) => {
+                    let se = ServeError::new(
+                        ErrorCode::LaneFailed,
+                        format!("lane {:?} restarting: {err}", art.name),
+                    );
+                    let _ = qj.done.send(Err(se));
+                    counters.jobs_done.fetch_add(1, Ordering::Relaxed);
+                }
+                None if queue.is_drained() => break,
+                None => {}
+            }
+        }
+        counters.lanes_down.fetch_sub(1, Ordering::Relaxed);
+        if queue.is_drained() {
+            anyhow::bail!("lane {:?} failed during drain: {err}", art.name);
+        }
+    }
+}
+
+/// `/healthz` readiness: `starting` until the accept loop runs (503),
+/// `draining` once shutdown began (503 — stop sending work here),
+/// `degraded` while any lane sits in respawn backoff (200 — still
+/// serving, other lanes unaffected), else `serving` (200).
+fn health(shared: &Shared) -> (u16, String) {
+    let (status, state) =
+        if shared.shutdown.load(Ordering::SeqCst) || shared.queue.is_closed() {
+            (503, "draining")
+        } else if !shared.started.load(Ordering::SeqCst) {
+            (503, "starting")
+        } else if shared.counters.lanes_down.load(Ordering::Relaxed) > 0 {
+            (200, "degraded")
+        } else {
+            (200, "serving")
+        };
+    (status, format!("{{\"ok\":{},\"status\":\"{state}\"}}", status == 200))
 }
 
 fn handle_connection(stream: TcpStream, shared: &Shared) {
@@ -234,19 +392,32 @@ fn handle_connection(stream: TcpStream, shared: &Shared) {
 }
 
 fn serve_connection(stream: TcpStream, shared: &Shared) -> Result<()> {
-    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
-    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_read_timeout(Some(shared.read_timeout))?;
+    stream.set_write_timeout(Some(shared.write_timeout))?;
     let mut reader = BufReader::new(stream.try_clone().context("clone stream")?);
     let mut out = stream;
     let req = match read_request(&mut reader) {
         Ok(r) => r,
         Err(e) => {
-            let _ = write_response(&mut out, 400, &error_body(&format!("{e:#}"), false));
+            // 408 for a stalled client, 413 for limit abuse, 400 for
+            // garbage — all terminal, all answered promptly so the
+            // connection thread is reclaimed.
+            let status = read_error_status(&e);
+            let code = match status {
+                408 => ErrorCode::RequestTimeout,
+                413 => ErrorCode::TooLarge,
+                _ => ErrorCode::BadRequest,
+            };
+            let se = ServeError::new(code, format!("{e:#}"));
+            let _ = write_response(&mut out, status, &se.to_json());
             return Ok(());
         }
     };
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => write_response(&mut out, 200, "{\"ok\":true}"),
+        ("GET", "/healthz") => {
+            let (status, body) = health(shared);
+            write_response(&mut out, status, &body)
+        }
         ("GET", "/v1/stats") => {
             let stats = shared.counters.snapshot(&shared.queue, &shared.cache);
             write_response(&mut out, 200, &stats.to_json())
@@ -267,36 +438,56 @@ fn serve_connection(stream: TcpStream, shared: &Shared) -> Result<()> {
 }
 
 fn handle_simulate(out: &mut TcpStream, body: &str, shared: &Shared) -> Result<()> {
-    if shared.shutdown.load(Ordering::SeqCst) || shared.queue.is_closed() {
+    let reject = |out: &mut TcpStream, shared: &Shared, se: ServeError| {
         shared.counters.jobs_rejected.fetch_add(1, Ordering::Relaxed);
-        return write_response(out, 503, &error_body("draining", true));
+        write_response(out, se.code.http_status(), &se.to_json())
+    };
+    if shared.shutdown.load(Ordering::SeqCst) || shared.queue.is_closed() {
+        return reject(out, shared, ServeError::new(ErrorCode::Draining, "draining"));
     }
     let spec = match JobSpec::from_json(body) {
         Ok(s) => s,
-        Err(e) => return write_response(out, 400, &error_body(&format!("{e:#}"), false)),
+        Err(e) => {
+            let se = ServeError::new(ErrorCode::BadRequest, format!("{e:#}"));
+            return write_response(out, se.code.http_status(), &se.to_json());
+        }
     };
     if let Err(e) = validate_spec(&spec, &shared.pool, shared.max_insts) {
-        return write_response(out, 400, &error_body(&format!("{e:#}"), false));
+        let se = ServeError::new(ErrorCode::BadRequest, format!("{e:#}"));
+        return write_response(out, se.code.http_status(), &se.to_json());
     }
+    // Resolve the cancellation deadline at admission: the spec's own
+    // deadline_ms wins, else the server default (0 = none).
+    let admitted_at = std::time::Instant::now();
+    let deadline = spec
+        .deadline_ms
+        .map(Duration::from_millis)
+        .or(shared.default_deadline)
+        .map(|d| admitted_at + d);
     let (tx, rx) = std::sync::mpsc::channel();
-    let job = QueuedJob { spec, done: tx, admitted_at: std::time::Instant::now() };
+    let job = QueuedJob { spec, done: tx, admitted_at, deadline };
     match shared.queue.submit(job) {
         Ok(()) => {}
         Err((_, SubmitError::Full)) => {
-            shared.counters.jobs_rejected.fetch_add(1, Ordering::Relaxed);
-            return write_response(out, 429, &error_body("queue full", true));
+            return reject(out, shared, ServeError::new(ErrorCode::QueueFull, "queue full"));
         }
         Err((_, SubmitError::Closed)) => {
-            shared.counters.jobs_rejected.fetch_add(1, Ordering::Relaxed);
-            return write_response(out, 503, &error_body("draining", true));
+            return reject(out, shared, ServeError::new(ErrorCode::Draining, "draining"));
         }
     }
     shared.counters.jobs_submitted.fetch_add(1, Ordering::Relaxed);
     // Block until the lane answers. Lanes always answer — completion,
-    // job error, drain, or lane failure — so this cannot leak.
+    // typed job error, deadline, drain, or lane failure. The one other
+    // way out is the completion sender dropping because the lane
+    // thread panicked mid-job: a retryable lane restart, not a client
+    // error, and never a hang.
     match rx.recv() {
         Ok(Ok(outcome)) => write_response(out, 200, &outcome.to_json()),
-        Ok(Err(msg)) => write_response(out, 500, &error_body(&msg, false)),
-        Err(_) => write_response(out, 500, &error_body("job dropped", false)),
+        Ok(Err(se)) => write_response(out, se.code.http_status(), &se.to_json()),
+        Err(_) => {
+            let se =
+                ServeError::new(ErrorCode::LaneFailed, "job dropped during lane restart");
+            write_response(out, se.code.http_status(), &se.to_json())
+        }
     }
 }

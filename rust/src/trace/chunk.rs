@@ -26,8 +26,10 @@
 use super::columns::TraceColumns;
 use super::serialize::{read_func_fields, read_func_header};
 use super::source::RecordSource;
+use crate::util::fault::panic_message;
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{BufReader, Read};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 
@@ -368,7 +370,19 @@ impl ChunkPrefetcher {
                         Err(_) => return,
                     },
                 };
-                match source.next_chunk(&mut buf, max_rows) {
+                // A panicking source must not masquerade as clean
+                // end-of-stream — `next` below reads a bare producer
+                // disconnect as EOF — so the unwind is caught and
+                // delivered as the stream's error.
+                let pulled =
+                    catch_unwind(AssertUnwindSafe(|| source.next_chunk(&mut buf, max_rows)))
+                        .unwrap_or_else(|p| {
+                            Err(anyhow::anyhow!(
+                                "chunk source panicked: {}",
+                                panic_message(p.as_ref())
+                            ))
+                        });
+                match pulled {
                     // `next_chunk` cleared the buffer, so an empty buf
                     // is the in-band end-of-stream marker.
                     Ok(0) => {

@@ -1,0 +1,343 @@
+//! Deterministic fault injection for the serving + pipeline stack.
+//!
+//! A process-global registry of named failure probes. Production code
+//! asks [`should_fire`] at each injection point; when nothing is armed
+//! that is a single relaxed atomic load returning `false`, so probes
+//! can stay compiled into hot paths (see PERFORMANCE.md). Probes are
+//! armed from tests ([`arm`]/[`arm_nth`]), from the CLI
+//! (`tao serve --faults`), or from the `TAO_FAULTS` environment
+//! variable, and fire **deterministically**: rate-armed probes hash
+//! their per-probe check counter (no wall clock, no OS entropy), so a
+//! given arming spec fires on the same check ordinals every run.
+//!
+//! The module also hosts the two panic-tolerance helpers the stack
+//! shares: [`panic_message`] to render a `catch_unwind` payload, and
+//! [`relock`] to keep shared mutexes usable after a peer thread
+//! panicked while holding them (the guarded state is only ever read or
+//! replaced whole, never left mid-update, so recovering the guard is
+//! sound).
+
+use anyhow::{ensure, Context, Result};
+use std::any::Any;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+use crate::util::hash::{fnv1a64_u64, FNV_OFFSET};
+
+/// The failure modes the serving + pipeline stack can inject.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Probe {
+    /// A `ChunkSource::next_chunk` decode error inside a serving lane.
+    ChunkDecode = 0,
+    /// A panic inside the executor pipeline's step closure.
+    ExecPanic = 1,
+    /// An artifact/session load failure when a lane starts its executor.
+    ArtifactLoad = 2,
+    /// A bounded stall in the queue's consumer pop path.
+    QueueStall = 3,
+    /// A client that stalls mid-request (armed by `loadgen --chaos`).
+    SlowClient = 4,
+    /// A cache-journal append cut short mid-record (torn write).
+    CacheTornWrite = 5,
+}
+
+/// Every probe, for iteration (stats dumps, disarm sweeps).
+pub const PROBES: [Probe; 6] = [
+    Probe::ChunkDecode,
+    Probe::ExecPanic,
+    Probe::ArtifactLoad,
+    Probe::QueueStall,
+    Probe::SlowClient,
+    Probe::CacheTornWrite,
+];
+
+impl Probe {
+    /// The spec-string name (`TAO_FAULTS=chunk_decode=0.01,...`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Probe::ChunkDecode => "chunk_decode",
+            Probe::ExecPanic => "exec_panic",
+            Probe::ArtifactLoad => "artifact_load",
+            Probe::QueueStall => "queue_stall",
+            Probe::SlowClient => "slow_client",
+            Probe::CacheTornWrite => "cache_torn_write",
+        }
+    }
+
+    /// Inverse of [`Probe::name`].
+    pub fn from_name(name: &str) -> Option<Probe> {
+        PROBES.iter().copied().find(|p| p.name() == name)
+    }
+}
+
+/// Per-probe arming + accounting. `fire_at` is a one-shot check
+/// ordinal (0 = none pending) and takes precedence over `rate_ppm`.
+struct Slot {
+    rate_ppm: AtomicU32,
+    fire_at: AtomicU64,
+    checks: AtomicU64,
+    fires: AtomicU64,
+}
+
+#[allow(clippy::declare_interior_mutable_const)] // repeat-initializer only
+const SLOT_INIT: Slot = Slot {
+    rate_ppm: AtomicU32::new(0),
+    fire_at: AtomicU64::new(0),
+    checks: AtomicU64::new(0),
+    fires: AtomicU64::new(0),
+};
+
+/// Fast-path gate: `false` means no probe is armed anywhere and
+/// [`should_fire`] returns immediately.
+static ANY_ARMED: AtomicBool = AtomicBool::new(false);
+static SLOTS: [Slot; PROBES.len()] = [SLOT_INIT; PROBES.len()];
+
+/// Should this injection point fail now? ~Zero cost while nothing is
+/// armed: one relaxed atomic load.
+#[inline]
+pub fn should_fire(p: Probe) -> bool {
+    if !ANY_ARMED.load(Ordering::Relaxed) {
+        return false;
+    }
+    should_fire_armed(p)
+}
+
+#[cold]
+fn should_fire_armed(p: Probe) -> bool {
+    let slot = &SLOTS[p as usize];
+    let n = slot.checks.fetch_add(1, Ordering::Relaxed) + 1;
+    let at = slot.fire_at.load(Ordering::Relaxed);
+    if at != 0 {
+        // One-shot pending: fire on (or first past) the target check,
+        // exactly once, then self-disarm. Suppresses rate mode so
+        // `arm_nth` stays precise under concurrent rate arming.
+        if n >= at
+            && slot
+                .fire_at
+                .compare_exchange(at, 0, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+        {
+            slot.fires.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        return false;
+    }
+    let ppm = slot.rate_ppm.load(Ordering::Relaxed) as u64;
+    if ppm == 0 {
+        return false;
+    }
+    // Deterministic "coin flip": hash (probe, check ordinal). The same
+    // arming spec fires on the same ordinals in every run.
+    let h = fnv1a64_u64(n, fnv1a64_u64(p as u64 + 1, FNV_OFFSET));
+    if h % 1_000_000 < ppm {
+        slot.fires.fetch_add(1, Ordering::Relaxed);
+        return true;
+    }
+    false
+}
+
+/// Arm `p` to fire on a deterministic `rate_ppm`-per-million fraction
+/// of checks (0 disarms the rate).
+pub fn arm(p: Probe, rate_ppm: u32) {
+    SLOTS[p as usize].rate_ppm.store(rate_ppm.min(1_000_000), Ordering::Relaxed);
+    refresh_armed();
+}
+
+/// Arm `p` to fire exactly once, on the `nth` check from now (1 = the
+/// very next check).
+pub fn arm_nth(p: Probe, nth: u64) {
+    let slot = &SLOTS[p as usize];
+    let target = slot.checks.load(Ordering::Relaxed) + nth.max(1);
+    slot.fire_at.store(target, Ordering::Relaxed);
+    refresh_armed();
+}
+
+///// Arm probes from a spec string: comma-separated `name=probability`
+/// pairs with probabilities in `[0, 1]`, e.g.
+/// `chunk_decode=0.01,exec_panic=0.005`.
+pub fn arm_from_spec(spec: &str) -> Result<()> {
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, prob) = part
+            .split_once('=')
+            .with_context(|| format!("fault spec {part:?} is not name=probability"))?;
+        let probe = Probe::from_name(name.trim())
+            .with_context(|| format!("unknown fault probe {:?}", name.trim()))?;
+        let prob: f64 = prob
+            .trim()
+            .parse()
+            .with_context(|| format!("bad fault probability in {part:?}"))?;
+        ensure!(
+            (0.0..=1.0).contains(&prob),
+            "fault probability for {} must be in [0, 1], got {prob}",
+            probe.name()
+        );
+        arm(probe, (prob * 1_000_000.0).round() as u32);
+    }
+    Ok(())
+}
+
+/// Arm probes from the `TAO_FAULTS` environment variable, if set and
+/// non-empty. Returns whether anything was armed.
+pub fn arm_from_env() -> Result<bool> {
+    match std::env::var("TAO_FAULTS") {
+        Ok(spec) if !spec.trim().is_empty() => {
+            arm_from_spec(&spec).context("parsing TAO_FAULTS")?;
+            Ok(true)
+        }
+        _ => Ok(false),
+    }
+}
+
+/// Disarm every probe (check/fire counters keep counting up).
+pub fn disarm_all() {
+    for slot in &SLOTS {
+        slot.rate_ppm.store(0, Ordering::Relaxed);
+        slot.fire_at.store(0, Ordering::Relaxed);
+    }
+    ANY_ARMED.store(false, Ordering::Relaxed);
+}
+
+fn refresh_armed() {
+    let any = SLOTS.iter().any(|s| {
+        s.rate_ppm.load(Ordering::Relaxed) != 0 || s.fire_at.load(Ordering::Relaxed) != 0
+    });
+    ANY_ARMED.store(any, Ordering::Relaxed);
+}
+
+/// Lifetime check/fire counts for one probe.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ProbeStats {
+    /// Times [`should_fire`] reached this probe's slot while armed.
+    pub checks: u64,
+    /// Times it returned `true`.
+    pub fires: u64,
+}
+
+/// Lifetime stats for `p`.
+pub fn stats(p: Probe) -> ProbeStats {
+    let slot = &SLOTS[p as usize];
+    ProbeStats {
+        checks: slot.checks.load(Ordering::Relaxed),
+        fires: slot.fires.load(Ordering::Relaxed),
+    }
+}
+
+/// Render a `catch_unwind` payload as a message (panics carry `&str`
+/// or `String` in practice).
+pub fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Lock `m`, recovering the guard if a peer thread panicked while
+/// holding it. Use only where the guarded state is read or replaced
+/// whole (never observably mid-update), so poison carries no extra
+/// information — a panicked serving lane must not cascade-fail every
+/// other lane through a poisoned cache or queue mutex.
+pub fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+///// Process-global serialization gate for tests that arm probes: probe
+/// state is process-wide, so concurrently running tests must not arm
+/// over each other. Hold the guard for the whole armed window and
+/// [`disarm_all`] before dropping it.
+pub fn exclusive() -> MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // All tests arm only `SlowClient`: no library code path checks it
+    // (only `loadgen --chaos` does, in a separate process), so holding
+    // `exclusive()` keeps these tests from interfering with anything.
+
+    #[test]
+    fn disarmed_probe_never_fires() {
+        let _gate = exclusive();
+        disarm_all();
+        for _ in 0..1000 {
+            assert!(!should_fire(Probe::SlowClient));
+        }
+    }
+
+    #[test]
+    fn rate_armed_probe_fires_deterministically() {
+        let _gate = exclusive();
+        disarm_all();
+        arm(Probe::SlowClient, 1_000_000);
+        assert!(should_fire(Probe::SlowClient), "rate 1.0 must always fire");
+        let before = stats(Probe::SlowClient);
+        arm(Probe::SlowClient, 250_000);
+        let mut fired = 0;
+        for _ in 0..4000 {
+            if should_fire(Probe::SlowClient) {
+                fired += 1;
+            }
+        }
+        let after = stats(Probe::SlowClient);
+        assert_eq!(after.checks - before.checks, 4000);
+        assert_eq!(after.fires - before.fires, fired);
+        // Deterministic hash ≈ uniform: expect ~1000 of 4000 at 25%.
+        assert!((600..=1400).contains(&fired), "fired {fired} of 4000 at rate 0.25");
+        disarm_all();
+        assert!(!should_fire(Probe::SlowClient));
+    }
+
+    #[test]
+    fn one_shot_fires_exactly_once_at_nth_check() {
+        let _gate = exclusive();
+        disarm_all();
+        arm_nth(Probe::SlowClient, 3);
+        assert!(!should_fire(Probe::SlowClient));
+        assert!(!should_fire(Probe::SlowClient));
+        assert!(should_fire(Probe::SlowClient), "must fire on the 3rd check");
+        for _ in 0..100 {
+            assert!(!should_fire(Probe::SlowClient), "one-shot must self-disarm");
+        }
+        disarm_all();
+    }
+
+    #[test]
+    fn spec_parsing_arms_and_rejects() {
+        let _gate = exclusive();
+        disarm_all();
+        arm_from_spec("slow_client=1.0").unwrap();
+        assert!(should_fire(Probe::SlowClient));
+        arm_from_spec(" slow_client = 0 ").unwrap();
+        assert!(!should_fire(Probe::SlowClient));
+        assert!(arm_from_spec("bogus_probe=0.5").is_err());
+        assert!(arm_from_spec("slow_client=1.5").is_err());
+        assert!(arm_from_spec("slow_client").is_err());
+        assert!(arm_from_spec("slow_client=x").is_err());
+        disarm_all();
+    }
+
+    #[test]
+    fn probe_names_round_trip() {
+        for p in PROBES {
+            assert_eq!(Probe::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Probe::from_name("nope"), None);
+    }
+
+    #[test]
+    fn panic_messages_render() {
+        let p = std::panic::catch_unwind(|| panic!("boom {}", 7)).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "boom 7");
+        let p = std::panic::catch_unwind(|| panic!("static")).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "static");
+    }
+}

@@ -28,6 +28,22 @@ pub fn fnv1a64_u64(value: u64, state: u64) -> u64 {
     fnv1a64(&value.to_le_bytes(), state)
 }
 
+/// CRC-32 (IEEE 802.3: reflected, poly `0xEDB88320`, init + xor-out
+/// `0xFFFFFFFF`). Frames the serving cache-journal records so a torn
+/// tail from a crash is detected and truncated on recovery — unlike
+/// FNV this catches short/zero-filled suffixes reliably.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc: u32 = 0xffff_ffff;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xedb8_8320 & mask);
+        }
+    }
+    !crc
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -45,6 +61,14 @@ mod tests {
         let whole = fnv1a64(b"hello world", FNV_OFFSET);
         let chained = fnv1a64(b" world", fnv1a64(b"hello", FNV_OFFSET));
         assert_eq!(whole, chained);
+    }
+
+    #[test]
+    fn crc32_matches_reference_vectors() {
+        // The canonical IEEE 802.3 check value, plus edges.
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"\0"), crc32(b"\0\0"), "must detect appended zero bytes");
     }
 
     #[test]

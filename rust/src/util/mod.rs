@@ -1,8 +1,9 @@
 //! Small shared utilities: deterministic PRNG, timing helpers, bench
-//! harness + trajectory gate, content hashing.
+//! harness + trajectory gate, content hashing, fault injection.
 
 pub mod benchgate;
 pub mod benchkit;
+pub mod fault;
 pub mod hash;
 pub mod json;
 pub mod rng;

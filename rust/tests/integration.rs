@@ -583,6 +583,47 @@ fn pipelined_parallel_chunked_identical_to_serial_at_100k() {
     }
 }
 
+/// Robustness regression: a `TAOTFNC1` trace file truncated mid-stream
+/// must surface from the parallel chunked engine as a prompt *typed*
+/// error — dispatch thread, workers, and per-worker pipelines all
+/// unwinding cleanly — never a hang, a panic, or a partial result.
+#[test]
+fn parallel_chunked_propagates_mid_stream_truncation() {
+    use tao_sim::coordinator::engine::{self, ParallelOptions};
+    use tao_sim::trace::FileChunkSource;
+
+    let n: u64 = 40_000;
+    let dir = std::env::temp_dir().join(format!("tao-int-trunc-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let artifact = tao_sim::runtime::write_surrogate_artifact(&dir, "trunc", 64, 4).unwrap();
+    let program = workloads::by_name("mcf").unwrap().build(31);
+    let cols = FunctionalSim::new(&program).run(n).to_columns();
+    let path = dir.join("trunc.trace");
+    tao_sim::trace::write_functional_columns(&path, "trunc", &cols).unwrap();
+    // Cut the file at ~60%: the header still promises `n` records, so
+    // the parallel grid spins up and the puller hits the cut only
+    // after several chunks are already in flight.
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() * 3 / 5]).unwrap();
+
+    for (workers, pipeline) in [(2usize, false), (2, true), (4, true)] {
+        let opts = ParallelOptions { chunk: 2_048, warmup: 256, pipeline };
+        let mut src = FileChunkSource::open(&path).unwrap();
+        let t0 = std::time::Instant::now();
+        let err = engine::simulate_parallel_chunked(&artifact, &mut src, workers, opts)
+            .expect_err("truncated stream must fail");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("truncated") || msg.contains("corrupt"),
+            "untyped error (workers={workers}, pipeline={pipeline}): {msg}"
+        );
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(60),
+            "error path stalled (workers={workers}, pipeline={pipeline})"
+        );
+    }
+}
+
 /// Bounded-memory acceptance gate at the paper's "millions of
 /// instructions" scale. `#[ignore]`d in the default (debug) test run;
 /// CI's bounded-memory job runs it in release under a peak-RSS budget

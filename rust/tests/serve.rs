@@ -3,23 +3,50 @@
 //! preset and Table-3 context designs), and the correctness contract —
 //! served per-job `Metrics` *identical* to the offline
 //! `simulate_chunked` engine, cold cache and warm cache alike — plus
-//! admission backpressure and graceful drain.
+//! admission backpressure, graceful drain, and the failure contract:
+//! slow/oversized clients get typed timeouts, an executor panic
+//! respawns the lane without losing accepted work, and the prediction
+//! cache survives a restart through its journal.
+//!
+//! Fault probes are process-global, so every test here holds
+//! `fault::exclusive()` — the loopback daemons traverse probe check
+//! sites and a concurrently armed probe would cross-fire.
 
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use tao_sim::runtime::ArtifactPool;
 use tao_sim::serve::cli::write_surrogate_set;
-use tao_sim::serve::http::{http_get, http_post};
+use tao_sim::serve::http::{http_get, http_post, http_post_stalled};
 use tao_sim::serve::loadgen::{assert_identical, offline_reference};
-use tao_sim::serve::protocol::{JobOutcome, JobSpec, StatsSnapshot};
+use tao_sim::serve::protocol::{ErrorCode, JobOutcome, JobSpec, ServeError, StatsSnapshot};
 use tao_sim::serve::{ServeConfig, Server};
+use tao_sim::util::fault::{self, Probe};
 use tao_sim::workloads::{mixed_scenarios, ScenarioArtifact};
 
 fn temp_dir(tag: &str) -> PathBuf {
     let d = std::env::temp_dir().join(format!("tao-serve-test-{}-{tag}", std::process::id()));
     std::fs::create_dir_all(&d).unwrap();
     d
+}
+
+/// Baseline daemon config for these tests; individual tests override
+/// the knobs they exercise.
+fn test_config() -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        queue_depth: 32,
+        max_active: 16,
+        cache_entries: 512,
+        max_insts: 1_000_000,
+        pipeline: true,
+        admission_wait_ms: 100,
+        prep_depth: 2,
+        read_timeout_ms: 10_000,
+        write_timeout_ms: 30_000,
+        default_deadline_ms: 300_000,
+        cache_journal: None,
+    }
 }
 
 fn get_stats(addr: &str) -> StatsSnapshot {
@@ -41,23 +68,16 @@ fn post_job(addr: &str, spec: &JobSpec) -> JobOutcome {
 /// than per-request execution would reach.
 #[test]
 fn loopback_concurrent_jobs_match_offline_cold_and_cached() {
+    let _gate = fault::exclusive();
+    fault::disarm_all();
     let dir = temp_dir("equality");
     let models = write_surrogate_set(&dir).unwrap();
     let pool = ArtifactPool::load(&models).unwrap();
     let batch = pool.get("serve_tao_a").unwrap().meta.batch as u64;
-    let cfg = ServeConfig {
-        addr: "127.0.0.1:0".into(),
-        queue_depth: 32,
-        max_active: 16,
-        cache_entries: 512,
-        max_insts: 1_000_000,
-        pipeline: true,
-        admission_wait_ms: 100,
-        // Jobs prepare off the lane thread: the loopback equality
-        // assertions below prove the shared ExecPipeline + prep stage
-        // leave served results bit-identical to the offline engine.
-        prep_depth: 2,
-    };
+    // Jobs prepare off the lane thread (prep_depth 2): the loopback
+    // equality assertions below prove the shared ExecPipeline + prep
+    // stage leave served results bit-identical to the offline engine.
+    let cfg = test_config();
     let server = Server::bind(pool, &cfg).unwrap();
     let addr = server.local_addr().unwrap().to_string();
     let srv = std::thread::spawn(move || server.run());
@@ -76,6 +96,7 @@ fn loopback_concurrent_jobs_match_offline_cold_and_cached() {
             artifact: j.artifact.clone(),
             chunk: 48,
             ctx_uarch: j.ctx_uarch.clone(),
+            deadline_ms: None,
         })
         .collect();
 
@@ -155,22 +176,21 @@ fn loopback_concurrent_jobs_match_offline_cold_and_cached() {
 /// accepted jobs.
 #[test]
 fn backpressure_rejects_and_drain_finishes_in_flight_jobs() {
+    let _gate = fault::exclusive();
+    fault::disarm_all();
     let dir = temp_dir("backpressure");
     // T = 1 keeps per-window surrogate hashing cheap while the jobs
     // are long enough to stay in flight during the assertions.
     let hlo = tao_sim::runtime::write_surrogate_artifact(&dir, "bp", 8, 1).unwrap();
     let pool = ArtifactPool::load(&[hlo]).unwrap();
     let cfg = ServeConfig {
-        addr: "127.0.0.1:0".into(),
         queue_depth: 1,
         max_active: 1,
         cache_entries: 0,
-        max_insts: 1_000_000,
-        pipeline: true,
         admission_wait_ms: 0,
         // max_active bounds (active + in-prep), so job 2 stays in the
         // queue and the single-slot backpressure stays deterministic.
-        prep_depth: 2,
+        ..test_config()
     };
     let server = Server::bind(pool, &cfg).unwrap();
     let addr = server.local_addr().unwrap().to_string();
@@ -183,6 +203,7 @@ fn backpressure_rejects_and_drain_finishes_in_flight_jobs() {
         artifact: "bp".into(),
         chunk: 4_096,
         ctx_uarch: None,
+        deadline_ms: None,
     };
     let wait_until = |pred: &dyn Fn(&StatsSnapshot) -> bool, what: &str| {
         let deadline = Instant::now() + Duration::from_secs(30);
@@ -227,4 +248,281 @@ fn backpressure_rejects_and_drain_finishes_in_flight_jobs() {
     let final_stats = srv.join().unwrap().unwrap();
     assert_eq!(final_stats.jobs_done, 2);
     assert_eq!(final_stats.jobs_rejected, 1);
+}
+
+/// Slow-client and oversized-request hardening: a client that stalls
+/// mid-body past the read timeout gets a typed terminal 408 (not a
+/// held connection), a request declaring a body over the 1 MiB cap
+/// gets 413 at the header stage, and the daemon keeps serving real
+/// traffic afterwards.
+#[test]
+fn stalled_reads_get_408_and_oversized_requests_get_413() {
+    use std::io::{Read, Write};
+
+    let _gate = fault::exclusive();
+    fault::disarm_all();
+    let dir = temp_dir("http-limits");
+    let hlo = tao_sim::runtime::write_surrogate_artifact(&dir, "lim", 8, 1).unwrap();
+    let pool = ArtifactPool::load(&[hlo]).unwrap();
+    let cfg = ServeConfig { read_timeout_ms: 200, ..test_config() };
+    let server = Server::bind(pool, &cfg).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let srv = std::thread::spawn(move || server.run());
+
+    let spec = JobSpec {
+        bench: "mcf".into(),
+        insts: 2_000,
+        seed: 9,
+        artifact: "lim".into(),
+        chunk: 512,
+        ctx_uarch: None,
+        deadline_ms: None,
+    };
+
+    // Stall mid-body for 5x the read timeout: the server must answer
+    // a typed terminal 408 rather than hold the connection open.
+    let resp =
+        http_post_stalled(&addr, "/v1/simulate", &spec.to_json(), Duration::from_millis(1_000))
+            .unwrap();
+    assert_eq!(resp.status, 408, "stalled post got: {}", resp.body);
+    let err = ServeError::from_body(resp.status, &resp.body);
+    assert_eq!(err.code, ErrorCode::RequestTimeout);
+    assert!(!err.code.retryable(), "client-pacing faults must not invite retries");
+
+    // A declared body over MAX_BODY_BYTES is refused at the header
+    // stage — before any body bytes are read — so send headers only.
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    let req = format!(
+        "POST /v1/simulate HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\r\n",
+        2 << 20
+    );
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 413"), "oversized post got: {raw}");
+    assert!(raw.contains("too_large"), "413 body must carry the typed code: {raw}");
+    drop(stream);
+
+    // Abusive clients must not wedge the daemon for everyone else.
+    let out = post_job(&addr, &spec);
+    assert_eq!(out.metrics.instructions, spec.insts);
+
+    let resp = http_post(&addr, "/v1/shutdown", "").unwrap();
+    assert_eq!(resp.status, 200);
+    let final_stats = srv.join().unwrap().unwrap();
+    assert_eq!(final_stats.jobs_done, 1);
+}
+
+/// Panic isolation: an injected executor panic kills the lane thread
+/// mid-traffic; the supervisor must respawn it, in-flight jobs must
+/// fail *retryably* (never hang, never exit the process), retries must
+/// succeed with results still bit-identical to the offline engine, and
+/// the drain must complete cleanly.
+#[test]
+fn executor_panic_respawns_lane_and_retried_jobs_match_offline() {
+    let _gate = fault::exclusive();
+    fault::disarm_all();
+    let dir = temp_dir("panic");
+    let hlo = tao_sim::runtime::write_surrogate_artifact(&dir, "pn", 8, 1).unwrap();
+    let pool = ArtifactPool::load(&[hlo]).unwrap();
+    let cfg = ServeConfig { cache_entries: 0, ..test_config() };
+    let server = Server::bind(pool, &cfg).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let srv = std::thread::spawn(move || server.run());
+
+    let spec = |seed: u64| JobSpec {
+        bench: "mcf".into(),
+        insts: 20_000,
+        seed,
+        artifact: "pn".into(),
+        chunk: 1_024,
+        ctx_uarch: None,
+        deadline_ms: None,
+    };
+    // One-shot: the second executor dispatch panics the lane thread
+    // while several jobs are streaming through it.
+    fault::arm_nth(Probe::ExecPanic, 2);
+
+    let submit_retry = |seed: u64| -> JobOutcome {
+        let body = spec(seed).to_json();
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            let resp = http_post(&addr, "/v1/simulate", &body).unwrap();
+            if resp.status == 200 {
+                return JobOutcome::from_json(&resp.body).unwrap();
+            }
+            let err = ServeError::from_body(resp.status, &resp.body);
+            assert!(err.code.retryable(), "terminal failure under panic fault: {err}");
+            assert!(Instant::now() < deadline, "retries exhausted: {err}");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    };
+    let outs: Vec<JobOutcome> = std::thread::scope(|scope| {
+        let sr = &submit_retry;
+        let handles: Vec<_> = (0..4).map(|i| scope.spawn(move || sr(i))).collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    fault::disarm_all();
+
+    for (i, out) in outs.iter().enumerate() {
+        let offline = offline_reference(&spec(i as u64), &dir).unwrap();
+        assert_identical(&out.metrics, &offline, &format!("post-panic job {i}")).unwrap();
+    }
+    let stats = get_stats(&addr);
+    assert!(stats.lane_restarts >= 1, "lane never restarted: {stats:?}");
+
+    let resp = http_post(&addr, "/v1/shutdown", "").unwrap();
+    assert_eq!(resp.status, 200);
+    let final_stats = srv.join().unwrap().unwrap();
+    assert_eq!(final_stats.active_jobs, 0);
+    assert_eq!(final_stats.queue_depth, 0);
+}
+
+/// Drain under fault: an executor panic lands while the daemon is
+/// draining with jobs still in flight. Every job must end typed —
+/// completed or failed *retryably* — the drain must still exit
+/// cleanly, and the cache journal must remain reloadable.
+#[test]
+fn drain_under_executor_panic_exits_clean_with_reloadable_journal() {
+    let _gate = fault::exclusive();
+    fault::disarm_all();
+    let dir = temp_dir("drain-fault");
+    let hlo = tao_sim::runtime::write_surrogate_artifact(&dir, "df", 8, 1).unwrap();
+    let pool = ArtifactPool::load(&[hlo]).unwrap();
+    let journal = dir.join("drain.tjr");
+    let _ = std::fs::remove_file(&journal);
+    let cfg = ServeConfig { cache_journal: Some(journal.clone()), ..test_config() };
+    let server = Server::bind(pool, &cfg).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let srv = std::thread::spawn(move || server.run());
+
+    let spec = |seed: u64| JobSpec {
+        bench: "mcf".into(),
+        insts: 120_000,
+        seed,
+        artifact: "df".into(),
+        chunk: 4_096,
+        ctx_uarch: None,
+        deadline_ms: None,
+    };
+    // One job to completion before the fault: its chunks are cached
+    // and journaled, so the journal has content whatever happens to
+    // the drain cohort below.
+    let warm = post_job(&addr, &spec(100));
+    assert_eq!(warm.metrics.instructions, 120_000);
+
+    let results: Vec<Result<JobOutcome, ServeError>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let (addr, s) = (addr.clone(), spec(i));
+                scope.spawn(move || {
+                    let resp = http_post(&addr, "/v1/simulate", &s.to_json()).unwrap();
+                    if resp.status == 200 {
+                        Ok(JobOutcome::from_json(&resp.body).unwrap())
+                    } else {
+                        Err(ServeError::from_body(resp.status, &resp.body))
+                    }
+                })
+            })
+            .collect();
+        // Wait for traffic to be in flight, begin the drain, THEN arm
+        // the panic so it fires on a dispatch during the drain (the
+        // jobs above have thousands of batches left at this point).
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let s = get_stats(&addr);
+            if s.active_jobs >= 1 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "jobs never went active: {s:?}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let resp = http_post(&addr, "/v1/shutdown", "").unwrap();
+        assert_eq!(resp.status, 200);
+        fault::arm_nth(Probe::ExecPanic, 1);
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    fault::disarm_all();
+
+    // The drain-under-fault contract: every job ends *typed* — a 200
+    // with full metrics or a retryable error — never a hang.
+    for (i, r) in results.iter().enumerate() {
+        match r {
+            Ok(out) => assert_eq!(out.metrics.instructions, 120_000, "job {i}"),
+            Err(se) => assert!(se.code.retryable(), "job {i} failed terminally: {se}"),
+        }
+    }
+    // Clean exit ("process exits 0") even though a lane died mid-drain.
+    let final_stats = srv.join().unwrap().unwrap();
+    assert_eq!(final_stats.active_jobs, 0);
+    assert_eq!(final_stats.queue_depth, 0);
+    assert!(final_stats.lane_restarts >= 1, "panic never fired: {final_stats:?}");
+
+    // The journal survived the faulted drain and is reloadable.
+    let (_journal, recovered) = tao_sim::serve::CacheJournal::open(&journal).unwrap();
+    assert!(!recovered.entries.is_empty(), "journal reloaded empty");
+}
+
+/// Crash-safe cache persistence: run jobs against a journaled daemon,
+/// drain, then boot a *fresh* daemon on the same journal — the warm
+/// pass must hit every chunk without executing a single model batch,
+/// with metrics bit-identical to the first run.
+#[test]
+fn cache_journal_survives_daemon_restart() {
+    let _gate = fault::exclusive();
+    fault::disarm_all();
+    let dir = temp_dir("journal");
+    let hlo = tao_sim::runtime::write_surrogate_artifact(&dir, "jr", 8, 1).unwrap();
+    let pool = ArtifactPool::load(std::slice::from_ref(&hlo)).unwrap();
+    let journal = dir.join("cache.tjr");
+    let cfg = ServeConfig { cache_journal: Some(journal.clone()), ..test_config() };
+
+    let specs: Vec<JobSpec> = (0..3)
+        .map(|seed| JobSpec {
+            bench: "mcf".into(),
+            insts: 10_000,
+            seed,
+            artifact: "jr".into(),
+            chunk: 512,
+            ctx_uarch: None,
+            deadline_ms: None,
+        })
+        .collect();
+
+    // Run 1: journaled daemon, cold cache — every chunk executes and
+    // is journaled as it is cached.
+    let server = Server::bind(pool, &cfg).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let srv = std::thread::spawn(move || server.run());
+    let first: Vec<JobOutcome> = specs.iter().map(|s| post_job(&addr, s)).collect();
+    for out in &first {
+        assert!(out.windows > 0, "cold run must execute");
+    }
+    let resp = http_post(&addr, "/v1/shutdown", "").unwrap();
+    assert_eq!(resp.status, 200);
+    let stats1 = srv.join().unwrap().unwrap();
+    assert_eq!(stats1.cache_recovered, 0);
+    assert!(stats1.cache_entries > 0);
+    assert!(journal.exists(), "journal file was never written");
+
+    // Run 2: a fresh process-equivalent — new Server, same journal.
+    let pool = ArtifactPool::load(&[hlo]).unwrap();
+    let server = Server::bind(pool, &cfg).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let srv = std::thread::spawn(move || server.run());
+    for (spec, cold) in specs.iter().zip(&first) {
+        let warm = post_job(&addr, spec);
+        assert_eq!(
+            warm.cache_hits,
+            spec.insts.div_ceil(spec.chunk as u64),
+            "recovered cache must hit every chunk of {spec:?}"
+        );
+        assert_eq!(warm.windows, 0, "recovered cache must skip execution");
+        assert_identical(&warm.metrics, &cold.metrics, &format!("journal {spec:?}")).unwrap();
+    }
+    let resp = http_post(&addr, "/v1/shutdown", "").unwrap();
+    assert_eq!(resp.status, 200);
+    let stats2 = srv.join().unwrap().unwrap();
+    assert_eq!(stats2.cache_recovered, stats1.cache_entries);
+    assert_eq!(stats2.batches, 0, "warm daemon must not execute batches");
 }
