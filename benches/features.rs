@@ -14,7 +14,9 @@ use tao_sim::datagen::{self, StreamOptions};
 use tao_sim::dataset::{AdjustedTrace, Labels, Sample};
 use tao_sim::features::{FeatureConfig, FeatureExtractor};
 use tao_sim::functional::FunctionalSim;
-use tao_sim::trace::AccessLevel;
+use tao_sim::trace::{
+    open_trace_source, AccessLevel, ChunkBuf, ChunkSource, TraceFormat, TraceWriteOptions,
+};
 use tao_sim::util::benchkit::{Bench, BenchOpts, BenchReport};
 use tao_sim::workloads;
 
@@ -161,6 +163,39 @@ fn main() {
     });
     report.metric("datagen_stream_src_e2e_ips", m.items_per_sec());
     report.push(m);
+
+    // --- trace I/O: the two on-disk formats (flat v1 vs compressed v2)
+    // Decode throughput is the supply ceiling of the chunk-prefetch
+    // stage feeding the pipelined engine; bytes-per-instruction tracks
+    // the compression ratio itself (v1 is fixed at 27 B + header).
+    let tr_insts: u64 = if opts.smoke { 50_000 } else { 200_000 };
+    let tr_program = workloads::by_name("mcf").unwrap().build(42);
+    let tr_trace = FunctionalSim::new(&tr_program).run(tr_insts);
+    let tr_cols = tr_trace.to_columns();
+    let tio = Bench::new("trace-io").iters(iters);
+    for (tag, format) in [("v1", TraceFormat::V1), ("v2", TraceFormat::V2)] {
+        let path = dir.join(format!("mcf.{tag}.trace"));
+        TraceWriteOptions::new(format)
+            .write(&path, &tr_trace.name, &tr_cols)
+            .expect("write trace");
+        let bytes = std::fs::metadata(&path).expect("stat trace").len();
+        report.metric(&format!("trace_bytes_per_inst_{tag}"), bytes as f64 / tr_insts as f64);
+        let m = tio.run(&format!("decode-{}k/{tag}", tr_insts / 1000), tr_insts, || {
+            let mut src = open_trace_source(&path).expect("open trace");
+            let mut buf = ChunkBuf::new();
+            let mut rows = 0usize;
+            loop {
+                let n = src.next_chunk(&mut buf, 8_192).expect("decode chunk");
+                if n == 0 {
+                    break;
+                }
+                rows += n;
+            }
+            rows
+        });
+        report.metric(&format!("trace_decode_{tag}_ips"), m.items_per_sec());
+        report.push(m);
+    }
 
     // The kept shard files are ~100 MB per run; don't let them pile up
     // in the temp dir across invocations.

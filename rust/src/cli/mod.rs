@@ -8,9 +8,11 @@
 //! * `tao serve`     — the concurrent simulation service daemon;
 //! * `tao loadgen`   — replay mixed scenarios against a daemon;
 //! * `tao report`    — regenerate a paper table/figure (see DESIGN.md §3);
-//! * `tao dse`       — sample + characterize designs, select train pair.
+//! * `tao dse`       — sample + characterize designs, select train pair;
+//! * `tao trace`     — inspect/convert/generate on-disk functional traces.
 
 pub mod args;
+pub mod trace_cmd;
 
 use crate::datagen::{self, DatagenOptions, StreamOptions};
 use crate::features::FeatureConfig;
@@ -28,9 +30,11 @@ USAGE:
   tao datagen  [--out DIR] [--insts N] [--uarchs a,b,c] [--split train|test|all]
                [--seed S] [--nb N] [--nq N] [--nm N]
                [--chunk-size N] [--shards K] [--keep-shards] [--stream]
+               [--from-trace PATH]   (replay a recorded trace, either format)
   tao simulate --model artifacts/tao_uarch_a.hlo.txt --bench mcf
                [--insts N] [--workers W] [--seed S] [--truth a|b|c]
                [--chunk N] [--warmup N] [--stream] [--max-resident N]
+               [--trace PATH]   (replay a recorded trace, either format)
   tao serve    --model A.hlo.txt [--model B.hlo.txt ...] | --surrogate-dir DIR
                [--addr H:P | --port P] [--port-file F] [--queue-depth N]
                [--max-active N] [--cache-entries N] [--max-insts N]
@@ -45,6 +49,10 @@ USAGE:
   tao report   <table1|figure2|figure9|figure10a|figure10b|figure11|figure12a|
                 figure12b|figure14|table4|table6|figure15> [opts]
   tao dse      [--designs N] [--insts N] [--seed S]
+  tao trace    inspect PATH
+               | convert IN OUT [--format v1|v2] [--chunk-rows N] [--level 0|1|2]
+               | write OUT --bench B [--insts N] [--seed S]
+                 [--format v1|v2] [--chunk-rows N] [--level 0|1|2]
   tao help
 ";
 
@@ -62,6 +70,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "loadgen" => crate::serve::cli::cmd_loadgen(args),
         "report" => crate::reports::cmd_report(args),
         "dse" => crate::reports::cmd_dse(args),
+        "trace" => trace_cmd::cmd_trace(args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -106,12 +115,24 @@ fn cmd_datagen(mut args: Args) -> Result<()> {
     let shards: usize = args.opt_parse("--shards")?.unwrap_or(default_stream.shards);
     let keep_shards = args.opt_flag("--keep-shards");
     let from_generator = args.opt_flag("--stream");
+    let from_trace: Option<PathBuf> = args.opt_value("--from-trace")?.map(Into::into);
     args.finish()?;
     anyhow::ensure!(chunk_size >= 1, "--chunk-size must be at least 1");
     anyhow::ensure!(shards >= 1, "--shards must be at least 1");
 
     let uarchs = parse_uarchs(&uarch_spec)?;
     let wls = parse_split(&split)?;
+    if from_trace.is_some() {
+        anyhow::ensure!(
+            wls.len() == 1,
+            "--from-trace replays one recorded benchmark; pass --split <bench> \
+             (a single workload), not a suite"
+        );
+        anyhow::ensure!(
+            !from_generator,
+            "--from-trace and --stream are exclusive (the trace replaces the generator)"
+        );
+    }
     let opts = DatagenOptions {
         instructions: insts,
         features: FeatureConfig { nb, nq, nm },
@@ -122,6 +143,7 @@ fn cmd_datagen(mut args: Args) -> Result<()> {
             keep_shards,
         },
         from_generator,
+        from_trace,
     };
     datagen::run(&out, &wls, &uarchs, &opts)
 }

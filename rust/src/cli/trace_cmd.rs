@@ -1,0 +1,230 @@
+//! `tao trace` — inspect, convert, and generate on-disk functional traces.
+//!
+//! Thin CLI over [`crate::trace::format`]: `inspect` runs the full
+//! validating walk and prints header/chunk/size statistics, `convert`
+//! transcodes v1 <-> v2 with bounded memory (one pull chunk resident),
+//! and `write` streams a freshly generated functional trace straight to
+//! disk in either format — the producer CI uses to stage large v2
+//! traces without materializing them.
+
+use crate::cli::args::Args;
+use crate::functional::FunctionalSim;
+use crate::trace::{
+    convert_trace, inspect_trace, open_trace_source, section_names, ChunkBuf, ChunkSource,
+    TraceFormat, TraceWriteOptions,
+};
+use crate::workloads;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+/// Usage string for the `trace` subcommand family.
+pub const TRACE_USAGE: &str = "\
+USAGE:
+  tao trace inspect PATH
+  tao trace convert IN OUT [--format v1|v2] [--chunk-rows N] [--level 0|1|2]
+  tao trace write   OUT --bench B [--insts N] [--seed S]
+                    [--format v1|v2] [--chunk-rows N] [--level 0|1|2]
+";
+
+/// Dispatch `tao trace <action>`.
+pub fn cmd_trace(mut args: Args) -> Result<()> {
+    let Some(action) = args.next_positional() else {
+        println!("{TRACE_USAGE}");
+        return Ok(());
+    };
+    match action.as_str() {
+        "inspect" => cmd_inspect(args),
+        "convert" => cmd_convert(args),
+        "write" => cmd_write(args),
+        "help" => {
+            println!("{TRACE_USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown trace action {other:?}\n{TRACE_USAGE}"),
+    }
+}
+
+/// Consume the shared `--format/--chunk-rows/--level` writer flags.
+fn parse_write_options(args: &mut Args, default_format: TraceFormat) -> Result<TraceWriteOptions> {
+    let mut opts = TraceWriteOptions::new(default_format);
+    if let Some(fmt) = args.opt_value("--format")? {
+        opts = opts.format(TraceFormat::parse(&fmt)?);
+    }
+    if let Some(rows) = args.opt_parse::<usize>("--chunk-rows")? {
+        opts = opts.chunk_rows(rows);
+    }
+    if let Some(level) = args.opt_parse::<u8>("--level")? {
+        opts = opts.level(level);
+    }
+    Ok(opts)
+}
+
+fn cmd_inspect(mut args: Args) -> Result<()> {
+    let path: PathBuf = args
+        .next_positional()
+        .context("trace inspect: PATH required")?
+        .into();
+    args.finish()?;
+    let info = inspect_trace(&path)?;
+    println!("file               : {}", path.display());
+    println!("format             : {}", info.format);
+    println!("name               : {}", info.name);
+    println!("records            : {}", info.records);
+    println!("file bytes         : {}", info.file_bytes);
+    println!("bytes/instruction  : {:.3}", info.bytes_per_inst());
+    if let (Some(chunk_rows), Some(chunks)) = (info.chunk_rows, info.chunks) {
+        println!("chunk rows         : {chunk_rows}");
+        println!("chunks             : {chunks}");
+    }
+    if let Some(section_bytes) = info.section_bytes {
+        for (name, bytes) in section_names().iter().zip(section_bytes.iter()) {
+            let per_inst = if info.records == 0 {
+                0.0
+            } else {
+                *bytes as f64 / info.records as f64
+            };
+            println!("section {name:<11}: {bytes} bytes ({per_inst:.3} B/inst)");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_convert(mut args: Args) -> Result<()> {
+    let input: PathBuf = args
+        .next_positional()
+        .context("trace convert: IN path required")?
+        .into();
+    let output: PathBuf = args
+        .next_positional()
+        .context("trace convert: OUT path required")?
+        .into();
+    let opts = parse_write_options(&mut args, TraceFormat::V2)?;
+    args.finish()?;
+    eprintln!(
+        "trace: converting {} -> {} ({})...",
+        input.display(),
+        output.display(),
+        opts.format
+    );
+    let records = convert_trace(&input, &output, &opts)?;
+    let info = inspect_trace(&output)?;
+    println!("records            : {records}");
+    println!("output bytes       : {}", info.file_bytes);
+    println!("bytes/instruction  : {:.3}", info.bytes_per_inst());
+    Ok(())
+}
+
+fn cmd_write(mut args: Args) -> Result<()> {
+    let bench_name = args
+        .opt_value("--bench")?
+        .context("trace write: --bench required")?;
+    let insts: u64 = args.opt_parse("--insts")?.unwrap_or(100_000);
+    let seed: u64 = args.opt_parse("--seed")?.unwrap_or(42);
+    let opts = parse_write_options(&mut args, TraceFormat::V2)?;
+    let out: PathBuf = args
+        .next_positional()
+        .context("trace write: OUT path required")?
+        .into();
+    args.finish()?;
+
+    let workload = workloads::by_name(&bench_name)
+        .with_context(|| format!("unknown benchmark {bench_name}"))?;
+    let program = workload.build(seed);
+    eprintln!(
+        "trace: writing {insts} insts of {bench_name} to {} ({})...",
+        out.display(),
+        opts.format
+    );
+    // Pull-based: the machine steps only as the writer drains chunks, so
+    // peak memory is one chunk of columns regardless of --insts.
+    let mut src = FunctionalSim::new(&program).into_chunks(insts);
+    let mut w = opts.writer(&out, src.name())?;
+    let mut buf = ChunkBuf::new();
+    loop {
+        let n = src.next_chunk(&mut buf, 1 << 16)?;
+        if n == 0 {
+            break;
+        }
+        w.append(&buf.cols)?;
+    }
+    let written = w.finish()?;
+    let info = inspect_trace(&out)?;
+    println!("records            : {written}");
+    println!("output bytes       : {}", info.file_bytes);
+    println!("bytes/instruction  : {:.3}", info.bytes_per_inst());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceColumns;
+    use std::path::Path;
+
+    fn args(s: &[&str]) -> Args {
+        Args::new(s.iter().map(|s| s.to_string()).collect())
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tao-cli-trace-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(format!("{tag}.trace"))
+    }
+
+    #[test]
+    fn write_inspect_convert_round_trip() {
+        let v2 = tmp("t_v2");
+        let v1 = tmp("t_v1");
+
+        cmd_trace(args(&[
+            "write",
+            "--bench",
+            "dee",
+            "--insts",
+            "3000",
+            "--seed",
+            "7",
+            "--chunk-rows",
+            "512",
+            v2.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let info = inspect_trace(&v2).unwrap();
+        assert_eq!(info.format, TraceFormat::V2);
+        assert_eq!(info.records, 3000);
+
+        cmd_trace(args(&[
+            "convert",
+            v2.to_str().unwrap(),
+            v1.to_str().unwrap(),
+            "--format",
+            "v1",
+        ]))
+        .unwrap();
+        let info = inspect_trace(&v1).unwrap();
+        assert_eq!(info.format, TraceFormat::V1);
+        assert_eq!(info.records, 3000);
+
+        // The transcoded v1 decodes to the same columns as the v2 source.
+        let drain = |p: &Path| -> TraceColumns {
+            let mut src = open_trace_source(p).unwrap();
+            let mut buf = ChunkBuf::new();
+            let mut all = TraceColumns::default();
+            while src.next_chunk(&mut buf, 701).unwrap() > 0 {
+                all.extend_from(&buf.cols, 0, buf.cols.len());
+            }
+            all
+        };
+        assert_eq!(drain(&v2), drain(&v1));
+
+        cmd_trace(args(&["inspect", v2.to_str().unwrap()])).unwrap();
+    }
+
+    #[test]
+    fn bad_action_and_missing_args_fail() {
+        assert!(cmd_trace(args(&["frobnicate"])).is_err());
+        assert!(cmd_trace(args(&["inspect"])).is_err());
+        assert!(cmd_trace(args(&["convert", "only-one"])).is_err());
+        assert!(cmd_trace(args(&["write", "--bench", "dee"])).is_err());
+    }
+}

@@ -3,13 +3,16 @@
 //! Generates (or loads) a functional trace, streams it through the AOT
 //! model via the engine, and reports predicted CPI/MPKIs, throughput in
 //! MIPS, and — with `--truth` — the detailed-simulator ground truth and
-//! the paper's simulation-error percentages.
+//! the paper's simulation-error percentages. `--trace PATH` replays an
+//! on-disk trace of either format (`tao trace` writes them) instead of
+//! generating one.
 
 use super::engine::{self, ParallelOptions};
 use crate::cli::args::Args;
 use crate::detailed::DetailedSim;
 use crate::functional::FunctionalSim;
 use crate::stats::simulation_error_percent;
+use crate::trace::{open_trace_source, TraceSource};
 use crate::uarch::UarchConfig;
 use crate::workloads;
 use anyhow::{Context, Result};
@@ -21,8 +24,11 @@ pub fn cmd_simulate(mut args: Args) -> Result<()> {
         .opt_value("--model")?
         .context("--model artifacts/tao_<uarch>.hlo.txt required")?
         .into();
-    let bench_name = args.opt_value("--bench")?.unwrap_or_else(|| "mcf".into());
-    let insts: u64 = args.opt_parse("--insts")?.unwrap_or(100_000);
+    let trace_path: Option<PathBuf> = args.opt_value("--trace")?.map(Into::into);
+    let bench_flag = args.opt_value("--bench")?;
+    let insts_flag: Option<u64> = args.opt_parse("--insts")?;
+    let bench_name = bench_flag.clone().unwrap_or_else(|| "mcf".into());
+    let insts: u64 = insts_flag.unwrap_or(100_000);
     let workers: usize = args.opt_parse("--workers")?.unwrap_or(1);
     let seed: u64 = args.opt_parse("--seed")?.unwrap_or(42);
     let defaults = ParallelOptions::default();
@@ -38,6 +44,29 @@ pub fn cmd_simulate(mut args: Args) -> Result<()> {
     let max_resident: usize = args.opt_parse("--max-resident")?.unwrap_or(1 << 20);
     args.finish()?;
     anyhow::ensure!(max_resident >= 1, "--max-resident must be positive");
+
+    if let Some(trace) = trace_path {
+        // Replay a recorded trace: format negotiated by magic sniffing,
+        // decode riding the engine's prefetch/dispatch threads.
+        anyhow::ensure!(
+            !stream && bench_flag.is_none() && insts_flag.is_none() && truth_uarch.is_none(),
+            "--trace replays a recorded trace; it cannot be combined with \
+             --stream, --bench, --insts, or --truth (ground truth must \
+             re-execute the program, which a trace does not carry)"
+        );
+        let mut source = open_trace_source(&trace)?;
+        let bench = source.name().to_string();
+        eprintln!(
+            "simulate: replaying {trace:?} ({} trace of {bench}) with workers={workers}, \
+             chunk={}, warmup={}...",
+            source.format(),
+            opts.chunk,
+            opts.warmup
+        );
+        let result = engine::simulate_parallel_chunked(&model, &mut *source, workers, opts)?;
+        print_prediction(&bench, &result);
+        return Ok(());
+    }
 
     let workload =
         workloads::by_name(&bench_name).with_context(|| format!("unknown benchmark {bench_name}"))?;
@@ -79,17 +108,7 @@ pub fn cmd_simulate(mut args: Args) -> Result<()> {
         );
         engine::simulate_parallel_opts(&model, &cols, workers, None, opts)?
     };
-    let m = result.metrics;
-    println!("benchmark          : {bench_name}");
-    println!("instructions       : {}", m.instructions);
-    println!("predicted CPI      : {:.4}", m.cpi());
-    println!("predicted bMPKI    : {:.2}", m.branch_mpki());
-    println!("predicted L1D MPKI : {:.2}", m.l1d_mpki());
-    println!("predicted L1I MPKI : {:.2}", m.l1i_mpki());
-    println!("predicted TLB MPKI : {:.2}", m.tlb_mpki());
-    println!("batches            : {}", result.batches);
-    println!("inference time     : {:.2}s", result.elapsed.as_secs_f64());
-    println!("throughput         : {:.3} MIPS", result.mips());
+    print_prediction(&bench_name, &result);
 
     if let Some(uarch_name) = truth_uarch {
         let cfg = UarchConfig::preset(&uarch_name)
@@ -100,10 +119,25 @@ pub fn cmd_simulate(mut args: Args) -> Result<()> {
         println!("CPI truth          : {:.4}", stats.cpi());
         println!(
             "CPI error          : {:.2}%",
-            simulation_error_percent(m.cpi(), stats.cpi())
+            simulation_error_percent(result.metrics.cpi(), stats.cpi())
         );
         println!("bMPKI truth        : {:.2}", stats.branch_mpki());
         println!("L1D MPKI truth     : {:.2}", stats.l1d_mpki());
     }
     Ok(())
+}
+
+/// Print the predicted-metrics block shared by every simulate path.
+fn print_prediction(bench: &str, result: &engine::SimResult) {
+    let m = &result.metrics;
+    println!("benchmark          : {bench}");
+    println!("instructions       : {}", m.instructions);
+    println!("predicted CPI      : {:.4}", m.cpi());
+    println!("predicted bMPKI    : {:.2}", m.branch_mpki());
+    println!("predicted L1D MPKI : {:.2}", m.l1d_mpki());
+    println!("predicted L1I MPKI : {:.2}", m.l1i_mpki());
+    println!("predicted TLB MPKI : {:.2}", m.tlb_mpki());
+    println!("batches            : {}", result.batches);
+    println!("inference time     : {:.2}s", result.elapsed.as_secs_f64());
+    println!("throughput         : {:.3} MIPS", result.mips());
 }

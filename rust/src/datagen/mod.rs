@@ -90,6 +90,12 @@ pub struct DatagenOptions {
     /// ([`SimPairSource`]) instead of materializing it first — the
     /// end-to-end O(chunk) path behind `tao datagen --stream`.
     pub from_generator: bool,
+    /// Replay the functional side off a recorded trace file
+    /// ([`TracePairSource`]) instead of re-simulating it — the path
+    /// behind `tao datagen --from-trace`. Requires a single workload
+    /// (a trace records exactly one benchmark) and implies the
+    /// streaming writer.
+    pub from_trace: Option<PathBuf>,
 }
 
 impl Default for DatagenOptions {
@@ -100,6 +106,7 @@ impl Default for DatagenOptions {
             seed: 42,
             stream: StreamOptions::default(),
             from_generator: false,
+            from_trace: None,
         }
     }
 }
@@ -637,6 +644,132 @@ impl ChunkSource for SimPairSource {
     }
 }
 
+/// Rows staged per pull from the recorded trace in
+/// [`TracePairSource`] — the replay path's peak trace buffering.
+const TRACE_STAGE_ROWS: usize = 8_192;
+
+/// Replay variant of [`SimPairSource`]: the functional side comes off a
+/// recorded on-disk trace (either format, via
+/// [`open_trace_source`](crate::trace::open_trace_source)) while the
+/// detailed simulator re-executes the program in lockstep. Every row is
+/// cross-checked against the recorded PC/opcode/address — the §4.1
+/// alignment guarantee still holds, now also guarding against a stale
+/// or mismatched trace file (wrong benchmark, wrong seed). Peak trace
+/// buffering is one staged chunk, independent of trace length.
+pub struct TracePairSource {
+    trace: Box<dyn crate::trace::TraceSource>,
+    staged: ChunkBuf,
+    staged_pos: usize,
+    detailed: DetailedSim,
+    remaining: u64,
+    prev_fetch: u64,
+    produced: usize,
+    done: bool,
+}
+
+impl TracePairSource {
+    /// Open `trace_path` and pair it with a fresh detailed simulation of
+    /// `workload` built from `seed`. Fails typed if the file is not a
+    /// tao trace, and early if it records a different benchmark.
+    pub fn open(
+        trace_path: &Path,
+        workload: &Workload,
+        uarch: &UarchConfig,
+        instructions: u64,
+        seed: u64,
+    ) -> Result<TracePairSource> {
+        let trace = crate::trace::open_trace_source(trace_path)?;
+        ensure!(
+            trace.name() == workload.name,
+            "trace {trace_path:?} records benchmark {:?}, not {:?}",
+            trace.name(),
+            workload.name
+        );
+        let program = workload.build(seed);
+        Ok(TracePairSource {
+            trace,
+            staged: ChunkBuf::new(),
+            staged_pos: 0,
+            detailed: DetailedSim::new(&program, uarch),
+            remaining: instructions,
+            prev_fetch: 0,
+            produced: 0,
+            done: false,
+        })
+    }
+
+    /// Records yielded so far.
+    pub fn produced(&self) -> usize {
+        self.produced
+    }
+}
+
+impl ChunkSource for TracePairSource {
+    fn len_hint(&self) -> Option<usize> {
+        // Upper bound: the trace (or the program) may end first.
+        Some(self.remaining as usize)
+    }
+
+    fn total_cycles(&self) -> Option<u64> {
+        self.done.then(|| self.detailed.total_cycles())
+    }
+
+    fn next_chunk(&mut self, buf: &mut ChunkBuf, max_rows: usize) -> Result<usize> {
+        ensure!(max_rows >= 1, "zero-length chunk request");
+        buf.clear();
+        let n = (max_rows as u64).min(self.remaining);
+        for _ in 0..n {
+            if self.staged_pos == self.staged.cols.len() {
+                // Decode the next trace chunk (v2 decompression happens
+                // here, inside whatever thread is pulling this source).
+                let pulled = self.trace.next_chunk(&mut self.staged, TRACE_STAGE_ROWS)?;
+                self.staged_pos = 0;
+                if pulled == 0 {
+                    self.remaining = 0;
+                    break;
+                }
+            }
+            let Some(info) = self.detailed.step_commit(None) else {
+                self.remaining = 0;
+                break;
+            };
+            let i = self.staged_pos;
+            let d = &info.func;
+            // The §4.1 alignment check against the *recorded* stream.
+            ensure!(
+                self.staged.cols.pc[i] == d.pc
+                    && self.staged.cols.opcode[i] == d.opcode.index() as u8
+                    && self.staged.cols.mem_addr[i] == d.mem_addr,
+                "trace mismatch at instruction {}: recorded {:x}/{} vs detailed {:x}/{} — \
+                 was the trace written from the same benchmark and seed?",
+                self.produced,
+                self.staged.cols.pc[i],
+                self.staged.cols.opcode[i],
+                d.pc,
+                d.opcode.index(),
+            );
+            let labels = Labels {
+                fetch_latency: (info.fetch_clock - self.prev_fetch) as u32,
+                exec_latency: (info.retire_clock - info.fetch_clock) as u32,
+                branch_mispred: info.branch_mispred,
+                access_level: info.access_level,
+                icache_miss: info.icache_miss,
+                tlb_miss: info.tlb_miss,
+            };
+            self.prev_fetch = info.fetch_clock;
+            buf.cols.push(d);
+            buf.labels.extend_from_slice(&label_row(&labels));
+            self.staged_pos += 1;
+            self.produced += 1;
+            self.remaining -= 1;
+        }
+        if self.remaining == 0 {
+            self.done = true;
+        }
+        Ok(buf.len())
+    }
+}
+
 /// Trivial in-memory adapter: a resident [`RecordSource`] plus its
 /// aligned samples as a [`ChunkSource`] — the byte-identity oracle for
 /// the streaming writers. Alignment is re-verified chunk by chunk as it
@@ -956,6 +1089,33 @@ pub fn generate_streamed_source(
     Ok((manifest, stats))
 }
 
+/// Trace-replay end-to-end streaming datagen for one (benchmark,
+/// µarch) pair: the functional stream is decoded off `trace_path`
+/// (either on-disk format) while the detailed simulator re-executes the
+/// program in lockstep — same shape as [`generate_streamed_source`],
+/// with the recorded trace standing in for the functional machine.
+/// Byte-identical outputs to the generator paths when the trace was
+/// recorded from the same (benchmark, seed, instructions) run.
+pub fn generate_streamed_trace(
+    dir: &Path,
+    trace_path: &Path,
+    workload: &Workload,
+    uarch: &UarchConfig,
+    opts: &DatagenOptions,
+) -> Result<(Manifest, StreamStats)> {
+    let mut source =
+        TracePairSource::open(trace_path, workload, uarch, opts.instructions, opts.seed)?;
+    let d = dir.join(&uarch.name).join(workload.name);
+    std::fs::create_dir_all(&d).with_context(|| format!("mkdir {d:?}"))?;
+    let (manifest, stats) = stream_dataset_source(&d, &mut source, opts.features, opts.stream)?;
+    merge_shards(&d, &manifest, !opts.stream.keep_shards)?;
+    std::fs::write(
+        d.join("total_cycles.txt"),
+        format!("{}\n", manifest.total_cycles),
+    )?;
+    Ok((manifest, stats))
+}
+
 /// Generate one (benchmark, µarch) dataset straight to disk: traces →
 /// adjust → per-chunk align + featurize (sharded, bounded memory) →
 /// merged canonical arrays. The full `[M, F]` matrix never exists in
@@ -1029,7 +1189,9 @@ pub fn run(
     write_meta(dir, opts, &refs)?;
     for uarch in uarchs {
         for w in workloads {
-            let (manifest, stats) = if opts.from_generator {
+            let (manifest, stats) = if let Some(trace) = &opts.from_trace {
+                generate_streamed_trace(dir, trace, w, uarch, opts)?
+            } else if opts.from_generator {
                 generate_streamed_source(dir, w, uarch, opts)?
             } else {
                 generate_streamed(dir, w, uarch, opts)?
@@ -1290,6 +1452,77 @@ mod tests {
             );
         }
         assert!(!b.join(shard_file("features", 0)).exists());
+    }
+
+    #[test]
+    fn trace_replay_byte_identical_to_generator_path() {
+        // Record a v2 trace, then datagen off it: outputs must match the
+        // simulator-pulled streaming path byte for byte.
+        let w = workloads::by_name("mcf").unwrap();
+        let uarch = UarchConfig::uarch_a();
+        let mut o = opts();
+        o.stream = StreamOptions {
+            chunk_size: 171,
+            shards: 2,
+            keep_shards: false,
+        };
+        let trace = tmp("replay").join("mcf.trace");
+        std::fs::create_dir_all(trace.parent().unwrap()).unwrap();
+        let program = w.build(o.seed);
+        let cols = crate::functional::FunctionalSim::new(&program)
+            .run(o.instructions)
+            .to_columns();
+        crate::trace::TraceWriteOptions::new(crate::trace::TraceFormat::V2)
+            .chunk_rows(733)
+            .write(&trace, w.name, &cols)
+            .unwrap();
+
+        let dir_gen = tmp("replay-gen");
+        let (m_gen, _) = generate_streamed_source(&dir_gen, &w, &uarch, &o).unwrap();
+        let dir_tr = tmp("replay-tr");
+        let (m_tr, stats) = generate_streamed_trace(&dir_tr, &trace, &w, &uarch, &o).unwrap();
+        assert_eq!(m_tr.rows, m_gen.rows);
+        assert_eq!(m_tr.total_cycles, m_gen.total_cycles);
+        assert!(stats.peak_chunk_rows <= 171);
+        let a = dir_gen.join("uarch_a/mcf");
+        let b = dir_tr.join("uarch_a/mcf");
+        for name in ["features.npy", "opcodes.npy", "labels.npy", "total_cycles.txt"] {
+            assert_eq!(
+                std::fs::read(a.join(name)).unwrap(),
+                std::fs::read(b.join(name)).unwrap(),
+                "{name} differs between generator and trace-replay paths"
+            );
+        }
+
+        // A mismatched trace (different benchmark) refuses early.
+        let other = workloads::by_name("dee").unwrap();
+        assert!(TracePairSource::open(&trace, &other, &uarch, 100, o.seed).is_err());
+        // A tampered record trips the streamed §4.1 alignment check.
+        let mut tampered = cols.clone();
+        tampered.pc[100] ^= 0x1000;
+        let bad_path = tmp("replay").join("mcf-bad.trace");
+        crate::trace::TraceWriteOptions::new(crate::trace::TraceFormat::V2)
+            .write(&bad_path, w.name, &tampered)
+            .unwrap();
+        let mut bad =
+            TracePairSource::open(&bad_path, &w, &uarch, o.instructions, o.seed).unwrap();
+        let mut buf = crate::trace::ChunkBuf::new();
+        let mut failed = false;
+        loop {
+            match bad.next_chunk(&mut buf, 128) {
+                Err(e) => {
+                    assert!(
+                        format!("{e:#}").contains("trace mismatch"),
+                        "unexpected error: {e:#}"
+                    );
+                    failed = true;
+                    break;
+                }
+                Ok(0) => break,
+                Ok(_) => {}
+            }
+        }
+        assert!(failed, "tampered replay should fail the alignment check");
     }
 
     #[test]

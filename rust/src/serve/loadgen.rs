@@ -102,6 +102,7 @@ fn to_spec(j: &ScenarioJob, chunk: usize) -> JobSpec {
         chunk,
         ctx_uarch: j.ctx_uarch.clone(),
         deadline_ms: None,
+        trace: None,
     }
 }
 

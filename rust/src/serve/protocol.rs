@@ -49,6 +49,12 @@ pub struct JobSpec {
     /// with a retryable [`ErrorCode::DeadlineExceeded`]. `None` takes
     /// the server's `--default-deadline-ms`.
     pub deadline_ms: Option<u64>,
+    /// Server-local path to a recorded functional trace (either on-disk
+    /// format; sniffed by magic). When set, the job replays the trace
+    /// instead of generating the stream: `bench` and `insts` come from
+    /// the trace header and must be omitted, and the artifact must be a
+    /// Tao model (SimNet needs detailed context a trace does not carry).
+    pub trace: Option<String>,
 }
 
 /// Largest integer the JSON number channel carries exactly (`f64`
@@ -60,17 +66,32 @@ impl JobSpec {
     /// Parse a `/v1/simulate` body.
     pub fn from_json(text: &str) -> Result<JobSpec> {
         let j = Json::parse(text).context("malformed JSON body")?;
+        let trace = j.get("trace").and_then(Json::as_str).map(str::to_string);
+        if trace.is_some() {
+            // The trace header is the source of truth for both.
+            ensure!(
+                j.get("bench").is_none() && j.get("insts").is_none(),
+                "trace jobs take bench and insts from the trace header; omit both"
+            );
+        }
         let spec = JobSpec {
-            bench: j.req_str("bench")?.to_string(),
-            insts: j.req_u64("insts")?,
+            bench: match trace {
+                Some(_) => String::new(),
+                None => j.req_str("bench")?.to_string(),
+            },
+            insts: match trace {
+                Some(_) => 0,
+                None => j.req_u64("insts")?,
+            },
             seed: j.get("seed").and_then(Json::as_u64).unwrap_or(42),
             artifact: j.req_str("artifact")?.to_string(),
             chunk: j.get("chunk").and_then(Json::as_u64).unwrap_or(DEFAULT_CHUNK as u64)
                 as usize,
             ctx_uarch: j.get("ctx_uarch").and_then(Json::as_str).map(str::to_string),
             deadline_ms: j.get("deadline_ms").and_then(Json::as_u64),
+            trace,
         };
-        ensure!(spec.insts >= 1, "insts must be positive");
+        ensure!(spec.trace.is_some() || spec.insts >= 1, "insts must be positive");
         ensure!(spec.chunk >= 1, "chunk must be positive");
         ensure!(spec.deadline_ms != Some(0), "deadline_ms must be positive");
         for (name, v) in [
@@ -89,13 +110,24 @@ impl JobSpec {
 
     /// Render as a `/v1/simulate` body.
     pub fn to_json(&self) -> String {
-        let mut pairs = vec![
-            ("bench", Json::of_str(&self.bench)),
-            ("insts", Json::of_u64(self.insts)),
-            ("seed", Json::of_u64(self.seed)),
-            ("artifact", Json::of_str(&self.artifact)),
-            ("chunk", Json::of_u64(self.chunk as u64)),
-        ];
+        let mut pairs = if self.trace.is_some() {
+            vec![
+                ("seed", Json::of_u64(self.seed)),
+                ("artifact", Json::of_str(&self.artifact)),
+                ("chunk", Json::of_u64(self.chunk as u64)),
+            ]
+        } else {
+            vec![
+                ("bench", Json::of_str(&self.bench)),
+                ("insts", Json::of_u64(self.insts)),
+                ("seed", Json::of_u64(self.seed)),
+                ("artifact", Json::of_str(&self.artifact)),
+                ("chunk", Json::of_u64(self.chunk as u64)),
+            ]
+        };
+        if let Some(t) = &self.trace {
+            pairs.push(("trace", Json::of_str(t)));
+        }
         if let Some(u) = &self.ctx_uarch {
             pairs.push(("ctx_uarch", Json::of_str(u)));
         }
@@ -555,6 +587,29 @@ pub fn validate_spec(
     pool: &crate::runtime::ArtifactPool,
     max_insts: u64,
 ) -> Result<crate::runtime::ModelKind> {
+    if let Some(trace) = &spec.trace {
+        // Trace-replay admission: the artifact must be a Tao model and
+        // the file must be a readable tao trace whose declared count
+        // fits the admission limit. Foreign or truncated files are
+        // refused here with the typed trace-error taxonomy, before the
+        // job ever reaches a lane.
+        let art = pool
+            .get(&spec.artifact)
+            .with_context(|| format!("unknown artifact {:?}", spec.artifact))?;
+        ensure!(
+            art.meta.kind == crate::runtime::ModelKind::Tao,
+            "trace jobs require a Tao artifact (SimNet needs detailed-sim \
+             context a recorded trace does not carry)"
+        );
+        let (_, _, records) = crate::trace::trace_header(std::path::Path::new(trace))?;
+        ensure!(records >= 1, "trace {trace:?} declares zero records");
+        ensure!(
+            records <= max_insts,
+            "trace {trace:?} declares {records} insts, exceeding the \
+             admission limit {max_insts}"
+        );
+        return Ok(art.meta.kind);
+    }
     ensure!(
         crate::workloads::by_name(&spec.bench).is_some(),
         "unknown benchmark {:?}",
@@ -602,8 +657,30 @@ mod tests {
             chunk: 257,
             ctx_uarch: Some("design:123".into()),
             deadline_ms: Some(5_000),
+            trace: None,
         };
         assert_eq!(JobSpec::from_json(&spec.to_json()).unwrap(), spec);
+        // Trace jobs: bench/insts come from the file, so the wire body
+        // must omit them — and the round trip preserves the path.
+        let tspec = JobSpec {
+            bench: String::new(),
+            insts: 0,
+            seed: 7,
+            artifact: "tao_a".into(),
+            chunk: 257,
+            ctx_uarch: None,
+            deadline_ms: None,
+            trace: Some("/tmp/mcf.trace".into()),
+        };
+        assert_eq!(JobSpec::from_json(&tspec.to_json()).unwrap(), tspec);
+        assert!(
+            JobSpec::from_json(r#"{"bench":"mcf","artifact":"x","trace":"t"}"#).is_err(),
+            "bench alongside trace must be rejected"
+        );
+        assert!(
+            JobSpec::from_json(r#"{"insts":5,"artifact":"x","trace":"t"}"#).is_err(),
+            "insts alongside trace must be rejected"
+        );
         // Defaults fill in.
         let min = JobSpec::from_json(r#"{"bench":"mcf","insts":10,"artifact":"x"}"#).unwrap();
         assert_eq!(min.seed, 42);
@@ -762,6 +839,7 @@ mod tests {
             chunk: 64,
             ctx_uarch: None,
             deadline_ms: None,
+            trace: None,
         };
         assert_eq!(
             validate_spec(&spec, &pool, 1_000).unwrap(),
@@ -789,5 +867,49 @@ mod tests {
         spec.artifact = "vp_tao".into();
         spec.ctx_uarch = None;
         assert!(validate_spec(&spec, &pool, u64::MAX).is_ok(), "Tao streams past the cap");
+
+        // Trace-replay admission: Tao-only, header-driven size check,
+        // typed foreign-file refusal.
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace = dir.join("vp.trace");
+        let cols = crate::functional::FunctionalSim::new(
+            &crate::workloads::by_name("dee").unwrap().build(3),
+        )
+        .run(200)
+        .to_columns();
+        crate::trace::TraceWriteOptions::new(crate::trace::TraceFormat::V2)
+            .write(&trace, "dee", &cols)
+            .unwrap();
+        let tspec = JobSpec {
+            bench: String::new(),
+            insts: 0,
+            seed: 1,
+            artifact: "vp_tao".into(),
+            chunk: 64,
+            ctx_uarch: None,
+            deadline_ms: None,
+            trace: Some(trace.to_string_lossy().into_owned()),
+        };
+        assert_eq!(
+            validate_spec(&tspec, &pool, 1_000).unwrap(),
+            crate::runtime::ModelKind::Tao
+        );
+        assert!(
+            validate_spec(&tspec, &pool, 100).is_err(),
+            "declared trace count must respect the admission limit"
+        );
+        let mut sn_t = tspec.clone();
+        sn_t.artifact = "vp_sn".into();
+        sn_t.ctx_uarch = Some("b".into());
+        assert!(validate_spec(&sn_t, &pool, 1_000).is_err(), "trace jobs are Tao-only");
+        let foreign = dir.join("vp_foreign.trace");
+        std::fs::write(&foreign, b"GARBAGE!!").unwrap();
+        let mut f_t = tspec.clone();
+        f_t.trace = Some(foreign.to_string_lossy().into_owned());
+        let err = validate_spec(&f_t, &pool, 1_000).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<crate::trace::TraceError>(),
+            Some(crate::trace::TraceError::Foreign { .. })
+        ));
     }
 }

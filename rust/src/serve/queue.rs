@@ -161,6 +161,7 @@ mod tests {
                     chunk: 8,
                     ctx_uarch: None,
                     deadline_ms: None,
+                    trace: None,
                 },
                 done: tx,
                 admitted_at: Instant::now(),

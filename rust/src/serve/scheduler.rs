@@ -208,26 +208,39 @@ impl ActiveJob {
         deadline: Option<Instant>,
         art: &PooledArtifact,
     ) -> Result<ActiveJob> {
-        let workload = crate::workloads::by_name(&spec.bench)
-            .with_context(|| format!("unknown benchmark {:?}", spec.bench))?;
-        let program = workload.build(spec.seed);
         let kind = art.meta.kind;
-        let source: Box<dyn ChunkSource + Send> = match kind {
-            // Tao consumes the µarch-agnostic functional stream; jobs
-            // pull it straight off the generator, never resident.
-            ModelKind::Tao => Box::new(FunctionalSim::new(&program).into_chunks(spec.insts)),
-            // SimNet needs the detailed trace of its target design as
-            // a per-instruction context input — materialized up front
-            // (that cost is the paper's argument against SimNet).
-            ModelKind::SimNet => {
-                let sel = spec
-                    .ctx_uarch
-                    .as_deref()
-                    .context("SimNet artifacts require ctx_uarch")?;
-                let cfg = resolve_ctx_uarch(sel)?;
-                let cols = FunctionalSim::new(&program).run(spec.insts).to_columns();
-                let ctx = crate::dataset::simnet_ctx_metrics(&program, &cfg, spec.insts);
-                Box::new(OwnedChunkSource::new(cols, Some(ctx))?)
+        let source: Box<dyn ChunkSource + Send> = if let Some(trace) = &spec.trace {
+            // Replay a recorded trace of either on-disk format.
+            // Decompression happens inside `next_chunk`, i.e. on this
+            // lane's pull — no extra decode stage, no resident trace.
+            anyhow::ensure!(
+                kind == ModelKind::Tao,
+                "trace jobs require a Tao artifact"
+            );
+            Box::new(crate::trace::open_trace_source(std::path::Path::new(trace))?)
+        } else {
+            let workload = crate::workloads::by_name(&spec.bench)
+                .with_context(|| format!("unknown benchmark {:?}", spec.bench))?;
+            let program = workload.build(spec.seed);
+            match kind {
+                // Tao consumes the µarch-agnostic functional stream;
+                // jobs pull it straight off the generator, never
+                // resident.
+                ModelKind::Tao => Box::new(FunctionalSim::new(&program).into_chunks(spec.insts)),
+                // SimNet needs the detailed trace of its target design
+                // as a per-instruction context input — materialized up
+                // front (that cost is the paper's argument against
+                // SimNet).
+                ModelKind::SimNet => {
+                    let sel = spec
+                        .ctx_uarch
+                        .as_deref()
+                        .context("SimNet artifacts require ctx_uarch")?;
+                    let cfg = resolve_ctx_uarch(sel)?;
+                    let cols = FunctionalSim::new(&program).run(spec.insts).to_columns();
+                    let ctx = crate::dataset::simnet_ctx_metrics(&program, &cfg, spec.insts);
+                    Box::new(OwnedChunkSource::new(cols, Some(ctx))?)
+                }
             }
         };
         Ok(ActiveJob {
@@ -1082,6 +1095,7 @@ mod tests {
             chunk,
             ctx_uarch: None,
             deadline_ms: None,
+            trace: None,
         }
     }
 

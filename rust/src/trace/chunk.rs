@@ -17,14 +17,18 @@
 //!   [`RecordSource`]; keeps existing callers and the byte-identity
 //!   oracles working against the streaming paths.
 //! * [`FileChunkSource`] — streams the `TAOTFNC1` on-disk format chunk
-//!   by chunk (the whole-file `read_functional_columns` is a thin
-//!   accumulation loop over it).
+//!   by chunk (its compressed sibling,
+//!   [`CompressedChunkSource`](super::codec::CompressedChunkSource),
+//!   streams `TAOTFNC2`; `open_trace_source` in `trace::format` sniffs
+//!   the magic and returns whichever fits, and the whole-file
+//!   `read_functional_columns` is a thin accumulation loop over that).
 //! * the simulator-backed sources (`functional::FuncChunkSource`,
 //!   `datagen::SimPairSource`) — generate records on demand so
 //!   simulate→featurize→write runs in O(chunk) memory end to end.
 
 use super::columns::TraceColumns;
-use super::serialize::{read_func_fields, read_func_header};
+use super::format::{header_error, read_magic, TraceError, TraceFormat};
+use super::serialize::{read_func_body_header, read_func_fields};
 use super::source::RecordSource;
 use crate::util::fault::panic_message;
 use anyhow::{bail, ensure, Context, Result};
@@ -116,6 +120,18 @@ pub trait ChunkSource {
 }
 
 impl<C: ChunkSource + ?Sized> ChunkSource for &mut C {
+    fn len_hint(&self) -> Option<usize> {
+        (**self).len_hint()
+    }
+    fn next_chunk(&mut self, buf: &mut ChunkBuf, max_rows: usize) -> Result<usize> {
+        (**self).next_chunk(buf, max_rows)
+    }
+    fn total_cycles(&self) -> Option<u64> {
+        (**self).total_cycles()
+    }
+}
+
+impl<C: ChunkSource + ?Sized> ChunkSource for Box<C> {
     fn len_hint(&self) -> Option<usize> {
         (**self).len_hint()
     }
@@ -246,12 +262,23 @@ pub struct FileChunkSource {
 }
 
 impl FileChunkSource {
-    /// Open `path` and validate the `TAOTFNC1` header.
+    /// Open `path` and validate the `TAOTFNC1` header. A foreign file,
+    /// a header cut short, and a trace of the other format are each
+    /// refused with a typed [`TraceError`] — never misread.
     pub fn open(path: &Path) -> Result<FileChunkSource> {
         let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
         let mut reader = BufReader::new(file);
-        let (name, declared) = read_func_header(&mut reader)
-            .with_context(|| format!("{path:?}: bad functional-trace header"))?;
+        let found = read_magic(path, &mut reader)?;
+        if found != TraceFormat::V1 {
+            return Err(TraceError::WrongFormat {
+                path: path.to_path_buf(),
+                found,
+                expected: TraceFormat::V1,
+            }
+            .into());
+        }
+        let (name, declared) =
+            read_func_body_header(&mut reader).map_err(|e| header_error(path, e))?;
         let mut src = FileChunkSource {
             path: path.to_path_buf(),
             name,

@@ -1,0 +1,775 @@
+//! The format-negotiating trace API.
+//!
+//! Every reader and writer of functional traces goes through this one
+//! surface; nothing outside `trace/` looks at magic bytes.
+//!
+//! * [`open_trace_source`] sniffs the on-disk format and returns a
+//!   boxed [`TraceSource`] streaming either `TAOTFNC1` (v1, flat
+//!   27 B/instruction) or `TAOTFNC2` (v2, column-compressed) behind
+//!   the uniform [`ChunkSource`] pull contract.
+//! * [`TraceWriteOptions`] is the builder every writer uses: pick a
+//!   [`TraceFormat`], a chunk size and a compression level, then
+//!   [`write`](TraceWriteOptions::write) resident columns or stream
+//!   through a [`TraceWriter`] with the record count back-patched on
+//!   finish.
+//! * [`TraceError`] is the typed failure taxonomy shared by both
+//!   formats: foreign files are refused by magic (mirroring the serve
+//!   cache journal), truncated headers/tails, CRC mismatches and
+//!   corrupt chunks each carry their own variant, so callers and tests
+//!   can match on the cause instead of grepping message strings.
+
+use super::chunk::{ChunkBuf, ChunkSource, FileChunkSource};
+use super::codec::{self, CompressedChunkSource, V2Writer};
+use super::columns::TraceColumns;
+use super::serialize::{read_func_body_header, write_str, write_u64, MAGIC_FUNC};
+use anyhow::{ensure, Context, Result};
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// On-disk functional-trace formats.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceFormat {
+    /// `TAOTFNC1`: flat little-endian records, 27 B/instruction.
+    V1,
+    /// `TAOTFNC2`: column-compressed CRC-framed chunks.
+    V2,
+}
+
+impl TraceFormat {
+    /// The 8-byte magic that opens a file of this format.
+    pub fn magic(self) -> &'static [u8; 8] {
+        match self {
+            TraceFormat::V1 => MAGIC_FUNC,
+            TraceFormat::V2 => codec::MAGIC_V2,
+        }
+    }
+
+    /// CLI-facing name (`"v1"` / `"v2"`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TraceFormat::V1 => "v1",
+            TraceFormat::V2 => "v2",
+        }
+    }
+
+    /// Parse a CLI-facing name.
+    pub fn parse(s: &str) -> Result<TraceFormat> {
+        match s {
+            "v1" => Ok(TraceFormat::V1),
+            "v2" => Ok(TraceFormat::V2),
+            other => anyhow::bail!("unknown trace format {other:?} (expected v1 or v2)"),
+        }
+    }
+}
+
+impl std::fmt::Display for TraceFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Typed trace I/O failures, shared by both formats. Carried inside
+/// `anyhow::Error`; callers match with `err.downcast_ref::<TraceError>()`.
+#[derive(Debug)]
+pub enum TraceError {
+    /// The file's magic matches no trace format — a foreign file is
+    /// refused outright rather than misread.
+    Foreign { path: PathBuf, found: [u8; 8] },
+    /// The file ends inside its header.
+    TruncatedHeader { path: PathBuf },
+    /// A valid trace of the *other* format was handed to a
+    /// format-specific reader. `open_trace_source` reads either.
+    WrongFormat {
+        path: PathBuf,
+        found: TraceFormat,
+        expected: TraceFormat,
+    },
+    /// A chunk's framing or content is malformed (v2).
+    CorruptChunk {
+        path: PathBuf,
+        chunk: usize,
+        detail: String,
+    },
+    /// A chunk's CRC32 footer disagrees with its bytes (v2).
+    CrcMismatch {
+        path: PathBuf,
+        chunk: usize,
+        stored: u32,
+        computed: u32,
+    },
+    /// The file ends before the declared record count (v2; v1 reports
+    /// the failing record through its own decode error).
+    TruncatedTail {
+        path: PathBuf,
+        declared: u64,
+        got: u64,
+    },
+    /// Bytes follow the last declared record.
+    TrailingGarbage { path: PathBuf, declared: u64 },
+}
+
+impl std::fmt::Display for TraceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TraceError::Foreign { path, found } => write!(
+                f,
+                "{path:?} is not a tao trace (bad magic \"{}\"); refusing to read",
+                found.escape_ascii()
+            ),
+            TraceError::TruncatedHeader { path } => {
+                write!(f, "{path:?}: truncated trace header")
+            }
+            TraceError::WrongFormat {
+                path,
+                found,
+                expected,
+            } => write!(
+                f,
+                "{path:?} is a {found} trace, not {expected}; open_trace_source reads either"
+            ),
+            TraceError::CorruptChunk {
+                path,
+                chunk,
+                detail,
+            } => write!(f, "{path:?}: corrupt chunk {chunk}: {detail}"),
+            TraceError::CrcMismatch {
+                path,
+                chunk,
+                stored,
+                computed,
+            } => write!(
+                f,
+                "{path:?}: chunk {chunk} CRC mismatch (stored {stored:#010x}, computed {computed:#010x})"
+            ),
+            TraceError::TruncatedTail {
+                path,
+                declared,
+                got,
+            } => write!(
+                f,
+                "{path:?}: truncated after {got} of {declared} declared records"
+            ),
+            TraceError::TrailingGarbage { path, declared } => write!(
+                f,
+                "{path:?}: trailing bytes after the {declared} declared records"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
+
+/// Read and classify a trace file's 8-byte magic. A short read is a
+/// typed truncated-header error; an unknown magic is a typed foreign-
+/// file refusal.
+pub(crate) fn read_magic(path: &Path, r: &mut impl Read) -> Result<TraceFormat> {
+    let mut magic = [0u8; 8];
+    if let Err(e) = r.read_exact(&mut magic) {
+        return if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            Err(TraceError::TruncatedHeader {
+                path: path.to_path_buf(),
+            }
+            .into())
+        } else {
+            Err(anyhow::Error::new(e).context(format!("read {path:?}")))
+        };
+    }
+    if &magic == TraceFormat::V1.magic() {
+        Ok(TraceFormat::V1)
+    } else if &magic == TraceFormat::V2.magic() {
+        Ok(TraceFormat::V2)
+    } else {
+        Err(TraceError::Foreign {
+            path: path.to_path_buf(),
+            found: magic,
+        }
+        .into())
+    }
+}
+
+/// Classify a post-magic header failure: an unexpected EOF becomes the
+/// typed truncated-header error, anything else keeps its cause.
+pub(crate) fn header_error(path: &Path, e: anyhow::Error) -> anyhow::Error {
+    let eof = e
+        .downcast_ref::<std::io::Error>()
+        .map(|io| io.kind() == std::io::ErrorKind::UnexpectedEof)
+        .unwrap_or(false);
+    if eof {
+        TraceError::TruncatedHeader {
+            path: path.to_path_buf(),
+        }
+        .into()
+    } else {
+        e.context(format!("{path:?}: bad trace header"))
+    }
+}
+
+/// Identify a trace file's on-disk format from its magic without
+/// reading further.
+pub fn sniff_format(path: &Path) -> Result<TraceFormat> {
+    let mut file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    read_magic(path, &mut file)
+}
+
+/// Read just a trace file's header — format, embedded name, declared
+/// record count — without walking the chunks. Both formats share the
+/// post-magic header prefix, so this is O(name) work either way; the
+/// admission paths (`tao serve`) use it to bound a job before paying
+/// for a decode. Failures are the same typed taxonomy as the readers.
+pub fn trace_header(path: &Path) -> Result<(TraceFormat, String, u64)> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = std::io::BufReader::new(file);
+    let format = read_magic(path, &mut r)?;
+    let (name, records) = read_func_body_header(&mut r).map_err(|e| header_error(path, e))?;
+    Ok((format, name, records as u64))
+}
+
+/// A file-backed chunk stream that knows its provenance: the uniform
+/// read surface [`open_trace_source`] returns for either format.
+pub trait TraceSource: ChunkSource + Send {
+    /// Trace name from the header.
+    fn name(&self) -> &str;
+    /// The on-disk format being streamed.
+    fn format(&self) -> TraceFormat;
+}
+
+impl TraceSource for FileChunkSource {
+    fn name(&self) -> &str {
+        FileChunkSource::name(self)
+    }
+    fn format(&self) -> TraceFormat {
+        TraceFormat::V1
+    }
+}
+
+impl TraceSource for CompressedChunkSource {
+    fn name(&self) -> &str {
+        CompressedChunkSource::name(self)
+    }
+    fn format(&self) -> TraceFormat {
+        TraceFormat::V2
+    }
+}
+
+/// Open a trace file of either format: sniff the magic, dispatch to
+/// the right reader, and hand back one [`ChunkSource`]-shaped stream.
+/// Decode runs inside `next_chunk`, so wrapping the source in the
+/// existing `ChunkPrefetcher` (as the pipelined engine paths do)
+/// overlaps file decode with feature staging and model execution.
+pub fn open_trace_source(path: &Path) -> Result<Box<dyn TraceSource>> {
+    match sniff_format(path)? {
+        TraceFormat::V1 => Ok(Box::new(FileChunkSource::open(path)?)),
+        TraceFormat::V2 => Ok(Box::new(CompressedChunkSource::open(path)?)),
+    }
+}
+
+/// How to write a trace: the builder used by every trace writer in the
+/// tree. Defaults preserve the historical behavior byte-for-byte
+/// (v1, so existing fixtures and oracles keep their hashes).
+#[derive(Debug, Clone, Copy)]
+pub struct TraceWriteOptions {
+    /// On-disk format. Default [`TraceFormat::V1`].
+    pub format: TraceFormat,
+    /// Rows per v2 chunk (ignored by v1). Default 65 536.
+    pub chunk_rows: usize,
+    /// v2 compression level, 0..=2 (ignored by v1): 0 stores raw
+    /// sections, 1 adds delta/run-length/bit-pack encodings, 2 adds
+    /// the dictionary encodings. Default 2.
+    pub level: u8,
+}
+
+impl Default for TraceWriteOptions {
+    fn default() -> TraceWriteOptions {
+        TraceWriteOptions {
+            format: TraceFormat::V1,
+            chunk_rows: 1 << 16,
+            level: codec::MAX_LEVEL,
+        }
+    }
+}
+
+impl TraceWriteOptions {
+    /// Options for `format` with default chunking and level.
+    pub fn new(format: TraceFormat) -> TraceWriteOptions {
+        TraceWriteOptions {
+            format,
+            ..TraceWriteOptions::default()
+        }
+    }
+
+    /// Set the format.
+    pub fn format(mut self, format: TraceFormat) -> TraceWriteOptions {
+        self.format = format;
+        self
+    }
+
+    /// Set the v2 rows-per-chunk.
+    pub fn chunk_rows(mut self, chunk_rows: usize) -> TraceWriteOptions {
+        self.chunk_rows = chunk_rows;
+        self
+    }
+
+    /// Set the v2 compression level (0..=2).
+    pub fn level(mut self, level: u8) -> TraceWriteOptions {
+        self.level = level;
+        self
+    }
+
+    /// Open a streaming [`TraceWriter`] at `path`.
+    pub fn writer(&self, path: &Path, name: &str) -> Result<TraceWriter> {
+        let inner = match self.format {
+            TraceFormat::V1 => WriterInner::V1(V1Writer::create(path, name)?),
+            TraceFormat::V2 => {
+                WriterInner::V2(V2Writer::create(path, name, self.chunk_rows, self.level)?)
+            }
+        };
+        Ok(TraceWriter { inner })
+    }
+
+    /// Write resident columns to `path` in one call.
+    pub fn write(&self, path: &Path, name: &str, cols: &TraceColumns) -> Result<()> {
+        let mut w = self.writer(path, name)?;
+        w.append(cols)?;
+        w.finish()?;
+        Ok(())
+    }
+}
+
+/// Streaming trace writer for either format. Append columns in any
+/// granularity; the record count is back-patched into the header on
+/// [`finish`](TraceWriter::finish), and the resulting bytes are
+/// independent of how the appends were sliced.
+pub struct TraceWriter {
+    inner: WriterInner,
+}
+
+enum WriterInner {
+    V1(V1Writer),
+    V2(V2Writer),
+}
+
+impl TraceWriter {
+    /// Append every record in `cols`.
+    pub fn append(&mut self, cols: &TraceColumns) -> Result<()> {
+        ensure!(
+            cols.is_consistent(),
+            "ragged trace columns: {} pcs / {} opcodes / {} bitmaps / {} addrs / {} widths / {} outcomes",
+            cols.pc.len(),
+            cols.opcode.len(),
+            cols.reg_bitmap.len(),
+            cols.mem_addr.len(),
+            cols.mem_bytes.len(),
+            cols.taken.len()
+        );
+        match &mut self.inner {
+            WriterInner::V1(w) => w.append(cols),
+            WriterInner::V2(w) => w.append(cols),
+        }
+    }
+
+    /// Rows appended so far.
+    pub fn rows_appended(&self) -> u64 {
+        match &self.inner {
+            WriterInner::V1(w) => w.written,
+            WriterInner::V2(w) => w.rows_appended(),
+        }
+    }
+
+    /// Flush everything, back-patch the header's record count, and
+    /// return the total rows written.
+    pub fn finish(self) -> Result<u64> {
+        match self.inner {
+            WriterInner::V1(w) => w.finish(),
+            WriterInner::V2(w) => w.finish(),
+        }
+    }
+}
+
+/// Streaming `TAOTFNC1` writer: byte-identical output to the legacy
+/// whole-trace writers, with the record count back-patched on finish so
+/// producers can stream without knowing their length up front.
+struct V1Writer {
+    path: PathBuf,
+    w: BufWriter<std::fs::File>,
+    count_offset: u64,
+    written: u64,
+}
+
+impl V1Writer {
+    fn create(path: &Path, name: &str) -> Result<V1Writer> {
+        let file = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+        let mut w = BufWriter::new(file);
+        w.write_all(MAGIC_FUNC)?;
+        write_str(&mut w, name)?;
+        let count_offset = 8 + 8 + name.len() as u64;
+        write_u64(&mut w, 0)?; // record count, back-patched by finish()
+        Ok(V1Writer {
+            path: path.to_path_buf(),
+            w,
+            count_offset,
+            written: 0,
+        })
+    }
+
+    fn append(&mut self, cols: &TraceColumns) -> Result<()> {
+        for i in 0..cols.len() {
+            write_u64(&mut self.w, cols.pc[i])?;
+            self.w.write_all(&[cols.opcode[i]])?;
+            write_u64(&mut self.w, cols.reg_bitmap[i])?;
+            write_u64(&mut self.w, cols.mem_addr[i])?;
+            self.w.write_all(&[cols.mem_bytes[i], cols.taken[i]])?;
+        }
+        self.written += cols.len() as u64;
+        Ok(())
+    }
+
+    fn finish(mut self) -> Result<u64> {
+        self.w
+            .flush()
+            .with_context(|| format!("flush {:?}", self.path))?;
+        let f = self.w.get_mut();
+        f.seek(SeekFrom::Start(self.count_offset))
+            .and_then(|_| f.write_all(&self.written.to_le_bytes()))
+            .with_context(|| format!("back-patch record count in {:?}", self.path))?;
+        Ok(self.written)
+    }
+}
+
+/// Transcode a trace file between formats (or re-chunk/re-level within
+/// v2) in O(chunk) memory. Returns the records copied.
+pub fn convert_trace(input: &Path, output: &Path, opts: &TraceWriteOptions) -> Result<u64> {
+    ensure!(
+        input != output,
+        "refusing to transcode {input:?} onto itself"
+    );
+    let mut src = open_trace_source(input)?;
+    let name = src.name().to_string();
+    let mut w = opts.writer(output, &name)?;
+    let mut buf = ChunkBuf::new();
+    loop {
+        let n = src.next_chunk(&mut buf, 1 << 16)?;
+        if n == 0 {
+            break;
+        }
+        w.append(&buf.cols)?;
+    }
+    w.finish()
+}
+
+/// What `inspect_trace` learned about a trace file. Produced by a full
+/// validating walk: every record (v1) or chunk CRC + section (v2) has
+/// been checked by the time this is returned.
+#[derive(Debug)]
+pub struct TraceInfo {
+    pub format: TraceFormat,
+    pub name: String,
+    pub records: u64,
+    pub file_bytes: u64,
+    /// v2 only: nominal rows per chunk.
+    pub chunk_rows: Option<u64>,
+    /// v2 only: chunk count.
+    pub chunks: Option<u64>,
+    /// v2 only: encoded bytes per column section, in
+    /// `codec::SECTION_NAMES` order.
+    pub section_bytes: Option<[u64; 6]>,
+}
+
+impl TraceInfo {
+    /// Mean on-disk bytes per instruction (the whole file, headers and
+    /// framing included).
+    pub fn bytes_per_inst(&self) -> f64 {
+        if self.records == 0 {
+            0.0
+        } else {
+            self.file_bytes as f64 / self.records as f64
+        }
+    }
+}
+
+/// Section names for [`TraceInfo::section_bytes`], in on-disk order.
+pub fn section_names() -> [&'static str; 6] {
+    codec::SECTION_NAMES
+}
+
+/// Walk and validate a trace file of either format, returning header
+/// facts plus chunk/size statistics.
+pub fn inspect_trace(path: &Path) -> Result<TraceInfo> {
+    let file_bytes = std::fs::metadata(path)
+        .with_context(|| format!("stat {path:?}"))?
+        .len();
+    match sniff_format(path)? {
+        TraceFormat::V1 => {
+            let mut src = FileChunkSource::open(path)?;
+            let name = FileChunkSource::name(&src).to_string();
+            let mut buf = ChunkBuf::new();
+            let mut records = 0u64;
+            loop {
+                let n = src.next_chunk(&mut buf, 1 << 16)?;
+                if n == 0 {
+                    break;
+                }
+                records += n as u64;
+            }
+            Ok(TraceInfo {
+                format: TraceFormat::V1,
+                name,
+                records,
+                file_bytes,
+                chunk_rows: None,
+                chunks: None,
+                section_bytes: None,
+            })
+        }
+        TraceFormat::V2 => {
+            let scan = codec::scan_v2(path)?;
+            Ok(TraceInfo {
+                format: TraceFormat::V2,
+                name: scan.name,
+                records: scan.records,
+                file_bytes,
+                chunk_rows: Some(scan.chunk_rows),
+                chunks: Some(scan.chunks),
+                section_bytes: Some(scan.section_bytes),
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functional::FunctionalSim;
+    use crate::trace::serialize::write_functional_columns;
+    use crate::workloads;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tao-format-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(format!("{tag}.trace"))
+    }
+
+    fn sample_cols(n: u64) -> TraceColumns {
+        let p = workloads::by_name("dee").unwrap().build(11);
+        FunctionalSim::new(&p).run(n).to_columns()
+    }
+
+    fn read_all(path: &Path) -> (String, TraceColumns) {
+        let mut src = open_trace_source(path).unwrap();
+        let name = src.name().to_string();
+        let mut buf = ChunkBuf::new();
+        let mut cols = TraceColumns::new();
+        loop {
+            let n = src.next_chunk(&mut buf, 1 << 12).unwrap();
+            if n == 0 {
+                break;
+            }
+            cols.extend_from(&buf.cols, 0, n);
+        }
+        (name, cols)
+    }
+
+    #[test]
+    fn sniff_identifies_both_formats_and_refuses_foreign() {
+        let cols = sample_cols(100);
+        let v1 = tmp("sniff-v1");
+        TraceWriteOptions::default().write(&v1, "dee", &cols).unwrap();
+        assert_eq!(sniff_format(&v1).unwrap(), TraceFormat::V1);
+
+        let v2 = tmp("sniff-v2");
+        TraceWriteOptions::new(TraceFormat::V2)
+            .write(&v2, "dee", &cols)
+            .unwrap();
+        assert_eq!(sniff_format(&v2).unwrap(), TraceFormat::V2);
+
+        let foreign = tmp("sniff-foreign");
+        std::fs::write(&foreign, b"NOTATRACE_AT_ALL").unwrap();
+        let err = sniff_format(&foreign).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<TraceError>(),
+                Some(TraceError::Foreign { .. })
+            ),
+            "unexpected error: {err:#}"
+        );
+
+        let short = tmp("sniff-short");
+        std::fs::write(&short, b"TAO").unwrap();
+        let err = sniff_format(&short).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<TraceError>(),
+                Some(TraceError::TruncatedHeader { .. })
+            ),
+            "unexpected error: {err:#}"
+        );
+    }
+
+    #[test]
+    fn v1_writer_matches_legacy_writer_bytes() {
+        let cols = sample_cols(500);
+        let legacy = tmp("legacy");
+        write_functional_columns(&legacy, "dee", &cols).unwrap();
+
+        // One-shot write and split appends both match the legacy bytes.
+        let oneshot = tmp("oneshot");
+        TraceWriteOptions::default()
+            .write(&oneshot, "dee", &cols)
+            .unwrap();
+        assert_eq!(
+            std::fs::read(&legacy).unwrap(),
+            std::fs::read(&oneshot).unwrap()
+        );
+
+        let split = tmp("split");
+        let mut w = TraceWriteOptions::default().writer(&split, "dee").unwrap();
+        let mut part = TraceColumns::new();
+        part.extend_from(&cols, 0, 123);
+        w.append(&part).unwrap();
+        let mut part = TraceColumns::new();
+        part.extend_from(&cols, 123, cols.len());
+        w.append(&part).unwrap();
+        assert_eq!(w.finish().unwrap(), 500);
+        assert_eq!(
+            std::fs::read(&legacy).unwrap(),
+            std::fs::read(&split).unwrap()
+        );
+    }
+
+    #[test]
+    fn open_trace_source_reads_both_formats_identically() {
+        let cols = sample_cols(3_000);
+        let v1 = tmp("open-v1");
+        let v2 = tmp("open-v2");
+        TraceWriteOptions::default().write(&v1, "dee", &cols).unwrap();
+        TraceWriteOptions::new(TraceFormat::V2)
+            .chunk_rows(1_000)
+            .write(&v2, "dee", &cols)
+            .unwrap();
+
+        let (n1, c1) = read_all(&v1);
+        let (n2, c2) = read_all(&v2);
+        assert_eq!(n1, "dee");
+        assert_eq!(n2, "dee");
+        assert_eq!(c1, cols);
+        assert_eq!(c2, cols);
+
+        let s1 = open_trace_source(&v1).unwrap();
+        let s2 = open_trace_source(&v2).unwrap();
+        assert_eq!(s1.format(), TraceFormat::V1);
+        assert_eq!(s2.format(), TraceFormat::V2);
+    }
+
+    #[test]
+    fn format_specific_readers_reject_the_other_format_typed() {
+        let cols = sample_cols(50);
+        let v1 = tmp("wrong-v1");
+        let v2 = tmp("wrong-v2");
+        TraceWriteOptions::default().write(&v1, "dee", &cols).unwrap();
+        TraceWriteOptions::new(TraceFormat::V2)
+            .write(&v2, "dee", &cols)
+            .unwrap();
+
+        let err = CompressedChunkSource::open(&v1).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<TraceError>(),
+                Some(TraceError::WrongFormat {
+                    found: TraceFormat::V1,
+                    expected: TraceFormat::V2,
+                    ..
+                })
+            ),
+            "unexpected error: {err:#}"
+        );
+        let err = FileChunkSource::open(&v2).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<TraceError>(),
+                Some(TraceError::WrongFormat {
+                    found: TraceFormat::V2,
+                    expected: TraceFormat::V1,
+                    ..
+                })
+            ),
+            "unexpected error: {err:#}"
+        );
+    }
+
+    #[test]
+    fn convert_round_trips_byte_identically() {
+        let cols = sample_cols(2_500);
+        let v1 = tmp("conv-v1");
+        TraceWriteOptions::default().write(&v1, "dee", &cols).unwrap();
+
+        let v2 = tmp("conv-v2");
+        let n = convert_trace(
+            &v1,
+            &v2,
+            &TraceWriteOptions::new(TraceFormat::V2).chunk_rows(777),
+        )
+        .unwrap();
+        assert_eq!(n, 2_500);
+
+        // v1 -> v2 -> v1 reproduces the original file exactly.
+        let back = tmp("conv-back");
+        convert_trace(&back, &back, &TraceWriteOptions::default()).unwrap_err();
+        let n = convert_trace(&v2, &back, &TraceWriteOptions::default()).unwrap();
+        assert_eq!(n, 2_500);
+        assert_eq!(std::fs::read(&v1).unwrap(), std::fs::read(&back).unwrap());
+    }
+
+    #[test]
+    fn inspect_reports_both_formats() {
+        let cols = sample_cols(4_000);
+        let v1 = tmp("insp-v1");
+        let v2 = tmp("insp-v2");
+        TraceWriteOptions::default().write(&v1, "dee", &cols).unwrap();
+        TraceWriteOptions::new(TraceFormat::V2)
+            .chunk_rows(1_024)
+            .write(&v2, "dee", &cols)
+            .unwrap();
+
+        let i1 = inspect_trace(&v1).unwrap();
+        assert_eq!(i1.format, TraceFormat::V1);
+        assert_eq!(i1.name, "dee");
+        assert_eq!(i1.records, 4_000);
+        assert!(i1.bytes_per_inst() > 27.0); // 27 B/record + header
+        assert!(i1.chunks.is_none());
+
+        let i2 = inspect_trace(&v2).unwrap();
+        assert_eq!(i2.format, TraceFormat::V2);
+        assert_eq!(i2.name, "dee");
+        assert_eq!(i2.records, 4_000);
+        assert_eq!(i2.chunk_rows, Some(1_024));
+        assert_eq!(i2.chunks, Some(4_000u64.div_ceil(1_024)));
+        let sections = i2.section_bytes.unwrap();
+        assert!(sections.iter().all(|&b| b > 0));
+        assert!(i2.bytes_per_inst() < i1.bytes_per_inst());
+    }
+
+    #[test]
+    fn trace_header_peeks_both_formats_typed() {
+        let cols = sample_cols(500);
+        let v1 = tmp("hdr-v1");
+        TraceWriteOptions::default().write(&v1, "hdr1", &cols).unwrap();
+        assert_eq!(
+            trace_header(&v1).unwrap(),
+            (TraceFormat::V1, "hdr1".to_string(), 500)
+        );
+        let v2 = tmp("hdr-v2");
+        TraceWriteOptions::new(TraceFormat::V2)
+            .write(&v2, "hdr2", &cols)
+            .unwrap();
+        assert_eq!(
+            trace_header(&v2).unwrap(),
+            (TraceFormat::V2, "hdr2".to_string(), 500)
+        );
+        let foreign = tmp("hdr-foreign");
+        std::fs::write(&foreign, b"NOTATRACE!!!").unwrap();
+        let err = trace_header(&foreign).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<TraceError>(),
+            Some(TraceError::Foreign { .. })
+        ));
+    }
+}

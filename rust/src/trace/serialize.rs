@@ -15,25 +15,25 @@ use anyhow::{bail, ensure, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-const MAGIC_FUNC: &[u8; 8] = b"TAOTFNC1";
+pub(crate) const MAGIC_FUNC: &[u8; 8] = b"TAOTFNC1";
 const MAGIC_DET: &[u8; 8] = b"TAOTDET1";
 
 const TAG_RETIRED: u8 = 0;
 const TAG_SQUASHED: u8 = 1;
 const TAG_NOP: u8 = 2;
 
-fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+pub(crate) fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
     w.write_all(&v.to_le_bytes())?;
     Ok(())
 }
 
-fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
+pub(crate) fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
     write_u64(w, s.len() as u64)?;
     w.write_all(s.as_bytes())?;
     Ok(())
 }
 
-fn read_u64(r: &mut impl Read) -> Result<u64> {
+pub(crate) fn read_u64(r: &mut impl Read) -> Result<u64> {
     let mut b = [0u8; 8];
     r.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
@@ -45,7 +45,7 @@ fn read_u8(r: &mut impl Read) -> Result<u8> {
     Ok(b[0])
 }
 
-fn read_str(r: &mut impl Read) -> Result<String> {
+pub(crate) fn read_str(r: &mut impl Read) -> Result<String> {
     let len = read_u64(r)? as usize;
     ensure!(len < 1 << 20, "unreasonable string length {len}");
     let mut buf = vec![0u8; len];
@@ -87,6 +87,15 @@ pub(crate) fn read_func_header(r: &mut impl Read) -> Result<(String, usize)> {
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
     ensure!(&magic == MAGIC_FUNC, "not a functional trace: bad magic");
+    read_func_body_header(r)
+}
+
+/// Read the post-magic part of a `TAOTFNC1` header (name + declared
+/// count). [`FileChunkSource`](crate::trace::chunk::FileChunkSource)
+/// classifies the magic itself (through the typed
+/// [`TraceError`](crate::trace::format::TraceError) taxonomy) and then
+/// calls this.
+pub(crate) fn read_func_body_header(r: &mut impl Read) -> Result<(String, usize)> {
     let name = read_str(r)?;
     let n = read_u64(r)?;
     ensure!(
@@ -145,47 +154,28 @@ pub fn read_functional(path: &Path) -> Result<FunctionalTrace> {
     Ok(FunctionalTrace { name, records })
 }
 
-/// Write a columnar functional trace to `path`. The on-disk format is
-/// identical to [`write_functional`] (`TAOTFNC1`), so AoS and SoA
-/// producers/consumers interoperate freely; the writer streams straight
-/// from the columns without assembling records.
+/// Write a columnar functional trace to `path` as `TAOTFNC1`. Thin
+/// wrapper kept for existing callers — new code should go through
+/// [`TraceWriteOptions`](crate::trace::format::TraceWriteOptions),
+/// which picks the format (the default reproduces this writer's bytes
+/// exactly, so AoS and SoA producers/consumers keep interoperating).
 pub fn write_functional_columns(path: &Path, name: &str, cols: &TraceColumns) -> Result<()> {
-    ensure!(
-        cols.is_consistent(),
-        "ragged trace columns: {} pcs / {} opcodes / {} bitmaps / {} addrs / {} widths / {} outcomes",
-        cols.pc.len(),
-        cols.opcode.len(),
-        cols.reg_bitmap.len(),
-        cols.mem_addr.len(),
-        cols.mem_bytes.len(),
-        cols.taken.len()
-    );
-    let file = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
-    let mut w = BufWriter::new(file);
-    w.write_all(MAGIC_FUNC)?;
-    write_str(&mut w, name)?;
-    write_u64(&mut w, cols.len() as u64)?;
-    for i in 0..cols.len() {
-        write_u64(&mut w, cols.pc[i])?;
-        w.write_all(&[cols.opcode[i]])?;
-        write_u64(&mut w, cols.reg_bitmap[i])?;
-        write_u64(&mut w, cols.mem_addr[i])?;
-        w.write_all(&[cols.mem_bytes[i], cols.taken[i]])?;
-    }
-    w.flush()?;
-    Ok(())
+    crate::trace::format::TraceWriteOptions::default().write(path, name, cols)
 }
 
-/// Read a functional trace from `path` directly into columnar storage —
-/// no intermediate `Vec<FuncRecord>` is materialized. An accumulation
-/// loop over the chunked [`FileChunkSource`](crate::trace::chunk), so
+/// Read a functional trace of either on-disk format from `path`
+/// directly into columnar storage — no intermediate `Vec<FuncRecord>`
+/// is materialized. Thin wrapper kept for existing callers: an
+/// accumulation loop over
+/// [`open_trace_source`](crate::trace::format::open_trace_source), so
 /// the whole-file and streaming readers share one decode + validation
-/// path (truncated tails, bad opcode ids and trailing garbage all
-/// error).
+/// path (truncated tails, CRC mismatches, bad opcode ids and trailing
+/// garbage all error).
 pub fn read_functional_columns(path: &Path) -> Result<(String, TraceColumns)> {
-    use crate::trace::chunk::{ChunkBuf, ChunkSource, FileChunkSource};
-    let mut src = FileChunkSource::open(path)?;
-    let mut cols = TraceColumns::with_capacity(src.remaining().min(1 << 22));
+    use crate::trace::chunk::{ChunkBuf, ChunkSource};
+    use crate::trace::format::TraceSource;
+    let mut src = crate::trace::format::open_trace_source(path)?;
+    let mut cols = TraceColumns::with_capacity(src.len_hint().unwrap_or(0).min(1 << 22));
     let mut buf = ChunkBuf::new();
     loop {
         let n = src.next_chunk(&mut buf, 1 << 16)?;

@@ -647,6 +647,7 @@ fn million_instruction_streaming_smoke() {
             keep_shards: false,
         },
         from_generator: true,
+        from_trace: None,
     };
     let dir = std::env::temp_dir().join(format!("tao-1m-{}", std::process::id()));
     let (manifest, stats) = datagen::generate_streamed_source(&dir, &w, &uarch, &opts).unwrap();
@@ -691,6 +692,120 @@ fn trace_files_round_trip() {
     assert_eq!(f2.records, functional.records);
     assert_eq!(d2.records.len(), detailed.records.len());
     assert_eq!(d2.total_cycles, detailed.total_cycles);
+}
+
+/// The two on-disk trace formats are interchangeable at 100k
+/// instructions: both round-trip the exact columns, v1 → v2 → v1
+/// reproduces the original file byte for byte, and the parallel engine
+/// computes identical metrics over either — the format never leaks
+/// into the numbers.
+#[test]
+fn trace_formats_identical_columns_and_metrics_at_100k() {
+    use tao_sim::coordinator::engine::{self, ParallelOptions};
+    use tao_sim::trace::{
+        open_trace_source, ChunkBuf, ChunkSource, TraceFormat, TraceSource, TraceWriteOptions,
+    };
+
+    let n: u64 = 100_000;
+    let dir = std::env::temp_dir().join(format!("tao-int-v2fmt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let program = workloads::by_name("mcf").unwrap().build(17);
+    let trace = FunctionalSim::new(&program).run(n);
+    let cols = trace.to_columns();
+
+    let p1 = dir.join("mcf.v1.trace");
+    let p2 = dir.join("mcf.v2.trace");
+    TraceWriteOptions::default().write(&p1, &trace.name, &cols).unwrap();
+    TraceWriteOptions::new(TraceFormat::V2)
+        .chunk_rows(9_001)
+        .write(&p2, &trace.name, &cols)
+        .unwrap();
+
+    // Both formats stream back the exact columns through the sniffing
+    // opener, pulled in chunk sizes that straddle disk-chunk bounds.
+    for (path, want) in [(&p1, TraceFormat::V1), (&p2, TraceFormat::V2)] {
+        let mut src = open_trace_source(path).unwrap();
+        assert_eq!(src.format(), want);
+        assert_eq!(src.name(), trace.name);
+        assert_eq!(src.len_hint(), Some(n as usize));
+        let mut got = tao_sim::trace::TraceColumns::default();
+        let mut buf = ChunkBuf::new();
+        loop {
+            let pulled = src.next_chunk(&mut buf, 7_777).unwrap();
+            if pulled == 0 {
+                break;
+            }
+            got.extend_from(&buf.cols, 0, pulled);
+        }
+        assert_eq!(got, cols, "{want} columns");
+    }
+
+    // Byte-level round trip: v1 → v2 → v1 reproduces the source file.
+    let p2b = dir.join("mcf.conv.v2.trace");
+    let p1b = dir.join("mcf.conv.v1.trace");
+    let opts_v2 = TraceWriteOptions::new(TraceFormat::V2).chunk_rows(9_001);
+    assert_eq!(tao_sim::trace::convert_trace(&p1, &p2b, &opts_v2).unwrap(), n);
+    assert_eq!(
+        std::fs::read(&p2).unwrap(),
+        std::fs::read(&p2b).unwrap(),
+        "direct v2 write vs v1→v2 transcode"
+    );
+    let opts_v1 = TraceWriteOptions::default();
+    assert_eq!(tao_sim::trace::convert_trace(&p2b, &p1b, &opts_v1).unwrap(), n);
+    assert_eq!(
+        std::fs::read(&p1).unwrap(),
+        std::fs::read(&p1b).unwrap(),
+        "v1 → v2 → v1 byte identity"
+    );
+
+    // The parallel engine sees the same numbers through either format.
+    let artifact = tao_sim::runtime::write_surrogate_artifact(&dir, "v2fmt", 64, 4).unwrap();
+    let opts = ParallelOptions {
+        chunk: 8_192,
+        warmup: 1_024,
+        pipeline: true,
+    };
+    let mut s1 = open_trace_source(&p1).unwrap();
+    let r1 = engine::simulate_parallel_chunked(&artifact, &mut *s1, 3, opts).unwrap();
+    let mut s2 = open_trace_source(&p2).unwrap();
+    let r2 = engine::simulate_parallel_chunked(&artifact, &mut *s2, 3, opts).unwrap();
+    assert_eq!(r1.metrics.instructions, n);
+    assert_eq!(r2.metrics.instructions, r1.metrics.instructions);
+    assert_eq!(r2.metrics.cycles, r1.metrics.cycles);
+    assert_eq!(r2.metrics.mispredicts, r1.metrics.mispredicts);
+    assert_eq!(r2.metrics.l1d_misses, r1.metrics.l1d_misses);
+    assert_eq!(r2.batches, r1.batches);
+}
+
+/// Compression gate over a mixed serving suite: across the scenario
+/// benches the column-specialized v2 format must be at least 4x
+/// smaller than the flat v1 records.
+#[test]
+fn trace_v2_compresses_mixed_suite_at_least_4x() {
+    use tao_sim::trace::{TraceFormat, TraceWriteOptions};
+    use tao_sim::workloads::scenarios::{mixed_scenarios, ScenarioArtifact};
+
+    let dir = std::env::temp_dir().join(format!("tao-int-v2zip-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let arts = vec![ScenarioArtifact { name: "tao_a".into(), simnet: false }];
+    let jobs = mixed_scenarios(&arts, 8, 20_000, 77);
+    let (mut v1_bytes, mut v2_bytes) = (0u64, 0u64);
+    for (i, job) in jobs.iter().enumerate() {
+        let program = workloads::by_name(&job.bench).unwrap().build(job.seed);
+        let trace = FunctionalSim::new(&program).run(job.insts);
+        let cols = trace.to_columns();
+        let p1 = dir.join(format!("{i}.v1.trace"));
+        let p2 = dir.join(format!("{i}.v2.trace"));
+        TraceWriteOptions::default().write(&p1, &trace.name, &cols).unwrap();
+        TraceWriteOptions::new(TraceFormat::V2).write(&p2, &trace.name, &cols).unwrap();
+        v1_bytes += std::fs::metadata(&p1).unwrap().len();
+        v2_bytes += std::fs::metadata(&p2).unwrap().len();
+    }
+    let ratio = v1_bytes as f64 / v2_bytes as f64;
+    assert!(
+        ratio >= 4.0,
+        "mixed-suite compression ratio {ratio:.2}x ({v1_bytes} -> {v2_bytes} bytes), want >= 4x"
+    );
 }
 
 /// PJRT end-to-end (needs `make artifacts`; skips otherwise): the engine

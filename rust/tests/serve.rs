@@ -97,6 +97,7 @@ fn loopback_concurrent_jobs_match_offline_cold_and_cached() {
             chunk: 48,
             ctx_uarch: j.ctx_uarch.clone(),
             deadline_ms: None,
+            trace: None,
         })
         .collect();
 
@@ -171,6 +172,92 @@ fn loopback_concurrent_jobs_match_offline_cold_and_cached() {
     assert!(http_get(&addr, "/healthz").is_err(), "daemon still accepting after drain");
 }
 
+/// Trace-replay jobs: a recorded trace posted as a `trace` job is read
+/// transparently in either on-disk format and served bit-identically
+/// to the equivalent generator-backed bench job; foreign files are
+/// refused at admission with a non-retryable bad request.
+#[test]
+fn loopback_trace_jobs_match_bench_jobs_both_formats() {
+    use tao_sim::trace::{TraceFormat, TraceWriteOptions};
+
+    let _gate = fault::exclusive();
+    fault::disarm_all();
+    let dir = temp_dir("tracejobs");
+    let hlo = tao_sim::runtime::write_surrogate_artifact(&dir, "tr", 8, 4).unwrap();
+    let pool = ArtifactPool::load(&[hlo]).unwrap();
+    // Cache off: the v1 and v2 jobs decode the same content, and a
+    // warm hit would let the second skip its decode path entirely.
+    let cfg = ServeConfig { cache_entries: 0, ..test_config() };
+    let server = Server::bind(pool, &cfg).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let srv = std::thread::spawn(move || server.run());
+
+    let insts: u64 = 30_000;
+    let program = tao_sim::workloads::by_name("mcf").unwrap().build(9);
+    let cols = tao_sim::functional::FunctionalSim::new(&program)
+        .run(insts)
+        .to_columns();
+    let v1 = dir.join("mcf.v1.trace");
+    let v2 = dir.join("mcf.v2.trace");
+    TraceWriteOptions::default().write(&v1, "mcf", &cols).unwrap();
+    TraceWriteOptions::new(TraceFormat::V2)
+        .chunk_rows(4_096)
+        .write(&v2, "mcf", &cols)
+        .unwrap();
+
+    let bench_spec = JobSpec {
+        bench: "mcf".into(),
+        insts,
+        seed: 9,
+        artifact: "tr".into(),
+        chunk: 512,
+        ctx_uarch: None,
+        deadline_ms: None,
+        trace: None,
+    };
+    let bench_out = post_job(&addr, &bench_spec);
+    assert_eq!(bench_out.metrics.instructions, insts);
+
+    for (tag, path) in [("v1", &v1), ("v2", &v2)] {
+        let tspec = JobSpec {
+            bench: String::new(),
+            insts: 0,
+            seed: 9,
+            artifact: "tr".into(),
+            chunk: 512,
+            ctx_uarch: None,
+            deadline_ms: None,
+            trace: Some(path.to_string_lossy().into_owned()),
+        };
+        let out = post_job(&addr, &tspec);
+        assert_eq!(out.metrics.instructions, insts, "{tag} trace job length");
+        assert_identical(&out.metrics, &bench_out.metrics, &format!("{tag} trace job"))
+            .unwrap();
+    }
+
+    // Foreign/short files are refused at admission, not on a lane.
+    let foreign = dir.join("foreign.trace");
+    std::fs::write(&foreign, b"NOT A TRACE AT ALL").unwrap();
+    let fspec = JobSpec {
+        bench: String::new(),
+        insts: 0,
+        seed: 9,
+        artifact: "tr".into(),
+        chunk: 512,
+        ctx_uarch: None,
+        deadline_ms: None,
+        trace: Some(foreign.to_string_lossy().into_owned()),
+    };
+    let resp = http_post(&addr, "/v1/simulate", &fspec.to_json()).unwrap();
+    assert_eq!(resp.status, 400, "foreign trace must be a bad request: {}", resp.body);
+    let err = ServeError::from_body(resp.status, &resp.body);
+    assert!(!err.code.retryable(), "foreign trace refusal must not be retryable");
+
+    let resp = http_post(&addr, "/v1/shutdown", "").unwrap();
+    assert_eq!(resp.status, 200);
+    srv.join().unwrap().unwrap();
+}
+
 /// Admission control: with a single-slot lane and a single-slot queue,
 /// a third concurrent job gets a retryable 429; draining finishes both
 /// accepted jobs.
@@ -204,6 +291,7 @@ fn backpressure_rejects_and_drain_finishes_in_flight_jobs() {
         chunk: 4_096,
         ctx_uarch: None,
         deadline_ms: None,
+        trace: None,
     };
     let wait_until = |pred: &dyn Fn(&StatsSnapshot) -> bool, what: &str| {
         let deadline = Instant::now() + Duration::from_secs(30);
@@ -277,6 +365,7 @@ fn stalled_reads_get_408_and_oversized_requests_get_413() {
         chunk: 512,
         ctx_uarch: None,
         deadline_ms: None,
+        trace: None,
     };
 
     // Stall mid-body for 5x the read timeout: the server must answer
@@ -338,6 +427,7 @@ fn executor_panic_respawns_lane_and_retried_jobs_match_offline() {
         chunk: 1_024,
         ctx_uarch: None,
         deadline_ms: None,
+        trace: None,
     };
     // One-shot: the second executor dispatch panics the lane thread
     // while several jobs are streaming through it.
@@ -404,6 +494,7 @@ fn drain_under_executor_panic_exits_clean_with_reloadable_journal() {
         chunk: 4_096,
         ctx_uarch: None,
         deadline_ms: None,
+        trace: None,
     };
     // One job to completion before the fault: its chunks are cached
     // and journaled, so the journal has content whatever happens to
@@ -486,6 +577,7 @@ fn cache_journal_survives_daemon_restart() {
             chunk: 512,
             ctx_uarch: None,
             deadline_ms: None,
+            trace: None,
         })
         .collect();
 
