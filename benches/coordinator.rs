@@ -199,6 +199,94 @@ fn main() {
         report.push(m);
     }
 
+    // --- phase-sampled replay vs full replay on a mixed-phase trace ---
+    // Concatenating every Table 2 workload gives a trace with real
+    // phase structure; the sampled path must reconstruct its CPI within
+    // the declared bound while simulating a fraction of the rows.
+    // `tools/bench_gate.rs` warns when the speedup dips below 4x or the
+    // measured error exceeds the declared bound.
+    const SAMPLED_ERROR_BOUND_PCT: f64 = 15.0;
+    let per: u64 = if opts.smoke { 6_000 } else { 25_000 };
+    let mut mixed = tao_sim::trace::TraceColumns::new();
+    for w in workloads::suite() {
+        let t = FunctionalSim::new(&w.build(3)).run(per).to_columns();
+        mixed.extend_from(&t, 0, t.len());
+    }
+    let total = mixed.len() as u64;
+    let bench_dir = std::env::temp_dir().join(format!("tao-bench-art-{}", std::process::id()));
+    std::fs::create_dir_all(&bench_dir).unwrap();
+    let mixed_trace = bench_dir.join("mixed.trace");
+    tao_sim::trace::TraceWriteOptions::new(tao_sim::trace::TraceFormat::V2)
+        .chunk_rows(8_192)
+        .write(&mixed_trace, "mixed", &mixed)
+        .unwrap();
+    let plan = tao_sim::sampling::plan_trace(
+        &mixed_trace,
+        &tao_sim::sampling::SamplingOptions {
+            slice_rows: per / 3,
+            max_phases: 5,
+            seed: 42,
+        },
+    )
+    .expect("sampling plan");
+    println!(
+        "sampled: {} phases over {} slices, {:.1}% coverage",
+        plan.phases.len(),
+        total.div_ceil(per / 3),
+        plan.coverage() * 100.0
+    );
+    let full_run = eb.run(&format!("mixed-{}k/full-workers2", total / 1000), total, || {
+        let mut src = tao_sim::trace::open_trace_source(&mixed_trace).unwrap();
+        engine::simulate_parallel_chunked(&artifact, &mut *src, 2, popts)
+            .expect("simulate")
+            .metrics
+            .instructions
+    });
+    let full_cpi = {
+        let mut src = tao_sim::trace::open_trace_source(&mixed_trace).unwrap();
+        engine::simulate_parallel_chunked(&artifact, &mut *src, 2, popts)
+            .expect("simulate")
+            .metrics
+            .cpi()
+    };
+    // Items = represented instructions: the sampled path answers for
+    // the whole trace, so its throughput is measured in trace rows.
+    let sampled_run =
+        eb.run(&format!("mixed-{}k/sampled-workers2", total / 1000), total, || {
+            engine::simulate_sampled(&artifact, &mixed_trace, &plan, 2, popts)
+                .expect("simulate sampled")
+                .result
+                .metrics
+                .instructions
+        });
+    let sampled_out =
+        engine::simulate_sampled(&artifact, &mixed_trace, &plan, 2, popts).expect("sampled");
+    let sampled_cpi = sampled_out.result.metrics.cpi();
+    let error_pct = (sampled_cpi - full_cpi).abs() / full_cpi * 100.0;
+    let sampled_speedup = sampled_run.items_per_sec() / full_run.items_per_sec();
+    println!(
+        "sampled: {:.3} Minst/s vs full {:.3} Minst/s — {:.2}x; CPI {:.4} vs {:.4} ({:.2}% error, bound {:.0}%)",
+        sampled_run.items_per_sec() / 1e6,
+        full_run.items_per_sec() / 1e6,
+        sampled_speedup,
+        sampled_cpi,
+        full_cpi,
+        error_pct,
+        SAMPLED_ERROR_BOUND_PCT,
+    );
+    report.metric("sampled_full_ips", full_run.items_per_sec());
+    report.metric("sampled_ips", sampled_run.items_per_sec());
+    report.metric("sampled_speedup", sampled_speedup);
+    report.metric("sampled_coverage_pct", plan.coverage() * 100.0);
+    report.metric(
+        "sampled_simulated_frac_pct",
+        sampled_out.simulated_rows as f64 / total as f64 * 100.0,
+    );
+    report.metric("sampled_max_error_pct", error_pct);
+    report.metric("sampled_error_bound_pct", SAMPLED_ERROR_BOUND_PCT);
+    report.push(full_run);
+    report.push(sampled_run);
+
     // Pallas-kernel artifact variant, if exported (`make artifacts`).
     let pallas = Path::new("artifacts/tao_uarch_a.pallas.hlo.txt");
     if pallas.exists() {

@@ -9,9 +9,11 @@
 //! * `tao loadgen`   — replay mixed scenarios against a daemon;
 //! * `tao report`    — regenerate a paper table/figure (see DESIGN.md §3);
 //! * `tao dse`       — sample + characterize designs, select train pair;
-//! * `tao trace`     — inspect/convert/generate on-disk functional traces.
+//! * `tao trace`     — inspect/convert/generate on-disk functional traces;
+//! * `tao sample`    — compute/inspect phase-sampling plans for traces.
 
 pub mod args;
+pub mod sample_cmd;
 pub mod trace_cmd;
 
 use crate::datagen::{self, DatagenOptions, StreamOptions};
@@ -35,6 +37,8 @@ USAGE:
                [--insts N] [--workers W] [--seed S] [--truth a|b|c]
                [--chunk N] [--warmup N] [--stream] [--max-resident N]
                [--trace PATH]   (replay a recorded trace, either format)
+               [--sample [--plan PLAN | --slice-rows N --max-phases K]]
+                                (phase-sampled replay; requires --trace)
   tao serve    --model A.hlo.txt [--model B.hlo.txt ...] | --surrogate-dir DIR
                [--addr H:P | --port P] [--port-file F] [--queue-depth N]
                [--max-active N] [--cache-entries N] [--max-insts N]
@@ -49,10 +53,13 @@ USAGE:
   tao report   <table1|figure2|figure9|figure10a|figure10b|figure11|figure12a|
                 figure12b|figure14|table4|table6|figure15> [opts]
   tao dse      [--designs N] [--insts N] [--seed S]
-  tao trace    inspect PATH
+  tao trace    inspect PATH [--signatures] [--slice-rows N]
                | convert IN OUT [--format v1|v2] [--chunk-rows N] [--level 0|1|2]
                | write OUT --bench B [--insts N] [--seed S]
                  [--format v1|v2] [--chunk-rows N] [--level 0|1|2]
+  tao sample   compute --trace PATH --out PLAN
+               [--slice-rows N] [--max-phases K] [--seed S]
+               | inspect PLAN
   tao help
 ";
 
@@ -71,6 +78,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "report" => crate::reports::cmd_report(args),
         "dse" => crate::reports::cmd_dse(args),
         "trace" => trace_cmd::cmd_trace(args),
+        "sample" => sample_cmd::cmd_sample(args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())

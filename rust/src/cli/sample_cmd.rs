@@ -1,0 +1,175 @@
+//! `tao sample` — compute and inspect phase-sampling plans.
+//!
+//! Thin CLI over [`crate::sampling`]: `compute` streams a recorded
+//! trace through the signature pass + k-means and persists the
+//! resulting `TAOPLAN1` sidecar, `inspect` prints a saved plan's
+//! phase table. Plans are microarchitecture-agnostic — one plan per
+//! trace serves every model artifact (`tao simulate --sample`,
+//! `tao serve` jobs with a `plan` field).
+
+use crate::cli::args::Args;
+use crate::sampling::{SamplingOptions, SamplingPlan};
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+/// Usage string for the `sample` subcommand family.
+pub const SAMPLE_USAGE: &str = "\
+USAGE:
+  tao sample compute --trace PATH --out PLAN
+                     [--slice-rows N] [--max-phases K] [--seed S]
+  tao sample inspect PLAN
+";
+
+/// Dispatch `tao sample <action>`.
+pub fn cmd_sample(mut args: Args) -> Result<()> {
+    let Some(action) = args.next_positional() else {
+        println!("{SAMPLE_USAGE}");
+        return Ok(());
+    };
+    match action.as_str() {
+        "compute" => cmd_compute(args),
+        "inspect" => cmd_inspect(args),
+        "help" => {
+            println!("{SAMPLE_USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown sample action {other:?}\n{SAMPLE_USAGE}"),
+    }
+}
+
+/// Consume the shared `--slice-rows/--max-phases/--seed` plan knobs.
+pub fn parse_sampling_options(args: &mut Args) -> Result<SamplingOptions> {
+    let defaults = SamplingOptions::default();
+    let opts = SamplingOptions {
+        slice_rows: args.opt_parse("--slice-rows")?.unwrap_or(defaults.slice_rows),
+        max_phases: args.opt_parse("--max-phases")?.unwrap_or(defaults.max_phases),
+        seed: args.opt_parse("--seed")?.unwrap_or(defaults.seed),
+    };
+    anyhow::ensure!(opts.slice_rows >= 1, "--slice-rows must be positive");
+    anyhow::ensure!(opts.max_phases >= 1, "--max-phases must be positive");
+    Ok(opts)
+}
+
+fn cmd_compute(mut args: Args) -> Result<()> {
+    let trace: PathBuf = args
+        .opt_value("--trace")?
+        .context("sample compute: --trace PATH required")?
+        .into();
+    let out: PathBuf = args
+        .opt_value("--out")?
+        .context("sample compute: --out PLAN required")?
+        .into();
+    let opts = parse_sampling_options(&mut args)?;
+    args.finish()?;
+    eprintln!(
+        "sample: computing signatures over {} (slice-rows={}, max-phases={}, seed={})...",
+        trace.display(),
+        opts.slice_rows,
+        opts.max_phases,
+        opts.seed
+    );
+    let plan = crate::sampling::plan_trace(&trace, &opts)?;
+    plan.save(&out)?;
+    print_plan(&plan);
+    println!("plan               : {}", out.display());
+    Ok(())
+}
+
+fn cmd_inspect(mut args: Args) -> Result<()> {
+    let path: PathBuf = args
+        .next_positional()
+        .context("sample inspect: PLAN path required")?
+        .into();
+    args.finish()?;
+    let plan = SamplingPlan::load(&path)?;
+    print_plan(&plan);
+    Ok(())
+}
+
+/// Print a plan's summary + phase table (shared by compute/inspect).
+fn print_plan(plan: &SamplingPlan) {
+    println!("trace              : {}", plan.name);
+    println!("total rows         : {}", plan.total_rows);
+    println!("slice rows         : {}", plan.slice_rows);
+    println!("seed               : {}", plan.seed);
+    println!("phases             : {}", plan.phases.len());
+    println!(
+        "simulated rows     : {} ({:.1}% coverage)",
+        plan.simulated_rows(),
+        plan.coverage() * 100.0
+    );
+    println!("phase  rep_slice  start_row  rows      weight    entropy  branch%");
+    for (i, p) in plan.phases.iter().enumerate() {
+        println!(
+            "{i:<5}  {:<9}  {:<9}  {:<8}  {:<8.2}  {:<7.3}  {:.1}",
+            p.rep_slice,
+            p.start_row,
+            p.rows,
+            p.weight,
+            p.entropy,
+            p.branch_ratio * 100.0
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functional::FunctionalSim;
+    use crate::trace::{TraceFormat, TraceWriteOptions};
+    use crate::workloads;
+
+    fn args(s: &[&str]) -> Args {
+        Args::new(s.iter().map(|s| s.to_string()).collect())
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tao-cli-sample-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(tag)
+    }
+
+    #[test]
+    fn compute_then_inspect_round_trip() {
+        let trace = tmp("mix.trace");
+        let plan_path = tmp("mix.plan");
+        let p = workloads::by_name("dee").unwrap().build(7);
+        let cols = FunctionalSim::new(&p).run(6_000).to_columns();
+        TraceWriteOptions::new(TraceFormat::V2)
+            .chunk_rows(1_024)
+            .write(&trace, "dee", &cols)
+            .unwrap();
+
+        cmd_sample(args(&[
+            "compute",
+            "--trace",
+            trace.to_str().unwrap(),
+            "--out",
+            plan_path.to_str().unwrap(),
+            "--slice-rows",
+            "1000",
+            "--max-phases",
+            "3",
+            "--seed",
+            "9",
+        ]))
+        .unwrap();
+
+        let plan = SamplingPlan::load(&plan_path).unwrap();
+        assert_eq!(plan.name, "dee");
+        assert_eq!(plan.total_rows, 6_000);
+        assert_eq!(plan.slice_rows, 1_000);
+        assert!(!plan.phases.is_empty() && plan.phases.len() <= 3);
+
+        cmd_sample(args(&["inspect", plan_path.to_str().unwrap()])).unwrap();
+    }
+
+    #[test]
+    fn bad_action_and_missing_args_fail() {
+        assert!(cmd_sample(args(&["frobnicate"])).is_err());
+        assert!(cmd_sample(args(&["compute", "--out", "x"])).is_err());
+        assert!(cmd_sample(args(&["inspect"])).is_err());
+        let mut a = args(&["--slice-rows", "0"]);
+        assert!(parse_sampling_options(&mut a).is_err());
+    }
+}

@@ -20,7 +20,7 @@ use std::path::PathBuf;
 /// Usage string for the `trace` subcommand family.
 pub const TRACE_USAGE: &str = "\
 USAGE:
-  tao trace inspect PATH
+  tao trace inspect PATH [--signatures] [--slice-rows N]
   tao trace convert IN OUT [--format v1|v2] [--chunk-rows N] [--level 0|1|2]
   tao trace write   OUT --bench B [--insts N] [--seed S]
                     [--format v1|v2] [--chunk-rows N] [--level 0|1|2]
@@ -60,11 +60,14 @@ fn parse_write_options(args: &mut Args, default_format: TraceFormat) -> Result<T
 }
 
 fn cmd_inspect(mut args: Args) -> Result<()> {
+    let signatures = args.opt_flag("--signatures");
+    let slice_rows: u64 = args.opt_parse("--slice-rows")?.unwrap_or(50_000);
     let path: PathBuf = args
         .next_positional()
         .context("trace inspect: PATH required")?
         .into();
     args.finish()?;
+    anyhow::ensure!(slice_rows >= 1, "--slice-rows must be positive");
     let info = inspect_trace(&path)?;
     println!("file               : {}", path.display());
     println!("format             : {}", info.format);
@@ -76,6 +79,12 @@ fn cmd_inspect(mut args: Args) -> Result<()> {
         println!("chunk rows         : {chunk_rows}");
         println!("chunks             : {chunks}");
     }
+    if let Some(index) = info.index {
+        println!(
+            "chunk-offset index : {}",
+            if index { "present (O(1) seeks)" } else { "absent (seeks scan frame headers)" }
+        );
+    }
     if let Some(section_bytes) = info.section_bytes {
         for (name, bytes) in section_names().iter().zip(section_bytes.iter()) {
             let per_inst = if info.records == 0 {
@@ -84,6 +93,24 @@ fn cmd_inspect(mut args: Args) -> Result<()> {
                 *bytes as f64 / info.records as f64
             };
             println!("section {name:<11}: {bytes} bytes ({per_inst:.3} B/inst)");
+        }
+    }
+    if signatures {
+        // Per-slice phase signatures — the same pass `tao sample
+        // compute` clusters, printed as a behaviour profile over time.
+        let mut src = open_trace_source(&path)?;
+        let sigs = crate::sampling::compute_signatures(&mut *src, slice_rows)?;
+        println!("slices             : {} x {slice_rows} rows", sigs.len());
+        println!("slice  start_row  rows      entropy  branch%");
+        for s in &sigs {
+            println!(
+                "{:<5}  {:<9}  {:<8}  {:<7.3}  {:.1}",
+                s.slice,
+                s.start_row,
+                s.rows,
+                s.entropy,
+                s.branch_ratio * 100.0
+            );
         }
     }
     Ok(())
@@ -218,6 +245,15 @@ mod tests {
         assert_eq!(drain(&v2), drain(&v1));
 
         cmd_trace(args(&["inspect", v2.to_str().unwrap()])).unwrap();
+        // Per-slice signature summaries ride the same walk.
+        cmd_trace(args(&[
+            "inspect",
+            v2.to_str().unwrap(),
+            "--signatures",
+            "--slice-rows",
+            "1000",
+        ]))
+        .unwrap();
     }
 
     #[test]

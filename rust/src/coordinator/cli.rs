@@ -5,12 +5,15 @@
 //! MIPS, and — with `--truth` — the detailed-simulator ground truth and
 //! the paper's simulation-error percentages. `--trace PATH` replays an
 //! on-disk trace of either format (`tao trace` writes them) instead of
-//! generating one.
+//! generating one; `--sample` adds phase-sampled replay, simulating only
+//! the plan's representative slices and reconstructing whole-trace
+//! metrics by weighted merge (see `docs/SAMPLING.md`).
 
 use super::engine::{self, ParallelOptions};
 use crate::cli::args::Args;
 use crate::detailed::DetailedSim;
 use crate::functional::FunctionalSim;
+use crate::sampling::SamplingPlan;
 use crate::stats::simulation_error_percent;
 use crate::trace::{open_trace_source, TraceSource};
 use crate::uarch::UarchConfig;
@@ -42,8 +45,73 @@ pub fn cmd_simulate(mut args: Args) -> Result<()> {
     let truth_uarch = args.opt_value("--truth")?;
     let stream = args.opt_flag("--stream");
     let max_resident: usize = args.opt_parse("--max-resident")?.unwrap_or(1 << 20);
+    let sample = args.opt_flag("--sample");
+    let plan_path: Option<PathBuf> = args.opt_value("--plan")?.map(Into::into);
+    let sample_slice_rows: Option<u64> = args.opt_parse("--slice-rows")?;
+    let sample_max_phases: Option<usize> = args.opt_parse("--max-phases")?;
     args.finish()?;
     anyhow::ensure!(max_resident >= 1, "--max-resident must be positive");
+    anyhow::ensure!(
+        sample || (plan_path.is_none() && sample_slice_rows.is_none() && sample_max_phases.is_none()),
+        "--plan/--slice-rows/--max-phases configure sampled replay; pass --sample"
+    );
+
+    if sample {
+        // Phase-sampled replay: simulate only the plan's representative
+        // slices (warmed by the preceding rows), then reconstruct
+        // whole-trace metrics by weighted accumulator merge.
+        let trace = trace_path.context(
+            "--sample replays representative slices of a recorded trace; it requires --trace \
+             (write one with `tao trace write`)",
+        )?;
+        anyhow::ensure!(
+            !stream && bench_flag.is_none() && insts_flag.is_none() && truth_uarch.is_none(),
+            "--sample cannot be combined with --stream, --bench, --insts, or --truth"
+        );
+        let plan = match &plan_path {
+            Some(p) => {
+                anyhow::ensure!(
+                    sample_slice_rows.is_none() && sample_max_phases.is_none(),
+                    "--plan loads a precomputed plan; --slice-rows/--max-phases only apply \
+                     when the plan is computed here"
+                );
+                SamplingPlan::load(p)?
+            }
+            None => {
+                let defaults = crate::sampling::SamplingOptions::default();
+                let sopts = crate::sampling::SamplingOptions {
+                    slice_rows: sample_slice_rows.unwrap_or(defaults.slice_rows),
+                    max_phases: sample_max_phases.unwrap_or(defaults.max_phases),
+                    seed,
+                };
+                anyhow::ensure!(sopts.slice_rows >= 1, "--slice-rows must be positive");
+                anyhow::ensure!(sopts.max_phases >= 1, "--max-phases must be positive");
+                eprintln!(
+                    "simulate: computing sampling plan (slice-rows={}, max-phases={})...",
+                    sopts.slice_rows, sopts.max_phases
+                );
+                crate::sampling::plan_trace(&trace, &sopts)?
+            }
+        };
+        eprintln!(
+            "simulate: sampled replay of {trace:?} — {} phases, {} of {} rows \
+             ({:.1}% coverage), workers={workers}, chunk={}, warmup={}...",
+            plan.phases.len(),
+            plan.simulated_rows(),
+            plan.total_rows,
+            plan.coverage() * 100.0,
+            opts.chunk,
+            opts.warmup
+        );
+        let out = engine::simulate_sampled(&model, &trace, &plan, workers, opts)?;
+        print_prediction(&plan.name, &out.result);
+        println!("sampled rows       : {} (+{} warm-up)", out.simulated_rows, out.warmup_rows);
+        println!(
+            "sampled fraction   : {:.1}%",
+            out.simulated_rows as f64 / out.total_rows.max(1) as f64 * 100.0
+        );
+        return Ok(());
+    }
 
     if let Some(trace) = trace_path {
         // Replay a recorded trace: format negotiated by magic sniffing,

@@ -36,8 +36,12 @@ use crate::coordinator::pipeline::{
 };
 use crate::features::FeatureExtractor;
 use crate::runtime::{ArtifactMeta, ModelKind, ModelOutputs, Session};
+use crate::sampling::{PhasePlan, SamplingPlan};
 use crate::stats::{Metrics, PhaseSeries};
-use crate::trace::{ChunkBuf, ChunkPrefetcher, FuncRecord, TraceColumns, CTX_WIDTH};
+use crate::trace::{
+    open_trace_source, trace_header, ChunkBuf, ChunkPrefetcher, FuncRecord, TraceColumns,
+    TraceSource, CTX_WIDTH,
+};
 use crate::util::fault::{panic_message, relock};
 use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::VecDeque;
@@ -624,6 +628,43 @@ impl PredAccum {
     /// metrics are identical to [`PredAccum::merge`].
     pub fn merge_from(&mut self, other: &PredAccum) {
         self.fold(other);
+        self.ordinal = self.ordinal.max(other.ordinal);
+    }
+
+    /// A copy with every additive statistic scaled by `w` — the
+    /// phase-sampling expansion of one representative slice to the
+    /// member rows it stands for. The `Σ` fields scale linearly; the
+    /// tail correction does not (`last_exec` is one window's latency,
+    /// not a sum), so it and its ordinal pass through unscaled.
+    /// `instructions` rounds to the nearest integer, which recovers
+    /// the exact member-row count for any `member_rows / rows` plan
+    /// weight at trace scales. `w = 1.0` is a bit-exact identity
+    /// (IEEE multiplication by 1.0 changes no finite value).
+    pub fn scaled(&self, w: f64) -> PredAccum {
+        PredAccum {
+            instructions: (self.instructions as f64 * w).round() as u64,
+            fetch_cycles: self.fetch_cycles * w,
+            last_exec: self.last_exec,
+            last_exec_at: self.last_exec_at,
+            mispredicts: self.mispredicts * w,
+            l1d_misses: self.l1d_misses * w,
+            l1i_misses: self.l1i_misses * w,
+            tlb_misses: self.tlb_misses * w,
+            phase: None,
+            ordinal: self.ordinal,
+        }
+    }
+
+    /// Weighted order-independent merge: fold `other` scaled by `w`
+    /// (see [`PredAccum::scaled`]), with [`PredAccum::merge_from`]'s
+    /// cursor handling. This is the phase-sampling recombination —
+    /// each representative slice's accumulator merges at its phase
+    /// weight, reconstructing whole-trace metrics — and, like the
+    /// unweighted merges, any fold order over a fixed set of
+    /// (accumulator, weight) pairs produces the same metrics. With
+    /// `w = 1.0` it is exactly [`PredAccum::merge_from`].
+    pub fn merge_weighted(&mut self, other: &PredAccum, w: f64) {
+        self.fold(&other.scaled(w));
         self.ordinal = self.ordinal.max(other.ordinal);
     }
 
@@ -1832,6 +1873,498 @@ fn chunked_worker_pipelined(
     Ok(WorkerOut { accum, batches, stats: Some(stats) })
 }
 
+// ---------------------------------------------------------------------
+// Sampled simulation (phase-sampling replay)
+// ---------------------------------------------------------------------
+
+/// Result of a sampled run: the whole-trace estimate plus the row
+/// accounting behind it.
+#[derive(Debug)]
+pub struct SampledOutcome {
+    /// Whole-trace metrics reconstructed by weighted merge.
+    pub result: SimResult,
+    /// Representative rows actually absorbed.
+    pub simulated_rows: u64,
+    /// Warm-up rows re-run with discarded predictions.
+    pub warmup_rows: u64,
+    /// Rows of the full trace the estimate stands for.
+    pub total_rows: u64,
+}
+
+/// One phase's absorbed row range within a run, tagged with its plan
+/// slot so outputs route to the right accumulator.
+struct PhaseSpan {
+    start: u64,
+    end: u64,
+    slot: usize,
+}
+
+/// A maximal group of contiguous phases, streamed as one shard: the
+/// extractor/window state rolls across the internal phase boundaries
+/// (no cold restart between adjacent representatives), and only the
+/// run's leading `warm` rows are re-run with discarded predictions.
+struct RunDesc {
+    /// First absorbed row.
+    start: u64,
+    /// One past the last absorbed row.
+    end: u64,
+    /// Warm-up rows re-run before `start` (clamped at trace start).
+    warm: u64,
+    /// The phases tiling `[start, end)`, in row order.
+    spans: Vec<PhaseSpan>,
+}
+
+impl RunDesc {
+    /// Plan slot owning `row`; requires `start <= row < end`.
+    fn slot_of(&self, row: u64) -> usize {
+        let k = self.spans.partition_point(|s| s.end <= row);
+        debug_assert!(k < self.spans.len() && self.spans[k].start <= row);
+        self.spans[k].slot
+    }
+}
+
+/// Coalesce a plan's (sorted, disjoint) phases into runs. An exhaustive
+/// weight-1 plan collapses to a single run over the whole trace with no
+/// warm-up — exactly the [`simulate_chunked`] stream, which is what
+/// makes that configuration the bit-identity oracle.
+fn build_runs(phases: &[PhasePlan], warmup: usize) -> Vec<RunDesc> {
+    let mut runs: Vec<RunDesc> = Vec::new();
+    for (slot, p) in phases.iter().enumerate() {
+        let span = PhaseSpan { start: p.start_row, end: p.end_row(), slot };
+        match runs.last_mut() {
+            Some(run) if run.end == span.start => {
+                run.end = span.end;
+                run.spans.push(span);
+            }
+            _ => runs.push(RunDesc {
+                start: span.start,
+                end: span.end,
+                warm: (warmup as u64).min(span.start),
+                spans: vec![span],
+            }),
+        }
+    }
+    runs
+}
+
+/// Route one batch's outputs to the per-phase accumulators: output row
+/// `i` is global trace row `first_row + i`; rows before the run's
+/// absorbed region are warm-up and are discarded. Shared verbatim by
+/// the serial and pipelined sampled paths so their absorb order cannot
+/// drift.
+fn route_sampled_outputs(
+    out: &ModelOutputs,
+    kind: ModelKind,
+    first_row: u64,
+    run: &RunDesc,
+    accums: &mut [PredAccum],
+) {
+    for i in 0..out.fetch.len() {
+        let row = first_row + i as u64;
+        if row < run.start {
+            continue;
+        }
+        accums[run.slot_of(row)].absorb_one(out, kind, i);
+    }
+}
+
+/// Routing tag for sampled batches: the global trace row of the batch's
+/// first staged window and the run it belongs to (batches never span
+/// runs — each run ends with its own partial flush).
+struct SampledTag {
+    first_row: u64,
+    run: usize,
+}
+
+/// Pipelined worker for sampled replay: the same double-buffered
+/// stage/execute as [`PipelinedWorker`], but completions route per
+/// *row* into per-phase accumulators instead of folding whole batches
+/// into one shard accumulator. Tao-only (sampled replay reads trace
+/// files, which carry no SimNet context channel), so no ctx staging.
+struct SampledWorker<'r> {
+    pipe: ExecPipeline<SampledTag>,
+    scratch: ShardScratch,
+    kind: ModelKind,
+    runs: &'r [RunDesc],
+    accums: Vec<PredAccum>,
+    batches: u64,
+    /// Run currently being staged.
+    cur_run: usize,
+    /// Global trace row of the next staged-but-unsubmitted row.
+    next_row: u64,
+}
+
+impl<'r> SampledWorker<'r> {
+    fn new(
+        artifact: &Path,
+        meta: &ArtifactMeta,
+        runs: &'r [RunDesc],
+        accums: Vec<PredAccum>,
+    ) -> SampledWorker<'r> {
+        let path = artifact.to_path_buf();
+        let pipe = spawn_exec_pipeline(
+            move || Session::load(&path).with_context(|| format!("load {path:?}")),
+            meta.kind,
+            meta.batch,
+            meta.context,
+            meta.feature_dim,
+            2,
+        );
+        SampledWorker {
+            pipe,
+            scratch: ShardScratch::new(meta),
+            kind: meta.kind,
+            runs,
+            accums,
+            batches: 0,
+            cur_run: 0,
+            next_row: 0,
+        }
+    }
+
+    /// Open a run: fresh extractor/window state, staging cursor at the
+    /// run's warm-up start.
+    fn begin_run(&mut self, run: usize) {
+        debug_assert_eq!(self.scratch.batcher.staged, 0, "run began mid-batch");
+        self.scratch.reset();
+        self.cur_run = run;
+        self.next_row = self.runs[run].start - self.runs[run].warm;
+    }
+
+    fn absorb_msg(
+        &mut self,
+        msg: PipeMsg<ExecBuffers, ExecBatch<SampledTag>, ModelOutputs>,
+    ) -> Result<ExecBuffers> {
+        let (buf, payload, result) = match msg {
+            PipeMsg::Done { buf, payload, result } => (buf, payload, result),
+            PipeMsg::InitFailed { msg } => bail!("sampled executor: {msg}"),
+        };
+        let out = result.map_err(|e| anyhow!("sampled executor: {e}"))?;
+        route_sampled_outputs(
+            &out,
+            self.kind,
+            payload.tag.first_row,
+            &self.runs[payload.tag.run],
+            &mut self.accums,
+        );
+        Ok(buf)
+    }
+
+    fn acquire(&mut self) -> Result<ExecBuffers> {
+        if let Some(buf) = self.pipe.take_buf() {
+            return Ok(buf);
+        }
+        let msg = self.pipe.recv()?;
+        self.absorb_msg(msg)
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        let staged = self.scratch.batcher.staged;
+        if staged == 0 {
+            return Ok(());
+        }
+        let mut bufs = self.acquire()?;
+        self.scratch.batcher.materialize(&mut bufs.ops, &mut bufs.feats);
+        self.scratch.batcher.clear_staged();
+        let tag = SampledTag { first_row: self.next_row, run: self.cur_run };
+        self.next_row += staged as u64;
+        self.pipe.submit(bufs, ExecBatch { valid: staged, tag })?;
+        self.batches += 1;
+        Ok(())
+    }
+
+    fn stage(&mut self, rec: &FuncRecord) -> Result<()> {
+        let row = self.scratch.batcher.begin_row();
+        let opcode = self.scratch.fx.extract_into(rec, row);
+        let full = self.scratch.batcher.commit_row(opcode);
+        if full {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    fn finish(mut self) -> Result<(Vec<PredAccum>, u64, PipelineStats)> {
+        self.flush()?;
+        while self.pipe.in_flight() > 0 {
+            let msg = self.pipe.recv()?;
+            let buf = self.absorb_msg(msg)?;
+            self.pipe.release(buf);
+        }
+        let stats = self.pipe.stats();
+        self.pipe.shutdown();
+        Ok((self.accums, self.batches, stats))
+    }
+}
+
+/// Pull one run's rows (warm-up included) from a seekable trace source
+/// and hand each record to `stage`.
+fn stream_run(
+    source: &mut dyn TraceSource,
+    run: &RunDesc,
+    chunk_grain: usize,
+    buf: &mut ChunkBuf,
+    mut stage: impl FnMut(&FuncRecord) -> Result<()>,
+) -> Result<()> {
+    source.seek_to_row(run.start - run.warm)?;
+    let mut remaining = run.end - (run.start - run.warm);
+    while remaining > 0 {
+        let want = remaining.min(chunk_grain as u64) as usize;
+        let n = source.next_chunk(buf, want)?;
+        ensure!(
+            n > 0,
+            "trace ended inside sampled run rows [{}, {})",
+            run.start,
+            run.end
+        );
+        for i in 0..n {
+            stage(&buf.cols.record(i))?;
+        }
+        remaining -= n as u64;
+    }
+    Ok(())
+}
+
+/// Per-worker output of a sampled run: the per-phase accumulators (only
+/// the slots of this worker's runs are touched), batch count, and
+/// occupancy stats for pipelined workers.
+type SampledWorkerOut = (Vec<PredAccum>, u64, Option<PipelineStats>);
+
+/// One serial sampled worker (the oracle path): stage→execute on a
+/// single thread, routing each output row to its phase accumulator.
+fn sampled_worker_serial(
+    artifact: &Path,
+    trace: &Path,
+    runs: &[RunDesc],
+    mine: &[usize],
+    mut accums: Vec<PredAccum>,
+    chunk_grain: usize,
+    w: usize,
+) -> Result<SampledWorkerOut> {
+    let mut session =
+        Session::load(artifact).with_context(|| format!("worker {w}: load {artifact:?}"))?;
+    let kind = session.meta().kind;
+    let mut scratch = ShardScratch::new(session.meta());
+    let mut source =
+        open_trace_source(trace).with_context(|| format!("worker {w}: open {trace:?}"))?;
+    let mut batches = 0u64;
+    let mut buf = ChunkBuf::new();
+    for &r in mine {
+        let run = &runs[r];
+        scratch.reset();
+        let mut next_row = run.start - run.warm;
+        stream_run(source.as_mut(), run, chunk_grain, &mut buf, |rec| {
+            let row = scratch.batcher.begin_row();
+            let opcode = scratch.fx.extract_into(rec, row);
+            if scratch.batcher.commit_row(opcode) {
+                flush_sampled_serial(
+                    &mut session,
+                    &mut scratch,
+                    kind,
+                    &mut next_row,
+                    run,
+                    &mut accums,
+                    &mut batches,
+                )?;
+            }
+            Ok(())
+        })?;
+        flush_sampled_serial(
+            &mut session,
+            &mut scratch,
+            kind,
+            &mut next_row,
+            run,
+            &mut accums,
+            &mut batches,
+        )?;
+    }
+    Ok((accums, batches, None))
+}
+
+/// Serial twin of [`SampledWorker::flush`]: materialize, execute
+/// inline, route. `next_row` is the global trace row of the first
+/// staged row and advances past the flushed batch.
+fn flush_sampled_serial(
+    session: &mut Session,
+    scratch: &mut ShardScratch,
+    kind: ModelKind,
+    next_row: &mut u64,
+    run: &RunDesc,
+    accums: &mut [PredAccum],
+    batches: &mut u64,
+) -> Result<()> {
+    let staged = scratch.batcher.staged;
+    if staged == 0 {
+        return Ok(());
+    }
+    {
+        let (ops_buf, feat_buf) = session.buffers();
+        scratch.batcher.materialize(ops_buf, feat_buf);
+    }
+    let out = session.run(staged)?;
+    route_sampled_outputs(&out, kind, *next_row, run, accums);
+    *next_row += staged as u64;
+    scratch.batcher.clear_staged();
+    *batches += 1;
+    Ok(())
+}
+
+/// One pipelined sampled worker: same runs, same flush grid, staging
+/// overlapped with execution through the [`ExecPipeline`].
+fn sampled_worker_pipelined(
+    artifact: &Path,
+    meta: &ArtifactMeta,
+    trace: &Path,
+    runs: &[RunDesc],
+    mine: &[usize],
+    accums: Vec<PredAccum>,
+    chunk_grain: usize,
+    w: usize,
+) -> Result<SampledWorkerOut> {
+    let mut source =
+        open_trace_source(trace).with_context(|| format!("worker {w}: open {trace:?}"))?;
+    let mut worker = SampledWorker::new(artifact, meta, runs, accums);
+    let mut buf = ChunkBuf::new();
+    for &r in mine {
+        worker.begin_run(r);
+        stream_run(source.as_mut(), &runs[r], chunk_grain, &mut buf, |rec| {
+            worker.stage(rec)
+        })?;
+        worker.flush()?;
+    }
+    let (accums, batches, stats) = worker.finish()?;
+    Ok((accums, batches, Some(stats)))
+}
+
+/// Simulate only a plan's representative slices and weight-merge their
+/// accumulators into whole-trace metrics.
+///
+/// Contiguous phases coalesce into runs ([`build_runs`]); each run
+/// seeks to its warm-up start ([`TraceSource::seek_to_row`] — offset
+/// math for v1, the chunk-offset index footer or a header scan for
+/// v2), re-runs `opts.warmup` preceding rows with discarded
+/// predictions, and streams its phases with state rolling across the
+/// internal boundaries. Runs are strided across up to `workers`
+/// pipelined workers, each with its own trace handle and PJRT session;
+/// run staging is self-contained (reset at run start, flush at run
+/// end), so the per-phase accumulators are identical whatever the
+/// worker assignment — sampled results are deterministic and
+/// independent of `workers`, and the exhaustive weight-1 plan
+/// reproduces [`simulate_chunked`] bit-for-bit (the oracle test).
+///
+/// Tao artifacts only: trace files carry no per-instruction context
+/// channel, so a SimNet artifact cannot be replayed from a bare trace.
+pub fn simulate_sampled(
+    artifact: &Path,
+    trace: &Path,
+    plan: &SamplingPlan,
+    workers: usize,
+    opts: ParallelOptions,
+) -> Result<SampledOutcome> {
+    ensure!(workers >= 1, "need at least one worker");
+    ensure!(opts.chunk >= 1, "chunk must be positive");
+    ensure!(!plan.phases.is_empty(), "sampling plan has no phases");
+    let meta = ArtifactMeta::load(artifact).with_context(|| format!("load {artifact:?}"))?;
+    ensure!(
+        meta.kind == ModelKind::Tao,
+        "sampled replay requires a Tao artifact: trace files carry no SimNet context metrics"
+    );
+    let (_, name, records) = trace_header(trace)?;
+    plan.check_matches(&name, records)?;
+    let runs = build_runs(&plan.phases, opts.warmup);
+    let simulated_rows = plan.simulated_rows();
+    let warmup_rows: u64 = runs.iter().map(|r| r.warm).sum();
+    let accums: Vec<PredAccum> =
+        plan.phases.iter().map(|p| PredAccum::at_base(p.start_row)).collect();
+    let start_wall = Instant::now();
+    let nworkers = workers.min(runs.len());
+    let (accums, batches, stats) = if nworkers == 1 || (simulated_rows as usize) < nworkers * 1024
+    {
+        let all: Vec<usize> = (0..runs.len()).collect();
+        if opts.pipeline {
+            sampled_worker_pipelined(artifact, &meta, trace, &runs, &all, accums, opts.chunk, 0)?
+        } else {
+            sampled_worker_serial(artifact, trace, &runs, &all, accums, opts.chunk, 0)?
+        }
+    } else {
+        let results: Vec<Result<SampledWorkerOut>> = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for w in 0..nworkers {
+                let mine: Vec<usize> = (w..runs.len()).step_by(nworkers).collect();
+                let accums = accums.clone();
+                let runs = &runs;
+                let meta = &meta;
+                handles.push(scope.spawn(move || -> Result<SampledWorkerOut> {
+                    catch_unwind(AssertUnwindSafe(|| {
+                        if opts.pipeline {
+                            sampled_worker_pipelined(
+                                artifact, meta, trace, runs, &mine, accums, opts.chunk, w,
+                            )
+                        } else {
+                            sampled_worker_serial(
+                                artifact, trace, runs, &mine, accums, opts.chunk, w,
+                            )
+                        }
+                    }))
+                    .unwrap_or_else(|p| {
+                        Err(anyhow!("worker {w} panicked: {}", panic_message(p.as_ref())))
+                    })
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|p| {
+                        Err(anyhow!("worker panicked: {}", panic_message(p.as_ref())))
+                    })
+                })
+                .collect()
+        });
+        let mut outs = Vec::with_capacity(nworkers);
+        for r in results {
+            outs.push(r?);
+        }
+        // Stitch: each phase's accumulator comes from the worker whose
+        // stride owns its run; sum batches and occupancy across workers.
+        let mut slot_owner = vec![0usize; plan.phases.len()];
+        for (r, run) in runs.iter().enumerate() {
+            for s in &run.spans {
+                slot_owner[s.slot] = r % nworkers;
+            }
+        }
+        let mut merged: Vec<PredAccum> =
+            plan.phases.iter().map(|p| PredAccum::at_base(p.start_row)).collect();
+        for (slot, &own) in slot_owner.iter().enumerate() {
+            merged[slot] = outs[own].0[slot].clone();
+        }
+        let mut batches = 0u64;
+        let mut stats: Option<PipelineStats> = None;
+        for (_, b, s) in &outs {
+            batches += b;
+            if let Some(s) = s {
+                stats.get_or_insert_with(PipelineStats::default).absorb(s);
+            }
+        }
+        (merged, batches, stats)
+    };
+    let mut total = PredAccum::default();
+    for (slot, phase) in plan.phases.iter().enumerate() {
+        total.merge_weighted(&accums[slot], phase.weight);
+    }
+    Ok(SampledOutcome {
+        result: SimResult {
+            metrics: total.metrics(),
+            elapsed: start_wall.elapsed(),
+            batches,
+            phase: None,
+            pipeline: stats,
+        },
+        simulated_rows,
+        warmup_rows,
+        total_rows: plan.total_rows,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -2707,5 +3240,213 @@ mod tests {
             ParallelOptions { chunk: 1_024, warmup: 0, pipeline: true },
         );
         assert!(r.is_err());
+    }
+
+    // --- phase-sampling replay ---
+
+    fn sampled_shard(base: u64, n: u64) -> PredAccum {
+        let mut a = PredAccum::at_base(base);
+        let out = ModelOutputs {
+            fetch: (0..n).map(|i| (i % 7) as f32 + 1.0).collect(),
+            exec: (0..n).map(|i| (i % 5) as f32 + 2.0).collect(),
+            branch: (0..n).map(|i| (i % 2) as f32).collect(),
+            access: (0..n).flat_map(|i| [0.0, 0.0, (i % 3) as f32, 1.0]).collect(),
+            icache: vec![0.0; n as usize],
+            tlb: vec![1.0; n as usize],
+        };
+        a.absorb(&out, ModelKind::Tao);
+        a
+    }
+
+    #[test]
+    fn weighted_merge_is_order_independent_and_weight1_is_merge_from() {
+        // Integer-valued doubles × integer weights: every fold order is
+        // exactly equal, so this checks the weighted-merge logic (sum
+        // scaling, unscaled tail, tail selection) under all orders.
+        let shards = [
+            sampled_shard(0, 16),
+            sampled_shard(16, 16),
+            sampled_shard(32, 16),
+            sampled_shard(48, 7),
+        ];
+        let weights = [3.0, 1.0, 2.0, 5.0];
+        let fold = |order: &[usize]| {
+            let mut acc = PredAccum::default();
+            for &i in order {
+                acc.merge_weighted(&shards[i], weights[i]);
+            }
+            acc.metrics()
+        };
+        let reference = fold(&[0, 1, 2, 3]);
+        for order in [[3, 2, 1, 0], [1, 3, 0, 2], [2, 0, 3, 1], [0, 2, 1, 3]] {
+            let m = fold(&order);
+            assert_eq!(m.instructions, reference.instructions, "fold order {order:?}");
+            assert_eq!(m.cycles, reference.cycles, "fold order {order:?}");
+            assert_eq!(m.mispredicts, reference.mispredicts);
+            assert_eq!(m.l1d_misses, reference.l1d_misses);
+            assert_eq!(m.tlb_misses, reference.tlb_misses);
+        }
+        // Weighted instruction expansion is exact.
+        assert_eq!(reference.instructions, 3 * 16 + 16 + 2 * 16 + 5 * 7);
+        // The tail correction is never scaled: cycles = Σ w·fetch plus
+        // the (unweighted) exec latency of the globally last window.
+        let weighted_fetch: f64 =
+            shards.iter().zip(weights).map(|(s, w)| s.fetch_cycles * w).sum();
+        assert_eq!(reference.cycles, weighted_fetch + shards[3].last_exec);
+        // Weight 1.0 everywhere is exactly merge_from.
+        let mut flat = PredAccum::default();
+        let mut w1 = PredAccum::default();
+        for s in &shards {
+            flat.merge_from(s);
+            w1.merge_weighted(s, 1.0);
+        }
+        assert_eq!(w1.metrics().cycles, flat.metrics().cycles);
+        assert_eq!(w1.metrics().instructions, flat.metrics().instructions);
+        assert_eq!(w1.metrics().mispredicts, flat.metrics().mispredicts);
+        // Ratio weights round back to the exact member-row count.
+        let s = sampled_shard(0, 7);
+        let sc = s.scaled(3_500.0 / 7.0);
+        assert_eq!(sc.instructions, 3_500);
+        assert_eq!(sc.last_exec, s.last_exec);
+        assert_eq!(sc.last_exec_at, s.last_exec_at);
+    }
+
+    fn write_trace_v2(tag: &str, name: &str, cols: &TraceColumns, chunk_rows: usize) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tao-engine-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(tag);
+        crate::trace::TraceWriteOptions::new(crate::trace::TraceFormat::V2)
+            .chunk_rows(chunk_rows)
+            .write(&path, name, cols)
+            .unwrap();
+        path
+    }
+
+    #[test]
+    fn sampled_exhaustive_weight1_matches_simulate_chunked_bit_exactly() {
+        // The exactness oracle: an exhaustive plan (every slice its own
+        // phase at weight 1) coalesces to a single warmup-free run over
+        // the whole trace — same stream, same flush grid, same absorb
+        // order as simulate_chunked, so the metrics are bit-identical.
+        let artifact = fake_artifact("sampled-oracle", 16, 8);
+        let p = crate::workloads::by_name("mcf").unwrap().build(5);
+        let cols = crate::functional::FunctionalSim::new(&p).run(6_000).to_columns();
+        let trace = write_trace_v2("sampled-oracle.trace", "mcf", &cols, 700);
+        let mut session = Session::load(&artifact).unwrap();
+        let mut src = crate::trace::open_trace_source(&trace).unwrap();
+        let full = simulate_chunked(&mut session, &mut src, 777, None).unwrap();
+        let plan = SamplingPlan::exhaustive("mcf", 6_000, 1_000);
+        for pipeline in [false, true] {
+            let out = simulate_sampled(
+                &artifact,
+                &trace,
+                &plan,
+                1,
+                ParallelOptions { chunk: 777, warmup: 512, pipeline },
+            )
+            .unwrap();
+            assert_eq!(out.result.metrics.instructions, full.metrics.instructions);
+            assert_eq!(out.result.metrics.cycles, full.metrics.cycles, "pipeline={pipeline}");
+            assert_eq!(out.result.metrics.mispredicts, full.metrics.mispredicts);
+            assert_eq!(out.result.metrics.l1d_misses, full.metrics.l1d_misses);
+            assert_eq!(out.result.metrics.l1i_misses, full.metrics.l1i_misses);
+            assert_eq!(out.result.metrics.tlb_misses, full.metrics.tlb_misses);
+            assert_eq!(out.result.batches, full.batches);
+            assert_eq!(out.simulated_rows, 6_000);
+            assert_eq!(out.warmup_rows, 0);
+            assert_eq!(out.total_rows, 6_000);
+        }
+    }
+
+    #[test]
+    fn sampled_replay_is_deterministic_across_worker_counts() {
+        let artifact = fake_artifact("sampled-par", 16, 8);
+        // Round-robin slices from four workloads: known phase structure.
+        let slices: Vec<TraceColumns> = ["dee", "mcf", "xal", "rom"]
+            .iter()
+            .map(|b| {
+                let p = crate::workloads::by_name(b).unwrap().build(9);
+                crate::functional::FunctionalSim::new(&p).run(1_500).to_columns()
+            })
+            .collect();
+        let mut cols = TraceColumns::new();
+        for i in 0..16 {
+            let s = &slices[i % 4];
+            cols.extend_from(s, 0, s.len());
+        }
+        let trace = write_trace_v2("sampled-par.trace", "mix4", &cols, 1_024);
+        let plan = crate::sampling::plan_trace(
+            &trace,
+            &crate::sampling::SamplingOptions { slice_rows: 1_500, max_phases: 4, seed: 7 },
+        )
+        .unwrap();
+        assert!(!plan.phases.is_empty() && plan.phases.len() <= 4);
+        assert_eq!(plan.total_rows, 24_000);
+        let opts =
+            |pipeline| ParallelOptions { chunk: 640, warmup: 256, pipeline };
+        // Run staging is self-contained (reset at run start, flush at
+        // run end), so serial / pipelined / parallel all produce the
+        // same per-phase accumulators — exact equality, any workers.
+        let serial = simulate_sampled(&artifact, &trace, &plan, 1, opts(false)).unwrap();
+        let piped = simulate_sampled(&artifact, &trace, &plan, 1, opts(true)).unwrap();
+        let par = simulate_sampled(&artifact, &trace, &plan, 3, opts(true)).unwrap();
+        for (tag, out) in [("piped", &piped), ("par", &par)] {
+            assert_eq!(out.result.metrics.instructions, serial.result.metrics.instructions);
+            assert_eq!(out.result.metrics.cycles, serial.result.metrics.cycles, "{tag}");
+            assert_eq!(out.result.metrics.mispredicts, serial.result.metrics.mispredicts);
+            assert_eq!(out.result.batches, serial.result.batches, "{tag}");
+        }
+        // Weighted expansion accounts every member row exactly.
+        assert_eq!(serial.result.metrics.instructions, 24_000);
+        assert_eq!(serial.simulated_rows, plan.simulated_rows());
+        assert!(serial.simulated_rows <= 4 * 1_500);
+        // A plan for a different trace is refused.
+        let other = SamplingPlan::exhaustive("other", 24_000, 1_500);
+        assert!(simulate_sampled(&artifact, &trace, &other, 1, opts(true)).is_err());
+    }
+
+    #[test]
+    fn sampled_cpi_stays_within_guardrail_on_mixed_suite() {
+        // Accuracy guardrail on the mixed scenario suite: every Table-2
+        // workload contributes slices, and the sampled CPI must land
+        // within the declared relative-error bound of the full run.
+        // benches/coordinator.rs measures and publishes the same bound
+        // (`sampled_error_bound_pct`) at bench scale.
+        const BOUND: f64 = 0.15;
+        let artifact = fake_artifact("sampled-acc", 16, 8);
+        let mut cols = TraceColumns::new();
+        for w in crate::workloads::suite() {
+            let p = w.build(3);
+            let t = crate::functional::FunctionalSim::new(&p).run(6_000).to_columns();
+            cols.extend_from(&t, 0, t.len());
+        }
+        let n = cols.len() as u64;
+        assert_eq!(n, 48_000);
+        let trace = write_trace_v2("sampled-acc.trace", "mix", &cols, 1_024);
+        let mut session = Session::load(&artifact).unwrap();
+        let mut src = crate::trace::open_trace_source(&trace).unwrap();
+        let full = simulate_chunked(&mut session, &mut src, 4_096, None).unwrap();
+        let plan = crate::sampling::plan_trace(
+            &trace,
+            &crate::sampling::SamplingOptions { slice_rows: 2_000, max_phases: 8, seed: 42 },
+        )
+        .unwrap();
+        assert!(plan.coverage() <= 8.0 * 2_000.0 / 48_000.0 + 1e-9);
+        let out = simulate_sampled(
+            &artifact,
+            &trace,
+            &plan,
+            2,
+            ParallelOptions { chunk: 2_048, warmup: 1_024, pipeline: true },
+        )
+        .unwrap();
+        assert_eq!(out.result.metrics.instructions, n);
+        let full_cpi = full.metrics.cpi();
+        let cpi = out.result.metrics.cpi();
+        let err = (cpi - full_cpi).abs() / full_cpi;
+        assert!(
+            err <= BOUND,
+            "sampled CPI {cpi:.4} vs full {full_cpi:.4}: relative error {err:.4} > {BOUND}"
+        );
     }
 }

@@ -26,6 +26,7 @@ pub mod features;
 pub mod npy;
 pub mod reports;
 pub mod runtime;
+pub mod sampling;
 pub mod serve;
 pub mod stats;
 pub mod functional;

@@ -1,0 +1,927 @@
+//! SimPoint-style phase sampling: simulate only representative trace
+//! slices, weight-merge their metrics into whole-trace results.
+//!
+//! Long traces are mostly phase repetition. This module computes a
+//! cheap BBV-style signature per fixed-size slice of the functional
+//! trace (opcode histogram + branch/memory-stride features — static
+//! properties only, so signatures and plans are microarchitecture
+//! *agnostic* like the trace itself), clusters the signatures with a
+//! deterministic seeded k-means, and picks one representative slice per
+//! phase plus a weight (phase rows / representative rows). The result
+//! is a [`SamplingPlan`]: a small sidecar file, computed once per
+//! trace, reusable across every microarchitecture config simulated
+//! against that trace.
+//!
+//! Replay-side machinery lives where the replaying happens:
+//! `coordinator::engine::simulate_sampled` seeks to each
+//! representative (warming up with the true preceding rows) and
+//! weight-merges the per-phase `PredAccum`s; `tao serve` streams
+//! representatives through [`SampledTraceSource`] so its prediction
+//! cache keys per representative slice.
+//!
+//! Plan sidecar layout (all integers little-endian):
+//!
+//! ```text
+//! magic "TAOPLAN1"
+//! name         u64 length + bytes   (trace name, must match the trace)
+//! total_rows   u64
+//! slice_rows   u64
+//! seed         u64
+//! phase_count  u64
+//! per phase:   rep_slice u64 | start_row u64 | rows u64 |
+//!              member_rows u64 | weight f64-bits |
+//!              entropy f32-bits | branch_ratio f32-bits
+//! crc32        u32 over everything above
+//! ```
+
+use crate::isa::Opcode;
+use crate::trace::{ChunkBuf, ChunkSource, TraceSource};
+use crate::util::hash::crc32;
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Context, Result};
+use std::path::Path;
+
+/// Magic opening a sampling-plan sidecar file.
+pub const MAGIC_PLAN: &[u8; 8] = b"TAOPLAN1";
+
+/// log2-ish memory-stride histogram buckets in a signature.
+pub const SIG_STRIDE_BUCKETS: usize = 8;
+
+/// Signature vector width: normalized opcode histogram + branch /
+/// taken / memory ratios + normalized stride histogram.
+pub const SIG_DIM: usize = Opcode::COUNT + 3 + SIG_STRIDE_BUCKETS;
+
+/// Iteration cap for the k-means loop (it usually converges far
+/// earlier; the cap bounds worst-case plan time).
+const MAX_KMEANS_ITERS: usize = 25;
+
+// ---------------------------------------------------------------------
+// Slice signatures
+// ---------------------------------------------------------------------
+
+/// The BBV-style signature of one fixed-size trace slice.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SliceSignature {
+    /// Slice ordinal (slice `i` covers rows `[i*slice_rows, ...)`).
+    pub slice: usize,
+    /// First trace row of the slice.
+    pub start_row: u64,
+    /// Rows in the slice (== `slice_rows` except for the final slice).
+    pub rows: u64,
+    /// The [`SIG_DIM`]-wide feature vector k-means clusters on.
+    pub vec: Vec<f32>,
+    /// Opcode-histogram entropy in bits (0 = single opcode).
+    pub entropy: f32,
+    /// Branch instructions / slice rows.
+    pub branch_ratio: f32,
+}
+
+/// Streaming accumulator for one slice's signature.
+struct SigAccum {
+    opcode_counts: Vec<u64>,
+    branches: u64,
+    taken: u64,
+    mems: u64,
+    strides: [u64; SIG_STRIDE_BUCKETS],
+    last_mem_addr: Option<u64>,
+    rows: u64,
+}
+
+/// Bucket a memory stride (absolute byte distance between consecutive
+/// memory accesses) into a coarse log2 range: 0 = repeat address,
+/// then same-line through page-local up to effectively-random.
+fn stride_bucket(stride: u64) -> usize {
+    if stride == 0 {
+        return 0;
+    }
+    let bits = 64 - stride.leading_zeros() as usize;
+    match bits {
+        1..=3 => 1,   // < 8 B
+        4..=6 => 2,   // < 64 B: cache-line local
+        7..=9 => 3,   // < 512 B
+        10..=12 => 4, // < 4 KiB: page local
+        13..=16 => 5, // < 64 KiB
+        17..=24 => 6, // < 16 MiB
+        _ => 7,
+    }
+}
+
+impl SigAccum {
+    fn new() -> SigAccum {
+        SigAccum {
+            opcode_counts: vec![0u64; Opcode::COUNT],
+            branches: 0,
+            taken: 0,
+            mems: 0,
+            strides: [0u64; SIG_STRIDE_BUCKETS],
+            last_mem_addr: None,
+            rows: 0,
+        }
+    }
+
+    fn absorb(&mut self, buf: &ChunkBuf, lo: usize, hi: usize) {
+        let cols = &buf.cols;
+        for i in lo..hi {
+            let op = Opcode::from_index(cols.opcode[i] as usize);
+            self.opcode_counts[cols.opcode[i] as usize] += 1;
+            if op.is_branch() {
+                self.branches += 1;
+                self.taken += cols.taken[i] as u64;
+            }
+            if op.is_mem() {
+                self.mems += 1;
+                let addr = cols.mem_addr[i];
+                if let Some(prev) = self.last_mem_addr {
+                    self.strides[stride_bucket(addr.abs_diff(prev))] += 1;
+                }
+                self.last_mem_addr = Some(addr);
+            }
+        }
+        self.rows += (hi - lo) as u64;
+    }
+
+    fn finish(self, slice: usize, start_row: u64) -> SliceSignature {
+        let rows = self.rows.max(1) as f32;
+        let mut vec = Vec::with_capacity(SIG_DIM);
+        let mut entropy = 0.0f32;
+        for &c in &self.opcode_counts {
+            let p = c as f32 / rows;
+            vec.push(p);
+            if p > 0.0 {
+                entropy -= p * p.log2();
+            }
+        }
+        let branch_ratio = self.branches as f32 / rows;
+        vec.push(branch_ratio);
+        vec.push(if self.branches > 0 {
+            self.taken as f32 / self.branches as f32
+        } else {
+            0.0
+        });
+        vec.push(self.mems as f32 / rows);
+        let stride_total = self.strides.iter().sum::<u64>().max(1) as f32;
+        for &s in &self.strides {
+            vec.push(s as f32 / stride_total);
+        }
+        debug_assert_eq!(vec.len(), SIG_DIM);
+        SliceSignature {
+            slice,
+            start_row,
+            rows: self.rows,
+            vec,
+            entropy,
+            branch_ratio,
+        }
+    }
+}
+
+/// Compute per-slice signatures over any chunk stream in one cheap
+/// forward pass — no model, no feature extraction, O(slice) memory.
+/// The final slice may be short; every row lands in exactly one slice.
+pub fn compute_signatures<S: ChunkSource + ?Sized>(
+    source: &mut S,
+    slice_rows: u64,
+) -> Result<Vec<SliceSignature>> {
+    ensure!(slice_rows >= 1, "slice_rows must be >= 1");
+    let grain = slice_rows.min(1 << 16) as usize;
+    let mut sigs = Vec::new();
+    let mut accum = SigAccum::new();
+    let mut buf = ChunkBuf::new();
+    let mut row = 0u64;
+    loop {
+        let in_slice = slice_rows - accum.rows;
+        let n = source.next_chunk(&mut buf, grain.min(in_slice as usize))?;
+        if n == 0 {
+            break;
+        }
+        accum.absorb(&buf, 0, n);
+        row += n as u64;
+        if accum.rows == slice_rows {
+            let done = std::mem::replace(&mut accum, SigAccum::new());
+            sigs.push(done.finish(sigs.len(), row - slice_rows));
+        }
+    }
+    if accum.rows > 0 {
+        let tail_rows = accum.rows;
+        sigs.push(accum.finish(sigs.len(), row - tail_rows));
+    }
+    Ok(sigs)
+}
+
+// ---------------------------------------------------------------------
+// Deterministic k-means
+// ---------------------------------------------------------------------
+
+fn dist2(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// Seeded k-means++ then Lloyd iterations, capped at
+/// [`MAX_KMEANS_ITERS`]. Fully deterministic for a given (signatures,
+/// k, seed): ties in assignment go to the lowest centroid index, and a
+/// cluster that empties keeps its old centroid (it is skipped at plan
+/// extraction). Returns the per-slice cluster assignment.
+fn kmeans(sigs: &[SliceSignature], k: usize, seed: u64) -> Vec<usize> {
+    let n = sigs.len();
+    let mut rng = Rng::new(seed);
+    let mut centroids: Vec<Vec<f32>> = Vec::with_capacity(k);
+    centroids.push(sigs[rng.index(n)].vec.clone());
+    let mut best = vec![f64::INFINITY; n];
+    while centroids.len() < k {
+        let last = centroids.last().unwrap();
+        for (b, s) in best.iter_mut().zip(sigs) {
+            *b = b.min(dist2(&s.vec, last));
+        }
+        let total: f64 = best.iter().sum();
+        let next = if total <= 0.0 {
+            // Every point coincides with a centroid already; further
+            // seeds are arbitrary but must stay deterministic.
+            rng.index(n)
+        } else {
+            let mut target = rng.gen_f64() * total;
+            let mut pick = n - 1;
+            for (i, &d) in best.iter().enumerate() {
+                if target < d {
+                    pick = i;
+                    break;
+                }
+                target -= d;
+            }
+            pick
+        };
+        centroids.push(sigs[next].vec.clone());
+    }
+
+    let mut assign = vec![usize::MAX; n];
+    for _ in 0..MAX_KMEANS_ITERS {
+        let mut changed = false;
+        for (i, s) in sigs.iter().enumerate() {
+            let mut best_c = 0usize;
+            let mut best_d = f64::INFINITY;
+            for (c, cen) in centroids.iter().enumerate() {
+                let d = dist2(&s.vec, cen);
+                if d < best_d {
+                    best_d = d;
+                    best_c = c;
+                }
+            }
+            if assign[i] != best_c {
+                assign[i] = best_c;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+        let mut sums = vec![[0f64; SIG_DIM]; k];
+        let mut counts = vec![0usize; k];
+        for (i, s) in sigs.iter().enumerate() {
+            counts[assign[i]] += 1;
+            for (acc, &v) in sums[assign[i]].iter_mut().zip(&s.vec) {
+                *acc += v as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                centroids[c] = sums[c].iter().map(|&v| (v / counts[c] as f64) as f32).collect();
+            }
+        }
+    }
+    assign
+}
+
+// ---------------------------------------------------------------------
+// The sampling plan
+// ---------------------------------------------------------------------
+
+/// One phase: a representative slice plus the weight scaling its
+/// metrics up to everything it stands for.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhasePlan {
+    /// Ordinal of the representative slice.
+    pub rep_slice: u64,
+    /// First trace row of the representative slice.
+    pub start_row: u64,
+    /// Rows in the representative slice.
+    pub rows: u64,
+    /// Total rows across every member slice of the phase.
+    pub member_rows: u64,
+    /// `member_rows / rows`: the factor the representative's
+    /// `PredAccum` is scaled by at merge time.
+    pub weight: f64,
+    /// Representative's opcode entropy (diagnostics).
+    pub entropy: f32,
+    /// Representative's branch ratio (diagnostics).
+    pub branch_ratio: f32,
+}
+
+impl PhasePlan {
+    /// One-past-the-last trace row of the representative slice.
+    pub fn end_row(&self) -> u64 {
+        self.start_row + self.rows
+    }
+}
+
+/// Knobs for plan construction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingOptions {
+    /// Rows per signature slice.
+    pub slice_rows: u64,
+    /// Cluster-count cap (actual phases may be fewer).
+    pub max_phases: usize,
+    /// k-means seed.
+    pub seed: u64,
+}
+
+impl Default for SamplingOptions {
+    fn default() -> SamplingOptions {
+        SamplingOptions {
+            slice_rows: 50_000,
+            max_phases: 5,
+            seed: 42,
+        }
+    }
+}
+
+/// A microarchitecture-agnostic sampling plan for one trace: which
+/// slices to simulate and how to weight them. Persisted as a small
+/// CRC-guarded sidecar, computed once, reused across every uarch
+/// config simulated against the trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplingPlan {
+    /// Trace name from the trace header (replay refuses a mismatch).
+    pub name: String,
+    /// Trace rows the plan was computed over (ditto).
+    pub total_rows: u64,
+    /// Rows per signature slice.
+    pub slice_rows: u64,
+    /// k-means seed the plan was built with.
+    pub seed: u64,
+    /// Phases, sorted by `start_row`, pairwise non-overlapping.
+    pub phases: Vec<PhasePlan>,
+}
+
+impl SamplingPlan {
+    /// Build a plan from precomputed signatures.
+    pub fn from_signatures(
+        name: &str,
+        sigs: &[SliceSignature],
+        opts: &SamplingOptions,
+    ) -> Result<SamplingPlan> {
+        ensure!(opts.max_phases >= 1, "max_phases must be >= 1");
+        ensure!(opts.slice_rows >= 1, "slice_rows must be >= 1");
+        let total_rows: u64 = sigs.iter().map(|s| s.rows).sum();
+        let mut phases = Vec::new();
+        if !sigs.is_empty() {
+            let k = opts.max_phases.min(sigs.len());
+            let assign = kmeans(sigs, k, opts.seed);
+            for c in 0..k {
+                let members: Vec<usize> =
+                    (0..sigs.len()).filter(|&i| assign[i] == c).collect();
+                if members.is_empty() {
+                    continue;
+                }
+                let mut centroid = [0f64; SIG_DIM];
+                for &m in &members {
+                    for (acc, &v) in centroid.iter_mut().zip(&sigs[m].vec) {
+                        *acc += v as f64;
+                    }
+                }
+                let centroid: Vec<f32> = centroid
+                    .iter()
+                    .map(|&v| (v / members.len() as f64) as f32)
+                    .collect();
+                // Representative: the member closest to the centroid;
+                // ties break to the lowest slice index (strict <).
+                let mut rep = members[0];
+                let mut rep_d = f64::INFINITY;
+                for &m in &members {
+                    let d = dist2(&sigs[m].vec, &centroid);
+                    if d < rep_d {
+                        rep_d = d;
+                        rep = m;
+                    }
+                }
+                let member_rows: u64 = members.iter().map(|&m| sigs[m].rows).sum();
+                let r = &sigs[rep];
+                phases.push(PhasePlan {
+                    rep_slice: rep as u64,
+                    start_row: r.start_row,
+                    rows: r.rows,
+                    member_rows,
+                    weight: member_rows as f64 / r.rows as f64,
+                    entropy: r.entropy,
+                    branch_ratio: r.branch_ratio,
+                });
+            }
+            phases.sort_by_key(|p| p.start_row);
+        }
+        Ok(SamplingPlan {
+            name: name.to_string(),
+            total_rows,
+            slice_rows: opts.slice_rows,
+            seed: opts.seed,
+            phases,
+        })
+    }
+
+    /// The exhaustive plan: every slice is its own phase at weight 1 —
+    /// sampled replay covers every row, and is the bit-identity oracle
+    /// against full simulation.
+    pub fn exhaustive(name: &str, total_rows: u64, slice_rows: u64) -> SamplingPlan {
+        assert!(slice_rows >= 1, "slice_rows must be >= 1");
+        let mut phases = Vec::new();
+        let mut start = 0u64;
+        let mut slice = 0u64;
+        while start < total_rows {
+            let rows = slice_rows.min(total_rows - start);
+            phases.push(PhasePlan {
+                rep_slice: slice,
+                start_row: start,
+                rows,
+                member_rows: rows,
+                weight: 1.0,
+                entropy: 0.0,
+                branch_ratio: 0.0,
+            });
+            start += rows;
+            slice += 1;
+        }
+        SamplingPlan {
+            name: name.to_string(),
+            total_rows,
+            slice_rows,
+            seed: 0,
+            phases,
+        }
+    }
+
+    /// Rows the plan actually simulates (excluding warm-up).
+    pub fn simulated_rows(&self) -> u64 {
+        self.phases.iter().map(|p| p.rows).sum()
+    }
+
+    /// Simulated fraction of the trace, in `[0, 1]`.
+    pub fn coverage(&self) -> f64 {
+        if self.total_rows == 0 {
+            1.0
+        } else {
+            self.simulated_rows() as f64 / self.total_rows as f64
+        }
+    }
+
+    /// Refuse replay against a trace the plan was not computed for.
+    pub fn check_matches(&self, trace_name: &str, trace_rows: u64) -> Result<()> {
+        ensure!(
+            self.name == trace_name && self.total_rows == trace_rows,
+            "sampling plan is for trace {:?} ({} rows), not {:?} ({} rows)",
+            self.name,
+            self.total_rows,
+            trace_name,
+            trace_rows
+        );
+        Ok(())
+    }
+
+    /// Serialize to the `TAOPLAN1` sidecar format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(64 + self.phases.len() * 48);
+        buf.extend_from_slice(MAGIC_PLAN);
+        put_u64(&mut buf, self.name.len() as u64);
+        buf.extend_from_slice(self.name.as_bytes());
+        put_u64(&mut buf, self.total_rows);
+        put_u64(&mut buf, self.slice_rows);
+        put_u64(&mut buf, self.seed);
+        put_u64(&mut buf, self.phases.len() as u64);
+        for p in &self.phases {
+            put_u64(&mut buf, p.rep_slice);
+            put_u64(&mut buf, p.start_row);
+            put_u64(&mut buf, p.rows);
+            put_u64(&mut buf, p.member_rows);
+            put_u64(&mut buf, p.weight.to_bits());
+            buf.extend_from_slice(&p.entropy.to_bits().to_le_bytes());
+            buf.extend_from_slice(&p.branch_ratio.to_bits().to_le_bytes());
+        }
+        let crc = crc32(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        buf
+    }
+
+    /// Parse and validate a `TAOPLAN1` sidecar.
+    pub fn from_bytes(bytes: &[u8]) -> Result<SamplingPlan> {
+        ensure!(
+            bytes.len() >= 8 && &bytes[..8] == MAGIC_PLAN,
+            "not a tao sampling plan (bad magic)"
+        );
+        ensure!(bytes.len() >= 12, "truncated sampling plan");
+        let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+        let stored = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+        let computed = crc32(body);
+        ensure!(
+            stored == computed,
+            "corrupt sampling plan (CRC stored {stored:#010x}, computed {computed:#010x})"
+        );
+        let mut pos = 8usize;
+        let name_len = get_u64(body, &mut pos)? as usize;
+        ensure!(
+            name_len <= 4096 && pos + name_len <= body.len(),
+            "unreasonable plan name length {name_len}"
+        );
+        let name = std::str::from_utf8(&body[pos..pos + name_len])
+            .context("plan name is not UTF-8")?
+            .to_string();
+        pos += name_len;
+        let total_rows = get_u64(body, &mut pos)?;
+        let slice_rows = get_u64(body, &mut pos)?;
+        let seed = get_u64(body, &mut pos)?;
+        let count = get_u64(body, &mut pos)? as usize;
+        ensure!(slice_rows >= 1, "plan slice_rows must be >= 1");
+        ensure!(
+            count <= total_rows.div_ceil(slice_rows) as usize,
+            "{count} phases for {total_rows} rows of {slice_rows}-row slices"
+        );
+        let mut phases = Vec::with_capacity(count);
+        let mut prev_end = 0u64;
+        for i in 0..count {
+            let rep_slice = get_u64(body, &mut pos)?;
+            let start_row = get_u64(body, &mut pos)?;
+            let rows = get_u64(body, &mut pos)?;
+            let member_rows = get_u64(body, &mut pos)?;
+            let weight = f64::from_bits(get_u64(body, &mut pos)?);
+            let entropy = f32::from_bits(get_u32(body, &mut pos)?);
+            let branch_ratio = f32::from_bits(get_u32(body, &mut pos)?);
+            ensure!(
+                rows >= 1 && rows <= slice_rows,
+                "phase {i}: {rows} rows in a {slice_rows}-row-slice plan"
+            );
+            ensure!(
+                start_row == rep_slice * slice_rows,
+                "phase {i}: start row {start_row} disagrees with slice {rep_slice}"
+            );
+            ensure!(
+                start_row >= prev_end && start_row + rows <= total_rows,
+                "phase {i}: rows [{start_row}, {}) out of order or out of range",
+                start_row + rows
+            );
+            ensure!(
+                weight.is_finite() && weight > 0.0,
+                "phase {i}: weight {weight} is not a positive finite number"
+            );
+            prev_end = start_row + rows;
+            phases.push(PhasePlan {
+                rep_slice,
+                start_row,
+                rows,
+                member_rows,
+                weight,
+                entropy,
+                branch_ratio,
+            });
+        }
+        ensure!(
+            pos == body.len(),
+            "{} trailing bytes in sampling plan",
+            body.len() - pos
+        );
+        Ok(SamplingPlan {
+            name,
+            total_rows,
+            slice_rows,
+            seed,
+            phases,
+        })
+    }
+
+    /// Write the sidecar to `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes()).with_context(|| format!("write {path:?}"))
+    }
+
+    /// Load and validate a sidecar from `path`.
+    pub fn load(path: &Path) -> Result<SamplingPlan> {
+        let bytes = std::fs::read(path).with_context(|| format!("read {path:?}"))?;
+        SamplingPlan::from_bytes(&bytes).with_context(|| format!("parse {path:?}"))
+    }
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_u64(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    ensure!(*pos + 8 <= buf.len(), "truncated sampling plan");
+    let v = u64::from_le_bytes(buf[*pos..*pos + 8].try_into().unwrap());
+    *pos += 8;
+    Ok(v)
+}
+
+fn get_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
+    ensure!(*pos + 4 <= buf.len(), "truncated sampling plan");
+    let v = u32::from_le_bytes(buf[*pos..*pos + 4].try_into().unwrap());
+    *pos += 4;
+    Ok(v)
+}
+
+/// Compute a [`SamplingPlan`] for a trace file: one streaming
+/// signature pass, then clustering. The plan is independent of any
+/// model artifact or uarch config.
+pub fn plan_trace(path: &Path, opts: &SamplingOptions) -> Result<SamplingPlan> {
+    let mut src = crate::trace::open_trace_source(path)?;
+    let name = src.name().to_string();
+    let sigs = compute_signatures(&mut src, opts.slice_rows)?;
+    SamplingPlan::from_signatures(&name, &sigs, opts)
+}
+
+// ---------------------------------------------------------------------
+// Sampled replay source
+// ---------------------------------------------------------------------
+
+/// Streams only a plan's representative slices, in trace order, by
+/// seeking the underlying [`TraceSource`] between phases. Each
+/// `next_chunk` serves rows from a single phase (a pull never straddles
+/// a phase boundary), so a consumer pulling `slice_rows`-sized chunks
+/// gets exactly one chunk per phase — the alignment `tao serve` relies
+/// on to key its prediction cache per representative slice.
+pub struct SampledTraceSource {
+    src: Box<dyn TraceSource>,
+    plan: SamplingPlan,
+    phase: usize,
+    /// Rows already delivered from the current phase.
+    delivered: u64,
+    /// Whether `src` is positioned inside the current phase.
+    positioned: bool,
+}
+
+impl SampledTraceSource {
+    /// Wrap a seekable trace source; refuses a plan computed for a
+    /// different trace.
+    pub fn new(src: Box<dyn TraceSource>, plan: SamplingPlan) -> Result<SampledTraceSource> {
+        let rows = match src.len_hint() {
+            Some(n) => n as u64,
+            None => bail!("sampled replay needs a length-aware trace source"),
+        };
+        plan.check_matches(src.name(), rows)?;
+        Ok(SampledTraceSource {
+            src,
+            plan,
+            phase: 0,
+            delivered: 0,
+            positioned: false,
+        })
+    }
+
+    /// The plan being replayed.
+    pub fn plan(&self) -> &SamplingPlan {
+        &self.plan
+    }
+
+    /// Per-phase merge weights, in stream (phase) order.
+    pub fn weights(&self) -> Vec<f64> {
+        self.plan.phases.iter().map(|p| p.weight).collect()
+    }
+}
+
+impl ChunkSource for SampledTraceSource {
+    fn len_hint(&self) -> Option<usize> {
+        let rest: u64 = self.plan.phases[self.phase..]
+            .iter()
+            .map(|p| p.rows)
+            .sum::<u64>()
+            - self.delivered;
+        usize::try_from(rest).ok()
+    }
+
+    fn next_chunk(&mut self, buf: &mut ChunkBuf, max_rows: usize) -> Result<usize> {
+        ensure!(max_rows >= 1, "zero-length chunk request");
+        loop {
+            let Some(phase) = self.plan.phases.get(self.phase) else {
+                buf.clear();
+                return Ok(0);
+            };
+            if self.delivered == phase.rows {
+                self.phase += 1;
+                self.delivered = 0;
+                self.positioned = false;
+                continue;
+            }
+            if !self.positioned {
+                self.src.seek_to_row(phase.start_row)?;
+                self.positioned = true;
+            }
+            let want = (phase.rows - self.delivered).min(max_rows as u64) as usize;
+            let n = self.src.next_chunk(buf, want)?;
+            ensure!(
+                n > 0,
+                "trace ended inside phase rows [{}, {})",
+                phase.start_row,
+                phase.end_row()
+            );
+            self.delivered += n as u64;
+            return Ok(n);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functional::FunctionalSim;
+    use crate::trace::{OwnedChunkSource, TraceColumns, TraceFormat, TraceWriteOptions};
+    use crate::workloads;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tao-sampling-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(tag.to_string())
+    }
+
+    fn bench_cols(bench: &str, n: u64) -> TraceColumns {
+        let p = workloads::by_name(bench).unwrap().build(9);
+        FunctionalSim::new(&p).run(n).to_columns()
+    }
+
+    /// Alternating-phase trace: slices drawn alternately from two
+    /// different workloads, so the phase structure is known a priori.
+    fn alternating_cols(slice: u64, slices: usize) -> TraceColumns {
+        let a = bench_cols("dee", slice);
+        let b = bench_cols("mcf", slice);
+        let mut cols = TraceColumns::new();
+        for i in 0..slices {
+            let src = if i % 2 == 0 { &a } else { &b };
+            cols.extend_from(src, 0, src.len());
+        }
+        cols
+    }
+
+    #[test]
+    fn signatures_cover_every_row_and_are_deterministic() {
+        let cols = bench_cols("dee", 3_500);
+        let mut src = OwnedChunkSource::new(cols.clone(), None).unwrap();
+        let sigs = compute_signatures(&mut src, 1_000).unwrap();
+        assert_eq!(sigs.len(), 4);
+        assert_eq!(sigs.iter().map(|s| s.rows).sum::<u64>(), 3_500);
+        assert_eq!(sigs[3].rows, 500);
+        for (i, s) in sigs.iter().enumerate() {
+            assert_eq!(s.slice, i);
+            assert_eq!(s.start_row, i as u64 * 1_000);
+            assert_eq!(s.vec.len(), SIG_DIM);
+            // Histogram parts are probabilities.
+            assert!(s.vec.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            assert!(s.entropy >= 0.0);
+        }
+        // A second pass is bit-identical, regardless of pull grain.
+        let mut src = OwnedChunkSource::new(cols, None).unwrap();
+        let again = compute_signatures(&mut src, 1_000).unwrap();
+        assert_eq!(sigs, again);
+    }
+
+    #[test]
+    fn clustering_separates_known_phases() {
+        let cols = alternating_cols(1_000, 8);
+        let mut src = OwnedChunkSource::new(cols, None).unwrap();
+        let sigs = compute_signatures(&mut src, 1_000).unwrap();
+        let opts = SamplingOptions {
+            slice_rows: 1_000,
+            max_phases: 2,
+            seed: 7,
+        };
+        let plan = SamplingPlan::from_signatures("alt", &sigs, &opts).unwrap();
+        assert_eq!(plan.phases.len(), 2);
+        // Every row is accounted for exactly once across phase members.
+        assert_eq!(
+            plan.phases.iter().map(|p| p.member_rows).sum::<u64>(),
+            plan.total_rows
+        );
+        // The two representatives come from opposite parities (the two
+        // interleaved workloads).
+        assert_ne!(
+            plan.phases[0].rep_slice % 2,
+            plan.phases[1].rep_slice % 2
+        );
+        // Each phase holds the 4 slices of its parity.
+        for p in &plan.phases {
+            assert_eq!(p.member_rows, 4_000);
+            assert!((p.weight - 4.0).abs() < 1e-12);
+        }
+        assert!(plan.coverage() <= 0.25 + 1e-12);
+
+        // Same inputs, same seed: bit-identical plan.
+        let again = SamplingPlan::from_signatures("alt", &sigs, &opts).unwrap();
+        assert_eq!(plan, again);
+    }
+
+    #[test]
+    fn exhaustive_plan_covers_everything_at_weight_one() {
+        let plan = SamplingPlan::exhaustive("x", 2_500, 1_000);
+        assert_eq!(plan.phases.len(), 3);
+        assert_eq!(plan.simulated_rows(), 2_500);
+        assert_eq!(plan.coverage(), 1.0);
+        assert!(plan.phases.iter().all(|p| p.weight == 1.0));
+        assert_eq!(plan.phases[2].rows, 500);
+        plan.check_matches("x", 2_500).unwrap();
+        plan.check_matches("y", 2_500).unwrap_err();
+        plan.check_matches("x", 2_400).unwrap_err();
+    }
+
+    #[test]
+    fn plan_sidecar_round_trips_and_fails_typed_when_corrupt() {
+        let cols = alternating_cols(500, 6);
+        let mut src = OwnedChunkSource::new(cols, None).unwrap();
+        let sigs = compute_signatures(&mut src, 500).unwrap();
+        let plan = SamplingPlan::from_signatures(
+            "alt",
+            &sigs,
+            &SamplingOptions {
+                slice_rows: 500,
+                max_phases: 3,
+                seed: 11,
+            },
+        )
+        .unwrap();
+        let path = tmp("plan.tsp");
+        plan.save(&path).unwrap();
+        let back = SamplingPlan::load(&path).unwrap();
+        assert_eq!(plan, back);
+
+        // Foreign bytes are refused by magic.
+        let foreign = tmp("foreign.tsp");
+        std::fs::write(&foreign, b"NOTAPLAN_AT_ALL!").unwrap();
+        let err = SamplingPlan::load(&foreign).unwrap_err();
+        assert!(format!("{err:#}").contains("bad magic"), "{err:#}");
+
+        // A flipped body byte fails the CRC.
+        let mut bytes = plan.to_bytes();
+        bytes[20] ^= 0x01;
+        let bad = tmp("bad.tsp");
+        std::fs::write(&bad, &bytes).unwrap();
+        let err = SamplingPlan::load(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("CRC"), "{err:#}");
+    }
+
+    #[test]
+    fn sampled_source_streams_representatives_in_order() {
+        let cols = alternating_cols(1_000, 8);
+        let trace = tmp("sampled.trace");
+        TraceWriteOptions::new(TraceFormat::V2)
+            .chunk_rows(1_000)
+            .write(&trace, "alt", &cols)
+            .unwrap();
+        let plan = plan_trace(
+            &trace,
+            &SamplingOptions {
+                slice_rows: 1_000,
+                max_phases: 2,
+                seed: 7,
+            },
+        )
+        .unwrap();
+        assert_eq!(plan.phases.len(), 2);
+
+        let src = crate::trace::open_trace_source(&trace).unwrap();
+        let mut sampled = SampledTraceSource::new(src, plan.clone()).unwrap();
+        assert_eq!(sampled.len_hint(), Some(2_000));
+        assert_eq!(sampled.weights(), vec![4.0, 4.0]);
+        let mut buf = ChunkBuf::new();
+        // Chunk pulls at slice size: exactly one pull per phase, and
+        // the rows are byte-identical to the slice in the full trace.
+        for p in &plan.phases {
+            let n = sampled.next_chunk(&mut buf, 1_000).unwrap();
+            assert_eq!(n as u64, p.rows);
+            let mut want = TraceColumns::new();
+            want.extend_from(&cols, p.start_row as usize, p.end_row() as usize);
+            assert_eq!(buf.cols, want);
+        }
+        assert_eq!(sampled.next_chunk(&mut buf, 1_000).unwrap(), 0);
+        assert_eq!(sampled.len_hint(), Some(0));
+
+        // Misaligned pulls still never straddle a phase boundary.
+        let src = crate::trace::open_trace_source(&trace).unwrap();
+        let mut sampled = SampledTraceSource::new(src, plan.clone()).unwrap();
+        let mut total = 0u64;
+        let mut pulls = 0usize;
+        loop {
+            let n = sampled.next_chunk(&mut buf, 300).unwrap();
+            if n == 0 {
+                break;
+            }
+            total += n as u64;
+            pulls += 1;
+        }
+        assert_eq!(total, 2_000);
+        // ceil(1000/300) = 4 pulls per phase.
+        assert_eq!(pulls, 8);
+
+        // A plan for a different trace is refused.
+        let src = crate::trace::open_trace_source(&trace).unwrap();
+        let mut other = plan;
+        other.name = "other".to_string();
+        assert!(SampledTraceSource::new(src, other).is_err());
+    }
+}

@@ -103,6 +103,7 @@ fn to_spec(j: &ScenarioJob, chunk: usize) -> JobSpec {
         ctx_uarch: j.ctx_uarch.clone(),
         deadline_ms: None,
         trace: None,
+        plan: None,
     }
 }
 

@@ -55,6 +55,12 @@ pub struct JobSpec {
     /// the trace header and must be omitted, and the artifact must be a
     /// Tao model (SimNet needs detailed context a trace does not carry).
     pub trace: Option<String>,
+    /// Server-local path to a `TAOPLAN1` phase-sampling plan sidecar
+    /// (`tao sample compute` writes them). Requires `trace`; the job
+    /// replays only the plan's representative slices and reconstructs
+    /// whole-trace metrics by weighted accumulator merge. The served
+    /// `metrics.instructions` still counts every trace row.
+    pub plan: Option<String>,
 }
 
 /// Largest integer the JSON number channel carries exactly (`f64`
@@ -74,6 +80,11 @@ impl JobSpec {
                 "trace jobs take bench and insts from the trace header; omit both"
             );
         }
+        let plan = j.get("plan").and_then(Json::as_str).map(str::to_string);
+        ensure!(
+            plan.is_none() || trace.is_some(),
+            "plan selects representative slices of a recorded trace; it requires trace"
+        );
         let spec = JobSpec {
             bench: match trace {
                 Some(_) => String::new(),
@@ -90,6 +101,7 @@ impl JobSpec {
             ctx_uarch: j.get("ctx_uarch").and_then(Json::as_str).map(str::to_string),
             deadline_ms: j.get("deadline_ms").and_then(Json::as_u64),
             trace,
+            plan,
         };
         ensure!(spec.trace.is_some() || spec.insts >= 1, "insts must be positive");
         ensure!(spec.chunk >= 1, "chunk must be positive");
@@ -127,6 +139,9 @@ impl JobSpec {
         };
         if let Some(t) = &self.trace {
             pairs.push(("trace", Json::of_str(t)));
+        }
+        if let Some(p) = &self.plan {
+            pairs.push(("plan", Json::of_str(p)));
         }
         if let Some(u) = &self.ctx_uarch {
             pairs.push(("ctx_uarch", Json::of_str(u)));
@@ -601,13 +616,20 @@ pub fn validate_spec(
             "trace jobs require a Tao artifact (SimNet needs detailed-sim \
              context a recorded trace does not carry)"
         );
-        let (_, _, records) = crate::trace::trace_header(std::path::Path::new(trace))?;
+        let (_, name, records) = crate::trace::trace_header(std::path::Path::new(trace))?;
         ensure!(records >= 1, "trace {trace:?} declares zero records");
         ensure!(
             records <= max_insts,
             "trace {trace:?} declares {records} insts, exceeding the \
              admission limit {max_insts}"
         );
+        if let Some(plan) = &spec.plan {
+            // Sampled-replay admission: the sidecar must parse (magic +
+            // CRC + invariants) and describe exactly this trace, so a
+            // stale or foreign plan is a 400, not a lane failure.
+            let plan = crate::sampling::SamplingPlan::load(std::path::Path::new(plan))?;
+            plan.check_matches(&name, records)?;
+        }
         return Ok(art.meta.kind);
     }
     ensure!(
@@ -658,6 +680,7 @@ mod tests {
             ctx_uarch: Some("design:123".into()),
             deadline_ms: Some(5_000),
             trace: None,
+            plan: None,
         };
         assert_eq!(JobSpec::from_json(&spec.to_json()).unwrap(), spec);
         // Trace jobs: bench/insts come from the file, so the wire body
@@ -671,6 +694,7 @@ mod tests {
             ctx_uarch: None,
             deadline_ms: None,
             trace: Some("/tmp/mcf.trace".into()),
+            plan: None,
         };
         assert_eq!(JobSpec::from_json(&tspec.to_json()).unwrap(), tspec);
         assert!(
@@ -680,6 +704,17 @@ mod tests {
         assert!(
             JobSpec::from_json(r#"{"insts":5,"artifact":"x","trace":"t"}"#).is_err(),
             "insts alongside trace must be rejected"
+        );
+        // Sampled replay: the plan sidecar rides the trace path.
+        let pspec = JobSpec {
+            plan: Some("/tmp/mcf.plan".into()),
+            ..tspec.clone()
+        };
+        assert_eq!(JobSpec::from_json(&pspec.to_json()).unwrap(), pspec);
+        assert!(
+            JobSpec::from_json(r#"{"bench":"mcf","insts":5,"artifact":"x","plan":"p"}"#)
+                .is_err(),
+            "plan without trace must be rejected"
         );
         // Defaults fill in.
         let min = JobSpec::from_json(r#"{"bench":"mcf","insts":10,"artifact":"x"}"#).unwrap();
@@ -840,6 +875,7 @@ mod tests {
             ctx_uarch: None,
             deadline_ms: None,
             trace: None,
+            plan: None,
         };
         assert_eq!(
             validate_spec(&spec, &pool, 1_000).unwrap(),
@@ -889,6 +925,7 @@ mod tests {
             ctx_uarch: None,
             deadline_ms: None,
             trace: Some(trace.to_string_lossy().into_owned()),
+            plan: None,
         };
         assert_eq!(
             validate_spec(&tspec, &pool, 1_000).unwrap(),
@@ -911,5 +948,32 @@ mod tests {
             err.downcast_ref::<crate::trace::TraceError>(),
             Some(crate::trace::TraceError::Foreign { .. })
         ));
+
+        // Sampled-replay admission: a plan for this trace passes; a
+        // plan for a different trace (or a garbled sidecar) is refused
+        // before the job reaches a lane.
+        let good_plan = dir.join("vp.plan");
+        crate::sampling::SamplingPlan::exhaustive("dee", 200, 50)
+            .save(&good_plan)
+            .unwrap();
+        let mut p_t = tspec.clone();
+        p_t.plan = Some(good_plan.to_string_lossy().into_owned());
+        assert_eq!(
+            validate_spec(&p_t, &pool, 1_000).unwrap(),
+            crate::runtime::ModelKind::Tao
+        );
+        let stale_plan = dir.join("vp_stale.plan");
+        crate::sampling::SamplingPlan::exhaustive("dee", 999, 50)
+            .save(&stale_plan)
+            .unwrap();
+        p_t.plan = Some(stale_plan.to_string_lossy().into_owned());
+        assert!(
+            validate_spec(&p_t, &pool, 1_000).is_err(),
+            "a plan for a different row count must be refused"
+        );
+        let junk_plan = dir.join("vp_junk.plan");
+        std::fs::write(&junk_plan, b"NOTAPLAN").unwrap();
+        p_t.plan = Some(junk_plan.to_string_lossy().into_owned());
+        assert!(validate_spec(&p_t, &pool, 1_000).is_err(), "garbled sidecar refused");
     }
 }

@@ -162,6 +162,7 @@ mod tests {
                     ctx_uarch: None,
                     deadline_ms: None,
                     trace: None,
+                    plan: None,
                 },
                 done: tx,
                 admitted_at: Instant::now(),

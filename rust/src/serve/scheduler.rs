@@ -167,13 +167,18 @@ static NEXT_JOB_ID: AtomicU64 = AtomicU64::new(1);
 
 /// A stream-ordered accounting segment: one pulled chunk, either
 /// skipped via the cache or awaiting its windows' model outputs.
+///
+/// `weight` is the phase-sampling expansion factor for this chunk
+/// (1.0 for full replay). Cached deltas always store the *raw* slice
+/// accumulator; the weight applies only when the segment settles into
+/// the job accumulator, so cache entries stay reusable across plans.
 enum Segment {
     /// Cached chunk: merge `accum` once absorption reaches `start`.
-    Hit { start: u64, accum: PredAccum },
+    Hit { start: u64, accum: PredAccum, weight: f64 },
     /// Computed chunk: rows fold into `accum` alongside the job
     /// accumulator; when absorption reaches `end` the delta is
     /// published to the cache under `key`.
-    Miss { key: ChunkKey, end: u64, accum: PredAccum },
+    Miss { key: ChunkKey, end: u64, accum: PredAccum, weight: f64 },
 }
 
 struct ActiveJob {
@@ -190,6 +195,10 @@ struct ActiveJob {
     emitted: u64,
     absorbed: u64,
     segments: VecDeque<Segment>,
+    /// Sampled replay (`spec.plan`): per-phase weights in stream order,
+    /// consumed one per pulled chunk (the pull grain is the plan's
+    /// slice size, so chunk == phase == cache unit).
+    weights: Option<VecDeque<f64>>,
     stream_done: bool,
     hits: u64,
     misses: u64,
@@ -202,13 +211,14 @@ struct ActiveJob {
 
 impl ActiveJob {
     fn prepare(
-        spec: JobSpec,
+        mut spec: JobSpec,
         done: DoneTx,
         admitted_at: Instant,
         deadline: Option<Instant>,
         art: &PooledArtifact,
     ) -> Result<ActiveJob> {
         let kind = art.meta.kind;
+        let mut weights = None;
         let source: Box<dyn ChunkSource + Send> = if let Some(trace) = &spec.trace {
             // Replay a recorded trace of either on-disk format.
             // Decompression happens inside `next_chunk`, i.e. on this
@@ -217,7 +227,23 @@ impl ActiveJob {
                 kind == ModelKind::Tao,
                 "trace jobs require a Tao artifact"
             );
-            Box::new(crate::trace::open_trace_source(std::path::Path::new(trace))?)
+            let src = crate::trace::open_trace_source(std::path::Path::new(trace))?;
+            if let Some(plan) = &spec.plan {
+                // Sampled replay: stream only the plan's representative
+                // slices. The pull grain becomes the plan's slice size
+                // so every chunk is exactly one phase — chunk, phase
+                // and cache unit coincide, and the cached delta for a
+                // representative slice is reusable by any job sampling
+                // the same trace prefix.
+                let plan =
+                    crate::sampling::SamplingPlan::load(std::path::Path::new(plan))?;
+                spec.chunk = plan.slice_rows as usize;
+                let sampled = crate::sampling::SampledTraceSource::new(src, plan)?;
+                weights = Some(sampled.weights().into_iter().collect());
+                Box::new(sampled)
+            } else {
+                Box::new(src)
+            }
         } else {
             let workload = crate::workloads::by_name(&spec.bench)
                 .with_context(|| format!("unknown benchmark {:?}", spec.bench))?;
@@ -256,6 +282,7 @@ impl ActiveJob {
             emitted: 0,
             absorbed: 0,
             segments: VecDeque::new(),
+            weights,
             stream_done: false,
             hits: 0,
             misses: 0,
@@ -310,6 +337,14 @@ impl ActiveJob {
             }
             self.buf_len = n;
             self.pos = 0;
+            let weight = match &mut self.weights {
+                // One pull per phase: the sampled source never crosses a
+                // phase boundary and the pull grain is the slice size.
+                Some(w) => w
+                    .pop_front()
+                    .context("sampled trace delivered more chunks than the plan has phases")?,
+                None => 1.0,
+            };
             let content = hash_chunk(&self.buf);
             let key = ChunkKey { artifact: artifact_fp, prefix: self.prefix, content };
             self.prefix = chain_prefix(self.prefix, content);
@@ -333,8 +368,11 @@ impl ActiveJob {
                             self.stager.roll_only(&rec, ctx_row);
                         }
                     }
-                    self.segments
-                        .push_back(Segment::Hit { start: self.emitted, accum: delta });
+                    self.segments.push_back(Segment::Hit {
+                        start: self.emitted,
+                        accum: delta,
+                        weight,
+                    });
                     self.hits += 1;
                     self.emitted += n as u64;
                     self.pos = n;
@@ -346,6 +384,7 @@ impl ActiveJob {
                         key,
                         end: self.emitted + n as u64,
                         accum: PredAccum::at_base(self.emitted),
+                        weight,
                     });
                 }
             }
@@ -354,13 +393,20 @@ impl ActiveJob {
 
     /// Fold one routed output row (stream order per job is guaranteed
     /// by FIFO batches + in-order slots).
+    ///
+    /// Sampled jobs fold rows only into the open segment; the weighted
+    /// expansion into the job accumulator happens when the segment
+    /// settles in [`ActiveJob::pump`], so every phase merges exactly
+    /// once at its plan weight.
     fn absorb_row(
         &mut self,
         out: &ModelOutputs,
         row: usize,
         cache: &Mutex<PredictionCache>,
     ) {
-        self.accum.absorb_one(out, self.kind, row);
+        if self.weights.is_none() {
+            self.accum.absorb_one(out, self.kind, row);
+        }
         match self.segments.front_mut() {
             Some(Segment::Miss { accum, .. }) => accum.absorb_one(out, self.kind, row),
             _ => debug_assert!(false, "output row with no open miss segment"),
@@ -371,22 +417,33 @@ impl ActiveJob {
 
     /// Settle stream-ordered segments: merge hit accumulators the
     /// moment absorption reaches them; publish completed miss deltas
-    /// to the cache.
+    /// to the cache (raw, unweighted — a sampled job's weighted merge
+    /// happens here too, after the raw delta is captured).
     fn pump(&mut self, cache: &Mutex<PredictionCache>) {
+        let sampled = self.weights.is_some();
         loop {
             match self.segments.front() {
                 Some(Segment::Hit { start, .. }) if *start == self.absorbed => {
-                    let Some(Segment::Hit { accum, .. }) = self.segments.pop_front() else {
-                        unreachable!()
-                    };
-                    self.absorbed += accum.instructions;
-                    self.accum.merge(&accum);
-                }
-                Some(Segment::Miss { end, .. }) if *end == self.absorbed => {
-                    let Some(Segment::Miss { key, accum, .. }) = self.segments.pop_front()
+                    let Some(Segment::Hit { accum, weight, .. }) = self.segments.pop_front()
                     else {
                         unreachable!()
                     };
+                    self.absorbed += accum.instructions;
+                    if sampled {
+                        self.accum.merge_weighted(&accum, weight);
+                    } else {
+                        self.accum.merge(&accum);
+                    }
+                }
+                Some(Segment::Miss { end, .. }) if *end == self.absorbed => {
+                    let Some(Segment::Miss { key, accum, weight, .. }) =
+                        self.segments.pop_front()
+                    else {
+                        unreachable!()
+                    };
+                    if sampled {
+                        self.accum.merge_weighted(&accum, weight);
+                    }
                     fault::relock(cache).insert(key, accum);
                 }
                 _ => break,
@@ -1096,6 +1153,7 @@ mod tests {
             ctx_uarch: None,
             deadline_ms: None,
             trace: None,
+            plan: None,
         }
     }
 
@@ -1225,6 +1283,85 @@ mod tests {
             // Cache disabled: every chunk misses, nothing is stored.
             assert_eq!(got.cache_hits, 0);
         }
+    }
+
+    #[test]
+    fn sampled_trace_jobs_weight_phases_and_reuse_the_cache() {
+        let _gate = fault::exclusive();
+        fault::disarm_all();
+        let art = pooled("sched_smp", 8, 6);
+        let dir = std::env::temp_dir().join(format!("tao-sched-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace = dir.join("smp.trace");
+        let cols = FunctionalSim::new(&crate::workloads::by_name("dee").unwrap().build(7))
+            .run(4_000)
+            .to_columns();
+        crate::trace::TraceWriteOptions::new(crate::trace::TraceFormat::V2)
+            .chunk_rows(500)
+            .write(&trace, "dee", &cols)
+            .unwrap();
+        let exhaustive = dir.join("smp_exh.plan");
+        crate::sampling::SamplingPlan::exhaustive("dee", 4_000, 500)
+            .save(&exhaustive)
+            .unwrap();
+        let weighted_plan = crate::sampling::plan_trace(
+            &trace,
+            &crate::sampling::SamplingOptions { slice_rows: 500, max_phases: 3, seed: 5 },
+        )
+        .unwrap();
+        let weighted = dir.join("smp_w.plan");
+        weighted_plan.save(&weighted).unwrap();
+
+        let mut tspec = spec("sched_smp", "", 0, 42, 500);
+        tspec.trace = Some(trace.to_string_lossy().into_owned());
+        let mut exh_spec = tspec.clone();
+        exh_spec.plan = Some(exhaustive.to_string_lossy().into_owned());
+        let mut w_spec = tspec.clone();
+        w_spec.plan = Some(weighted.to_string_lossy().into_owned());
+
+        let cache = Arc::new(Mutex::new(PredictionCache::new(256)));
+        let counters = Arc::new(ServeCounters::default());
+        let cfg = LaneConfig {
+            max_active: 4,
+            pipeline: false,
+            admission_wait: Duration::ZERO,
+            prep_depth: 0,
+        };
+        let run = |s: &JobSpec| {
+            let queue = Arc::new(JobQueue::new(4));
+            let rx = submit(&queue, s);
+            queue.close();
+            run_lane(art.clone(), queue, cache.clone(), counters.clone(), cfg).unwrap();
+            rx.recv().unwrap().unwrap()
+        };
+
+        // Cold sampled pass with the exhaustive (weight-1, contiguous)
+        // plan: every slice is simulated once.
+        let exh = run(&exh_spec);
+        assert_eq!(exh.metrics.instructions, 4_000);
+        assert_eq!(exh.cache_misses, 8);
+        assert_eq!(exh.windows, 4_000);
+
+        // A plain full replay on the same chunk grid pulls the same
+        // chunk sequence, so it rides the sampled job's cache entries
+        // entirely — and the weight-1 plan was exact: identical metrics.
+        let full = run(&tspec);
+        assert_metrics_identical(&full.metrics, &exh.metrics, "exhaustive == full");
+        assert_eq!(full.cache_hits, 8, "full replay reuses sampled slice deltas");
+        assert_eq!(full.windows, 0);
+
+        // Weighted plan: fewer slices simulated, every trace row still
+        // accounted (the plan's ratio weights expand exactly), and the
+        // replay is deterministic — a rerun hits every representative
+        // slice in cache and reproduces the metrics bit-for-bit.
+        let w1 = run(&w_spec);
+        assert_eq!(w1.metrics.instructions, 4_000);
+        assert!(weighted_plan.phases.len() <= 3);
+        assert!(w1.windows <= weighted_plan.simulated_rows());
+        let w2 = run(&w_spec);
+        assert_metrics_identical(&w2.metrics, &w1.metrics, "sampled rerun");
+        assert_eq!(w2.cache_hits, weighted_plan.phases.len() as u64);
+        assert_eq!(w2.windows, 0);
     }
 
     #[test]

@@ -32,7 +32,7 @@ use super::serialize::{read_func_body_header, read_func_fields};
 use super::source::RecordSource;
 use crate::util::fault::panic_message;
 use anyhow::{bail, ensure, Context, Result};
-use std::io::{BufReader, Read};
+use std::io::{BufReader, Read, Seek, SeekFrom};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -300,6 +300,26 @@ impl FileChunkSource {
     /// Records declared by the header but not yet pulled.
     pub fn remaining(&self) -> usize {
         self.declared - self.read
+    }
+
+    /// Reposition so the next pulled record is `row`. `TAOTFNC1`
+    /// records are a fixed 27 bytes, so this is pure offset math — no
+    /// decode, no scan. `row == declared` positions at end-of-stream;
+    /// beyond that is an error.
+    pub fn seek_to_row(&mut self, row: u64) -> Result<()> {
+        ensure!(
+            row <= self.declared as u64,
+            "{:?}: seek to row {row} past the {} declared records",
+            self.path,
+            self.declared
+        );
+        // magic + name length prefix + name bytes + record count.
+        let data_start = (8 + 8 + self.name.len() + 8) as u64;
+        self.reader
+            .seek(SeekFrom::Start(data_start + row * 27))
+            .with_context(|| format!("seek to row {row} in {:?}", self.path))?;
+        self.read = row as usize;
+        Ok(())
     }
 
     /// After the declared record count is consumed, the file must end.

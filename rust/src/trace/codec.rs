@@ -27,11 +27,24 @@
 //!          data        byte_len bytes
 //! ```
 //!
-//! Chunks repeat until exactly `records` rows have been stored; the
-//! file must end there (trailing bytes are an error, as in v1). Every
-//! decode-side length, index, run and varint is validated, so a file
-//! that passes its CRCs but lies about its contents still fails typed,
-//! never panics or over-allocates.
+//! Chunks repeat until exactly `records` rows have been stored. After
+//! the last chunk the writer (by default) appends a chunk-offset index
+//! footer so seeks need not scan frame headers:
+//!
+//! ```text
+//! footer:  magic "TAOTFIX1"
+//!          chunk_count  u64   (must equal ceil(records / chunk_rows))
+//!          offsets      chunk_count × u64 file offsets, ascending
+//!          crc32        u32   over magic + count + offsets
+//! ```
+//!
+//! Chunk `i` always starts at row `i * chunk_rows` (only the final
+//! chunk may be short), so the footer needs no row column. The file
+//! must end after the footer — or after the last chunk for index-less
+//! files — and trailing bytes are an error, as in v1. Every decode-side
+//! length, index, run and varint is validated, so a file that passes
+//! its CRCs but lies about its contents still fails typed, never panics
+//! or over-allocates.
 //!
 //! The reader ([`CompressedChunkSource`]) decodes inside `next_chunk`,
 //! so wrapping it in the existing `ChunkPrefetcher` (as every pipelined
@@ -50,6 +63,9 @@ use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 
 pub(crate) const MAGIC_V2: &[u8; 8] = b"TAOTFNC2";
+
+/// Magic opening the optional chunk-offset index footer.
+pub(crate) const MAGIC_INDEX: &[u8; 8] = b"TAOTFIX1";
 
 /// Hard cap on a chunk's row count; bounds decode-side staging memory
 /// against a corrupt or hostile header.
@@ -604,12 +620,23 @@ pub(crate) struct V2Writer {
     count_offset: u64,
     chunk_rows: usize,
     level: u8,
+    index: bool,
+    /// Byte offset the next chunk will land at.
+    offset: u64,
+    /// File offset of every flushed chunk, for the index footer.
+    chunk_offsets: Vec<u64>,
     pending: TraceColumns,
     written: u64,
 }
 
 impl V2Writer {
-    pub(crate) fn create(path: &Path, name: &str, chunk_rows: usize, level: u8) -> Result<V2Writer> {
+    pub(crate) fn create(
+        path: &Path,
+        name: &str,
+        chunk_rows: usize,
+        level: u8,
+        index: bool,
+    ) -> Result<V2Writer> {
         ensure!(
             chunk_rows >= 1 && chunk_rows <= MAX_CHUNK_ROWS,
             "chunk_rows {chunk_rows} out of range 1..={MAX_CHUNK_ROWS}"
@@ -631,6 +658,9 @@ impl V2Writer {
             count_offset,
             chunk_rows,
             level,
+            index,
+            offset: count_offset + 16, // past the count and chunk_rows words
+            chunk_offsets: Vec::new(),
             pending: TraceColumns::new(),
             written: 0,
         })
@@ -660,6 +690,8 @@ impl V2Writer {
             .write_all(&frame)
             .and_then(|()| self.w.write_all(&crc.to_le_bytes()))
             .with_context(|| format!("write {:?}", self.path))?;
+        self.chunk_offsets.push(self.offset);
+        self.offset += frame.len() as u64 + 4;
         self.written += rows as u64;
         let mut rest = TraceColumns::with_capacity(self.pending.len() - rows);
         rest.extend_from(&self.pending, rows, self.pending.len());
@@ -671,6 +703,23 @@ impl V2Writer {
         if !self.pending.is_empty() {
             let rows = self.pending.len();
             self.flush_rows(rows)?;
+        }
+        if self.index {
+            debug_assert_eq!(
+                self.chunk_offsets.len() as u64,
+                self.written.div_ceil(self.chunk_rows as u64)
+            );
+            let mut footer = Vec::with_capacity(16 + self.chunk_offsets.len() * 8);
+            footer.extend_from_slice(MAGIC_INDEX);
+            footer.extend_from_slice(&(self.chunk_offsets.len() as u64).to_le_bytes());
+            for &off in &self.chunk_offsets {
+                footer.extend_from_slice(&off.to_le_bytes());
+            }
+            let crc = crc32(&footer);
+            self.w
+                .write_all(&footer)
+                .and_then(|()| self.w.write_all(&crc.to_le_bytes()))
+                .with_context(|| format!("write index footer in {:?}", self.path))?;
         }
         self.w.flush().with_context(|| format!("flush {:?}", self.path))?;
         let f = self.w.get_mut();
@@ -712,6 +761,13 @@ pub struct CompressedChunkSource {
     chunk_index: usize,
     staged: TraceColumns,
     staged_pos: usize,
+    /// Byte offset of the first chunk frame.
+    data_start: u64,
+    /// Chunk file offsets, loaded lazily on first seek (from the index
+    /// footer, or a frame-header scan for index-less files) and cached.
+    index: Option<Vec<u64>>,
+    /// Whether a valid `TAOTFIX1` footer has been observed.
+    saw_index: bool,
 }
 
 impl CompressedChunkSource {
@@ -743,6 +799,7 @@ impl CompressedChunkSource {
             chunk_rows >= 1 && chunk_rows <= MAX_CHUNK_ROWS as u64,
             "{path:?}: unreasonable chunk size {chunk_rows}"
         );
+        let data_start = (8 + 8 + name.len() + 8 + 8) as u64;
         let mut src = CompressedChunkSource {
             path: path.to_path_buf(),
             name,
@@ -754,6 +811,9 @@ impl CompressedChunkSource {
             chunk_index: 0,
             staged: TraceColumns::new(),
             staged_pos: 0,
+            data_start,
+            index: None,
+            saw_index: false,
         };
         if declared == 0 {
             src.check_eof()?;
@@ -779,17 +839,249 @@ impl CompressedChunkSource {
         self.staged.len() - self.staged_pos
     }
 
+    /// After the declared record count is consumed, the file must hold
+    /// either nothing or a valid index footer; anything else is typed
+    /// trailing garbage (or a typed corrupt index when the footer magic
+    /// matches but the body doesn't validate).
     fn check_eof(&mut self) -> Result<()> {
-        let mut probe = [0u8; 1];
-        match self.reader.read(&mut probe) {
-            Ok(0) => Ok(()),
-            Ok(_) => Err(TraceError::TrailingGarbage {
-                path: self.path.clone(),
-                declared: self.declared,
+        let mut probe = [0u8; 8];
+        let mut got = 0usize;
+        while got < 8 {
+            match self.reader.read(&mut probe[got..]) {
+                Ok(0) => break,
+                Ok(n) => got += n,
+                Err(e) => {
+                    return Err(e).with_context(|| format!("probe EOF in {:?}", self.path))
+                }
             }
-            .into()),
-            Err(e) => Err(e).with_context(|| format!("probe EOF in {:?}", self.path)),
         }
+        if got == 0 {
+            return Ok(());
+        }
+        if got == 8 && probe == *MAGIC_INDEX {
+            let offsets = self.read_footer_body(true)?;
+            self.saw_index = true;
+            if self.index.is_none() {
+                self.index = Some(offsets);
+            }
+            return Ok(());
+        }
+        Err(TraceError::TrailingGarbage {
+            path: self.path.clone(),
+            declared: self.declared,
+        }
+        .into())
+    }
+
+    /// Expected footer chunk count: chunk `i` always starts at row
+    /// `i * chunk_rows`, so the count is fully determined by the header.
+    fn expected_chunks(&self) -> u64 {
+        self.declared.div_ceil(self.chunk_rows)
+    }
+
+    fn corrupt_index(&self, detail: String) -> anyhow::Error {
+        TraceError::CorruptIndex {
+            path: self.path.clone(),
+            detail,
+        }
+        .into()
+    }
+
+    /// Read and validate the footer body — the reader is positioned
+    /// just past the footer magic. Returns the chunk offsets; with
+    /// `probe_eof`, also insists the file ends right after the footer.
+    fn read_footer_body(&mut self, probe_eof: bool) -> Result<Vec<u64>> {
+        let expected = self.expected_chunks();
+        let mut body = vec![0u8; 8 + expected as usize * 8];
+        if let Err(e) = self.reader.read_exact(&mut body) {
+            return if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                Err(self.corrupt_index("truncated index footer".to_string()))
+            } else {
+                Err(e).with_context(|| format!("read index footer in {:?}", self.path))
+            };
+        }
+        let count = u64::from_le_bytes(body[..8].try_into().unwrap());
+        if count != expected {
+            return Err(self.corrupt_index(format!(
+                "{count} chunk offsets for {expected} chunks"
+            )));
+        }
+        let mut crc_bytes = [0u8; 4];
+        if let Err(e) = self.reader.read_exact(&mut crc_bytes) {
+            return if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                Err(self.corrupt_index("truncated index footer".to_string()))
+            } else {
+                Err(e).with_context(|| format!("read index footer in {:?}", self.path))
+            };
+        }
+        let stored = u32::from_le_bytes(crc_bytes);
+        let mut hashed = Vec::with_capacity(8 + body.len());
+        hashed.extend_from_slice(MAGIC_INDEX);
+        hashed.extend_from_slice(&body);
+        let computed = crc32(&hashed);
+        if stored != computed {
+            return Err(self.corrupt_index(format!(
+                "CRC mismatch (stored {stored:#010x}, computed {computed:#010x})"
+            )));
+        }
+        let mut offsets = Vec::with_capacity(expected as usize);
+        for c in body[8..].chunks_exact(8) {
+            let off = u64::from_le_bytes(c.try_into().unwrap());
+            let ok = off >= self.data_start && offsets.last().map_or(true, |&prev| off > prev);
+            if !ok {
+                return Err(self.corrupt_index(format!("non-ascending chunk offset {off}")));
+            }
+            offsets.push(off);
+        }
+        if probe_eof {
+            let mut p = [0u8; 1];
+            match self.reader.read(&mut p) {
+                Ok(0) => {}
+                Ok(_) => {
+                    return Err(TraceError::TrailingGarbage {
+                        path: self.path.clone(),
+                        declared: self.declared,
+                    }
+                    .into())
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| format!("probe EOF in {:?}", self.path))
+                }
+            }
+        }
+        Ok(offsets)
+    }
+
+    /// Make sure the chunk-offset table is loaded: try the index footer
+    /// first (EOF-anchored — its size is fully determined by the
+    /// header), fall back to a frame-header scan that skips every
+    /// payload without decoding it. Either result is cached.
+    fn ensure_index(&mut self) -> Result<()> {
+        if self.index.is_some() {
+            return Ok(());
+        }
+        let expected = self.expected_chunks();
+        let footer_len = expected.saturating_mul(8).saturating_add(20);
+        let file_len = self
+            .reader
+            .get_ref()
+            .metadata()
+            .with_context(|| format!("stat {:?}", self.path))?
+            .len();
+        if file_len >= self.data_start + footer_len {
+            let footer_off = file_len - footer_len;
+            self.reader
+                .seek(SeekFrom::Start(footer_off))
+                .with_context(|| format!("seek in {:?}", self.path))?;
+            let mut magic = [0u8; 8];
+            let found = match self.reader.read_exact(&mut magic) {
+                Ok(()) => magic == *MAGIC_INDEX,
+                Err(_) => false,
+            };
+            if found {
+                let offsets = self.read_footer_body(false)?;
+                self.saw_index = true;
+                self.index = Some(offsets);
+                return Ok(());
+            }
+        }
+        let offsets = self.scan_chunk_offsets()?;
+        self.index = Some(offsets);
+        Ok(())
+    }
+
+    /// Index-less fallback: walk the chunk frame headers from the top,
+    /// seeking past each payload without decoding it, and record where
+    /// every chunk starts.
+    fn scan_chunk_offsets(&mut self) -> Result<Vec<u64>> {
+        let expected = self.expected_chunks();
+        let mut offsets = Vec::with_capacity(expected as usize);
+        let mut pos = self.data_start;
+        let mut rows_seen = 0u64;
+        for i in 0..expected {
+            self.reader
+                .seek(SeekFrom::Start(pos))
+                .with_context(|| format!("seek in {:?}", self.path))?;
+            let mut head = [0u8; 8];
+            if let Err(e) = self.reader.read_exact(&mut head) {
+                return if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                    Err(TraceError::TruncatedTail {
+                        path: self.path.clone(),
+                        declared: self.declared,
+                        got: rows_seen,
+                    }
+                    .into())
+                } else {
+                    Err(e).with_context(|| format!("read {:?}", self.path))
+                };
+            }
+            let rows = u32::from_le_bytes(head[0..4].try_into().unwrap()) as u64;
+            let payload_len = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
+            if rows == 0 || rows > self.chunk_rows || rows > self.declared - rows_seen {
+                return Err(TraceError::CorruptChunk {
+                    path: self.path.clone(),
+                    chunk: i as usize,
+                    detail: format!("{rows} rows in the frame header"),
+                }
+                .into());
+            }
+            if payload_len > MAX_PAYLOAD {
+                return Err(TraceError::CorruptChunk {
+                    path: self.path.clone(),
+                    chunk: i as usize,
+                    detail: format!("unreasonable payload length {payload_len}"),
+                }
+                .into());
+            }
+            offsets.push(pos);
+            rows_seen += rows;
+            pos += 8 + payload_len as u64 + 4;
+        }
+        Ok(offsets)
+    }
+
+    /// Reposition so the next pulled row is `row`, decoding at most one
+    /// chunk. `row == declared` positions at end-of-stream; beyond that
+    /// is an error.
+    pub fn seek_to_row(&mut self, row: u64) -> Result<()> {
+        ensure!(
+            row <= self.declared,
+            "{:?}: seek to row {row} past the {} declared records",
+            self.path,
+            self.declared
+        );
+        self.staged.clear();
+        self.staged_pos = 0;
+        if row == self.declared {
+            self.decoded = self.declared;
+            self.delivered = row;
+            self.chunk_index = self.expected_chunks() as usize;
+            return Ok(());
+        }
+        let target = row / self.chunk_rows;
+        self.ensure_index()?;
+        let off = self.index.as_ref().unwrap()[target as usize];
+        self.reader
+            .seek(SeekFrom::Start(off))
+            .with_context(|| format!("seek in {:?}", self.path))?;
+        self.decoded = target * self.chunk_rows;
+        self.chunk_index = target as usize;
+        self.decode_next_chunk()?;
+        let skip = (row - target * self.chunk_rows) as usize;
+        if skip >= self.staged.len() {
+            return Err(TraceError::CorruptChunk {
+                path: self.path.clone(),
+                chunk: target as usize,
+                detail: format!(
+                    "chunk holds {} rows, cannot reach row {row}",
+                    self.staged.len()
+                ),
+            }
+            .into());
+        }
+        self.staged_pos = skip;
+        self.delivered = row;
+        Ok(())
     }
 
     fn tail_err(&self, e: std::io::Error) -> anyhow::Error {
@@ -914,6 +1206,8 @@ pub(crate) struct V2Scan {
     pub chunks: u64,
     pub payload_bytes: u64,
     pub section_bytes: [u64; 6],
+    /// Whether a valid `TAOTFIX1` chunk-offset footer closed the file.
+    pub index: bool,
 }
 
 pub(crate) fn scan_v2(path: &Path) -> Result<V2Scan> {
@@ -925,6 +1219,7 @@ pub(crate) fn scan_v2(path: &Path) -> Result<V2Scan> {
         chunks: 0,
         payload_bytes: 0,
         section_bytes: [0u64; 6],
+        index: false,
     };
     while src.remaining_on_disk() > 0 {
         let meta = src.decode_next_chunk()?;
@@ -934,6 +1229,9 @@ pub(crate) fn scan_v2(path: &Path) -> Result<V2Scan> {
             *total += size as u64;
         }
     }
+    // The footer (if any) was consumed and validated by the EOF check
+    // on the last chunk (or on open, for an empty trace).
+    scan.index = src.saw_index;
     Ok(scan)
 }
 
@@ -1106,12 +1404,12 @@ mod tests {
     fn writer_bytes_independent_of_append_granularity() {
         let cols = sample_cols("dee", 5_000);
         let all = tmp("grain-all");
-        let mut w = V2Writer::create(&all, "dee", 1_024, MAX_LEVEL).unwrap();
+        let mut w = V2Writer::create(&all, "dee", 1_024, MAX_LEVEL, true).unwrap();
         w.append(&cols).unwrap();
         assert_eq!(w.finish().unwrap(), 5_000);
 
         let split = tmp("grain-split");
-        let mut w = V2Writer::create(&split, "dee", 1_024, MAX_LEVEL).unwrap();
+        let mut w = V2Writer::create(&split, "dee", 1_024, MAX_LEVEL, true).unwrap();
         let mut lo = 0usize;
         for step in [1usize, 700, 99, 1_500, 2_700] {
             let hi = (lo + step).min(cols.len());
@@ -1133,7 +1431,7 @@ mod tests {
     fn file_round_trips_through_compressed_source() {
         let cols = sample_cols("dee", 10_000);
         let path = tmp("rt");
-        let mut w = V2Writer::create(&path, "dee", 4_096, MAX_LEVEL).unwrap();
+        let mut w = V2Writer::create(&path, "dee", 4_096, MAX_LEVEL, true).unwrap();
         w.append(&cols).unwrap();
         w.finish().unwrap();
 
@@ -1158,19 +1456,23 @@ mod tests {
     #[test]
     fn empty_trace_round_trips() {
         let path = tmp("empty");
-        let w = V2Writer::create(&path, "empty", 1_024, MAX_LEVEL).unwrap();
+        let w = V2Writer::create(&path, "empty", 1_024, MAX_LEVEL, true).unwrap();
         assert_eq!(w.finish().unwrap(), 0);
         let mut src = CompressedChunkSource::open(&path).unwrap();
         assert_eq!(src.len_hint(), Some(0));
         let mut buf = ChunkBuf::new();
         assert_eq!(src.next_chunk(&mut buf, 16).unwrap(), 0);
+        // The zero-chunk footer validated on open.
+        assert!(src.saw_index);
     }
 
     #[test]
     fn crc_flip_truncation_and_trailing_bytes_fail_typed() {
+        // Index-less file, so the tail cut lands in record data rather
+        // than the footer (footer corruption has its own test below).
         let cols = sample_cols("dee", 3_000);
         let path = tmp("tamper");
-        let mut w = V2Writer::create(&path, "dee", 1_024, MAX_LEVEL).unwrap();
+        let mut w = V2Writer::create(&path, "dee", 1_024, MAX_LEVEL, false).unwrap();
         w.append(&cols).unwrap();
         w.finish().unwrap();
         let good = std::fs::read(&path).unwrap();
@@ -1222,10 +1524,70 @@ mod tests {
     }
 
     #[test]
+    fn index_footer_round_trips_and_fails_typed_when_corrupt() {
+        let cols = sample_cols("dee", 3_000);
+        let path = tmp("footer");
+        let mut w = V2Writer::create(&path, "dee", 1_024, MAX_LEVEL, true).unwrap();
+        w.append(&cols).unwrap();
+        w.finish().unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        let drain = |path: &Path| -> Result<()> {
+            let mut src = CompressedChunkSource::open(path)?;
+            let mut buf = ChunkBuf::new();
+            while src.next_chunk(&mut buf, 500)? > 0 {}
+            Ok(())
+        };
+
+        // Pristine: drains clean, scan reports the index.
+        drain(&path).unwrap();
+        let scan = scan_v2(&path).unwrap();
+        assert!(scan.index);
+        assert_eq!(scan.chunks, 3);
+
+        // The indexed file is exactly the index-less file plus the
+        // footer: magic + count + 3 offsets + crc32.
+        let noidx = tmp("footer-noidx");
+        let mut w = V2Writer::create(&noidx, "dee", 1_024, MAX_LEVEL, false).unwrap();
+        w.append(&cols).unwrap();
+        w.finish().unwrap();
+        assert!(!scan_v2(&noidx).unwrap().index);
+        let plain = std::fs::read(&noidx).unwrap();
+        assert_eq!(good.len(), plain.len() + 8 + 8 + 3 * 8 + 4);
+        assert_eq!(&good[..plain.len()], &plain[..]);
+
+        // Flip a byte inside the footer's offset table: the stream
+        // fails typed at EOF.
+        let mut bad = good.clone();
+        let n = bad.len();
+        bad[n - 6] ^= 0x01;
+        std::fs::write(&path, &bad).unwrap();
+        let err = drain(&path).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<TraceError>(),
+                Some(TraceError::CorruptIndex { .. })
+            ),
+            "unexpected error: {err:#}"
+        );
+
+        // Truncate inside the footer: also a typed corrupt index.
+        std::fs::write(&path, &good[..n - 5]).unwrap();
+        let err = drain(&path).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<TraceError>(),
+                Some(TraceError::CorruptIndex { .. })
+            ),
+            "unexpected error: {err:#}"
+        );
+    }
+
+    #[test]
     fn compresses_synthetic_traces_well() {
         let cols = sample_cols("dee", 50_000);
         let path = tmp("ratio");
-        let mut w = V2Writer::create(&path, "dee", 1 << 16, MAX_LEVEL).unwrap();
+        let mut w = V2Writer::create(&path, "dee", 1 << 16, MAX_LEVEL, true).unwrap();
         w.append(&cols).unwrap();
         w.finish().unwrap();
         let v2_bytes = std::fs::metadata(&path).unwrap().len();

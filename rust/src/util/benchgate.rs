@@ -137,9 +137,10 @@ pub struct GateOutcome {
     pub compared: usize,
     /// Cases below tolerance.
     pub regressions: Vec<Finding>,
-    /// The report's `pipeline_*` metrics (stage/execute speedups and
-    /// occupancy counters), surfaced informationally so the
-    /// pipelined-vs-serial trajectory is visible in every gate run.
+    /// The report's `pipeline_*` and `sampled_*` metrics (stage/execute
+    /// speedups, occupancy counters, phase-sampling speedup and CPI
+    /// error vs its declared bound), surfaced informationally so both
+    /// trajectories are visible in every gate run.
     pub pipeline_metrics: Vec<(String, f64)>,
 }
 
@@ -233,7 +234,7 @@ pub fn check(current: &Path, baselines_dir: &Path, cfg: &GateConfig) -> Result<G
     let pipeline_metrics: Vec<(String, f64)> = report
         .metrics
         .iter()
-        .filter(|(k, _)| k.starts_with("pipeline_"))
+        .filter(|(k, _)| k.starts_with("pipeline_") || k.starts_with("sampled_"))
         .cloned()
         .collect();
     Ok(GateOutcome {
@@ -387,15 +388,24 @@ mod tests {
         });
         r.metric("pipeline_speedup_workers2", 1.25);
         r.metric("pipeline_exec_busy_frac", 0.9);
+        r.metric("sampled_speedup", 5.0);
         r.metric("smoke", 1.0);
         let current = root.join(bench);
         std::fs::write(&current, r.to_json()).unwrap();
         let o = check(&current, &baselines, &GateConfig::default()).unwrap();
-        assert_eq!(o.pipeline_metrics.len(), 2, "only pipeline_* metrics surface");
+        assert_eq!(
+            o.pipeline_metrics.len(),
+            3,
+            "only pipeline_*/sampled_* metrics surface"
+        );
         assert!(o
             .pipeline_metrics
             .iter()
             .any(|(k, v)| k == "pipeline_speedup_workers2" && (*v - 1.25).abs() < 1e-9));
+        assert!(o
+            .pipeline_metrics
+            .iter()
+            .any(|(k, v)| k == "sampled_speedup" && (*v - 5.0).abs() < 1e-9));
     }
 
     #[test]

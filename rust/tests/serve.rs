@@ -98,6 +98,7 @@ fn loopback_concurrent_jobs_match_offline_cold_and_cached() {
             ctx_uarch: j.ctx_uarch.clone(),
             deadline_ms: None,
             trace: None,
+            plan: None,
         })
         .collect();
 
@@ -214,6 +215,7 @@ fn loopback_trace_jobs_match_bench_jobs_both_formats() {
         ctx_uarch: None,
         deadline_ms: None,
         trace: None,
+        plan: None,
     };
     let bench_out = post_job(&addr, &bench_spec);
     assert_eq!(bench_out.metrics.instructions, insts);
@@ -228,6 +230,7 @@ fn loopback_trace_jobs_match_bench_jobs_both_formats() {
             ctx_uarch: None,
             deadline_ms: None,
             trace: Some(path.to_string_lossy().into_owned()),
+            plan: None,
         };
         let out = post_job(&addr, &tspec);
         assert_eq!(out.metrics.instructions, insts, "{tag} trace job length");
@@ -247,6 +250,7 @@ fn loopback_trace_jobs_match_bench_jobs_both_formats() {
         ctx_uarch: None,
         deadline_ms: None,
         trace: Some(foreign.to_string_lossy().into_owned()),
+        plan: None,
     };
     let resp = http_post(&addr, "/v1/simulate", &fspec.to_json()).unwrap();
     assert_eq!(resp.status, 400, "foreign trace must be a bad request: {}", resp.body);
@@ -292,6 +296,7 @@ fn backpressure_rejects_and_drain_finishes_in_flight_jobs() {
         ctx_uarch: None,
         deadline_ms: None,
         trace: None,
+        plan: None,
     };
     let wait_until = |pred: &dyn Fn(&StatsSnapshot) -> bool, what: &str| {
         let deadline = Instant::now() + Duration::from_secs(30);
@@ -366,6 +371,7 @@ fn stalled_reads_get_408_and_oversized_requests_get_413() {
         ctx_uarch: None,
         deadline_ms: None,
         trace: None,
+        plan: None,
     };
 
     // Stall mid-body for 5x the read timeout: the server must answer
@@ -428,6 +434,7 @@ fn executor_panic_respawns_lane_and_retried_jobs_match_offline() {
         ctx_uarch: None,
         deadline_ms: None,
         trace: None,
+        plan: None,
     };
     // One-shot: the second executor dispatch panics the lane thread
     // while several jobs are streaming through it.
@@ -495,6 +502,7 @@ fn drain_under_executor_panic_exits_clean_with_reloadable_journal() {
         ctx_uarch: None,
         deadline_ms: None,
         trace: None,
+        plan: None,
     };
     // One job to completion before the fault: its chunks are cached
     // and journaled, so the journal has content whatever happens to
@@ -578,6 +586,7 @@ fn cache_journal_survives_daemon_restart() {
             ctx_uarch: None,
             deadline_ms: None,
             trace: None,
+            plan: None,
         })
         .collect();
 

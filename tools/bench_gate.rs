@@ -38,11 +38,23 @@ fn print_outcome(o: &GateOutcome, cfg: &GateConfig) {
         "bench_gate: {} — {} case(s) compared, {} enforcing + {} provisional baseline(s)",
         o.bench, o.compared, o.baselines, o.provisional
     );
-    // Pipelined-vs-serial trajectory (informational): speedups and
-    // occupancy counters the coordinator bench exports.
+    // Pipelined-vs-serial and phase-sampling trajectories
+    // (informational): speedups, occupancy counters, and the sampled
+    // CPI error vs its declared bound the coordinator bench exports.
+    let metric = |name: &str| {
+        o.pipeline_metrics
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| *v)
+    };
+    let error_bound = metric("sampled_error_bound_pct");
     for (k, v) in &o.pipeline_metrics {
         let warn = if k.starts_with("pipeline_speedup") && *v < 1.0 {
             "  (WARN: pipelined below serial on this run)"
+        } else if k == "sampled_speedup" && *v < 4.0 {
+            "  (WARN: sampled replay below the 4x speedup target)"
+        } else if k == "sampled_max_error_pct" && error_bound.is_some_and(|b| *v > b) {
+            "  (WARN: sampled CPI error exceeds the declared bound)"
         } else {
             ""
         };
