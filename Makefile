@@ -9,7 +9,7 @@
 # `make bench-baseline` after a trusted run to append a snapshot.
 
 .PHONY: build test fmt-check clippy bench bench-smoke bench-serve chaos-smoke \
-        bench-gate bench-baseline ci
+        metrics-smoke bench-gate bench-baseline ci
 
 build:
 	cargo build --release
@@ -79,6 +79,54 @@ chaos-smoke: build
 	if [ $$status -eq 0 ]; then status=$$serve_status; fi; \
 	exit $$status
 
+# Metrics smoke (mirrors CI's metrics-smoke job): boot a daemon, drive
+# a small load, scrape /metrics, and assert (a) every expected metric
+# family is present in the exposition and (b) the structural identity
+# cache_hits + cache_misses == jobs_chunks holds exactly.
+metrics-smoke: build
+	d=$$(mktemp -d /tmp/tao-metrics.XXXXXX); \
+	target/release/tao serve --surrogate-dir $$d/artifacts \
+	  --port-file $$d/port --admission-wait-ms 150 --log-json & \
+	serve_pid=$$!; \
+	target/release/tao loadgen --port-file $$d/port \
+	  --jobs 12 --threads 4 --progress-every 5; status=$$?; \
+	if [ $$status -eq 0 ]; then \
+	  addr=$$(cat $$d/port); \
+	  curl -sf "http://$$addr/metrics" > $$d/metrics.txt; status=$$?; \
+	fi; \
+	if [ $$status -eq 0 ]; then \
+	  for fam in tao_jobs_submitted_total tao_jobs_done_total tao_jobs_active \
+	             tao_jobs_chunks_total tao_queue_depth tao_queue_wait_seconds \
+	             tao_cache_hits_total tao_cache_misses_total tao_cache_entries \
+	             tao_lane_jobs_total tao_lane_batches_total tao_lanes_down \
+	             tao_packed_windows_total tao_batch_slots_total \
+	             tao_request_seconds tao_stage_seconds \
+	             tao_fault_checks_total tao_fault_fires_total \
+	             tao_deadline_sweeps_total tao_errors_total \
+	             tao_jobs_rejected_total; do \
+	    grep -q "^$$fam" $$d/metrics.txt \
+	      || { echo "metrics-smoke: family $$fam missing"; status=1; }; \
+	  done; \
+	fi; \
+	if [ $$status -eq 0 ]; then \
+	  awk ' \
+	    /^tao_cache_hits_total/ { hits = $$2 } \
+	    /^tao_cache_misses_total/ { misses = $$2 } \
+	    /^tao_jobs_chunks_total/ { chunks = $$2 } \
+	    END { \
+	      if (hits + misses != chunks) { \
+	        printf "metrics-smoke: hits %d + misses %d != chunks %d\n", hits, misses, chunks; \
+	        exit 1; \
+	      } \
+	      printf "metrics-smoke: hits %d + misses %d == chunks %d\n", hits, misses, chunks; \
+	    }' $$d/metrics.txt; status=$$?; \
+	fi; \
+	curl -sf -X POST "http://$$(cat $$d/port)/v1/shutdown" > /dev/null || true; \
+	wait $$serve_pid; serve_status=$$?; \
+	rm -rf $$d; \
+	if [ $$status -eq 0 ]; then status=$$serve_status; fi; \
+	exit $$status
+
 # Gate the current BENCH_*.json against benches/baselines/.
 bench-gate:
 	cargo run --release --bin bench_gate -- \
@@ -104,4 +152,5 @@ ci:
 	$(MAKE) fmt-check
 	$(MAKE) clippy
 	$(MAKE) bench-smoke
+	$(MAKE) metrics-smoke
 	$(MAKE) bench-gate

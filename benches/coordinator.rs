@@ -175,6 +175,39 @@ fn main() {
         );
     }
 
+    // --- telemetry overhead: armed vs disarmed on the hot engine path ---
+    // The engine's stage spans, pipeline counters, and queue metrics all
+    // sit on this path. Disarmed they cost one relaxed atomic load per
+    // site; armed the whole layer must stay within a 2% throughput
+    // budget (`tools/bench_gate.rs` warns above it).
+    tao_sim::telemetry::disarm();
+    let tm_off = eb.run(&format!("dee-{}k/telemetry-disarmed", insts / 1000), insts, || {
+        engine::simulate_parallel_opts(&artifact, &cols, 2, None, popts)
+            .expect("simulate")
+            .metrics
+            .instructions
+    });
+    tao_sim::telemetry::arm();
+    let tm_on = eb.run(&format!("dee-{}k/telemetry-armed", insts / 1000), insts, || {
+        engine::simulate_parallel_opts(&artifact, &cols, 2, None, popts)
+            .expect("simulate")
+            .metrics
+            .instructions
+    });
+    tao_sim::telemetry::disarm();
+    let overhead_pct = (tm_off.items_per_sec() / tm_on.items_per_sec() - 1.0) * 100.0;
+    println!(
+        "telemetry: armed {:.3} Minst/s vs disarmed {:.3} Minst/s — {:.2}% overhead (budget 2%)",
+        tm_on.items_per_sec() / 1e6,
+        tm_off.items_per_sec() / 1e6,
+        overhead_pct,
+    );
+    report.metric("telemetry_armed_ips", tm_on.items_per_sec());
+    report.metric("telemetry_disarmed_ips", tm_off.items_per_sec());
+    report.metric("telemetry_overhead_pct", overhead_pct);
+    report.push(tm_off);
+    report.push(tm_on);
+
     // The chunked pull path (every `tao simulate --stream` run):
     // dispatch-thread chunk prefetch + per-worker pipelining vs the
     // fully serial pull.

@@ -33,12 +33,14 @@ USAGE:
                [--seed S] [--nb N] [--nq N] [--nm N]
                [--chunk-size N] [--shards K] [--keep-shards] [--stream]
                [--from-trace PATH]   (replay a recorded trace, either format)
+               [--profile [--profile-out F]]   (per-stage latency breakdown)
   tao simulate --model artifacts/tao_uarch_a.hlo.txt --bench mcf
                [--insts N] [--workers W] [--seed S] [--truth a|b|c]
                [--chunk N] [--warmup N] [--stream] [--max-resident N]
                [--trace PATH]   (replay a recorded trace, either format)
                [--sample [--plan PLAN | --slice-rows N --max-phases K]]
                                 (phase-sampled replay; requires --trace)
+               [--profile [--profile-out F]]   (per-stage latency breakdown)
   tao serve    --model A.hlo.txt [--model B.hlo.txt ...] | --surrogate-dir DIR
                [--addr H:P | --port P] [--port-file F] [--queue-depth N]
                [--max-active N] [--cache-entries N] [--max-insts N]
@@ -46,10 +48,13 @@ USAGE:
                [--cache-journal F] [--default-deadline-ms N]
                [--read-timeout-ms N] [--write-timeout-ms N]
                [--faults probe=prob,...]   (also: TAO_FAULTS env var)
+               [--log-json] [--log-level error|warn|info|debug]
+               (GET /metrics serves the Prometheus exposition)
   tao loadgen  --addr H:P | --port-file F  [--jobs N] [--threads K]
                [--solo-jobs N] [--insts N] [--seed S] [--chunk N]
                [--json BENCH_serve.json] [--verify-models DIR]
                [--assert-occupancy] [--shutdown] [--wait-secs N] [--chaos]
+               [--progress-every SECS]   (periodic /metrics summary)
   tao report   <table1|figure2|figure9|figure10a|figure10b|figure11|figure12a|
                 figure12b|figure14|table4|table6|figure15> [opts]
   tao dse      [--designs N] [--insts N] [--seed S]
@@ -124,7 +129,13 @@ fn cmd_datagen(mut args: Args) -> Result<()> {
     let keep_shards = args.opt_flag("--keep-shards");
     let from_generator = args.opt_flag("--stream");
     let from_trace: Option<PathBuf> = args.opt_value("--from-trace")?.map(Into::into);
+    let profile_flag = args.opt_flag("--profile");
+    let profile_out: Option<PathBuf> = args.opt_value("--profile-out")?.map(Into::into);
     args.finish()?;
+    anyhow::ensure!(
+        profile_flag || profile_out.is_none(),
+        "--profile-out names the --profile report; pass --profile"
+    );
     anyhow::ensure!(chunk_size >= 1, "--chunk-size must be at least 1");
     anyhow::ensure!(shards >= 1, "--shards must be at least 1");
 
@@ -153,7 +164,17 @@ fn cmd_datagen(mut args: Args) -> Result<()> {
         from_generator,
         from_trace,
     };
-    datagen::run(&out, &wls, &uarchs, &opts)
+    if !profile_flag {
+        return datagen::run(&out, &wls, &uarchs, &opts);
+    }
+    // `--profile`: arm the registry on a fresh slate so the per-stage
+    // attribution (functional / detailed / extract_write / merge spans
+    // inside datagen) covers exactly this run.
+    crate::telemetry::registry().reset();
+    crate::telemetry::arm();
+    let mut prof = crate::telemetry::Profile::start();
+    prof.phase("generate", || datagen::run(&out, &wls, &uarchs, &opts))?;
+    crate::coordinator::cli::finish_profile(Some(prof), profile_out)
 }
 
 #[cfg(test)]

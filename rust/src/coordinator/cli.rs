@@ -15,6 +15,7 @@ use crate::detailed::DetailedSim;
 use crate::functional::FunctionalSim;
 use crate::sampling::SamplingPlan;
 use crate::stats::simulation_error_percent;
+use crate::telemetry::{self, registry, Profile};
 use crate::trace::{open_trace_source, TraceSource};
 use crate::uarch::UarchConfig;
 use crate::workloads;
@@ -49,7 +50,24 @@ pub fn cmd_simulate(mut args: Args) -> Result<()> {
     let plan_path: Option<PathBuf> = args.opt_value("--plan")?.map(Into::into);
     let sample_slice_rows: Option<u64> = args.opt_parse("--slice-rows")?;
     let sample_max_phases: Option<usize> = args.opt_parse("--max-phases")?;
+    let profile_flag = args.opt_flag("--profile");
+    let profile_out: Option<PathBuf> = args.opt_value("--profile-out")?.map(Into::into);
     args.finish()?;
+    anyhow::ensure!(
+        profile_flag || profile_out.is_none(),
+        "--profile-out names the --profile report; pass --profile"
+    );
+    // `--profile` arms the registry for this one-shot run (a fresh
+    // slate, so stage attribution reflects exactly this invocation)
+    // and times the sequential top-level phases; they tile the wall
+    // clock by construction.
+    let mut prof = if profile_flag {
+        registry().reset();
+        telemetry::arm();
+        Some(Profile::start())
+    } else {
+        None
+    };
     anyhow::ensure!(max_resident >= 1, "--max-resident must be positive");
     anyhow::ensure!(
         sample || (plan_path.is_none() && sample_slice_rows.is_none() && sample_max_phases.is_none()),
@@ -103,14 +121,16 @@ pub fn cmd_simulate(mut args: Args) -> Result<()> {
             opts.chunk,
             opts.warmup
         );
-        let out = engine::simulate_sampled(&model, &trace, &plan, workers, opts)?;
+        let out = timed(&mut prof, "sampled_replay", || {
+            engine::simulate_sampled(&model, &trace, &plan, workers, opts)
+        })?;
         print_prediction(&plan.name, &out.result);
         println!("sampled rows       : {} (+{} warm-up)", out.simulated_rows, out.warmup_rows);
         println!(
             "sampled fraction   : {:.1}%",
             out.simulated_rows as f64 / out.total_rows.max(1) as f64 * 100.0
         );
-        return Ok(());
+        return finish_profile(prof, profile_out);
     }
 
     if let Some(trace) = trace_path {
@@ -131,9 +151,11 @@ pub fn cmd_simulate(mut args: Args) -> Result<()> {
             opts.chunk,
             opts.warmup
         );
-        let result = engine::simulate_parallel_chunked(&model, &mut *source, workers, opts)?;
+        let result = timed(&mut prof, "trace_replay", || {
+            engine::simulate_parallel_chunked(&model, &mut *source, workers, opts)
+        })?;
         print_prediction(&bench, &result);
-        return Ok(());
+        return finish_profile(prof, profile_out);
     }
 
     let workload =
@@ -166,15 +188,21 @@ pub fn cmd_simulate(mut args: Args) -> Result<()> {
             opts.chunk, opts.warmup
         );
         let mut source = FunctionalSim::new(&program).into_chunks(insts);
-        engine::simulate_parallel_chunked(&model, &mut source, workers, opts)?
+        timed(&mut prof, "stream_inference", || {
+            engine::simulate_parallel_chunked(&model, &mut source, workers, opts)
+        })?
     } else {
         eprintln!("simulate: generating functional trace ({insts} insts of {bench_name})...");
-        let cols = FunctionalSim::new(&program).run(insts).to_columns();
+        let cols = timed(&mut prof, "trace_gen", || {
+            FunctionalSim::new(&program).run(insts).to_columns()
+        });
         eprintln!(
             "simulate: loading {model:?} and running inference (workers={workers}, chunk={}, warmup={})...",
             opts.chunk, opts.warmup
         );
-        engine::simulate_parallel_opts(&model, &cols, workers, None, opts)?
+        timed(&mut prof, "inference", || {
+            engine::simulate_parallel_opts(&model, &cols, workers, None, opts)
+        })?
     };
     print_prediction(&bench_name, &result);
 
@@ -182,7 +210,9 @@ pub fn cmd_simulate(mut args: Args) -> Result<()> {
         let cfg = UarchConfig::preset(&uarch_name)
             .with_context(|| format!("unknown uarch {uarch_name}"))?;
         eprintln!("simulate: running detailed ground truth on {}...", cfg.name);
-        let (_, stats) = DetailedSim::new(&program, &cfg).stats_only().run(insts);
+        let (_, stats) = timed(&mut prof, "detailed_truth", || {
+            DetailedSim::new(&program, &cfg).stats_only().run(insts)
+        });
         println!("--- ground truth ({}) ---", cfg.name);
         println!("CPI truth          : {:.4}", stats.cpi());
         println!(
@@ -192,6 +222,28 @@ pub fn cmd_simulate(mut args: Args) -> Result<()> {
         println!("bMPKI truth        : {:.2}", stats.branch_mpki());
         println!("L1D MPKI truth     : {:.2}", stats.l1d_mpki());
     }
+    finish_profile(prof, profile_out)
+}
+
+/// Run `f` under a named profile phase when profiling, plainly
+/// otherwise.
+fn timed<T>(prof: &mut Option<Profile>, name: &str, f: impl FnOnce() -> T) -> T {
+    match prof.as_mut() {
+        Some(p) => p.phase(name, f),
+        None => f(),
+    }
+}
+
+/// Print the `--profile` per-stage breakdown and write the JSON report
+/// (`--profile-out`, default `profile.json`).
+pub(crate) fn finish_profile(prof: Option<Profile>, out: Option<PathBuf>) -> Result<()> {
+    let Some(prof) = prof else { return Ok(()) };
+    eprint!("{}", prof.render_table());
+    let path = out.unwrap_or_else(|| "profile.json".into());
+    std::fs::write(&path, prof.to_json().render())
+        .with_context(|| format!("write {path:?}"))?;
+    eprintln!("profile: wrote {}", path.display());
+    telemetry::disarm();
     Ok(())
 }
 

@@ -806,13 +806,19 @@ fn flush_batch(
         return Ok(());
     }
     {
-        let (ops_buf, feat_buf) = session.buffers();
-        scratch.batcher.materialize(ops_buf, feat_buf);
+        let _sp = crate::stage_span!("stage");
+        {
+            let (ops_buf, feat_buf) = session.buffers();
+            scratch.batcher.materialize(ops_buf, feat_buf);
+        }
+        if kind == ModelKind::SimNet {
+            scratch.ctx.materialize(session.ctx_buffer());
+        }
     }
-    if kind == ModelKind::SimNet {
-        scratch.ctx.materialize(session.ctx_buffer());
-    }
-    let out = session.run(staged)?;
+    let out = {
+        let _sp = crate::stage_span!("execute");
+        session.run(staged)?
+    };
     let skip_now = (*skip).min(out.fetch.len());
     accum.absorb_range(&out, kind, skip_now);
     *skip -= skip_now;
@@ -969,7 +975,10 @@ pub fn simulate_chunked<C: ChunkSource + ?Sized>(
     let mut batches = 0u64;
     let mut buf = ChunkBuf::new();
     loop {
-        let n = source.next_chunk(&mut buf, chunk_rows)?;
+        let n = {
+            let _sp = crate::stage_span!("decode");
+            source.next_chunk(&mut buf, chunk_rows)?
+        };
         if n == 0 {
             break;
         }
@@ -985,6 +994,7 @@ pub fn simulate_chunked<C: ChunkSource + ?Sized>(
                 buf.ctx.len()
             );
         }
+        let _sp = crate::stage_span!("extract");
         for i in 0..n {
             let rec = buf.cols.record(i);
             let ctx_row = (kind == ModelKind::SimNet)

@@ -38,6 +38,7 @@
 //! down a serving lane's executor silently.
 
 use crate::runtime::{ModelKind, ModelOutputs, Session};
+use crate::telemetry::{registry, Counter};
 use crate::util::fault::panic_message;
 use anyhow::{bail, Result};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -50,12 +51,51 @@ use std::time::Instant;
 // Occupancy counters
 // ---------------------------------------------------------------------
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 struct PipeCounters {
     batches: AtomicU64,
     stage_stall_ns: AtomicU64,
     exec_busy_ns: AtomicU64,
     exec_idle_ns: AtomicU64,
+    // Process-wide telemetry mirrors (summed across every pipeline in
+    // the process): inert single relaxed loads while telemetry is
+    // disarmed, so offline runs pay nothing.
+    tele_batches: Counter,
+    tele_stage_stall_ns: Counter,
+    tele_exec_busy_ns: Counter,
+    tele_exec_idle_ns: Counter,
+}
+
+impl PipeCounters {
+    fn new() -> PipeCounters {
+        let reg = registry();
+        PipeCounters {
+            batches: AtomicU64::new(0),
+            stage_stall_ns: AtomicU64::new(0),
+            exec_busy_ns: AtomicU64::new(0),
+            exec_idle_ns: AtomicU64::new(0),
+            tele_batches: reg.counter(
+                "tao_pipeline_batches_total",
+                "Batches executed through stage/execute pipelines.",
+                &[],
+            ),
+            tele_stage_stall_ns: reg.counter(
+                "tao_pipeline_stage_stall_ns_total",
+                "Nanoseconds the staging side blocked waiting for a free buffer set.",
+                &[],
+            ),
+            tele_exec_busy_ns: reg.counter(
+                "tao_pipeline_exec_busy_ns_total",
+                "Nanoseconds pipeline executor threads spent running the step.",
+                &[],
+            ),
+            tele_exec_idle_ns: reg.counter(
+                "tao_pipeline_exec_idle_ns_total",
+                "Nanoseconds pipeline executor threads spent waiting for a staged batch.",
+                &[],
+            ),
+        }
+    }
 }
 
 /// Snapshot of a pipeline's occupancy counters (exported into
@@ -169,7 +209,7 @@ where
         // send and shutdown joins cleanly.
         let (to_exec, rx_staged) = sync_channel::<Staged<B, P>>(1);
         let (tx_done, from_exec) = sync_channel::<PipeMsg<B, P, R>>(bufs.len() + 2);
-        let counters = Arc::new(PipeCounters::default());
+        let counters = Arc::new(PipeCounters::new());
         let exec_counters = counters.clone();
         let handle = std::thread::spawn(move || {
             let mut step = match catch_unwind(AssertUnwindSafe(init)) {
@@ -191,9 +231,9 @@ where
                     Ok(s) => s,
                     Err(_) => return,
                 };
-                exec_counters
-                    .exec_idle_ns
-                    .fetch_add(idle.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                let idle_ns = idle.elapsed().as_nanos() as u64;
+                exec_counters.exec_idle_ns.fetch_add(idle_ns, Ordering::Relaxed);
+                exec_counters.tele_exec_idle_ns.inc_by(idle_ns);
                 let busy = Instant::now();
                 // A step panic is a batch-scoped error like any other:
                 // the staged buffers are only borrowed, so they return
@@ -202,10 +242,11 @@ where
                     step(&staged.buf, &staged.payload).map_err(|e| format!("{e:#}"))
                 }))
                 .unwrap_or_else(|p| Err(format!("step panicked: {}", panic_message(p.as_ref()))));
-                exec_counters
-                    .exec_busy_ns
-                    .fetch_add(busy.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                let busy_ns = busy.elapsed().as_nanos() as u64;
+                exec_counters.exec_busy_ns.fetch_add(busy_ns, Ordering::Relaxed);
+                exec_counters.tele_exec_busy_ns.inc_by(busy_ns);
                 exec_counters.batches.fetch_add(1, Ordering::Relaxed);
+                exec_counters.tele_batches.inc();
                 let msg = PipeMsg::Done {
                     buf: staged.buf,
                     payload: staged.payload,
@@ -282,9 +323,9 @@ impl<B, P, R> StagePipeline<B, P, R> {
             .from_exec
             .recv()
             .map_err(|_| anyhow::anyhow!("pipeline worker thread exited"))?;
-        self.counters
-            .stage_stall_ns
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let stall_ns = t0.elapsed().as_nanos() as u64;
+        self.counters.stage_stall_ns.fetch_add(stall_ns, Ordering::Relaxed);
+        self.counters.tele_stage_stall_ns.inc_by(stall_ns);
         if matches!(msg, PipeMsg::Done { .. }) {
             self.in_flight -= 1;
         }

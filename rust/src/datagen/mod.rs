@@ -1127,20 +1127,32 @@ pub fn generate_streamed(
     opts: &DatagenOptions,
 ) -> Result<(Manifest, StreamStats)> {
     let program = workload.build(opts.seed);
-    let functional = FunctionalSim::new(&program).run(opts.instructions);
-    let (detailed, _) = DetailedSim::new(&program, uarch).run(opts.instructions);
+    let functional = {
+        let _sp = crate::stage_span!("functional");
+        FunctionalSim::new(&program).run(opts.instructions)
+    };
+    let (detailed, _) = {
+        let _sp = crate::stage_span!("detailed");
+        DetailedSim::new(&program, uarch).run(opts.instructions)
+    };
     let adjusted = dataset::adjust(&detailed);
     let d = dir.join(&uarch.name).join(workload.name);
     std::fs::create_dir_all(&d).with_context(|| format!("mkdir {d:?}"))?;
-    let (manifest, stats) = stream_dataset(
-        &d,
-        &functional.records[..],
-        &adjusted.samples,
-        adjusted.total_cycles,
-        opts.features,
-        opts.stream,
-    )?;
-    merge_shards(&d, &manifest, !opts.stream.keep_shards)?;
+    let (manifest, stats) = {
+        let _sp = crate::stage_span!("extract_write");
+        stream_dataset(
+            &d,
+            &functional.records[..],
+            &adjusted.samples,
+            adjusted.total_cycles,
+            opts.features,
+            opts.stream,
+        )?
+    };
+    {
+        let _sp = crate::stage_span!("merge");
+        merge_shards(&d, &manifest, !opts.stream.keep_shards)?;
+    }
     std::fs::write(
         d.join("total_cycles.txt"),
         format!("{}\n", adjusted.total_cycles),

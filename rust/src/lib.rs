@@ -29,6 +29,7 @@ pub mod runtime;
 pub mod sampling;
 pub mod serve;
 pub mod stats;
+pub mod telemetry;
 pub mod functional;
 pub mod isa;
 pub mod trace;

@@ -84,7 +84,21 @@ pub fn cmd_serve(mut args: Args) -> Result<()> {
     let port_file: Option<PathBuf> = args.opt_value("--port-file")?.map(Into::into);
     let stats_out: Option<PathBuf> = args.opt_value("--stats-out")?.map(Into::into);
     let faults: Option<String> = args.opt_value("--faults")?;
+    let log_json = args.opt_flag("--log-json");
+    let log_level: Option<String> = args.opt_value("--log-level")?;
     args.finish()?;
+
+    // Structured logs: `--log-json` turns on JSON event lines to
+    // stderr at `info`; `--log-level LEVEL` picks the threshold
+    // (error/warn/info/debug) and implies `--log-json`.
+    if log_json || log_level.is_some() {
+        let level = match log_level.as_deref() {
+            Some(s) => crate::telemetry::Level::from_str(s)
+                .with_context(|| format!("bad --log-level {s:?} (error|warn|info|debug)"))?,
+            None => crate::telemetry::Level::Info,
+        };
+        crate::telemetry::log::enable_json(level);
+    }
 
     // Chaos probes: `--faults name=prob,...` or the TAO_FAULTS env var
     // (flag wins). Disarmed probes cost one relaxed atomic load.
@@ -176,6 +190,7 @@ pub fn cmd_loadgen(mut args: Args) -> Result<()> {
     let addr = args.opt_value("--addr")?;
     let port_file: Option<PathBuf> = args.opt_value("--port-file")?.map(Into::into);
     let wait_secs: u64 = args.opt_parse("--wait-secs")?.unwrap_or(30);
+    let progress_every: Option<u64> = args.opt_parse("--progress-every")?;
     let opts = LoadgenOptions {
         addr: resolve_addr(addr, port_file, Duration::from_secs(wait_secs))?,
         jobs: args.opt_parse("--jobs")?.unwrap_or(defaults.jobs),
@@ -189,6 +204,7 @@ pub fn cmd_loadgen(mut args: Args) -> Result<()> {
         assert_occupancy: args.opt_flag("--assert-occupancy"),
         shutdown_after: args.opt_flag("--shutdown"),
         chaos: args.opt_flag("--chaos"),
+        progress_every: progress_every.map(Duration::from_secs),
     };
     args.finish()?;
     run_loadgen(&opts)?;

@@ -85,6 +85,17 @@ pub fn read_request<R: BufRead>(reader: &mut R) -> Result<Request> {
 
 /// Write an HTTP/1.1 response with a JSON body.
 pub fn write_response<W: Write>(w: &mut W, status: u16, body: &str) -> Result<()> {
+    write_response_typed(w, status, "application/json", body)
+}
+
+/// Write an HTTP/1.1 response with an explicit `Content-Type` (the
+/// `/metrics` endpoint answers Prometheus text exposition, not JSON).
+pub fn write_response_typed<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    body: &str,
+) -> Result<()> {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
@@ -100,7 +111,7 @@ pub fn write_response<W: Write>(w: &mut W, status: u16, body: &str) -> Result<()
     };
     write!(
         w,
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
         body.len()
     )?;
     w.flush()?;

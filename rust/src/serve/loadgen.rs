@@ -34,14 +34,15 @@ use super::protocol::{
     artifacts_from_json, resolve_ctx_uarch, JobOutcome, JobSpec, ServeError, StatsSnapshot,
 };
 use crate::stats::Metrics;
+use crate::telemetry::prometheus::{histogram_quantile, parse as parse_prom, sample_value};
 use crate::util::benchkit::{BenchReport, Measurement};
 use crate::util::fault::{self, Probe};
 use crate::util::rng::Rng;
 use crate::workloads::{mixed_scenarios, ScenarioArtifact, ScenarioJob};
 use anyhow::{bail, ensure, Context, Result};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Loadgen options (see `tao loadgen --help`).
@@ -72,6 +73,9 @@ pub struct LoadgenOptions {
     pub shutdown_after: bool,
     /// Run the chaos soak instead of the measurement sweep.
     pub chaos: bool,
+    /// Print a periodic progress summary sourced from the daemon's
+    /// `/metrics` exposition every this many seconds (`None` = quiet).
+    pub progress_every: Option<Duration>,
 }
 
 impl Default for LoadgenOptions {
@@ -89,6 +93,7 @@ impl Default for LoadgenOptions {
             assert_occupancy: false,
             shutdown_after: false,
             chaos: false,
+            progress_every: None,
         }
     }
 }
@@ -104,7 +109,69 @@ fn to_spec(j: &ScenarioJob, chunk: usize) -> JobSpec {
         deadline_ms: None,
         trace: None,
         plan: None,
+        trace_id: None,
     }
+}
+
+/// Background progress reporter (`--progress-every N`): polls the
+/// daemon's Prometheus `/metrics` exposition on a cadence and prints a
+/// one-line summary — it consumes the same bytes a real scraper would,
+/// so it doubles as a continuous exposition-format check. Scrape
+/// failures are reported once per cadence and never fail the run.
+struct ProgressReporter {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ProgressReporter {
+    fn start(addr: &str, every: Duration) -> ProgressReporter {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let addr = addr.to_string();
+        let handle = std::thread::spawn(move || {
+            let mut next = Instant::now() + every;
+            while !flag.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(50));
+                if Instant::now() < next {
+                    continue;
+                }
+                next += every;
+                match scrape_summary(&addr) {
+                    Ok(line) => eprintln!("loadgen: progress — {line}"),
+                    Err(e) => eprintln!("loadgen: progress scrape failed: {e:#}"),
+                }
+            }
+        });
+        ProgressReporter { stop, handle: Some(handle) }
+    }
+
+    fn finish(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn scrape_summary(addr: &str) -> Result<String> {
+    let resp = http_get(addr, "/metrics")?;
+    ensure!(resp.status == 200, "/metrics returned {}", resp.status);
+    let samples = parse_prom(&resp.body)?;
+    let v = |name: &str| sample_value(&samples, name, &[]).unwrap_or(0.0);
+    let done = v("tao_jobs_done_total");
+    let submitted = v("tao_jobs_submitted_total");
+    let depth = v("tao_queue_depth");
+    let active = v("tao_jobs_active");
+    let hits = v("tao_cache_hits_total");
+    let misses = v("tao_cache_misses_total");
+    let hit_rate = 100.0 * hits / (hits + misses).max(1.0);
+    let p95_ms = histogram_quantile(&samples, "tao_request_seconds", 0.95)
+        .map(|s| s * 1e3)
+        .unwrap_or(0.0);
+    Ok(format!(
+        "{done:.0}/{submitted:.0} jobs done, {active:.0} active, queue {depth:.0}, \
+         cache hit {hit_rate:.1}%, req p95 {p95_ms:.1}ms"
+    ))
 }
 
 /// Exponential backoff with deterministic jitter: `10ms × 2^attempt`
@@ -267,6 +334,7 @@ pub fn run_loadgen(opts: &LoadgenOptions) -> Result<BenchReport> {
         arts.len(),
         arts.iter().map(|a| a.name.as_str()).collect::<Vec<_>>().join(", ")
     );
+    let progress = opts.progress_every.map(|every| ProgressReporter::start(addr, every));
 
     let mut report = BenchReport::new();
 
@@ -374,6 +442,9 @@ pub fn run_loadgen(opts: &LoadgenOptions) -> Result<BenchReport> {
             solo_delta.occupancy()
         );
     }
+    if let Some(p) = progress {
+        p.finish();
+    }
 
     if let Some(path) = &opts.json_out {
         report.write_json(path).with_context(|| format!("write {path:?}"))?;
@@ -457,6 +528,7 @@ pub fn run_chaos(opts: &LoadgenOptions) -> Result<BenchReport> {
         specs.len(),
         arts.len()
     );
+    let progress = opts.progress_every.map(|every| ProgressReporter::start(addr, every));
 
     // Client-side abuse: ~2% of submissions stall mid-body for 250ms
     // (short of the server's default read timeout, so they must still
@@ -525,6 +597,9 @@ pub fn run_chaos(opts: &LoadgenOptions) -> Result<BenchReport> {
         }
     }
     ensure!(succeeded > 0, "chaos soak: every job failed — daemon never served");
+    if let Some(p) = progress {
+        p.finish();
+    }
 
     let mut report = BenchReport::new();
     report.push(phase_case("serve/chaos", 2 * total_insts, elapsed));

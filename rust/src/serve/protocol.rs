@@ -61,6 +61,12 @@ pub struct JobSpec {
     /// whole-trace metrics by weighted accumulator merge. The served
     /// `metrics.instructions` still counts every trace row.
     pub plan: Option<String>,
+    /// Client-supplied trace id for cross-system correlation (echoed in
+    /// the outcome and threaded through the daemon's `--log-json`
+    /// lines). `None` lets the server mint one at admission. Restricted
+    /// to 1–64 `[A-Za-z0-9_-]` chars so ids stay greppable and cannot
+    /// inject into log lines.
+    pub trace_id: Option<String>,
 }
 
 /// Largest integer the JSON number channel carries exactly (`f64`
@@ -102,7 +108,16 @@ impl JobSpec {
             deadline_ms: j.get("deadline_ms").and_then(Json::as_u64),
             trace,
             plan,
+            trace_id: j.get("trace_id").and_then(Json::as_str).map(str::to_string),
         };
+        if let Some(id) = &spec.trace_id {
+            ensure!(
+                !id.is_empty()
+                    && id.len() <= 64
+                    && id.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'_' || b == b'-'),
+                "trace_id must be 1-64 chars of [A-Za-z0-9_-]"
+            );
+        }
         ensure!(spec.trace.is_some() || spec.insts >= 1, "insts must be positive");
         ensure!(spec.chunk >= 1, "chunk must be positive");
         ensure!(spec.deadline_ms != Some(0), "deadline_ms must be positive");
@@ -149,6 +164,9 @@ impl JobSpec {
         if let Some(d) = self.deadline_ms {
             pairs.push(("deadline_ms", Json::of_u64(d)));
         }
+        if let Some(id) = &self.trace_id {
+            pairs.push(("trace_id", Json::of_str(id)));
+        }
         Json::obj(pairs).render()
     }
 }
@@ -185,6 +203,9 @@ pub struct JobOutcome {
     pub cache_misses: u64,
     /// Wall-clock from admission to completion, milliseconds.
     pub elapsed_ms: f64,
+    /// The job's trace id (client-supplied or server-minted): the grep
+    /// key tying this response to the daemon's `--log-json` lines.
+    pub trace_id: String,
 }
 
 fn metrics_json(m: &Metrics) -> Json {
@@ -225,6 +246,7 @@ impl JobOutcome {
                 ]),
             ),
             ("elapsed_ms", Json::Num(self.elapsed_ms)),
+            ("trace_id", Json::of_str(&self.trace_id)),
         ])
         .render()
     }
@@ -240,6 +262,12 @@ impl JobOutcome {
             cache_hits: cache.req_u64("hits")?,
             cache_misses: cache.req_u64("misses")?,
             elapsed_ms: j.req_f64("elapsed_ms")?,
+            // Absent from pre-telemetry daemons' bodies; empty then.
+            trace_id: j
+                .get("trace_id")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
         })
     }
 }
@@ -482,6 +510,23 @@ impl StatsSnapshot {
 
     /// Render the `/v1/stats` body.
     pub fn to_json(&self) -> String {
+        self.json_obj().render()
+    }
+
+    /// Render the `/v1/stats` body with the daemon's per-lane detail
+    /// appended under `"lanes"`. [`StatsSnapshot::from_json`] reads
+    /// only the scalar fields, so clients parse both shapes unchanged.
+    pub fn to_json_with_lanes(&self, lanes: Json) -> String {
+        match self.json_obj() {
+            Json::Obj(mut m) => {
+                m.insert("lanes".to_string(), lanes);
+                Json::Obj(m).render()
+            }
+            _ => unreachable!("json_obj always builds an object"),
+        }
+    }
+
+    fn json_obj(&self) -> Json {
         Json::obj([
             ("jobs_submitted", Json::of_u64(self.jobs_submitted)),
             ("jobs_done", Json::of_u64(self.jobs_done)),
@@ -499,7 +544,6 @@ impl StatsSnapshot {
             ("cache_recovered", Json::of_u64(self.cache_recovered)),
             ("lane_restarts", Json::of_u64(self.lane_restarts)),
         ])
-        .render()
     }
 
     /// Parse a `/v1/stats` body.
@@ -681,8 +725,17 @@ mod tests {
             deadline_ms: Some(5_000),
             trace: None,
             plan: None,
+            trace_id: Some("client-abc_123".into()),
         };
         assert_eq!(JobSpec::from_json(&spec.to_json()).unwrap(), spec);
+        // Hostile trace ids are refused before admission.
+        for bad in ["", "has space", "quo\"te", &"x".repeat(65)] {
+            let body = format!(
+                r#"{{"bench":"mcf","insts":10,"artifact":"x","trace_id":{}}}"#,
+                Json::of_str(bad).render()
+            );
+            assert!(JobSpec::from_json(&body).is_err(), "trace_id {bad:?} must be rejected");
+        }
         // Trace jobs: bench/insts come from the file, so the wire body
         // must omit them — and the round trip preserves the path.
         let tspec = JobSpec {
@@ -695,6 +748,7 @@ mod tests {
             deadline_ms: None,
             trace: Some("/tmp/mcf.trace".into()),
             plan: None,
+            trace_id: None,
         };
         assert_eq!(JobSpec::from_json(&tspec.to_json()).unwrap(), tspec);
         assert!(
@@ -756,6 +810,7 @@ mod tests {
             cache_hits: 2,
             cache_misses: 3,
             elapsed_ms: 12.5,
+            trace_id: "9f3c0000aa11bb22".into(),
         };
         let back = JobOutcome::from_json(&out.to_json()).unwrap();
         assert_eq!(back.metrics.cycles.to_bits(), out.metrics.cycles.to_bits());
@@ -876,6 +931,7 @@ mod tests {
             deadline_ms: None,
             trace: None,
             plan: None,
+            trace_id: None,
         };
         assert_eq!(
             validate_spec(&spec, &pool, 1_000).unwrap(),
@@ -926,6 +982,7 @@ mod tests {
             deadline_ms: None,
             trace: Some(trace.to_string_lossy().into_owned()),
             plan: None,
+            trace_id: None,
         };
         assert_eq!(
             validate_spec(&tspec, &pool, 1_000).unwrap(),

@@ -12,6 +12,7 @@
 //! queue serves every lane, and the bound covers the whole daemon.
 
 use super::protocol::{JobOutcome, JobSpec, ServeError};
+use crate::telemetry::{registry, Gauge, Histogram};
 use crate::util::fault::{self, Probe};
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex, PoisonError};
@@ -29,6 +30,9 @@ pub struct QueuedJob {
     /// Absolute cancellation deadline (spec `deadline_ms` or the
     /// server default, resolved at admission). `None` = no deadline.
     pub deadline: Option<Instant>,
+    /// The job's trace id (client-supplied or minted at admission):
+    /// the correlation key for `--log-json` lines and span logs.
+    pub trace_id: String,
 }
 
 impl QueuedJob {
@@ -57,6 +61,8 @@ pub struct JobQueue {
     state: Mutex<State>,
     cond: Condvar,
     capacity: usize,
+    depth_gauge: Gauge,
+    wait_hist: Histogram,
 }
 
 impl JobQueue {
@@ -67,6 +73,16 @@ impl JobQueue {
             state: Mutex::new(State { pending: VecDeque::new(), closed: false }),
             cond: Condvar::new(),
             capacity,
+            depth_gauge: registry().gauge(
+                "tao_queue_depth",
+                "Jobs admitted and waiting for a lane.",
+                &[],
+            ),
+            wait_hist: registry().histogram(
+                "tao_queue_wait_seconds",
+                "Time from admission to lane pickup.",
+                &[],
+            ),
         }
     }
 
@@ -81,6 +97,7 @@ impl JobQueue {
             return Err((job, SubmitError::Full));
         }
         st.pending.push_back(job);
+        self.depth_gauge.set(st.pending.len() as i64);
         drop(st);
         self.cond.notify_all();
         Ok(())
@@ -99,7 +116,12 @@ impl JobQueue {
         let mut st = fault::relock(&self.state);
         loop {
             if let Some(i) = st.pending.iter().position(|j| j.spec.artifact == artifact) {
-                return st.pending.remove(i);
+                let job = st.pending.remove(i);
+                self.depth_gauge.set(st.pending.len() as i64);
+                if let Some(j) = &job {
+                    self.wait_hist.record(j.admitted_at.elapsed());
+                }
+                return job;
             }
             if st.closed {
                 return None;
@@ -163,10 +185,12 @@ mod tests {
                     deadline_ms: None,
                     trace: None,
                     plan: None,
+                    trace_id: None,
                 },
                 done: tx,
                 admitted_at: Instant::now(),
                 deadline: None,
+                trace_id: String::new(),
             },
             rx,
         )

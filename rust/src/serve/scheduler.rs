@@ -64,6 +64,7 @@ use crate::coordinator::pipeline::{
 };
 use crate::functional::FunctionalSim;
 use crate::runtime::{ModelKind, ModelOutputs, PooledArtifact};
+use crate::telemetry::{self, log_enabled, registry, Counter, Field, Level, Stage};
 use crate::trace::{ChunkBuf, ChunkSource, OwnedChunkSource, CTX_WIDTH};
 use crate::util::fault::{self, Probe};
 use anyhow::{Context, Result};
@@ -72,8 +73,85 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{
     sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
 };
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------
+// Scheduler telemetry
+// ---------------------------------------------------------------------
+
+/// Pre-resolved scheduler-wide metric handles. `tao_jobs_chunks_total`
+/// and the cache hit/miss counters are incremented at the *same*
+/// segment-decision site in [`ActiveJob::next_window`], so
+/// `hits + misses == chunks` holds structurally — the CI metrics-smoke
+/// job asserts that identity over `/metrics`.
+struct SchedTele {
+    chunks: Counter,
+    cache_hits: Counter,
+    cache_misses: Counter,
+    deadline_sweeps: Counter,
+    deadline_expired: Counter,
+    packed_windows: Counter,
+    batch_slots: Counter,
+}
+
+fn tele() -> &'static SchedTele {
+    static T: OnceLock<SchedTele> = OnceLock::new();
+    T.get_or_init(|| {
+        let reg = registry();
+        SchedTele {
+            chunks: reg.counter(
+                "tao_jobs_chunks_total",
+                "Trace chunks pulled by serving jobs (each is a cache hit or miss).",
+                &[],
+            ),
+            cache_hits: reg.counter(
+                "tao_cache_hits_total",
+                "Prediction-cache chunk hits at the pack boundary.",
+                &[],
+            ),
+            cache_misses: reg.counter(
+                "tao_cache_misses_total",
+                "Prediction-cache chunk misses at the pack boundary.",
+                &[],
+            ),
+            deadline_sweeps: reg.counter(
+                "tao_deadline_sweeps_total",
+                "Lane deadline sweep passes over active jobs.",
+                &[],
+            ),
+            deadline_expired: reg.counter(
+                "tao_deadline_expired_total",
+                "Jobs cancelled because their deadline expired.",
+                &[],
+            ),
+            packed_windows: reg.counter(
+                "tao_packed_windows_total",
+                "Context windows packed into executed batches.",
+                &[],
+            ),
+            batch_slots: reg.counter(
+                "tao_batch_slots_total",
+                "Slots available in executed batches (sum of lane B).",
+                &[],
+            ),
+        }
+    })
+}
+
+/// Interned serving-side decode stage (`tao_stage_seconds{stage="serve_decode"}`),
+/// span-traced with each job's trace id.
+fn serve_decode_stage() -> &'static Stage {
+    static S: OnceLock<Stage> = OnceLock::new();
+    S.get_or_init(|| Stage::new("serve_decode"))
+}
+
+/// Help text for the per-lane counter families (satellite of the
+/// respawn-loss fix: the registry cells outlive lane threads, so these
+/// stay cumulative across supervisor respawns).
+const LANE_JOBS_HELP: &str = "Jobs answered by this artifact's lane (cumulative across respawns).";
+const LANE_BATCHES_HELP: &str =
+    "Batches executed by this artifact's lane (cumulative across respawns).";
 
 /// Lane tuning knobs.
 #[derive(Debug, Clone, Copy)]
@@ -207,6 +285,7 @@ struct ActiveJob {
     done: DoneTx,
     admitted_at: Instant,
     deadline: Option<Instant>,
+    trace_id: String,
 }
 
 impl ActiveJob {
@@ -215,6 +294,7 @@ impl ActiveJob {
         done: DoneTx,
         admitted_at: Instant,
         deadline: Option<Instant>,
+        trace_id: String,
         art: &PooledArtifact,
     ) -> Result<ActiveJob> {
         let kind = art.meta.kind;
@@ -291,6 +371,7 @@ impl ActiveJob {
             done,
             admitted_at,
             deadline,
+            trace_id,
             spec,
         })
     }
@@ -324,7 +405,10 @@ impl ActiveJob {
             if fault::should_fire(Probe::ChunkDecode) {
                 anyhow::bail!("injected fault: chunk decode failed");
             }
-            let n = self.source.next_chunk(&mut self.buf, self.spec.chunk)?;
+            let n = {
+                let _sp = serve_decode_stage().span_traced(&self.trace_id);
+                self.source.next_chunk(&mut self.buf, self.spec.chunk)?
+            };
             if n == 0 {
                 self.stream_done = true;
                 return Ok(false);
@@ -349,6 +433,9 @@ impl ActiveJob {
             let key = ChunkKey { artifact: artifact_fp, prefix: self.prefix, content };
             self.prefix = chain_prefix(self.prefix, content);
             let hit = fault::relock(cache).get(&key);
+            // One chunk == one hit or one miss, decided right here:
+            // the CI identity hits + misses == chunks is structural.
+            tele().chunks.inc();
             match hit {
                 Some(delta) if delta.instructions == n as u64 => {
                     // Cache hit: skip the whole chunk. Fast-forward the
@@ -374,12 +461,14 @@ impl ActiveJob {
                         weight,
                     });
                     self.hits += 1;
+                    tele().cache_hits.inc();
                     self.emitted += n as u64;
                     self.pos = n;
                     self.pump(cache);
                 }
                 _ => {
                     self.misses += 1;
+                    tele().cache_misses.inc();
                     self.segments.push_back(Segment::Miss {
                         key,
                         end: self.emitted + n as u64,
@@ -463,6 +552,7 @@ impl ActiveJob {
             cache_hits: self.hits,
             cache_misses: self.misses,
             elapsed_ms: self.admitted_at.elapsed().as_secs_f64() * 1e3,
+            trace_id: self.trace_id.clone(),
         }
     }
 }
@@ -654,7 +744,7 @@ impl PrepStage {
         let handle = std::thread::spawn(move || {
             for qj in rx_jobs {
                 let expired = qj.expired(Instant::now());
-                let QueuedJob { spec, done, admitted_at, deadline } = qj;
+                let QueuedJob { spec, done, admitted_at, deadline, trace_id } = qj;
                 let res = if abort_flag.load(Ordering::Relaxed) {
                     // The lane is failing: don't burn a detailed-sim
                     // run per queued job; abort() answers them.
@@ -676,8 +766,14 @@ impl PrepStage {
                         ),
                     ))
                 } else {
-                    match ActiveJob::prepare(spec, done.clone(), admitted_at, deadline, &art)
-                    {
+                    match ActiveJob::prepare(
+                        spec,
+                        done.clone(),
+                        admitted_at,
+                        deadline,
+                        trace_id,
+                        &art,
+                    ) {
                         Ok(job) => Ok(Box::new(job)),
                         Err(e) => Err((done, prep_error(&e))),
                     }
@@ -807,8 +903,8 @@ fn prep_error(e: &anyhow::Error) -> ServeError {
 /// Prepare a job on the current thread (prep stage disabled or
 /// unavailable).
 fn prepare_inline(qj: QueuedJob, art: &PooledArtifact) -> PrepResult {
-    let QueuedJob { spec, done, admitted_at, deadline } = qj;
-    match ActiveJob::prepare(spec, done.clone(), admitted_at, deadline, art) {
+    let QueuedJob { spec, done, admitted_at, deadline, trace_id } = qj;
+    match ActiveJob::prepare(spec, done.clone(), admitted_at, deadline, trace_id, art) {
         Ok(job) => Ok(Box::new(job)),
         Err(e) => Err((done, prep_error(&e))),
     }
@@ -839,6 +935,7 @@ fn expire_popped(qj: QueuedJob, counters: &ServeCounters) -> Option<QueuedJob> {
         ErrorCode::DeadlineExceeded,
         "deadline expired before the job reached a lane",
     );
+    tele().deadline_expired.inc();
     let _ = qj.done.send(Err(se));
     counters.jobs_done.fetch_add(1, Ordering::Relaxed);
     None
@@ -874,6 +971,16 @@ pub fn run_lane(
     let mut prep = PrepStage::start(&art, cfg.prep_depth);
     let mut active: Vec<ActiveJob> = Vec::new();
     let mut rr = 0usize;
+    // Per-artifact lane counters. The registry cells are process-global
+    // and keyed by label, so these survive a lane respawn: a fresh lane
+    // thread re-resolves the *same* cells and keeps counting.
+    let lane_jobs =
+        registry().counter("tao_lane_jobs_total", LANE_JOBS_HELP, &[("artifact", &art.name)]);
+    let lane_batches = registry().counter(
+        "tao_lane_batches_total",
+        LANE_BATCHES_HELP,
+        &[("artifact", &art.name)],
+    );
 
     macro_rules! fatal {
         ($e:expr) => {{
@@ -897,15 +1004,17 @@ pub fn run_lane(
         // finalize below drops it, reclaiming its chunk buffers and
         // source (any still-in-flight output rows demux to nobody).
         let now = Instant::now();
+        tele().deadline_sweeps.inc();
         for job in active.iter_mut() {
             if job.dead.is_none() && job.deadline.is_some_and(|d| now >= d) {
                 job.dead = Some(ServeError::new(
                     ErrorCode::DeadlineExceeded,
                     "job deadline exceeded while streaming",
                 ));
+                tele().deadline_expired.inc();
             }
         }
-        finalize(&mut active, &counters);
+        finalize(&mut active, &counters, &lane_jobs);
 
         // Admission: admit whatever the prep stage finished, refill it
         // from the queue up to spare capacity; when waking from idle,
@@ -960,7 +1069,7 @@ pub fn run_lane(
         while let Some(res) = prep.try_ready() {
             admit_prepared(res, &mut active, &counters);
         }
-        finalize(&mut active, &counters);
+        finalize(&mut active, &counters, &lane_jobs);
 
         if active.is_empty() && exec.in_flight() == 0 {
             if prep.in_flight() > 0 {
@@ -983,6 +1092,9 @@ pub fn run_lane(
                 counters.batches.fetch_add(1, Ordering::Relaxed);
                 counters.packed_windows.fetch_add(valid as u64, Ordering::Relaxed);
                 counters.batch_slots.fetch_add(b as u64, Ordering::Relaxed);
+                lane_batches.inc();
+                tele().packed_windows.inc_by(valid as u64);
+                tele().batch_slots.inc_by(b as u64);
                 match exec.dispatch(bufs, valid, routes, kind) {
                     Ok(Some(outcome)) => apply_outcome(outcome, &mut active, &cache),
                     Ok(None) => {}
@@ -1006,7 +1118,7 @@ pub fn run_lane(
                 Err(e) => fatal!(e),
             }
         }
-        finalize(&mut active, &counters);
+        finalize(&mut active, &counters, &lane_jobs);
     }
 
     prep.shutdown();
@@ -1105,15 +1217,40 @@ fn apply_outcome(outcome: ExecOutcome, active: &mut [ActiveJob], cache: &Mutex<P
     }
 }
 
-fn finalize(active: &mut Vec<ActiveJob>, counters: &ServeCounters) {
+fn finalize(active: &mut Vec<ActiveJob>, counters: &ServeCounters, lane_jobs: &Counter) {
     active.retain(|job| {
         if let Some(err) = &job.dead {
+            if log_enabled(Level::Warn) {
+                telemetry::emit(
+                    Level::Warn,
+                    "job_failed",
+                    &[
+                        ("trace_id", Field::Str(&job.trace_id)),
+                        ("artifact", Field::Str(&job.spec.artifact)),
+                        ("code", Field::Str(err.code.as_str())),
+                    ],
+                );
+            }
             let _ = job.done.send(Err(err.clone()));
         } else if job.is_complete() {
+            if log_enabled(Level::Info) {
+                telemetry::emit(
+                    Level::Info,
+                    "job_done",
+                    &[
+                        ("trace_id", Field::Str(&job.trace_id)),
+                        ("artifact", Field::Str(&job.spec.artifact)),
+                        ("hits", Field::U64(job.hits)),
+                        ("misses", Field::U64(job.misses)),
+                        ("elapsed_ms", Field::F64(job.admitted_at.elapsed().as_secs_f64() * 1e3)),
+                    ],
+                );
+            }
             let _ = job.done.send(Ok(job.outcome()));
         } else {
             return true;
         }
+        lane_jobs.inc();
         counters.active_jobs.fetch_sub(1, Ordering::Relaxed);
         counters.jobs_done.fetch_add(1, Ordering::Relaxed);
         false
@@ -1154,6 +1291,7 @@ mod tests {
             deadline_ms: None,
             trace: None,
             plan: None,
+            trace_id: None,
         }
     }
 
@@ -1179,6 +1317,7 @@ mod tests {
                 done: tx,
                 admitted_at: Instant::now(),
                 deadline: None,
+                trace_id: String::new(),
             })
             .map_err(|_| "submit failed")
             .unwrap();
@@ -1432,6 +1571,7 @@ mod tests {
                 done: tx,
                 admitted_at: Instant::now(),
                 deadline: Some(Instant::now()),
+                trace_id: String::new(),
             })
             .map_err(|_| "submit failed")
             .unwrap();

@@ -24,7 +24,7 @@
 //! across crashes via the crash-safe journal ([`super::journal`]).
 
 use super::cache::PredictionCache;
-use super::http::{read_error_status, read_request, write_response};
+use super::http::{read_error_status, read_request, write_response, write_response_typed};
 use super::journal::CacheJournal;
 use super::protocol::{
     error_body, validate_spec, ErrorCode, JobSpec, ServeError, StatsSnapshot,
@@ -32,7 +32,11 @@ use super::protocol::{
 use super::queue::{JobQueue, QueuedJob, SubmitError};
 use super::scheduler::{run_lane, LaneConfig, ServeCounters};
 use crate::runtime::{ArtifactPool, PooledArtifact};
-use crate::util::fault::{panic_message, relock};
+use crate::telemetry::{
+    self, log_enabled, prometheus, registry, Counter, Field, Gauge, Histogram, Level,
+};
+use crate::util::fault::{self, panic_message, relock};
+use crate::util::json::Json;
 use anyhow::{ensure, Context, Result};
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -96,11 +100,105 @@ impl Default for ServeConfig {
     }
 }
 
+/// Daemon-level metric handles, resolved once at bind. The counters
+/// whose source of truth is [`ServeCounters`] or the cache are
+/// *mirrored* into the registry at `/metrics` scrape time; the rest
+/// are incremented live on the request path.
+struct ServeTele {
+    jobs_submitted: Counter,
+    jobs_done: Counter,
+    jobs_active: Gauge,
+    lanes_down: Gauge,
+    request_seconds: Histogram,
+}
+
+impl ServeTele {
+    fn new() -> ServeTele {
+        let reg = registry();
+        ServeTele {
+            jobs_submitted: reg.counter(
+                "tao_jobs_submitted_total",
+                "Jobs accepted into the admission queue.",
+                &[],
+            ),
+            jobs_done: reg.counter(
+                "tao_jobs_done_total",
+                "Jobs answered (success or typed error).",
+                &[],
+            ),
+            jobs_active: reg.gauge("tao_jobs_active", "Jobs currently active inside lanes.", &[]),
+            lanes_down: reg.gauge(
+                "tao_lanes_down",
+                "Lanes currently in respawn backoff (degraded when > 0).",
+                &[],
+            ),
+            request_seconds: reg.histogram(
+                "tao_request_seconds",
+                "HTTP request wall time, connection accept to response.",
+                &[],
+            ),
+        }
+    }
+
+    /// Pre-register the per-code error families for the codes the
+    /// admission path can emit, so scrapers see them (at zero) before
+    /// the first error instead of a family popping into existence.
+    fn preregister_error_codes() {
+        let reg = registry();
+        for code in [
+            ErrorCode::BadRequest,
+            ErrorCode::QueueFull,
+            ErrorCode::Draining,
+            ErrorCode::DeadlineExceeded,
+            ErrorCode::LaneFailed,
+        ] {
+            reg.counter(
+                "tao_jobs_rejected_total",
+                "Jobs rejected by admission control, by error code.",
+                &[("code", code.as_str())],
+            );
+            reg.counter(
+                "tao_errors_total",
+                "Error responses sent to clients, by error code.",
+                &[("code", code.as_str())],
+            );
+        }
+    }
+}
+
+/// Count a rejected admission by error code
+/// (`tao_jobs_rejected_total{code=...}`).
+fn count_rejected(code: ErrorCode) {
+    if telemetry::armed() {
+        registry()
+            .counter(
+                "tao_jobs_rejected_total",
+                "Jobs rejected by admission control, by error code.",
+                &[("code", code.as_str())],
+            )
+            .inc();
+    }
+}
+
+/// Count an error response by code (`tao_errors_total{code=...}`).
+fn count_error(code: ErrorCode) {
+    if telemetry::armed() {
+        registry()
+            .counter(
+                "tao_errors_total",
+                "Error responses sent to clients, by error code.",
+                &[("code", code.as_str())],
+            )
+            .inc();
+    }
+}
+
 struct Shared {
     pool: ArtifactPool,
     queue: Arc<JobQueue>,
     cache: Arc<Mutex<PredictionCache>>,
     counters: Arc<ServeCounters>,
+    tele: ServeTele,
     shutdown: AtomicBool,
     /// Flipped when the accept loop starts; `/healthz` says `starting`
     /// until then.
@@ -143,6 +241,10 @@ pub struct Server {
 impl Server {
     /// Bind the socket and start one lane per pooled artifact.
     pub fn bind(pool: ArtifactPool, cfg: &ServeConfig) -> Result<Server> {
+        // The daemon always meters itself: one relaxed atomic add per
+        // site is noise next to a socket round-trip, and `/metrics`
+        // must be truthful from the first request.
+        telemetry::arm();
         ensure!(!pool.is_empty(), "serve needs at least one --model artifact");
         ensure!(cfg.queue_depth >= 1, "queue depth must be positive");
         ensure!(cfg.max_active >= 1, "max active jobs must be positive");
@@ -197,6 +299,10 @@ impl Server {
             queue,
             cache,
             counters,
+            tele: {
+                ServeTele::preregister_error_codes();
+                ServeTele::new()
+            },
             shutdown: AtomicBool::new(false),
             started: AtomicBool::new(false),
             max_insts: cfg.max_insts,
@@ -333,12 +439,36 @@ fn lane_supervisor(
         failures += 1;
         counters.lane_restarts.fetch_add(1, Ordering::Relaxed);
         counters.lanes_down.fetch_add(1, Ordering::Relaxed);
+        // The registry cell is keyed by artifact label and outlives the
+        // lane thread, so `/v1/stats` per-lane respawn counts survive
+        // the respawn they are counting.
+        if telemetry::armed() {
+            registry()
+                .counter(
+                    "tao_lane_respawns_total",
+                    "Lane threads respawned after a panic or fatal lane error.",
+                    &[("artifact", &art.name)],
+                )
+                .inc();
+        }
         let backoff = Duration::from_millis((50u64 << failures.min(5)).min(2_000));
         eprintln!(
             "serve: lane {:?} down ({err}); respawn in {}ms (restart #{failures})",
             art.name,
             backoff.as_millis()
         );
+        if log_enabled(Level::Warn) {
+            telemetry::emit(
+                Level::Warn,
+                "lane_respawn",
+                &[
+                    ("artifact", Field::Str(&art.name)),
+                    ("error", Field::Str(&err)),
+                    ("backoff_ms", Field::U64(backoff.as_millis() as u64)),
+                    ("restart", Field::U64(u64::from(failures))),
+                ],
+            );
+        }
         // Answer this artifact's queued jobs retryably while backing
         // off — a waiting connection must never hang on a down lane.
         let until = Instant::now() + backoff;
@@ -385,6 +515,70 @@ fn health(shared: &Shared) -> (u16, String) {
     (status, format!("{{\"ok\":{},\"status\":\"{state}\"}}", status == 200))
 }
 
+/// Per-lane detail for `/v1/stats`, read back out of the registry.
+/// Cells are keyed by artifact label and owned by the process-global
+/// registry, not the lane thread, so the counts are cumulative across
+/// lane respawns (`respawn_count` says how many happened).
+fn lanes_json(pool: &ArtifactPool) -> Json {
+    let reg = registry();
+    let mut lanes = std::collections::BTreeMap::new();
+    for art in pool.iter() {
+        let labels: [(&str, &str); 1] = [("artifact", &art.name)];
+        let jobs = reg.counter_value("tao_lane_jobs_total", Some(&labels)).unwrap_or(0);
+        let batches = reg.counter_value("tao_lane_batches_total", Some(&labels)).unwrap_or(0);
+        let respawns =
+            reg.counter_value("tao_lane_respawns_total", Some(&labels)).unwrap_or(0);
+        lanes.insert(
+            art.name.clone(),
+            Json::obj([
+                ("jobs_done", Json::of_u64(jobs)),
+                ("batches", Json::of_u64(batches)),
+                ("respawn_count", Json::of_u64(respawns)),
+            ]),
+        );
+    }
+    Json::Obj(lanes)
+}
+
+/// Render the Prometheus exposition. Counters owned by other
+/// subsystems ([`ServeCounters`], the cache, `util::fault`) are
+/// mirrored into their registry cells here, at scrape time, so one
+/// scrape sees one coherent view.
+fn metrics_body(shared: &Shared) -> String {
+    let reg = registry();
+    let c = &shared.counters;
+    shared.tele.jobs_done.mirror(c.jobs_done.load(Ordering::Relaxed));
+    shared.tele.jobs_active.set(c.active_jobs.load(Ordering::Relaxed) as i64);
+    shared.tele.lanes_down.set(c.lanes_down.load(Ordering::Relaxed) as i64);
+    let cs = relock(&shared.cache).stats();
+    reg.counter("tao_cache_insertions_total", "Prediction-cache entries inserted.", &[])
+        .mirror(cs.insertions);
+    reg.counter(
+        "tao_cache_evictions_total",
+        "Prediction-cache entries evicted by capacity pressure.",
+        &[],
+    )
+    .mirror(cs.evictions);
+    reg.gauge("tao_cache_entries", "Prediction-cache resident entries.", &[])
+        .set(cs.entries as i64);
+    for p in fault::PROBES {
+        let st = fault::stats(p);
+        reg.counter(
+            "tao_fault_checks_total",
+            "Fault-probe site traversals, by probe.",
+            &[("probe", p.name())],
+        )
+        .mirror(st.checks);
+        reg.counter(
+            "tao_fault_fires_total",
+            "Fault-probe injected failures, by probe.",
+            &[("probe", p.name())],
+        )
+        .mirror(st.fires);
+    }
+    prometheus::render(&reg.snapshot())
+}
+
 fn handle_connection(stream: TcpStream, shared: &Shared) {
     if let Err(e) = serve_connection(stream, shared) {
         eprintln!("serve: connection error: {e:#}");
@@ -392,6 +586,13 @@ fn handle_connection(stream: TcpStream, shared: &Shared) {
 }
 
 fn serve_connection(stream: TcpStream, shared: &Shared) -> Result<()> {
+    let t0 = Instant::now();
+    let res = serve_connection_timed(stream, shared);
+    shared.tele.request_seconds.record(t0.elapsed());
+    res
+}
+
+fn serve_connection_timed(stream: TcpStream, shared: &Shared) -> Result<()> {
     stream.set_read_timeout(Some(shared.read_timeout))?;
     stream.set_write_timeout(Some(shared.write_timeout))?;
     let mut reader = BufReader::new(stream.try_clone().context("clone stream")?);
@@ -409,6 +610,7 @@ fn serve_connection(stream: TcpStream, shared: &Shared) -> Result<()> {
                 _ => ErrorCode::BadRequest,
             };
             let se = ServeError::new(code, format!("{e:#}"));
+            count_error(se.code);
             let _ = write_response(&mut out, status, &se.to_json());
             return Ok(());
         }
@@ -420,7 +622,11 @@ fn serve_connection(stream: TcpStream, shared: &Shared) -> Result<()> {
         }
         ("GET", "/v1/stats") => {
             let stats = shared.counters.snapshot(&shared.queue, &shared.cache);
-            write_response(&mut out, 200, &stats.to_json())
+            write_response(&mut out, 200, &stats.to_json_with_lanes(lanes_json(&shared.pool)))
+        }
+        ("GET", "/metrics") => {
+            let body = metrics_body(shared);
+            write_response_typed(&mut out, 200, prometheus::CONTENT_TYPE, &body)
         }
         ("GET", "/v1/artifacts") => {
             write_response(&mut out, 200, &super::protocol::artifacts_json(&shared.pool))
@@ -440,6 +646,8 @@ fn serve_connection(stream: TcpStream, shared: &Shared) -> Result<()> {
 fn handle_simulate(out: &mut TcpStream, body: &str, shared: &Shared) -> Result<()> {
     let reject = |out: &mut TcpStream, shared: &Shared, se: ServeError| {
         shared.counters.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+        count_rejected(se.code);
+        count_error(se.code);
         write_response(out, se.code.http_status(), &se.to_json())
     };
     if shared.shutdown.load(Ordering::SeqCst) || shared.queue.is_closed() {
@@ -449,11 +657,13 @@ fn handle_simulate(out: &mut TcpStream, body: &str, shared: &Shared) -> Result<(
         Ok(s) => s,
         Err(e) => {
             let se = ServeError::new(ErrorCode::BadRequest, format!("{e:#}"));
+            count_error(se.code);
             return write_response(out, se.code.http_status(), &se.to_json());
         }
     };
     if let Err(e) = validate_spec(&spec, &shared.pool, shared.max_insts) {
         let se = ServeError::new(ErrorCode::BadRequest, format!("{e:#}"));
+        count_error(se.code);
         return write_response(out, se.code.http_status(), &se.to_json());
     }
     // Resolve the cancellation deadline at admission: the spec's own
@@ -464,8 +674,27 @@ fn handle_simulate(out: &mut TcpStream, body: &str, shared: &Shared) -> Result<(
         .map(Duration::from_millis)
         .or(shared.default_deadline)
         .map(|d| admitted_at + d);
+    // The trace id follows the job through queue → lane → spans → logs
+    // → outcome: the client's own id when it sent one, else minted
+    // here, at admission.
+    let trace_id = match spec.trace_id.clone() {
+        Some(t) => t,
+        None => telemetry::fresh_trace_id(),
+    };
+    if log_enabled(Level::Info) {
+        telemetry::emit(
+            Level::Info,
+            "job_admitted",
+            &[
+                ("trace_id", Field::Str(&trace_id)),
+                ("artifact", Field::Str(&spec.artifact)),
+                ("bench", Field::Str(&spec.bench)),
+                ("insts", Field::U64(spec.insts)),
+            ],
+        );
+    }
     let (tx, rx) = std::sync::mpsc::channel();
-    let job = QueuedJob { spec, done: tx, admitted_at, deadline };
+    let job = QueuedJob { spec, done: tx, admitted_at, deadline, trace_id };
     match shared.queue.submit(job) {
         Ok(()) => {}
         Err((_, SubmitError::Full)) => {
@@ -476,6 +705,7 @@ fn handle_simulate(out: &mut TcpStream, body: &str, shared: &Shared) -> Result<(
         }
     }
     shared.counters.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+    shared.tele.jobs_submitted.inc();
     // Block until the lane answers. Lanes always answer — completion,
     // typed job error, deadline, drain, or lane failure. The one other
     // way out is the completion sender dropping because the lane
@@ -483,10 +713,14 @@ fn handle_simulate(out: &mut TcpStream, body: &str, shared: &Shared) -> Result<(
     // error, and never a hang.
     match rx.recv() {
         Ok(Ok(outcome)) => write_response(out, 200, &outcome.to_json()),
-        Ok(Err(se)) => write_response(out, se.code.http_status(), &se.to_json()),
+        Ok(Err(se)) => {
+            count_error(se.code);
+            write_response(out, se.code.http_status(), &se.to_json())
+        }
         Err(_) => {
             let se =
                 ServeError::new(ErrorCode::LaneFailed, "job dropped during lane restart");
+            count_error(se.code);
             write_response(out, se.code.http_status(), &se.to_json())
         }
     }

@@ -1,0 +1,208 @@
+//! Leveled structured JSON logging (`--log-json`).
+//!
+//! One line per event on stderr:
+//!
+//! ```text
+//! {"ts_ms":1723100000123,"level":"info","event":"job_done","trace_id":"9f3c...","chunks":4}
+//! ```
+//!
+//! Disabled (the default) an [`log_enabled`] check is one relaxed
+//! atomic load, so emit sites stay compiled into the serving hot paths.
+//! The daemon enables it from `tao serve --log-json [LEVEL]`; field
+//! order is emission order, `ts_ms` is wall-clock Unix milliseconds.
+//! Lines are JSON the crate's own `util::json` parser accepts (pinned
+//! by test), so `grep trace_id log | tao`-side tooling can parse them.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicI32, Ordering};
+
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// A failed request or lost lane.
+    Error = 0,
+    /// Degraded but serving (respawns, deadline expiries).
+    Warn = 1,
+    /// Lifecycle events (job admitted / done, lane up).
+    Info = 2,
+    /// Per-stage spans and cache traffic.
+    Debug = 3,
+}
+
+impl Level {
+    /// Wire name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    /// Inverse of [`Level::as_str`].
+    pub fn from_str(s: &str) -> Option<Level> {
+        match s {
+            "error" => Some(Level::Error),
+            "warn" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+/// `-1` = disabled; otherwise the maximum emitted level.
+static JSON_LEVEL: AtomicI32 = AtomicI32::new(-1);
+
+/// Enable JSON logging up to and including `level`.
+pub fn enable_json(level: Level) {
+    JSON_LEVEL.store(level as i32, Ordering::Relaxed);
+}
+
+/// Disable JSON logging.
+pub fn disable_json() {
+    JSON_LEVEL.store(-1, Ordering::Relaxed);
+}
+
+/// Would an event at `level` be emitted? One relaxed atomic load.
+#[inline]
+pub fn log_enabled(level: Level) -> bool {
+    level as i32 <= JSON_LEVEL.load(Ordering::Relaxed)
+}
+
+/// One event field value.
+#[derive(Debug, Clone, Copy)]
+pub enum Field<'a> {
+    /// String value (JSON-escaped on emit).
+    Str(&'a str),
+    /// Unsigned integer.
+    U64(u64),
+    /// Signed integer.
+    I64(i64),
+    /// Float (non-finite renders as null).
+    F64(f64),
+}
+
+fn escape_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// Render one event line (separate from [`emit`] so tests can pin the
+/// format without capturing stderr).
+pub fn render_line(ts_ms: u64, level: Level, event: &str, fields: &[(&str, Field)]) -> String {
+    let mut line = String::with_capacity(64 + fields.len() * 16);
+    line.push_str("{\"ts_ms\":");
+    line.push_str(&ts_ms.to_string());
+    line.push_str(",\"level\":\"");
+    line.push_str(level.as_str());
+    line.push_str("\",\"event\":\"");
+    escape_into(&mut line, event);
+    line.push('"');
+    for (k, v) in fields {
+        line.push_str(",\"");
+        escape_into(&mut line, k);
+        line.push_str("\":");
+        match v {
+            Field::Str(s) => {
+                line.push('"');
+                escape_into(&mut line, s);
+                line.push('"');
+            }
+            Field::U64(n) => line.push_str(&n.to_string()),
+            Field::I64(n) => line.push_str(&n.to_string()),
+            Field::F64(x) if x.is_finite() => line.push_str(&format!("{x}")),
+            Field::F64(_) => line.push_str("null"),
+        }
+    }
+    line.push('}');
+    line
+}
+
+/// Emit one event line to stderr if `level` is enabled.
+pub fn emit(level: Level, event: &str, fields: &[(&str, Field)]) {
+    if !log_enabled(level) {
+        return;
+    }
+    let ts_ms = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis().min(u64::MAX as u128) as u64)
+        .unwrap_or(0);
+    let line = render_line(ts_ms, level, event, fields);
+    // One locked write per line keeps concurrent lanes' lines whole.
+    let stderr = std::io::stderr();
+    let mut w = stderr.lock();
+    let _ = writeln!(w, "{line}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn lines_are_valid_json_with_ordered_fields() {
+        let line = render_line(
+            123,
+            Level::Info,
+            "job_done",
+            &[
+                ("trace_id", Field::Str("abc123")),
+                ("chunks", Field::U64(4)),
+                ("delta", Field::I64(-2)),
+                ("cpi", Field::F64(1.25)),
+                ("nan", Field::F64(f64::NAN)),
+            ],
+        );
+        let j = Json::parse(&line).expect("log line must parse as JSON");
+        assert_eq!(j.get("ts_ms").and_then(|v| v.as_u64()), Some(123));
+        assert_eq!(j.get("level").and_then(|v| v.as_str()), Some("info"));
+        assert_eq!(j.get("event").and_then(|v| v.as_str()), Some("job_done"));
+        assert_eq!(j.get("trace_id").and_then(|v| v.as_str()), Some("abc123"));
+        assert_eq!(j.get("chunks").and_then(|v| v.as_u64()), Some(4));
+        assert_eq!(j.get("cpi").and_then(|v| v.as_f64()), Some(1.25));
+        assert!(matches!(j.get("nan"), Some(Json::Null)));
+    }
+
+    #[test]
+    fn escaping_survives_hostile_strings() {
+        let line = render_line(
+            1,
+            Level::Error,
+            "weird \"event\"\n",
+            &[("msg", Field::Str("a\\b\"c\nd\te\u{1}"))],
+        );
+        let j = Json::parse(&line).expect("escaped line must parse");
+        assert_eq!(
+            j.get("msg").and_then(|v| v.as_str()),
+            Some("a\\b\"c\nd\te\u{1}")
+        );
+    }
+
+    #[test]
+    fn level_gate_and_names_round_trip() {
+        disable_json();
+        assert!(!log_enabled(Level::Error));
+        enable_json(Level::Info);
+        assert!(log_enabled(Level::Error));
+        assert!(log_enabled(Level::Info));
+        assert!(!log_enabled(Level::Debug));
+        disable_json();
+        for l in [Level::Error, Level::Warn, Level::Info, Level::Debug] {
+            assert_eq!(Level::from_str(l.as_str()), Some(l));
+        }
+        assert_eq!(Level::from_str("nope"), None);
+    }
+}

@@ -1,0 +1,77 @@
+//! Unified telemetry: a process-global metric registry, RAII span
+//! timers, structured JSON logging, Prometheus text exposition and
+//! offline per-stage profiles — zero-dependency, in the same
+//! hand-rolled idiom as the HTTP/JSON stack.
+//!
+//! Everything routes through one [`MetricRegistry`](registry::MetricRegistry):
+//! atomic counters, gauges and fixed-bucket latency histograms with
+//! p50/p95/p99 extraction. Producers pre-fetch cheap cloneable handles
+//! ([`Counter`], [`Gauge`], [`Histogram`]) once and update them with
+//! relaxed atomics on the hot path; consumers snapshot the registry for
+//! the daemon's `GET /metrics` Prometheus endpoint, the `/v1/stats`
+//! per-lane detail, and the `tao simulate --profile` breakdown.
+//!
+//! **Disarmed cost.** Telemetry follows the `util::fault` bar: while
+//! [`armed`] is false every handle update and every [`Stage::span`]
+//! site is a single relaxed atomic load returning immediately — no
+//! clock reads, no stores. `tao serve` arms at boot; `--profile` arms
+//! for the run; benches arm/disarm to measure the delta
+//! (`telemetry_overhead_pct` in `BENCH_coordinator.json`, gated at 2%).
+//!
+//! **Tracing.** Each serve job carries a `trace_id` (client-supplied or
+//! minted at admission) threaded from `serve::protocol` through the
+//! queue, scheduler, pipeline and cache. With `--log-json` the daemon
+//! emits one structured line per lifecycle event, so
+//! `grep <trace_id>` reconstructs one job's life end-to-end. See
+//! `docs/OBSERVABILITY.md` for the metric catalog and wire formats.
+//!
+//! Registry state is process-global (like `util::fault`): tests that
+//! arm, reset or assert totals serialize on [`exclusive`] and reset
+//! before measuring.
+
+pub mod log;
+pub mod profile;
+pub mod prometheus;
+pub mod registry;
+pub mod span;
+
+pub use log::{emit, log_enabled, Field, Level};
+pub use profile::Profile;
+pub use registry::{
+    arm, armed, disarm, registry, Counter, FamilySnapshot, Gauge, HistSnapshot, Histogram,
+    MetricKind, MetricRegistry, SeriesValue,
+};
+pub use span::{fresh_trace_id, Span, Stage};
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Process-global serialization gate for tests that arm the registry or
+/// assert totals: registry state is process-wide, so concurrently
+/// running tests must not reset over each other. Hold the guard for the
+/// whole armed window and [`disarm`] + [`MetricRegistry::reset`] before
+/// dropping it.
+pub fn exclusive() -> MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// A stage span against a site-interned [`Stage`] handle: registers the
+/// `tao_stage_seconds{stage=...}` series once per call site, then each
+/// pass is one `OnceLock` load plus the armed check. Bind the result —
+/// the span records its elapsed time into the histogram when dropped:
+///
+/// ```ignore
+/// let out = {
+///     let _sp = crate::stage_span!("execute");
+///     session.run(staged)?
+/// };
+/// ```
+#[macro_export]
+macro_rules! stage_span {
+    ($name:literal) => {{
+        static STAGE: std::sync::OnceLock<$crate::telemetry::Stage> = std::sync::OnceLock::new();
+        STAGE
+            .get_or_init(|| $crate::telemetry::Stage::new($name))
+            .span()
+    }};
+}

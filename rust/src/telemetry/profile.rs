@@ -1,0 +1,298 @@
+//! Offline per-stage profiles for `tao simulate --profile` and
+//! `tao datagen --profile`.
+//!
+//! A [`Profile`] times named phases on the main thread; phases run
+//! sequentially and tile the wall clock, so their sum matches total
+//! wall time by construction (the acceptance bar is sum within 5% — the
+//! residual is only the untimed glue between phases). Registry stage
+//! histograms (`tao_stage_seconds`) are attached as *attribution*
+//! detail: for pipelined runs those spans run on worker threads and may
+//! overlap each other and the phases, so they explain where time went
+//! inside a phase but are not expected to tile.
+//!
+//! Output is a human table ([`Profile::render_table`]) plus a
+//! machine-readable `profile.json` ([`Profile::to_json`]) rendered
+//! through `util::json` (sorted keys, deterministic).
+
+use super::registry::{registry, FamilySnapshot, SeriesValue};
+use super::span::STAGE_FAMILY;
+use crate::util::json::Json;
+use std::time::{Duration, Instant};
+
+/// One timed phase.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    /// Phase name as passed to [`Profile::phase`].
+    pub name: String,
+    /// Phase wall-clock duration.
+    pub elapsed: Duration,
+}
+
+/// Per-stage attribution pulled from the registry stage histograms.
+#[derive(Debug, Clone)]
+pub struct StageAttribution {
+    /// The `stage` label value.
+    pub stage: String,
+    /// Recorded span count.
+    pub count: u64,
+    /// Σ span time, seconds.
+    pub total_secs: f64,
+    /// p50 span latency, seconds.
+    pub p50_secs: f64,
+    /// p95 span latency, seconds.
+    pub p95_secs: f64,
+    /// p99 span latency, seconds.
+    pub p99_secs: f64,
+}
+
+/// A main-thread wall-clock profile: sequential named phases plus
+/// registry stage attribution collected at report time.
+#[derive(Debug)]
+pub struct Profile {
+    started: Instant,
+    phases: Vec<Phase>,
+}
+
+impl Profile {
+    /// Start the profile clock (also arms telemetry so stage spans
+    /// record; callers disarm when done if they armed only for this).
+    pub fn start() -> Profile {
+        Profile {
+            started: Instant::now(),
+            phases: Vec::new(),
+        }
+    }
+
+    /// Run `f` as a named phase, timing it.
+    pub fn phase<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.phases.push(Phase {
+            name: name.to_string(),
+            elapsed: t0.elapsed(),
+        });
+        out
+    }
+
+    /// Record an externally-timed phase (for call sites that cannot
+    /// wrap the work in a closure).
+    pub fn record_phase(&mut self, name: &str, elapsed: Duration) {
+        self.phases.push(Phase {
+            name: name.to_string(),
+            elapsed,
+        });
+    }
+
+    /// Wall clock since [`Profile::start`].
+    pub fn wall(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// Timed phases in execution order.
+    pub fn phases(&self) -> &[Phase] {
+        &self.phases
+    }
+
+    /// Σ phase time, seconds.
+    pub fn phase_sum_secs(&self) -> f64 {
+        self.phases.iter().map(|p| p.elapsed.as_secs_f64()).sum()
+    }
+
+    /// Pull per-stage attribution from the registry's
+    /// `tao_stage_seconds` family, ordered by total time descending.
+    pub fn stage_attribution(&self) -> Vec<StageAttribution> {
+        stage_attribution_from(&registry().snapshot())
+    }
+
+    /// Render the human-readable breakdown table.
+    pub fn render_table(&self) -> String {
+        let wall = self.wall().as_secs_f64();
+        let mut out = String::new();
+        out.push_str("profile: per-phase wall clock\n");
+        out.push_str(&format!(
+            "  {:<24} {:>12} {:>8}\n",
+            "phase", "seconds", "% wall"
+        ));
+        for p in &self.phases {
+            let secs = p.elapsed.as_secs_f64();
+            let pct = if wall > 0.0 { 100.0 * secs / wall } else { 0.0 };
+            out.push_str(&format!("  {:<24} {:>12.4} {:>7.1}%\n", p.name, secs, pct));
+        }
+        let sum = self.phase_sum_secs();
+        let coverage = if wall > 0.0 { 100.0 * sum / wall } else { 0.0 };
+        out.push_str(&format!(
+            "  {:<24} {:>12.4} {:>7.1}%  (wall {:.4}s)\n",
+            "total", sum, coverage, wall
+        ));
+        let stages = self.stage_attribution();
+        if !stages.is_empty() {
+            out.push_str("profile: stage attribution (spans; may overlap in pipelined runs)\n");
+            out.push_str(&format!(
+                "  {:<16} {:>9} {:>11} {:>10} {:>10} {:>10}\n",
+                "stage", "count", "total s", "p50 s", "p95 s", "p99 s"
+            ));
+            for s in &stages {
+                out.push_str(&format!(
+                    "  {:<16} {:>9} {:>11.4} {:>10.6} {:>10.6} {:>10.6}\n",
+                    s.stage, s.count, s.total_secs, s.p50_secs, s.p95_secs, s.p99_secs
+                ));
+            }
+        }
+        out
+    }
+
+    /// Serialize as the `profile.json` document (schema in
+    /// `docs/OBSERVABILITY.md`).
+    pub fn to_json(&self) -> Json {
+        let phases: Vec<Json> = self
+            .phases
+            .iter()
+            .map(|p| {
+                Json::obj([
+                    ("name", Json::of_str(&p.name)),
+                    ("seconds", Json::Num(p.elapsed.as_secs_f64())),
+                ])
+            })
+            .collect();
+        let stages: Vec<Json> = self
+            .stage_attribution()
+            .iter()
+            .map(|s| {
+                Json::obj([
+                    ("stage", Json::of_str(&s.stage)),
+                    ("count", Json::of_u64(s.count)),
+                    ("total_seconds", Json::Num(s.total_secs)),
+                    ("p50_seconds", Json::Num(s.p50_secs)),
+                    ("p95_seconds", Json::Num(s.p95_secs)),
+                    ("p99_seconds", Json::Num(s.p99_secs)),
+                ])
+            })
+            .collect();
+        Json::obj([
+            ("wall_seconds", Json::Num(self.wall().as_secs_f64())),
+            ("phase_sum_seconds", Json::Num(self.phase_sum_secs())),
+            ("phases", Json::Arr(phases)),
+            ("stages", Json::Arr(stages)),
+        ])
+    }
+}
+
+/// Extract stage attribution rows from a registry snapshot (separated
+/// from [`Profile`] so tests can feed a synthetic snapshot).
+pub fn stage_attribution_from(families: &[FamilySnapshot]) -> Vec<StageAttribution> {
+    let mut rows = Vec::new();
+    for fam in families {
+        if fam.name != STAGE_FAMILY {
+            continue;
+        }
+        for series in &fam.series {
+            let SeriesValue::Hist(h) = &series.value else {
+                continue;
+            };
+            let stage = series
+                .labels
+                .iter()
+                .find(|(k, _)| k == "stage")
+                .map(|(_, v)| v.clone())
+                .unwrap_or_default();
+            rows.push(StageAttribution {
+                stage,
+                count: h.count,
+                total_secs: h.sum_secs(),
+                p50_secs: h.quantile_secs(0.50),
+                p95_secs: h.quantile_secs(0.95),
+                p99_secs: h.quantile_secs(0.99),
+            });
+        }
+    }
+    rows.sort_by(|a, b| {
+        b.total_secs
+            .partial_cmp(&a.total_secs)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::exclusive;
+    use crate::telemetry::registry::{arm, disarm};
+    use crate::telemetry::span::Stage;
+
+    #[test]
+    fn phases_tile_the_wall_clock() {
+        let mut prof = Profile::start();
+        prof.phase("a", || std::thread::sleep(Duration::from_millis(5)));
+        prof.phase("b", || std::thread::sleep(Duration::from_millis(5)));
+        let wall = prof.wall().as_secs_f64();
+        let sum = prof.phase_sum_secs();
+        assert!(sum > 0.009, "phases must be timed, got {sum}");
+        assert!(
+            sum <= wall,
+            "phase sum {sum} cannot exceed wall {wall} for sequential phases"
+        );
+        // Sequential phases tile the run: the untimed residual is glue.
+        assert!(
+            (wall - sum) / wall < 0.5,
+            "phases should cover most of the wall clock (sum {sum}, wall {wall})"
+        );
+    }
+
+    #[test]
+    fn json_and_table_include_phases_and_stage_attribution() {
+        let _gate = exclusive();
+        registry().reset();
+        arm();
+        let stage = Stage::new("profile_test_stage");
+        {
+            let _sp = stage.span();
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        let mut prof = Profile::start();
+        prof.record_phase("simulate", Duration::from_millis(8));
+        let j = prof.to_json();
+        let rendered = j.render();
+        let back = Json::parse(&rendered).expect("profile.json must parse");
+        let phases = back.get("phases").and_then(Json::as_arr).expect("phases");
+        assert_eq!(phases.len(), 1);
+        assert_eq!(
+            phases[0].get("name").and_then(Json::as_str),
+            Some("simulate")
+        );
+        let stages = back.get("stages").and_then(Json::as_arr).expect("stages");
+        assert!(
+            stages
+                .iter()
+                .any(|s| s.get("stage").and_then(Json::as_str) == Some("profile_test_stage")),
+            "stage attribution must surface recorded spans"
+        );
+        let table = prof.render_table();
+        assert!(table.contains("simulate"));
+        assert!(table.contains("profile_test_stage"));
+        disarm();
+        registry().reset();
+    }
+
+    #[test]
+    fn attribution_sorts_by_total_time() {
+        let _gate = exclusive();
+        registry().reset();
+        arm();
+        let slow = Stage::new("attr_slow");
+        let fast = Stage::new("attr_fast");
+        {
+            let _sp = slow.span();
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        {
+            let _sp = fast.span();
+        }
+        let rows = stage_attribution_from(&registry().snapshot());
+        let slow_pos = rows.iter().position(|r| r.stage == "attr_slow").unwrap();
+        let fast_pos = rows.iter().position(|r| r.stage == "attr_fast").unwrap();
+        assert!(slow_pos < fast_pos, "attribution must sort by total desc");
+        disarm();
+        registry().reset();
+    }
+}

@@ -1,0 +1,409 @@
+//! Prometheus text exposition (version 0.0.4): deterministic rendering
+//! of a registry snapshot, plus a small parser for the same format so
+//! `tao loadgen --progress-every` and the loopback tests can consume
+//! `GET /metrics` without new dependencies.
+//!
+//! Rendering rules pinned by the unit tests here:
+//!
+//! * families in name order, series in sorted-label order (the registry
+//!   snapshot already guarantees both);
+//! * `# HELP` / `# TYPE` once per family;
+//! * label values escaped (`\\`, `\"`, `\n`), help text escaped
+//!   (`\\`, `\n`);
+//! * histograms expose cumulative `_bucket{le="..."}` series with a
+//!   final `le="+Inf"`, plus `_sum` (seconds) and `_count` — bucket
+//!   bounds render in seconds.
+
+use super::registry::{bucket_bound_ns, FamilySnapshot, SeriesValue};
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+
+/// The `Content-Type` a Prometheus scraper expects from `/metrics`.
+pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a label set (plus an optional trailing `le`) as
+/// `{k="v",...}`, or nothing when empty.
+fn render_labels(labels: &[(String, String)], le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+/// Bucket bound `i` in seconds, as it appears in `le="..."`.
+fn le_of(i: usize) -> String {
+    format!("{}", bucket_bound_ns(i) as f64 / 1e9)
+}
+
+/// Render a registry snapshot as the exposition text.
+pub fn render(families: &[FamilySnapshot]) -> String {
+    let mut out = String::new();
+    for fam in families {
+        let _ = writeln!(out, "# HELP {} {}", fam.name, escape_help(&fam.help));
+        let _ = writeln!(out, "# TYPE {} {}", fam.name, fam.kind.as_str());
+        for s in &fam.series {
+            match &s.value {
+                SeriesValue::Counter(v) => {
+                    let _ = writeln!(out, "{}{} {v}", fam.name, render_labels(&s.labels, None));
+                }
+                SeriesValue::Gauge(v) => {
+                    let _ = writeln!(out, "{}{} {v}", fam.name, render_labels(&s.labels, None));
+                }
+                SeriesValue::Hist(h) => {
+                    let mut cum = 0u64;
+                    for (i, n) in h.buckets.iter().enumerate() {
+                        cum += n;
+                        let le = if i < h.buckets.len() - 1 {
+                            le_of(i)
+                        } else {
+                            "+Inf".to_string()
+                        };
+                        let _ = writeln!(
+                            out,
+                            "{}_bucket{} {cum}",
+                            fam.name,
+                            render_labels(&s.labels, Some(&le))
+                        );
+                    }
+                    let _ = writeln!(
+                        out,
+                        "{}_sum{} {}",
+                        fam.name,
+                        render_labels(&s.labels, None),
+                        h.sum_secs()
+                    );
+                    let _ = writeln!(
+                        out,
+                        "{}_count{} {}",
+                        fam.name,
+                        render_labels(&s.labels, None),
+                        h.count
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Parsing (client side)
+// ---------------------------------------------------------------------
+
+/// One parsed sample line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    /// Sample name as written (histogram series keep their `_bucket` /
+    /// `_sum` / `_count` suffixes).
+    pub name: String,
+    /// Label pairs as written (including `le` on bucket lines).
+    pub labels: Vec<(String, String)>,
+    /// The value.
+    pub value: f64,
+}
+
+fn unescape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    let mut chars = v.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some(other) => out.push(other),
+            None => out.push('\\'),
+        }
+    }
+    out
+}
+
+/// Split one `{k="v",...}` body into pairs. Quote-aware: commas inside
+/// quoted values do not split.
+fn parse_labels(body: &str) -> Result<Vec<(String, String)>> {
+    let mut labels = Vec::new();
+    let mut rest = body.trim();
+    while !rest.is_empty() {
+        let eq = rest.find('=').context("label missing '='")?;
+        let key = rest[..eq].trim().to_string();
+        let after = &rest[eq + 1..];
+        let after = after.strip_prefix('"').context("label value missing opening quote")?;
+        // Find the closing quote, skipping escaped ones.
+        let mut end = None;
+        let mut escaped = false;
+        for (i, c) in after.char_indices() {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                end = Some(i);
+                break;
+            }
+        }
+        let end = end.context("label value missing closing quote")?;
+        labels.push((key, unescape_label(&after[..end])));
+        rest = after[end + 1..].trim_start_matches(',').trim();
+    }
+    Ok(labels)
+}
+
+/// Parse exposition text into samples; comment and blank lines are
+/// skipped.
+pub fn parse(text: &str) -> Result<Vec<Sample>> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (head, value) = line.rsplit_once(' ').context("sample line missing value")?;
+        let value: f64 = value
+            .parse()
+            .or_else(|_| match value {
+                "+Inf" => Ok(f64::INFINITY),
+                "-Inf" => Ok(f64::NEG_INFINITY),
+                _ => Err(anyhow::anyhow!("bad sample value {value:?}")),
+            })?;
+        let (name, labels) = match head.find('{') {
+            Some(open) => {
+                let close = head.rfind('}').context("unterminated label set")?;
+                (head[..open].to_string(), parse_labels(&head[open + 1..close])?)
+            }
+            None => (head.trim().to_string(), Vec::new()),
+        };
+        out.push(Sample { name, labels, value });
+    }
+    Ok(out)
+}
+
+/// Sum every sample named `name` whose labels contain all of `want`
+/// (extra labels are fine). `None` when nothing matched.
+pub fn sample_value(samples: &[Sample], name: &str, want: &[(&str, &str)]) -> Option<f64> {
+    let mut total = 0.0;
+    let mut found = false;
+    for s in samples {
+        if s.name != name {
+            continue;
+        }
+        if want
+            .iter()
+            .all(|(k, v)| s.labels.iter().any(|(sk, sv)| sk == k && sv == v))
+        {
+            total += s.value;
+            found = true;
+        }
+    }
+    found.then_some(total)
+}
+
+/// Quantile (seconds) from a parsed histogram family's cumulative
+/// `<name>_bucket` samples, with linear interpolation between bucket
+/// bounds (the +Inf bucket answers the last finite bound). `None` when
+/// no bucket samples exist; `Some(0.0)` when they exist but are empty.
+pub fn histogram_quantile(samples: &[Sample], name: &str, q: f64) -> Option<f64> {
+    let bucket_name = format!("{name}_bucket");
+    let mut buckets: Vec<(f64, f64)> = samples
+        .iter()
+        .filter(|s| s.name == bucket_name)
+        .filter_map(|s| {
+            let le = s.labels.iter().find(|(k, _)| k == "le")?;
+            let bound = if le.1 == "+Inf" {
+                f64::INFINITY
+            } else {
+                le.1.parse().ok()?
+            };
+            Some((bound, s.value))
+        })
+        .collect();
+    if buckets.is_empty() {
+        return None;
+    }
+    buckets.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let total = buckets.last().map(|(_, c)| *c).unwrap_or(0.0);
+    if total <= 0.0 {
+        return Some(0.0);
+    }
+    let rank = (q.clamp(0.0, 1.0) * total).ceil().clamp(1.0, total);
+    let mut prev_bound = 0.0;
+    let mut prev_cum = 0.0;
+    let mut last_finite = 0.0;
+    for &(bound, cum) in &buckets {
+        if bound.is_finite() {
+            last_finite = bound;
+        }
+        if cum >= rank {
+            if !bound.is_finite() {
+                return Some(last_finite);
+            }
+            let in_bucket = cum - prev_cum;
+            let frac = if in_bucket > 0.0 {
+                (rank - prev_cum) / in_bucket
+            } else {
+                1.0
+            };
+            return Some(prev_bound + frac * (bound - prev_bound));
+        }
+        prev_bound = bound;
+        prev_cum = cum;
+    }
+    Some(last_finite)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::registry::{arm, disarm, registry};
+    use crate::telemetry::exclusive;
+
+    #[test]
+    fn renders_counter_gauge_and_histogram_families_in_order() {
+        let _gate = exclusive();
+        registry().reset();
+        arm();
+        let c = registry().counter("tao_fmt_a_total", "counts things", &[("artifact", "x")]);
+        c.inc_by(3);
+        let g = registry().gauge("tao_fmt_b_depth", "a level", &[]);
+        g.set(-2);
+        let h = registry().histogram("tao_fmt_c_seconds", "a latency", &[]);
+        h.record_ns(1_500); // bucket le=2µs
+        let text = render(&registry().snapshot());
+        // Families render in name order with HELP/TYPE headers.
+        let a = text.find("# HELP tao_fmt_a_total counts things").unwrap();
+        let b = text.find("# TYPE tao_fmt_b_depth gauge").unwrap();
+        let cpos = text.find("# TYPE tao_fmt_c_seconds histogram").unwrap();
+        assert!(a < b && b < cpos, "family ordering must be deterministic:\n{text}");
+        assert!(text.contains("tao_fmt_a_total{artifact=\"x\"} 3"), "{text}");
+        assert!(text.contains("tao_fmt_b_depth -2"), "{text}");
+        // Cumulative buckets, +Inf, sum, count.
+        assert!(text.contains("tao_fmt_c_seconds_bucket{le=\"0.000001\"} 0"), "{text}");
+        assert!(text.contains("tao_fmt_c_seconds_bucket{le=\"0.000002\"} 1"), "{text}");
+        assert!(text.contains("tao_fmt_c_seconds_bucket{le=\"+Inf\"} 1"), "{text}");
+        assert!(text.contains("tao_fmt_c_seconds_count 1"), "{text}");
+        assert!(text.contains("tao_fmt_c_seconds_sum 0.0000015"), "{text}");
+        disarm();
+        registry().reset();
+    }
+
+    #[test]
+    fn rendering_is_deterministic_across_snapshots() {
+        let _gate = exclusive();
+        registry().reset();
+        arm();
+        for (a, b) in [("x", "1"), ("y", "2")] {
+            registry()
+                .counter("tao_fmt_det_total", "det", &[("artifact", a), ("lane", b)])
+                .inc();
+        }
+        let one = render(&registry().snapshot());
+        let two = render(&registry().snapshot());
+        assert_eq!(one, two);
+        disarm();
+        registry().reset();
+    }
+
+    #[test]
+    fn label_values_escape_and_round_trip() {
+        let _gate = exclusive();
+        registry().reset();
+        arm();
+        let tricky = "a\"b\\c\nd";
+        registry()
+            .counter("tao_fmt_escape_total", "esc", &[("artifact", tricky)])
+            .inc_by(7);
+        let text = render(&registry().snapshot());
+        assert!(
+            text.contains(r#"tao_fmt_escape_total{artifact="a\"b\\c\nd"} 7"#),
+            "escaped rendering missing:\n{text}"
+        );
+        let samples = parse(&text).unwrap();
+        let v = sample_value(&samples, "tao_fmt_escape_total", &[("artifact", tricky)]);
+        assert_eq!(v, Some(7.0), "parse must invert escaping");
+        disarm();
+        registry().reset();
+    }
+
+    #[test]
+    fn parse_reads_values_labels_and_skips_comments() {
+        let text = "# HELP x y\n# TYPE x counter\nx{a=\"1\",b=\"two\"} 5\nplain 2.5\n\n";
+        let samples = parse(text).unwrap();
+        assert_eq!(samples.len(), 2);
+        assert_eq!(sample_value(&samples, "x", &[("a", "1")]), Some(5.0));
+        assert_eq!(sample_value(&samples, "x", &[("a", "2")]), None);
+        assert_eq!(sample_value(&samples, "plain", &[]), Some(2.5));
+        assert!(parse("broken_line_without_value\n").is_err());
+    }
+
+    #[test]
+    fn histogram_quantile_from_parsed_buckets() {
+        let text = "\
+h_bucket{le=\"0.001\"} 90
+h_bucket{le=\"0.01\"} 99
+h_bucket{le=\"+Inf\"} 100
+h_sum 1.0
+h_count 100
+";
+        let samples = parse(text).unwrap();
+        let p50 = histogram_quantile(&samples, "h", 0.50).unwrap();
+        assert!(p50 <= 0.001, "p50 {p50}");
+        let p95 = histogram_quantile(&samples, "h", 0.95).unwrap();
+        assert!(p95 > 0.001 && p95 <= 0.01, "p95 {p95}");
+        // Rank in +Inf answers the last finite bound.
+        let p999 = histogram_quantile(&samples, "h", 0.9999).unwrap();
+        assert!((p999 - 0.01).abs() < 1e-12, "p999 {p999}");
+        assert_eq!(histogram_quantile(&samples, "missing", 0.5), None);
+    }
+
+    #[test]
+    fn round_trip_registry_to_parsed_totals() {
+        let _gate = exclusive();
+        registry().reset();
+        arm();
+        let hits = registry().counter("tao_fmt_rt_hits_total", "rt", &[("artifact", "a")]);
+        let misses = registry().counter("tao_fmt_rt_hits_total", "rt", &[("artifact", "b")]);
+        hits.inc_by(4);
+        misses.inc_by(6);
+        let samples = parse(&render(&registry().snapshot())).unwrap();
+        // Label-filtered and label-agnostic sums both reconcile.
+        assert_eq!(sample_value(&samples, "tao_fmt_rt_hits_total", &[]), Some(10.0));
+        assert_eq!(
+            sample_value(&samples, "tao_fmt_rt_hits_total", &[("artifact", "a")]),
+            Some(4.0)
+        );
+        disarm();
+        registry().reset();
+    }
+}

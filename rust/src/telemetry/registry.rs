@@ -1,0 +1,643 @@
+//! The process-global metric registry: lock-free handles over a
+//! BTreeMap-backed family table.
+//!
+//! Registration (naming a metric, resolving its label set) takes a
+//! mutex and is meant to happen once per producer — at daemon boot, at
+//! lane start, at a `OnceLock` call site — returning a cheap cloneable
+//! handle ([`Counter`], [`Gauge`], [`Histogram`]) that updates shared
+//! atomics with relaxed ordering. Lane respawns re-resolve the same
+//! `(name, labels)` cell, which is what makes per-lane counters
+//! cumulative across supervisor restarts: the cells outlive the lane
+//! threads.
+//!
+//! Families and series render in deterministic order (both maps are
+//! `BTreeMap`s), which the Prometheus exposition format test pins.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------
+// Arming
+// ---------------------------------------------------------------------
+
+/// Fast-path gate: while `false`, every handle update returns after one
+/// relaxed load (the `util::fault` disarmed bar).
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+/// Is telemetry recording? One relaxed atomic load.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Start recording (serve boot, `--profile` runs, tests).
+pub fn arm() {
+    ARMED.store(true, Ordering::Relaxed);
+}
+
+/// Stop recording. Registered cells keep their values; [`MetricRegistry::reset`]
+/// zeroes them.
+pub fn disarm() {
+    ARMED.store(false, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------
+// Histogram core
+// ---------------------------------------------------------------------
+
+/// Latency bucket count: upper bounds double from 1µs, so bucket `i`
+/// covers values ≤ `1µs << i` and the last finite bound is ~33.6s.
+/// One extra overflow bucket catches everything above.
+pub const HIST_BUCKETS: usize = 26;
+
+/// Upper bound of finite bucket `i`, nanoseconds.
+#[inline]
+pub fn bucket_bound_ns(i: usize) -> u64 {
+    1_000u64 << i
+}
+
+#[allow(clippy::declare_interior_mutable_const)] // repeat-initializer only
+const BUCKET_INIT: AtomicU64 = AtomicU64::new(0);
+
+/// Shared histogram cell: per-bucket counts plus sum/count for means
+/// and Prometheus `_sum`/`_count`.
+#[derive(Debug)]
+pub(crate) struct HistCore {
+    buckets: [AtomicU64; HIST_BUCKETS + 1],
+    sum_ns: AtomicU64,
+    count: AtomicU64,
+}
+
+impl HistCore {
+    fn new() -> HistCore {
+        HistCore {
+            buckets: [BUCKET_INIT; HIST_BUCKETS + 1],
+            sum_ns: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    fn record(&self, ns: u64) {
+        let mut idx = HIST_BUCKETS; // overflow unless a bound fits
+        for i in 0..HIST_BUCKETS {
+            if ns <= bucket_bound_ns(i) {
+                idx = i;
+                break;
+            }
+        }
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            count: self.count.load(Ordering::Relaxed),
+        }
+    }
+
+    fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.sum_ns.store(0, Ordering::Relaxed);
+        self.count.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A histogram read at one instant: per-bucket (non-cumulative) counts,
+/// `buckets.len() == HIST_BUCKETS + 1` with the overflow bucket last.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// Per-bucket counts (not cumulative; overflow last).
+    pub buckets: Vec<u64>,
+    /// Σ recorded values, nanoseconds.
+    pub sum_ns: u64,
+    /// Recorded values.
+    pub count: u64,
+}
+
+impl HistSnapshot {
+    /// Quantile estimate in nanoseconds: walk the cumulative counts to
+    /// the bucket holding rank `ceil(q·count)` and interpolate linearly
+    /// inside it. Empty histograms answer 0; ranks landing in the
+    /// overflow bucket answer the last finite bound (the histogram
+    /// cannot see further).
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            if seen + n >= rank {
+                if i >= HIST_BUCKETS {
+                    return bucket_bound_ns(HIST_BUCKETS - 1) as f64;
+                }
+                let lo = if i == 0 { 0.0 } else { bucket_bound_ns(i - 1) as f64 };
+                let hi = bucket_bound_ns(i) as f64;
+                let frac = (rank - seen) as f64 / n as f64;
+                return lo + frac * (hi - lo);
+            }
+            seen += n;
+        }
+        bucket_bound_ns(HIST_BUCKETS - 1) as f64 // unreachable if counts are consistent
+    }
+
+    /// [`HistSnapshot::quantile_ns`] in seconds.
+    pub fn quantile_secs(&self, q: f64) -> f64 {
+        self.quantile_ns(q) / 1e9
+    }
+
+    /// Σ recorded values in seconds.
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_ns as f64 / 1e9
+    }
+}
+
+// ---------------------------------------------------------------------
+// Handles
+// ---------------------------------------------------------------------
+
+/// Monotonic counter handle. Updates are relaxed atomics gated on
+/// [`armed`]; [`Counter::mirror`] overwrites unconditionally, for
+/// scrape-time mirroring of counters maintained elsewhere (fault probe
+/// stats, cache stats).
+#[derive(Debug, Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Add 1.
+    #[inline]
+    pub fn inc(&self) {
+        self.inc_by(1);
+    }
+
+    /// Add `n` (no-op while disarmed).
+    #[inline]
+    pub fn inc_by(&self, n: u64) {
+        if armed() {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Overwrite with an externally-maintained cumulative value. Only
+    /// for mirroring counters whose source of truth lives elsewhere
+    /// (e.g. `util::fault` probe stats at `/metrics` scrape time).
+    pub fn mirror(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn value(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Gauge handle: a settable signed level (queue depth, active jobs,
+/// cache entries).
+#[derive(Debug, Clone)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    /// Set the level (no-op while disarmed).
+    #[inline]
+    pub fn set(&self, v: i64) {
+        if armed() {
+            self.0.store(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Adjust the level by `d` (no-op while disarmed).
+    #[inline]
+    pub fn adjust(&self, d: i64) {
+        if armed() {
+            self.0.fetch_add(d, Ordering::Relaxed);
+        }
+    }
+
+    /// Current level.
+    pub fn value(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency histogram handle (fixed doubling buckets, see
+/// [`HIST_BUCKETS`]).
+#[derive(Debug, Clone)]
+pub struct Histogram(Arc<HistCore>);
+
+impl Histogram {
+    /// Record one value in nanoseconds (no-op while disarmed).
+    #[inline]
+    pub fn record_ns(&self, ns: u64) {
+        if armed() {
+            self.0.record(ns);
+        }
+    }
+
+    /// Record one duration.
+    #[inline]
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Read the current state.
+    pub fn snapshot(&self) -> HistSnapshot {
+        self.0.snapshot()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+/// What a family holds (fixed at first registration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Monotonic count.
+    Counter,
+    /// Settable level.
+    Gauge,
+    /// Fixed-bucket latency distribution.
+    Histogram,
+}
+
+impl MetricKind {
+    /// The Prometheus `# TYPE` keyword.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+#[derive(Debug)]
+enum SeriesCell {
+    Counter(Arc<AtomicU64>),
+    Gauge(Arc<AtomicI64>),
+    Hist(Arc<HistCore>),
+}
+
+#[derive(Debug)]
+struct Family {
+    kind: MetricKind,
+    help: String,
+    series: BTreeMap<Vec<(String, String)>, SeriesCell>,
+}
+
+/// One series read at one instant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeriesSnapshot {
+    /// Sorted label pairs.
+    pub labels: Vec<(String, String)>,
+    /// The value.
+    pub value: SeriesValue,
+}
+
+/// A snapshot value, by family kind.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SeriesValue {
+    /// Counter value.
+    Counter(u64),
+    /// Gauge level.
+    Gauge(i64),
+    /// Histogram state.
+    Hist(HistSnapshot),
+}
+
+/// One family read at one instant (series in deterministic label
+/// order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FamilySnapshot {
+    /// Family name, e.g. `tao_cache_hits_total`.
+    pub name: String,
+    /// Family kind.
+    pub kind: MetricKind,
+    /// `# HELP` text.
+    pub help: String,
+    /// The series.
+    pub series: Vec<SeriesSnapshot>,
+}
+
+/// The registry: families by name, series by sorted label set.
+#[derive(Debug, Default)]
+pub struct MetricRegistry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+/// The process-global registry.
+pub fn registry() -> &'static MetricRegistry {
+    static REGISTRY: OnceLock<MetricRegistry> = OnceLock::new();
+    REGISTRY.get_or_init(MetricRegistry::default)
+}
+
+fn label_key(labels: &[(&str, &str)]) -> Vec<(String, String)> {
+    let mut key: Vec<(String, String)> =
+        labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    key.sort();
+    key
+}
+
+impl MetricRegistry {
+    fn lock(&self) -> MutexGuard<'_, BTreeMap<String, Family>> {
+        // Registration only inserts or reads whole cells, never leaves
+        // one mid-update, so recovering from a peer panic is sound.
+        self.families.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn family<'a>(
+        map: &'a mut BTreeMap<String, Family>,
+        name: &str,
+        kind: MetricKind,
+        help: &str,
+    ) -> &'a mut Family {
+        let fam = map.entry(name.to_string()).or_insert_with(|| Family {
+            kind,
+            help: help.to_string(),
+            series: BTreeMap::new(),
+        });
+        assert!(
+            fam.kind == kind,
+            "metric {name} registered as {} and {}",
+            fam.kind.as_str(),
+            kind.as_str()
+        );
+        fam
+    }
+
+    /// Resolve (registering on first use) a counter series.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Counter {
+        let mut map = self.lock();
+        let fam = Self::family(&mut map, name, MetricKind::Counter, help);
+        let cell = fam
+            .series
+            .entry(label_key(labels))
+            .or_insert_with(|| SeriesCell::Counter(Arc::new(AtomicU64::new(0))));
+        match cell {
+            SeriesCell::Counter(c) => Counter(c.clone()),
+            _ => unreachable!("kind checked by family()"),
+        }
+    }
+
+    /// Resolve (registering on first use) a gauge series.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Gauge {
+        let mut map = self.lock();
+        let fam = Self::family(&mut map, name, MetricKind::Gauge, help);
+        let cell = fam
+            .series
+            .entry(label_key(labels))
+            .or_insert_with(|| SeriesCell::Gauge(Arc::new(AtomicI64::new(0))));
+        match cell {
+            SeriesCell::Gauge(g) => Gauge(g.clone()),
+            _ => unreachable!("kind checked by family()"),
+        }
+    }
+
+    /// Resolve (registering on first use) a histogram series.
+    pub fn histogram(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Histogram {
+        let mut map = self.lock();
+        let fam = Self::family(&mut map, name, MetricKind::Histogram, help);
+        let cell = fam
+            .series
+            .entry(label_key(labels))
+            .or_insert_with(|| SeriesCell::Hist(Arc::new(HistCore::new())));
+        match cell {
+            SeriesCell::Hist(h) => Histogram(h.clone()),
+            _ => unreachable!("kind checked by family()"),
+        }
+    }
+
+    /// Read every family, in deterministic (name, label) order.
+    pub fn snapshot(&self) -> Vec<FamilySnapshot> {
+        let map = self.lock();
+        map.iter()
+            .map(|(name, fam)| FamilySnapshot {
+                name: name.clone(),
+                kind: fam.kind,
+                help: fam.help.clone(),
+                series: fam
+                    .series
+                    .iter()
+                    .map(|(labels, cell)| SeriesSnapshot {
+                        labels: labels.clone(),
+                        value: match cell {
+                            SeriesCell::Counter(c) => {
+                                SeriesValue::Counter(c.load(Ordering::Relaxed))
+                            }
+                            SeriesCell::Gauge(g) => SeriesValue::Gauge(g.load(Ordering::Relaxed)),
+                            SeriesCell::Hist(h) => SeriesValue::Hist(h.snapshot()),
+                        },
+                    })
+                    .collect(),
+            })
+            .collect()
+    }
+
+    /// Current value of one counter series, if registered. Sums across
+    /// all series of the family when `labels` is `None` (label-agnostic
+    /// totals for tests and the stats endpoint).
+    pub fn counter_value(&self, name: &str, labels: Option<&[(&str, &str)]>) -> Option<u64> {
+        let map = self.lock();
+        let fam = map.get(name)?;
+        let key = labels.map(label_key);
+        let mut total = 0u64;
+        let mut found = false;
+        for (k, cell) in &fam.series {
+            if key.as_ref().is_some_and(|want| want != k) {
+                continue;
+            }
+            if let SeriesCell::Counter(c) = cell {
+                total += c.load(Ordering::Relaxed);
+                found = true;
+            }
+        }
+        found.then_some(total)
+    }
+
+    /// Zero every registered value (registration survives). For tests
+    /// and the armed-vs-disarmed bench, under [`crate::telemetry::exclusive`].
+    pub fn reset(&self) {
+        let map = self.lock();
+        for fam in map.values() {
+            for cell in fam.series.values() {
+                match cell {
+                    SeriesCell::Counter(c) => c.store(0, Ordering::Relaxed),
+                    SeriesCell::Gauge(g) => g.store(0, Ordering::Relaxed),
+                    SeriesCell::Hist(h) => h.reset(),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::exclusive;
+
+    #[test]
+    fn bucket_boundaries_double_from_one_microsecond() {
+        assert_eq!(bucket_bound_ns(0), 1_000);
+        assert_eq!(bucket_bound_ns(1), 2_000);
+        assert_eq!(bucket_bound_ns(10), 1_024_000);
+        // Last finite bound ≈ 33.6s: wide enough for any request.
+        assert!(bucket_bound_ns(HIST_BUCKETS - 1) > 30_000_000_000);
+    }
+
+    #[test]
+    fn histogram_boundary_values_land_in_their_bucket() {
+        let core = HistCore::new();
+        // Exactly on a bound → that bucket (le semantics); one past → next.
+        core.record(1_000);
+        core.record(1_001);
+        core.record(2_000);
+        core.record(0);
+        let s = core.snapshot();
+        assert_eq!(s.buckets[0], 2); // 0 and 1000
+        assert_eq!(s.buckets[1], 2); // 1001 and 2000
+        assert_eq!(s.count, 4);
+        assert_eq!(s.sum_ns, 4_001);
+    }
+
+    #[test]
+    fn histogram_overflow_bucket_catches_the_tail() {
+        let core = HistCore::new();
+        core.record(u64::MAX / 2);
+        let s = core.snapshot();
+        assert_eq!(s.buckets[HIST_BUCKETS], 1);
+        // A rank in the overflow bucket answers the last finite bound.
+        assert_eq!(s.quantile_ns(0.99), bucket_bound_ns(HIST_BUCKETS - 1) as f64);
+    }
+
+    #[test]
+    fn quantiles_on_empty_single_and_uniform_fills() {
+        let core = HistCore::new();
+        assert_eq!(core.snapshot().quantile_ns(0.99), 0.0);
+
+        core.record(5_000); // single sample, bucket (4µs, 8µs]
+        let s = core.snapshot();
+        let p99 = s.quantile_ns(0.99);
+        assert!(p99 > 4_000.0 && p99 <= 8_000.0, "p99 {p99}");
+        // Every quantile of a single sample answers from its bucket.
+        assert_eq!(s.quantile_ns(0.01), p99);
+
+        // Uniform fill of one bucket: quantiles interpolate across it.
+        let core = HistCore::new();
+        for _ in 0..100 {
+            core.record(3_000); // bucket (2µs, 4µs]
+        }
+        let s = core.snapshot();
+        let p50 = s.quantile_ns(0.50);
+        let p99 = s.quantile_ns(0.99);
+        assert!(p50 > 2_000.0 && p50 <= 4_000.0);
+        assert!(p99 > p50, "interpolation must order p99 {p99} above p50 {p50}");
+        assert!((s.quantile_ns(1.0) - 4_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantiles_across_buckets_follow_mass() {
+        let core = HistCore::new();
+        for _ in 0..90 {
+            core.record(1_000); // bucket 0
+        }
+        for _ in 0..10 {
+            core.record(1_000_000); // ~bucket 10
+        }
+        let s = core.snapshot();
+        assert!(s.quantile_ns(0.50) <= 1_000.0);
+        assert!(s.quantile_ns(0.95) > 500_000.0);
+    }
+
+    #[test]
+    fn registry_concurrent_totals_are_exact() {
+        let _gate = exclusive();
+        registry().reset();
+        arm();
+        const THREADS: usize = 8;
+        const METRICS: usize = 4;
+        const PER: u64 = 10_000;
+        std::thread::scope(|s| {
+            for _ in 0..THREADS {
+                s.spawn(|| {
+                    // Each thread resolves its own handles, hammering
+                    // registration and update concurrently.
+                    let counters: Vec<Counter> = (0..METRICS)
+                        .map(|m| {
+                            let label = m.to_string();
+                            registry().counter(
+                                "tao_test_concurrency_total",
+                                "test",
+                                &[("m", label.as_str())],
+                            )
+                        })
+                        .collect();
+                    let h = registry().histogram("tao_test_concurrency_ns", "test", &[]);
+                    for i in 0..PER {
+                        counters[(i % METRICS as u64) as usize].inc();
+                        h.record_ns(i);
+                    }
+                });
+            }
+        });
+        let total = registry()
+            .counter_value("tao_test_concurrency_total", None)
+            .unwrap();
+        assert_eq!(total, THREADS as u64 * PER);
+        for m in 0..METRICS {
+            let label = m.to_string();
+            let v = registry()
+                .counter_value("tao_test_concurrency_total", Some(&[("m", label.as_str())]))
+                .unwrap();
+            assert_eq!(v, THREADS as u64 * PER / METRICS as u64);
+        }
+        let h = registry().histogram("tao_test_concurrency_ns", "test", &[]);
+        assert_eq!(h.snapshot().count, THREADS as u64 * PER);
+        disarm();
+        registry().reset();
+    }
+
+    #[test]
+    fn disarmed_updates_are_dropped_and_reset_zeroes() {
+        let _gate = exclusive();
+        registry().reset();
+        disarm();
+        let c = registry().counter("tao_test_disarmed_total", "test", &[]);
+        c.inc();
+        assert_eq!(c.value(), 0, "disarmed increments must be dropped");
+        arm();
+        c.inc_by(3);
+        assert_eq!(c.value(), 3);
+        let g = registry().gauge("tao_test_disarmed_gauge", "test", &[]);
+        g.set(7);
+        g.adjust(-2);
+        assert_eq!(g.value(), 5);
+        registry().reset();
+        assert_eq!(c.value(), 0);
+        assert_eq!(g.value(), 0);
+        disarm();
+    }
+
+    #[test]
+    fn label_order_does_not_split_series() {
+        let _gate = exclusive();
+        registry().reset();
+        arm();
+        let a = registry().counter("tao_test_labels_total", "t", &[("a", "1"), ("b", "2")]);
+        let b = registry().counter("tao_test_labels_total", "t", &[("b", "2"), ("a", "1")]);
+        a.inc();
+        b.inc();
+        assert_eq!(a.value(), 2, "permuted label order must resolve one cell");
+        disarm();
+        registry().reset();
+    }
+}

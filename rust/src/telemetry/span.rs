@@ -1,0 +1,173 @@
+//! RAII span timers over registry histograms, and trace-id minting.
+//!
+//! A [`Stage`] is a pre-resolved handle on one series of the
+//! `tao_stage_seconds{stage=...}` family; [`Stage::span`] opens a timer
+//! that records its elapsed time into the histogram when dropped. While
+//! telemetry is disarmed a span site costs one relaxed atomic load —
+//! no clock read, no record (the `util::fault` bar, asserted by the
+//! armed-vs-disarmed bench). Hot paths intern their stage once with the
+//! [`crate::stage_span!`] macro.
+//!
+//! Spans can carry a `trace_id`; with `--log-json` at debug level each
+//! annotated span emits one structured line on close, so a job's
+//! per-stage timeline is greppable by its id.
+
+use super::log::{self, Field, Level};
+use super::registry::{armed, registry, Histogram};
+use crate::util::hash::{fnv1a64, fnv1a64_u64, FNV_OFFSET};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Help text for the shared per-stage latency family.
+pub const STAGE_HELP: &str = "Per-stage wall-clock latency (seconds) by pipeline stage.";
+
+/// The shared per-stage latency family name.
+pub const STAGE_FAMILY: &str = "tao_stage_seconds";
+
+/// A pre-resolved per-stage histogram handle.
+#[derive(Debug, Clone)]
+pub struct Stage {
+    name: &'static str,
+    hist: Histogram,
+}
+
+impl Stage {
+    /// Resolve the `tao_stage_seconds{stage=name}` series (registers on
+    /// first use; cheap to clone afterwards).
+    pub fn new(name: &'static str) -> Stage {
+        Stage {
+            name,
+            hist: registry().histogram(STAGE_FAMILY, STAGE_HELP, &[("stage", name)]),
+        }
+    }
+
+    /// Stage name (the `stage` label value).
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Open a span. Disarmed: returns an inert span after one relaxed
+    /// load.
+    #[inline]
+    pub fn span(&self) -> Span<'_> {
+        Span {
+            stage: self,
+            start: if armed() { Some(Instant::now()) } else { None },
+            trace_id: None,
+        }
+    }
+
+    /// Open a span annotated with a job's trace id (logged on close at
+    /// debug level when `--log-json` is active).
+    #[inline]
+    pub fn span_traced<'a>(&'a self, trace_id: &'a str) -> Span<'a> {
+        Span {
+            stage: self,
+            start: if armed() { Some(Instant::now()) } else { None },
+            trace_id: Some(trace_id),
+        }
+    }
+}
+
+/// A running stage timer; records into the stage histogram on drop.
+#[derive(Debug)]
+pub struct Span<'a> {
+    stage: &'a Stage,
+    start: Option<Instant>,
+    trace_id: Option<&'a str>,
+}
+
+impl Span<'_> {
+    /// Close early (identical to dropping).
+    pub fn finish(self) {}
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        let Some(start) = self.start.take() else {
+            return;
+        };
+        let elapsed = start.elapsed();
+        self.stage.hist.record(elapsed);
+        if log::log_enabled(Level::Debug) {
+            let mut fields = vec![
+                ("stage", Field::Str(self.stage.name)),
+                ("us", Field::U64(elapsed.as_micros().min(u64::MAX as u128) as u64)),
+            ];
+            if let Some(id) = self.trace_id {
+                fields.push(("trace_id", Field::Str(id)));
+            }
+            log::emit(Level::Debug, "span", &fields);
+        }
+    }
+}
+
+/// Mint a fresh request trace id: 16 hex chars, unique per process via
+/// an atomic sequence, distinct across processes via pid + boot-time
+/// entropy folded through FNV-1a. (Uniqueness is what matters — the id
+/// is a grep key, not a secret.)
+pub fn fresh_trace_id() -> String {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    static SALT: std::sync::OnceLock<u64> = std::sync::OnceLock::new();
+    let salt = *SALT.get_or_init(|| {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        fnv1a64_u64(std::process::id() as u64, fnv1a64(&nanos.to_le_bytes(), FNV_OFFSET))
+    });
+    let n = SEQ.fetch_add(1, Ordering::Relaxed);
+    format!("{:016x}", fnv1a64_u64(n, salt))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::registry::{arm, disarm};
+    use crate::telemetry::exclusive;
+
+    #[test]
+    fn spans_record_into_the_stage_histogram_only_when_armed() {
+        let _gate = exclusive();
+        registry().reset();
+        disarm();
+        let stage = Stage::new("test_stage");
+        stage.span().finish();
+        assert_eq!(stage.hist.snapshot().count, 0, "disarmed span must not record");
+        arm();
+        {
+            let _sp = stage.span();
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        }
+        let snap = stage.hist.snapshot();
+        assert_eq!(snap.count, 1);
+        assert!(snap.sum_ns >= 100_000, "span must measure elapsed time");
+        disarm();
+        registry().reset();
+    }
+
+    #[test]
+    fn stage_span_macro_interns_per_site() {
+        let _gate = exclusive();
+        registry().reset();
+        arm();
+        for _ in 0..3 {
+            let _sp = crate::stage_span!("macro_stage");
+        }
+        let stage = Stage::new("macro_stage");
+        assert_eq!(stage.hist.snapshot().count, 3);
+        disarm();
+        registry().reset();
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_hex() {
+        let a = fresh_trace_id();
+        let b = fresh_trace_id();
+        assert_ne!(a, b);
+        for id in [&a, &b] {
+            assert_eq!(id.len(), 16);
+            assert!(id.chars().all(|c| c.is_ascii_hexdigit()));
+        }
+    }
+}

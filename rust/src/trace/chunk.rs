@@ -421,14 +421,16 @@ impl ChunkPrefetcher {
                 // end-of-stream — `next` below reads a bare producer
                 // disconnect as EOF — so the unwind is caught and
                 // delivered as the stream's error.
-                let pulled =
+                let pulled = {
+                    let _sp = crate::stage_span!("decode");
                     catch_unwind(AssertUnwindSafe(|| source.next_chunk(&mut buf, max_rows)))
                         .unwrap_or_else(|p| {
                             Err(anyhow::anyhow!(
                                 "chunk source panicked: {}",
                                 panic_message(p.as_ref())
                             ))
-                        });
+                        })
+                };
                 match pulled {
                     // `next_chunk` cleared the buffer, so an empty buf
                     // is the in-band end-of-stream marker.

@@ -234,7 +234,9 @@ pub fn check(current: &Path, baselines_dir: &Path, cfg: &GateConfig) -> Result<G
     let pipeline_metrics: Vec<(String, f64)> = report
         .metrics
         .iter()
-        .filter(|(k, _)| k.starts_with("pipeline_") || k.starts_with("sampled_"))
+        .filter(|(k, _)| {
+            k.starts_with("pipeline_") || k.starts_with("sampled_") || k.starts_with("telemetry_")
+        })
         .cloned()
         .collect();
     Ok(GateOutcome {

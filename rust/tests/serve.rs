@@ -99,6 +99,7 @@ fn loopback_concurrent_jobs_match_offline_cold_and_cached() {
             deadline_ms: None,
             trace: None,
             plan: None,
+            trace_id: None,
         })
         .collect();
 
@@ -216,6 +217,7 @@ fn loopback_trace_jobs_match_bench_jobs_both_formats() {
         deadline_ms: None,
         trace: None,
         plan: None,
+        trace_id: None,
     };
     let bench_out = post_job(&addr, &bench_spec);
     assert_eq!(bench_out.metrics.instructions, insts);
@@ -231,6 +233,7 @@ fn loopback_trace_jobs_match_bench_jobs_both_formats() {
             deadline_ms: None,
             trace: Some(path.to_string_lossy().into_owned()),
             plan: None,
+            trace_id: None,
         };
         let out = post_job(&addr, &tspec);
         assert_eq!(out.metrics.instructions, insts, "{tag} trace job length");
@@ -251,6 +254,7 @@ fn loopback_trace_jobs_match_bench_jobs_both_formats() {
         deadline_ms: None,
         trace: Some(foreign.to_string_lossy().into_owned()),
         plan: None,
+        trace_id: None,
     };
     let resp = http_post(&addr, "/v1/simulate", &fspec.to_json()).unwrap();
     assert_eq!(resp.status, 400, "foreign trace must be a bad request: {}", resp.body);
@@ -297,6 +301,7 @@ fn backpressure_rejects_and_drain_finishes_in_flight_jobs() {
         deadline_ms: None,
         trace: None,
         plan: None,
+        trace_id: None,
     };
     let wait_until = |pred: &dyn Fn(&StatsSnapshot) -> bool, what: &str| {
         let deadline = Instant::now() + Duration::from_secs(30);
@@ -372,6 +377,7 @@ fn stalled_reads_get_408_and_oversized_requests_get_413() {
         deadline_ms: None,
         trace: None,
         plan: None,
+        trace_id: None,
     };
 
     // Stall mid-body for 5x the read timeout: the server must answer
@@ -435,6 +441,7 @@ fn executor_panic_respawns_lane_and_retried_jobs_match_offline() {
         deadline_ms: None,
         trace: None,
         plan: None,
+        trace_id: None,
     };
     // One-shot: the second executor dispatch panics the lane thread
     // while several jobs are streaming through it.
@@ -503,6 +510,7 @@ fn drain_under_executor_panic_exits_clean_with_reloadable_journal() {
         deadline_ms: None,
         trace: None,
         plan: None,
+        trace_id: None,
     };
     // One job to completion before the fault: its chunks are cached
     // and journaled, so the journal has content whatever happens to
@@ -587,6 +595,7 @@ fn cache_journal_survives_daemon_restart() {
             deadline_ms: None,
             trace: None,
             plan: None,
+            trace_id: None,
         })
         .collect();
 
@@ -626,4 +635,130 @@ fn cache_journal_survives_daemon_restart() {
     let stats2 = srv.join().unwrap().unwrap();
     assert_eq!(stats2.cache_recovered, stats1.cache_entries);
     assert_eq!(stats2.batches, 0, "warm daemon must not execute batches");
+}
+
+/// Telemetry reconciliation on a live daemon: the Prometheus `/metrics`
+/// exposition parses, every family the CI `metrics-smoke` job greps for
+/// is present, the structural identity `cache hits + misses == chunks`
+/// holds exactly, the totals agree with both `/v1/stats` and the
+/// client-side view of the same jobs, the per-lane `/v1/stats` detail
+/// sums back to the daemon totals, and trace ids round-trip
+/// (client-supplied echoed, server-minted otherwise).
+#[test]
+fn loopback_metrics_reconcile_with_stats_and_clients() {
+    use tao_sim::telemetry::prometheus::{parse, sample_value};
+    use tao_sim::util::json::Json;
+
+    let _gate = fault::exclusive();
+    fault::disarm_all();
+    // The registry is process-global and `Server::bind` arms it; the
+    // fault gate serializes every loopback test, so a reset here scopes
+    // all counters to this daemon.
+    tao_sim::telemetry::registry().reset();
+
+    let dir = temp_dir("metrics");
+    let models = write_surrogate_set(&dir).unwrap();
+    let pool = ArtifactPool::load(&models).unwrap();
+    let server = Server::bind(pool, &test_config()).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let srv = std::thread::spawn(move || server.run());
+
+    let arts = vec![
+        ScenarioArtifact { name: "serve_tao_a".into(), simnet: false },
+        ScenarioArtifact { name: "serve_tao_b".into(), simnet: false },
+    ];
+    let mut specs: Vec<JobSpec> = mixed_scenarios(&arts, 8, 120, 11)
+        .iter()
+        .map(|j| JobSpec {
+            bench: j.bench.clone(),
+            insts: j.insts,
+            seed: j.seed,
+            artifact: j.artifact.clone(),
+            chunk: 48,
+            ctx_uarch: j.ctx_uarch.clone(),
+            deadline_ms: None,
+            trace: None,
+            plan: None,
+            trace_id: None,
+        })
+        .collect();
+    specs[0].trace_id = Some("itest-trace_0".into());
+    let outs: Vec<JobOutcome> = specs.iter().map(|s| post_job(&addr, s)).collect();
+
+    // Trace ids: the client-supplied one echoes back verbatim; the rest
+    // are server-minted and non-empty.
+    assert_eq!(outs[0].trace_id, "itest-trace_0");
+    for out in &outs[1..] {
+        assert_eq!(out.trace_id.len(), 16, "minted trace id: {:?}", out.trace_id);
+    }
+
+    let resp = http_get(&addr, "/metrics").unwrap();
+    assert_eq!(resp.status, 200);
+    let samples = parse(&resp.body).expect("exposition must parse");
+    for family in [
+        "tao_jobs_submitted_total",
+        "tao_jobs_done_total",
+        "tao_jobs_active",
+        "tao_jobs_chunks_total",
+        "tao_queue_depth",
+        "tao_cache_hits_total",
+        "tao_cache_misses_total",
+        "tao_cache_entries",
+        "tao_lane_jobs_total",
+        "tao_lane_batches_total",
+        "tao_lanes_down",
+        "tao_packed_windows_total",
+        "tao_batch_slots_total",
+        "tao_fault_checks_total",
+        "tao_fault_fires_total",
+        "tao_deadline_sweeps_total",
+        "tao_errors_total",
+        "tao_jobs_rejected_total",
+    ] {
+        assert!(
+            sample_value(&samples, family, &[]).is_some(),
+            "family {family} missing from /metrics"
+        );
+    }
+    // Histogram families expose _count/_sum/_bucket series.
+    for series in ["tao_request_seconds_count", "tao_queue_wait_seconds_count"] {
+        assert!(
+            sample_value(&samples, series, &[]).is_some(),
+            "series {series} missing from /metrics"
+        );
+    }
+    let v = |name: &str| sample_value(&samples, name, &[]).unwrap_or(0.0) as u64;
+
+    // The structural identity the CI smoke job asserts: every chunk is
+    // decided hit-or-miss at one site.
+    assert_eq!(v("tao_cache_hits_total") + v("tao_cache_misses_total"), v("tao_jobs_chunks_total"));
+
+    // Reconcile with the client-side view of the same jobs.
+    let client_chunks: u64 = specs.iter().map(|s| s.insts.div_ceil(s.chunk as u64)).sum();
+    let client_hits: u64 = outs.iter().map(|o| o.cache_hits).sum();
+    assert_eq!(v("tao_jobs_chunks_total"), client_chunks);
+    assert_eq!(v("tao_cache_hits_total"), client_hits);
+    assert_eq!(v("tao_jobs_submitted_total"), specs.len() as u64);
+    assert_eq!(v("tao_lane_jobs_total"), specs.len() as u64);
+
+    // Reconcile with /v1/stats, including the per-lane detail object
+    // (cells live in the registry, not the lane threads).
+    let stats = get_stats(&addr);
+    assert_eq!(v("tao_jobs_done_total"), stats.jobs_done);
+    assert_eq!(v("tao_cache_hits_total"), stats.cache_hits);
+    assert_eq!(v("tao_cache_misses_total"), stats.cache_misses);
+    let raw = http_get(&addr, "/v1/stats").unwrap().body;
+    let j = Json::parse(&raw).unwrap();
+    let lanes = j.get("lanes").expect("/v1/stats lanes object");
+    let mut lane_jobs_sum = 0u64;
+    for name in ["serve_tao_a", "serve_tao_b", "serve_simnet_a"] {
+        let lane = lanes.get(name).unwrap_or_else(|| panic!("lane {name} missing"));
+        lane_jobs_sum += lane.req_u64("jobs_done").unwrap();
+        assert_eq!(lane.req_u64("respawn_count").unwrap(), 0);
+    }
+    assert_eq!(lane_jobs_sum, stats.jobs_done);
+
+    let resp = http_post(&addr, "/v1/shutdown", "").unwrap();
+    assert_eq!(resp.status, 200);
+    srv.join().unwrap().unwrap();
 }

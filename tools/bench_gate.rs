@@ -55,6 +55,8 @@ fn print_outcome(o: &GateOutcome, cfg: &GateConfig) {
             "  (WARN: sampled replay below the 4x speedup target)"
         } else if k == "sampled_max_error_pct" && error_bound.is_some_and(|b| *v > b) {
             "  (WARN: sampled CPI error exceeds the declared bound)"
+        } else if k == "telemetry_overhead_pct" && *v > 2.0 {
+            "  (WARN: armed telemetry costs more than the 2% budget)"
         } else {
             ""
         };
