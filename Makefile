@@ -9,7 +9,10 @@
 # `make bench-baseline` after a trusted run to append a snapshot.
 
 .PHONY: build test fmt-check clippy bench bench-smoke bench-serve chaos-smoke \
-        metrics-smoke bench-gate bench-baseline ci
+        metrics-smoke router-smoke bench-gate bench-baseline ci
+
+# Peak-RSS budget shared by the RSS-gated smokes (matches CI).
+RSS_BUDGET_KB ?= 655360
 
 build:
 	cargo build --release
@@ -44,7 +47,10 @@ bench-smoke:
 # Serving smoke: start `tao serve` on an ephemeral port with the
 # surrogate artifact set, replay a mixed scenario load (verifying every
 # served result against the offline engine and that packed occupancy
-# beats per-request occupancy), emit BENCH_serve.json, drain.
+# beats per-request occupancy), emit BENCH_serve.json, drain. Then
+# measure the router-tier scale-up curve (1/2/4 workers behind
+# `tao router`) into the same report: router_jobs_per_sec_{N}w plus
+# router_scaleup_{N}w, which bench-gate warns on below 1.6x/doubling.
 bench-serve: build
 	d=$$(mktemp -d /tmp/tao-serve.XXXXXX); \
 	target/release/tao serve --surrogate-dir $$d/artifacts \
@@ -57,6 +63,10 @@ bench-serve: build
 	wait $$serve_pid; serve_status=$$?; \
 	rm -rf $$d; \
 	if [ $$status -eq 0 ]; then status=$$serve_status; fi; \
+	if [ $$status -eq 0 ]; then \
+	  target/release/tao router-bench --fleets 1,2,4 \
+	    --json BENCH_serve.json; status=$$?; \
+	fi; \
 	exit $$status
 
 # Chaos smoke (mirrors CI's chaos-smoke job): a daemon with every
@@ -127,6 +137,78 @@ metrics-smoke: build
 	if [ $$status -eq 0 ]; then status=$$serve_status; fi; \
 	exit $$status
 
+# Router smoke (mirrors CI's router-smoke job): three workers behind a
+# consistent-hash `tao router`, the router RSS-gated; one worker is
+# kill -9'd while the load is in flight, so every job must survive via
+# the failover walk (loadgen re-verifies each result against the
+# offline engine), and the tao_router_* metric families must be live
+# with a nonzero failover count.
+router-smoke: build
+	d=$$(mktemp -d /tmp/tao-router.XXXXXX); status=0; pids=""; router_pid=""; \
+	for i in 1 2 3; do \
+	  target/release/tao serve --surrogate-dir $$d/artifacts \
+	    --port-file $$d/w$$i.port --cache-entries 512 \
+	    --admission-wait-ms 150 2> $$d/w$$i.log & \
+	  pids="$$pids $$!"; \
+	  for _ in $$(seq 1 150); do test -s $$d/w$$i.port && break; sleep 0.2; done; \
+	  test -s $$d/w$$i.port \
+	    || { echo "router-smoke: worker $$i never bound"; cat $$d/w$$i.log; status=1; }; \
+	done; \
+	victim=$$(echo $$pids | awk '{print $$2}'); \
+	if [ $$status -eq 0 ]; then \
+	  /usr/bin/time -v target/release/tao router \
+	    --workers $$(cat $$d/w1.port),$$(cat $$d/w2.port),$$(cat $$d/w3.port) \
+	    --port-file $$d/router.port --health-interval-ms 100 \
+	    2> $$d/time-router.log & \
+	  router_pid=$$!; \
+	  for _ in $$(seq 1 150); do test -s $$d/router.port && break; sleep 0.2; done; \
+	  test -s $$d/router.port \
+	    || { echo "router-smoke: router never bound"; cat $$d/time-router.log; status=1; }; \
+	fi; \
+	if [ $$status -eq 0 ]; then \
+	  target/release/tao loadgen --port-file $$d/router.port \
+	    --jobs 24 --threads 8 --insts 40000 \
+	    --verify-models $$d/artifacts & lg=$$!; \
+	  sleep 2; kill -9 $$victim 2>/dev/null || true; \
+	  wait $$lg || { echo "router-smoke: loadgen failed"; status=1; }; \
+	fi; \
+	if [ $$status -eq 0 ]; then \
+	  curl -sf "http://$$(cat $$d/router.port)/metrics" > $$d/metrics.txt \
+	    || { echo "router-smoke: /metrics scrape failed"; status=1; }; \
+	fi; \
+	if [ $$status -eq 0 ]; then \
+	  for fam in tao_router_forwards_total tao_router_failovers_total \
+	             tao_router_workers_live tao_router_workers_known \
+	             tao_router_request_seconds; do \
+	    grep -q "^$$fam" $$d/metrics.txt \
+	      || { echo "router-smoke: family $$fam missing"; status=1; }; \
+	  done; \
+	fi; \
+	if [ $$status -eq 0 ]; then \
+	  awk '/^tao_router_failovers_total/ { n += $$2 } \
+	    END { if (n > 0) { printf "router-smoke: %d failovers\n", n; exit 0 } \
+	          print "router-smoke: no failovers recorded"; exit 1 }' \
+	    $$d/metrics.txt || status=1; \
+	  awk '/^tao_router_workers_live/ \
+	    { print "router-smoke: workers_live", $$2 }' $$d/metrics.txt; \
+	fi; \
+	if [ -n "$$router_pid" ]; then \
+	  curl -sf -X POST "http://$$(cat $$d/router.port)/v1/shutdown" \
+	    > /dev/null 2>&1 || true; \
+	  wait $$router_pid || true; \
+	  rss_kb=$$(grep 'Maximum resident set size' $$d/time-router.log \
+	    | awk '{print $$NF}'); \
+	  echo "router-smoke: router peak RSS $$rss_kb KB (budget $(RSS_BUDGET_KB) KB)"; \
+	  if [ $$status -eq 0 ]; then \
+	    test "$$rss_kb" -le "$(RSS_BUDGET_KB)" \
+	      || { echo "router-smoke: RSS over budget"; status=1; }; \
+	  fi; \
+	fi; \
+	for p in $$pids; do kill $$p 2>/dev/null || true; done; \
+	for p in $$pids; do wait $$p || true; done; \
+	rm -rf $$d; \
+	exit $$status
+
 # Gate the current BENCH_*.json against benches/baselines/.
 bench-gate:
 	cargo run --release --bin bench_gate -- \
@@ -153,4 +235,5 @@ ci:
 	$(MAKE) clippy
 	$(MAKE) bench-smoke
 	$(MAKE) metrics-smoke
+	$(MAKE) router-smoke
 	$(MAKE) bench-gate

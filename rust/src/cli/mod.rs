@@ -6,7 +6,9 @@
 //! * `tao datagen`   — generate traces + training datasets (`data/`);
 //! * `tao simulate`  — run the DL-based simulation on a benchmark;
 //! * `tao serve`     — the concurrent simulation service daemon;
+//! * `tao router`    — consistent-hash routing tier over serve workers;
 //! * `tao loadgen`   — replay mixed scenarios against a daemon;
+//! * `tao router-bench` — measure router-tier throughput scale-up;
 //! * `tao report`    — regenerate a paper table/figure (see DESIGN.md §3);
 //! * `tao dse`       — sample + characterize designs, select train pair;
 //! * `tao trace`     — inspect/convert/generate on-disk functional traces;
@@ -49,12 +51,25 @@ USAGE:
                [--read-timeout-ms N] [--write-timeout-ms N]
                [--faults probe=prob,...]   (also: TAO_FAULTS env var)
                [--log-json] [--log-level error|warn|info|debug]
+               [--peers H:P,...] [--peer-timeout-ms N]   (ring-sibling caches)
+               [--cache-quota NAME=BYTES]... [--warm-journal F]...
                (GET /metrics serves the Prometheus exposition)
+  tao router   --worker H:P[=WEIGHT] [--worker ...] | --workers H:P,H:P,...
+               [--addr H:P | --port P] [--port-file F] [--replica-walk N]
+               [--max-attempts N] [--hop-cap-ms N] [--default-deadline-ms N]
+               [--health-interval-ms N] [--health-timeout-ms N]
+               [--read-timeout-ms N] [--write-timeout-ms N]
+               [--log-json] [--log-level L]
+               [--print-peers]   (emit each worker's --peers wiring and exit)
   tao loadgen  --addr H:P | --port-file F  [--jobs N] [--threads K]
                [--solo-jobs N] [--insts N] [--seed S] [--chunk N]
                [--json BENCH_serve.json] [--verify-models DIR]
                [--assert-occupancy] [--shutdown] [--wait-secs N] [--chaos]
+               [--targets H:P,...] [--assert-balance]   (per-worker spread)
                [--progress-every SECS]   (periodic /metrics summary)
+  tao router-bench [--fleets 1,2,4] [--jobs N] [--threads K] [--insts N]
+               [--seed S] [--chunk N] [--cache-entries N]
+               [--work-dir DIR] [--json BENCH_serve.json]
   tao report   <table1|figure2|figure9|figure10a|figure10b|figure11|figure12a|
                 figure12b|figure14|table4|table6|figure15> [opts]
   tao dse      [--designs N] [--insts N] [--seed S]
@@ -79,7 +94,9 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "datagen" => cmd_datagen(args),
         "simulate" => crate::coordinator::cli::cmd_simulate(args),
         "serve" => crate::serve::cli::cmd_serve(args),
+        "router" => crate::serve::cli::cmd_router(args),
         "loadgen" => crate::serve::cli::cmd_loadgen(args),
+        "router-bench" => crate::serve::cli::cmd_router_bench(args),
         "report" => crate::reports::cmd_report(args),
         "dse" => crate::reports::cmd_dse(args),
         "trace" => trace_cmd::cmd_trace(args),

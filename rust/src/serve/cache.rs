@@ -78,7 +78,7 @@ pub const PREFIX_SEED: u64 = FNV_OFFSET;
 /// Cumulative cache counters (monotonic; snapshot for deltas).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
-    /// Lookups that found an entry.
+    /// Lookups that found an entry (including adopted peer hits).
     pub hits: u64,
     /// Lookups that found nothing.
     pub misses: u64,
@@ -90,6 +90,51 @@ pub struct CacheStats {
     pub entries: u64,
     /// Entries replayed from the crash-safe journal at startup.
     pub recovered: u64,
+    /// Local misses converted to hits by a ring peer's cache
+    /// ([`PredictionCache::adopt`]) — the fleet-warm subset of `hits`.
+    pub peer_hits: u64,
+}
+
+/// Approximate resident bytes per cache entry: 24-byte key + the
+/// accumulator's journal-frame scalars + map and recency-list
+/// overhead. `--cache-quota artifact=BYTES` divides by this to turn a
+/// byte budget into an entry quota.
+pub const ENTRY_BYTES: u64 = 160;
+
+/// Per-artifact cache counters (one registered tenant's view).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactCacheStats {
+    /// Artifact registry name.
+    pub name: String,
+    /// Artifact fingerprint (the [`ChunkKey::artifact`] it keys on).
+    pub fingerprint: u64,
+    /// Entry quota (0 = unlimited).
+    pub quota: u64,
+    /// Entries currently resident for this artifact.
+    pub entries: u64,
+    /// Lookups for this artifact that hit.
+    pub hits: u64,
+    /// Lookups for this artifact that missed.
+    pub misses: u64,
+    /// Entries inserted for this artifact.
+    pub insertions: u64,
+    /// Entries evicted (quota or global capacity pressure).
+    pub evictions: u64,
+}
+
+struct ArtState {
+    name: String,
+    /// Max resident entries; 0 = unlimited.
+    quota: usize,
+    entries: usize,
+    hits: u64,
+    misses: u64,
+    insertions: u64,
+    evictions: u64,
+    /// Per-artifact recency list head (most recently used).
+    head: usize,
+    /// Per-artifact recency list tail (least recently used).
+    tail: usize,
 }
 
 struct Slot {
@@ -97,6 +142,10 @@ struct Slot {
     value: PredAccum,
     prev: usize,
     next: usize,
+    /// Per-artifact recency links (NIL/NIL when the slot's artifact is
+    /// not registered).
+    aprev: usize,
+    anext: usize,
 }
 
 const NIL: usize = usize::MAX;
@@ -115,6 +164,10 @@ pub struct PredictionCache {
     tail: usize, // least recently used
     stats: CacheStats,
     journal: Option<CacheJournal>,
+    /// Registered tenants by artifact fingerprint: quota enforcement +
+    /// per-artifact accounting. Unregistered artifacts are cached
+    /// unconstrained (global LRU only).
+    arts: HashMap<u64, ArtState>,
 }
 
 impl PredictionCache {
@@ -129,7 +182,56 @@ impl PredictionCache {
             tail: NIL,
             stats: CacheStats::default(),
             journal: None,
+            arts: HashMap::new(),
         }
+    }
+
+    /// Register an artifact tenant: entries keyed on `fingerprint` get
+    /// per-artifact hit/miss/evict accounting and, when
+    /// `quota_entries > 0`, their own LRU capped at that many entries —
+    /// one hot tenant can no longer evict the others. Call at bind
+    /// time, before warm-loading or serving, so every resident entry is
+    /// accounted.
+    pub fn register_artifact(&mut self, fingerprint: u64, name: &str, quota_entries: usize) {
+        debug_assert!(
+            !self.map.keys().any(|k| k.artifact == fingerprint),
+            "register_artifact after entries for it exist"
+        );
+        self.arts.insert(
+            fingerprint,
+            ArtState {
+                name: name.to_string(),
+                quota: quota_entries,
+                entries: 0,
+                hits: 0,
+                misses: 0,
+                insertions: 0,
+                evictions: 0,
+                head: NIL,
+                tail: NIL,
+            },
+        );
+    }
+
+    /// Per-artifact counters for every registered tenant, sorted by
+    /// name (deterministic `/v1/stats` and `/metrics` rendering).
+    pub fn artifact_stats(&self) -> Vec<ArtifactCacheStats> {
+        let mut out: Vec<ArtifactCacheStats> = self
+            .arts
+            .iter()
+            .map(|(&fp, a)| ArtifactCacheStats {
+                name: a.name.clone(),
+                fingerprint: fp,
+                quota: a.quota as u64,
+                entries: a.entries as u64,
+                hits: a.hits,
+                misses: a.misses,
+                insertions: a.insertions,
+                evictions: a.evictions,
+            })
+            .collect();
+        out.sort_by(|x, y| x.name.cmp(&y.name));
+        out
     }
 
     /// Replay journal-recovered entries (append order, so a duplicated
@@ -195,6 +297,60 @@ impl PredictionCache {
         }
     }
 
+    /// Detach slot `i` from its artifact's recency list (no-op for
+    /// unregistered artifacts, whose links are always NIL).
+    fn aunlink(&mut self, i: usize) {
+        let fp = self.slots[i].key.artifact;
+        if !self.arts.contains_key(&fp) {
+            return;
+        }
+        let (prev, next) = (self.slots[i].aprev, self.slots[i].anext);
+        if prev == NIL {
+            self.arts.get_mut(&fp).unwrap().head = next;
+        } else {
+            self.slots[prev].anext = next;
+        }
+        if next == NIL {
+            self.arts.get_mut(&fp).unwrap().tail = prev;
+        } else {
+            self.slots[next].aprev = prev;
+        }
+    }
+
+    /// Push slot `i` to the front of its artifact's recency list
+    /// (no-op for unregistered artifacts).
+    fn apush_front(&mut self, i: usize) {
+        let fp = self.slots[i].key.artifact;
+        let head = match self.arts.get(&fp) {
+            Some(a) => a.head,
+            None => return,
+        };
+        self.slots[i].aprev = NIL;
+        self.slots[i].anext = head;
+        if head != NIL {
+            self.slots[head].aprev = i;
+        }
+        let art = self.arts.get_mut(&fp).unwrap();
+        art.head = i;
+        if art.tail == NIL {
+            art.tail = i;
+        }
+    }
+
+    /// Remove slot `i` entirely, counting an eviction (global and, when
+    /// registered, per-artifact).
+    fn evict_slot(&mut self, i: usize) {
+        self.unlink(i);
+        self.aunlink(i);
+        self.map.remove(&self.slots[i].key);
+        if let Some(art) = self.arts.get_mut(&self.slots[i].key.artifact) {
+            art.entries -= 1;
+            art.evictions += 1;
+        }
+        self.free.push(i);
+        self.stats.evictions += 1;
+    }
+
     /// Look up a chunk, refreshing its recency. Returns a clone of the
     /// stored accumulator (cheap: a handful of scalars; phase series
     /// are never cached).
@@ -202,19 +358,52 @@ impl PredictionCache {
         match self.map.get(key).copied() {
             Some(i) => {
                 self.stats.hits += 1;
+                if let Some(art) = self.arts.get_mut(&key.artifact) {
+                    art.hits += 1;
+                }
                 self.unlink(i);
                 self.push_front(i);
+                self.aunlink(i);
+                self.apush_front(i);
                 Some(self.slots[i].value.clone())
             }
             None => {
                 self.stats.misses += 1;
+                if let Some(art) = self.arts.get_mut(&key.artifact) {
+                    art.misses += 1;
+                }
                 None
             }
         }
     }
 
+    /// Look up a chunk **without** counting or refreshing recency — the
+    /// `/v1/cache/lookup` peer endpoint. A peer probe must not perturb
+    /// this daemon's hit/miss accounting (the structural identity
+    /// `hits + misses == chunks` is asserted in CI) or its LRU order.
+    pub fn peek(&self, key: &ChunkKey) -> Option<&PredAccum> {
+        self.map.get(key).map(|&i| &self.slots[i].value)
+    }
+
+    /// Adopt a peer-supplied accumulator for a key this cache just
+    /// missed on: the immediately-preceding [`PredictionCache::get`]
+    /// miss is reclassified as a (peer) hit, and the value is inserted
+    /// locally (journaled, quota-enforced) so the next lookup hits
+    /// without leaving the process.
+    pub fn adopt(&mut self, key: ChunkKey, value: PredAccum) {
+        self.stats.misses = self.stats.misses.saturating_sub(1);
+        self.stats.hits += 1;
+        self.stats.peer_hits += 1;
+        if let Some(art) = self.arts.get_mut(&key.artifact) {
+            art.misses = art.misses.saturating_sub(1);
+            art.hits += 1;
+        }
+        self.insert(key, value);
+    }
+
     /// Insert a fully-folded chunk accumulator, evicting the LRU entry
-    /// at capacity. Re-inserting an existing key refreshes it.
+    /// at capacity (the artifact's own LRU tail first when its quota is
+    /// exhausted). Re-inserting an existing key refreshes it.
     pub fn insert(&mut self, key: ChunkKey, value: PredAccum) {
         if self.capacity == 0 {
             return;
@@ -223,6 +412,8 @@ impl PredictionCache {
             self.slots[i].value = value;
             self.unlink(i);
             self.push_front(i);
+            self.aunlink(i);
+            self.apush_front(i);
             return;
         }
         if let Some(j) = &mut self.journal {
@@ -233,26 +424,36 @@ impl PredictionCache {
                 self.journal = None;
             }
         }
+        if let Some(art) = self.arts.get(&key.artifact) {
+            if art.quota > 0 && art.entries >= art.quota {
+                let victim = art.tail;
+                debug_assert_ne!(victim, NIL);
+                self.evict_slot(victim);
+            }
+        }
         if self.map.len() >= self.capacity {
             let lru = self.tail;
             debug_assert_ne!(lru, NIL);
-            self.unlink(lru);
-            self.map.remove(&self.slots[lru].key);
-            self.free.push(lru);
-            self.stats.evictions += 1;
+            self.evict_slot(lru);
         }
+        let slot = Slot { key, value, prev: NIL, next: NIL, aprev: NIL, anext: NIL };
         let i = match self.free.pop() {
             Some(i) => {
-                self.slots[i] = Slot { key, value, prev: NIL, next: NIL };
+                self.slots[i] = slot;
                 i
             }
             None => {
-                self.slots.push(Slot { key, value, prev: NIL, next: NIL });
+                self.slots.push(slot);
                 self.slots.len() - 1
             }
         };
         self.map.insert(key, i);
         self.push_front(i);
+        self.apush_front(i);
+        if let Some(art) = self.arts.get_mut(&key.artifact) {
+            art.entries += 1;
+            art.insertions += 1;
+        }
         self.stats.insertions += 1;
     }
 }
@@ -381,6 +582,92 @@ mod tests {
             assert_eq!(got.instructions, accum(n).instructions);
             assert_eq!(got.fetch_cycles.to_bits(), accum(n).fetch_cycles.to_bits());
         }
+    }
+
+    fn akey(art: u64, n: u64) -> ChunkKey {
+        ChunkKey { artifact: art, prefix: 2, content: n }
+    }
+
+    #[test]
+    fn artifact_quota_walls_off_tenants() {
+        let mut c = PredictionCache::new(16);
+        c.register_artifact(7, "hot", 2);
+        c.register_artifact(8, "cold", 4);
+        // The hot tenant pours in entries; only its own LRU churns.
+        for n in 0..4 {
+            c.insert(akey(8, n), accum(n + 1));
+        }
+        for n in 0..10 {
+            c.insert(akey(7, n), accum(n + 1));
+        }
+        // Cold tenant untouched despite the hot tenant's pressure.
+        for n in 0..4 {
+            assert!(c.get(&akey(8, n)).is_some(), "cold tenant entry {n} evicted");
+        }
+        // Hot tenant holds exactly its quota: the 2 most recent.
+        assert!(c.get(&akey(7, 9)).is_some());
+        assert!(c.get(&akey(7, 8)).is_some());
+        assert!(c.get(&akey(7, 0)).is_none());
+        let stats: Vec<_> = c.artifact_stats();
+        assert_eq!(stats.len(), 2);
+        // Sorted by name: cold first.
+        assert_eq!((stats[0].name.as_str(), stats[0].entries), ("cold", 4));
+        assert_eq!(stats[0].evictions, 0);
+        assert_eq!((stats[1].name.as_str(), stats[1].entries), ("hot", 2));
+        assert_eq!(stats[1].evictions, 8);
+        assert_eq!(stats[1].insertions, 10);
+        // Global evictions count the quota evictions too.
+        assert_eq!(c.stats().evictions, 8);
+    }
+
+    #[test]
+    fn unregistered_artifacts_stay_unconstrained() {
+        let mut c = PredictionCache::new(4);
+        c.register_artifact(7, "quoted", 1);
+        for n in 0..3 {
+            c.insert(akey(99, n), accum(1));
+        }
+        assert_eq!(c.stats().entries, 3);
+        assert_eq!(c.stats().evictions, 0);
+        // Global capacity still evicts across tenants, LRU-first.
+        c.insert(akey(7, 0), accum(1));
+        c.insert(akey(7, 1), accum(1)); // quota evicts akey(7, 0)
+        c.insert(akey(99, 3), accum(1)); // capacity evicts akey(99, 0)
+        assert!(c.get(&akey(99, 0)).is_none());
+        assert!(c.get(&akey(7, 1)).is_some());
+        assert_eq!(c.artifact_stats()[0].entries, 1);
+    }
+
+    #[test]
+    fn peek_counts_nothing_and_keeps_recency() {
+        let mut c = PredictionCache::new(2);
+        c.insert(key(1), accum(1));
+        c.insert(key(2), accum(2));
+        // Peek at 1 — unlike get, this must NOT make key 1 recent.
+        assert_eq!(c.peek(&key(1)).unwrap().instructions, 1);
+        assert!(c.peek(&key(9)).is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (0, 0), "peek is invisible to accounting");
+        c.insert(key(3), accum(3));
+        assert!(c.peek(&key(1)).is_none(), "peek must not refresh recency");
+        assert!(c.peek(&key(2)).is_some());
+    }
+
+    #[test]
+    fn adopt_reclassifies_a_miss_as_peer_hit() {
+        let mut c = PredictionCache::new(4);
+        c.register_artifact(1, "a", 0);
+        assert!(c.get(&key(1)).is_none()); // the local miss...
+        c.adopt(key(1), accum(5)); // ...answered by a ring peer
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.peer_hits), (1, 0, 1));
+        assert_eq!(s.insertions, 1);
+        // hits + misses still equals the one lookup performed.
+        assert_eq!(s.hits + s.misses, 1);
+        let a = &c.artifact_stats()[0];
+        assert_eq!((a.hits, a.misses), (1, 0));
+        // The adopted entry is now resident locally.
+        assert_eq!(c.get(&key(1)).unwrap().instructions, 5);
     }
 
     #[test]

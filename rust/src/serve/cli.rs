@@ -1,13 +1,20 @@
-//! `tao serve` / `tao loadgen` command-line entry points.
+//! `tao serve` / `tao router` / `tao loadgen` / `tao router-bench`
+//! command-line entry points.
 
-use super::loadgen::{run_loadgen, LoadgenOptions};
+use super::loadgen::{run_concurrent, run_loadgen, to_spec, LoadgenOptions};
+use super::protocol::JobSpec;
+use super::router::{peer_map, Router, RouterConfig};
 use super::server::{Server, ServeConfig};
 use crate::cli::args::Args;
 use crate::runtime::{
     write_surrogate_artifact, write_surrogate_artifact_kind, ArtifactPool, ModelKind,
 };
-use anyhow::{Context, Result};
-use std::path::PathBuf;
+use crate::util::benchkit::{BenchReport, Measurement};
+use crate::util::json::Json;
+use crate::workloads::{mixed_tenant_scenarios, ScenarioArtifact};
+use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::{Duration, Instant};
 
@@ -59,6 +66,27 @@ pub fn cmd_serve(mut args: Args) -> Result<()> {
     let defaults = ServeConfig::default();
     let addr_flag = args.opt_value("--addr")?;
     let port: Option<u16> = args.opt_parse("--port")?;
+    // Fleet wiring: `--peers a:1,b:2` names the ring siblings whose
+    // caches this worker consults on a local miss; `--cache-quota
+    // name=bytes` caps one artifact's cache share; `--warm-journal`
+    // replays a (possibly dead) peer's cache journal read-only.
+    let peers: Vec<String> = args
+        .opt_value("--peers")?
+        .map(|s| s.split(',').filter(|p| !p.is_empty()).map(str::to_string).collect())
+        .unwrap_or_default();
+    let mut cache_quotas: Vec<(String, u64)> = Vec::new();
+    while let Some(q) = args.opt_value("--cache-quota")? {
+        let (name, bytes) = q
+            .split_once('=')
+            .with_context(|| format!("--cache-quota wants NAME=BYTES, got {q:?}"))?;
+        let bytes: u64 =
+            bytes.parse().with_context(|| format!("bad --cache-quota bytes in {q:?}"))?;
+        cache_quotas.push((name.to_string(), bytes));
+    }
+    let mut warm_journals: Vec<PathBuf> = Vec::new();
+    while let Some(j) = args.opt_value("--warm-journal")? {
+        warm_journals.push(j.into());
+    }
     let cfg = ServeConfig {
         addr: addr_flag.unwrap_or_else(|| format!("127.0.0.1:{}", port.unwrap_or(0))),
         queue_depth: args.opt_parse("--queue-depth")?.unwrap_or(defaults.queue_depth),
@@ -80,6 +108,12 @@ pub fn cmd_serve(mut args: Args) -> Result<()> {
             .opt_parse("--default-deadline-ms")?
             .unwrap_or(defaults.default_deadline_ms),
         cache_journal: args.opt_value("--cache-journal")?.map(Into::into),
+        peers,
+        peer_timeout_ms: args
+            .opt_parse("--peer-timeout-ms")?
+            .unwrap_or(defaults.peer_timeout_ms),
+        cache_quotas,
+        warm_journals,
     };
     let port_file: Option<PathBuf> = args.opt_value("--port-file")?.map(Into::into);
     let stats_out: Option<PathBuf> = args.opt_value("--stats-out")?.map(Into::into);
@@ -204,9 +238,311 @@ pub fn cmd_loadgen(mut args: Args) -> Result<()> {
         assert_occupancy: args.opt_flag("--assert-occupancy"),
         shutdown_after: args.opt_flag("--shutdown"),
         chaos: args.opt_flag("--chaos"),
+        targets: args
+            .opt_value("--targets")?
+            .map(|s| s.split(',').filter(|t| !t.is_empty()).map(str::to_string).collect())
+            .unwrap_or_default(),
+        assert_balance: args.opt_flag("--assert-balance"),
         progress_every: progress_every.map(Duration::from_secs),
     };
     args.finish()?;
+    ensure!(
+        !opts.assert_balance || !opts.targets.is_empty(),
+        "--assert-balance needs --targets host:port,... (the workers behind the router)"
+    );
     run_loadgen(&opts)?;
+    Ok(())
+}
+
+fn parse_worker(s: &str) -> Result<(String, u32)> {
+    match s.split_once('=') {
+        Some((addr, w)) => {
+            let weight: u32 =
+                w.parse().with_context(|| format!("bad worker weight in {s:?}"))?;
+            Ok((addr.to_string(), weight))
+        }
+        None => Ok((s.to_string(), 1)),
+    }
+}
+
+/// `tao router` — run the consistent-hash routing tier over a fleet of
+/// `tao serve` workers.
+pub fn cmd_router(mut args: Args) -> Result<()> {
+    let defaults = RouterConfig::default();
+    let mut workers: Vec<(String, u32)> = Vec::new();
+    while let Some(w) = args.opt_value("--worker")? {
+        workers.push(parse_worker(&w)?);
+    }
+    if let Some(list) = args.opt_value("--workers")? {
+        for w in list.split(',').filter(|s| !s.is_empty()) {
+            workers.push(parse_worker(w)?);
+        }
+    }
+    let addr_flag = args.opt_value("--addr")?;
+    let port: Option<u16> = args.opt_parse("--port")?;
+    let cfg = RouterConfig {
+        addr: addr_flag.unwrap_or_else(|| format!("127.0.0.1:{}", port.unwrap_or(0))),
+        workers,
+        health_interval_ms: args
+            .opt_parse("--health-interval-ms")?
+            .unwrap_or(defaults.health_interval_ms),
+        health_timeout_ms: args
+            .opt_parse("--health-timeout-ms")?
+            .unwrap_or(defaults.health_timeout_ms),
+        replica_walk: args.opt_parse("--replica-walk")?.unwrap_or(defaults.replica_walk),
+        hop_cap_ms: args.opt_parse("--hop-cap-ms")?.unwrap_or(defaults.hop_cap_ms),
+        max_attempts: args.opt_parse("--max-attempts")?.unwrap_or(defaults.max_attempts),
+        default_deadline_ms: args
+            .opt_parse("--default-deadline-ms")?
+            .unwrap_or(defaults.default_deadline_ms),
+        read_timeout_ms: args
+            .opt_parse("--read-timeout-ms")?
+            .unwrap_or(defaults.read_timeout_ms),
+        write_timeout_ms: args
+            .opt_parse("--write-timeout-ms")?
+            .unwrap_or(defaults.write_timeout_ms),
+    };
+    let port_file: Option<PathBuf> = args.opt_value("--port-file")?.map(Into::into);
+    let print_peers = args.opt_flag("--print-peers");
+    let log_json = args.opt_flag("--log-json");
+    let log_level: Option<String> = args.opt_value("--log-level")?;
+    args.finish()?;
+
+    if log_json || log_level.is_some() {
+        let level = match log_level.as_deref() {
+            Some(s) => crate::telemetry::Level::from_str(s)
+                .with_context(|| format!("bad --log-level {s:?} (error|warn|info|debug)"))?,
+            None => crate::telemetry::Level::Info,
+        };
+        crate::telemetry::log::enable_json(level);
+    }
+    if print_peers {
+        // Emit the stable peer wiring (`worker peer1,peer2`) so fleet
+        // scripts can hand each `tao serve` its `--peers` list.
+        for (worker, peers) in peer_map(&cfg.workers, cfg.replica_walk) {
+            println!("{worker} {}", peers.join(","));
+        }
+        return Ok(());
+    }
+
+    let router = Router::bind(&cfg)?;
+    let addr = router.local_addr()?;
+    eprintln!(
+        "router: listening on {addr} ({} worker(s), replica walk {}, max {} attempts)",
+        cfg.workers.len(),
+        cfg.replica_walk,
+        cfg.max_attempts
+    );
+    if let Some(pf) = &port_file {
+        std::fs::write(pf, addr.to_string()).with_context(|| format!("write {pf:?}"))?;
+    }
+
+    install_signal_handlers();
+    let handle = router.handle();
+    std::thread::spawn(move || loop {
+        if SIGNALLED.load(Ordering::SeqCst) {
+            eprintln!("router: signal received — draining");
+            handle.request_shutdown();
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    });
+    router.run()
+}
+
+/// Load an existing `BENCH_serve.json` so `router-bench` can append
+/// its metrics without clobbering the loadgen sweep's. Keys the bench
+/// is about to re-emit (`router_*`) are dropped; a missing file is an
+/// empty report.
+fn load_report(path: Option<&Path>) -> Result<BenchReport> {
+    let mut report = BenchReport::new();
+    let Some(path) = path else { return Ok(report) };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => return Ok(report),
+    };
+    let parsed = Json::parse(&text).with_context(|| format!("parse {path:?}"))?;
+    if let Some(cases) = parsed.get("cases").and_then(Json::as_arr) {
+        for c in cases {
+            let (Some(name), Some(items)) =
+                (c.get("name").and_then(Json::as_str), c.get("items").and_then(Json::as_u64))
+            else {
+                continue;
+            };
+            let f = |k: &str| c.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+            report.push(Measurement {
+                name: name.to_string(),
+                items,
+                mean_ns: f("mean_ns"),
+                min_ns: f("min_ns"),
+                max_ns: f("max_ns"),
+            });
+        }
+    }
+    if let Some(Json::Obj(metrics)) = parsed.get("metrics") {
+        for (k, v) in metrics {
+            if k.starts_with("router_") {
+                continue;
+            }
+            if let Some(x) = v.as_f64() {
+                report.metric(k, x);
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// Wait until the router's `/healthz` reports the whole fleet live, so
+/// the measurement starts failover-free.
+fn wait_fleet_live(router_addr: &str, want: u64, wait: Duration) -> Result<()> {
+    let deadline = Instant::now() + wait;
+    loop {
+        if let Ok(resp) = super::http::http_get(router_addr, "/healthz") {
+            if let Ok(body) = Json::parse(&resp.body) {
+                if body.get("workers_live").and_then(Json::as_u64) == Some(want) {
+                    return Ok(());
+                }
+            }
+        }
+        ensure!(
+            Instant::now() < deadline,
+            "router at {router_addr} never saw all {want} workers live within {wait:?}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// Spawn `n` worker processes + an in-process router, run the spec set
+/// through the router cold, and return jobs/sec. Workers are killed
+/// before returning, success or not.
+fn bench_fleet(
+    n: usize,
+    models: &[PathBuf],
+    specs: &[JobSpec],
+    threads: usize,
+    cache_entries: usize,
+    work_dir: &Path,
+) -> Result<f64> {
+    let exe = std::env::current_exe().context("locate tao binary")?;
+    let mut children = Vec::new();
+    let mut port_files = Vec::new();
+    for i in 0..n {
+        let pf = work_dir.join(format!("worker-{n}w-{i}.port"));
+        let _ = std::fs::remove_file(&pf);
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("serve");
+        for m in models {
+            cmd.arg("--model").arg(m);
+        }
+        cmd.arg("--port")
+            .arg("0")
+            .arg("--port-file")
+            .arg(&pf)
+            .arg("--cache-entries")
+            .arg(cache_entries.to_string())
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::null());
+        children.push(cmd.spawn().with_context(|| format!("spawn worker {i}"))?);
+        port_files.push(pf);
+    }
+    let result = (|| {
+        let mut addrs = Vec::new();
+        for pf in &port_files {
+            addrs.push(resolve_addr(None, Some(pf.clone()), Duration::from_secs(30))?);
+        }
+        let cfg = RouterConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: addrs.iter().map(|a| (a.clone(), 1)).collect(),
+            health_interval_ms: 100,
+            ..RouterConfig::default()
+        };
+        let router = Router::bind(&cfg)?;
+        let router_addr = router.local_addr()?.to_string();
+        let handle = router.handle();
+        let run = std::thread::spawn(move || router.run());
+        wait_fleet_live(&router_addr, n as u64, Duration::from_secs(30))?;
+        let t0 = Instant::now();
+        run_concurrent(&router_addr, specs, threads)?;
+        let elapsed = t0.elapsed();
+        handle.request_shutdown();
+        run.join()
+            .map_err(|_| anyhow::anyhow!("router thread panicked"))?
+            .context("router run")?;
+        Ok(specs.len() as f64 / elapsed.as_secs_f64().max(1e-9))
+    })();
+    for mut c in children {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+    result
+}
+
+/// `tao router-bench` — measure router-tier throughput scale-up.
+///
+/// For each fleet size (default 1, 2, 4): spawn that many worker
+/// processes on a shared surrogate artifact set, put an in-process
+/// router in front, and run a cold tenant-skewed mix through it.
+/// Emits `router_jobs_per_sec_{N}w` and the scale-up ratios
+/// `router_scaleup_2w` / `router_scaleup_4w` (jobs/sec vs the
+/// single-worker fleet), merged into an existing `--json` report.
+pub fn cmd_router_bench(mut args: Args) -> Result<()> {
+    let work_dir: PathBuf = args.opt_value("--work-dir")?.map(Into::into).unwrap_or_else(|| {
+        std::env::temp_dir().join(format!("tao-router-bench-{}", std::process::id()))
+    });
+    let jobs: usize = args.opt_parse("--jobs")?.unwrap_or(24);
+    let threads: usize = args.opt_parse("--threads")?.unwrap_or(8);
+    let insts: u64 = args.opt_parse("--insts")?.unwrap_or(150);
+    let seed: u64 = args.opt_parse("--seed")?.unwrap_or(42);
+    let chunk: usize = args.opt_parse("--chunk")?.unwrap_or(64);
+    let cache_entries: usize = args.opt_parse("--cache-entries")?.unwrap_or(4096);
+    let json_out: Option<PathBuf> = args.opt_value("--json")?.map(Into::into);
+    let fleets: Vec<usize> = match args.opt_value("--fleets")? {
+        Some(s) => s
+            .split(',')
+            .filter(|x| !x.is_empty())
+            .map(|x| x.parse().with_context(|| format!("bad --fleets entry {x:?}")))
+            .collect::<Result<_>>()?,
+        None => vec![1, 2, 4],
+    };
+    args.finish()?;
+    ensure!(!fleets.is_empty(), "--fleets must name at least one fleet size");
+
+    std::fs::create_dir_all(&work_dir).with_context(|| format!("mkdir {work_dir:?}"))?;
+    let models = write_surrogate_set(&work_dir)?;
+    let arts = vec![
+        ScenarioArtifact { name: "serve_tao_a".into(), simnet: false },
+        ScenarioArtifact { name: "serve_tao_b".into(), simnet: false },
+        ScenarioArtifact { name: "serve_simnet_a".into(), simnet: true },
+    ];
+    // Tenant-skewed mix: the hot artifact saturates its shard while
+    // the minority tenants exercise the other shards — the scaling we
+    // claim has to survive realistic imbalance, not a uniform spray.
+    let specs: Vec<JobSpec> = mixed_tenant_scenarios(&arts, jobs, insts, seed, 0)
+        .iter()
+        .map(|j| to_spec(j, chunk))
+        .collect();
+
+    let mut rates: BTreeMap<usize, f64> = BTreeMap::new();
+    for &n in &fleets {
+        let rate = bench_fleet(n, &models, &specs, threads, cache_entries, &work_dir)?;
+        eprintln!("router-bench: {n} worker(s): {rate:.1} jobs/s cold");
+        rates.insert(n, rate);
+    }
+
+    let mut report = load_report(json_out.as_deref())?;
+    for (n, rate) in &rates {
+        report.metric(&format!("router_jobs_per_sec_{n}w"), *rate);
+    }
+    if let Some(base) = rates.get(&1).copied().filter(|r| *r > 0.0) {
+        for (n, rate) in &rates {
+            if *n > 1 {
+                report.metric(&format!("router_scaleup_{n}w"), rate / base);
+            }
+        }
+    }
+    if let Some(path) = &json_out {
+        report.write_json(path).with_context(|| format!("write {path:?}"))?;
+        eprintln!("router-bench: merged metrics into {}", path.display());
+    }
     Ok(())
 }

@@ -1,0 +1,503 @@
+//! Per-hop forwarding with failover, and the peer-cache client.
+//!
+//! Two consumers share this module's machinery:
+//!
+//! * The **router** forwards `/v1/simulate` bodies along a key's ring
+//!   replica walk ([`forward`]). Each hop gets a timeout of
+//!   `min(remaining deadline, hop cap)`; a transport failure or a
+//!   *failover-class* typed error ([`failover_code`]) advances to the
+//!   next replica after a capped, jittered backoff. Anything else —
+//!   including `deadline_exceeded`, which a retry cannot outrun — is
+//!   relayed to the client verbatim, preserving PR 6's failure
+//!   taxonomy end to end.
+//! * **Workers** consult their key's ring neighbours' caches via
+//!   [`PeerCache`] before computing a missed chunk: a short-timeout
+//!   `POST /v1/cache/lookup`, with unreachable peers marked down for a
+//!   hold-off window so a dead neighbour costs one timeout, not one
+//!   per miss.
+//!
+//! Everything rides the existing hand-rolled HTTP/1.1 client
+//! ([`http_post_timeout`]) — the inter-node RPC *is* the public
+//! protocol, so every hop stays curl-debuggable.
+
+use super::http::{http_post_timeout, Response};
+use super::protocol::{
+    cache_lookup_json, cache_result_from_json, ErrorCode, ServeError,
+};
+use crate::coordinator::engine::PredAccum;
+use crate::serve::cache::ChunkKey;
+use crate::telemetry::registry;
+use crate::util::rng::Rng;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Below this remaining budget a hop is pointless: connect + exchange
+/// cannot complete, so the forwarder answers `deadline_exceeded`
+/// instead of burning a doomed connection.
+pub const MIN_HOP: Duration = Duration::from_millis(10);
+
+/// Forwarding knobs (router-configurable).
+#[derive(Debug, Clone, Copy)]
+pub struct ForwardPolicy {
+    /// Per-hop timeout ceiling (the remaining deadline may cut it
+    /// shorter). Jobs block until served, so this bounds one worker's
+    /// service time before the router gives up on it.
+    pub hop_cap: Duration,
+    /// Total attempts across the replica walk (wraps around it).
+    pub max_attempts: u32,
+}
+
+impl Default for ForwardPolicy {
+    fn default() -> ForwardPolicy {
+        ForwardPolicy { hop_cap: Duration::from_secs(300), max_attempts: 6 }
+    }
+}
+
+/// Should this typed error move the job to the next ring replica?
+/// Queue-full, draining, and lane/exec failures are worker-local — a
+/// sibling can serve the identical spec. `deadline_exceeded` is NOT in
+/// the set: the job's budget is spent, and a second worker would only
+/// exceed it again.
+pub fn failover_code(code: ErrorCode) -> bool {
+    matches!(
+        code,
+        ErrorCode::QueueFull
+            | ErrorCode::Draining
+            | ErrorCode::LaneFailed
+            | ErrorCode::ExecFailed
+    )
+}
+
+/// Router-side backoff between failover hops: `5ms × 2^attempt` capped
+/// at 200ms, jittered to [½·base, 1½·base) — deterministic (seeded by
+/// the caller), decorrelated, and strictly shorter than the client's
+/// own retry ladder so the router exhausts its replicas before the
+/// client re-submits.
+pub fn failover_backoff(attempt: u32, rng: &mut Rng) -> Duration {
+    let base = (5u64 << attempt.min(6)).min(200);
+    Duration::from_millis(base / 2 + rng.gen_range(base.max(1)))
+}
+
+/// What one forwarded request resolved to.
+#[derive(Debug, Clone)]
+pub struct Forwarded {
+    /// Final status to relay.
+    pub status: u16,
+    /// Final body to relay.
+    pub body: String,
+    /// Worker that produced the final answer (`None` when the walk was
+    /// empty or nobody answered at all).
+    pub worker: Option<String>,
+    /// Connection attempts made.
+    pub attempts: u32,
+    /// Attempts that failed over (transport or failover-class error).
+    pub failovers: u32,
+}
+
+fn synthesized(code: ErrorCode, message: String) -> (u16, String) {
+    let err = ServeError::new(code, message);
+    (code.http_status(), err.to_json())
+}
+
+/// Forward `body` to the first replica that answers non-retryably,
+/// walking `replicas` in ring order (wrapping, up to
+/// `policy.max_attempts` hops) with per-hop deadline budgets and
+/// jittered backoff between failovers. Never panics and never returns
+/// transport errors: every outcome is an HTTP status + typed body the
+/// caller can relay as-is.
+pub fn forward(
+    replicas: &[String],
+    path: &str,
+    body: &str,
+    deadline: Instant,
+    policy: &ForwardPolicy,
+    rng: &mut Rng,
+) -> Forwarded {
+    let reg = registry();
+    if replicas.is_empty() {
+        let (status, body) =
+            synthesized(ErrorCode::Draining, "no live workers on the ring".to_string());
+        return Forwarded { status, body, worker: None, attempts: 0, failovers: 0 };
+    }
+    let mut attempts = 0u32;
+    let mut failovers = 0u32;
+    let mut last: Option<(u16, String, String)> = None; // status, body, worker
+    while attempts < policy.max_attempts {
+        let worker = &replicas[(attempts as usize) % replicas.len()];
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining < MIN_HOP {
+            let (status, body) = synthesized(
+                ErrorCode::DeadlineExceeded,
+                format!("deadline exhausted after {attempts} forward attempts"),
+            );
+            return Forwarded { status, body, worker: None, attempts, failovers };
+        }
+        attempts += 1;
+        reg.counter(
+            "tao_router_forwards_total",
+            "Forward attempts per worker",
+            &[("worker", worker.as_str())],
+        )
+        .inc();
+        let hop = remaining.min(policy.hop_cap);
+        match http_post_timeout(worker.as_str(), path, body, hop) {
+            Ok(Response { status: 200, body }) => {
+                return Forwarded {
+                    status: 200,
+                    body,
+                    worker: Some(worker.clone()),
+                    attempts,
+                    failovers,
+                };
+            }
+            Ok(Response { status, body }) => {
+                let err = ServeError::from_body(status, &body);
+                if !failover_code(err.code) {
+                    // Terminal (4xx/500/504): the contract says relay,
+                    // not mask — a second worker would answer the same.
+                    return Forwarded {
+                        status,
+                        body,
+                        worker: Some(worker.clone()),
+                        attempts,
+                        failovers,
+                    };
+                }
+                reg.counter(
+                    "tao_router_failovers_total",
+                    "Failovers away from a worker, by reason",
+                    &[("worker", worker.as_str()), ("reason", err.code.as_str())],
+                )
+                .inc();
+                failovers += 1;
+                last = Some((status, body, worker.clone()));
+            }
+            Err(_) => {
+                // Connect refused / reset / hop timeout: the worker is
+                // gone or wedged — exactly what the ring successor is
+                // for.
+                reg.counter(
+                    "tao_router_failovers_total",
+                    "Failovers away from a worker, by reason",
+                    &[("worker", worker.as_str()), ("reason", "transport")],
+                )
+                .inc();
+                failovers += 1;
+                if last.is_none() {
+                    let (status, body) = synthesized(
+                        ErrorCode::LaneFailed,
+                        format!("worker {worker} unreachable"),
+                    );
+                    last = Some((status, body, worker.clone()));
+                }
+            }
+        }
+        let nap = failover_backoff(failovers.saturating_sub(1), rng)
+            .min(deadline.saturating_duration_since(Instant::now()));
+        std::thread::sleep(nap);
+    }
+    // Every hop failed retryably: relay the last typed answer — it is
+    // retryable, so the client's own backoff ladder takes over.
+    let (status, body, worker) = last.expect("max_attempts >= 1 ensures an attempt ran");
+    Forwarded { status, body, worker: Some(worker), attempts, failovers }
+}
+
+/// How long an erroring peer stays skipped before lookups resume.
+pub const PEER_HOLDOFF: Duration = Duration::from_secs(5);
+
+struct PeerSlot {
+    addr: String,
+    /// `Some(t)`: skip this peer until `t` (it errored recently).
+    down_until: Mutex<Option<Instant>>,
+}
+
+/// Client side of the fleet-warm cache: consult the ring neighbours'
+/// `/v1/cache/lookup` before computing a missed chunk. Lookups are
+/// short-timeout and strictly best-effort — any failure is a miss, and
+/// the failing peer is held off for [`PEER_HOLDOFF`] so a dead
+/// neighbour costs one timeout, not one per miss.
+pub struct PeerCache {
+    peers: Vec<PeerSlot>,
+    timeout: Duration,
+}
+
+impl PeerCache {
+    /// Peer set (ring-neighbour `host:port`s, nearest first) and the
+    /// per-lookup timeout.
+    pub fn new(peers: Vec<String>, timeout: Duration) -> PeerCache {
+        PeerCache {
+            peers: peers
+                .into_iter()
+                .map(|addr| PeerSlot { addr, down_until: Mutex::new(None) })
+                .collect(),
+            timeout,
+        }
+    }
+
+    /// True when no peers are configured (lookups are free no-ops).
+    pub fn is_empty(&self) -> bool {
+        self.peers.is_empty()
+    }
+
+    fn count(result: &str) {
+        registry()
+            .counter(
+                "tao_cache_peer_lookups_total",
+                "Peer cache lookups by result",
+                &[("result", result)],
+            )
+            .inc();
+    }
+
+    /// Ask each live peer for `key`, nearest ring neighbour first.
+    /// Returns the first hit's accumulator, decoded from its journal
+    /// frame — the same codec the on-disk journal uses, so a peer hit
+    /// is bit-identical to having computed the chunk locally.
+    pub fn lookup(&self, key: &ChunkKey) -> Option<PredAccum> {
+        let body = cache_lookup_json(key);
+        for peer in &self.peers {
+            {
+                let mut down = crate::util::fault::relock(&peer.down_until);
+                match *down {
+                    Some(t) if Instant::now() < t => continue,
+                    _ => *down = None,
+                }
+            }
+            let resp = match http_post_timeout(peer.addr.as_str(), "/v1/cache/lookup", &body, self.timeout)
+            {
+                Ok(r) => r,
+                Err(_) => {
+                    Self::count("error");
+                    *crate::util::fault::relock(&peer.down_until) =
+                        Some(Instant::now() + PEER_HOLDOFF);
+                    continue;
+                }
+            };
+            if resp.status != 200 {
+                // Draining/starting peers answer 503 — hold off too.
+                Self::count("error");
+                *crate::util::fault::relock(&peer.down_until) =
+                    Some(Instant::now() + PEER_HOLDOFF);
+                continue;
+            }
+            match cache_result_from_json(&resp.body) {
+                Ok(Some(bytes)) => match PredAccum::decode_journal(&bytes) {
+                    Ok(accum) => {
+                        Self::count("hit");
+                        return Some(accum);
+                    }
+                    Err(_) => {
+                        Self::count("error");
+                        continue;
+                    }
+                },
+                Ok(None) => {
+                    Self::count("miss");
+                    continue;
+                }
+                Err(_) => {
+                    Self::count("error");
+                    continue;
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::http::{read_request, write_response};
+    use crate::serve::protocol::{cache_found_json, cache_lookup_from_json, cache_miss_json};
+    use std::io::BufReader;
+    use std::net::TcpListener;
+
+    /// One-shot loopback server answering `n` connections via `f`.
+    fn serve_n<F>(n: usize, f: F) -> std::net::SocketAddr
+    where
+        F: Fn(usize, &str, &str) -> (u16, String) + Send + 'static,
+    {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            for i in 0..n {
+                let (stream, _) = listener.accept().unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let req = read_request(&mut reader).unwrap();
+                let (status, body) = f(i, &req.path, &req.body);
+                let mut stream = stream;
+                let _ = write_response(&mut stream, status, &body);
+            }
+        });
+        addr
+    }
+
+    fn refused_addr() -> String {
+        // Bind then drop: the kernel won't reuse the port immediately,
+        // so connects are refused.
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        drop(l);
+        addr.to_string()
+    }
+
+    #[test]
+    fn forward_fails_over_to_the_ring_successor() {
+        let dead = refused_addr();
+        let alive = serve_n(1, |_, path, body| {
+            assert_eq!(path, "/v1/simulate");
+            assert_eq!(body, "{\"x\":1}");
+            (200, "{\"ok\":true}".to_string())
+        });
+        let replicas = vec![dead, alive.to_string()];
+        let mut rng = Rng::new(7);
+        let fwd = forward(
+            &replicas,
+            "/v1/simulate",
+            "{\"x\":1}",
+            Instant::now() + Duration::from_secs(10),
+            &ForwardPolicy { hop_cap: Duration::from_secs(2), max_attempts: 4 },
+            &mut rng,
+        );
+        assert_eq!(fwd.status, 200);
+        assert_eq!(fwd.worker.as_deref(), Some(alive.to_string().as_str()));
+        assert_eq!(fwd.attempts, 2);
+        assert_eq!(fwd.failovers, 1);
+    }
+
+    #[test]
+    fn forward_retries_failover_codes_but_relays_terminal_ones() {
+        // First worker: lane_failed (failover). Second: 400 (relay).
+        let first = serve_n(1, |_, _, _| {
+            (503, ServeError::new(ErrorCode::LaneFailed, "lane died").to_json())
+        });
+        let second = serve_n(1, |_, _, _| {
+            (400, ServeError::new(ErrorCode::BadRequest, "nope").to_json())
+        });
+        let replicas = vec![first.to_string(), second.to_string()];
+        let mut rng = Rng::new(8);
+        let fwd = forward(
+            &replicas,
+            "/v1/simulate",
+            "{}",
+            Instant::now() + Duration::from_secs(10),
+            &ForwardPolicy { hop_cap: Duration::from_secs(2), max_attempts: 4 },
+            &mut rng,
+        );
+        assert_eq!(fwd.status, 400);
+        assert_eq!(fwd.failovers, 1);
+        let err = ServeError::from_body(fwd.status, &fwd.body);
+        assert_eq!(err.code, ErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn forward_exhaustion_relays_a_retryable_answer() {
+        let dead = refused_addr();
+        let mut rng = Rng::new(9);
+        let fwd = forward(
+            &[dead],
+            "/v1/simulate",
+            "{}",
+            Instant::now() + Duration::from_secs(5),
+            &ForwardPolicy { hop_cap: Duration::from_millis(200), max_attempts: 2 },
+            &mut rng,
+        );
+        assert_eq!(fwd.attempts, 2);
+        assert_eq!(fwd.failovers, 2);
+        let err = ServeError::from_body(fwd.status, &fwd.body);
+        assert!(err.code.retryable(), "exhaustion must stay client-retryable: {err}");
+        // Empty ring: typed draining, zero attempts.
+        let fwd = forward(
+            &[],
+            "/v1/simulate",
+            "{}",
+            Instant::now() + Duration::from_secs(1),
+            &ForwardPolicy::default(),
+            &mut rng,
+        );
+        assert_eq!(fwd.attempts, 0);
+        assert_eq!(ServeError::from_body(fwd.status, &fwd.body).code, ErrorCode::Draining);
+    }
+
+    #[test]
+    fn forward_respects_the_deadline_budget() {
+        let mut rng = Rng::new(10);
+        let fwd = forward(
+            &["127.0.0.1:9".to_string()],
+            "/v1/simulate",
+            "{}",
+            Instant::now(), // already expired
+            &ForwardPolicy::default(),
+            &mut rng,
+        );
+        assert_eq!(fwd.status, 504);
+        assert_eq!(
+            ServeError::from_body(fwd.status, &fwd.body).code,
+            ErrorCode::DeadlineExceeded
+        );
+        assert_eq!(fwd.attempts, 0);
+    }
+
+    #[test]
+    fn failover_backoff_is_capped_and_jittered() {
+        let mut rng = Rng::new(11);
+        for attempt in 0..20 {
+            let d = failover_backoff(attempt, &mut rng);
+            assert!(d >= Duration::from_millis(2), "{d:?}");
+            assert!(d < Duration::from_millis(300), "{d:?}");
+        }
+    }
+
+    #[test]
+    fn peer_cache_hits_decode_bit_exactly() {
+        use crate::runtime::{ModelKind, ModelOutputs};
+        let mut want = PredAccum::default();
+        let out = ModelOutputs {
+            fetch: vec![2.5; 3],
+            exec: vec![1.0 / 3.0; 3],
+            branch: vec![0.25; 3],
+            access: vec![0.125; 12],
+            icache: vec![0.1; 3],
+            tlb: vec![0.9; 3],
+        };
+        want.absorb(&out, ModelKind::Tao);
+        let mut frame = Vec::new();
+        want.encode_journal(&mut frame);
+        let key = ChunkKey { artifact: 0xdead_beef_dead_beef, prefix: 7, content: 9 };
+        // Peer 1 misses; peer 2 hits with the encoded frame.
+        let missing = serve_n(1, |_, path, _| {
+            assert_eq!(path, "/v1/cache/lookup");
+            (200, cache_miss_json())
+        });
+        let holding = serve_n(1, move |_, _, body| {
+            let got = cache_lookup_from_json(body).unwrap();
+            assert_eq!(got, ChunkKey { artifact: 0xdead_beef_dead_beef, prefix: 7, content: 9 });
+            (200, cache_found_json(&frame))
+        });
+        let pc = PeerCache::new(
+            vec![missing.to_string(), holding.to_string()],
+            Duration::from_secs(2),
+        );
+        let got = pc.lookup(&key).expect("second peer holds the key");
+        assert_eq!(got.instructions, want.instructions);
+        assert_eq!(got.fetch_cycles.to_bits(), want.fetch_cycles.to_bits());
+        assert_eq!(got.tlb_misses.to_bits(), want.tlb_misses.to_bits());
+    }
+
+    #[test]
+    fn peer_cache_holds_off_dead_peers() {
+        let dead = refused_addr();
+        let pc = PeerCache::new(vec![dead], Duration::from_millis(200));
+        let key = ChunkKey { artifact: 1, prefix: 2, content: 3 };
+        let t0 = Instant::now();
+        assert!(pc.lookup(&key).is_none()); // pays the connect failure once
+        assert!(pc.lookup(&key).is_none()); // held off: near-instant
+        assert!(pc.lookup(&key).is_none());
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "held-off peer must not be re-probed per miss"
+        );
+        assert!(PeerCache::new(vec![], Duration::from_millis(50)).is_empty());
+    }
+}

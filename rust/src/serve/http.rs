@@ -229,6 +229,30 @@ pub fn http_post<A: ToSocketAddrs>(addr: A, path: &str, body: &str) -> Result<Re
     request(addr, "POST", path, body, CLIENT_TIMEOUT)
 }
 
+/// `GET path` with an explicit timeout covering connect, write, and
+/// read. The router tier uses this for health probes (short timeout)
+/// and per-hop forwarding (remaining deadline budget); a connect
+/// refusal or timeout surfaces as `Err`, which the forwarder treats as
+/// a failover signal.
+pub fn http_get_timeout<A: ToSocketAddrs>(
+    addr: A,
+    path: &str,
+    timeout: Duration,
+) -> Result<Response> {
+    request(addr, "GET", path, "", timeout)
+}
+
+/// `POST path` with an explicit timeout covering connect, write, and
+/// read (per-hop deadline budgets — see [`http_get_timeout`]).
+pub fn http_post_timeout<A: ToSocketAddrs>(
+    addr: A,
+    path: &str,
+    body: &str,
+    timeout: Duration,
+) -> Result<Response> {
+    request(addr, "POST", path, body, timeout)
+}
+
 /// A slow-loris-shaped `POST`: send the headers and half the body,
 /// stall, then (best-effort) send the rest and read the response. The
 /// chaos client uses short stalls to rough up the daemon; the

@@ -64,6 +64,39 @@ pub struct Recovered {
     pub truncated_bytes: u64,
 }
 
+/// The shared recovery walk: validate the magic, replay every intact
+/// frame, and return the entries plus the byte offset where the valid
+/// prefix ends (everything past it is torn or garbled).
+fn recover(bytes: &[u8], path: &Path) -> Result<(Vec<(ChunkKey, PredAccum)>, usize)> {
+    if bytes.len() >= MAGIC.len() && &bytes[..MAGIC.len()] != MAGIC {
+        bail!("{path:?} is not a cache journal (bad magic); refusing to overwrite");
+    }
+    let mut entries = Vec::new();
+    let mut valid = bytes.len().min(MAGIC.len());
+    if valid == MAGIC.len() {
+        let mut off = MAGIC.len();
+        while bytes.len() - off >= 8 {
+            let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+            let crc = u32::from_le_bytes(bytes[off + 4..off + 8].try_into().unwrap());
+            if len != PAYLOAD_BYTES || bytes.len() - off - 8 < len {
+                break; // garbled length or torn payload
+            }
+            let payload = &bytes[off + 8..off + 8 + len];
+            if crc32(payload) != crc {
+                break; // torn or bit-rotted record
+            }
+            let k =
+                |i: usize| u64::from_le_bytes(payload[i * 8..(i + 1) * 8].try_into().unwrap());
+            let key = ChunkKey { artifact: k(0), prefix: k(1), content: k(2) };
+            let accum = PredAccum::decode_journal(&payload[24..])?;
+            entries.push((key, accum));
+            off += 8 + len;
+            valid = off;
+        }
+    }
+    Ok((entries, valid))
+}
+
 impl CacheJournal {
     /// Open `path` (creating it if absent), validate + recover its
     /// contents, truncate any torn tail, and return the journal ready
@@ -75,33 +108,7 @@ impl CacheJournal {
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
             Err(e) => return Err(e).with_context(|| format!("read cache journal {path:?}")),
         };
-        if bytes.len() >= MAGIC.len() && &bytes[..MAGIC.len()] != MAGIC {
-            bail!("{path:?} is not a cache journal (bad magic); refusing to overwrite");
-        }
-        let mut entries = Vec::new();
-        let mut valid = bytes.len().min(MAGIC.len());
-        if valid == MAGIC.len() {
-            let mut off = MAGIC.len();
-            while bytes.len() - off >= 8 {
-                let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
-                let crc = u32::from_le_bytes(bytes[off + 4..off + 8].try_into().unwrap());
-                if len != PAYLOAD_BYTES || bytes.len() - off - 8 < len {
-                    break; // garbled length or torn payload
-                }
-                let payload = &bytes[off + 8..off + 8 + len];
-                if crc32(payload) != crc {
-                    break; // torn or bit-rotted record
-                }
-                let k = |i: usize| {
-                    u64::from_le_bytes(payload[i * 8..(i + 1) * 8].try_into().unwrap())
-                };
-                let key = ChunkKey { artifact: k(0), prefix: k(1), content: k(2) };
-                let accum = PredAccum::decode_journal(&payload[24..])?;
-                entries.push((key, accum));
-                off += 8 + len;
-                valid = off;
-            }
-        }
+        let (entries, valid) = recover(&bytes, path)?;
         let truncated_bytes = (bytes.len() - valid) as u64;
         let file = std::fs::OpenOptions::new()
             .append(true)
@@ -120,6 +127,20 @@ impl CacheJournal {
                 .with_context(|| format!("initialize cache journal {path:?}"))?;
         }
         Ok((journal, Recovered { entries, truncated_bytes }))
+    }
+
+    /// Recover a journal's entries **read-only** — no truncation, no
+    /// append handle, the file is left byte-for-byte untouched. This is
+    /// how a ring successor warm-loads a dead worker's `--warm-journal`
+    /// file: the successor inherits the predecessor's computed chunks
+    /// while the original journal stays intact for the worker's own
+    /// respawn. A torn tail is simply skipped, exactly as
+    /// [`CacheJournal::open`] would truncate it.
+    pub fn replay(path: &Path) -> Result<Recovered> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("read cache journal {path:?}"))?;
+        let (entries, valid) = recover(&bytes, path)?;
+        Ok(Recovered { entries, truncated_bytes: (bytes.len() - valid) as u64 })
     }
 
     /// Append one cache entry. A single unbuffered `write_all` per
@@ -286,6 +307,38 @@ mod tests {
         assert_eq!(rec.entries.len(), 2);
         // Last-wins falls out of replay order.
         assert_eq!(rec.entries[1].1.instructions, 9);
+    }
+
+    #[test]
+    fn replay_is_read_only_and_skips_torn_tails() {
+        let _gate = fault::exclusive();
+        fault::disarm_all();
+        let path = tmp("replay");
+        let _ = std::fs::remove_file(&path);
+        let (mut j, _) = CacheJournal::open(&path).unwrap();
+        for n in 1..=3u64 {
+            j.append(&key(n), &accum(n)).unwrap();
+        }
+        drop(j);
+        // Tear the last frame as a successor would find it after the
+        // owner died mid-append.
+        let full = std::fs::metadata(&path).unwrap().len();
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(full - (FRAME_BYTES as u64) / 2).unwrap();
+        drop(f);
+        let rec = CacheJournal::replay(&path).unwrap();
+        assert_eq!(rec.entries.len(), 2, "intact prefix replays");
+        assert_eq!(rec.truncated_bytes, (FRAME_BYTES as u64) / 2);
+        // The file itself is untouched — the owner's own recovery path
+        // still sees the torn tail.
+        assert_eq!(
+            std::fs::metadata(&path).unwrap().len(),
+            full - (FRAME_BYTES as u64) / 2
+        );
+        assert!(CacheJournal::replay(&tmp("replay-missing")).is_err());
+        let foreign = tmp("replay-foreign");
+        std::fs::write(&foreign, b"not a journal at all....").unwrap();
+        assert!(CacheJournal::replay(&foreign).is_err());
     }
 
     #[test]

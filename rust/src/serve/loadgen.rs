@@ -33,13 +33,16 @@ use super::http::{http_get, http_post, http_post_stalled};
 use super::protocol::{
     artifacts_from_json, resolve_ctx_uarch, JobOutcome, JobSpec, ServeError, StatsSnapshot,
 };
+use super::ring::{HashRing, Member};
 use crate::stats::Metrics;
 use crate::telemetry::prometheus::{histogram_quantile, parse as parse_prom, sample_value};
 use crate::util::benchkit::{BenchReport, Measurement};
 use crate::util::fault::{self, Probe};
+use crate::util::hash::{fnv1a64, FNV_OFFSET};
 use crate::util::rng::Rng;
 use crate::workloads::{mixed_scenarios, ScenarioArtifact, ScenarioJob};
 use anyhow::{bail, ensure, Context, Result};
+use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -73,6 +76,15 @@ pub struct LoadgenOptions {
     pub shutdown_after: bool,
     /// Run the chaos soak instead of the measurement sweep.
     pub chaos: bool,
+    /// Worker addresses behind the router at `addr` (`--targets`).
+    /// When set, the sweep snapshots each worker's `/v1/stats` and
+    /// reports the measured per-worker job distribution against the
+    /// consistent-hash prediction. Ignored by `--chaos`.
+    pub targets: Vec<String>,
+    /// Fail unless each worker's measured job count equals the
+    /// equal-weight consistent-hash placement (assumes a healthy fleet
+    /// with no mid-sweep failover).
+    pub assert_balance: bool,
     /// Print a periodic progress summary sourced from the daemon's
     /// `/metrics` exposition every this many seconds (`None` = quiet).
     pub progress_every: Option<Duration>,
@@ -93,12 +105,82 @@ impl Default for LoadgenOptions {
             assert_occupancy: false,
             shutdown_after: false,
             chaos: false,
+            targets: Vec::new(),
+            assert_balance: false,
             progress_every: None,
         }
     }
 }
 
-fn to_spec(j: &ScenarioJob, chunk: usize) -> JobSpec {
+/// The routing key the router derives for an artifact: its
+/// wire-reported fingerprint, falling back to the FNV-1a hash of the
+/// registry name exactly as the router does against a fleet that
+/// predates fingerprint reporting.
+pub fn artifact_key(name: &str, fingerprint: Option<u64>) -> u64 {
+    fingerprint.unwrap_or_else(|| fnv1a64(name.as_bytes(), FNV_OFFSET))
+}
+
+/// Predict each worker's job count for `specs` under equal-weight
+/// consistent hashing — the router's placement when the whole fleet is
+/// healthy and no failover fires. `keys` maps artifact name to routing
+/// key ([`artifact_key`]); unlisted artifacts fall back to the name
+/// hash, mirroring the router.
+pub fn predict_balance<'a>(
+    targets: &[String],
+    keys: &HashMap<String, u64>,
+    specs: impl IntoIterator<Item = &'a JobSpec>,
+) -> BTreeMap<String, u64> {
+    let ring = HashRing::from_members(
+        targets.iter().map(|t| Member { name: t.clone(), weight: 1 }),
+    );
+    let mut counts: BTreeMap<String, u64> = targets.iter().map(|t| (t.clone(), 0)).collect();
+    for spec in specs {
+        let key = keys
+            .get(&spec.artifact)
+            .copied()
+            .unwrap_or_else(|| fnv1a64(spec.artifact.as_bytes(), FNV_OFFSET));
+        if let Some(primary) = ring.primary(key) {
+            *counts.get_mut(primary).expect("primary is a target") += 1;
+        }
+    }
+    counts
+}
+
+/// Report (and with `--assert-balance`, enforce) the per-worker job
+/// distribution after a sweep: measured `jobs_done` deltas per target
+/// versus the consistent-hash prediction for the submitted spec set.
+fn check_balance(
+    opts: &LoadgenOptions,
+    before: &[StatsSnapshot],
+    keys: &HashMap<String, u64>,
+    all_specs: &[&JobSpec],
+) -> Result<()> {
+    let mut measured: BTreeMap<String, u64> = BTreeMap::new();
+    for (t, b) in opts.targets.iter().zip(before) {
+        let d = stats(t).with_context(|| format!("worker {t} stats"))?.delta_from(b);
+        measured.insert(t.clone(), d.jobs_done);
+    }
+    let expected = predict_balance(&opts.targets, keys, all_specs.iter().copied());
+    eprintln!("loadgen: per-worker job distribution (measured / hash-predicted):");
+    for t in &opts.targets {
+        eprintln!("  {t}: {} / {}", measured[t], expected[t]);
+    }
+    if opts.assert_balance {
+        for t in &opts.targets {
+            ensure!(
+                measured[t] == expected[t],
+                "worker {t} served {} jobs but consistent hashing predicts {} — \
+                 a failover, unhealthy worker, or direct traffic shifted placement",
+                measured[t],
+                expected[t]
+            );
+        }
+        eprintln!("loadgen: balance matches consistent-hash placement exactly");
+    }
+    Ok(())
+}
+
+pub(crate) fn to_spec(j: &ScenarioJob, chunk: usize) -> JobSpec {
     JobSpec {
         bench: j.bench.clone(),
         insts: j.insts,
@@ -215,7 +297,11 @@ fn stats(addr: &str) -> Result<StatsSnapshot> {
 
 /// Run the concurrent phase: `threads` workers pull specs off a shared
 /// cursor and submit; results return in spec order.
-fn run_concurrent(addr: &str, specs: &[JobSpec], threads: usize) -> Result<Vec<JobOutcome>> {
+pub(crate) fn run_concurrent(
+    addr: &str,
+    specs: &[JobSpec],
+    threads: usize,
+) -> Result<Vec<JobOutcome>> {
     let cursor = AtomicUsize::new(0);
     let results: Mutex<Vec<Option<JobOutcome>>> = Mutex::new(vec![None; specs.len()]);
     let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
@@ -324,7 +410,12 @@ pub fn run_loadgen(opts: &LoadgenOptions) -> Result<BenchReport> {
     ensure!(health.status == 200, "daemon unhealthy: {}", health.status);
     let arts_resp = http_get(addr, "/v1/artifacts")?;
     ensure!(arts_resp.status == 200, "artifact listing failed");
-    let arts: Vec<ScenarioArtifact> = artifacts_from_json(&arts_resp.body)?
+    let infos = artifacts_from_json(&arts_resp.body)?;
+    let art_keys: HashMap<String, u64> = infos
+        .iter()
+        .map(|a| (a.name.clone(), artifact_key(&a.name, a.fingerprint)))
+        .collect();
+    let arts: Vec<ScenarioArtifact> = infos
         .into_iter()
         .map(|a| ScenarioArtifact { simnet: a.is_simnet(), name: a.name })
         .collect();
@@ -334,6 +425,13 @@ pub fn run_loadgen(opts: &LoadgenOptions) -> Result<BenchReport> {
         arts.len(),
         arts.iter().map(|a| a.name.as_str()).collect::<Vec<_>>().join(", ")
     );
+    // Per-worker baselines for the balance report (`--targets`): taken
+    // before any submission so the deltas cover the whole sweep.
+    let targets_before: Vec<StatsSnapshot> = opts
+        .targets
+        .iter()
+        .map(|t| stats(t).with_context(|| format!("worker {t} unreachable")))
+        .collect::<Result<_>>()?;
     let progress = opts.progress_every.map(|every| ProgressReporter::start(addr, every));
 
     let mut report = BenchReport::new();
@@ -406,6 +504,14 @@ pub fn run_loadgen(opts: &LoadgenOptions) -> Result<BenchReport> {
         warm_delta.cache_hits,
     );
 
+    if !opts.targets.is_empty() {
+        // Every job submitted this sweep: solo once, the mix twice
+        // (cold + warm replay the same specs).
+        let all: Vec<&JobSpec> =
+            solo_specs.iter().chain(&specs).chain(&specs).collect();
+        check_balance(opts, &targets_before, &art_keys, &all)?;
+    }
+
     if let Some(dir) = &opts.verify_models {
         verify_all(&solo_specs, &solo_outs, dir, "solo")?;
         verify_all(&specs, &cold_outs, dir, "cold")?;
@@ -455,6 +561,51 @@ pub fn run_loadgen(opts: &LoadgenOptions) -> Result<BenchReport> {
         ensure!(resp.status == 200, "shutdown returned {}", resp.status);
     }
     Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(artifact: &str) -> JobSpec {
+        JobSpec {
+            bench: "dee".into(),
+            insts: 100,
+            seed: 1,
+            artifact: artifact.into(),
+            chunk: 64,
+            ctx_uarch: None,
+            deadline_ms: None,
+            trace: None,
+            plan: None,
+            trace_id: None,
+        }
+    }
+
+    #[test]
+    fn balance_prediction_is_total_deterministic_and_keyed_per_artifact() {
+        let targets = vec!["w1:1".to_string(), "w2:1".to_string(), "w3:1".to_string()];
+        let keys: HashMap<String, u64> =
+            [("a".to_string(), 11u64), ("b".to_string(), 22), ("c".to_string(), 33)].into();
+        let specs: Vec<JobSpec> =
+            (0..30).map(|i| spec(["a", "b", "c"][i % 3])).collect();
+        let counts = predict_balance(&targets, &keys, specs.iter());
+        assert_eq!(counts.values().sum::<u64>(), 30, "every job placed");
+        assert_eq!(counts, predict_balance(&targets, &keys, specs.iter()));
+        // Same artifact → same worker: each artifact's 10 jobs land as
+        // one block, so every count is a multiple of 10.
+        assert!(counts.values().all(|&c| c % 10 == 0), "{counts:?}");
+        // A solo fleet takes everything.
+        let solo = vec!["only:1".to_string()];
+        let all = predict_balance(&solo, &keys, specs.iter());
+        assert_eq!(all["only:1"], 30);
+    }
+
+    #[test]
+    fn artifact_key_prefers_wire_fingerprint() {
+        assert_eq!(artifact_key("m", Some(7)), 7);
+        assert_eq!(artifact_key("m", None), fnv1a64(b"m", FNV_OFFSET));
+    }
 }
 
 /// One chaos submission: maybe stall mid-body (the client-side

@@ -34,23 +34,44 @@
 //! probes. Under faults and retries, every successfully served result
 //! is still bit-identical to the offline engine.
 //!
+//! One daemon caps throughput at one box; the router tier shards the
+//! service horizontally:
+//!
+//! * [`ring`] — weighted consistent-hash ring keyed by artifact
+//!   fingerprint (membership churn moves only the affected keys).
+//! * [`forward`] — per-hop deadline-budgeted forwarding with failover
+//!   on retryable codes, plus the peer-cache lookup client.
+//! * [`router`] — the `tao router` daemon: health-checks workers into
+//!   and out of the ring, forwards `/v1/simulate`, aggregates
+//!   `/v1/stats`, serves its own `/metrics`.
+//!
+//! Workers peer their prediction caches over `/v1/cache/lookup` (a
+//! local miss consults the key's ring neighbours before computing), so
+//! the fleet's cache is warm wherever the ring places a key.
+//!
 //! [`server`] wires them together; [`loadgen`] is the measurement +
 //! chaos client (`BENCH_serve.json`); [`cli`] holds the `tao serve` /
-//! `tao loadgen` entry points.
+//! `tao router` / `tao loadgen` entry points.
 
 pub mod cache;
 pub mod cli;
+pub mod forward;
 pub mod http;
 pub mod journal;
 pub mod loadgen;
 pub mod protocol;
 pub mod queue;
+pub mod ring;
+pub mod router;
 pub mod scheduler;
 pub mod server;
 
 pub use cache::PredictionCache;
+pub use forward::PeerCache;
 pub use journal::CacheJournal;
 pub use protocol::{ErrorCode, JobOutcome, JobSpec, ServeError, StatsSnapshot};
 pub use queue::JobQueue;
+pub use ring::HashRing;
+pub use router::{Router, RouterConfig};
 pub use scheduler::{LaneConfig, ServeCounters};
 pub use server::{Server, ServeConfig};

@@ -74,6 +74,41 @@ pub struct JobSpec {
 /// rather than silently rounded.
 pub const MAX_SAFE_JSON_INT: u64 = 1 << 53;
 
+/// Render a full-range `u64` as fixed-width lowercase hex. Cache keys
+/// and artifact fingerprints occupy all 64 bits, which a JSON number
+/// cannot carry exactly (see [`MAX_SAFE_JSON_INT`]) — they travel as
+/// hex strings on the wire.
+pub fn u64_hex(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+/// Inverse of [`u64_hex`] (any 1–16 hex digits accepted).
+pub fn u64_from_hex(s: &str) -> Result<u64> {
+    ensure!(!s.is_empty() && s.len() <= 16, "hex u64 {s:?} out of range");
+    u64::from_str_radix(s, 16).with_context(|| format!("bad hex u64 {s:?}"))
+}
+
+/// Lowercase hex of an arbitrary byte payload (accumulator frames).
+pub fn bytes_hex(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        out.push_str(&format!("{b:02x}"));
+    }
+    out
+}
+
+/// Inverse of [`bytes_hex`].
+pub fn bytes_from_hex(s: &str) -> Result<Vec<u8>> {
+    ensure!(s.len() % 2 == 0, "hex payload has odd length {}", s.len());
+    (0..s.len())
+        .step_by(2)
+        .map(|i| {
+            u8::from_str_radix(&s[i..i + 2], 16)
+                .with_context(|| format!("bad hex byte at offset {i}"))
+        })
+        .collect()
+}
+
 impl JobSpec {
     /// Parse a `/v1/simulate` body.
     pub fn from_json(text: &str) -> Result<JobSpec> {
@@ -517,9 +552,20 @@ impl StatsSnapshot {
     /// appended under `"lanes"`. [`StatsSnapshot::from_json`] reads
     /// only the scalar fields, so clients parse both shapes unchanged.
     pub fn to_json_with_lanes(&self, lanes: Json) -> String {
+        self.to_json_with(vec![("lanes", lanes)])
+    }
+
+    /// Render the `/v1/stats` body with arbitrary extra top-level
+    /// sections appended (per-lane detail, per-artifact cache tenancy,
+    /// the router's per-worker rollup). [`StatsSnapshot::from_json`]
+    /// reads only the scalar fields, so every client parses every
+    /// shape unchanged.
+    pub fn to_json_with(&self, extras: Vec<(&str, Json)>) -> String {
         match self.json_obj() {
             Json::Obj(mut m) => {
-                m.insert("lanes".to_string(), lanes);
+                for (k, v) in extras {
+                    m.insert(k.to_string(), v);
+                }
                 Json::Obj(m).render()
             }
             _ => unreachable!("json_obj always builds an object"),
@@ -579,6 +625,11 @@ pub struct ArtifactInfo {
     pub batch: u64,
     /// Context window `T`.
     pub context: u64,
+    /// Content fingerprint of the artifact bytes — identical across
+    /// every daemon that loaded the same model, which is what lets the
+    /// router key its hash ring on it. `None` when listing a
+    /// pre-router daemon that does not advertise one.
+    pub fingerprint: Option<u64>,
 }
 
 impl ArtifactInfo {
@@ -604,6 +655,7 @@ pub fn artifacts_json(pool: &crate::runtime::ArtifactPool) -> String {
                 ),
                 ("batch", Json::of_u64(a.meta.batch as u64)),
                 ("context", Json::of_u64(a.meta.context as u64)),
+                ("fingerprint", Json::of_str(&u64_hex(a.fingerprint))),
             ])
         })
         .collect();
@@ -625,9 +677,61 @@ pub fn artifacts_from_json(text: &str) -> Result<Vec<ArtifactInfo>> {
                 kind: a.req_str("kind")?.to_string(),
                 batch: a.req_u64("batch")?,
                 context: a.req_u64("context")?,
+                fingerprint: match a.get("fingerprint").and_then(Json::as_str) {
+                    Some(hex) => Some(u64_from_hex(hex)?),
+                    None => None,
+                },
             })
         })
         .collect()
+}
+
+/// Render a `POST /v1/cache/lookup` request body for one chunk key.
+pub fn cache_lookup_json(key: &crate::serve::cache::ChunkKey) -> String {
+    Json::obj([
+        ("artifact", Json::of_str(&u64_hex(key.artifact))),
+        ("prefix", Json::of_str(&u64_hex(key.prefix))),
+        ("content", Json::of_str(&u64_hex(key.content))),
+    ])
+    .render()
+}
+
+/// Parse a `POST /v1/cache/lookup` request body.
+pub fn cache_lookup_from_json(text: &str) -> Result<crate::serve::cache::ChunkKey> {
+    let j = Json::parse(text).context("malformed cache lookup")?;
+    Ok(crate::serve::cache::ChunkKey {
+        artifact: u64_from_hex(j.req_str("artifact")?)?,
+        prefix: u64_from_hex(j.req_str("prefix")?)?,
+        content: u64_from_hex(j.req_str("content")?)?,
+    })
+}
+
+/// Render a `/v1/cache/lookup` hit response: the resident accumulator's
+/// journal frame ([`PredAccum::encode_journal`] bytes), hex-encoded.
+///
+/// [`PredAccum::encode_journal`]: crate::coordinator::engine::PredAccum::encode_journal
+pub fn cache_found_json(payload: &[u8]) -> String {
+    Json::obj([
+        ("found", Json::Bool(true)),
+        ("accum", Json::of_str(&bytes_hex(payload))),
+    ])
+    .render()
+}
+
+/// Render a `/v1/cache/lookup` miss response.
+pub fn cache_miss_json() -> String {
+    Json::obj([("found", Json::Bool(false))]).render()
+}
+
+/// Parse a `/v1/cache/lookup` response: `Some(journal-frame bytes)` on
+/// a hit, `None` on a miss.
+pub fn cache_result_from_json(text: &str) -> Result<Option<Vec<u8>>> {
+    let j = Json::parse(text).context("malformed cache lookup response")?;
+    match j.get("found") {
+        Some(Json::Bool(true)) => Ok(Some(bytes_from_hex(j.req_str("accum")?)?)),
+        Some(Json::Bool(false)) => Ok(None),
+        _ => anyhow::bail!("cache lookup response missing found flag"),
+    }
 }
 
 /// Admission ceiling for SimNet jobs, regardless of `--max-insts`.
@@ -904,6 +1008,36 @@ mod tests {
         assert_eq!(infos[0].batch, 16);
         assert!(infos[1].is_simnet());
         assert_eq!(infos[1].context, 4);
+    }
+
+    #[test]
+    fn cache_lookup_wire_round_trips() {
+        // Keys travel as hex strings so full-range u64s survive the
+        // f64-backed JSON number representation.
+        let key = crate::serve::cache::ChunkKey {
+            artifact: u64::MAX,
+            prefix: 0,
+            content: 0x9f3c_0000_aa11_bb22,
+        };
+        assert_eq!(cache_lookup_from_json(&cache_lookup_json(&key)).unwrap(), key);
+
+        assert_eq!(u64_from_hex(&u64_hex(u64::MAX)).unwrap(), u64::MAX);
+        assert_eq!(u64_from_hex(&u64_hex(0)).unwrap(), 0);
+        assert!(u64_from_hex("").is_err());
+        assert!(u64_from_hex("12345678901234567").is_err(), "17 digits overflow");
+        assert!(u64_from_hex("xy").is_err());
+
+        let payload: Vec<u8> = (0..=255).collect();
+        assert_eq!(bytes_from_hex(&bytes_hex(&payload)).unwrap(), payload);
+        assert!(bytes_from_hex("abc").is_err(), "odd length");
+        assert!(bytes_from_hex("zz").is_err());
+
+        assert_eq!(
+            cache_result_from_json(&cache_found_json(&payload)).unwrap(),
+            Some(payload)
+        );
+        assert_eq!(cache_result_from_json(&cache_miss_json()).unwrap(), None);
+        assert!(cache_result_from_json("{}").is_err());
     }
 
     #[test]

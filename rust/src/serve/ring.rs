@@ -1,0 +1,274 @@
+//! Weighted consistent-hash ring for the router tier.
+//!
+//! Jobs are keyed by **artifact fingerprint** (the FNV-1a hash of the
+//! artifact's model bytes, identical across every worker that loaded
+//! the same model), so one artifact's traffic — and therefore its
+//! prediction-cache working set — lands on one worker and stays there
+//! as the fleet changes. Each member contributes `weight ×`
+//! [`POINTS_PER_WEIGHT`] virtual points hashed onto a `u64` circle;
+//! a key routes to the first point clockwise from its own hash.
+//!
+//! The consistent-hashing contract this module's tests pin down:
+//! adding, removing, or re-weighting one member moves only the key
+//! fraction proportional to the weight that changed — everything else
+//! keeps its placement, which is what keeps the fleet's caches warm
+//! through membership churn. [`HashRing::replicas`] returns the
+//! successor walk (distinct members in ring order); the forwarder
+//! fails over along it, and cache peering asks the next replica first.
+
+use crate::util::hash::{fnv1a64, fnv1a64_u64, FNV_OFFSET};
+
+/// Virtual points per unit of member weight. High enough that a
+/// three-member ring splits keys within a few percent of the weight
+/// ratio; low enough that rebuilding a fleet's ring stays trivial.
+pub const POINTS_PER_WEIGHT: u32 = 64;
+
+/// One ring member (a worker daemon).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Member {
+    /// Member identity: the worker's `host:port`.
+    pub name: String,
+    /// Relative capacity; 0 keeps the member known but takes it out of
+    /// the point set (drained/unhealthy).
+    pub weight: u32,
+}
+
+/// A weighted consistent-hash ring.
+#[derive(Debug, Clone, Default)]
+pub struct HashRing {
+    members: Vec<Member>,
+    /// Sorted (point, member index) pairs — the circle.
+    points: Vec<(u64, usize)>,
+}
+
+fn point_hash(name: &str, replica: u32) -> u64 {
+    fnv1a64_u64(replica as u64, fnv1a64(name.as_bytes(), FNV_OFFSET))
+}
+
+impl HashRing {
+    /// Empty ring.
+    pub fn new() -> HashRing {
+        HashRing::default()
+    }
+
+    /// Build a ring from members (last duplicate name wins).
+    pub fn from_members(members: impl IntoIterator<Item = Member>) -> HashRing {
+        let mut ring = HashRing::new();
+        for m in members {
+            ring.set(&m.name, m.weight);
+        }
+        ring
+    }
+
+    /// Insert or re-weight a member and rebuild the point set.
+    /// Weight 0 keeps the member listed but contributes no points.
+    pub fn set(&mut self, name: &str, weight: u32) {
+        match self.members.iter_mut().find(|m| m.name == name) {
+            Some(m) => m.weight = weight,
+            None => self.members.push(Member { name: name.to_string(), weight }),
+        }
+        self.rebuild();
+    }
+
+    /// Remove a member entirely.
+    pub fn remove(&mut self, name: &str) {
+        self.members.retain(|m| m.name != name);
+        self.rebuild();
+    }
+
+    /// The member list (stable insertion order).
+    pub fn members(&self) -> &[Member] {
+        &self.members
+    }
+
+    /// Members with at least one point on the circle.
+    pub fn live_members(&self) -> usize {
+        self.members.iter().filter(|m| m.weight > 0).count()
+    }
+
+    /// True when no member contributes points.
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    fn rebuild(&mut self) {
+        self.points.clear();
+        for (idx, m) in self.members.iter().enumerate() {
+            for r in 0..m.weight.saturating_mul(POINTS_PER_WEIGHT) {
+                self.points.push((point_hash(&m.name, r), idx));
+            }
+        }
+        // Point-hash ties across members are broken by member index so
+        // the ordering (and therefore routing) is deterministic.
+        self.points.sort_unstable();
+    }
+
+    /// The primary member for `key`: owner of the first point clockwise
+    /// from the key's position on the circle.
+    pub fn primary(&self, key: u64) -> Option<&str> {
+        self.walk_from(key).next()
+    }
+
+    /// The failover walk for `key`: up to `n` *distinct* members in
+    /// ring-successor order, primary first. Fewer are returned when the
+    /// ring has fewer live members.
+    pub fn replicas(&self, key: u64, n: usize) -> Vec<&str> {
+        let mut out: Vec<&str> = Vec::with_capacity(n);
+        for name in self.walk_from(key) {
+            if out.len() == n {
+                break;
+            }
+            if !out.contains(&name) {
+                out.push(name);
+            }
+        }
+        out
+    }
+
+    /// Iterate member names point-by-point clockwise from `key`
+    /// (repeats members — callers dedup).
+    fn walk_from(&self, key: u64) -> impl Iterator<Item = &str> {
+        let hashed = fnv1a64_u64(key, FNV_OFFSET);
+        let start = self.points.partition_point(|&(p, _)| p < hashed);
+        let n = self.points.len();
+        (0..n).map(move |i| {
+            let (_, idx) = self.points[(start + i) % n];
+            self.members[idx].name.as_str()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn counts(ring: &HashRing, keys: u64) -> HashMap<String, u64> {
+        let mut c = HashMap::new();
+        for k in 0..keys {
+            let name = ring.primary(k).expect("non-empty ring").to_string();
+            *c.entry(name).or_insert(0) += 1;
+        }
+        c
+    }
+
+    fn three_workers() -> HashRing {
+        HashRing::from_members(
+            ["w1:1", "w2:1", "w3:1"]
+                .map(|n| Member { name: n.into(), weight: 1 })
+        )
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_total() {
+        let a = three_workers();
+        let b = three_workers();
+        for k in 0..500u64 {
+            assert_eq!(a.primary(k), b.primary(k));
+            assert_eq!(a.replicas(k, 3), b.replicas(k, 3));
+        }
+        assert!(HashRing::new().primary(7).is_none());
+        assert!(HashRing::new().replicas(7, 2).is_empty());
+    }
+
+    #[test]
+    fn equal_weights_split_keys_roughly_evenly() {
+        let ring = three_workers();
+        let c = counts(&ring, 3000);
+        for m in ring.members() {
+            let share = *c.get(&m.name).unwrap_or(&0) as f64 / 3000.0;
+            assert!(
+                (share - 1.0 / 3.0).abs() < 0.12,
+                "{} got {share:.3} of keys (want ~0.333)",
+                m.name
+            );
+        }
+    }
+
+    #[test]
+    fn double_weight_doubles_share() {
+        let mut ring = three_workers();
+        ring.set("w1:1", 2);
+        let c = counts(&ring, 4000);
+        let w1 = *c.get("w1:1").unwrap() as f64 / 4000.0;
+        assert!((w1 - 0.5).abs() < 0.12, "weight-2 member got {w1:.3} (want ~0.5)");
+    }
+
+    #[test]
+    fn removing_a_member_moves_only_its_keys() {
+        let ring = three_workers();
+        let before: Vec<String> =
+            (0..2000u64).map(|k| ring.primary(k).unwrap().to_string()).collect();
+        let mut smaller = ring.clone();
+        smaller.remove("w2:1");
+        let mut moved = 0u64;
+        for (k, old) in before.iter().enumerate() {
+            let new = smaller.primary(k as u64).unwrap();
+            if old == "w2:1" {
+                assert_ne!(new, "w2:1");
+            } else {
+                assert_eq!(new, old.as_str(), "key {k} moved although its owner stayed");
+                continue;
+            }
+            moved += 1;
+        }
+        // Exactly the removed member's keys moved — about a third.
+        let frac = moved as f64 / 2000.0;
+        assert!((frac - 1.0 / 3.0).abs() < 0.12, "moved fraction {frac:.3}");
+    }
+
+    #[test]
+    fn weight_change_moves_only_the_expected_fraction() {
+        let ring = three_workers();
+        let before: Vec<String> =
+            (0..3000u64).map(|k| ring.primary(k).unwrap().to_string()).collect();
+        // Bump one member 1 → 2: it should *gain* keys (about a share's
+        // worth) and nothing should shuffle between the other two.
+        let mut heavier = ring.clone();
+        heavier.set("w3:1", 2);
+        let mut moved = 0u64;
+        for (k, old) in before.iter().enumerate() {
+            let new = heavier.primary(k as u64).unwrap();
+            if new != old.as_str() {
+                assert_eq!(new, "w3:1", "keys may only move *to* the re-weighted member");
+                moved += 1;
+            }
+        }
+        let frac = moved as f64 / 3000.0;
+        // 1/3 split becomes 2/4 = 1/2: expect ~1/6 of all keys to move.
+        assert!(frac > 0.05 && frac < 0.30, "moved fraction {frac:.3} (want ~0.167)");
+    }
+
+    #[test]
+    fn weight_zero_drains_without_forgetting() {
+        let mut ring = three_workers();
+        ring.set("w2:1", 0);
+        assert_eq!(ring.members().len(), 3);
+        assert_eq!(ring.live_members(), 2);
+        for k in 0..500u64 {
+            assert_ne!(ring.primary(k).unwrap(), "w2:1");
+        }
+        // Re-weighting restores the original placement exactly.
+        ring.set("w2:1", 1);
+        let fresh = three_workers();
+        for k in 0..500u64 {
+            assert_eq!(ring.primary(k), fresh.primary(k));
+        }
+    }
+
+    #[test]
+    fn replicas_are_distinct_and_start_at_primary() {
+        let ring = three_workers();
+        for k in 0..200u64 {
+            let reps = ring.replicas(k, 3);
+            assert_eq!(reps.len(), 3);
+            assert_eq!(reps[0], ring.primary(k).unwrap());
+            let mut uniq = reps.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            assert_eq!(uniq.len(), 3, "replicas must be distinct members");
+        }
+        // Asking for more replicas than members returns what exists.
+        assert_eq!(ring.replicas(1, 8).len(), 3);
+    }
+}

@@ -1,0 +1,598 @@
+//! `tao router` — the horizontal sharding tier in front of N worker
+//! daemons.
+//!
+//! One `tao serve` daemon caps throughput at one box's lanes. The
+//! router scales the service *out* without touching the protocol: it
+//! speaks the same hand-rolled HTTP/1.1 on both sides, so a client
+//! cannot tell a router from a worker, and a worker cannot tell the
+//! router from a client — `tao loadgen` works against either,
+//! unchanged.
+//!
+//! **Placement.** Jobs consistent-hash onto a weighted ring
+//! ([`super::ring`]) keyed by **artifact fingerprint** — the content
+//! hash every worker that loaded the same model advertises via
+//! `GET /v1/artifacts`. Keying on content (not worker count, not
+//! round-robin) is what makes the prediction cache *shard*: all
+//! requests for one artifact land on the same worker (and its
+//! failover successors), so that worker's chunk cache stays hot for
+//! exactly the keyspace the ring assigned it. Adding a worker moves
+//! only `1/(n+1)` of the keyspace; the rest of the fleet's caches
+//! survive the resize.
+//!
+//! **Membership.** A health loop polls every worker's `/healthz` on an
+//! interval: `serving` and `degraded` keep full ring weight (a
+//! degraded worker still serves its healthy lanes); `starting`,
+//! `draining`, and unreachable workers drop to weight 0 — known but
+//! out of the point set, so their keys move to ring successors while
+//! in-flight jobs finish on the old connection. Weight-0 members keep
+//! their identity: a worker bouncing back gets its exact keyspace
+//! back, so its (journal-recovered) cache is warm for it.
+//!
+//! **Forwarding.** `/v1/simulate` bodies forward along the key's
+//! replica walk with per-hop deadline budgets and failover on
+//! retryable codes ([`super::forward`]). Terminal answers relay
+//! verbatim — the router adds availability, never masks the failure
+//! taxonomy.
+//!
+//! **Fleet-warm cache.** The router computes each worker's ring
+//! neighbours and the `tao router` CLI can print them (`--print-peers`)
+//! for wiring workers' `--peers` flags; a worker that misses a chunk
+//! asks its neighbours' `/v1/cache/lookup` before computing, and a
+//! replacement worker warm-loads a dead predecessor's journal via
+//! `--warm-journal`. Failover traffic therefore lands on a successor
+//! whose cache already holds (or can fetch) the moved keys.
+
+use super::forward::{forward, ForwardPolicy};
+use super::http::{
+    http_get_timeout, read_error_status, read_request, write_response, write_response_typed,
+};
+use super::protocol::{artifacts_from_json, error_body, ErrorCode, ServeError, StatsSnapshot};
+use super::ring::HashRing;
+use crate::telemetry::{self, prometheus, registry, Gauge, Histogram};
+use crate::util::fault::relock;
+use crate::util::hash::{fnv1a64, FNV_OFFSET};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Router configuration.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Bind address (`127.0.0.1:0` for an ephemeral port).
+    pub addr: String,
+    /// Worker daemons: (`host:port`, ring weight). Weight scales a
+    /// worker's keyspace share (a 2× box takes 2× the artifacts).
+    pub workers: Vec<(String, u32)>,
+    /// Health-poll interval, milliseconds.
+    pub health_interval_ms: u64,
+    /// Per-probe `/healthz` timeout, milliseconds.
+    pub health_timeout_ms: u64,
+    /// Distinct ring replicas a job may fail over across.
+    pub replica_walk: usize,
+    /// Per-hop forward timeout ceiling, milliseconds.
+    pub hop_cap_ms: u64,
+    /// Total forward attempts across the replica walk.
+    pub max_attempts: u32,
+    /// Deadline for requests that don't carry `deadline_ms`.
+    pub default_deadline_ms: u64,
+    /// Per-connection socket read timeout, milliseconds.
+    pub read_timeout_ms: u64,
+    /// Per-connection socket write timeout, milliseconds.
+    pub write_timeout_ms: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: Vec::new(),
+            health_interval_ms: 250,
+            health_timeout_ms: 1_000,
+            replica_walk: 3,
+            hop_cap_ms: 300_000,
+            max_attempts: 6,
+            default_deadline_ms: 300_000,
+            read_timeout_ms: 10_000,
+            write_timeout_ms: 30_000,
+        }
+    }
+}
+
+/// The ring neighbours (successors) of each worker — who a worker
+/// should consult for warm cache entries, and who inherits its keys if
+/// it dies. Computed from the *configured* full-weight ring so the
+/// wiring is stable across transient health flaps.
+pub fn peer_map(workers: &[(String, u32)], walk: usize) -> BTreeMap<String, Vec<String>> {
+    let ring = HashRing::from_members(workers.iter().map(|(name, weight)| {
+        super::ring::Member { name: name.clone(), weight: (*weight).max(1) }
+    }));
+    let mut out = BTreeMap::new();
+    for (name, _) in workers {
+        // A worker's neighbours: walk the ring from the worker's own
+        // identity hash; drop self; keep `walk` distinct successors.
+        let key = fnv1a64(name.as_bytes(), FNV_OFFSET);
+        let peers: Vec<String> = ring
+            .replicas(key, walk + 1)
+            .into_iter()
+            .filter(|p| p != name)
+            .take(walk)
+            .map(str::to_string)
+            .collect();
+        out.insert(name.clone(), peers);
+    }
+    out
+}
+
+/// Router-level metric handles, resolved once at bind.
+struct RouterTele {
+    workers_live: Gauge,
+    workers_known: Gauge,
+    request_seconds: Histogram,
+}
+
+impl RouterTele {
+    fn new() -> RouterTele {
+        let reg = registry();
+        RouterTele {
+            workers_live: reg.gauge(
+                "tao_router_workers_live",
+                "Workers currently in the hash ring (weight > 0).",
+                &[],
+            ),
+            workers_known: reg.gauge(
+                "tao_router_workers_known",
+                "Workers configured, live or not.",
+                &[],
+            ),
+            request_seconds: reg.histogram(
+                "tao_router_request_seconds",
+                "Router request wall time, accept to relayed response.",
+                &[],
+            ),
+        }
+    }
+}
+
+struct RouterShared {
+    workers: Vec<(String, u32)>,
+    ring: Mutex<HashRing>,
+    /// Artifact name → fingerprint, discovered from `/v1/artifacts`.
+    arts: Mutex<HashMap<String, u64>>,
+    tele: RouterTele,
+    shutdown: AtomicBool,
+    started: AtomicBool,
+    /// Decorrelates per-request forwarding jitter.
+    seed: AtomicU64,
+    policy: ForwardPolicy,
+    replica_walk: usize,
+    default_deadline: Duration,
+    health_interval: Duration,
+    health_timeout: Duration,
+    read_timeout: Duration,
+    write_timeout: Duration,
+}
+
+impl RouterShared {
+    /// The ring key for an artifact: the fleet-advertised fingerprint
+    /// when discovery has seen it, else a stable hash of the name (a
+    /// pre-fingerprint worker still shards deterministically).
+    fn key_for(&self, artifact: &str) -> u64 {
+        relock(&self.arts)
+            .get(artifact)
+            .copied()
+            .unwrap_or_else(|| fnv1a64(artifact.as_bytes(), FNV_OFFSET))
+    }
+
+    /// One health pass: poll every worker, drive ring weights, and
+    /// (until it succeeds) discover the artifact → fingerprint map
+    /// from any live worker.
+    fn health_pass(&self) {
+        let mut live = 0i64;
+        for (addr, weight) in &self.workers {
+            let up = match http_get_timeout(addr.as_str(), "/healthz", self.health_timeout) {
+                // `serving` and `degraded` answer 200 — a degraded
+                // worker still serves its healthy lanes, so it keeps
+                // its keyspace. `starting`/`draining` answer 503.
+                Ok(resp) => resp.status == 200,
+                Err(_) => false,
+            };
+            let mut ring = relock(&self.ring);
+            let was =
+                ring.members().iter().find(|m| m.name == *addr).map(|m| m.weight).unwrap_or(0);
+            let now = if up { (*weight).max(1) } else { 0 };
+            if was != now {
+                eprintln!(
+                    "router: worker {addr} {} (weight {was} → {now})",
+                    if up { "joined the ring" } else { "left the ring" },
+                );
+            }
+            ring.set(addr, now);
+            live += i64::from(up);
+        }
+        self.tele.workers_live.set(live);
+        self.tele.workers_known.set(self.workers.len() as i64);
+        if live > 0 && relock(&self.arts).is_empty() {
+            self.discover_artifacts();
+        }
+    }
+
+    /// Fill the fingerprint map from the first live worker that
+    /// answers `/v1/artifacts`. The fleet serves one artifact set, so
+    /// one answer is authoritative; workers that predate fingerprints
+    /// fall back to the name hash (consistent fleet-wide too).
+    fn discover_artifacts(&self) {
+        let live: Vec<String> = {
+            let ring = relock(&self.ring);
+            ring.members()
+                .iter()
+                .filter(|m| m.weight > 0)
+                .map(|m| m.name.clone())
+                .collect()
+        };
+        for addr in live {
+            let Ok(resp) = http_get_timeout(addr.as_str(), "/v1/artifacts", self.health_timeout)
+            else {
+                continue;
+            };
+            if resp.status != 200 {
+                continue;
+            }
+            let Ok(infos) = artifacts_from_json(&resp.body) else { continue };
+            let mut arts = relock(&self.arts);
+            for info in infos {
+                let fp = info
+                    .fingerprint
+                    .unwrap_or_else(|| fnv1a64(info.name.as_bytes(), FNV_OFFSET));
+                arts.insert(info.name, fp);
+            }
+            if !arts.is_empty() {
+                return;
+            }
+        }
+    }
+}
+
+/// A cloneable control handle (the CLI's SIGINT watcher uses this).
+#[derive(Clone)]
+pub struct RouterHandle {
+    shared: Arc<RouterShared>,
+}
+
+impl RouterHandle {
+    /// Begin graceful drain (idempotent): new jobs get a retryable
+    /// 503, in-flight forwards finish.
+    pub fn request_shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+    }
+}
+
+/// A bound router. [`Router::run`] serves until drain.
+pub struct Router {
+    listener: TcpListener,
+    shared: Arc<RouterShared>,
+}
+
+impl Router {
+    /// Bind the socket and seed the ring (every worker starts at
+    /// weight 0 until its first health probe answers).
+    pub fn bind(cfg: &RouterConfig) -> Result<Router> {
+        telemetry::arm();
+        ensure!(!cfg.workers.is_empty(), "router needs at least one --worker");
+        ensure!(cfg.replica_walk >= 1, "replica walk must be positive");
+        ensure!(cfg.max_attempts >= 1, "max attempts must be positive");
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("bind {}", cfg.addr))?;
+        listener.set_nonblocking(true).context("set_nonblocking")?;
+        let mut ring = HashRing::new();
+        for (addr, _) in &cfg.workers {
+            ring.set(addr, 0);
+        }
+        let shared = Arc::new(RouterShared {
+            workers: cfg.workers.clone(),
+            ring: Mutex::new(ring),
+            arts: Mutex::new(HashMap::new()),
+            tele: RouterTele::new(),
+            shutdown: AtomicBool::new(false),
+            started: AtomicBool::new(false),
+            seed: AtomicU64::new(0x9e37_79b9_7f4a_7c15),
+            policy: ForwardPolicy {
+                hop_cap: Duration::from_millis(cfg.hop_cap_ms.max(1)),
+                max_attempts: cfg.max_attempts,
+            },
+            replica_walk: cfg.replica_walk,
+            default_deadline: Duration::from_millis(cfg.default_deadline_ms.max(1)),
+            health_interval: Duration::from_millis(cfg.health_interval_ms.max(10)),
+            health_timeout: Duration::from_millis(cfg.health_timeout_ms.max(1)),
+            read_timeout: Duration::from_millis(cfg.read_timeout_ms.max(1)),
+            write_timeout: Duration::from_millis(cfg.write_timeout_ms.max(1)),
+        });
+        Ok(Router { listener, shared })
+    }
+
+    /// The bound address (read the ephemeral port here).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("local_addr")
+    }
+
+    /// Control handle for shutdown from other threads.
+    pub fn handle(&self) -> RouterHandle {
+        RouterHandle { shared: self.shared.clone() }
+    }
+
+    /// Serve until a graceful shutdown completes. The first health
+    /// pass runs *before* the accept loop opens, so a client that
+    /// beats the pollers never sees an all-zero ring on a healthy
+    /// fleet.
+    pub fn run(self) -> Result<()> {
+        let Router { listener, shared } = self;
+        shared.health_pass();
+        let health = {
+            let shared = shared.clone();
+            std::thread::spawn(move || {
+                while !shared.shutdown.load(Ordering::SeqCst) {
+                    std::thread::sleep(shared.health_interval);
+                    shared.health_pass();
+                }
+            })
+        };
+        shared.started.store(true, Ordering::SeqCst);
+        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        loop {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(false).is_err() {
+                        continue;
+                    }
+                    let shared = shared.clone();
+                    conns.push(std::thread::spawn(move || {
+                        let t0 = Instant::now();
+                        if let Err(e) = serve_connection(stream, &shared) {
+                            eprintln!("router: connection error: {e:#}");
+                        }
+                        shared.tele.request_seconds.record(t0.elapsed());
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => {
+                    eprintln!("router: accept error (continuing): {e}");
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            }
+            if conns.len() >= 64 {
+                conns.retain(|h| !h.is_finished());
+            }
+        }
+        // Drain: let in-flight forwards relay their answers.
+        for conn in conns {
+            let _ = conn.join();
+        }
+        let _ = health.join();
+        eprintln!("router: drained");
+        Ok(())
+    }
+}
+
+fn serve_connection(stream: TcpStream, shared: &RouterShared) -> Result<()> {
+    stream.set_read_timeout(Some(shared.read_timeout))?;
+    stream.set_write_timeout(Some(shared.write_timeout))?;
+    let mut reader = BufReader::new(stream.try_clone().context("clone stream")?);
+    let mut out = stream;
+    let req = match read_request(&mut reader) {
+        Ok(r) => r,
+        Err(e) => {
+            let status = read_error_status(&e);
+            let code = match status {
+                408 => ErrorCode::RequestTimeout,
+                413 => ErrorCode::TooLarge,
+                _ => ErrorCode::BadRequest,
+            };
+            let se = ServeError::new(code, format!("{e:#}"));
+            let _ = write_response(&mut out, status, &se.to_json());
+            return Ok(());
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let (status, body) = router_health(shared);
+            write_response(&mut out, status, &body)
+        }
+        ("GET", "/v1/stats") => {
+            let body = aggregate_stats(shared);
+            write_response(&mut out, 200, &body)
+        }
+        ("GET", "/metrics") => {
+            let body = prometheus::render(&registry().snapshot());
+            write_response_typed(&mut out, 200, prometheus::CONTENT_TYPE, &body)
+        }
+        ("GET", "/v1/artifacts") => relay_artifacts(&mut out, shared),
+        ("POST", "/v1/shutdown") => {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            write_response(&mut out, 200, "{\"draining\":true}")
+        }
+        ("POST", "/v1/simulate") => handle_simulate(&mut out, &req.body, shared),
+        ("GET" | "POST", _) => {
+            write_response(&mut out, 404, &error_body("no such endpoint", false))
+        }
+        _ => write_response(&mut out, 405, &error_body("method not allowed", false)),
+    }
+}
+
+/// Router `/healthz`: `starting` before the accept loop, `draining`
+/// after shutdown, `degraded` when some (not all) workers are out of
+/// the ring, `serving` with a full ring — plus `down` (503) when *no*
+/// worker is live, which is the one state a worker can't have.
+fn router_health(shared: &RouterShared) -> (u16, String) {
+    let live = { relock(&shared.ring).live_members() };
+    let known = shared.workers.len();
+    let (status, state) = if shared.shutdown.load(Ordering::SeqCst) {
+        (503, "draining")
+    } else if !shared.started.load(Ordering::SeqCst) {
+        (503, "starting")
+    } else if live == 0 {
+        (503, "down")
+    } else if live < known {
+        (200, "degraded")
+    } else {
+        (200, "serving")
+    };
+    (
+        status,
+        format!(
+            "{{\"ok\":{},\"status\":\"{state}\",\"workers_live\":{live},\"workers_known\":{known}}}",
+            status == 200
+        ),
+    )
+}
+
+/// Aggregate `/v1/stats` across the fleet: monotonic counters sum,
+/// residency gauges sum, and the per-worker snapshots ride along under
+/// `"workers"`. The rollup parses as a plain [`StatsSnapshot`], so
+/// `tao loadgen` pointed at a router measures the fleet unchanged.
+fn aggregate_stats(shared: &RouterShared) -> String {
+    let mut total = StatsSnapshot::default();
+    let mut workers = BTreeMap::new();
+    let mut polled = 0u64;
+    for (addr, _) in &shared.workers {
+        let resp = match http_get_timeout(addr.as_str(), "/v1/stats", shared.health_timeout) {
+            Ok(r) if r.status == 200 => r,
+            _ => {
+                workers.insert(addr.clone(), Json::Null);
+                continue;
+            }
+        };
+        let Ok(s) = StatsSnapshot::from_json(&resp.body) else {
+            workers.insert(addr.clone(), Json::Null);
+            continue;
+        };
+        polled += 1;
+        total.jobs_submitted += s.jobs_submitted;
+        total.jobs_done += s.jobs_done;
+        total.jobs_rejected += s.jobs_rejected;
+        total.queue_depth += s.queue_depth;
+        total.active_jobs += s.active_jobs;
+        total.batches += s.batches;
+        total.packed_windows += s.packed_windows;
+        total.batch_slots += s.batch_slots;
+        total.cache_hits += s.cache_hits;
+        total.cache_misses += s.cache_misses;
+        total.cache_evictions += s.cache_evictions;
+        total.cache_entries += s.cache_entries;
+        total.cache_recovered += s.cache_recovered;
+        total.lane_restarts += s.lane_restarts;
+        let peer_hits = Json::parse(&resp.body)
+            .ok()
+            .and_then(|j| j.get("cache_peer_hits").and_then(Json::as_u64))
+            .unwrap_or(0);
+        workers.insert(
+            addr.clone(),
+            Json::obj([
+                ("jobs_done", Json::of_u64(s.jobs_done)),
+                ("jobs_rejected", Json::of_u64(s.jobs_rejected)),
+                ("cache_hits", Json::of_u64(s.cache_hits)),
+                ("cache_misses", Json::of_u64(s.cache_misses)),
+                ("cache_peer_hits", Json::of_u64(peer_hits)),
+                ("batches", Json::of_u64(s.batches)),
+                ("lane_restarts", Json::of_u64(s.lane_restarts)),
+            ]),
+        );
+    }
+    total.to_json_with(vec![
+        ("workers", Json::Obj(workers)),
+        ("workers_polled", Json::of_u64(polled)),
+    ])
+}
+
+/// Relay `/v1/artifacts` from the first live worker (the fleet serves
+/// one artifact set).
+fn relay_artifacts(out: &mut TcpStream, shared: &RouterShared) -> Result<()> {
+    let live: Vec<String> = {
+        let ring = relock(&shared.ring);
+        ring.members().iter().filter(|m| m.weight > 0).map(|m| m.name.clone()).collect()
+    };
+    for addr in live {
+        if let Ok(resp) = http_get_timeout(addr.as_str(), "/v1/artifacts", shared.health_timeout)
+        {
+            if resp.status == 200 {
+                return write_response(out, 200, &resp.body);
+            }
+        }
+    }
+    let se = ServeError::new(ErrorCode::Draining, "no live workers on the ring");
+    write_response(out, se.code.http_status(), &se.to_json())
+}
+
+fn handle_simulate(out: &mut TcpStream, body: &str, shared: &RouterShared) -> Result<()> {
+    if shared.shutdown.load(Ordering::SeqCst) {
+        let se = ServeError::new(ErrorCode::Draining, "router draining");
+        return write_response(out, se.code.http_status(), &se.to_json());
+    }
+    // Routing needs only the artifact name and deadline; full spec
+    // validation stays on the worker, so router and worker never skew
+    // on what a valid job is.
+    let parsed = Json::parse(body).ok();
+    let artifact = parsed
+        .as_ref()
+        .and_then(|j| j.get("artifact").and_then(Json::as_str))
+        .unwrap_or("");
+    let deadline_ms = parsed
+        .as_ref()
+        .and_then(|j| j.get("deadline_ms").and_then(Json::as_u64))
+        .filter(|&ms| ms > 0)
+        .map(Duration::from_millis)
+        .unwrap_or(shared.default_deadline);
+    let key = shared.key_for(artifact);
+    let replicas: Vec<String> = {
+        let ring = relock(&shared.ring);
+        ring.replicas(key, shared.replica_walk).into_iter().map(str::to_string).collect()
+    };
+    // Per-request decorrelated jitter, deterministic per (key, seq).
+    let seq = shared.seed.fetch_add(1, Ordering::Relaxed);
+    let mut rng = Rng::new(key ^ seq.rotate_left(32));
+    let fwd = forward(
+        &replicas,
+        "/v1/simulate",
+        body,
+        Instant::now() + deadline_ms,
+        &shared.policy,
+        &mut rng,
+    );
+    write_response(out, fwd.status, &fwd.body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peer_map_is_self_free_distinct_and_stable() {
+        let workers: Vec<(String, u32)> = ["127.0.0.1:7001", "127.0.0.1:7002", "127.0.0.1:7003"]
+            .iter()
+            .map(|a| (a.to_string(), 1))
+            .collect();
+        let peers = peer_map(&workers, 2);
+        assert_eq!(peers.len(), 3);
+        for (me, ps) in &peers {
+            assert_eq!(ps.len(), 2, "{me} gets both siblings");
+            assert!(!ps.contains(me), "{me} must not peer with itself");
+            let mut uniq = ps.clone();
+            uniq.dedup();
+            assert_eq!(&uniq, ps);
+        }
+        // Stable: recomputing yields the identical wiring.
+        assert_eq!(peers, peer_map(&workers, 2));
+        // A single worker has nobody to peer with.
+        let solo = peer_map(&[("127.0.0.1:7001".to_string(), 1)], 2);
+        assert!(solo["127.0.0.1:7001"].is_empty());
+    }
+}

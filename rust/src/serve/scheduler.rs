@@ -54,6 +54,7 @@
 //! each path deterministically.
 
 use super::cache::{chain_prefix, hash_chunk, ChunkKey, PredictionCache, PREFIX_SEED};
+use super::forward::PeerCache;
 use super::protocol::{
     resolve_ctx_uarch, ErrorCode, JobOutcome, JobSpec, ServeError, StatsSnapshot,
 };
@@ -69,7 +70,7 @@ use crate::trace::{ChunkBuf, ChunkSource, OwnedChunkSource, CTX_WIDTH};
 use crate::util::fault::{self, Probe};
 use anyhow::{Context, Result};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{
     sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
 };
@@ -378,11 +379,15 @@ impl ActiveJob {
 
     /// Emit the next window into the caller's batch slot, pulling (and
     /// cache-probing) chunks as needed. `Ok(false)` means the stream is
-    /// exhausted.
+    /// exhausted. A local cache miss consults the key's ring peers
+    /// (`peers`) before falling through to model execution; an adopted
+    /// peer result is reclassified as a hit at the single decision site
+    /// so `hits + misses == chunks` stays structural.
     fn next_window(
         &mut self,
         cache: &Mutex<PredictionCache>,
         artifact_fp: u64,
+        peers: Option<&PeerCache>,
         ops_slot: &mut [i32],
         feat_slot: &mut [f32],
         ctx_slot: Option<&mut [f32]>,
@@ -432,10 +437,25 @@ impl ActiveJob {
             let content = hash_chunk(&self.buf);
             let key = ChunkKey { artifact: artifact_fp, prefix: self.prefix, content };
             self.prefix = chain_prefix(self.prefix, content);
-            let hit = fault::relock(cache).get(&key);
+            let mut hit = fault::relock(cache).get(&key);
             // One chunk == one hit or one miss, decided right here:
             // the CI identity hits + misses == chunks is structural.
             tele().chunks.inc();
+            if hit.is_none() {
+                // Local miss: ask the key's ring peers before paying for
+                // model execution. The lookup runs *outside* the cache
+                // lock (it is a network RPC); an adopted accumulator is
+                // re-inserted under the lock and the miss `get` just
+                // counted is reclassified as a peer hit.
+                if let Some(peers) = peers {
+                    if let Some(found) = peers.lookup(&key) {
+                        if found.instructions == n as u64 {
+                            fault::relock(cache).adopt(key, found.clone());
+                            hit = Some(found);
+                        }
+                    }
+                }
+            }
             match hit {
                 Some(delta) if delta.instructions == n as u64 => {
                     // Cache hit: skip the whole chunk. Fast-forward the
@@ -964,11 +984,51 @@ pub fn run_lane(
     counters: Arc<ServeCounters>,
     cfg: LaneConfig,
 ) -> Result<()> {
+    run_lane_ext(art, queue, cache, counters, cfg, LaneLinks::default())
+}
+
+/// Fleet wiring for a lane, all optional — a standalone daemon runs
+/// every lane with [`LaneLinks::default`].
+///
+/// * `peers` — the ring-neighbour cache client: a local prediction-
+///   cache miss consults the key's replicas over `/v1/cache/lookup`
+///   before paying for model execution.
+/// * `down` — the supervisor's per-lane degraded flag. The supervisor
+///   raises it (and bumps `lanes_down`) when the lane dies; the lane
+///   clears it only once its executor and prep stage are actually up
+///   again, so `/healthz` reports `degraded` for the whole backoff
+///   window, not just the instant of the crash.
+#[derive(Default)]
+pub struct LaneLinks {
+    pub peers: Option<Arc<PeerCache>>,
+    pub down: Option<Arc<AtomicBool>>,
+}
+
+/// [`run_lane`] with fleet wiring (peer cache + supervisor down flag).
+pub fn run_lane_ext(
+    art: PooledArtifact,
+    queue: Arc<JobQueue>,
+    cache: Arc<Mutex<PredictionCache>>,
+    counters: Arc<ServeCounters>,
+    cfg: LaneConfig,
+    links: LaneLinks,
+) -> Result<()> {
     let (b, t, f) = (art.meta.batch, art.meta.context, art.meta.feature_dim);
     let kind = art.meta.kind;
     let fp = art.fingerprint;
     let mut exec = Executor::start(&art, &cfg)?;
     let mut prep = PrepStage::start(&art, cfg.prep_depth);
+    // Executor + prep stage are live: if the supervisor marked this
+    // lane degraded, clear it now — not when the respawn was merely
+    // *scheduled* (an `Executor::start` failure above leaves the flag
+    // raised and `?`s back to the supervisor's backoff loop).
+    if let Some(down) = &links.down {
+        if down.swap(false, Ordering::Relaxed) {
+            counters.lanes_down.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+    let peers: Option<&PeerCache> =
+        links.peers.as_deref().filter(|p: &&PeerCache| !p.is_empty());
     let mut active: Vec<ActiveJob> = Vec::new();
     let mut rr = 0usize;
     // Per-artifact lane counters. The registry cells are process-global
@@ -1087,7 +1147,8 @@ pub fn run_lane(
 
         // Stage and dispatch one packed batch (or wait for capacity).
         if let Some(mut bufs) = exec.stage_buffer() {
-            let (valid, routes) = pack(&mut active, &mut rr, &mut bufs, &cache, fp, b, t, f);
+            let (valid, routes) =
+                pack(&mut active, &mut rr, &mut bufs, &cache, fp, peers, b, t, f);
             if valid > 0 {
                 counters.batches.fetch_add(1, Ordering::Relaxed);
                 counters.packed_windows.fetch_add(valid as u64, Ordering::Relaxed);
@@ -1135,6 +1196,7 @@ fn pack(
     bufs: &mut ExecBuffers,
     cache: &Mutex<PredictionCache>,
     fp: u64,
+    peers: Option<&PeerCache>,
     b: usize,
     t: usize,
     f: usize,
@@ -1161,7 +1223,7 @@ fn pack(
                 }
                 ModelKind::Tao => None,
             };
-            match job.next_window(cache, fp, ops_slot, feat_slot, ctx_slot) {
+            match job.next_window(cache, fp, peers, ops_slot, feat_slot, ctx_slot) {
                 Ok(true) => {
                     routes.push(job.id);
                     slot += 1;

@@ -23,14 +23,15 @@
 //! [`ServeConfig::cache_journal`] set, the prediction cache persists
 //! across crashes via the crash-safe journal ([`super::journal`]).
 
-use super::cache::PredictionCache;
+use super::cache::{PredictionCache, ENTRY_BYTES};
+use super::forward::PeerCache;
 use super::http::{read_error_status, read_request, write_response, write_response_typed};
 use super::journal::CacheJournal;
 use super::protocol::{
     error_body, validate_spec, ErrorCode, JobSpec, ServeError, StatsSnapshot,
 };
 use super::queue::{JobQueue, QueuedJob, SubmitError};
-use super::scheduler::{run_lane, LaneConfig, ServeCounters};
+use super::scheduler::{run_lane_ext, LaneConfig, LaneLinks, ServeCounters};
 use crate::runtime::{ArtifactPool, PooledArtifact};
 use crate::telemetry::{
     self, log_enabled, prometheus, registry, Counter, Field, Gauge, Histogram, Level,
@@ -79,6 +80,23 @@ pub struct ServeConfig {
     /// bind, fresh inserts append, drain fsyncs. `None` keeps the
     /// cache memory-only.
     pub cache_journal: Option<std::path::PathBuf>,
+    /// Ring-peer worker addresses (`host:port`). When non-empty, a
+    /// local prediction-cache miss consults these peers over
+    /// `POST /v1/cache/lookup` before paying for model execution — the
+    /// router hands each worker its ring neighbours here.
+    pub peers: Vec<String>,
+    /// Peer cache-lookup timeout, milliseconds. Deliberately tiny: a
+    /// slow peer must cost less than recomputing the chunk.
+    pub peer_timeout_ms: u64,
+    /// Per-artifact cache byte quotas (`name` → bytes; entries =
+    /// `bytes / cache::ENTRY_BYTES`). Artifacts without an explicit
+    /// quota share the capacity proportionally (an equal split of
+    /// `cache_entries`), so one hot tenant cannot evict the fleet.
+    pub cache_quotas: Vec<(String, u64)>,
+    /// Foreign cache journals to warm-load read-only at bind (a dead
+    /// ring predecessor's `--cache-journal` file): entries replay into
+    /// the cache but the files are never appended to or truncated.
+    pub warm_journals: Vec<std::path::PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -96,6 +114,10 @@ impl Default for ServeConfig {
             write_timeout_ms: 30_000,
             default_deadline_ms: 300_000,
             cache_journal: None,
+            peers: Vec::new(),
+            peer_timeout_ms: 100,
+            cache_quotas: Vec::new(),
+            warm_journals: Vec::new(),
         }
     }
 }
@@ -255,6 +277,37 @@ impl Server {
         listener.set_nonblocking(true).context("set_nonblocking")?;
         let queue = Arc::new(JobQueue::new(cfg.queue_depth));
         let cache = Arc::new(Mutex::new(PredictionCache::new(cfg.cache_entries)));
+        if cfg.cache_entries > 0 {
+            // Register every artifact *before* any warm-load so the
+            // per-tenant accounting sees each recovered entry. Explicit
+            // `--cache-quota name=bytes` wins; everyone else gets an
+            // equal split of the capacity (0 bytes = unlimited).
+            let mut c = relock(&cache);
+            let default_quota = cfg.cache_entries / pool.len().max(1);
+            for art in pool.iter() {
+                let quota = match cfg.cache_quotas.iter().find(|(n, _)| *n == art.name) {
+                    Some((_, 0)) => 0,
+                    Some((_, bytes)) => ((bytes / ENTRY_BYTES).max(1)) as usize,
+                    None => default_quota,
+                };
+                c.register_artifact(art.fingerprint, &art.name, quota);
+            }
+        }
+        // Foreign warm journals (a dead ring predecessor's cache) are
+        // replayed read-only: entries fold in, files stay untouched.
+        for path in cfg.warm_journals.iter().filter(|_| cfg.cache_entries > 0) {
+            match CacheJournal::replay(path) {
+                Ok(rec) => {
+                    let n = relock(&cache).warm_load(rec.entries);
+                    eprintln!(
+                        "serve: warm journal {path:?}: adopted {n} chunk entries read-only"
+                    );
+                }
+                Err(e) => {
+                    eprintln!("serve: warm journal {path:?} unreadable, skipped: {e:#}")
+                }
+            }
+        }
         if let Some(path) = cfg.cache_journal.as_deref().filter(|_| cfg.cache_entries > 0) {
             // Persistence is best-effort: an unreadable journal logs
             // and degrades to a memory-only cache; it never stops the
@@ -284,14 +337,21 @@ impl Server {
             admission_wait: Duration::from_millis(cfg.admission_wait_ms),
             prep_depth: cfg.prep_depth,
         };
+        let peers: Option<Arc<PeerCache>> = (!cfg.peers.is_empty()).then(|| {
+            Arc::new(PeerCache::new(
+                cfg.peers.clone(),
+                Duration::from_millis(cfg.peer_timeout_ms.max(1)),
+            ))
+        });
         let mut lanes = Vec::new();
         for art in pool.iter() {
             let art = art.clone();
             let queue = queue.clone();
             let cache = cache.clone();
             let counters = counters.clone();
+            let peers = peers.clone();
             lanes.push(std::thread::spawn(move || {
-                lane_supervisor(art, queue, cache, counters, lane_cfg)
+                lane_supervisor(art, queue, cache, counters, lane_cfg, peers)
             }));
         }
         let shared = Arc::new(Shared {
@@ -424,11 +484,25 @@ fn lane_supervisor(
     cache: Arc<Mutex<PredictionCache>>,
     counters: Arc<ServeCounters>,
     cfg: LaneConfig,
+    peers: Option<Arc<PeerCache>>,
 ) -> Result<()> {
     let mut failures = 0u32;
+    // The degraded flag stays raised from the moment the lane dies
+    // until a respawned lane's executor is actually up again — the lane
+    // itself clears it (see [`LaneLinks`]), so `/healthz` reports
+    // `degraded` through the whole backoff + restart window instead of
+    // flickering back to `serving` when the retry is merely scheduled.
+    let down = Arc::new(AtomicBool::new(false));
     loop {
         let run = catch_unwind(AssertUnwindSafe(|| {
-            run_lane(art.clone(), queue.clone(), cache.clone(), counters.clone(), cfg)
+            run_lane_ext(
+                art.clone(),
+                queue.clone(),
+                cache.clone(),
+                counters.clone(),
+                cfg,
+                LaneLinks { peers: peers.clone(), down: Some(down.clone()) },
+            )
         }));
         let err = match run {
             // Clean exit: the queue closed and drained.
@@ -438,7 +512,9 @@ fn lane_supervisor(
         };
         failures += 1;
         counters.lane_restarts.fetch_add(1, Ordering::Relaxed);
-        counters.lanes_down.fetch_add(1, Ordering::Relaxed);
+        if !down.swap(true, Ordering::Relaxed) {
+            counters.lanes_down.fetch_add(1, Ordering::Relaxed);
+        }
         // The registry cell is keyed by artifact label and outlives the
         // lane thread, so `/v1/stats` per-lane respawn counts survive
         // the respawn they are counting.
@@ -490,7 +566,9 @@ fn lane_supervisor(
                 None => {}
             }
         }
-        counters.lanes_down.fetch_sub(1, Ordering::Relaxed);
+        // NOTE: `lanes_down` is *not* decremented here — the respawned
+        // lane decrements it itself once `Executor::start` succeeds, so
+        // a lane that keeps failing to start stays `degraded`.
         if queue.is_drained() {
             anyhow::bail!("lane {:?} failed during drain: {err}", art.name);
         }
@@ -501,17 +579,32 @@ fn lane_supervisor(
 /// `draining` once shutdown began (503 — stop sending work here),
 /// `degraded` while any lane sits in respawn backoff (200 — still
 /// serving, other lanes unaffected), else `serving` (200).
+///
+/// Pure so the state machine is unit-testable; the router maps these
+/// states to ring membership (`serving`/`degraded` → in the ring,
+/// `starting`/`draining`/unreachable → out).
+pub(crate) fn health_status(
+    draining: bool,
+    started: bool,
+    lanes_down: u64,
+) -> (u16, &'static str) {
+    if draining {
+        (503, "draining")
+    } else if !started {
+        (503, "starting")
+    } else if lanes_down > 0 {
+        (200, "degraded")
+    } else {
+        (200, "serving")
+    }
+}
+
 fn health(shared: &Shared) -> (u16, String) {
-    let (status, state) =
-        if shared.shutdown.load(Ordering::SeqCst) || shared.queue.is_closed() {
-            (503, "draining")
-        } else if !shared.started.load(Ordering::SeqCst) {
-            (503, "starting")
-        } else if shared.counters.lanes_down.load(Ordering::Relaxed) > 0 {
-            (200, "degraded")
-        } else {
-            (200, "serving")
-        };
+    let (status, state) = health_status(
+        shared.shutdown.load(Ordering::SeqCst) || shared.queue.is_closed(),
+        shared.started.load(Ordering::SeqCst),
+        shared.counters.lanes_down.load(Ordering::Relaxed),
+    );
     (status, format!("{{\"ok\":{},\"status\":\"{state}\"}}", status == 200))
 }
 
@@ -540,6 +633,52 @@ fn lanes_json(pool: &ArtifactPool) -> Json {
     Json::Obj(lanes)
 }
 
+/// Per-artifact cache tenancy for `/v1/stats` (`"cache_artifacts"`).
+fn cache_artifacts_json(arts: &[super::cache::ArtifactCacheStats]) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    for a in arts {
+        m.insert(
+            a.name.clone(),
+            Json::obj([
+                ("quota_entries", Json::of_u64(a.quota)),
+                ("entries", Json::of_u64(a.entries)),
+                ("hits", Json::of_u64(a.hits)),
+                ("misses", Json::of_u64(a.misses)),
+                ("insertions", Json::of_u64(a.insertions)),
+                ("evictions", Json::of_u64(a.evictions)),
+            ]),
+        );
+    }
+    Json::Obj(m)
+}
+
+/// `POST /v1/cache/lookup` — the ring-peer warm-cache protocol. A
+/// *read-only* probe: [`PredictionCache::peek`] touches no counters
+/// and no recency state, so a remote fleet's curiosity cannot perturb
+/// this daemon's `hits + misses == chunks` identity or its LRU order.
+/// The payload is the accumulator's journal encoding — the same
+/// bit-exact frame the crash journal uses.
+fn handle_cache_lookup(out: &mut TcpStream, body: &str, shared: &Shared) -> Result<()> {
+    let key = match super::protocol::cache_lookup_from_json(body) {
+        Ok(k) => k,
+        Err(e) => {
+            let se = ServeError::new(ErrorCode::BadRequest, format!("{e:#}"));
+            count_error(se.code);
+            return write_response(out, se.code.http_status(), &se.to_json());
+        }
+    };
+    let payload = relock(&shared.cache).peek(&key).map(|accum| {
+        let mut bytes = Vec::with_capacity(crate::coordinator::engine::PredAccum::JOURNAL_BYTES);
+        accum.encode_journal(&mut bytes);
+        bytes
+    });
+    let body = match payload {
+        Some(bytes) => super::protocol::cache_found_json(&bytes),
+        None => super::protocol::cache_miss_json(),
+    };
+    write_response(out, 200, &body)
+}
+
 /// Render the Prometheus exposition. Counters owned by other
 /// subsystems ([`ServeCounters`], the cache, `util::fault`) are
 /// mirrored into their registry cells here, at scrape time, so one
@@ -550,7 +689,10 @@ fn metrics_body(shared: &Shared) -> String {
     shared.tele.jobs_done.mirror(c.jobs_done.load(Ordering::Relaxed));
     shared.tele.jobs_active.set(c.active_jobs.load(Ordering::Relaxed) as i64);
     shared.tele.lanes_down.set(c.lanes_down.load(Ordering::Relaxed) as i64);
-    let cs = relock(&shared.cache).stats();
+    let (cs, arts) = {
+        let c = relock(&shared.cache);
+        (c.stats(), c.artifact_stats())
+    };
     reg.counter("tao_cache_insertions_total", "Prediction-cache entries inserted.", &[])
         .mirror(cs.insertions);
     reg.counter(
@@ -561,6 +703,45 @@ fn metrics_body(shared: &Shared) -> String {
     .mirror(cs.evictions);
     reg.gauge("tao_cache_entries", "Prediction-cache resident entries.", &[])
         .set(cs.entries as i64);
+    reg.counter(
+        "tao_cache_peer_hits_total",
+        "Chunk results adopted from ring-peer caches instead of recomputed.",
+        &[],
+    )
+    .mirror(cs.peer_hits);
+    for a in &arts {
+        let labels: [(&str, &str); 1] = [("artifact", a.name.as_str())];
+        reg.counter(
+            "tao_cache_artifact_hits_total",
+            "Prediction-cache hits, by artifact tenant.",
+            &labels,
+        )
+        .mirror(a.hits);
+        reg.counter(
+            "tao_cache_artifact_misses_total",
+            "Prediction-cache misses, by artifact tenant.",
+            &labels,
+        )
+        .mirror(a.misses);
+        reg.counter(
+            "tao_cache_artifact_evictions_total",
+            "Prediction-cache evictions charged to an artifact's quota.",
+            &labels,
+        )
+        .mirror(a.evictions);
+        reg.gauge(
+            "tao_cache_artifact_entries",
+            "Prediction-cache resident entries, by artifact tenant.",
+            &labels,
+        )
+        .set(a.entries as i64);
+        reg.gauge(
+            "tao_cache_artifact_quota_entries",
+            "Per-artifact cache entry quota (0 = unlimited).",
+            &labels,
+        )
+        .set(a.quota as i64);
+    }
     for p in fault::PROBES {
         let st = fault::stats(p);
         reg.counter(
@@ -622,7 +803,16 @@ fn serve_connection_timed(stream: TcpStream, shared: &Shared) -> Result<()> {
         }
         ("GET", "/v1/stats") => {
             let stats = shared.counters.snapshot(&shared.queue, &shared.cache);
-            write_response(&mut out, 200, &stats.to_json_with_lanes(lanes_json(&shared.pool)))
+            let (peer_hits, arts) = {
+                let c = relock(&shared.cache);
+                (c.stats().peer_hits, c.artifact_stats())
+            };
+            let body = stats.to_json_with(vec![
+                ("lanes", lanes_json(&shared.pool)),
+                ("cache_peer_hits", Json::of_u64(peer_hits)),
+                ("cache_artifacts", cache_artifacts_json(&arts)),
+            ]);
+            write_response(&mut out, 200, &body)
         }
         ("GET", "/metrics") => {
             let body = metrics_body(shared);
@@ -636,6 +826,7 @@ fn serve_connection_timed(stream: TcpStream, shared: &Shared) -> Result<()> {
             write_response(&mut out, 200, "{\"draining\":true}")
         }
         ("POST", "/v1/simulate") => handle_simulate(&mut out, &req.body, shared),
+        ("POST", "/v1/cache/lookup") => handle_cache_lookup(&mut out, &req.body, shared),
         ("GET" | "POST", _) => {
             write_response(&mut out, 404, &error_body("no such endpoint", false))
         }
@@ -723,5 +914,68 @@ fn handle_simulate(out: &mut TcpStream, body: &str, shared: &Shared) -> Result<(
             count_error(se.code);
             write_response(out, se.code.http_status(), &se.to_json())
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::write_surrogate_artifact;
+
+    /// The `/healthz` state machine, exhaustively: `draining` outranks
+    /// everything (the router must pull a draining worker from the
+    /// ring no matter what its lanes look like), `starting` outranks
+    /// lane health, and only lane backoff separates `degraded` from
+    /// `serving`.
+    #[test]
+    fn health_status_orders_states() {
+        assert_eq!(health_status(false, false, 0), (503, "starting"));
+        assert_eq!(health_status(false, false, 2), (503, "starting"));
+        assert_eq!(health_status(false, true, 0), (200, "serving"));
+        assert_eq!(health_status(false, true, 1), (200, "degraded"));
+        assert_eq!(health_status(false, true, 7), (200, "degraded"));
+        assert_eq!(health_status(true, true, 0), (503, "draining"));
+        assert_eq!(health_status(true, true, 3), (503, "draining"));
+        assert_eq!(health_status(true, false, 0), (503, "draining"));
+    }
+
+    /// The degraded-flag protocol between supervisor and lane: the
+    /// supervisor raises `down` (and bumps `lanes_down`) when a lane
+    /// dies, and the *respawned lane itself* clears both — only once
+    /// its executor and prep stage are actually up. So a successful
+    /// lane startup drives `lanes_down` 1 → 0, and `/healthz` reports
+    /// `degraded` for the entire backoff window in between.
+    #[test]
+    fn lane_startup_clears_the_degraded_flag() {
+        let _gate = fault::exclusive();
+        fault::disarm_all();
+        let dir = std::env::temp_dir().join(format!("tao-server-{}", std::process::id()));
+        let hlo = write_surrogate_artifact(&dir, "srv_flag", 8, 4).unwrap();
+        let art = ArtifactPool::load(&[hlo]).unwrap().get("srv_flag").unwrap().clone();
+        let queue = Arc::new(JobQueue::new(4));
+        queue.close();
+        let counters = Arc::new(ServeCounters::default());
+        let cache = Arc::new(Mutex::new(PredictionCache::new(0)));
+        // Simulate the supervisor's crash bookkeeping.
+        let down = Arc::new(AtomicBool::new(true));
+        counters.lanes_down.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(health_status(false, true, 1).1, "degraded");
+        run_lane_ext(
+            art,
+            queue,
+            cache,
+            counters.clone(),
+            LaneConfig {
+                max_active: 4,
+                pipeline: false,
+                admission_wait: Duration::ZERO,
+                prep_depth: 0,
+            },
+            LaneLinks { peers: None, down: Some(down.clone()) },
+        )
+        .unwrap();
+        assert!(!down.load(Ordering::Relaxed), "lane startup clears its down flag");
+        assert_eq!(counters.lanes_down.load(Ordering::Relaxed), 0);
+        assert_eq!(health_status(false, true, 0).1, "serving");
     }
 }

@@ -137,10 +137,11 @@ pub struct GateOutcome {
     pub compared: usize,
     /// Cases below tolerance.
     pub regressions: Vec<Finding>,
-    /// The report's `pipeline_*` and `sampled_*` metrics (stage/execute
-    /// speedups, occupancy counters, phase-sampling speedup and CPI
-    /// error vs its declared bound), surfaced informationally so both
-    /// trajectories are visible in every gate run.
+    /// The report's `pipeline_*`, `sampled_*`, `telemetry_*` and
+    /// `router_*` metrics (stage/execute speedups, occupancy counters,
+    /// phase-sampling speedup and CPI error, router-tier scale-up),
+    /// surfaced informationally so every trajectory is visible in each
+    /// gate run.
     pub pipeline_metrics: Vec<(String, f64)>,
 }
 
@@ -235,7 +236,10 @@ pub fn check(current: &Path, baselines_dir: &Path, cfg: &GateConfig) -> Result<G
         .metrics
         .iter()
         .filter(|(k, _)| {
-            k.starts_with("pipeline_") || k.starts_with("sampled_") || k.starts_with("telemetry_")
+            k.starts_with("pipeline_")
+                || k.starts_with("sampled_")
+                || k.starts_with("telemetry_")
+                || k.starts_with("router_")
         })
         .cloned()
         .collect();
@@ -391,14 +395,15 @@ mod tests {
         r.metric("pipeline_speedup_workers2", 1.25);
         r.metric("pipeline_exec_busy_frac", 0.9);
         r.metric("sampled_speedup", 5.0);
+        r.metric("router_scaleup_2w", 1.9);
         r.metric("smoke", 1.0);
         let current = root.join(bench);
         std::fs::write(&current, r.to_json()).unwrap();
         let o = check(&current, &baselines, &GateConfig::default()).unwrap();
         assert_eq!(
             o.pipeline_metrics.len(),
-            3,
-            "only pipeline_*/sampled_* metrics surface"
+            4,
+            "only pipeline_*/sampled_*/telemetry_*/router_* metrics surface"
         );
         assert!(o
             .pipeline_metrics
@@ -408,6 +413,10 @@ mod tests {
             .pipeline_metrics
             .iter()
             .any(|(k, v)| k == "sampled_speedup" && (*v - 5.0).abs() < 1e-9));
+        assert!(o
+            .pipeline_metrics
+            .iter()
+            .any(|(k, v)| k == "router_scaleup_2w" && (*v - 1.9).abs() < 1e-9));
     }
 
     #[test]

@@ -11,7 +11,7 @@ pub mod builder;
 pub mod scenarios;
 
 pub use builder::{Label, ProgramBuilder};
-pub use scenarios::{mixed_scenarios, ScenarioArtifact, ScenarioJob};
+pub use scenarios::{mixed_scenarios, mixed_tenant_scenarios, ScenarioArtifact, ScenarioJob};
 
 use crate::isa::Program;
 

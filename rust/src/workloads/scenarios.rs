@@ -76,6 +76,49 @@ pub fn mixed_scenarios(
         .collect()
 }
 
+/// Build a **tenant-skewed** mix for multi-tenant cache experiments:
+/// three of every four jobs hammer the `hot` artifact (a design sweep
+/// monopolizing the fleet), the rest round-robin across the remaining
+/// tenants. Per-artifact cache quotas exist exactly so the hot
+/// tenant's churn cannot evict the minority tenants' working sets —
+/// this mix is the workload that demonstrates it, and the router bench
+/// uses it so one shard sees realistic tenant imbalance.
+///
+/// Deterministic in `seed_base`, disjoint from [`mixed_scenarios`]
+/// seeds at the same base (offset by `1 << 20`).
+pub fn mixed_tenant_scenarios(
+    artifacts: &[ScenarioArtifact],
+    jobs: usize,
+    base_insts: u64,
+    seed_base: u64,
+    hot: usize,
+) -> Vec<ScenarioJob> {
+    assert!(!artifacts.is_empty(), "scenario mix needs at least one artifact");
+    assert!(hot < artifacts.len(), "hot tenant index out of range");
+    assert!(base_insts >= 2, "scenario traces must be non-trivial");
+    let suite = super::suite();
+    let sizes = [base_insts, base_insts / 2 + 1, base_insts + base_insts / 2 + 3];
+    let cold: Vec<usize> = (0..artifacts.len()).filter(|&i| i != hot).collect();
+    (0..jobs)
+        .map(|i| {
+            let art = if i % 4 != 3 || cold.is_empty() {
+                &artifacts[hot]
+            } else {
+                &artifacts[cold[(i / 4) % cold.len()]]
+            };
+            ScenarioJob {
+                bench: suite[i % suite.len()].name.to_string(),
+                insts: sizes[i % sizes.len()],
+                seed: seed_base + (1 << 20) + i as u64,
+                artifact: art.name.clone(),
+                ctx_uarch: art
+                    .simnet
+                    .then(|| CTX_DESIGNS[i % CTX_DESIGNS.len()].to_string()),
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,6 +162,28 @@ mod tests {
             jobs.iter().filter_map(|j| j.ctx_uarch.clone()).collect();
         assert_eq!(designs.len(), CTX_DESIGNS.len());
         assert!(designs.contains("design:12345"));
+    }
+
+    #[test]
+    fn tenant_mix_skews_hot_and_keeps_cold_tenants_alive() {
+        let a = mixed_tenant_scenarios(&arts(), 24, 150, 1000, 0);
+        assert_eq!(a, mixed_tenant_scenarios(&arts(), 24, 150, 1000, 0));
+        assert_eq!(a.len(), 24);
+        let hot = a.iter().filter(|j| j.artifact == "tao_x").count();
+        assert_eq!(hot, 18, "3 of 4 jobs go to the hot tenant");
+        // Both cold tenants still appear (the quota satellite needs
+        // minority working sets to protect).
+        assert!(a.iter().any(|j| j.artifact == "tao_y"));
+        assert!(a.iter().any(|j| j.artifact == "simnet_x"));
+        // Seeds are disjoint from mixed_scenarios at the same base.
+        let plain = mixed_scenarios(&arts(), 24, 150, 1000);
+        for j in &a {
+            assert!(plain.iter().all(|p| p.seed != j.seed));
+        }
+        // A single-tenant fleet degenerates gracefully.
+        let solo = vec![ScenarioArtifact { name: "only".into(), simnet: false }];
+        let b = mixed_tenant_scenarios(&solo, 8, 100, 0, 0);
+        assert!(b.iter().all(|j| j.artifact == "only"));
     }
 
     #[test]

@@ -1,0 +1,572 @@
+//! Router-tier integration tests: a consistent-hash router in front of
+//! real workers (in-process `Server`s, or `tao serve` child processes
+//! when a test needs to `kill -9` one), exercising the sharding
+//! contract end to end:
+//!
+//! * jobs routed through the router are bit-identical to the offline
+//!   engine, and land exactly where the hash ring predicts;
+//! * `kill -9` on a worker mid-burst loses zero jobs — forwards fail
+//!   over along the ring and the successor absorbs the keyspace;
+//! * a local cache miss is served from the ring sibling's cache over
+//!   `/v1/cache/lookup` (fleet-warm cache), bit-identically;
+//! * a dead worker's cache journal warm-loads into its successor.
+//!
+//! Fault probes and the telemetry registry are process-global, so
+//! every test holds `fault::exclusive()` like the serve suite.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use tao_sim::runtime::ArtifactPool;
+use tao_sim::serve::cli::write_surrogate_set;
+use tao_sim::serve::http::{http_get, http_post};
+use tao_sim::serve::loadgen::{
+    artifact_key, assert_identical, offline_reference, predict_balance,
+};
+use tao_sim::serve::protocol::{artifacts_from_json, JobOutcome, JobSpec, ServeError};
+use tao_sim::serve::ring::Member;
+use tao_sim::serve::{HashRing, Router, RouterConfig, ServeConfig, Server, StatsSnapshot};
+use tao_sim::telemetry::prometheus::{parse as parse_prom, sample_value};
+use tao_sim::util::fault;
+use tao_sim::util::json::Json;
+use tao_sim::workloads::{mixed_scenarios, mixed_tenant_scenarios, ScenarioArtifact};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("tao-router-test-{}-{tag}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn worker_config() -> ServeConfig {
+    ServeConfig {
+        cache_entries: 512,
+        admission_wait_ms: 100,
+        ..ServeConfig::default()
+    }
+}
+
+fn router_config(workers: &[String]) -> RouterConfig {
+    RouterConfig {
+        workers: workers.iter().map(|a| (a.clone(), 1)).collect(),
+        health_interval_ms: 50,
+        ..RouterConfig::default()
+    }
+}
+
+fn to_spec(j: &tao_sim::workloads::ScenarioJob, chunk: usize) -> JobSpec {
+    JobSpec {
+        bench: j.bench.clone(),
+        insts: j.insts,
+        seed: j.seed,
+        artifact: j.artifact.clone(),
+        chunk,
+        ctx_uarch: j.ctx_uarch.clone(),
+        deadline_ms: None,
+        trace: None,
+        plan: None,
+        trace_id: None,
+    }
+}
+
+/// Wait until the router's `/healthz` reports exactly `want` workers
+/// live (the fleet is in the ring; measurements start failover-free).
+fn wait_live(router_addr: &str, want: u64) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if let Ok(resp) = http_get(router_addr, "/healthz") {
+            if let Ok(j) = Json::parse(&resp.body) {
+                if j.get("workers_live").and_then(Json::as_u64) == Some(want) {
+                    return;
+                }
+            }
+        }
+        assert!(
+            Instant::now() < deadline,
+            "router at {router_addr} never saw {want} live workers"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Submit through the router, resubmitting on typed retryable answers
+/// (what a well-behaved client does while the ring heals).
+fn submit_retry(addr: &str, spec: &JobSpec) -> JobOutcome {
+    let body = spec.to_json();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let resp = http_post(addr, "/v1/simulate", &body).unwrap();
+        if resp.status == 200 {
+            return JobOutcome::from_json(&resp.body).unwrap();
+        }
+        let err = ServeError::from_body(resp.status, &resp.body);
+        assert!(err.code.retryable(), "terminal failure via router: {err}");
+        assert!(Instant::now() < deadline, "retries exhausted: {err}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn worker_stats(addr: &str) -> StatsSnapshot {
+    let resp = http_get(addr, "/v1/stats").unwrap();
+    assert_eq!(resp.status, 200);
+    StatsSnapshot::from_json(&resp.body).unwrap()
+}
+
+/// The tentpole contract: a three-worker fleet behind the router. Every
+/// job routed through the router is bit-identical to the offline
+/// engine, the per-worker distribution equals the consistent-hash
+/// prediction exactly, and the router's aggregated `/v1/stats` and
+/// `/metrics` reconcile with the fleet.
+#[test]
+fn jobs_through_router_match_offline_and_follow_the_ring() {
+    let _gate = fault::exclusive();
+    fault::disarm_all();
+    let dir = temp_dir("ring-routing");
+    let models = write_surrogate_set(&dir).unwrap();
+
+    let mut worker_addrs = Vec::new();
+    let mut worker_threads = Vec::new();
+    for _ in 0..3 {
+        let pool = ArtifactPool::load(&models).unwrap();
+        let server = Server::bind(pool, &worker_config()).unwrap();
+        worker_addrs.push(server.local_addr().unwrap().to_string());
+        worker_threads.push(std::thread::spawn(move || server.run()));
+    }
+    let router = Router::bind(&router_config(&worker_addrs)).unwrap();
+    let router_addr = router.local_addr().unwrap().to_string();
+    let router_thread = std::thread::spawn(move || router.run());
+    wait_live(&router_addr, 3);
+
+    // Routing keys exactly as the router derives them: fingerprints
+    // from the fleet's artifact listing.
+    let arts_body = http_get(&router_addr, "/v1/artifacts").unwrap();
+    assert_eq!(arts_body.status, 200, "router must relay /v1/artifacts");
+    let infos = artifacts_from_json(&arts_body.body).unwrap();
+    assert_eq!(infos.len(), 3);
+    let keys: std::collections::HashMap<String, u64> = infos
+        .iter()
+        .map(|a| (a.name.clone(), artifact_key(&a.name, a.fingerprint)))
+        .collect();
+
+    let arts = vec![
+        ScenarioArtifact { name: "serve_tao_a".into(), simnet: false },
+        ScenarioArtifact { name: "serve_tao_b".into(), simnet: false },
+        ScenarioArtifact { name: "serve_simnet_a".into(), simnet: true },
+    ];
+    let specs: Vec<JobSpec> =
+        mixed_scenarios(&arts, 12, 150, 7).iter().map(|j| to_spec(j, 48)).collect();
+
+    let before: Vec<StatsSnapshot> = worker_addrs.iter().map(|a| worker_stats(a)).collect();
+    let outs: Vec<JobOutcome> = std::thread::scope(|scope| {
+        let handles: Vec<_> = specs
+            .iter()
+            .map(|spec| {
+                let addr = router_addr.clone();
+                scope.spawn(move || submit_retry(&addr, spec))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (spec, out) in specs.iter().zip(&outs) {
+        let offline = offline_reference(spec, &dir).unwrap();
+        assert_identical(&out.metrics, &offline, &format!("routed {spec:?}")).unwrap();
+    }
+
+    // Placement: measured per-worker deltas equal the hash prediction.
+    let expected = predict_balance(&worker_addrs, &keys, specs.iter());
+    for (addr, b) in worker_addrs.iter().zip(&before) {
+        let served = worker_stats(addr).delta_from(b).jobs_done;
+        assert_eq!(
+            served, expected[addr],
+            "worker {addr} served {served}, ring predicts {}",
+            expected[addr]
+        );
+    }
+    // One artifact's traffic never splits across workers.
+    for art in &arts {
+        let ring = HashRing::from_members(
+            worker_addrs.iter().map(|a| Member { name: a.clone(), weight: 1 }),
+        );
+        assert!(ring.primary(keys[&art.name]).is_some());
+    }
+
+    // The router's aggregate stats cover the whole fleet.
+    let resp = http_get(&router_addr, "/v1/stats").unwrap();
+    assert_eq!(resp.status, 200);
+    let agg = StatsSnapshot::from_json(&resp.body).unwrap();
+    assert_eq!(agg.jobs_done, specs.len() as u64);
+    let j = Json::parse(&resp.body).unwrap();
+    assert_eq!(j.get("workers_polled").and_then(Json::as_u64), Some(3));
+
+    // Router metrics: forwards counted per worker, no failovers on a
+    // healthy fleet.
+    let m = http_get(&router_addr, "/metrics").unwrap();
+    assert_eq!(m.status, 200);
+    let samples = parse_prom(&m.body).unwrap();
+    let forwards = sample_value(&samples, "tao_router_forwards_total", &[]).unwrap_or(0.0);
+    assert!(forwards >= specs.len() as f64, "forwards={forwards}");
+    assert_eq!(
+        sample_value(&samples, "tao_router_workers_live", &[]),
+        Some(3.0)
+    );
+
+    assert_eq!(http_post(&router_addr, "/v1/shutdown", "").unwrap().status, 200);
+    router_thread.join().unwrap().unwrap();
+    for addr in &worker_addrs {
+        assert_eq!(http_post(addr, "/v1/shutdown", "").unwrap().status, 200);
+    }
+    for t in worker_threads {
+        t.join().unwrap().unwrap();
+    }
+}
+
+/// The failover contract: `kill -9` one worker while a tenant-skewed
+/// burst is in flight. Every job must end 200 (after typed retries at
+/// worst), bit-identical to the offline engine; the dead worker's keys
+/// land on its ring successor; the router counts the failovers.
+#[test]
+fn kill_minus_nine_mid_burst_loses_zero_jobs() {
+    let _gate = fault::exclusive();
+    fault::disarm_all();
+    let dir = temp_dir("failover");
+    let models = write_surrogate_set(&dir).unwrap();
+    let exe = env!("CARGO_BIN_EXE_tao");
+
+    // Workers as real processes so SIGKILL is a real crash.
+    let mut children = Vec::new();
+    let mut worker_addrs = Vec::new();
+    for i in 0..3 {
+        let pf = dir.join(format!("worker-{i}.port"));
+        let _ = std::fs::remove_file(&pf);
+        let mut cmd = std::process::Command::new(exe);
+        cmd.arg("serve");
+        for m in &models {
+            cmd.arg("--model").arg(m);
+        }
+        cmd.arg("--port")
+            .arg("0")
+            .arg("--port-file")
+            .arg(&pf)
+            .arg("--cache-entries")
+            .arg("256")
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::null());
+        let child = cmd.spawn().unwrap();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let addr = loop {
+            if let Ok(s) = std::fs::read_to_string(&pf) {
+                if !s.trim().is_empty() {
+                    break s.trim().to_string();
+                }
+            }
+            assert!(Instant::now() < deadline, "worker {i} never wrote its port file");
+            std::thread::sleep(Duration::from_millis(20));
+        };
+        children.push(child);
+        worker_addrs.push(addr);
+    }
+
+    let router = Router::bind(&router_config(&worker_addrs)).unwrap();
+    let router_addr = router.local_addr().unwrap().to_string();
+    let handle = router.handle();
+    let router_thread = std::thread::spawn(move || router.run());
+    wait_live(&router_addr, 3);
+
+    // Hot tenant = serve_tao_a: ~3/4 of the burst keys to one worker,
+    // so killing that worker guarantees mid-burst failovers.
+    let infos = {
+        let resp = http_get(&router_addr, "/v1/artifacts").unwrap();
+        artifacts_from_json(&resp.body).unwrap()
+    };
+    let hot_key = infos
+        .iter()
+        .find(|a| a.name == "serve_tao_a")
+        .map(|a| artifact_key(&a.name, a.fingerprint))
+        .unwrap();
+    let ring = HashRing::from_members(
+        worker_addrs.iter().map(|a| Member { name: a.clone(), weight: 1 }),
+    );
+    let walk = ring.replicas(hot_key, 2);
+    let victim_addr = walk[0].to_string();
+    let successor_addr = walk[1].to_string();
+    let victim_idx = worker_addrs.iter().position(|a| *a == victim_addr).unwrap();
+
+    let arts = vec![
+        ScenarioArtifact { name: "serve_tao_a".into(), simnet: false },
+        ScenarioArtifact { name: "serve_tao_b".into(), simnet: false },
+        ScenarioArtifact { name: "serve_simnet_a".into(), simnet: true },
+    ];
+    let specs: Vec<JobSpec> = mixed_tenant_scenarios(&arts, 24, 30_000, 7, 0)
+        .iter()
+        .map(|j| to_spec(j, 1_024))
+        .collect();
+
+    let done = AtomicUsize::new(0);
+    let cursor = AtomicUsize::new(0);
+    let outs: Vec<JobOutcome> = std::thread::scope(|scope| {
+        let results: std::sync::Mutex<Vec<Option<JobOutcome>>> =
+            std::sync::Mutex::new(vec![None; specs.len()]);
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let (addr, specs, results, cursor, done) =
+                    (&router_addr, &specs, &results, &cursor, &done);
+                scope.spawn(move || loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= specs.len() {
+                        break;
+                    }
+                    let out = submit_retry(addr, &specs[i]);
+                    results.lock().unwrap()[i] = Some(out);
+                    done.fetch_add(1, Ordering::Relaxed);
+                })
+            })
+            .collect();
+        // Mid-burst: once a few jobs have completed (and more are in
+        // flight), SIGKILL the hot artifact's primary.
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while done.load(Ordering::Relaxed) < 4 {
+            assert!(Instant::now() < deadline, "burst never got going");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        children[victim_idx].kill().unwrap();
+        let _ = children[victim_idx].wait();
+        for h in handles {
+            h.join().unwrap();
+        }
+        results.into_inner().unwrap().into_iter().map(Option::unwrap).collect()
+    });
+
+    // Zero lost jobs, every result still exact.
+    assert_eq!(outs.len(), specs.len());
+    for (spec, out) in specs.iter().zip(&outs) {
+        let offline = offline_reference(spec, &dir).unwrap();
+        assert_identical(&out.metrics, &offline, &format!("failover {spec:?}")).unwrap();
+    }
+
+    // The keyspace moved: the ring successor served hot-tenant jobs
+    // after the kill (its all-time count exceeds what it could have
+    // served as a non-primary of the hot artifact alone).
+    let successor_jobs = worker_stats(&successor_addr).jobs_done;
+    assert!(successor_jobs > 0, "successor {successor_addr} served nothing");
+    // The dead worker is out of the ring; the fleet reports degraded.
+    wait_live(&router_addr, 2);
+    let health = http_get(&router_addr, "/healthz").unwrap();
+    assert_eq!(health.status, 200, "two live workers must still serve");
+    assert!(health.body.contains("degraded"), "healthz: {}", health.body);
+
+    // The router observed the crash: failovers (typed or transport)
+    // were counted against the dead worker.
+    let m = http_get(&router_addr, "/metrics").unwrap();
+    let samples = parse_prom(&m.body).unwrap();
+    let failovers = sample_value(&samples, "tao_router_failovers_total", &[]).unwrap_or(0.0);
+    assert!(failovers > 0.0, "no failovers recorded after SIGKILL");
+
+    handle.request_shutdown();
+    router_thread.join().unwrap().unwrap();
+    for mut c in children {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+}
+
+/// Fleet-warm cache: worker B's local miss is answered from ring
+/// sibling A's cache over `/v1/cache/lookup` — B executes zero model
+/// batches and its result is bit-identical.
+#[test]
+fn local_miss_is_served_from_the_ring_siblings_cache() {
+    let _gate = fault::exclusive();
+    fault::disarm_all();
+    let dir = temp_dir("peer-cache");
+    let hlo = tao_sim::runtime::write_surrogate_artifact(&dir, "pc", 8, 4).unwrap();
+
+    let pool_a = ArtifactPool::load(std::slice::from_ref(&hlo)).unwrap();
+    let server_a = Server::bind(pool_a, &worker_config()).unwrap();
+    let addr_a = server_a.local_addr().unwrap().to_string();
+    let thread_a = std::thread::spawn(move || server_a.run());
+
+    let pool_b = ArtifactPool::load(std::slice::from_ref(&hlo)).unwrap();
+    let cfg_b = ServeConfig {
+        peers: vec![addr_a.clone()],
+        peer_timeout_ms: 1_000,
+        ..worker_config()
+    };
+    let server_b = Server::bind(pool_b, &cfg_b).unwrap();
+    let addr_b = server_b.local_addr().unwrap().to_string();
+    let thread_b = std::thread::spawn(move || server_b.run());
+
+    let spec = JobSpec {
+        bench: "mcf".into(),
+        insts: 10_000,
+        seed: 3,
+        artifact: "pc".into(),
+        chunk: 512,
+        ctx_uarch: None,
+        deadline_ms: None,
+        trace: None,
+        plan: None,
+        trace_id: None,
+    };
+    let chunks = spec.insts.div_ceil(spec.chunk as u64);
+
+    // Cold on A: populates A's cache the normal way.
+    let out_a = submit_retry(&addr_a, &spec);
+    assert!(out_a.windows > 0, "cold run must execute");
+    assert_eq!(out_a.cache_hits, 0);
+
+    // Same job on B: every chunk misses locally, hits A's cache over
+    // the wire, and skips execution entirely.
+    let out_b = submit_retry(&addr_b, &spec);
+    assert_eq!(out_b.cache_hits, chunks, "peer-warmed chunks must count as hits");
+    assert_eq!(out_b.windows, 0, "peer-warmed job must not execute");
+    assert_identical(&out_b.metrics, &out_a.metrics, "peer-cache result").unwrap();
+    let offline = offline_reference(&spec, &dir).unwrap();
+    assert_identical(&out_b.metrics, &offline, "peer-cache vs offline").unwrap();
+
+    // B's stats attribute the warmth to the peer tier.
+    let raw = http_get(&addr_b, "/v1/stats").unwrap().body;
+    let j = Json::parse(&raw).unwrap();
+    assert_eq!(
+        j.get("cache_peer_hits").and_then(Json::as_u64),
+        Some(chunks),
+        "stats: {raw}"
+    );
+    // A served the lookups without counting them as its own traffic.
+    let stats_a = worker_stats(&addr_a);
+    assert_eq!(stats_a.jobs_done, 1, "peer lookups must not count as jobs on A");
+
+    for addr in [&addr_a, &addr_b] {
+        assert_eq!(http_post(addr, "/v1/shutdown", "").unwrap().status, 200);
+    }
+    thread_a.join().unwrap().unwrap();
+    thread_b.join().unwrap().unwrap();
+}
+
+/// A dead worker's `--cache-journal` file warm-loads read-only into
+/// its ring successor: the successor serves the dead worker's keyspace
+/// hot from the first request, and the journal file is not modified.
+#[test]
+fn dead_workers_journal_warm_loads_into_successor() {
+    let _gate = fault::exclusive();
+    fault::disarm_all();
+    let dir = temp_dir("warm-journal");
+    let hlo = tao_sim::runtime::write_surrogate_artifact(&dir, "wj", 8, 4).unwrap();
+    let journal = dir.join("victim.tjr");
+    let _ = std::fs::remove_file(&journal);
+
+    let spec = JobSpec {
+        bench: "xal".into(),
+        insts: 8_000,
+        seed: 5,
+        artifact: "wj".into(),
+        chunk: 256,
+        ctx_uarch: None,
+        deadline_ms: None,
+        trace: None,
+        plan: None,
+        trace_id: None,
+    };
+    let chunks = spec.insts.div_ceil(spec.chunk as u64);
+
+    // The "victim": journaled worker, runs the job, drains cleanly.
+    // (The journal is equally replayable after a crash — that recovery
+    // path is pinned by the serve suite; here the subject is the
+    // cross-worker warm-load.)
+    let pool = ArtifactPool::load(std::slice::from_ref(&hlo)).unwrap();
+    let cfg = ServeConfig { cache_journal: Some(journal.clone()), ..worker_config() };
+    let server = Server::bind(pool, &cfg).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let t = std::thread::spawn(move || server.run());
+    let cold = submit_retry(&addr, &spec);
+    assert!(cold.windows > 0);
+    assert_eq!(http_post(&addr, "/v1/shutdown", "").unwrap().status, 200);
+    t.join().unwrap().unwrap();
+    let journal_bytes = std::fs::read(&journal).unwrap();
+    assert!(!journal_bytes.is_empty());
+
+    // The "successor": fresh worker, no journal of its own, warm-loads
+    // the victim's file read-only.
+    let pool = ArtifactPool::load(std::slice::from_ref(&hlo)).unwrap();
+    let cfg = ServeConfig { warm_journals: vec![journal.clone()], ..worker_config() };
+    let server = Server::bind(pool, &cfg).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let t = std::thread::spawn(move || server.run());
+    let warm = submit_retry(&addr, &spec);
+    assert_eq!(warm.cache_hits, chunks, "successor must serve the keyspace hot");
+    assert_eq!(warm.windows, 0, "successor must not re-execute");
+    assert_identical(&warm.metrics, &cold.metrics, "warm-load result").unwrap();
+    assert_eq!(http_post(&addr, "/v1/shutdown", "").unwrap().status, 200);
+    let final_stats = t.join().unwrap().unwrap();
+    assert_eq!(final_stats.cache_recovered, chunks);
+
+    // Read-only: the dead worker's journal is byte-identical.
+    assert_eq!(std::fs::read(&journal).unwrap(), journal_bytes, "journal was modified");
+}
+
+/// Per-artifact quotas: with `cache_quotas` capping one artifact at a
+/// sliver, the hot tenant churns its own slice while the cold tenant's
+/// working set survives verbatim — and the per-artifact stats say so.
+#[test]
+fn cache_quota_protects_the_cold_tenant_from_a_hot_one() {
+    use tao_sim::serve::cache::ENTRY_BYTES;
+
+    let _gate = fault::exclusive();
+    fault::disarm_all();
+    let dir = temp_dir("quota");
+    let models = vec![
+        tao_sim::runtime::write_surrogate_artifact(&dir, "hot", 8, 4).unwrap(),
+        tao_sim::runtime::write_surrogate_artifact(&dir, "cold", 8, 4).unwrap(),
+    ];
+    let pool = ArtifactPool::load(&models).unwrap();
+    // Hot tenant: 8 entries' worth of bytes. Cold tenant: the implicit
+    // proportional split (256 entries), far more than its job needs.
+    let cfg = ServeConfig {
+        cache_quotas: vec![("hot".into(), 8 * ENTRY_BYTES)],
+        ..worker_config()
+    };
+    let server = Server::bind(pool, &cfg).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let t = std::thread::spawn(move || server.run());
+
+    let spec = |artifact: &str, seed: u64, insts: u64| JobSpec {
+        bench: "mcf".into(),
+        insts,
+        seed,
+        artifact: artifact.into(),
+        chunk: 256,
+        ctx_uarch: None,
+        deadline_ms: None,
+        trace: None,
+        plan: None,
+        trace_id: None,
+    };
+    // Cold tenant caches its working set (20 chunks).
+    let cold_spec = spec("cold", 1, 5_120);
+    let cold_first = submit_retry(&addr, &cold_spec);
+    assert!(cold_first.windows > 0);
+    // Hot tenant churns 40 distinct chunks through an 8-entry quota.
+    let hot = submit_retry(&addr, &spec("hot", 2, 10_240));
+    assert!(hot.windows > 0);
+    // The cold tenant replays entirely from cache: the hot churn could
+    // not evict it.
+    let cold_again = submit_retry(&addr, &cold_spec);
+    assert_eq!(cold_again.windows, 0, "hot tenant evicted the cold tenant");
+    assert_eq!(cold_again.cache_hits, 20);
+    assert_identical(&cold_again.metrics, &cold_first.metrics, "quota replay").unwrap();
+
+    // Per-artifact accounting on the wire: hot capped at its quota
+    // with evictions, cold intact with zero evictions.
+    let raw = http_get(&addr, "/v1/stats").unwrap().body;
+    let j = Json::parse(&raw).unwrap();
+    let arts = j.get("cache_artifacts").expect("cache_artifacts object");
+    let hot_stats = arts.get("hot").expect("hot artifact stats");
+    let cold_stats = arts.get("cold").expect("cold artifact stats");
+    assert_eq!(hot_stats.req_u64("quota_entries").unwrap(), 8);
+    assert_eq!(hot_stats.req_u64("entries").unwrap(), 8);
+    assert!(hot_stats.req_u64("evictions").unwrap() >= 32);
+    assert_eq!(cold_stats.req_u64("entries").unwrap(), 20);
+    assert_eq!(cold_stats.req_u64("evictions").unwrap(), 0);
+    assert_eq!(cold_stats.req_u64("hits").unwrap(), 20);
+
+    assert_eq!(http_post(&addr, "/v1/shutdown", "").unwrap().status, 200);
+    t.join().unwrap().unwrap();
+}

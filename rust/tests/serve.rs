@@ -46,6 +46,7 @@ fn test_config() -> ServeConfig {
         write_timeout_ms: 30_000,
         default_deadline_ms: 300_000,
         cache_journal: None,
+        ..ServeConfig::default()
     }
 }
 

@@ -57,6 +57,10 @@ fn print_outcome(o: &GateOutcome, cfg: &GateConfig) {
             "  (WARN: sampled CPI error exceeds the declared bound)"
         } else if k == "telemetry_overhead_pct" && *v > 2.0 {
             "  (WARN: armed telemetry costs more than the 2% budget)"
+        } else if k == "router_scaleup_2w" && *v < 1.6 {
+            "  (WARN: 2-worker router scale-up below the 1.6x/doubling floor)"
+        } else if k == "router_scaleup_4w" && *v < 2.56 {
+            "  (WARN: 4-worker router scale-up below the 2.56x floor, 1.6x/doubling)"
         } else {
             ""
         };
